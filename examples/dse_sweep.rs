@@ -1,0 +1,96 @@
+//! DSE sweep: find the best GPGPU (and clock, and batch) for a CNN under a
+//! power budget — the paper's end goal ("identifying the optimal GPGPU").
+//!
+//!     cargo run --release --example dse_sweep
+//!
+//! Requires `make artifacts` (the XLA predictors) and a dataset
+//! (`hypa-dse datagen`, auto-generated on first run). The sweep scores
+//! every `GPU × DVFS step × batch` point through the coordinator's batched
+//! XLA prediction service and prints the ranking, the Pareto frontier, and
+//! the service's batching metrics.
+
+use hypa_dse::cnn::zoo;
+use hypa_dse::coordinator::{BatchPolicy, PredictionService};
+use hypa_dse::dse::{explore, pareto_frontier, rank, DesignSpace, DseConstraints, Objective};
+use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
+use hypa_dse::ml::dataset::Target;
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::util::table::{f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let net = zoo::resnet18();
+    println!("design-space exploration for {} under a 250 W cap\n", net.name);
+
+    // Train the paper's winning models on the dataset.
+    let data = generate_or_load(DEFAULT_DATASET_PATH, &DatagenConfig::default(), false)?;
+    let mut power = RandomForest::new(ForestConfig::default());
+    power.fit(&data.x, data.y(Target::PowerW));
+    let mut cycles = Knn::new(3);
+    cycles.fit(&data.x, data.y(Target::Cycles));
+
+    // Serve them through the batched XLA coordinator.
+    let service = PredictionService::start(
+        "artifacts".into(),
+        power,
+        cycles,
+        data.n_features(),
+        BatchPolicy::default(),
+    )?;
+    let predictor = service.predictor();
+
+    let space = DesignSpace::default_grid(10, &[1, 4, 16]);
+    let t0 = std::time::Instant::now();
+    let scored = explore(
+        &net,
+        &space,
+        &predictor,
+        &DseConstraints {
+            max_power_w: Some(250.0),
+            max_latency_s: None,
+            min_throughput: None,
+            respect_memory: true,
+        },
+    )?;
+    let dt = t0.elapsed();
+    println!(
+        "scored {} design points in {:.0} ms ({:.0} points/s)\n",
+        space.len(),
+        dt.as_secs_f64() * 1e3,
+        space.len() as f64 / dt.as_secs_f64()
+    );
+
+    for objective in [Objective::MinLatency, Objective::MinEnergy, Objective::MinEdp] {
+        let ranked = rank(&scored, objective);
+        println!("top 5 by {}:", objective.name());
+        let mut t = Table::new(&["gpu", "MHz", "batch", "W", "ms", "J/inf"]);
+        for s in ranked.iter().take(5) {
+            t.row(&[
+                s.point.gpu.clone(),
+                format!("{:.0}", s.point.f_mhz),
+                format!("{}", s.point.batch),
+                f(s.power_w, 1),
+                f(s.latency_s * 1e3, 2),
+                f(s.energy_per_inf_j, 3),
+            ]);
+        }
+        print!("{}\n", t.render());
+    }
+
+    let frontier = pareto_frontier(&scored);
+    println!("Pareto frontier (power vs latency), {} points:", frontier.len());
+    let mut t = Table::new(&["gpu", "MHz", "batch", "W", "ms"]);
+    for s in &frontier {
+        t.row(&[
+            s.point.gpu.clone(),
+            format!("{:.0}", s.point.f_mhz),
+            format!("{}", s.point.batch),
+            f(s.power_w, 1),
+            f(s.latency_s * 1e3, 2),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nservice metrics: {}", predictor.metrics.summary());
+    Ok(())
+}

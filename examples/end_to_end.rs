@@ -1,0 +1,214 @@
+//! End-to-end driver: the full pipeline of the paper on a real (small)
+//! workload, proving all three layers compose.
+//!
+//!     cargo run --release --example end_to_end
+//!
+//! Pipeline (= paper Fig. 1 + §III + §IV):
+//!   1. dataset generation  — sweep zoo × GPU catalog × DVFS through the
+//!      warp-level simulator (the "measurement campaign");
+//!   2. methodology         — train multiple ML models per task, 5-fold CV,
+//!      pick the best per task;
+//!   3. headline metrics    — held-out MAPE / R² vs the paper's numbers;
+//!   4. Fig. 2              — power-vs-frequency series on the V100S for a
+//!      held-out network;
+//!   5. deployment          — stage the winners on the AOT-compiled XLA
+//!      predictors (PJRT) and run a full DSE sweep through the batched
+//!      coordinator, picking the best GPGPU under a power cap;
+//!   6. offload check       — local-vs-cloud recommendation for the edge.
+//!
+//! The printed record is copied into EXPERIMENTS.md.
+
+use hypa_dse::cnn::zoo;
+use hypa_dse::coordinator::{BatchPolicy, PredictionService};
+use hypa_dse::dse::{explore, rank, DesignSpace, DseConstraints, Objective};
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
+use hypa_dse::ml::dataset::Target;
+use hypa_dse::ml::features::NetDescriptor;
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::metrics::{mape, r2};
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::ml::validate::{select_best, train_test_indices};
+use hypa_dse::sim::Simulator;
+use hypa_dse::util::table::{ascii_plot2, f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    println!("================================================================");
+    println!(" end-to-end: ML-aided architecture design for CNN inference");
+    println!("================================================================\n");
+
+    // ---- 1. dataset -------------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let data = generate_or_load(DEFAULT_DATASET_PATH, &DatagenConfig::default(), false)?;
+    println!(
+        "[1] dataset: {} rows x {} features ({:.1}s)\n",
+        data.len(),
+        data.n_features(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. methodology: train many models per task, pick best ------------
+    println!("[2] model selection (5-fold CV):");
+    let mut winners = Vec::new();
+    for target in [Target::PowerW, Target::Cycles] {
+        let evals = select_best(&data, target, 5, 7);
+        println!(
+            "    {:8}: best {} (MAPE {:.2}%, R2 {:.4}); runner-up {} ({:.2}%)",
+            target.name(),
+            evals[0].model,
+            evals[0].mape,
+            evals[0].r2,
+            evals[1].model,
+            evals[1].mape
+        );
+        winners.push(evals[0].model.clone());
+    }
+    println!();
+
+    // ---- 3. headline metrics on a held-out split --------------------------
+    let (tr, te) = train_test_indices(data.len(), 0.2, 2023);
+    let train = data.subset(&tr);
+    let test = data.subset(&te);
+    let mut power_model = RandomForest::new(ForestConfig::default());
+    power_model.fit(&train.x, train.y(Target::PowerW));
+    let pp = power_model.predict(&test.x);
+    let power_mape = mape(test.y(Target::PowerW), &pp);
+    let power_r2 = r2(test.y(Target::PowerW), &pp);
+    let mut cycles_model = Knn::new(3);
+    cycles_model.fit(&train.x, train.y(Target::Cycles));
+    let pc = cycles_model.predict(&test.x);
+    let cycles_mape = mape(test.y(Target::Cycles), &pc);
+    println!("[3] headline (80/20 held-out):");
+    println!(
+        "    power  (RF):  MAPE {power_mape:.2}%  R2 {power_r2:.4}   | paper: 5.03%, 0.9561"
+    );
+    println!("    cycles (KNN): MAPE {cycles_mape:.2}%            | paper: 5.94%\n");
+
+    // ---- 4. Fig. 2: power vs frequency on the V100S -----------------------
+    let fig_net = "resnet18";
+    let train4 = data.filter(|m| !(m.gpu == "v100s" && m.network == fig_net));
+    let mut m4 = RandomForest::new(ForestConfig::default());
+    m4.fit(&train4.x, train4.y(Target::PowerW));
+    let g = by_name("v100s").unwrap();
+    let net = zoo::by_name(fig_net).unwrap();
+    let desc = NetDescriptor::build(&net, 1)?;
+    let mut sim = Simulator::default();
+    let freqs = g.dvfs_steps(24);
+    let mut real = Vec::new();
+    let mut pred = Vec::new();
+    for &fq in &freqs {
+        real.push(
+            sim.simulate_network(&net, 1, &g, fq)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .avg_power_w,
+        );
+        pred.push(m4.predict_one(&desc.features(&g, fq)));
+    }
+    println!("[4] Fig. 2 series ({fig_net} on v100s, held out from training):");
+    print!(
+        "{}",
+        ascii_plot2("    power vs frequency", &freqs, &pred, &real, "pred", "real", 10)
+    );
+    println!(
+        "    series MAPE {:.2}%  (397-1597 MHz, 24 points)\n",
+        mape(&real, &pred)
+    );
+
+    // ---- 5. DSE through the XLA coordinator -------------------------------
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        let service = PredictionService::start(
+            "artifacts".into(),
+            power_model,
+            cycles_model,
+            data.n_features(),
+            BatchPolicy::default(),
+        )?;
+        let predictor = service.predictor();
+        let space = DesignSpace::default_grid(10, &[1, 4, 16]);
+        let t5 = std::time::Instant::now();
+        let scored = explore(
+            &net,
+            &space,
+            &predictor,
+            &DseConstraints {
+                max_power_w: Some(250.0),
+                max_latency_s: None,
+                min_throughput: None,
+                respect_memory: true,
+            },
+        )?;
+        let dse_dt = t5.elapsed();
+        let ranked = rank(&scored, Objective::MinEdp);
+        println!(
+            "[5] DSE via batched XLA predictors: {} points in {:.0} ms ({:.0} pts/s)",
+            space.len(),
+            dse_dt.as_secs_f64() * 1e3,
+            space.len() as f64 / dse_dt.as_secs_f64()
+        );
+        let mut t = Table::new(&["rank", "gpu", "MHz", "batch", "W", "ms", "J/inf"]);
+        for (i, s) in ranked.iter().take(5).enumerate() {
+            t.row(&[
+                format!("{}", i + 1),
+                s.point.gpu.clone(),
+                format!("{:.0}", s.point.f_mhz),
+                format!("{}", s.point.batch),
+                f(s.power_w, 1),
+                f(s.latency_s * 1e3, 2),
+                f(s.energy_per_inf_j, 3),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("    best under 250 W: {} @ {:.0} MHz (batch {})", ranked[0].point.gpu, ranked[0].point.f_mhz, ranked[0].point.batch);
+        println!("    coordinator: {}\n", predictor.metrics.summary());
+    } else {
+        println!("[5] skipped DSE (run `make artifacts` first)\n");
+    }
+
+    // ---- 6. offload sanity -------------------------------------------------
+    use hypa_dse::offload::{
+        decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
+    };
+    let edge = by_name("jetson-tx1").unwrap();
+    let profile = EdgePowerProfile::jetson_tx1();
+    let local_s = sim
+        .simulate_network(&net, 1, &edge, edge.boost_mhz)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .seconds;
+    let cloud_s = sim
+        .simulate_network(&net, 1, &g, g.boost_mhz)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .seconds;
+    let d = decide(
+        local_estimate(local_s, &profile),
+        offload_estimate(
+            &net,
+            1,
+            &Link {
+                bandwidth_mbps: 100.0,
+                rtt_ms: 20.0,
+            },
+            cloud_s,
+            &profile,
+        ),
+        &Constraints {
+            max_latency_s: None,
+            max_energy_j: None,
+        },
+    );
+    println!(
+        "[6] offload (TX1, 100 Mbps / 20 ms): local {:.0} mJ vs offload {:.0} mJ -> {}",
+        d.local.device_energy_j * 1e3,
+        d.offload.device_energy_j * 1e3,
+        d.recommendation.name()
+    );
+
+    println!(
+        "\ntotal end-to-end time: {:.1}s   (winners: {} / {})",
+        t_start.elapsed().as_secs_f64(),
+        winners[0],
+        winners[1]
+    );
+    Ok(())
+}

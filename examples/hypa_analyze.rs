@@ -1,0 +1,78 @@
+//! HyPA walkthrough: generate real PTX for a CNN layer, parse it back,
+//! inspect its CFG/loops, run the hybrid analysis, and cross-check the
+//! instruction counts against both exhaustive interpretation and the warp
+//! simulator.
+//!
+//!     cargo run --release --example hypa_analyze
+
+use hypa_dse::cnn::launch::decompose;
+use hypa_dse::cnn::zoo;
+use hypa_dse::ptx::cfg::Cfg;
+use hypa_dse::ptx::codegen::{generate, test_conv_launch};
+use hypa_dse::ptx::hypa::{analyze, analyze_exact, total_error, HypaConfig};
+use hypa_dse::ptx::interp::Code;
+use hypa_dse::ptx::parser::parse;
+use hypa_dse::ptx::print::kernel_to_text;
+use hypa_dse::sim::{trace, TraceConfig};
+use hypa_dse::util::table::Table;
+
+fn main() {
+    // --- 1. A small conv kernel, end to end --------------------------------
+    let launch = test_conv_launch(1, 3, 16, 8, 3, 1, 1);
+    let kernel = generate(&launch);
+    let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&kernel));
+    println!("generated PTX for a 3x3 conv (excerpt):\n");
+    for line in text.lines().take(24) {
+        println!("  {line}");
+    }
+    println!("  ... ({} lines total)\n", text.lines().count());
+
+    let parsed = parse(&text).unwrap().kernels.remove(0);
+    let cfg = Cfg::build(&parsed);
+    println!(
+        "CFG: {} basic blocks, {} loops (max depth {}), {} conditional branches",
+        cfg.blocks.len(),
+        cfg.loops.len(),
+        cfg.max_loop_depth(),
+        cfg.branch_count()
+    );
+
+    let h = analyze(&parsed, &launch, HypaConfig::default());
+    println!(
+        "HyPA: {:.0} dynamic instructions from {} sampled threads (slice {:.0}% of static code)",
+        h.mix.total(),
+        h.sampled_threads,
+        h.static_features.slice_fraction * 100.0
+    );
+    let exact = analyze_exact(&parsed, &launch);
+    println!(
+        "exhaustive interpretation: {:.0} (error {:.4}%)\n",
+        exact.total(),
+        total_error(&h.mix, &exact) * 100.0
+    );
+
+    // --- 2. Whole networks: HyPA vs warp simulator ------------------------
+    println!("HyPA vs warp-simulator lane-op totals per network:\n");
+    let mut t = Table::new(&["network", "hypa instrs", "sim lane ops", "diff %"]);
+    for name in ["lenet5", "squeezenet", "resnet18"] {
+        let net = zoo::by_name(name).unwrap();
+        let launches = decompose(&net, 1).unwrap();
+        let mut hypa_total = 0.0;
+        let mut sim_total = 0.0;
+        for l in &launches {
+            let k = generate(l);
+            let ktext = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+            let pk = parse(&ktext).unwrap().kernels.remove(0);
+            hypa_total += analyze(&pk, l, HypaConfig::default()).mix.total();
+            let code = Code::build(&pk);
+            sim_total += trace(&code, l, &TraceConfig::default()).lane_ops.total();
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{hypa_total:.3e}"),
+            format!("{sim_total:.3e}"),
+            format!("{:.2}", 100.0 * (hypa_total - sim_total).abs() / sim_total),
+        ]);
+    }
+    print!("{}", t.render());
+}

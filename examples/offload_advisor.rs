@@ -1,0 +1,101 @@
+//! Offload advisor: should an edge device run a CNN locally or ship it to
+//! the cloud? Demonstrates both the in-process decision model and the REST
+//! API of §IV (server + client over loopback).
+//!
+//!     cargo run --release --example offload_advisor
+
+use hypa_dse::cnn::zoo;
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::offload::{
+    decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
+    OffloadClient, OffloadServer, ServerState,
+};
+use hypa_dse::sim::Simulator;
+use hypa_dse::util::json::Json;
+use hypa_dse::util::table::{f, Table};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let net = zoo::squeezenet();
+    let profile = EdgePowerProfile::jetson_tx1();
+    let mut sim = Simulator::default();
+    let edge = by_name("jetson-tx1").unwrap();
+    let cloud = by_name("v100s").unwrap();
+
+    let local_s = sim
+        .simulate_network(&net, 1, &edge, edge.boost_mhz)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .seconds;
+    let cloud_s = sim
+        .simulate_network(&net, 1, &cloud, cloud.boost_mhz)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .seconds;
+    println!(
+        "{}: local (TX1) {:.1} ms at {:.1} W; cloud (V100S) compute {:.1} ms\n",
+        net.name,
+        local_s * 1e3,
+        profile.local_active_w,
+        cloud_s * 1e3
+    );
+
+    // --- decision matrix over the link grid --------------------------------
+    println!("decision matrix (device energy objective, no constraints):\n");
+    let mut t = Table::new(&["rtt\\bw", "1 Mbps", "10 Mbps", "100 Mbps", "1000 Mbps"]);
+    for &rtt in &[2.0, 20.0, 100.0] {
+        let mut row = vec![format!("{rtt:.0} ms")];
+        for &bw in &[1.0, 10.0, 100.0, 1000.0] {
+            let d = decide(
+                local_estimate(local_s, &profile),
+                offload_estimate(
+                    &net,
+                    1,
+                    &Link {
+                        bandwidth_mbps: bw,
+                        rtt_ms: rtt,
+                    },
+                    cloud_s,
+                    &profile,
+                ),
+                &Constraints {
+                    max_latency_s: None,
+                    max_energy_j: None,
+                },
+            );
+            row.push(format!(
+                "{} ({:.0} mJ)",
+                d.recommendation.name(),
+                d.offload.device_energy_j * 1e3
+            ));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nlocal energy reference: {:.0} mJ/inference\n",
+        local_estimate(local_s, &profile).device_energy_j * 1e3
+    );
+
+    // --- the same decision through the REST API ---------------------------
+    println!("querying the REST API (paper §IV)...");
+    let state = Arc::new(ServerState::new(None));
+    let server = OffloadServer::start("127.0.0.1:0", state)?;
+    let client = OffloadClient::new(server.addr);
+    let body = format!(
+        r#"{{"network":"{}","batch":1,"bandwidth_mbps":200,"rtt_ms":10,"max_latency_s":0.25}}"#,
+        net.name
+    );
+    let (status, resp) = client.post("/v1/offload/decide", &body)?;
+    let j = Json::parse(std::str::from_utf8(&resp)?).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "POST /v1/offload/decide -> {status}: recommendation = {}",
+        j.get("recommendation").and_then(Json::as_str).unwrap_or("?")
+    );
+    println!(
+        "  local {:.1} ms / {:.0} mJ   offload {:.1} ms / {:.0} mJ",
+        j.path(&["local", "latency_s"]).unwrap().as_f64().unwrap() * 1e3,
+        j.path(&["local", "device_energy_j"]).unwrap().as_f64().unwrap() * 1e3,
+        j.path(&["offload", "latency_s"]).unwrap().as_f64().unwrap() * 1e3,
+        j.path(&["offload", "device_energy_j"]).unwrap().as_f64().unwrap() * 1e3,
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: estimate power & performance of a CNN on a GPGPU in the
+//! early design stage — no GPU required.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks the core public API: model zoo → kernel-launch decomposition →
+//! HyPA static analysis → simulator ground truth → (if a dataset exists)
+//! the trained ML predictors the paper proposes.
+
+use hypa_dse::cnn::{launch::decompose, zoo};
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::ml::dataset::Target;
+use hypa_dse::ml::datagen::DEFAULT_DATASET_PATH;
+use hypa_dse::ml::features::NetDescriptor;
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::sim::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a workload and a candidate accelerator.
+    let net = zoo::resnet18();
+    let gpu = by_name("v100s").unwrap();
+    let f_mhz = 1245.0;
+    println!("workload: {} ({} layers)", net.name, net.layers.len());
+    let totals = net.totals().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "  {:.2} GFLOPs, {:.1} M params",
+        totals.flops / 1e9,
+        totals.params as f64 / 1e6
+    );
+
+    // 2. Decompose into GPU kernel launches (what a CUDA runtime would do).
+    let launches = decompose(&net, 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("  {} kernel launches", launches.len());
+
+    // 3. HyPA: recover dynamic instruction counts without any GPU.
+    let desc = NetDescriptor::build(&net, 1)?;
+    println!(
+        "HyPA: {:.3e} dynamic instructions ({:.0}% fp)",
+        desc.hypa.mix.total(),
+        100.0 * desc.hypa.mix.fp / desc.hypa.mix.total()
+    );
+
+    // 4. Simulator ground truth for this design point.
+    let mut sim = Simulator::default();
+    let s = sim
+        .simulate_network(&net, 1, &gpu, f_mhz)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "simulated on {} @{:.0} MHz: {:.2} ms, {:.1} W, {:.3} J/inference",
+        gpu.name,
+        f_mhz,
+        s.seconds * 1e3,
+        s.avg_power_w,
+        s.energy_j
+    );
+
+    // 5. ML prediction (the paper's contribution) if the dataset exists.
+    match hypa_dse::ml::dataset::Dataset::load(DEFAULT_DATASET_PATH) {
+        Ok(data) => {
+            let mut power = RandomForest::new(ForestConfig::default());
+            power.fit(&data.x, data.y(Target::PowerW));
+            let mut cycles = Knn::new(3);
+            cycles.fit(&data.x, data.y(Target::Cycles));
+            let features = desc.features(&gpu, f_mhz);
+            let pw = power.predict_one(&features);
+            let cy = cycles.predict_one(&features);
+            println!(
+                "ML prediction:  {:.2} ms, {:.1} W   (errors vs sim: {:.1}%, {:.1}%)",
+                cy / (f_mhz * 1e6) * 1e3,
+                pw,
+                100.0 * (cy - s.cycles).abs() / s.cycles,
+                100.0 * (pw - s.avg_power_w).abs() / s.avg_power_w
+            );
+        }
+        Err(_) => {
+            println!("(no dataset at {DEFAULT_DATASET_PATH} — run `hypa-dse datagen` to enable ML prediction)");
+        }
+    }
+    Ok(())
+}

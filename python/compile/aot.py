@@ -1,0 +1,81 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (not `HloModuleProto.serialize()`) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py there).
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile's
+`artifacts` target). Python never runs after this point: the rust binary
+loads + compiles + executes the artifacts via PJRT.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text. Lower with
+    return_tuple=True; the rust side unwraps with `to_tuple1()`."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str) -> str:
+    fn, args_builder = model.ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*args_builder())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = args.only or list(model.ARTIFACTS)
+    meta = {
+        "knn": {
+            "n": model.KNN_N,
+            "f": model.KNN_F,
+            "b": model.KNN_B,
+            "k": model.KNN_K,
+        },
+        "forest": {
+            "t": model.FOREST_T,
+            "m": model.FOREST_M,
+            "b": model.FOREST_B,
+            "f": model.FOREST_F,
+            "depth": model.FOREST_DEPTH,
+        },
+        "cnn": {"b": model.CNN_B, "hw": model.CNN_HW},
+        "artifacts": {},
+    }
+    for name in names:
+        text = lower_artifact(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"][name] = {"chars": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: 3x3 stride-1 same-padding convolution (NCHW).
+
+This is the CNN-workload kernel of the stack (the paper's domain is CNN
+inference): used by the `cnn_infer` demo artifact. Hardware adaptation
+(DESIGN.md par.6): instead of the paper's CUDA thread-per-output-pixel
+formulation, the kernel is *matmul-shaped* for the MXU — the 3x3
+neighborhood is materialized as 9 shifted views, reshaped to an
+(C*9, H*W) patch matrix, and contracted against the (OC, C*9) filter
+matrix in a single dot. The grid runs one image per program instance;
+per-instance VMEM footprint is (C,H+2,W+2) + (OC,C,3,3) + (OC,H,W) floats
+(for the demo shapes: < 1 MiB, VMEM-resident).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3x3_kernel(x_ref, w_ref, o_ref):
+    """x_ref: (C, H, W), w_ref: (OC, C, 3, 3), o_ref: (OC, H, W)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    c, h, wd = x.shape
+    oc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    # 9 shifted views -> (9, C, H, W) -> (C*9, H*W) patch matrix.
+    shifts = [
+        xp[:, dy : dy + h, dx : dx + wd] for dy in range(3) for dx in range(3)
+    ]
+    patches = jnp.stack(shifts, axis=1)  # (C, 9, H, W)
+    patches = patches.reshape(c * 9, h * wd)
+    filt = w.reshape(oc, c * 9)
+    out = jnp.dot(filt, patches, preferred_element_type=jnp.float32)
+    o_ref[...] = out.reshape(oc, h, wd)
+
+
+@jax.jit
+def conv3x3(x, w):
+    """Pallas 3x3 same conv. x: (B, C, H, W), w: (OC, C, 3, 3)."""
+    b, c, h, wd = x.shape
+    oc = w.shape[0]
+    assert w.shape == (oc, c, 3, 3), f"bad filter shape {w.shape}"
+    return pl.pallas_call(
+        _conv3x3_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, c, h, wd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((oc, c, 3, 3), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, oc, h, wd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, oc, h, wd), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))

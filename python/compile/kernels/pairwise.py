@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: tiled pairwise squared-Euclidean distances.
+
+The DSE hot path scores thousands of design points per sweep with a KNN
+model; the dominant compute is the (B, F) x (N, F) distance matrix. On
+TPU we express it MXU-first (DESIGN.md par.6 Hardware-Adaptation):
+
+    ||q - x||^2 = ||q||^2 + ||x||^2 - 2 q.x^T
+
+so the inner product term is a (B_TILE, F) @ (F, N_TILE) matmul on the
+systolic array, with the norm terms as cheap VPU row/col reductions. The
+BlockSpec grid tiles (B, N) into VMEM-resident blocks (the role CUDA
+threadblocks play in the paper's GPGPU setting); F is kept whole per block
+(F = 64 after padding -> q tile 64x64 f32 = 16 KiB, x tile 128x64 = 32 KiB,
+out tile 64x128 = 32 KiB, far under VMEM).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are identical (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (MXU-aligned: multiples of 8x128 lanes for f32).
+B_TILE = 64
+N_TILE = 128
+
+
+def _pairwise_kernel(q_ref, x_ref, o_ref):
+    """One (B_TILE, N_TILE) output block.
+
+    q_ref: (B_TILE, F), x_ref: (N_TILE, F), o_ref: (B_TILE, N_TILE).
+    """
+    q = q_ref[...]
+    x = x_ref[...]
+    # MXU term: -2 q x^T, accumulated in f32.
+    cross = jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)  # (B_TILE, 1)
+    xn = jnp.sum(x * x, axis=1, keepdims=True).T  # (1, N_TILE)
+    # Clamp tiny negatives from cancellation so downstream sqrt is safe.
+    o_ref[...] = jnp.maximum(qn + xn - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile", "n_tile"))
+def pairwise_dist(q, x, *, b_tile=B_TILE, n_tile=N_TILE):
+    """Pallas pairwise squared distances. q: (B, F), x: (N, F) -> (B, N).
+
+    B must divide by b_tile and N by n_tile (the AOT shapes are padded to
+    guarantee this; tests sweep other tile choices).
+    """
+    b, f = q.shape
+    n, f2 = x.shape
+    assert f == f2, f"feature dims differ: {f} vs {f2}"
+    assert b % b_tile == 0, f"B={b} not a multiple of {b_tile}"
+    assert n % n_tile == 0, f"N={n} not a multiple of {n_tile}"
+    grid = (b // b_tile, n // n_tile)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_tile, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_tile, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_tile, n_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), x.astype(jnp.float32))

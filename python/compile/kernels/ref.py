@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels and L2 graphs.
+
+Every Pallas kernel and every AOT-exported graph has an oracle here; the
+pytest suite asserts `assert_allclose(kernel, ref)` across a hypothesis
+sweep of shapes and dtypes. The rust integration tests additionally check
+the *loaded HLO artifacts* against the rust-native model implementations,
+closing the loop across all three layers.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_dist_ref(q, x):
+    """Squared Euclidean distances.
+
+    q: (B, F), x: (N, F)  ->  (B, N), d[b, n] = ||q[b] - x[n]||^2.
+    """
+    diff = q[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def conv3x3_ref(x, w):
+    """3x3 stride-1 same-padding convolution, NCHW.
+
+    x: (B, C, H, W), w: (OC, C, 3, 3)  ->  (B, OC, H, W).
+    """
+    import jax
+
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def knn_predict_ref(train_x, train_y, q, k):
+    """Inverse-distance-weighted KNN regression.
+
+    train_x: (N, F), train_y: (N,), q: (B, F) -> (B,).
+    Matches the rust `ml::knn::Knn` semantics (weighted=true), with the
+    epsilon-regularized weights the XLA graph uses.
+    """
+    import jax
+
+    d2 = pairwise_dist_ref(q, train_x)  # (B, N)
+    neg, idx = jax.lax.top_k(-d2, k)  # (B, K)  (oracle may use top_k)
+    d2k = -neg
+    w = 1.0 / jnp.sqrt(d2k + 1e-12)
+    yk = train_y[idx]  # (B, K)
+    return jnp.sum(w * yk, axis=1) / jnp.sum(w, axis=1)
+
+
+def forest_predict_ref(feature, threshold, left, right, value, q, depth):
+    """Tensorized random-forest descent.
+
+    feature/left/right: int32 (T, M); threshold/value: f32 (T, M);
+    q: (B, F) -> (B,). `depth` synchronous descent steps per tree
+    (leaves self-loop, so extra steps are no-ops) then average the
+    reached node values over trees.
+    """
+    t, m = feature.shape
+    b = q.shape[0]
+    feat_flat = feature.reshape(-1)
+    thr_flat = threshold.reshape(-1)
+    left_flat = left.reshape(-1)
+    right_flat = right.reshape(-1)
+    val_flat = value.reshape(-1)
+    tree_base = (jnp.arange(t, dtype=jnp.int32) * m)[None, :]  # (1, T)
+
+    node = jnp.zeros((b, t), dtype=jnp.int32)
+    for _ in range(depth):
+        idx = tree_base + node  # (B, T)
+        f = feat_flat[idx]  # (B, T)
+        thr = thr_flat[idx]
+        qv = jnp.take_along_axis(q, f, axis=1)  # (B, T)
+        go_left = qv <= thr
+        node = jnp.where(go_left, left_flat[idx], right_flat[idx])
+    return jnp.mean(val_flat[tree_base + node], axis=1)

@@ -1,0 +1,160 @@
+"""L2: JAX compute graphs for the prediction hot paths.
+
+Three graphs are AOT-lowered to HLO text by `aot.py` and loaded by the
+rust coordinator via PJRT (rust/src/runtime/):
+
+* `knn_predict`  — batched KNN regression over the trained model's
+  (padded) training matrix; the pairwise-distance term is the L1 Pallas
+  kernel. Model *parameters* (train_x, train_y) are runtime inputs, so a
+  single compiled executable serves every trained KNN model.
+* `forest_predict` — tensorized random-forest descent over flat node
+  arrays exported by `ml::forest::RandomForest::export_tensor`.
+* `cnn_infer` — a small CNN forward pass built on the L1 conv3x3 kernel
+  (the paper's workload class, used by the quickstart demo).
+
+Static AOT shapes below; padding conventions documented in DESIGN.md §7.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.conv3x3 import conv3x3
+from compile.kernels.pairwise import pairwise_dist
+
+# ---- static AOT shapes ----------------------------------------------------
+KNN_N = 4096  # padded training rows (far-away padding never enters top-k)
+KNN_F = 64  # padded feature width (zero padding: contributes 0 distance)
+KNN_B = 256  # query batch
+KNN_K = 3
+
+FOREST_T = 64  # trees
+FOREST_M = 4096  # max nodes per tree (self-loop padded)
+FOREST_B = 256
+FOREST_F = 64
+FOREST_DEPTH = 16  # descent steps (>= max tree depth; extras are no-ops)
+
+CNN_B = 8  # demo CNN batch
+CNN_HW = 28
+
+
+def knn_predict(train_x, train_y, q):
+    """Weighted-KNN regression: (N,F), (N,), (B,F) -> (B,).
+
+    Padding rows must hold a large coordinate value (~1e15) so their
+    distance dominates and they never enter the top-k (as long as at
+    least K real rows exist).
+    """
+    train_y = jnp.asarray(train_y, jnp.float32)
+    d2 = pairwise_dist(q, train_x)  # L1 Pallas kernel, (B, N)
+    # Top-k selection notes (perf + compatibility, see EXPERIMENTS.md §Perf):
+    #  * `lax.top_k` lowers to a TopK HLO with a `largest=` attribute that
+    #    xla_extension 0.5.1's text parser rejects;
+    #  * `argsort` round-trips but costs a full O(N log N) sort per row —
+    #    measured 176 ms per (256, 4096) batch on the CPU PJRT client.
+    # Iterative k-min extraction is O(K·N) in vectorized min/argmin passes
+    # and lowers to plain reduce/select ops.
+    n = d2.shape[1]
+    iota = jnp.arange(n, dtype=jnp.int32)[None, :]  # (1, N)
+    d = d2
+    wsum = jnp.zeros(d2.shape[0], jnp.float32)
+    vsum = jnp.zeros(d2.shape[0], jnp.float32)
+    for _ in range(KNN_K):
+        dk = jnp.min(d, axis=1)  # (B,)
+        ik = jnp.argmin(d, axis=1)  # (B,)
+        w = 1.0 / jnp.sqrt(dk + 1e-12)
+        wsum = wsum + w
+        vsum = vsum + w * train_y[ik]
+        # Mask the selected column out for the next pass.
+        d = jnp.where(iota == ik[:, None], jnp.inf, d)
+    return (vsum / wsum,)
+
+
+def forest_predict(feature, threshold, left, right, value, q):
+    """Tensorized forest descent (see ml::forest::ForestTensor docs).
+
+    feature/left/right: int32 (T, M); threshold/value: f32 (T, M);
+    q: (B, F) -> (B,).
+    """
+    t, m = feature.shape
+    q = jnp.asarray(q, jnp.float32)
+    b = q.shape[0]
+    feat_flat = jnp.asarray(feature, jnp.int32).reshape(-1)
+    thr_flat = jnp.asarray(threshold, jnp.float32).reshape(-1)
+    left_flat = jnp.asarray(left, jnp.int32).reshape(-1)
+    right_flat = jnp.asarray(right, jnp.int32).reshape(-1)
+    val_flat = jnp.asarray(value, jnp.float32).reshape(-1)
+    tree_base = (jnp.arange(t, dtype=jnp.int32) * m)[None, :]
+
+    def step(_, node):
+        idx = tree_base + node
+        f = feat_flat[idx]
+        thr = thr_flat[idx]
+        qv = jnp.take_along_axis(q, f, axis=1)
+        return jnp.where(qv <= thr, left_flat[idx], right_flat[idx])
+
+    node0 = jnp.zeros((b, t), dtype=jnp.int32)
+    node = jax.lax.fori_loop(0, FOREST_DEPTH, step, node0)
+    return (jnp.mean(val_flat[tree_base + node], axis=1),)
+
+
+def cnn_infer(x, w1, b1, w2, b2, wfc, bfc):
+    """Small CNN forward (LeNet-shaped, 3x3 convs via the Pallas kernel).
+
+    x: (B, 1, 28, 28); w1: (8, 1, 3, 3); w2: (16, 8, 3, 3);
+    wfc: (16*7*7, 10) -> logits (B, 10).
+    """
+
+    def pool2(t):  # 2x2 max pool, NCHW
+        b, c, h, w = t.shape
+        t = t.reshape(b, c, h // 2, 2, w // 2, 2)
+        return jnp.max(t, axis=(3, 5))
+
+    h1 = conv3x3(x, w1) + b1[None, :, None, None]
+    h1 = pool2(jnp.maximum(h1, 0.0))  # (B, 8, 14, 14)
+    h2 = conv3x3(h1, w2) + b2[None, :, None, None]
+    h2 = pool2(jnp.maximum(h2, 0.0))  # (B, 16, 7, 7)
+    flat = h2.reshape(h2.shape[0], -1)
+    return (flat @ wfc + bfc,)
+
+
+def knn_example_args():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((KNN_N, KNN_F), f32),
+        jax.ShapeDtypeStruct((KNN_N,), f32),
+        jax.ShapeDtypeStruct((KNN_B, KNN_F), f32),
+    )
+
+
+def forest_example_args():
+    f32, i32 = jnp.float32, jnp.int32
+    tm = (FOREST_T, FOREST_M)
+    return (
+        jax.ShapeDtypeStruct(tm, i32),
+        jax.ShapeDtypeStruct(tm, f32),
+        jax.ShapeDtypeStruct(tm, i32),
+        jax.ShapeDtypeStruct(tm, i32),
+        jax.ShapeDtypeStruct(tm, f32),
+        jax.ShapeDtypeStruct((FOREST_B, FOREST_F), f32),
+    )
+
+
+def cnn_example_args():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((CNN_B, 1, CNN_HW, CNN_HW), f32),
+        jax.ShapeDtypeStruct((8, 1, 3, 3), f32),
+        jax.ShapeDtypeStruct((8,), f32),
+        jax.ShapeDtypeStruct((16, 8, 3, 3), f32),
+        jax.ShapeDtypeStruct((16,), f32),
+        jax.ShapeDtypeStruct((16 * 7 * 7, 10), f32),
+        jax.ShapeDtypeStruct((10,), f32),
+    )
+
+
+# Artifact registry: name -> (fn, example-args builder).
+ARTIFACTS = {
+    "knn_predict": (knn_predict, knn_example_args),
+    "forest_predict": (forest_predict, forest_example_args),
+    "cnn_infer": (cnn_infer, cnn_example_args),
+}

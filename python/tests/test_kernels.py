@@ -1,0 +1,144 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/tilings; assert_allclose against ref.py is
+the core correctness signal for the compile path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv3x3 import conv3x3
+from compile.kernels.pairwise import pairwise_dist
+
+RNG = np.random.default_rng(1234)
+
+
+def _assert_close(a, b, rtol=2e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- pairwise
+
+
+class TestPairwise:
+    def test_basic(self):
+        q = RNG.normal(size=(64, 16)).astype(np.float32)
+        x = RNG.normal(size=(128, 16)).astype(np.float32)
+        _assert_close(pairwise_dist(q, x, b_tile=32, n_tile=64),
+                      ref.pairwise_dist_ref(q, x))
+
+    def test_identical_rows_give_zero(self):
+        q = RNG.normal(size=(32, 8)).astype(np.float32)
+        d = pairwise_dist(q, q, b_tile=32, n_tile=32)
+        diag = np.asarray(d)[np.arange(32), np.arange(32)]
+        np.testing.assert_allclose(diag, 0.0, atol=1e-3)
+
+    def test_nonnegative_everywhere(self):
+        q = (RNG.normal(size=(64, 64)) * 100).astype(np.float32)
+        x = (RNG.normal(size=(128, 64)) * 100).astype(np.float32)
+        d = np.asarray(pairwise_dist(q, x))
+        assert (d >= 0).all()
+
+    def test_aot_shape(self):
+        # The exact padded shape the artifact uses.
+        q = RNG.normal(size=(256, 64)).astype(np.float32)
+        x = RNG.normal(size=(2048, 64)).astype(np.float32)
+        _assert_close(pairwise_dist(q, x), ref.pairwise_dist_ref(q, x),
+                      rtol=5e-4, atol=5e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b_blocks=st.integers(1, 3),
+        n_blocks=st.integers(1, 3),
+        f=st.sampled_from([1, 3, 8, 17, 64]),
+        b_tile=st.sampled_from([8, 16, 32]),
+        n_tile=st.sampled_from([16, 32, 64]),
+        scale=st.sampled_from([1e-2, 1.0, 1e2]),
+    )
+    def test_hypothesis_shapes_and_tiles(self, b_blocks, n_blocks, f, b_tile,
+                                         n_tile, scale):
+        rng = np.random.default_rng(b_blocks * 100 + n_blocks * 10 + f)
+        q = (rng.normal(size=(b_blocks * b_tile, f)) * scale).astype(np.float32)
+        x = (rng.normal(size=(n_blocks * n_tile, f)) * scale).astype(np.float32)
+        got = pairwise_dist(q, x, b_tile=b_tile, n_tile=n_tile)
+        want = ref.pairwise_dist_ref(q, x)
+        # rtol scales with the magnitude of cancellation.
+        _assert_close(got, want, rtol=1e-3, atol=1e-3 * scale * scale)
+
+    def test_rejects_mismatched_features(self):
+        q = np.zeros((32, 4), np.float32)
+        x = np.zeros((32, 5), np.float32)
+        with pytest.raises(AssertionError):
+            pairwise_dist(q, x, b_tile=32, n_tile=32)
+
+    def test_rejects_untiled_batch(self):
+        q = np.zeros((33, 4), np.float32)
+        x = np.zeros((32, 4), np.float32)
+        with pytest.raises(AssertionError):
+            pairwise_dist(q, x, b_tile=32, n_tile=32)
+
+    def test_f64_input_downcast(self):
+        q = RNG.normal(size=(32, 8))  # f64
+        x = RNG.normal(size=(32, 8))
+        d = pairwise_dist(q.astype(np.float64), x.astype(np.float64),
+                          b_tile=32, n_tile=32)
+        assert np.asarray(d).dtype == np.float32
+        _assert_close(d, ref.pairwise_dist_ref(q.astype(np.float32),
+                                               x.astype(np.float32)))
+
+
+# ---------------------------------------------------------------- conv3x3
+
+
+class TestConv3x3:
+    def test_basic(self):
+        x = RNG.normal(size=(2, 3, 8, 8)).astype(np.float32)
+        w = RNG.normal(size=(5, 3, 3, 3)).astype(np.float32)
+        _assert_close(conv3x3(x, w), ref.conv3x3_ref(x, w))
+
+    def test_identity_filter(self):
+        # Center-tap filter reproduces the input channel.
+        x = RNG.normal(size=(1, 1, 6, 6)).astype(np.float32)
+        w = np.zeros((1, 1, 3, 3), np.float32)
+        w[0, 0, 1, 1] = 1.0
+        _assert_close(conv3x3(x, w), x)
+
+    def test_edge_padding_zero(self):
+        # All-ones filter on all-ones input: corners see 4 taps, edges 6,
+        # interior 9.
+        x = np.ones((1, 1, 4, 4), np.float32)
+        w = np.ones((1, 1, 3, 3), np.float32)
+        out = np.asarray(conv3x3(x, w))[0, 0]
+        assert out[0, 0] == 4.0
+        assert out[0, 1] == 6.0
+        assert out[1, 1] == 9.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        c=st.sampled_from([1, 2, 5]),
+        oc=st.sampled_from([1, 4, 7]),
+        hw=st.sampled_from([4, 7, 12]),
+    )
+    def test_hypothesis_shapes(self, b, c, oc, hw):
+        rng = np.random.default_rng(b * 1000 + c * 100 + oc * 10 + hw)
+        x = rng.normal(size=(b, c, hw, hw)).astype(np.float32)
+        w = rng.normal(size=(oc, c, 3, 3)).astype(np.float32)
+        _assert_close(conv3x3(x, w), ref.conv3x3_ref(x, w), rtol=5e-4,
+                      atol=5e-4)
+
+    def test_linearity(self):
+        x = RNG.normal(size=(1, 2, 6, 6)).astype(np.float32)
+        w1 = RNG.normal(size=(3, 2, 3, 3)).astype(np.float32)
+        w2 = RNG.normal(size=(3, 2, 3, 3)).astype(np.float32)
+        lhs = np.asarray(conv3x3(x, w1 + w2))
+        rhs = np.asarray(conv3x3(x, w1)) + np.asarray(conv3x3(x, w2))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_filter(self):
+        x = np.zeros((1, 2, 4, 4), np.float32)
+        w = np.zeros((3, 2, 5, 5), np.float32)
+        with pytest.raises(AssertionError):
+            conv3x3(x, w)

@@ -1,0 +1,176 @@
+"""L2 graph correctness: model.py graphs vs oracles, including the exact
+padding conventions the rust side relies on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def _pad_train(x, y, n, f):
+    """Pad a (n0, f0) training set to (n, f) with the far-away sentinel
+    convention used by the rust coordinator."""
+    n0, f0 = x.shape
+    xp = np.full((n, f), 1e15, np.float32)
+    xp[:n0, :f0] = x
+    xp[:n0, f0:] = 0.0  # zero-pad features of real rows
+    yp = np.zeros(n, np.float32)
+    yp[:n0] = y
+    return xp, yp
+
+
+class TestKnnGraph:
+    def test_matches_ref_on_aot_shapes(self):
+        x = RNG.normal(size=(500, 20)).astype(np.float32)
+        y = RNG.normal(size=500).astype(np.float32) * 100
+        q = RNG.normal(size=(model.KNN_B, 20)).astype(np.float32)
+        xp, yp = _pad_train(x, y, model.KNN_N, model.KNN_F)
+        qp = np.zeros((model.KNN_B, model.KNN_F), np.float32)
+        qp[:, :20] = q
+        (got,) = model.knn_predict(xp, yp, qp)
+        want = ref.knn_predict_ref(x, y, q, model.KNN_K)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_padding_rows_never_selected(self):
+        # Only K real rows: the prediction must depend on them alone.
+        k = model.KNN_K
+        x = np.arange(k * 3, dtype=np.float32).reshape(k, 3)
+        y = (10.0 * (1.0 + np.arange(k, dtype=np.float32))).astype(np.float32)
+        xp, yp = _pad_train(x, y, model.KNN_N, model.KNN_F)
+        qp = np.zeros((model.KNN_B, model.KNN_F), np.float32)
+        qp[:, :3] = x[0]
+        (got,) = model.knn_predict(xp, yp, qp)
+        # Exact match on row 0 → inverse-distance weight dominates → ≈10.
+        assert abs(float(got[0]) - 10.0) < 0.5
+
+    def test_exact_match_returns_target(self):
+        x = RNG.normal(size=(100, 8)).astype(np.float32)
+        y = RNG.normal(size=100).astype(np.float32)
+        xp, yp = _pad_train(x, y, model.KNN_N, model.KNN_F)
+        qp = np.zeros((model.KNN_B, model.KNN_F), np.float32)
+        qp[0, :8] = x[42]
+        (got,) = model.knn_predict(xp, yp, qp)
+        assert abs(float(got[0]) - float(y[42])) < 1e-2
+
+
+class TestForestGraph:
+    @staticmethod
+    def _random_forest_arrays(rng, t=model.FOREST_T, m=64, f=6, depth=5):
+        """Random well-formed trees in tensor layout (left/right point
+        deeper; leaves self-loop)."""
+        feature = np.zeros((t, m), np.int32)
+        threshold = np.full((t, m), np.inf, np.float32)
+        left = np.tile(np.arange(m, dtype=np.int32), (t, 1))
+        right = left.copy()
+        value = np.zeros((t, m), np.float32)
+        for ti in range(t):
+            # Build a random binary tree over nodes 0..m in BFS order.
+            next_free = 1
+            frontier = [(0, 0)]
+            while frontier:
+                node, d = frontier.pop()
+                value[ti, node] = rng.normal() * 10
+                if d < depth and next_free + 1 < m and rng.random() < 0.8:
+                    feature[ti, node] = rng.integers(0, f)
+                    threshold[ti, node] = rng.normal()
+                    left[ti, node] = next_free
+                    right[ti, node] = next_free + 1
+                    frontier.append((next_free, d + 1))
+                    frontier.append((next_free + 1, d + 1))
+                    next_free += 2
+        return feature, threshold, left, right, value
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(5)
+        t_arrays = self._random_forest_arrays(rng)
+        q = rng.normal(size=(model.FOREST_B, model.FOREST_F)).astype(np.float32)
+        # Pad node arrays to FOREST_M.
+        padded = []
+        for i, a in enumerate(t_arrays):
+            m = model.FOREST_M
+            if i in (2, 3):  # left/right: self-loops in padding
+                p = np.tile(np.arange(m, dtype=np.int32), (model.FOREST_T, 1))
+            elif i == 1:  # thresholds: +inf
+                p = np.full((model.FOREST_T, m), np.inf, np.float32)
+            else:
+                p = np.zeros((model.FOREST_T, m), a.dtype)
+            p[:, : a.shape[1]] = a
+            padded.append(p)
+        (got,) = model.forest_predict(*padded, q)
+        want = ref.forest_predict_ref(*padded, q, model.FOREST_DEPTH)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_constant_forest_predicts_constant(self):
+        t, m = model.FOREST_T, model.FOREST_M
+        feature = np.zeros((t, m), np.int32)
+        threshold = np.full((t, m), np.inf, np.float32)
+        idx = np.tile(np.arange(m, dtype=np.int32), (t, 1))
+        value = np.full((t, m), 7.5, np.float32)
+        q = RNG.normal(size=(model.FOREST_B, model.FOREST_F)).astype(np.float32)
+        (got,) = model.forest_predict(feature, threshold, idx, idx, value, q)
+        np.testing.assert_allclose(got, 7.5, rtol=1e-6)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_hypothesis_random_forests(self, seed):
+        rng = np.random.default_rng(seed)
+        arrays = self._random_forest_arrays(rng, m=model.FOREST_M, depth=8)
+        q = rng.normal(size=(model.FOREST_B, model.FOREST_F)).astype(np.float32)
+        (got,) = model.forest_predict(*arrays, q)
+        want = ref.forest_predict_ref(*arrays, q, model.FOREST_DEPTH)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestCnnGraph:
+    def _params(self, rng):
+        return (
+            rng.normal(size=(8, 1, 3, 3)).astype(np.float32) * 0.2,
+            rng.normal(size=8).astype(np.float32) * 0.1,
+            rng.normal(size=(16, 8, 3, 3)).astype(np.float32) * 0.2,
+            rng.normal(size=16).astype(np.float32) * 0.1,
+            rng.normal(size=(16 * 7 * 7, 10)).astype(np.float32) * 0.05,
+            rng.normal(size=10).astype(np.float32) * 0.1,
+        )
+
+    def test_shapes(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(model.CNN_B, 1, 28, 28)).astype(np.float32)
+        (logits,) = model.cnn_infer(x, *self._params(rng))
+        assert logits.shape == (model.CNN_B, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_matches_ref_conv_path(self):
+        # Replace the pallas convs by the reference conv: outputs agree.
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=(model.CNN_B, 1, 28, 28)).astype(np.float32)
+        w1, b1, w2, b2, wfc, bfc = self._params(rng)
+
+        def pool2(t):
+            b, c, h, w = t.shape
+            t = t.reshape(b, c, h // 2, 2, w // 2, 2)
+            return jnp.max(t, axis=(3, 5))
+
+        h1 = ref.conv3x3_ref(x, w1) + b1[None, :, None, None]
+        h1 = pool2(jnp.maximum(h1, 0.0))
+        h2 = ref.conv3x3_ref(np.asarray(h1), w2) + b2[None, :, None, None]
+        h2 = pool2(jnp.maximum(h2, 0.0))
+        want = h2.reshape(h2.shape[0], -1) @ wfc + bfc
+
+        (got,) = model.cnn_infer(x, w1, b1, w2, b2, wfc, bfc)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_batch_independence(self):
+        rng = np.random.default_rng(11)
+        params = self._params(rng)
+        x = rng.normal(size=(model.CNN_B, 1, 28, 28)).astype(np.float32)
+        (full,) = model.cnn_infer(x, *params)
+        x2 = x.copy()
+        x2[1:] = 0.0
+        (partial,) = model.cnn_infer(x2, *params)
+        np.testing.assert_allclose(full[0], partial[0], rtol=1e-5)

@@ -1,0 +1,55 @@
+//! Fig. 3 reproduction: "Prediction results for number of cycles" — per-
+//! network predicted vs actual cycles with the KNN predictor (the paper's
+//! winner for performance, MAPE 5.94%).
+//!
+//! Protocol: random 80/20 split over the dataset; report per-network mean
+//! predicted/actual cycles over the test rows plus the overall KNN MAPE.
+
+use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
+use hypa_dse::ml::dataset::Target;
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::metrics::mape;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::ml::validate::train_test_indices;
+use hypa_dse::util::table::{si, Table};
+
+fn main() {
+    println!("== Fig. 3: predicted vs actual cycles per network (KNN) ==\n");
+    let data = generate_or_load(DEFAULT_DATASET_PATH, &DatagenConfig::default(), false)
+        .expect("dataset");
+    let (tr, te) = train_test_indices(data.len(), 0.2, 2023);
+    let train = data.subset(&tr);
+    let test = data.subset(&te);
+
+    let mut knn = Knn::new(3);
+    knn.fit(&train.x, train.y(Target::Cycles));
+    let preds = knn.predict(&test.x);
+    let overall = mape(test.y(Target::Cycles), &preds);
+
+    // Per-network aggregation over the test rows (all GPUs/freqs).
+    let mut nets: Vec<String> = test.meta.iter().map(|m| m.network.clone()).collect();
+    nets.sort();
+    nets.dedup();
+    let mut t = Table::new(&["network", "test rows", "actual cycles", "predicted", "MAPE %"]);
+    for net in &nets {
+        let idx: Vec<usize> = (0..test.len())
+            .filter(|&i| &test.meta[i].network == net)
+            .collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let actual: Vec<f64> = idx.iter().map(|&i| test.y_cycles[i]).collect();
+        let predicted: Vec<f64> = idx.iter().map(|&i| preds[i]).collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        t.row(&[
+            net.clone(),
+            format!("{}", idx.len()),
+            si(mean(&actual)),
+            si(mean(&predicted)),
+            format!("{:.2}", mape(&actual, &predicted)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\noverall KNN cycles MAPE: {overall:.2}%");
+    println!("paper reference: KNN cycles MAPE 5.94% (§III, Fig. 3)");
+}

@@ -1,0 +1,112 @@
+//! Hot-path performance benchmarks (the §Perf deliverable).
+//!
+//! Measures every stage of the request path and the heavy build-time
+//! paths, with `BENCH_BUDGET_MS` controlling per-measurement budget:
+//!
+//! * XLA batched prediction (forest + knn) throughput vs the native rust
+//!   implementations — the L3 batching decision hinges on this ratio;
+//! * coordinator round-trip latency (single + bulk);
+//! * HyPA per-kernel analysis throughput;
+//! * simulator trace + timing throughput;
+//! * feature extraction.
+
+use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
+use hypa_dse::ml::features::NetDescriptor;
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::runtime::{ForestExecutable, KnnExecutable, Runtime};
+use hypa_dse::util::bench;
+use hypa_dse::util::rng::Rng;
+
+fn main() {
+    let budget = bench::default_budget();
+    println!("== hot-path benchmarks (budget {:?} per measurement) ==\n", budget);
+
+    // Synthetic trained models at realistic sizes.
+    let mut rng = Rng::new(1);
+    let d = hypa_dse::ml::features::all_feature_names().len();
+    let n = 2000;
+    let x: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.f64() * 5.0).collect())
+        .collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|r| 50.0 + 10.0 * r[0] + 3.0 * r[1] * r[1])
+        .collect();
+    let mut forest = RandomForest::new(ForestConfig::default());
+    forest.fit(&x, &y);
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &y);
+
+    let queries: Vec<Vec<f64>> = (0..256)
+        .map(|_| (0..d).map(|_| rng.f64() * 5.0).collect())
+        .collect();
+
+    println!("-- native (rust) batch-256 prediction --");
+    let m_nf = bench::bench("native forest predict x256", budget, || {
+        forest.predict(&queries)
+    });
+    let m_nk = bench::bench("native knn (n=2000) predict x256", budget, || {
+        knn.predict(&queries)
+    });
+
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        println!("\n-- XLA executable batch-256 prediction --");
+        let mut rt = Runtime::new("artifacts").unwrap();
+        let fx = ForestExecutable::stage(&mut rt, &forest, d).unwrap();
+        let kx = KnnExecutable::stage(&mut rt, &knn).unwrap();
+        let m_xf = bench::bench("xla forest predict x256", budget, || {
+            fx.predict(&rt, &queries).unwrap()
+        });
+        let m_xk = bench::bench("xla knn predict x256", budget, || {
+            kx.predict(&rt, &queries).unwrap()
+        });
+        println!(
+            "\nspeed ratios (native/xla): forest {:.2}x, knn {:.2}x",
+            m_nf.p50() / m_xf.p50(),
+            m_nk.p50() / m_xk.p50()
+        );
+
+        println!("\n-- coordinator service round trips --");
+        let service = PredictionService::start(
+            "artifacts".into(),
+            forest.clone(),
+            knn.clone(),
+            d,
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let p = service.predictor();
+        bench::bench("service single predict (power)", budget, || {
+            p.predict(Task::Power, queries[0].clone()).unwrap()
+        });
+        bench::bench("service bulk predict x256 (power)", budget, || {
+            p.predict_many(Task::Power, &queries).unwrap()
+        });
+        bench::bench("service bulk predict x256 (cycles)", budget, || {
+            p.predict_many(Task::Cycles, &queries).unwrap()
+        });
+        println!("service metrics: {}", p.metrics.summary());
+    } else {
+        println!("\n(artifacts missing — skipping XLA/coordinator benches; run `make artifacts`)");
+    }
+
+    println!("\n-- analysis paths --");
+    let net = hypa_dse::cnn::zoo::resnet18();
+    bench::bench("feature extraction resnet18 (IR+PTX+HyPA)", budget, || {
+        NetDescriptor::build(&net, 1).unwrap()
+    });
+    let small = hypa_dse::cnn::zoo::lenet5();
+    bench::bench("NetDescriptor lenet5", budget, || {
+        NetDescriptor::build(&small, 1).unwrap()
+    });
+
+    let mut sim = hypa_dse::sim::Simulator::default();
+    let g = hypa_dse::gpu::specs::by_name("v100s").unwrap();
+    // Warm the trace cache, then measure the analytic timing path alone.
+    let _ = sim.simulate_network(&small, 1, &g, 1000.0).unwrap();
+    bench::bench("sim lenet5 (traces cached, timing only)", budget, || {
+        sim.simulate_network(&small, 1, &g, 997.0).unwrap()
+    });
+}

@@ -1,0 +1,84 @@
+//! Offloading study (§I, §IV): device energy for local vs offloaded
+//! inference across bandwidth × RTT, reproducing the paper's motivating
+//! numbers (Jetson TX1: ~7 W local; ~2 W effective when offloaded) and
+//! locating the crossover bandwidth where offloading starts to win.
+
+use hypa_dse::cnn::zoo;
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::offload::{
+    decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
+    Recommendation,
+};
+use hypa_dse::sim::Simulator;
+use hypa_dse::util::table::{f, Table};
+
+fn main() {
+    println!("== Offload crossover: Jetson TX1 vs cloud V100S ==\n");
+    let profile = EdgePowerProfile::jetson_tx1();
+    let mut sim = Simulator::default();
+    let edge = by_name("jetson-tx1").unwrap();
+    let cloud = by_name("v100s").unwrap();
+
+    for net_name in ["squeezenet", "resnet18", "vgg16"] {
+        let net = zoo::by_name(net_name).unwrap();
+        let local_s = sim
+            .simulate_network(&net, 1, &edge, edge.boost_mhz)
+            .unwrap()
+            .seconds;
+        let cloud_s = sim
+            .simulate_network(&net, 1, &cloud, cloud.boost_mhz)
+            .unwrap()
+            .seconds;
+        let local = local_estimate(local_s, &profile);
+        println!(
+            "--- {net_name}: local {:.1} ms @ {:.1} W ({:.3} J); cloud compute {:.1} ms ---",
+            local_s * 1e3,
+            local.device_power_w,
+            local.device_energy_j,
+            cloud_s * 1e3
+        );
+
+        let mut t = Table::new(&[
+            "bw Mbps", "rtt ms", "offload ms", "offload J", "eff W", "decision",
+        ]);
+        let mut crossover: Option<f64> = None;
+        for &rtt in &[5.0, 50.0] {
+            for &bw in &[0.5, 2.0, 8.0, 32.0, 128.0, 512.0] {
+                let link = Link {
+                    bandwidth_mbps: bw,
+                    rtt_ms: rtt,
+                };
+                let off = offload_estimate(&net, 1, &link, cloud_s, &profile);
+                let d = decide(
+                    local,
+                    off,
+                    &Constraints {
+                        max_latency_s: None,
+                        max_energy_j: None,
+                    },
+                );
+                if rtt == 5.0
+                    && crossover.is_none()
+                    && d.recommendation == Recommendation::Offload
+                {
+                    crossover = Some(bw);
+                }
+                t.row(&[
+                    format!("{bw}"),
+                    format!("{rtt}"),
+                    f(off.latency_s * 1e3, 1),
+                    f(off.device_energy_j, 4),
+                    f(off.device_power_w, 2),
+                    d.recommendation.name().to_string(),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+        match crossover {
+            Some(bw) => println!("crossover (rtt 5 ms): offload wins from ~{bw} Mbps\n"),
+            None => println!("no crossover in the swept range\n"),
+        }
+    }
+    println!("paper reference (§I): TX1 object recognition ~7 W local vs ~2 W offloaded;");
+    println!("offload feasibility depends on available bandwidth.");
+}

@@ -1,0 +1,483 @@
+//! CNN intermediate representation.
+//!
+//! The paper's ML features "describe the ML application (e.g., neural
+//! networks) that consist of varying layers and neurons" (§II). This IR is
+//! that description: a flat list of layers with shape inference, parameter
+//! counts, FLOP counts, and activation sizes — everything the feature
+//! extractor, the kernel-launch decomposition, and the PTX code generator
+//! need.
+//!
+//! Tensors are `(C, H, W)` feature maps (batch dimension handled at launch
+//! decomposition time). Residual connections are expressed by `Add`
+//! layers carrying the index of the layer whose output they consume.
+
+use std::fmt;
+
+/// Pooling flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// One layer of a CNN.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Standard 2-D convolution.
+    Conv2d {
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Depthwise convolution (MobileNet): one filter per input channel.
+    DepthwiseConv {
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Spatial pooling.
+    Pool {
+        kind: PoolKind,
+        kernel: usize,
+        stride: usize,
+    },
+    /// Global average pooling to 1×1.
+    GlobalAvgPool,
+    /// Fully connected layer (flattens input implicitly).
+    Dense { out_f: usize },
+    /// Rectified linear activation.
+    Relu,
+    /// Batch normalization (inference: scale + shift).
+    BatchNorm,
+    /// Residual add with the output of `skip_from` (layer index).
+    Add { skip_from: usize },
+}
+
+/// Layer with a name (for reports) and its kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// A `(C, H, W)` activation shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.c * self.h * self.w
+    }
+    pub fn bytes_f32(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// Per-layer static analysis produced by [`Network::analyze`].
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub index: usize,
+    pub name: String,
+    pub input: Shape,
+    pub output: Shape,
+    /// Multiply-accumulates counted as 2 FLOPs each.
+    pub flops: f64,
+    /// Learned parameter count.
+    pub params: usize,
+    /// Bytes read (input + weights) and written (output), fp32.
+    pub bytes_in: usize,
+    pub bytes_out: usize,
+}
+
+/// Error from shape inference / validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IrError(pub String);
+
+impl fmt::Display for IrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CNN IR error: {}", self.0)
+    }
+}
+impl std::error::Error for IrError {}
+
+/// A whole network: input shape + ordered layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: &str, input: Shape) -> Network {
+        Network {
+            name: name.to_string(),
+            input,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Append a layer with an auto-generated name; returns its index.
+    pub fn push(&mut self, kind: LayerKind) -> usize {
+        let idx = self.layers.len();
+        let base = match &kind {
+            LayerKind::Conv2d { .. } => "conv",
+            LayerKind::DepthwiseConv { .. } => "dwconv",
+            LayerKind::Pool { .. } => "pool",
+            LayerKind::GlobalAvgPool => "gap",
+            LayerKind::Dense { .. } => "fc",
+            LayerKind::Relu => "relu",
+            LayerKind::BatchNorm => "bn",
+            LayerKind::Add { .. } => "add",
+        };
+        self.layers.push(Layer {
+            name: format!("{base}{idx}"),
+            kind,
+        });
+        idx
+    }
+
+    /// Shape inference + static per-layer analysis. Errors on inconsistent
+    /// shapes (e.g. kernel larger than padded input, bad skip index).
+    pub fn analyze(&self) -> Result<Vec<LayerInfo>, IrError> {
+        let mut infos: Vec<LayerInfo> = Vec::with_capacity(self.layers.len());
+        let mut cur = self.input;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let input = cur;
+            let (output, flops, params) = match &layer.kind {
+                LayerKind::Conv2d {
+                    out_c,
+                    kernel,
+                    stride,
+                    pad,
+                } => {
+                    let o = conv_out(input, *kernel, *stride, *pad)
+                        .map_err(|e| IrError(format!("{}: {e}", layer.name)))?;
+                    let out = Shape {
+                        c: *out_c,
+                        h: o.0,
+                        w: o.1,
+                    };
+                    let macs =
+                        (*out_c * o.0 * o.1) as f64 * (input.c * kernel * kernel) as f64;
+                    let params = out_c * input.c * kernel * kernel + out_c;
+                    (out, 2.0 * macs, params)
+                }
+                LayerKind::DepthwiseConv {
+                    kernel,
+                    stride,
+                    pad,
+                } => {
+                    let o = conv_out(input, *kernel, *stride, *pad)
+                        .map_err(|e| IrError(format!("{}: {e}", layer.name)))?;
+                    let out = Shape {
+                        c: input.c,
+                        h: o.0,
+                        w: o.1,
+                    };
+                    let macs = (input.c * o.0 * o.1) as f64 * (kernel * kernel) as f64;
+                    let params = input.c * kernel * kernel + input.c;
+                    (out, 2.0 * macs, params)
+                }
+                LayerKind::Pool { kernel, stride, .. } => {
+                    let o = conv_out(input, *kernel, *stride, 0)
+                        .map_err(|e| IrError(format!("{}: {e}", layer.name)))?;
+                    let out = Shape {
+                        c: input.c,
+                        h: o.0,
+                        w: o.1,
+                    };
+                    let flops = (out.numel() * kernel * kernel) as f64;
+                    (out, flops, 0)
+                }
+                LayerKind::GlobalAvgPool => {
+                    let out = Shape {
+                        c: input.c,
+                        h: 1,
+                        w: 1,
+                    };
+                    (out, input.numel() as f64, 0)
+                }
+                LayerKind::Dense { out_f } => {
+                    let in_f = input.numel();
+                    let out = Shape {
+                        c: *out_f,
+                        h: 1,
+                        w: 1,
+                    };
+                    let macs = (in_f * out_f) as f64;
+                    (out, 2.0 * macs, in_f * out_f + out_f)
+                }
+                LayerKind::Relu => (input, input.numel() as f64, 0),
+                LayerKind::BatchNorm => (input, 2.0 * input.numel() as f64, 2 * input.c),
+                LayerKind::Add { skip_from } => {
+                    let src = infos
+                        .get(*skip_from)
+                        .ok_or_else(|| {
+                            IrError(format!(
+                                "{}: skip_from {skip_from} out of range",
+                                layer.name
+                            ))
+                        })?;
+                    if src.output != input {
+                        return Err(IrError(format!(
+                            "{}: residual shape mismatch {} vs {}",
+                            layer.name, src.output, input
+                        )));
+                    }
+                    (input, input.numel() as f64, 0)
+                }
+            };
+            let weight_bytes = params * 4;
+            infos.push(LayerInfo {
+                index: i,
+                name: layer.name.clone(),
+                input,
+                output,
+                flops,
+                params,
+                bytes_in: input.bytes_f32() + weight_bytes,
+                bytes_out: output.bytes_f32(),
+            });
+            cur = output;
+        }
+        Ok(infos)
+    }
+
+    /// Network totals (for the ML feature vector).
+    pub fn totals(&self) -> Result<NetTotals, IrError> {
+        let infos = self.analyze()?;
+        let mut t = NetTotals {
+            layers: self.layers.len(),
+            ..Default::default()
+        };
+        for (info, layer) in infos.iter().zip(&self.layers) {
+            t.flops += info.flops;
+            t.params += info.params;
+            t.activation_bytes += info.bytes_out as f64;
+            match layer.kind {
+                LayerKind::Conv2d { .. } | LayerKind::DepthwiseConv { .. } => {
+                    t.conv_layers += 1;
+                    t.conv_flops += info.flops;
+                }
+                LayerKind::Dense { .. } => {
+                    t.dense_layers += 1;
+                    t.dense_flops += info.flops;
+                }
+                LayerKind::Pool { .. } | LayerKind::GlobalAvgPool => t.pool_layers += 1,
+                _ => {}
+            }
+        }
+        t.output_shape = infos.last().map(|i| i.output).unwrap_or(self.input);
+        Ok(t)
+    }
+}
+
+/// Aggregate network statistics (ML features).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetTotals {
+    pub layers: usize,
+    pub conv_layers: usize,
+    pub dense_layers: usize,
+    pub pool_layers: usize,
+    pub flops: f64,
+    pub conv_flops: f64,
+    pub dense_flops: f64,
+    pub params: usize,
+    pub activation_bytes: f64,
+    pub output_shape: Shape,
+}
+
+impl Default for Shape {
+    fn default() -> Self {
+        Shape { c: 0, h: 0, w: 0 }
+    }
+}
+
+fn conv_out(
+    input: Shape,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<(usize, usize), String> {
+    if stride == 0 {
+        return Err("stride 0".into());
+    }
+    let h_in = input.h + 2 * pad;
+    let w_in = input.w + 2 * pad;
+    if kernel > h_in || kernel > w_in {
+        return Err(format!(
+            "kernel {kernel} larger than padded input {h_in}x{w_in}"
+        ));
+    }
+    Ok(((h_in - kernel) / stride + 1, (w_in - kernel) / stride + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        let mut n = Network::new(
+            "tiny",
+            Shape {
+                c: 3,
+                h: 32,
+                w: 32,
+            },
+        );
+        n.push(LayerKind::Conv2d {
+            out_c: 16,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+        });
+        n.push(LayerKind::Relu);
+        n.push(LayerKind::Pool {
+            kind: PoolKind::Max,
+            kernel: 2,
+            stride: 2,
+        });
+        n.push(LayerKind::Dense { out_f: 10 });
+        n
+    }
+
+    #[test]
+    fn shape_inference_basic() {
+        let infos = tiny().analyze().unwrap();
+        assert_eq!(
+            infos[0].output,
+            Shape {
+                c: 16,
+                h: 32,
+                w: 32
+            }
+        );
+        assert_eq!(
+            infos[2].output,
+            Shape {
+                c: 16,
+                h: 16,
+                w: 16
+            }
+        );
+        assert_eq!(infos[3].output, Shape { c: 10, h: 1, w: 1 });
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        let infos = tiny().analyze().unwrap();
+        // 2 * outC*H*W * inC*k*k = 2 * 16*32*32 * 3*3*3
+        let expect = 2.0 * (16 * 32 * 32) as f64 * 27.0;
+        assert_eq!(infos[0].flops, expect);
+        // params: 16*3*3*3 + 16
+        assert_eq!(infos[0].params, 448);
+    }
+
+    #[test]
+    fn dense_counts() {
+        let infos = tiny().analyze().unwrap();
+        let in_f = 16 * 16 * 16;
+        assert_eq!(infos[3].params, in_f * 10 + 10);
+        assert_eq!(infos[3].flops, 2.0 * (in_f * 10) as f64);
+    }
+
+    #[test]
+    fn residual_shape_checked() {
+        let mut n = Network::new(
+            "res",
+            Shape {
+                c: 8,
+                h: 8,
+                w: 8,
+            },
+        );
+        let a = n.push(LayerKind::Conv2d {
+            out_c: 8,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+        });
+        n.push(LayerKind::Relu);
+        n.push(LayerKind::Add { skip_from: a });
+        assert!(n.analyze().is_ok());
+
+        // Mismatched skip: conv changes channels.
+        let mut bad = Network::new(
+            "bad",
+            Shape {
+                c: 8,
+                h: 8,
+                w: 8,
+            },
+        );
+        let a = bad.push(LayerKind::Conv2d {
+            out_c: 16,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+        });
+        bad.push(LayerKind::Conv2d {
+            out_c: 8,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+        });
+        bad.push(LayerKind::Add { skip_from: a });
+        assert!(bad.analyze().is_err());
+    }
+
+    #[test]
+    fn kernel_too_large_rejected() {
+        let mut n = Network::new("k", Shape { c: 1, h: 4, w: 4 });
+        n.push(LayerKind::Conv2d {
+            out_c: 1,
+            kernel: 7,
+            stride: 1,
+            pad: 0,
+        });
+        assert!(n.analyze().is_err());
+    }
+
+    #[test]
+    fn totals_aggregate() {
+        let t = tiny().totals().unwrap();
+        assert_eq!(t.layers, 4);
+        assert_eq!(t.conv_layers, 1);
+        assert_eq!(t.dense_layers, 1);
+        assert!(t.flops > 0.0);
+        assert_eq!(t.output_shape, Shape { c: 10, h: 1, w: 1 });
+    }
+
+    #[test]
+    fn depthwise_channels_preserved() {
+        let mut n = Network::new(
+            "dw",
+            Shape {
+                c: 32,
+                h: 16,
+                w: 16,
+            },
+        );
+        n.push(LayerKind::DepthwiseConv {
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+        });
+        let infos = n.analyze().unwrap();
+        assert_eq!(infos[0].output.c, 32);
+        // Depthwise macs: C*H*W*k*k (no cross-channel term).
+        assert_eq!(infos[0].flops, 2.0 * (32 * 16 * 16 * 9) as f64);
+    }
+}

@@ -1,0 +1,361 @@
+//! Kernel-launch decomposition.
+//!
+//! Turns each CNN layer into the GPU kernel launch(es) that a CUDA
+//! inference runtime would issue: a kernel *class* (which PTX template the
+//! code generator emits), grid/block dimensions, and the occupancy-relevant
+//! resource usage. This is the bridge between the network IR and both the
+//! PTX code generator ([`crate::ptx::codegen`]) and the simulator
+//! ([`crate::sim`]).
+
+use crate::cnn::ir::{IrError, LayerKind, Network};
+use crate::gpu::occupancy::KernelResources;
+use crate::util::stats::ceil_div;
+
+/// Which kernel template implements the launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    /// Direct convolution: one thread per output element, loop over
+    /// `inC·k·k` with boundary branches.
+    DirectConv,
+    /// Depthwise convolution: one thread per output element, loop `k·k`.
+    DepthwiseConv,
+    /// Dense / GEMV: one thread per output feature, loop over `inF`.
+    Gemm,
+    /// Max/avg pooling: one thread per output element, loop `k·k`.
+    Pool,
+    /// Elementwise map (ReLU / BatchNorm / residual Add).
+    Elementwise,
+    /// Global average pool: one thread per channel, loop `H·W`.
+    GlobalPool,
+}
+
+impl KernelClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelClass::DirectConv => "direct_conv",
+            KernelClass::DepthwiseConv => "depthwise_conv",
+            KernelClass::Gemm => "gemm",
+            KernelClass::Pool => "pool",
+            KernelClass::Elementwise => "elementwise",
+            KernelClass::GlobalPool => "global_pool",
+        }
+    }
+}
+
+/// Dimension parameters consumed by the PTX code generator and simulator.
+/// One struct covers all classes; unused fields are zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct LaunchDims {
+    pub batch: usize,
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Dense: input features. Elementwise: element count.
+    pub in_f: usize,
+    pub out_f: usize,
+    /// Elementwise: number of input operands (1 = relu/bn, 2 = add).
+    pub operands: usize,
+}
+
+/// One kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelLaunch {
+    pub name: String,
+    pub class: KernelClass,
+    pub dims: LaunchDims,
+    pub grid_blocks: usize,
+    pub resources: KernelResources,
+}
+
+impl KernelLaunch {
+    pub fn total_threads(&self) -> usize {
+        self.grid_blocks * self.resources.threads_per_block
+    }
+
+    /// Logical (useful) threads — the launch may be padded to block size.
+    pub fn useful_threads(&self) -> usize {
+        match self.class {
+            KernelClass::DirectConv | KernelClass::DepthwiseConv | KernelClass::Pool => {
+                self.dims.batch * self.dims.out_c * self.dims.out_h * self.dims.out_w
+            }
+            KernelClass::Gemm => self.dims.batch * self.dims.out_f,
+            KernelClass::Elementwise => self.dims.in_f,
+            KernelClass::GlobalPool => self.dims.batch * self.dims.in_c,
+        }
+    }
+}
+
+const BLOCK: usize = 256;
+
+fn launch(name: String, class: KernelClass, dims: LaunchDims, regs: usize) -> KernelLaunch {
+    let useful = match class {
+        KernelClass::DirectConv | KernelClass::DepthwiseConv | KernelClass::Pool => {
+            dims.batch * dims.out_c * dims.out_h * dims.out_w
+        }
+        KernelClass::Gemm => dims.batch * dims.out_f,
+        KernelClass::Elementwise => dims.in_f,
+        KernelClass::GlobalPool => dims.batch * dims.in_c,
+    };
+    KernelLaunch {
+        name,
+        class,
+        dims,
+        grid_blocks: ceil_div(useful.max(1), BLOCK),
+        resources: KernelResources {
+            threads_per_block: BLOCK,
+            regs_per_thread: regs,
+            smem_per_block: 0,
+        },
+    }
+}
+
+/// Decompose `net` (inference at batch size `batch`) into kernel launches.
+pub fn decompose(net: &Network, batch: usize) -> Result<Vec<KernelLaunch>, IrError> {
+    assert!(batch > 0);
+    let infos = net.analyze()?;
+    let mut launches = Vec::new();
+    for (layer, info) in net.layers.iter().zip(&infos) {
+        let i = info.input;
+        let o = info.output;
+        let name = format!("{}_{}", net.name, layer.name);
+        let l = match &layer.kind {
+            LayerKind::Conv2d {
+                out_c,
+                kernel,
+                stride,
+                pad,
+            } => launch(
+                name,
+                KernelClass::DirectConv,
+                LaunchDims {
+                    batch,
+                    in_c: i.c,
+                    in_h: i.h,
+                    in_w: i.w,
+                    out_c: *out_c,
+                    out_h: o.h,
+                    out_w: o.w,
+                    kernel: *kernel,
+                    stride: *stride,
+                    pad: *pad,
+                    ..Default::default()
+                },
+                // Register pressure grows with the kernel footprint.
+                (32 + 2 * kernel).min(96),
+            ),
+            LayerKind::DepthwiseConv {
+                kernel,
+                stride,
+                pad,
+            } => launch(
+                name,
+                KernelClass::DepthwiseConv,
+                LaunchDims {
+                    batch,
+                    in_c: i.c,
+                    in_h: i.h,
+                    in_w: i.w,
+                    out_c: o.c,
+                    out_h: o.h,
+                    out_w: o.w,
+                    kernel: *kernel,
+                    stride: *stride,
+                    pad: *pad,
+                    ..Default::default()
+                },
+                32,
+            ),
+            LayerKind::Pool { kind, kernel, stride } => {
+                let _ = kind; // same instruction mix either way (max vs add)
+                launch(
+                    name,
+                    KernelClass::Pool,
+                    LaunchDims {
+                        batch,
+                        in_c: i.c,
+                        in_h: i.h,
+                        in_w: i.w,
+                        out_c: o.c,
+                        out_h: o.h,
+                        out_w: o.w,
+                        kernel: *kernel,
+                        stride: *stride,
+                        ..Default::default()
+                    },
+                    24,
+                )
+            }
+            LayerKind::GlobalAvgPool => launch(
+                name,
+                KernelClass::GlobalPool,
+                LaunchDims {
+                    batch,
+                    in_c: i.c,
+                    in_h: i.h,
+                    in_w: i.w,
+                    ..Default::default()
+                },
+                20,
+            ),
+            LayerKind::Dense { out_f } => launch(
+                name,
+                KernelClass::Gemm,
+                LaunchDims {
+                    batch,
+                    in_f: i.numel(),
+                    out_f: *out_f,
+                    ..Default::default()
+                },
+                40,
+            ),
+            LayerKind::Relu => launch(
+                name,
+                KernelClass::Elementwise,
+                LaunchDims {
+                    batch,
+                    in_f: batch * i.numel(),
+                    operands: 1,
+                    ..Default::default()
+                },
+                16,
+            ),
+            LayerKind::BatchNorm => launch(
+                name,
+                KernelClass::Elementwise,
+                LaunchDims {
+                    batch,
+                    in_f: batch * i.numel(),
+                    operands: 1,
+                    ..Default::default()
+                },
+                20,
+            ),
+            LayerKind::Add { .. } => launch(
+                name,
+                KernelClass::Elementwise,
+                LaunchDims {
+                    batch,
+                    in_f: batch * i.numel(),
+                    operands: 2,
+                    ..Default::default()
+                },
+                16,
+            ),
+        };
+        launches.push(l);
+    }
+    Ok(launches)
+}
+
+/// Weight + activation working set (bytes, fp32) — used by the offload
+/// module to size the transfer and by the DSE memory-capacity constraint.
+pub fn working_set_bytes(net: &Network, batch: usize) -> Result<usize, IrError> {
+    let infos = net.analyze()?;
+    let params: usize = infos.iter().map(|i| i.params).sum();
+    let peak_act = infos
+        .iter()
+        .map(|i| (i.input.numel() + i.output.numel()) * batch)
+        .max()
+        .unwrap_or(0);
+    Ok(4 * (params + peak_act))
+}
+
+/// Input tensor size in bytes (what offloading must ship per inference).
+pub fn input_bytes(net: &Network, batch: usize) -> usize {
+    4 * batch * net.input.numel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+
+    #[test]
+    fn decompose_matches_layer_count() {
+        let net = zoo::lenet5();
+        let launches = decompose(&net, 1).unwrap();
+        assert_eq!(launches.len(), net.layers.len());
+    }
+
+    #[test]
+    fn conv_launch_covers_output() {
+        let net = zoo::lenet5();
+        let launches = decompose(&net, 4).unwrap();
+        let conv0 = &launches[0];
+        assert_eq!(conv0.class, KernelClass::DirectConv);
+        // 4 * 6 * 28 * 28 outputs.
+        assert_eq!(conv0.useful_threads(), 4 * 6 * 28 * 28);
+        assert!(conv0.total_threads() >= conv0.useful_threads());
+        assert!(conv0.total_threads() < conv0.useful_threads() + BLOCK);
+    }
+
+    #[test]
+    fn gemm_launch_dims() {
+        let net = zoo::lenet5();
+        let launches = decompose(&net, 2).unwrap();
+        let fc = launches
+            .iter()
+            .find(|l| l.class == KernelClass::Gemm)
+            .unwrap();
+        // conv(pad2) 28→28, pool→14, conv(pad0)→10, pool→5.
+        assert_eq!(fc.dims.in_f, 16 * 5 * 5);
+        assert_eq!(fc.dims.out_f, 120);
+        assert_eq!(fc.useful_threads(), 2 * 120);
+    }
+
+    #[test]
+    fn batch_scales_grid_not_block() {
+        let net = zoo::resnet18();
+        let l1 = decompose(&net, 1).unwrap();
+        let l8 = decompose(&net, 8).unwrap();
+        assert!(l8[0].grid_blocks >= 7 * l1[0].grid_blocks);
+        assert_eq!(
+            l1[0].resources.threads_per_block,
+            l8[0].resources.threads_per_block
+        );
+    }
+
+    #[test]
+    fn add_layers_have_two_operands() {
+        let net = zoo::resnet18();
+        let launches = decompose(&net, 1).unwrap();
+        let adds: Vec<_> = launches
+            .iter()
+            .filter(|l| l.class == KernelClass::Elementwise && l.dims.operands == 2)
+            .collect();
+        assert!(!adds.is_empty(), "resnet should have residual adds");
+    }
+
+    #[test]
+    fn working_set_dominated_by_params_for_vgg() {
+        let net = zoo::vgg16();
+        let ws = working_set_bytes(&net, 1).unwrap();
+        let params = net.totals().unwrap().params * 4;
+        assert!(ws > params);
+        assert!(ws < params * 2); // activations are small next to 138M params
+    }
+
+    #[test]
+    fn input_bytes_formula() {
+        let net = zoo::alexnet();
+        assert_eq!(input_bytes(&net, 1), 4 * 3 * 224 * 224);
+        assert_eq!(input_bytes(&net, 8), 8 * 4 * 3 * 224 * 224);
+    }
+
+    #[test]
+    fn all_zoo_networks_decompose() {
+        for net in zoo::zoo() {
+            let launches = decompose(&net, 1).unwrap();
+            for l in &launches {
+                assert!(l.grid_blocks > 0, "{} empty grid", l.name);
+                assert!(l.useful_threads() > 0, "{} no threads", l.name);
+            }
+        }
+    }
+}

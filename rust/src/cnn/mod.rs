@@ -1,0 +1,10 @@
+//! CNN workload substrate: the layer IR ([`ir`]), the model zoo the paper's
+//! studies evaluate ([`zoo`]), and the decomposition of layers into GPU
+//! kernel launches ([`launch`]).
+
+pub mod ir;
+pub mod launch;
+pub mod zoo;
+
+pub use ir::{Layer, LayerInfo, LayerKind, NetTotals, Network, PoolKind, Shape};
+pub use launch::{decompose, input_bytes, working_set_bytes, KernelClass, KernelLaunch, LaunchDims};

@@ -1,0 +1,232 @@
+//! Typed application configuration.
+//!
+//! All launcher-level knobs live in one JSON document (defaults below),
+//! loadable from a file (`hypa-dse --config path ...`) with environment
+//! overrides (`HYPA_DSE_DATASET`, `HYPA_DSE_ARTIFACTS`). Every field is
+//! validated at load time so misconfiguration fails fast, not mid-sweep.
+
+use anyhow::{anyhow, Result};
+
+use crate::ml::datagen::DatagenConfig;
+use crate::util::json::Json;
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: String,
+    /// Where the generated dataset is cached.
+    pub dataset_path: String,
+    /// Dataset generation parameters.
+    pub datagen: DatagenConfig,
+    /// Coordinator batching: linger (µs) before flushing a partial batch.
+    pub batch_linger_us: u64,
+    /// REST bind address.
+    pub serve_addr: String,
+    /// DSE defaults.
+    pub dse_freq_steps: usize,
+    pub dse_batches: Vec<usize>,
+    /// Random-search budget for `dse::search`.
+    pub search_budget: usize,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            artifacts_dir: "artifacts".into(),
+            dataset_path: "artifacts/dataset.json".into(),
+            datagen: DatagenConfig::default(),
+            batch_linger_us: 200,
+            serve_addr: "127.0.0.1:7788".into(),
+            dse_freq_steps: 10,
+            dse_batches: vec![1, 4, 16],
+            search_budget: 96,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Parse from a JSON document; unknown keys are rejected (they are
+    /// almost always typos).
+    pub fn from_json(j: &Json) -> Result<AppConfig> {
+        let mut cfg = AppConfig::default();
+        let Json::Obj(map) = j else {
+            return Err(anyhow!("config root must be an object"));
+        };
+        for (key, value) in map {
+            match key.as_str() {
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = value
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifacts_dir must be a string"))?
+                        .to_string()
+                }
+                "dataset_path" => {
+                    cfg.dataset_path = value
+                        .as_str()
+                        .ok_or_else(|| anyhow!("dataset_path must be a string"))?
+                        .to_string()
+                }
+                "batch_linger_us" => {
+                    cfg.batch_linger_us = value
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("batch_linger_us must be a number"))?
+                        as u64
+                }
+                "serve_addr" => {
+                    cfg.serve_addr = value
+                        .as_str()
+                        .ok_or_else(|| anyhow!("serve_addr must be a string"))?
+                        .to_string()
+                }
+                "dse_freq_steps" => {
+                    cfg.dse_freq_steps = value
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("dse_freq_steps must be a number"))?
+                }
+                "dse_batches" => {
+                    cfg.dse_batches = value
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("dse_batches must be an array"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect()
+                }
+                "search_budget" => {
+                    cfg.search_budget = value
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("search_budget must be a number"))?
+                }
+                "datagen" => {
+                    let d = &mut cfg.datagen;
+                    d.seed = value.usize_or("seed", d.seed as usize) as u64;
+                    d.noise_sigma = value.f64_or("noise_sigma", d.noise_sigma);
+                    d.freq_steps = value.usize_or("freq_steps", d.freq_steps);
+                    if let Some(b) = value.get("batches").and_then(Json::as_arr) {
+                        d.batches = b.iter().filter_map(Json::as_usize).collect();
+                    }
+                    if let Some(w) = value.get("widths").and_then(Json::as_arr) {
+                        d.widths = w.iter().filter_map(Json::as_f64).collect();
+                    }
+                    if let Some(g) = value.get("gpus").and_then(Json::as_arr) {
+                        d.gpus = g
+                            .iter()
+                            .filter_map(Json::as_str)
+                            .map(String::from)
+                            .collect();
+                    }
+                }
+                other => return Err(anyhow!("unknown config key '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file, then apply environment overrides.
+    pub fn load(path: Option<&str>) -> Result<AppConfig> {
+        let mut cfg = match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| anyhow!("reading config {p}: {e}"))?;
+                let j = Json::parse(&text).map_err(|e| anyhow!("config {p}: {e}"))?;
+                Self::from_json(&j)?
+            }
+            None => AppConfig::default(),
+        };
+        if let Ok(v) = std::env::var("HYPA_DSE_DATASET") {
+            cfg.dataset_path = v;
+        }
+        if let Ok(v) = std::env::var("HYPA_DSE_ARTIFACTS") {
+            cfg.artifacts_dir = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.artifacts_dir.is_empty(), "artifacts_dir empty");
+        anyhow::ensure!(!self.dataset_path.is_empty(), "dataset_path empty");
+        anyhow::ensure!(
+            self.datagen.freq_steps >= 2,
+            "datagen.freq_steps must be >= 2"
+        );
+        anyhow::ensure!(!self.datagen.batches.is_empty(), "datagen.batches empty");
+        anyhow::ensure!(
+            self.datagen.noise_sigma >= 0.0 && self.datagen.noise_sigma < 0.5,
+            "datagen.noise_sigma out of range"
+        );
+        anyhow::ensure!(self.dse_freq_steps >= 2, "dse_freq_steps must be >= 2");
+        anyhow::ensure!(!self.dse_batches.is_empty(), "dse_batches empty");
+        anyhow::ensure!(self.search_budget >= 4, "search_budget too small");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        AppConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_document() {
+        let j = Json::parse(
+            r#"{
+            "artifacts_dir": "a",
+            "dataset_path": "d.json",
+            "batch_linger_us": 500,
+            "serve_addr": "0.0.0.0:80",
+            "dse_freq_steps": 4,
+            "dse_batches": [1, 2],
+            "search_budget": 32,
+            "datagen": {"freq_steps": 6, "noise_sigma": 0.01,
+                        "batches": [1], "widths": [1.0, 0.5],
+                        "gpus": ["v100s"]}
+        }"#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.artifacts_dir, "a");
+        assert_eq!(cfg.batch_linger_us, 500);
+        assert_eq!(cfg.dse_batches, vec![1, 2]);
+        assert_eq!(cfg.datagen.freq_steps, 6);
+        assert_eq!(cfg.datagen.gpus, vec!["v100s".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let j = Json::parse(r#"{"artifact_dir": "typo"}"#).unwrap();
+        let e = AppConfig::from_json(&j).unwrap_err();
+        assert!(e.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let j = Json::parse(r#"{"dse_freq_steps": 1}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"datagen": {"noise_sigma": 0.9}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn env_overrides() {
+        std::env::set_var("HYPA_DSE_DATASET", "/tmp/override.json");
+        let cfg = AppConfig::load(None).unwrap();
+        std::env::remove_var("HYPA_DSE_DATASET");
+        assert_eq!(cfg.dataset_path, "/tmp/override.json");
+    }
+
+    #[test]
+    fn load_from_file() {
+        let p = "/tmp/hypa_dse_test_cfg.json";
+        std::fs::write(p, r#"{"search_budget": 64}"#).unwrap();
+        let cfg = AppConfig::load(Some(p)).unwrap();
+        assert_eq!(cfg.search_budget, 64);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,112 @@
+//! Service metrics: request counts, batch fill, latency percentiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Lock-light metrics for the prediction service.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub errors: AtomicU64,
+    /// Recent per-batch latencies (seconds), ring buffer.
+    latencies: Mutex<Vec<f64>>,
+}
+
+const LAT_CAP: usize = 4096;
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, items: usize, latency_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() >= LAT_CAP {
+            let excess = l.len() - LAT_CAP + 1;
+            l.drain(..excess);
+        }
+        l.push(latency_s);
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean items per batch (batching efficiency).
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let l = self.latencies.lock().unwrap();
+        crate::util::stats::percentile(&l, p)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} fill={:.1} p50={} p95={} errors={}",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_fill(),
+            crate::util::table::dur(self.latency_percentile(50.0)),
+            crate::util::table::dur(self.latency_percentile(95.0)),
+            self.errors.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_fill_math() {
+        let m = Metrics::new();
+        m.record_batch(10, 0.001);
+        m.record_batch(30, 0.002);
+        assert!((m.mean_batch_fill() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_batch(1, i as f64 / 1000.0);
+        }
+        let p50 = m.latency_percentile(50.0);
+        assert!(p50 > 0.045 && p50 < 0.056, "p50={p50}");
+    }
+
+    #[test]
+    fn ring_buffer_bounded() {
+        let m = Metrics::new();
+        for _ in 0..(LAT_CAP + 100) {
+            m.record_batch(1, 0.001);
+        }
+        assert!(m.latencies.lock().unwrap().len() <= LAT_CAP);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_batch(5, 0.01);
+        let s = m.summary();
+        assert!(s.contains("requests=1"));
+        assert!(s.contains("fill=5.0"));
+    }
+}

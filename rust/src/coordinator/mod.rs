@@ -1,0 +1,10 @@
+//! L3 coordinator: the batched prediction service ([`service`]) that owns
+//! the PJRT runtime and routes power/cycles prediction requests from the
+//! DSE engine and the offload REST API into AOT-sized XLA batches, plus
+//! its [`metrics`].
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use service::{BatchPolicy, PredictionService, Predictor, Task};

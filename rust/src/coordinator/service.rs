@@ -1,0 +1,276 @@
+//! Batched prediction service: the L3 coordination hot path.
+//!
+//! DSE sweeps and the offload REST API submit feature vectors for scoring;
+//! a dedicated worker thread owns the PJRT runtime and the staged model
+//! executables, collects requests into AOT-sized batches (dynamic
+//! batching: fill up to the batch capacity, or flush when the queue goes
+//! momentarily idle), executes the XLA predictor once per batch, and
+//! routes each result back to its requester. This is the vLLM-router
+//! pattern scaled to the paper's workload: many small independent
+//! predictions with a throughput-optimal batched backend.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::ml::forest::RandomForest;
+use crate::ml::knn::Knn;
+use crate::runtime::{shapes, ForestExecutable, KnnExecutable, Runtime};
+
+/// Which predictor to route a request to (paper: RF for power, KNN for
+/// cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Power,
+    Cycles,
+}
+
+struct Request {
+    task: Task,
+    features: Vec<f64>,
+    respond: mpsc::Sender<Result<f64, String>>,
+}
+
+enum Control {
+    Request(Request),
+    Shutdown,
+}
+
+/// Handle to the prediction service (cheap to clone; thread-safe).
+#[derive(Clone)]
+pub struct Predictor {
+    tx: mpsc::Sender<Control>,
+    pub metrics: Arc<Metrics>,
+}
+
+/// Owns the worker thread; dropping shuts the service down.
+pub struct PredictionService {
+    handle: Option<JoinHandle<()>>,
+    predictor: Predictor,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max items per batch per task (AOT capacity).
+    pub max_batch: usize,
+    /// How long to linger for more requests once at least one is queued.
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: shapes::KNN_B,
+            linger: Duration::from_micros(200),
+        }
+    }
+}
+
+impl PredictionService {
+    /// Start the service: stages the trained models onto the PJRT runtime
+    /// inside the worker thread (Runtime is not Send-safe to share, so it
+    /// lives entirely on the worker).
+    pub fn start(
+        artifacts_dir: String,
+        power_model: RandomForest,
+        cycles_model: Knn,
+        n_features: usize,
+        policy: BatchPolicy,
+    ) -> Result<PredictionService> {
+        let (tx, rx) = mpsc::channel::<Control>();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+
+        let handle = std::thread::Builder::new()
+            .name("predictor".into())
+            .spawn(move || {
+                let mut rt = match Runtime::new(&artifacts_dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                let staged = (|| -> Result<(ForestExecutable, KnnExecutable)> {
+                    Ok((
+                        ForestExecutable::stage(&mut rt, &power_model, n_features)?,
+                        KnnExecutable::stage(&mut rt, &cycles_model)?,
+                    ))
+                })();
+                let (forest, knn) = match staged {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                let _ = ready_tx.send(Ok(()));
+                worker_loop(rt, forest, knn, rx, m, policy);
+            })
+            .map_err(|e| anyhow!("spawn: {e}"))?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("prediction worker died during startup"))?
+            .map_err(|e| anyhow!("prediction service startup: {e}"))?;
+
+        Ok(PredictionService {
+            handle: Some(handle),
+            predictor: Predictor { tx, metrics },
+        })
+    }
+
+    pub fn predictor(&self) -> Predictor {
+        self.predictor.clone()
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        let _ = self.predictor.tx.send(Control::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Predictor {
+    /// Predict one feature vector (blocks until the batch it joins runs).
+    pub fn predict(&self, task: Task, features: Vec<f64>) -> Result<f64> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.record_request();
+        self.tx
+            .send(Control::Request(Request {
+                task,
+                features,
+                respond: tx,
+            }))
+            .map_err(|_| anyhow!("prediction service stopped"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("prediction service dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Predict many feature vectors; submits all up front so the batcher
+    /// can fill whole batches, then collects in order.
+    pub fn predict_many(&self, task: Task, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let mut pending = Vec::with_capacity(rows.len());
+        for row in rows {
+            let (tx, rx) = mpsc::channel();
+            self.metrics.record_request();
+            self.tx
+                .send(Control::Request(Request {
+                    task,
+                    features: row.clone(),
+                    respond: tx,
+                }))
+                .map_err(|_| anyhow!("prediction service stopped"))?;
+            pending.push(rx);
+        }
+        pending
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| anyhow!("dropped request"))?
+                    .map_err(|e| anyhow!(e))
+            })
+            .collect()
+    }
+}
+
+fn flush(
+    rt: &Runtime,
+    forest: &ForestExecutable,
+    knn: &KnnExecutable,
+    task: Task,
+    queue: &mut Vec<Request>,
+    metrics: &Metrics,
+) {
+    if queue.is_empty() {
+        return;
+    }
+    let t0 = Instant::now();
+    let feats: Vec<Vec<f64>> = queue.iter().map(|r| r.features.clone()).collect();
+    let result = match task {
+        Task::Power => forest.predict(rt, &feats),
+        Task::Cycles => knn.predict(rt, &feats),
+    };
+    match result {
+        Ok(values) => {
+            for (req, v) in queue.drain(..).zip(values) {
+                let _ = req.respond.send(Ok(v));
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            let msg = format!("{e:#}");
+            for req in queue.drain(..) {
+                let _ = req.respond.send(Err(msg.clone()));
+            }
+        }
+    }
+    metrics.record_batch(feats.len(), t0.elapsed().as_secs_f64());
+}
+
+fn worker_loop(
+    rt: Runtime,
+    forest: ForestExecutable,
+    knn: KnnExecutable,
+    rx: mpsc::Receiver<Control>,
+    metrics: Arc<Metrics>,
+    policy: BatchPolicy,
+) {
+    let mut power_q: Vec<Request> = Vec::new();
+    let mut cycles_q: Vec<Request> = Vec::new();
+    'outer: loop {
+        // Block for the first item.
+        let first = match rx.recv() {
+            Ok(Control::Request(r)) => r,
+            Ok(Control::Shutdown) | Err(_) => break,
+        };
+        match first.task {
+            Task::Power => power_q.push(first),
+            Task::Cycles => cycles_q.push(first),
+        }
+        // Linger to fill batches.
+        let deadline = Instant::now() + policy.linger;
+        loop {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(Control::Request(r)) => {
+                    let q = match r.task {
+                        Task::Power => &mut power_q,
+                        Task::Cycles => &mut cycles_q,
+                    };
+                    q.push(r);
+                    if q.len() >= policy.max_batch {
+                        let task = if power_q.len() >= policy.max_batch {
+                            Task::Power
+                        } else {
+                            Task::Cycles
+                        };
+                        let q = match task {
+                            Task::Power => &mut power_q,
+                            Task::Cycles => &mut cycles_q,
+                        };
+                        flush(&rt, &forest, &knn, task, q, &metrics);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Ok(Control::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    flush(&rt, &forest, &knn, Task::Power, &mut power_q, &metrics);
+                    flush(&rt, &forest, &knn, Task::Cycles, &mut cycles_q, &metrics);
+                    break 'outer;
+                }
+            }
+        }
+        flush(&rt, &forest, &knn, Task::Power, &mut power_q, &metrics);
+        flush(&rt, &forest, &knn, Task::Cycles, &mut cycles_q, &metrics);
+    }
+}

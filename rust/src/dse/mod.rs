@@ -1,0 +1,286 @@
+//! Design-space exploration.
+//!
+//! "This is beneficial for computer architects in navigating the design
+//! space and identifying the optimal GPGPU" (§III). The design space is
+//! `GPU catalog × DVFS step × batch size` for a given CNN; each point is
+//! scored by the *ML predictors* (power via random forest, cycles via KNN
+//! — the paper's winning models) served through the coordinator's batched
+//! XLA service, and ranked under user constraints (power cap, latency
+//! target, memory capacity).
+
+pub mod search;
+
+use anyhow::Result;
+
+use crate::cnn::ir::Network;
+use crate::cnn::launch::working_set_bytes;
+use crate::coordinator::{Predictor, Task};
+use crate::gpu::specs::{catalog, GpuSpec};
+use crate::ml::features::NetDescriptor;
+
+/// One candidate design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub gpu: String,
+    pub f_mhz: f64,
+    pub batch: usize,
+}
+
+/// A scored design point.
+#[derive(Debug, Clone)]
+pub struct ScoredPoint {
+    pub point: DesignPoint,
+    /// Predicted average power (W).
+    pub power_w: f64,
+    /// Predicted cycles for one inference batch.
+    pub cycles: f64,
+    /// Derived latency (s) = cycles / f.
+    pub latency_s: f64,
+    /// Derived throughput (inferences/s).
+    pub throughput: f64,
+    /// Derived energy per inference (J).
+    pub energy_per_inf_j: f64,
+    pub feasible: bool,
+}
+
+/// Exploration constraints.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DseConstraints {
+    pub max_power_w: Option<f64>,
+    pub max_latency_s: Option<f64>,
+    pub min_throughput: Option<f64>,
+    /// Reject GPUs whose memory cannot hold the working set.
+    pub respect_memory: bool,
+}
+
+/// The design space for one network.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub points: Vec<DesignPoint>,
+}
+
+impl DesignSpace {
+    /// Full grid: every GPU × `freq_steps` DVFS points × batches.
+    pub fn grid(freq_steps: usize, batches: &[usize], gpus: &[GpuSpec]) -> DesignSpace {
+        let mut points = Vec::new();
+        for g in gpus {
+            for f in g.dvfs_steps(freq_steps) {
+                for &b in batches {
+                    points.push(DesignPoint {
+                        gpu: g.name.to_string(),
+                        f_mhz: f,
+                        batch: b,
+                    });
+                }
+            }
+        }
+        DesignSpace { points }
+    }
+
+    /// Default full-catalog grid.
+    pub fn default_grid(freq_steps: usize, batches: &[usize]) -> DesignSpace {
+        Self::grid(freq_steps, batches, &catalog())
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Score every point with the batched ML predictor.
+pub fn explore(
+    net: &Network,
+    space: &DesignSpace,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+) -> Result<Vec<ScoredPoint>> {
+    let gpus = catalog();
+    let gpu_of = |name: &str| gpus.iter().find(|g| g.name == name).unwrap();
+
+    // Feature extraction per (net, batch) is reused across GPU/freq.
+    let mut descs: std::collections::HashMap<usize, NetDescriptor> =
+        std::collections::HashMap::new();
+    for p in &space.points {
+        if !descs.contains_key(&p.batch) {
+            descs.insert(p.batch, NetDescriptor::build(net, p.batch)?);
+        }
+    }
+
+    // Build all feature rows, then submit in bulk so the coordinator can
+    // fill whole XLA batches.
+    let rows: Vec<Vec<f64>> = space
+        .points
+        .iter()
+        .map(|p| descs[&p.batch].features(gpu_of(&p.gpu), p.f_mhz))
+        .collect();
+    let power = predictor.predict_many(Task::Power, &rows)?;
+    let cycles = predictor.predict_many(Task::Cycles, &rows)?;
+
+    let mut scored = Vec::with_capacity(space.points.len());
+    for ((p, pw), cy) in space.points.iter().zip(power).zip(cycles) {
+        let g = gpu_of(&p.gpu);
+        let latency = cy.max(1.0) / (p.f_mhz * 1e6);
+        let throughput = p.batch as f64 / latency;
+        let energy = pw * latency / p.batch as f64;
+        let mut feasible = true;
+        if let Some(cap) = constraints.max_power_w {
+            feasible &= pw <= cap;
+        }
+        if let Some(cap) = constraints.max_latency_s {
+            feasible &= latency <= cap;
+        }
+        if let Some(min) = constraints.min_throughput {
+            feasible &= throughput >= min;
+        }
+        if constraints.respect_memory {
+            let ws = working_set_bytes(net, p.batch).unwrap_or(usize::MAX);
+            feasible &= (ws as f64) <= g.mem_gb * 1e9;
+        }
+        scored.push(ScoredPoint {
+            point: p.clone(),
+            power_w: pw,
+            cycles: cy,
+            latency_s: latency,
+            throughput,
+            energy_per_inf_j: energy,
+            feasible,
+        });
+    }
+    Ok(scored)
+}
+
+/// Ranking objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    MinLatency,
+    MinEnergy,
+    MaxThroughput,
+    /// Energy-delay product.
+    MinEdp,
+}
+
+impl Objective {
+    pub fn key(&self, s: &ScoredPoint) -> f64 {
+        match self {
+            Objective::MinLatency => s.latency_s,
+            Objective::MinEnergy => s.energy_per_inf_j,
+            Objective::MaxThroughput => -s.throughput,
+            Objective::MinEdp => s.energy_per_inf_j * s.latency_s,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::MinLatency => "min-latency",
+            Objective::MinEnergy => "min-energy",
+            Objective::MaxThroughput => "max-throughput",
+            Objective::MinEdp => "min-edp",
+        }
+    }
+}
+
+/// Rank feasible points by objective (best first).
+pub fn rank(scored: &[ScoredPoint], objective: Objective) -> Vec<ScoredPoint> {
+    let mut feasible: Vec<ScoredPoint> =
+        scored.iter().filter(|s| s.feasible).cloned().collect();
+    feasible.sort_by(|a, b| {
+        objective
+            .key(a)
+            .partial_cmp(&objective.key(b))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    feasible
+}
+
+/// 2-D Pareto frontier minimizing (power, latency): points not dominated
+/// by any other feasible point.
+pub fn pareto_frontier(scored: &[ScoredPoint]) -> Vec<ScoredPoint> {
+    let feasible: Vec<&ScoredPoint> = scored.iter().filter(|s| s.feasible).collect();
+    let mut frontier: Vec<ScoredPoint> = Vec::new();
+    for s in &feasible {
+        let dominated = feasible.iter().any(|o| {
+            (o.power_w < s.power_w && o.latency_s <= s.latency_s)
+                || (o.power_w <= s.power_w && o.latency_s < s.latency_s)
+        });
+        if !dominated {
+            frontier.push((*s).clone());
+        }
+    }
+    frontier.sort_by(|a, b| a.power_w.partial_cmp(&b.power_w).unwrap());
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_scored(pw: f64, lat: f64, feasible: bool) -> ScoredPoint {
+        ScoredPoint {
+            point: DesignPoint {
+                gpu: "x".into(),
+                f_mhz: 1000.0,
+                batch: 1,
+            },
+            power_w: pw,
+            cycles: lat * 1e9,
+            latency_s: lat,
+            throughput: 1.0 / lat,
+            energy_per_inf_j: pw * lat,
+            feasible,
+        }
+    }
+
+    #[test]
+    fn grid_size() {
+        let space = DesignSpace::default_grid(4, &[1, 8]);
+        assert_eq!(space.len(), catalog().len() * 4 * 2);
+    }
+
+    #[test]
+    fn rank_filters_infeasible_and_sorts() {
+        let pts = vec![
+            fake_scored(100.0, 0.2, true),
+            fake_scored(50.0, 0.1, true),
+            fake_scored(10.0, 0.01, false),
+        ];
+        let ranked = rank(&pts, Objective::MinLatency);
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].latency_s, 0.1);
+    }
+
+    #[test]
+    fn pareto_removes_dominated() {
+        let pts = vec![
+            fake_scored(100.0, 0.1, true),  // frontier (fast, hungry)
+            fake_scored(50.0, 0.2, true),   // frontier
+            fake_scored(100.0, 0.3, true),  // dominated by both
+            fake_scored(60.0, 0.25, true),  // dominated by (50, 0.2)
+            fake_scored(20.0, 0.9, true),   // frontier (slow, frugal)
+        ];
+        let front = pareto_frontier(&pts);
+        let powers: Vec<f64> = front.iter().map(|s| s.power_w).collect();
+        assert_eq!(powers, vec![20.0, 50.0, 100.0]);
+    }
+
+    #[test]
+    fn objectives_order_differently() {
+        let a = fake_scored(10.0, 1.0, true); // energy 10, latency 1
+        let b = fake_scored(100.0, 0.05, true); // energy 5, latency 0.05
+        let by_lat = rank(&[a.clone(), b.clone()], Objective::MinLatency);
+        assert_eq!(by_lat[0].power_w, 100.0);
+        let by_energy = rank(&[a, b], Objective::MinEnergy);
+        assert_eq!(by_energy[0].power_w, 100.0); // 5 J < 10 J
+    }
+
+    #[test]
+    fn edp_balances() {
+        let fast_hungry = fake_scored(200.0, 0.1, true); // edp 2.0*0.1... e=20,edp=2
+        let slow_frugal = fake_scored(10.0, 1.0, true); // e=10, edp=10
+        let ranked = rank(&[fast_hungry, slow_frugal], Objective::MinEdp);
+        assert_eq!(ranked[0].power_w, 200.0);
+    }
+}

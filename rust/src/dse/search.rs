@@ -1,0 +1,286 @@
+//! Optimization-based search over the design space — the paper's stated
+//! future work: "we aim to incorporate optimization techniques to search
+//! for the best GPGPU to enhance ML model inference while considering
+//! factors such as limited power supply and desired performance" (§IV).
+//!
+//! Two budgeted strategies over `GPU × continuous frequency × batch`
+//! (finer-grained than the exhaustive grid, whose frequency axis is
+//! quantized):
+//!
+//! * [`random_search`] — uniform sampling, the standard strong baseline;
+//! * [`local_search`]  — random restarts + hill climbing on (freq step,
+//!   batch step, GPU swap) moves, converging on the best corner with far
+//!   fewer predictor calls than the full grid.
+//!
+//! Both consume the same batched [`Predictor`] service as the exhaustive
+//! sweep, so their *cost* is measured in prediction calls — the honest
+//! budget unit for an ML-driven DSE.
+
+use anyhow::Result;
+
+use crate::cnn::ir::Network;
+use crate::coordinator::{Predictor, Task};
+use crate::dse::{DesignPoint, DseConstraints, Objective, ScoredPoint};
+use crate::gpu::specs::{catalog, GpuSpec};
+use crate::ml::features::NetDescriptor;
+use crate::util::rng::Rng;
+
+/// Search outcome.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: Option<ScoredPoint>,
+    /// Objective trajectory: best-so-far after each evaluation.
+    pub trajectory: Vec<f64>,
+    pub evaluations: usize,
+}
+
+/// Score one candidate through the predictor.
+fn score(
+    net: &Network,
+    descs: &mut std::collections::HashMap<usize, NetDescriptor>,
+    p: &DesignPoint,
+    gpus: &[GpuSpec],
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+) -> Result<ScoredPoint> {
+    let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
+    if !descs.contains_key(&p.batch) {
+        descs.insert(
+            p.batch,
+            NetDescriptor::build(net, p.batch).map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+    }
+    let row = descs[&p.batch].features(g, p.f_mhz);
+    let power = predictor.predict(Task::Power, row.clone())?;
+    let cycles = predictor.predict(Task::Cycles, row)?;
+    let latency = cycles.max(1.0) / (p.f_mhz * 1e6);
+    let throughput = p.batch as f64 / latency;
+    let energy = power * latency / p.batch as f64;
+    let mut feasible = true;
+    if let Some(cap) = constraints.max_power_w {
+        feasible &= power <= cap;
+    }
+    if let Some(cap) = constraints.max_latency_s {
+        feasible &= latency <= cap;
+    }
+    if let Some(min) = constraints.min_throughput {
+        feasible &= throughput >= min;
+    }
+    Ok(ScoredPoint {
+        point: p.clone(),
+        power_w: power,
+        cycles,
+        latency_s: latency,
+        throughput,
+        energy_per_inf_j: energy,
+        feasible,
+    })
+}
+
+fn random_point(rng: &mut Rng, gpus: &[GpuSpec], batches: &[usize]) -> DesignPoint {
+    let g = &gpus[rng.below(gpus.len())];
+    DesignPoint {
+        gpu: g.name.to_string(),
+        f_mhz: rng.range(g.min_mhz, g.boost_mhz).round(),
+        batch: batches[rng.below(batches.len())],
+    }
+}
+
+/// Uniform random search with `budget` predictor evaluations.
+pub fn random_search(
+    net: &Network,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+) -> Result<SearchResult> {
+    let gpus = catalog();
+    let mut rng = Rng::new(seed);
+    let mut descs = std::collections::HashMap::new();
+    let mut best: Option<ScoredPoint> = None;
+    let mut trajectory = Vec::with_capacity(budget);
+    for _ in 0..budget {
+        let p = random_point(&mut rng, &gpus, batches);
+        let s = score(net, &mut descs, &p, &gpus, predictor, constraints)?;
+        if s.feasible
+            && best
+                .as_ref()
+                .map(|b| objective.key(&s) < objective.key(b))
+                .unwrap_or(true)
+        {
+            best = Some(s);
+        }
+        trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
+    }
+    Ok(SearchResult {
+        best,
+        trajectory,
+        evaluations: budget,
+    })
+}
+
+/// Hill climbing with random restarts. Moves: ±10% frequency, batch
+/// up/down one step, switch GPU (keeping relative frequency position).
+pub fn local_search(
+    net: &Network,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+) -> Result<SearchResult> {
+    let gpus = catalog();
+    let mut rng = Rng::new(seed);
+    let mut descs = std::collections::HashMap::new();
+    let mut best: Option<ScoredPoint> = None;
+    let mut trajectory = Vec::with_capacity(budget);
+    let mut evals = 0usize;
+
+    let update_best = |s: &ScoredPoint, best: &mut Option<ScoredPoint>| {
+        if s.feasible
+            && best
+                .as_ref()
+                .map(|b| objective.key(s) < objective.key(b))
+                .unwrap_or(true)
+        {
+            *best = Some(s.clone());
+        }
+    };
+
+    while evals < budget {
+        // Restart.
+        let mut cur_pt = random_point(&mut rng, &gpus, batches);
+        let mut cur = score(net, &mut descs, &cur_pt, &gpus, predictor, constraints)?;
+        evals += 1;
+        update_best(&cur, &mut best);
+        trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
+
+        // Climb until no improving neighbour or budget exhausted.
+        let mut improved = true;
+        while improved && evals < budget {
+            improved = false;
+            let neighbours = neighbours_of(&cur_pt, &gpus, batches, &mut rng);
+            for np in neighbours {
+                if evals >= budget {
+                    break;
+                }
+                let ns = score(net, &mut descs, &np, &gpus, predictor, constraints)?;
+                evals += 1;
+                update_best(&ns, &mut best);
+                trajectory
+                    .push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
+                let better = match (ns.feasible, cur.feasible) {
+                    (true, false) => true,
+                    (false, _) => false,
+                    (true, true) => objective.key(&ns) < objective.key(&cur),
+                };
+                if better {
+                    cur = ns;
+                    cur_pt = np;
+                    improved = true;
+                    break; // first-improvement
+                }
+            }
+        }
+    }
+    Ok(SearchResult {
+        best,
+        trajectory,
+        evaluations: evals,
+    })
+}
+
+fn neighbours_of(
+    p: &DesignPoint,
+    gpus: &[GpuSpec],
+    batches: &[usize],
+    rng: &mut Rng,
+) -> Vec<DesignPoint> {
+    let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
+    let mut out = Vec::with_capacity(6);
+    // Frequency ±10%, clamped.
+    for mult in [0.9, 1.1] {
+        let f = (p.f_mhz * mult).clamp(g.min_mhz, g.boost_mhz).round();
+        if (f - p.f_mhz).abs() > 1.0 {
+            out.push(DesignPoint {
+                f_mhz: f,
+                ..p.clone()
+            });
+        }
+    }
+    // Batch step.
+    if let Some(i) = batches.iter().position(|&b| b == p.batch) {
+        if i > 0 {
+            out.push(DesignPoint {
+                batch: batches[i - 1],
+                ..p.clone()
+            });
+        }
+        if i + 1 < batches.len() {
+            out.push(DesignPoint {
+                batch: batches[i + 1],
+                ..p.clone()
+            });
+        }
+    }
+    // GPU swap at the same relative frequency position.
+    let rel = (p.f_mhz - g.min_mhz) / (g.boost_mhz - g.min_mhz);
+    let other = &gpus[rng.below(gpus.len())];
+    if other.name != p.gpu {
+        out.push(DesignPoint {
+            gpu: other.name.to_string(),
+            f_mhz: (other.min_mhz + rel * (other.boost_mhz - other.min_mhz)).round(),
+            batch: p.batch,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_point_within_gpu_envelope() {
+        let gpus = catalog();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let p = random_point(&mut rng, &gpus, &[1, 8]);
+            let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
+            assert!(p.f_mhz >= g.min_mhz && p.f_mhz <= g.boost_mhz);
+            assert!(p.batch == 1 || p.batch == 8);
+        }
+    }
+
+    #[test]
+    fn neighbours_stay_in_envelope() {
+        let gpus = catalog();
+        let mut rng = Rng::new(2);
+        let p = DesignPoint {
+            gpu: "v100s".into(),
+            f_mhz: 1000.0,
+            batch: 8,
+        };
+        for n in neighbours_of(&p, &gpus, &[1, 8, 16], &mut rng) {
+            let g = gpus.iter().find(|g| g.name == n.gpu).unwrap();
+            assert!(n.f_mhz >= g.min_mhz - 1.0 && n.f_mhz <= g.boost_mhz + 1.0);
+        }
+    }
+
+    #[test]
+    fn neighbour_moves_cover_axes() {
+        let gpus = catalog();
+        let mut rng = Rng::new(3);
+        let p = DesignPoint {
+            gpu: "t4".into(),
+            f_mhz: 800.0,
+            batch: 8,
+        };
+        let ns = neighbours_of(&p, &gpus, &[1, 8, 16], &mut rng);
+        assert!(ns.iter().any(|n| n.f_mhz != p.f_mhz && n.gpu == p.gpu));
+        assert!(ns.iter().any(|n| n.batch != p.batch));
+    }
+}

@@ -1,0 +1,17 @@
+//! GPGPU hardware modelling substrate.
+//!
+//! The paper's methodology needs, per candidate GPU: its *specification
+//! features* (cores, frequency, memory — [`specs`]), an *occupancy model*
+//! ([`occupancy`]), an analytical *timing model* ([`timing`]) and the
+//! *power model* ([`power`]) that stands in for the authors' physical
+//! power measurements.
+
+pub mod occupancy;
+pub mod power;
+pub mod specs;
+pub mod timing;
+
+pub use occupancy::{occupancy, KernelResources, LimitedBy, Occupancy};
+pub use power::{average_power, energy_j, Activity, PowerBreakdown};
+pub use specs::{by_name, catalog, Arch, GpuSpec, MemKind, WARP_SIZE};
+pub use timing::{estimate, Bound, KernelWork, TimeEstimate};

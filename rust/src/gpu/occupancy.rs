@@ -1,0 +1,204 @@
+//! CUDA-style occupancy calculation.
+//!
+//! Given a kernel's per-thread register count, per-block shared memory, and
+//! block size, compute how many blocks/warps can be resident per SM. This
+//! mirrors the published CUDA occupancy calculator rules: the binding limit
+//! is the minimum over the warp-slot, register-file, shared-memory, and
+//! block-slot constraints (with allocation-granularity rounding).
+
+use crate::gpu::specs::{GpuSpec, WARP_SIZE};
+use crate::util::stats::ceil_div;
+
+/// Which resource bounds occupancy — reported as a kernel feature and used
+/// by the simulator's latency-hiding model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LimitedBy {
+    Warps,
+    Registers,
+    SharedMem,
+    Blocks,
+}
+
+impl LimitedBy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LimitedBy::Warps => "warps",
+            LimitedBy::Registers => "registers",
+            LimitedBy::SharedMem => "shared-mem",
+            LimitedBy::Blocks => "blocks",
+        }
+    }
+}
+
+/// Kernel resource usage relevant to occupancy.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelResources {
+    pub threads_per_block: usize,
+    pub regs_per_thread: usize,
+    pub smem_per_block: usize, // bytes
+}
+
+/// Result of the occupancy computation.
+#[derive(Debug, Clone, Copy)]
+pub struct Occupancy {
+    pub blocks_per_sm: usize,
+    pub warps_per_sm: usize,
+    /// warps_per_sm / max_warps_per_sm, in (0, 1].
+    pub fraction: f64,
+    pub limited_by: LimitedBy,
+}
+
+/// Register allocation granularity (warps round registers to 256/thread
+/// granularity blocks on Volta-class parts; we use 256 regs × warp).
+const REG_ALLOC_UNIT: usize = 256;
+/// Shared memory allocation granularity in bytes.
+const SMEM_ALLOC_UNIT: usize = 256;
+
+/// Compute occupancy of `k` on `g`.
+pub fn occupancy(g: &GpuSpec, k: &KernelResources) -> Occupancy {
+    assert!(k.threads_per_block > 0 && k.threads_per_block <= 1024);
+    let warps_per_block = ceil_div(k.threads_per_block, WARP_SIZE);
+
+    // Limit 1: warp slots.
+    let by_warps = g.max_warps_per_sm() / warps_per_block;
+
+    // Limit 2: registers. Per-warp allocation rounded to REG_ALLOC_UNIT.
+    let regs_per_warp =
+        ceil_div(k.regs_per_thread.max(16) * WARP_SIZE, REG_ALLOC_UNIT) * REG_ALLOC_UNIT;
+    let warps_by_regs = g.regs_per_sm / regs_per_warp;
+    let by_regs = warps_by_regs / warps_per_block;
+
+    // Limit 3: shared memory.
+    let by_smem = if k.smem_per_block == 0 {
+        usize::MAX
+    } else {
+        let smem = ceil_div(k.smem_per_block, SMEM_ALLOC_UNIT) * SMEM_ALLOC_UNIT;
+        (g.smem_per_sm_kib * 1024) / smem
+    };
+
+    // Limit 4: block slots.
+    let by_blocks = g.max_blocks_per_sm;
+
+    let blocks = by_warps.min(by_regs).min(by_smem).min(by_blocks);
+    let limited_by = if blocks == by_warps {
+        LimitedBy::Warps
+    } else if blocks == by_regs {
+        LimitedBy::Registers
+    } else if blocks == by_smem {
+        LimitedBy::SharedMem
+    } else {
+        LimitedBy::Blocks
+    };
+
+    let blocks = blocks.max(0);
+    let warps = blocks * warps_per_block;
+    Occupancy {
+        blocks_per_sm: blocks,
+        warps_per_sm: warps,
+        fraction: warps as f64 / g.max_warps_per_sm() as f64,
+        limited_by,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::by_name;
+    use crate::util::prop;
+
+    fn v100s() -> GpuSpec {
+        by_name("v100s").unwrap()
+    }
+
+    #[test]
+    fn light_kernel_fully_occupies() {
+        // 256 threads, 32 regs, no smem → 8 warps/block; V100 allows 64
+        // warps → 8 blocks; regs: 32*32=1024 regs/warp → 64 warps OK.
+        let o = occupancy(
+            &v100s(),
+            &KernelResources {
+                threads_per_block: 256,
+                regs_per_thread: 32,
+                smem_per_block: 0,
+            },
+        );
+        assert_eq!(o.warps_per_sm, 64);
+        assert!((o.fraction - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn register_pressure_limits() {
+        // 128 regs/thread: 4096 regs/warp → 16 warps by regs.
+        let o = occupancy(
+            &v100s(),
+            &KernelResources {
+                threads_per_block: 256,
+                regs_per_thread: 128,
+                smem_per_block: 0,
+            },
+        );
+        assert_eq!(o.limited_by, LimitedBy::Registers);
+        assert_eq!(o.warps_per_sm, 16);
+    }
+
+    #[test]
+    fn smem_pressure_limits() {
+        // 48 KiB/block on a 96 KiB SM → 2 blocks.
+        let o = occupancy(
+            &v100s(),
+            &KernelResources {
+                threads_per_block: 128,
+                regs_per_thread: 32,
+                smem_per_block: 48 * 1024,
+            },
+        );
+        assert_eq!(o.blocks_per_sm, 2);
+        assert_eq!(o.limited_by, LimitedBy::SharedMem);
+    }
+
+    #[test]
+    fn block_slot_limit_for_tiny_blocks() {
+        // 32-thread blocks: warp limit would allow 64 blocks but slot
+        // limit is 32.
+        let o = occupancy(
+            &v100s(),
+            &KernelResources {
+                threads_per_block: 32,
+                regs_per_thread: 16,
+                smem_per_block: 0,
+            },
+        );
+        assert_eq!(o.blocks_per_sm, 32);
+        assert_eq!(o.limited_by, LimitedBy::Blocks);
+    }
+
+    #[test]
+    fn prop_occupancy_within_bounds() {
+        let cat = crate::gpu::specs::catalog();
+        prop::check("occupancy bounded", |rng| {
+            let g = &cat[rng.below(cat.len())];
+            let k = KernelResources {
+                threads_per_block: [32, 64, 128, 256, 512, 1024][rng.below(6)],
+                regs_per_thread: rng.int_range(16, 256),
+                smem_per_block: rng.below(64) * 1024,
+            };
+            let o = occupancy(g, &k);
+            crate::prop_assert!(
+                o.warps_per_sm <= g.max_warps_per_sm(),
+                "warps {} > max {}",
+                o.warps_per_sm,
+                g.max_warps_per_sm()
+            );
+            crate::prop_assert!(o.fraction <= 1.0 + 1e-9);
+            crate::prop_assert!(o.blocks_per_sm <= g.max_blocks_per_sm);
+            // Monotonicity: fewer registers never lowers occupancy.
+            let lighter = KernelResources {
+                regs_per_thread: 16,
+                ..k
+            };
+            let o2 = occupancy(g, &lighter);
+            crate::prop_assert!(o2.warps_per_sm >= o.warps_per_sm);
+            Ok(())
+        });
+    }
+}

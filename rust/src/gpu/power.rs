@@ -1,0 +1,285 @@
+//! Analytical GPGPU power model.
+//!
+//! This is the *label generator* standing in for the paper's nvml power
+//! measurements on the V100S (DESIGN.md §5): a bottom-up
+//! energy-per-operation model with DVFS voltage scaling,
+//!
+//! `P(f) = P_idle + P_uncore + Σ_class E_class(V(f), node) · rate_class`
+//!
+//! which produces the characteristic superlinear power-vs-frequency curves
+//! of Fig. 2 (dynamic energy scales with V², voltage rises with f, and
+//! rates scale with f for compute-bound kernels).
+//!
+//! Per-op energies are anchored to public roofline points (e.g. a fully
+//! utilized V100S at boost clock lands near its 250 W TDP) and scaled
+//! across architectures by process node.
+
+use crate::gpu::specs::{Arch, GpuSpec};
+
+/// Dynamic activity of a kernel (or a whole network): operation counts by
+/// class and bytes moved by memory level, plus the elapsed time they
+/// occurred in. Produced by the simulator ([`crate::sim`]) and consumed
+/// here to produce the power label.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Activity {
+    /// FP32 ALU/FMA instructions executed (counted per thread).
+    pub fp_ops: f64,
+    /// Integer / address / logic instructions.
+    pub int_ops: f64,
+    /// Special-function (exp, rsqrt, …) instructions.
+    pub sfu_ops: f64,
+    /// Control-flow instructions (branches, sync).
+    pub ctrl_ops: f64,
+    /// Bytes accessed in shared memory / L1.
+    pub smem_bytes: f64,
+    /// Bytes served by L2.
+    pub l2_bytes: f64,
+    /// Bytes served by DRAM.
+    pub dram_bytes: f64,
+    /// Elapsed execution time (seconds) at the frequency being evaluated.
+    pub elapsed_s: f64,
+}
+
+impl Activity {
+    /// Accumulate another activity record (e.g. per-kernel → per-network).
+    pub fn add(&mut self, o: &Activity) {
+        self.fp_ops += o.fp_ops;
+        self.int_ops += o.int_ops;
+        self.sfu_ops += o.sfu_ops;
+        self.ctrl_ops += o.ctrl_ops;
+        self.smem_bytes += o.smem_bytes;
+        self.l2_bytes += o.l2_bytes;
+        self.dram_bytes += o.dram_bytes;
+        self.elapsed_s += o.elapsed_s;
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        self.fp_ops + self.int_ops + self.sfu_ops + self.ctrl_ops
+    }
+}
+
+/// Per-op switching energies in picojoules at nominal voltage on a 12 nm
+/// (Volta) baseline. Scaled by `(node/12)^1.25` for other processes and by
+/// `(V/V_nom)²` under DVFS.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyTable {
+    pub fp_pj: f64,
+    pub int_pj: f64,
+    pub sfu_pj: f64,
+    pub ctrl_pj: f64,
+    pub smem_pj_per_byte: f64,
+    pub l2_pj_per_byte: f64,
+}
+
+impl EnergyTable {
+    /// Baseline table (12 nm Volta class).
+    pub fn volta_baseline() -> EnergyTable {
+        EnergyTable {
+            fp_pj: 14.0,
+            int_pj: 7.0,
+            sfu_pj: 28.0,
+            ctrl_pj: 4.0,
+            smem_pj_per_byte: 6.0,
+            l2_pj_per_byte: 14.0,
+        }
+    }
+
+    /// Scale the baseline for an architecture's process node.
+    pub fn for_arch(arch: Arch) -> EnergyTable {
+        let b = Self::volta_baseline();
+        let s = (arch.process_nm() / Arch::Volta.process_nm()).powf(1.25);
+        EnergyTable {
+            fp_pj: b.fp_pj * s,
+            int_pj: b.int_pj * s,
+            sfu_pj: b.sfu_pj * s,
+            ctrl_pj: b.ctrl_pj * s,
+            smem_pj_per_byte: b.smem_pj_per_byte * s,
+            l2_pj_per_byte: b.l2_pj_per_byte * s,
+        }
+    }
+}
+
+/// Fraction of (TDP − idle) drawn by "uncore" (memory controllers, fabric,
+/// schedulers) whenever the GPU is executing, independent of issue rate.
+const UNCORE_ACTIVE_FRACTION: f64 = 0.18;
+
+/// Breakdown of the modelled power draw (W).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBreakdown {
+    pub idle_w: f64,
+    pub uncore_w: f64,
+    pub core_dynamic_w: f64,
+    pub mem_dynamic_w: f64,
+    pub total_w: f64,
+}
+
+/// Average board power while executing `act` on `g` with the core clock at
+/// `f_mhz`. `act.elapsed_s` must be the execution time *at that frequency*.
+pub fn average_power(g: &GpuSpec, f_mhz: f64, act: &Activity) -> PowerBreakdown {
+    assert!(act.elapsed_s > 0.0, "activity must have elapsed time");
+    let table = EnergyTable::for_arch(g.arch);
+    let v = g.voltage(f_mhz);
+    let vscale = (v / g.v_nom).powi(2);
+
+    // Core-side dynamic energy (pJ → J is 1e-12).
+    let core_pj = act.fp_ops * table.fp_pj
+        + act.int_ops * table.int_pj
+        + act.sfu_ops * table.sfu_pj
+        + act.ctrl_ops * table.ctrl_pj
+        + act.smem_bytes * table.smem_pj_per_byte;
+    let core_dynamic_w = core_pj * 1e-12 * vscale / act.elapsed_s;
+
+    // Memory-side energy: L2 scales with core voltage; DRAM does not DVFS
+    // with the core clock.
+    let l2_w = act.l2_bytes * table.l2_pj_per_byte * 1e-12 * vscale / act.elapsed_s;
+    let dram_w = act.dram_bytes * g.mem_kind.pj_per_byte() * 1e-12 / act.elapsed_s;
+    let mem_dynamic_w = l2_w + dram_w;
+
+    // Uncore draw scales mildly with frequency (clock tree) — model as
+    // linear in f relative to boost.
+    let f_frac = (f_mhz / g.boost_mhz).clamp(0.0, 1.2);
+    let uncore_w = UNCORE_ACTIVE_FRACTION * (g.tdp_w - g.idle_w) * (0.4 + 0.6 * f_frac);
+
+    let raw = g.idle_w + uncore_w + core_dynamic_w + mem_dynamic_w;
+
+    // Board power management clips at ~TDP (soft knee: the last 10% above
+    // TDP compresses, as real boost governors do).
+    let total_w = soft_cap(raw, g.tdp_w);
+    PowerBreakdown {
+        idle_w: g.idle_w,
+        uncore_w,
+        core_dynamic_w,
+        mem_dynamic_w,
+        total_w,
+    }
+}
+
+/// Soft clip: identity below `cap`, then compress overshoot with tanh so the
+/// curve stays smooth (power governors throttle rather than step).
+fn soft_cap(x: f64, cap: f64) -> f64 {
+    if x <= cap {
+        x
+    } else {
+        let head = 0.08 * cap; // at most 8% above TDP transiently
+        cap + head * ((x - cap) / head).tanh()
+    }
+}
+
+/// Energy consumed executing `act` (J): average power × time.
+pub fn energy_j(g: &GpuSpec, f_mhz: f64, act: &Activity) -> f64 {
+    average_power(g, f_mhz, act).total_w * act.elapsed_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::by_name;
+
+    /// A compute-heavy activity for the given GPU at frequency f: all cores
+    /// issuing FMAs back-to-back for 10 ms.
+    fn saturated(g: &GpuSpec, f_mhz: f64) -> Activity {
+        let t = 0.010;
+        let instr = g.total_cores() as f64 * f_mhz * 1e6 * t;
+        Activity {
+            fp_ops: instr * 0.75,
+            int_ops: instr * 0.20,
+            ctrl_ops: instr * 0.05,
+            dram_bytes: g.mem_bw_gbps * 1e9 * t * 0.35,
+            l2_bytes: g.mem_bw_gbps * 1e9 * t * 0.7,
+            smem_bytes: instr * 0.5,
+            elapsed_s: t,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn v100s_saturated_lands_near_tdp() {
+        let g = by_name("v100s").unwrap();
+        let p = average_power(&g, g.boost_mhz, &saturated(&g, g.boost_mhz));
+        assert!(
+            p.total_w > 0.8 * g.tdp_w && p.total_w < 1.1 * g.tdp_w,
+            "saturated V100S should be near TDP, got {:.1} W",
+            p.total_w
+        );
+    }
+
+    #[test]
+    fn power_superlinear_in_frequency() {
+        // Fig. 2 shape: P(f) grows faster than linear because V rises too.
+        let g = by_name("v100s").unwrap();
+        let f_lo = 600.0;
+        let f_hi = 1200.0;
+        // Same workload, compute-bound: time halves when f doubles.
+        let mut lo = saturated(&g, f_lo);
+        lo.elapsed_s = 0.020;
+        let mut hi = saturated(&g, f_lo); // same op counts
+        hi.elapsed_s = 0.010;
+        let p_lo = average_power(&g, f_lo, &lo).total_w - g.idle_w;
+        let p_hi = average_power(&g, f_hi, &hi).total_w - g.idle_w;
+        assert!(
+            p_hi > 1.9 * p_lo,
+            "dynamic power should more than double: {p_lo:.1} -> {p_hi:.1}"
+        );
+    }
+
+    #[test]
+    fn idle_floor_respected() {
+        let g = by_name("v100s").unwrap();
+        let tiny = Activity {
+            fp_ops: 1.0,
+            elapsed_s: 1.0,
+            ..Default::default()
+        };
+        let p = average_power(&g, g.min_mhz, &tiny);
+        assert!(p.total_w >= g.idle_w);
+        assert!(p.total_w < g.tdp_w * 0.5);
+    }
+
+    #[test]
+    fn soft_cap_monotone_and_bounded() {
+        let cap = 250.0;
+        let mut prev = 0.0;
+        for i in 0..100 {
+            let x = i as f64 * 10.0;
+            let y = soft_cap(x, cap);
+            assert!(y >= prev, "monotone");
+            assert!(y <= cap * 1.09);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn edge_device_scale_sane() {
+        // Jetson TX1 running flat out should be single-digit watts (the
+        // paper's §I quotes ~7 W for object recognition).
+        let g = by_name("jetson-tx1").unwrap();
+        let p = average_power(&g, g.boost_mhz, &saturated(&g, g.boost_mhz));
+        assert!(
+            p.total_w > 4.0 && p.total_w <= 11.0,
+            "TX1 saturated power {:.1} W",
+            p.total_w
+        );
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let g = by_name("t4").unwrap();
+        let act = saturated(&g, g.base_mhz);
+        let e = energy_j(&g, g.base_mhz, &act);
+        let p = average_power(&g, g.base_mhz, &act).total_w;
+        assert!((e - p * act.elapsed_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_energy_does_not_scale_with_core_voltage() {
+        let g = by_name("v100s").unwrap();
+        let act = Activity {
+            dram_bytes: 1e9,
+            elapsed_s: 0.01,
+            ..Default::default()
+        };
+        let lo = average_power(&g, g.min_mhz, &act).mem_dynamic_w;
+        let hi = average_power(&g, g.boost_mhz, &act).mem_dynamic_w;
+        assert!((lo - hi).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,414 @@
+//! GPGPU specification database.
+//!
+//! The paper predicts power/performance from *non-runtime-dependent*
+//! features — "hardware specifications such as the size and factor of the
+//! GPGPU, the number of cores, the frequency, and the available memory"
+//! (§II). This module is the catalog of candidate accelerators the DSE
+//! explores: datacenter parts (V100S, A100, T4), consumer parts, and the
+//! edge devices the offloading study uses (Jetson TX1 — the 7 W local
+//! example from §I).
+//!
+//! Numbers are public spec-sheet values; the analytical models in
+//! [`crate::gpu::power`] / [`crate::sim`] are calibrated against TDP and
+//! published roofline points, not against proprietary measurements (see
+//! DESIGN.md §5 for the substitution argument).
+
+/// GPU micro-architecture generation. Affects per-op energy, issue model,
+/// and the "architecture factor" feature the paper mentions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Maxwell,
+    Pascal,
+    Volta,
+    Turing,
+    Ampere,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Maxwell => "maxwell",
+            Arch::Pascal => "pascal",
+            Arch::Volta => "volta",
+            Arch::Turing => "turing",
+            Arch::Ampere => "ampere",
+        }
+    }
+
+    /// Ordinal used as the ML "architecture factor" feature.
+    pub fn factor(&self) -> f64 {
+        match self {
+            Arch::Maxwell => 5.0,
+            Arch::Pascal => 6.0,
+            Arch::Volta => 7.0,
+            Arch::Turing => 7.5,
+            Arch::Ampere => 8.0,
+        }
+    }
+
+    /// Process node in nm — drives the per-op energy scaling in the power
+    /// model (smaller node → lower switching energy).
+    pub fn process_nm(&self) -> f64 {
+        match self {
+            Arch::Maxwell => 28.0,
+            Arch::Pascal => 16.0,
+            Arch::Volta => 12.0,
+            Arch::Turing => 12.0,
+            Arch::Ampere => 7.0,
+        }
+    }
+}
+
+/// Memory technology; sets DRAM access energy and bandwidth behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    Hbm2,
+    Gddr5,
+    Gddr6,
+    Lpddr4,
+}
+
+impl MemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemKind::Hbm2 => "hbm2",
+            MemKind::Gddr5 => "gddr5",
+            MemKind::Gddr6 => "gddr6",
+            MemKind::Lpddr4 => "lpddr4",
+        }
+    }
+
+    /// Energy per byte moved from DRAM, in picojoules (approx literature
+    /// values: HBM2 ≈ 3.9 pJ/b ≈ 31 pJ/B; GDDR ≈ 60–70 pJ/B; LPDDR lower
+    /// voltage but narrow bus).
+    pub fn pj_per_byte(&self) -> f64 {
+        match self {
+            MemKind::Hbm2 => 31.0,
+            MemKind::Gddr5 => 72.0,
+            MemKind::Gddr6 => 60.0,
+            MemKind::Lpddr4 => 45.0,
+        }
+    }
+}
+
+/// Full specification of one GPGPU design point.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub arch: Arch,
+    /// Streaming multiprocessors.
+    pub sm_count: usize,
+    /// FP32 CUDA cores per SM (Volta/Turing: 64, Ampere GA102: 128, …).
+    pub cores_per_sm: usize,
+    /// Base and boost core clock (MHz); DVFS steps span [f_min, f_boost].
+    pub base_mhz: f64,
+    pub boost_mhz: f64,
+    /// Minimum supported core clock (MHz) — e.g. 397 MHz on V100S, the low
+    /// end of the paper's Fig. 2 sweep.
+    pub min_mhz: f64,
+    /// Device memory.
+    pub mem_kind: MemKind,
+    pub mem_gb: f64,
+    pub mem_bw_gbps: f64,
+    /// L2 cache (KiB) shared across SMs.
+    pub l2_kib: usize,
+    /// Per-SM resources (CUDA occupancy inputs).
+    pub smem_per_sm_kib: usize,
+    pub regs_per_sm: usize,
+    pub max_threads_per_sm: usize,
+    pub max_blocks_per_sm: usize,
+    /// Board power.
+    pub tdp_w: f64,
+    pub idle_w: f64,
+    /// Nominal core voltage at boost clock (V); DVFS scales it down.
+    pub v_nom: f64,
+    pub v_min: f64,
+    /// Whether this is a battery/edge part (used by the offload advisor).
+    pub edge: bool,
+}
+
+pub const WARP_SIZE: usize = 32;
+
+impl GpuSpec {
+    /// Total FP32 core count ("number of cores" feature).
+    pub fn total_cores(&self) -> usize {
+        self.sm_count * self.cores_per_sm
+    }
+
+    /// Peak FP32 throughput at frequency `f_mhz`, in GFLOP/s (2 flops per
+    /// FMA per core per clock).
+    pub fn peak_gflops(&self, f_mhz: f64) -> f64 {
+        2.0 * self.total_cores() as f64 * f_mhz * 1e6 / 1e9
+    }
+
+    /// Max resident warps per SM.
+    pub fn max_warps_per_sm(&self) -> usize {
+        self.max_threads_per_sm / WARP_SIZE
+    }
+
+    /// DVFS step list (MHz), ~15 MHz granularity quantized like
+    /// `nvidia-smi -lgc` exposes, from `min_mhz` to `boost_mhz`.
+    pub fn dvfs_steps(&self, count: usize) -> Vec<f64> {
+        assert!(count >= 2);
+        let step = (self.boost_mhz - self.min_mhz) / (count - 1) as f64;
+        (0..count)
+            .map(|i| (self.min_mhz + step * i as f64).round())
+            .collect()
+    }
+
+    /// Core voltage at core frequency `f_mhz` (linear V–f model between
+    /// (min_mhz, v_min) and (boost_mhz, v_nom), clamped).
+    pub fn voltage(&self, f_mhz: f64) -> f64 {
+        let t = ((f_mhz - self.min_mhz) / (self.boost_mhz - self.min_mhz)).clamp(0.0, 1.0);
+        self.v_min + t * (self.v_nom - self.v_min)
+    }
+}
+
+/// The catalog. Covers the paper's device classes: the V100S the paper
+/// measures (Fig. 2), datacenter alternatives, consumer parts, and the
+/// Jetson TX1 edge device from the offloading discussion.
+pub fn catalog() -> Vec<GpuSpec> {
+    vec![
+        GpuSpec {
+            name: "v100s",
+            arch: Arch::Volta,
+            sm_count: 80,
+            cores_per_sm: 64,
+            base_mhz: 1245.0,
+            boost_mhz: 1597.0,
+            min_mhz: 397.0,
+            mem_kind: MemKind::Hbm2,
+            mem_gb: 32.0,
+            mem_bw_gbps: 1134.0,
+            l2_kib: 6144,
+            smem_per_sm_kib: 96,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            tdp_w: 250.0,
+            idle_w: 25.0,
+            v_nom: 1.00,
+            v_min: 0.70,
+            edge: false,
+        },
+        GpuSpec {
+            name: "v100",
+            arch: Arch::Volta,
+            sm_count: 80,
+            cores_per_sm: 64,
+            base_mhz: 1230.0,
+            boost_mhz: 1380.0,
+            min_mhz: 405.0,
+            mem_kind: MemKind::Hbm2,
+            mem_gb: 16.0,
+            mem_bw_gbps: 900.0,
+            l2_kib: 6144,
+            smem_per_sm_kib: 96,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            tdp_w: 300.0,
+            idle_w: 24.0,
+            v_nom: 1.00,
+            v_min: 0.70,
+            edge: false,
+        },
+        GpuSpec {
+            name: "a100",
+            arch: Arch::Ampere,
+            sm_count: 108,
+            cores_per_sm: 64,
+            base_mhz: 765.0,
+            boost_mhz: 1410.0,
+            min_mhz: 210.0,
+            mem_kind: MemKind::Hbm2,
+            mem_gb: 40.0,
+            mem_bw_gbps: 1555.0,
+            l2_kib: 40960,
+            smem_per_sm_kib: 164,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            tdp_w: 400.0,
+            idle_w: 45.0,
+            v_nom: 0.95,
+            v_min: 0.65,
+            edge: false,
+        },
+        GpuSpec {
+            name: "t4",
+            arch: Arch::Turing,
+            sm_count: 40,
+            cores_per_sm: 64,
+            base_mhz: 585.0,
+            boost_mhz: 1590.0,
+            min_mhz: 300.0,
+            mem_kind: MemKind::Gddr6,
+            mem_gb: 16.0,
+            mem_bw_gbps: 320.0,
+            l2_kib: 4096,
+            smem_per_sm_kib: 64,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 1024,
+            max_blocks_per_sm: 16,
+            tdp_w: 70.0,
+            idle_w: 10.0,
+            v_nom: 0.90,
+            v_min: 0.60,
+            edge: false,
+        },
+        GpuSpec {
+            name: "rtx2080ti",
+            arch: Arch::Turing,
+            sm_count: 68,
+            cores_per_sm: 64,
+            base_mhz: 1350.0,
+            boost_mhz: 1545.0,
+            min_mhz: 300.0,
+            mem_kind: MemKind::Gddr6,
+            mem_gb: 11.0,
+            mem_bw_gbps: 616.0,
+            l2_kib: 5632,
+            smem_per_sm_kib: 64,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 1024,
+            max_blocks_per_sm: 16,
+            tdp_w: 250.0,
+            idle_w: 15.0,
+            v_nom: 1.05,
+            v_min: 0.70,
+            edge: false,
+        },
+        GpuSpec {
+            name: "gtx1080ti",
+            arch: Arch::Pascal,
+            sm_count: 28,
+            cores_per_sm: 128,
+            base_mhz: 1480.0,
+            boost_mhz: 1582.0,
+            min_mhz: 300.0,
+            mem_kind: MemKind::Gddr5,
+            mem_gb: 11.0,
+            mem_bw_gbps: 484.0,
+            l2_kib: 2816,
+            smem_per_sm_kib: 96,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            tdp_w: 250.0,
+            idle_w: 14.0,
+            v_nom: 1.06,
+            v_min: 0.72,
+            edge: false,
+        },
+        GpuSpec {
+            name: "jetson-tx1",
+            arch: Arch::Maxwell,
+            sm_count: 2,
+            cores_per_sm: 128,
+            base_mhz: 998.0,
+            boost_mhz: 998.0,
+            min_mhz: 76.0,
+            mem_kind: MemKind::Lpddr4,
+            mem_gb: 4.0,
+            mem_bw_gbps: 25.6,
+            l2_kib: 256,
+            smem_per_sm_kib: 64,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            tdp_w: 10.0,
+            idle_w: 1.5,
+            v_nom: 1.00,
+            v_min: 0.62,
+            edge: true,
+        },
+        GpuSpec {
+            name: "jetson-xavier-nx",
+            arch: Arch::Volta,
+            sm_count: 6,
+            cores_per_sm: 64,
+            base_mhz: 854.0,
+            boost_mhz: 1100.0,
+            min_mhz: 114.0,
+            mem_kind: MemKind::Lpddr4,
+            mem_gb: 8.0,
+            mem_bw_gbps: 51.2,
+            l2_kib: 512,
+            smem_per_sm_kib: 96,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            tdp_w: 15.0,
+            idle_w: 2.0,
+            v_nom: 0.95,
+            v_min: 0.60,
+            edge: true,
+        },
+    ]
+}
+
+/// Look up a GPU by name.
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    catalog().into_iter().find(|g| g.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_nonempty_and_unique_names() {
+        let cat = catalog();
+        assert!(cat.len() >= 6);
+        let mut names: Vec<_> = cat.iter().map(|g| g.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), cat.len());
+    }
+
+    #[test]
+    fn v100s_matches_spec_sheet() {
+        let g = by_name("v100s").unwrap();
+        assert_eq!(g.total_cores(), 5120);
+        // 2 * 5120 * 1.597 GHz = 16.35 TFLOPS — the published FP32 figure.
+        let tflops = g.peak_gflops(g.boost_mhz) / 1e3;
+        assert!((tflops - 16.35).abs() < 0.1, "tflops={tflops}");
+        assert_eq!(g.max_warps_per_sm(), 64);
+    }
+
+    #[test]
+    fn paper_freq_range_covered_by_v100s() {
+        // Fig. 2 sweeps 397–1590 MHz on the V100S.
+        let g = by_name("v100s").unwrap();
+        let steps = g.dvfs_steps(24);
+        assert_eq!(steps.len(), 24);
+        assert!(steps[0] <= 397.0 + 1.0);
+        assert!(*steps.last().unwrap() >= 1590.0);
+        // Monotone increasing.
+        assert!(steps.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn voltage_monotone_in_frequency() {
+        for g in catalog() {
+            let v_lo = g.voltage(g.min_mhz);
+            let v_hi = g.voltage(g.boost_mhz);
+            assert!((v_lo - g.v_min).abs() < 1e-9);
+            assert!((v_hi - g.v_nom).abs() < 1e-9);
+            let mid = g.voltage((g.min_mhz + g.boost_mhz) / 2.0);
+            assert!(mid > v_lo && mid < v_hi);
+        }
+    }
+
+    #[test]
+    fn edge_devices_flagged() {
+        assert!(by_name("jetson-tx1").unwrap().edge);
+        assert!(!by_name("v100s").unwrap().edge);
+    }
+
+    #[test]
+    fn lookup_unknown_is_none() {
+        assert!(by_name("h100").is_none());
+    }
+}

@@ -1,0 +1,232 @@
+//! Analytical (roofline + latency-hiding) kernel timing model.
+//!
+//! The detailed ground truth comes from the warp-level simulator in
+//! [`crate::sim`]; this module provides the *analytical* estimate used to
+//! (a) sanity-check the simulator (integration tests assert they agree
+//! within a factor), and (b) give the DSE a microsecond-cheap first-pass
+//! filter before detailed simulation.
+//!
+//! Model: a kernel needs `compute_cycles` of issue bandwidth and
+//! `dram_bytes` of memory traffic. With occupancy `occ` the SM can hide
+//! memory latency up to its warp parallelism, so
+//!
+//! `cycles ≈ max(compute_cycles, mem_cycles(f), latency_bound(occ))`.
+
+use crate::gpu::occupancy::Occupancy;
+use crate::gpu::specs::{GpuSpec, WARP_SIZE};
+
+/// Static work description of one kernel launch, as computed analytically
+/// from layer dimensions (see [`crate::cnn::launch`]) or from HyPA counts.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelWork {
+    /// Dynamic instructions across all threads (warp-instructions × 32).
+    pub instructions: f64,
+    /// Fraction of instructions that are FP (for issue-port modelling).
+    pub fp_fraction: f64,
+    /// Bytes that must come from DRAM (cold misses + capacity).
+    pub dram_bytes: f64,
+    /// Bytes served by L2 (hits above DRAM).
+    pub l2_bytes: f64,
+    /// Total thread count of the launch.
+    pub threads: f64,
+}
+
+/// Timing estimate for one kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeEstimate {
+    pub cycles: f64,
+    pub seconds: f64,
+    /// Which roof bound the kernel: compute, memory, or latency.
+    pub bound: Bound,
+    /// Achieved fraction of peak issue throughput.
+    pub compute_utilization: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+    Latency,
+}
+
+impl Bound {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+            Bound::Latency => "latency",
+        }
+    }
+}
+
+/// Average DRAM access latency in core cycles at frequency `f_mhz`
+/// (~400 ns on discrete parts, fixed in wall time → more cycles at higher
+/// core clocks).
+pub fn dram_latency_cycles(g: &GpuSpec, f_mhz: f64) -> f64 {
+    let ns = if g.edge { 250.0 } else { 400.0 };
+    ns * 1e-9 * f_mhz * 1e6
+}
+
+/// Estimate kernel runtime on `g` at `f_mhz` given `occ` residency.
+pub fn estimate(g: &GpuSpec, f_mhz: f64, w: &KernelWork, occ: &Occupancy) -> TimeEstimate {
+    let f_hz = f_mhz * 1e6;
+
+    // --- Compute roof: each SM issues up to `cores_per_sm / WARP_SIZE`
+    // warp-instructions per cycle (one per 32-lane group).
+    let issue_per_sm_per_cycle = (g.cores_per_sm / WARP_SIZE) as f64;
+    let warp_instructions = w.instructions / WARP_SIZE as f64;
+    let compute_cycles =
+        warp_instructions / (issue_per_sm_per_cycle * g.sm_count as f64);
+
+    // --- Memory roof: DRAM bytes over bandwidth, converted to core cycles.
+    let mem_seconds = (w.dram_bytes / (g.mem_bw_gbps * 1e9))
+        + (w.l2_bytes / (g.mem_bw_gbps * 4.0 * 1e9)); // L2 ≈ 4× DRAM bw
+    let mem_cycles = mem_seconds * f_hz;
+
+    // --- Latency roof: with few resident warps, DRAM latency cannot be
+    // hidden. Each resident warp can cover `lat` cycles with its own
+    // compute; the shortfall shows up as stall cycles.
+    let lat = dram_latency_cycles(g, f_mhz);
+    let accesses = w.dram_bytes / 128.0; // 128B transactions
+    let parallelism = (occ.warps_per_sm as f64 * g.sm_count as f64).max(1.0);
+    let latency_cycles = accesses / parallelism * lat;
+
+    let cycles = compute_cycles.max(mem_cycles).max(latency_cycles).max(1.0);
+    let bound = if cycles == compute_cycles {
+        Bound::Compute
+    } else if cycles == mem_cycles {
+        Bound::Memory
+    } else {
+        Bound::Latency
+    };
+    TimeEstimate {
+        cycles,
+        seconds: cycles / f_hz,
+        bound,
+        compute_utilization: (compute_cycles / cycles).clamp(0.0, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::occupancy::{occupancy, KernelResources};
+    use crate::gpu::specs::by_name;
+
+    fn full_occ(g: &GpuSpec) -> Occupancy {
+        occupancy(
+            g,
+            &KernelResources {
+                threads_per_block: 256,
+                regs_per_thread: 32,
+                smem_per_block: 0,
+            },
+        )
+    }
+
+    #[test]
+    fn gemm_like_kernel_is_compute_bound() {
+        let g = by_name("v100s").unwrap();
+        // 1 GFLOP GEMM with good reuse: 2e9 instr, 20 MB traffic.
+        let w = KernelWork {
+            instructions: 2e9,
+            fp_fraction: 0.7,
+            dram_bytes: 2e7,
+            l2_bytes: 8e7,
+            threads: 1e6,
+        };
+        let t = estimate(&g, g.boost_mhz, &w, &full_occ(&g));
+        assert_eq!(t.bound, Bound::Compute);
+        assert!(t.seconds > 0.0);
+    }
+
+    #[test]
+    fn streaming_kernel_is_memory_bound() {
+        let g = by_name("v100s").unwrap();
+        // Element-wise op over 1 GB with almost no compute.
+        let w = KernelWork {
+            instructions: 1e8,
+            fp_fraction: 0.3,
+            dram_bytes: 1e9,
+            l2_bytes: 1e9,
+            threads: 1e7,
+        };
+        let t = estimate(&g, g.boost_mhz, &w, &full_occ(&g));
+        assert_eq!(t.bound, Bound::Memory);
+        // ~1GB / 1.134 TB/s ≈ 0.9 ms plus L2 term.
+        assert!(t.seconds > 5e-4 && t.seconds < 5e-3, "t={}", t.seconds);
+    }
+
+    #[test]
+    fn low_occupancy_becomes_latency_bound() {
+        let g = by_name("v100s").unwrap();
+        let low_occ = Occupancy {
+            blocks_per_sm: 1,
+            warps_per_sm: 1,
+            fraction: 1.0 / 64.0,
+            limited_by: crate::gpu::occupancy::LimitedBy::Registers,
+        };
+        let w = KernelWork {
+            instructions: 1e6,
+            fp_fraction: 0.3,
+            dram_bytes: 6e7,
+            l2_bytes: 0.0,
+            threads: 1e4,
+        };
+        let t = estimate(&g, g.boost_mhz, &w, &low_occ);
+        assert_eq!(t.bound, Bound::Latency);
+        // The same kernel at full occupancy is faster.
+        let t_full = estimate(&g, g.boost_mhz, &w, &full_occ(&g));
+        assert!(t_full.seconds < t.seconds);
+    }
+
+    #[test]
+    fn compute_bound_time_scales_inversely_with_frequency() {
+        let g = by_name("v100s").unwrap();
+        let w = KernelWork {
+            instructions: 2e9,
+            fp_fraction: 0.7,
+            dram_bytes: 1e6,
+            l2_bytes: 1e6,
+            threads: 1e6,
+        };
+        let occ = full_occ(&g);
+        let t1 = estimate(&g, 600.0, &w, &occ);
+        let t2 = estimate(&g, 1200.0, &w, &occ);
+        let ratio = t1.seconds / t2.seconds;
+        assert!((ratio - 2.0).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn memory_bound_time_frequency_insensitive() {
+        let g = by_name("v100s").unwrap();
+        let w = KernelWork {
+            instructions: 1e7,
+            fp_fraction: 0.3,
+            dram_bytes: 1e9,
+            l2_bytes: 0.0,
+            threads: 1e7,
+        };
+        let occ = full_occ(&g);
+        let t1 = estimate(&g, 600.0, &w, &occ);
+        let t2 = estimate(&g, 1200.0, &w, &occ);
+        let ratio = t1.seconds / t2.seconds;
+        assert!((ratio - 1.0).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn faster_gpu_is_faster_on_compute_bound() {
+        let v100s = by_name("v100s").unwrap();
+        let tx1 = by_name("jetson-tx1").unwrap();
+        let w = KernelWork {
+            instructions: 2e9,
+            fp_fraction: 0.7,
+            dram_bytes: 2e7,
+            l2_bytes: 2e7,
+            threads: 1e6,
+        };
+        let t_dc = estimate(&v100s, v100s.boost_mhz, &w, &full_occ(&v100s));
+        let t_edge = estimate(&tx1, tx1.boost_mhz, &w, &full_occ(&tx1));
+        assert!(t_edge.seconds > 5.0 * t_dc.seconds);
+    }
+}

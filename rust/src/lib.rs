@@ -1,0 +1,29 @@
+//! # hypa-dse
+//!
+//! A full-system reproduction of *"Machine Learning aided Computer
+//! Architecture Design for CNN Inferencing Systems"* (Metz, 2023): fast and
+//! accurate ML-based power/performance prediction for CNN inference on
+//! GPGPUs, the Hybrid PTX Analyzer (HyPA) that extracts runtime-dependent
+//! features without GPU execution, a design-space-exploration engine over a
+//! GPGPU catalog, and a local-vs-cloud offload advisor.
+//!
+//! Architecture (see DESIGN.md): a three-layer stack where this Rust crate
+//! is the coordinator (L3), JAX compute graphs are AOT-lowered to HLO at
+//! build time (L2), and Pallas kernels implement the prediction hot-spots
+//! (L1). Python never runs on the request path; the compiled artifacts in
+//! `artifacts/` are loaded through PJRT by `runtime`.
+
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod gpu;
+pub mod ml;
+pub mod offload;
+pub mod ptx;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use util::rng::Rng;

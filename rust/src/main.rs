@@ -1,0 +1,467 @@
+//! `hypa-dse` — CLI for the ML-aided computer-architecture-design system.
+//!
+//! Subcommands (see `hypa-dse help`):
+//!
+//! * `datagen`   — generate the labelled dataset via the simulator
+//! * `train`     — train/CV all candidate models, print the selection table
+//! * `predict`   — ML-predict power/cycles for one design point
+//! * `sim`       — simulate one design point (ground truth)
+//! * `hypa`      — run the Hybrid PTX Analyzer on a network's kernels
+//! * `dse`       — explore the design space for a network under constraints
+//! * `serve`     — start the offload/predict REST API
+//! * `offload`   — one-shot local-vs-cloud decision
+//!
+//! The dependency set is offline-vendored (no clap); flags are simple
+//! `--key value` pairs parsed by [`Args`].
+
+use anyhow::{anyhow, Result};
+use hypa_dse::cnn::zoo;
+use hypa_dse::config::AppConfig;
+use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
+use hypa_dse::dse::search::{local_search, random_search};
+use hypa_dse::dse::{explore, rank, DesignSpace, DseConstraints, Objective};
+use hypa_dse::gpu::specs::{by_name, catalog};
+use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
+use hypa_dse::ml::dataset::Target;
+use hypa_dse::ml::features::NetDescriptor;
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::ml::validate::select_best;
+use hypa_dse::offload::{OffloadServer, ServerState};
+use hypa_dse::sim::Simulator;
+use hypa_dse::util::table::{f, Table};
+
+/// `--key value` flag map.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), value);
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn f64(&self, key: &str) -> Option<f64> {
+        self.flags.get(key).and_then(|v| v.parse().ok())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn net_arg(args: &Args) -> Result<hypa_dse::cnn::ir::Network> {
+    let name = args.str("network", "resnet18");
+    zoo::by_name(&name).ok_or_else(|| {
+        anyhow!(
+            "unknown network '{name}' (available: {})",
+            zoo::zoo()
+                .iter()
+                .map(|n| n.name.clone())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let path = args.str("out", DEFAULT_DATASET_PATH);
+    let mut cfg = if args.bool("tiny") {
+        DatagenConfig::tiny()
+    } else {
+        DatagenConfig::default()
+    };
+    if let Some(steps) = args.f64("freq-steps") {
+        cfg.freq_steps = steps as usize;
+    }
+    let t0 = std::time::Instant::now();
+    let data = generate_or_load(&path, &cfg, args.bool("force"))?;
+    println!(
+        "dataset: {} rows x {} features -> {path} ({:.1}s)",
+        data.len(),
+        data.n_features(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Train all candidates per task; print the Fig-1-style selection table.
+fn cmd_train(args: &Args) -> Result<()> {
+    let path = args.str("dataset", DEFAULT_DATASET_PATH);
+    let data = generate_or_load(&path, &DatagenConfig::default(), false)?;
+    println!("dataset: {} rows", data.len());
+    for target in [Target::PowerW, Target::Cycles] {
+        println!("\n== task: {} ==", target.name());
+        let evals = select_best(&data, target, 5, 7);
+        let mut t = Table::new(&["model", "MAPE %", "R2", "RMSE"]);
+        for e in &evals {
+            t.row(&[e.model.clone(), f(e.mape, 2), f(e.r2, 4), f(e.rmse, 2)]);
+        }
+        print!("{}", t.render());
+        println!("selected: {}", evals[0].model);
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let gpu_name = args.str("gpu", "v100s");
+    let g = by_name(&gpu_name).ok_or_else(|| anyhow!("unknown gpu '{gpu_name}'"))?;
+    let f_mhz = args.f64("f-mhz").unwrap_or(g.base_mhz);
+    let batch = args.usize("batch", 1);
+    let mut sim = Simulator::default();
+    let s = sim
+        .simulate_network(&net, batch, &g, f_mhz)
+        .map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "{} b{batch} on {} @{:.0} MHz: {:.3} ms, {:.3e} cycles, {:.1} W, {:.3} J, {:.1} inf/s",
+        net.name,
+        g.name,
+        f_mhz,
+        s.seconds * 1e3,
+        s.cycles,
+        s.avg_power_w,
+        s.energy_j,
+        s.throughput()
+    );
+    Ok(())
+}
+
+fn cmd_hypa(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let batch = args.usize("batch", 1);
+    let desc = NetDescriptor::build(&net, batch)?;
+    let m = &desc.hypa.mix;
+    println!("HyPA analysis of {} (batch {batch}):", net.name);
+    println!("  kernels:            {}", desc.hypa.kernels);
+    println!("  dynamic instrs:     {:.3e}", m.total());
+    println!(
+        "  fp / int / ctrl:    {:.3e} / {:.3e} / {:.3e}",
+        m.fp, m.int, m.ctrl
+    );
+    println!(
+        "  global ld / st:     {:.3e} / {:.3e}",
+        m.load_global, m.store_global
+    );
+    println!("  max loop depth:     {}", desc.hypa.max_loop_depth);
+    println!("  mean slice frac:    {:.2}", desc.hypa.mean_slice_fraction);
+    Ok(())
+}
+
+/// Train best models on the dataset and start the batched predictor.
+fn start_predictor(dataset_path: &str) -> Result<PredictionService> {
+    let data = generate_or_load(dataset_path, &DatagenConfig::default(), false)?;
+    let mut power = RandomForest::new(ForestConfig::default());
+    power.fit(&data.x, data.y(Target::PowerW));
+    let mut cycles = Knn::new(3);
+    cycles.fit(&data.x, data.y(Target::Cycles));
+    PredictionService::start(
+        "artifacts".into(),
+        power,
+        cycles,
+        data.n_features(),
+        BatchPolicy::default(),
+    )
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let gpu_name = args.str("gpu", "v100s");
+    let g = by_name(&gpu_name).ok_or_else(|| anyhow!("unknown gpu '{gpu_name}'"))?;
+    let f_mhz = args.f64("f-mhz").unwrap_or(g.base_mhz);
+    let batch = args.usize("batch", 1);
+
+    let service = start_predictor(&args.str("dataset", DEFAULT_DATASET_PATH))?;
+    let p = service.predictor();
+    let desc = NetDescriptor::build(&net, batch)?;
+    let features = desc.features(&g, f_mhz);
+    let power = p.predict(Task::Power, features.clone())?;
+    let cycles = p.predict(Task::Cycles, features)?;
+    println!(
+        "{} b{batch} on {} @{:.0} MHz (ML prediction): {:.1} W, {:.3e} cycles, {:.3} ms",
+        net.name,
+        g.name,
+        f_mhz,
+        power,
+        cycles,
+        cycles / (f_mhz * 1e6) * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let service = start_predictor(&args.str("dataset", DEFAULT_DATASET_PATH))?;
+    let predictor = service.predictor();
+    let space = DesignSpace::default_grid(
+        args.usize("freq-steps", 8),
+        &[args.usize("batch", 1)],
+    );
+    let constraints = DseConstraints {
+        max_power_w: args.f64("max-power"),
+        max_latency_s: args.f64("max-latency"),
+        min_throughput: args.f64("min-throughput"),
+        respect_memory: true,
+    };
+    let objective = match args.str("objective", "min-edp").as_str() {
+        "min-latency" => Objective::MinLatency,
+        "min-energy" => Objective::MinEnergy,
+        "max-throughput" => Objective::MaxThroughput,
+        _ => Objective::MinEdp,
+    };
+    let scored = explore(&net, &space, &predictor, &constraints)?;
+    let ranked = rank(&scored, objective);
+    println!(
+        "explored {} design points for {} ({} feasible), objective {}:",
+        space.len(),
+        net.name,
+        ranked.len(),
+        objective.name()
+    );
+    let mut t = Table::new(&["#", "gpu", "MHz", "batch", "W", "ms", "inf/s", "J/inf"]);
+    for (i, s) in ranked.iter().take(args.usize("top", 10)).enumerate() {
+        t.row(&[
+            format!("{}", i + 1),
+            s.point.gpu.clone(),
+            format!("{:.0}", s.point.f_mhz),
+            format!("{}", s.point.batch),
+            f(s.power_w, 1),
+            f(s.latency_s * 1e3, 2),
+            f(s.throughput, 0),
+            f(s.energy_per_inf_j, 3),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("metrics: {}", predictor.metrics.summary());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7788");
+    let state = if args.bool("with-predictor") {
+        let service = start_predictor(&args.str("dataset", DEFAULT_DATASET_PATH))?;
+        let predictor = service.predictor();
+        // Keep the service alive for the whole process lifetime.
+        std::mem::forget(service);
+        std::sync::Arc::new(ServerState::new(Some(predictor)))
+    } else {
+        std::sync::Arc::new(ServerState::new(None))
+    };
+    let server = OffloadServer::start(&addr, state)?;
+    println!("offload REST API listening on http://{}", server.addr);
+    println!("  GET  /health");
+    println!("  POST /v1/offload/decide");
+    println!("  POST /v1/predict");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_offload(args: &Args) -> Result<()> {
+    use hypa_dse::offload::{
+        decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
+    };
+    let net = net_arg(args)?;
+    let batch = args.usize("batch", 1);
+    let link = Link {
+        bandwidth_mbps: args.f64("bandwidth").unwrap_or(100.0),
+        rtt_ms: args.f64("rtt").unwrap_or(20.0),
+    };
+    let profile = EdgePowerProfile::jetson_tx1();
+    let mut sim = Simulator::default();
+    let edge = by_name("jetson-tx1").unwrap();
+    let cloud = by_name("v100s").unwrap();
+    let local_s = sim
+        .simulate_network(&net, batch, &edge, edge.boost_mhz)
+        .map_err(|e| anyhow!("{e}"))?
+        .seconds;
+    let cloud_s = sim
+        .simulate_network(&net, batch, &cloud, cloud.boost_mhz)
+        .map_err(|e| anyhow!("{e}"))?
+        .seconds;
+    let d = decide(
+        local_estimate(local_s, &profile),
+        offload_estimate(&net, batch, &link, cloud_s, &profile),
+        &Constraints {
+            max_latency_s: args.f64("max-latency"),
+            max_energy_j: args.f64("max-energy"),
+        },
+    );
+    println!(
+        "{} b{batch} over {:.0} Mbps / {:.0} ms RTT:",
+        net.name, link.bandwidth_mbps, link.rtt_ms
+    );
+    println!(
+        "  local:   {:.1} ms, {:.3} J, {:.1} W",
+        d.local.latency_s * 1e3,
+        d.local.device_energy_j,
+        d.local.device_power_w
+    );
+    println!(
+        "  offload: {:.1} ms, {:.3} J, {:.1} W",
+        d.offload.latency_s * 1e3,
+        d.offload.device_energy_j,
+        d.offload.device_power_w
+    );
+    println!("  => {}", d.recommendation.name());
+    Ok(())
+}
+
+/// Compare random vs local search against the exhaustive grid optimum —
+/// the paper's §IV future work ("optimization techniques to search for
+/// the best GPGPU ... considering limited power supply and desired
+/// performance").
+fn cmd_search(args: &Args) -> Result<()> {
+    let cfg = AppConfig::load(args.flags.get("config").map(String::as_str))?;
+    let net = net_arg(args)?;
+    let service = start_predictor(&cfg.dataset_path)?;
+    let predictor = service.predictor();
+    let constraints = DseConstraints {
+        max_power_w: args.f64("max-power").or(Some(250.0)),
+        max_latency_s: args.f64("max-latency"),
+        min_throughput: None,
+        respect_memory: false,
+    };
+    let objective = Objective::MinEdp;
+    let budget = args.usize("budget", cfg.search_budget);
+    let batches = cfg.dse_batches.clone();
+
+    let rs = random_search(&net, &predictor, &constraints, objective, &batches, budget, 1)?;
+    let ls = local_search(&net, &predictor, &constraints, objective, &batches, budget, 1)?;
+
+    // Exhaustive reference on the quantized grid.
+    let space = DesignSpace::default_grid(cfg.dse_freq_steps, &batches);
+    let scored = explore(&net, &space, &predictor, &constraints)?;
+    let grid_best = rank(&scored, objective).into_iter().next();
+
+    let show = |label: &str, s: Option<&hypa_dse::dse::ScoredPoint>, evals: usize| {
+        match s {
+            Some(b) => println!(
+                "  {label:<14} {:>4} evals: {} @ {:.0} MHz b{} -> EDP {:.4e} ({:.1} W, {:.2} ms)",
+                evals, b.point.gpu, b.point.f_mhz, b.point.batch,
+                objective.key(b), b.power_w, b.latency_s * 1e3
+            ),
+            None => println!("  {label:<14} no feasible point found"),
+        }
+    };
+    println!("search for {} (objective {}, budget {budget}):", net.name, objective.name());
+    show("random", rs.best.as_ref(), rs.evaluations);
+    show("local", ls.best.as_ref(), ls.evaluations);
+    show("grid (ref)", grid_best.as_ref(), space.len());
+    Ok(())
+}
+
+/// Per-layer analysis report for one design point (table or JSON).
+fn cmd_report(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let gpu_name = args.str("gpu", "v100s");
+    let g = by_name(&gpu_name).ok_or_else(|| anyhow!("unknown gpu '{gpu_name}'"))?;
+    let f_mhz = args.f64("f-mhz").unwrap_or(g.base_mhz);
+    let batch = args.usize("batch", 1);
+    let mut sim = Simulator::default();
+    let r = hypa_dse::report::build(&mut sim, &net, batch, &g, f_mhz)?;
+    if args.bool("json") {
+        println!("{}", r.to_json().pretty());
+    } else {
+        print!("{}", r.render(args.usize("top", 12)));
+    }
+    Ok(())
+}
+
+fn cmd_gpus() -> Result<()> {
+    let mut t = Table::new(&[
+        "name", "arch", "SMs", "cores", "boost MHz", "mem GB", "bw GB/s", "TDP W",
+    ]);
+    for g in catalog() {
+        t.row(&[
+            g.name.to_string(),
+            g.arch.name().to_string(),
+            format!("{}", g.sm_count),
+            format!("{}", g.total_cores()),
+            format!("{:.0}", g.boost_mhz),
+            format!("{:.0}", g.mem_gb),
+            format!("{:.0}", g.mem_bw_gbps),
+            format!("{:.0}", g.tdp_w),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "hypa-dse — ML-aided computer architecture design for CNN inferencing systems
+
+USAGE: hypa-dse <command> [--flag value ...]
+
+COMMANDS:
+  datagen   [--out P] [--force] [--tiny]           generate the dataset
+  train     [--dataset P]                          model selection tables
+  predict   --network N [--gpu G] [--f-mhz F]      ML power/cycles prediction
+  sim       --network N [--gpu G] [--f-mhz F]      simulator ground truth
+  hypa      --network N [--batch B]                hybrid PTX analysis
+  dse       --network N [--max-power W] [--objective O] [--top K]
+  serve     [--addr A] [--with-predictor]          REST API
+  offload   --network N [--bandwidth M] [--rtt MS] local-vs-cloud decision
+  search    --network N [--budget B] [--config F]  random/local search vs grid
+  report    --network N [--gpu G] [--json] [--top K] per-layer breakdown
+  gpus                                             list the GPU catalog
+"
+    );
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let result = match cmd {
+        "datagen" => cmd_datagen(&args),
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "sim" => cmd_sim(&args),
+        "hypa" => cmd_hypa(&args),
+        "dse" => cmd_dse(&args),
+        "serve" => cmd_serve(&args),
+        "offload" => cmd_offload(&args),
+        "search" => cmd_search(&args),
+        "report" => cmd_report(&args),
+        "gpus" => cmd_gpus(),
+        _ => {
+            help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

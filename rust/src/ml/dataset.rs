@@ -1,0 +1,374 @@
+//! Labelled dataset container with JSON persistence.
+//!
+//! A row = one `(network, GPU, frequency, batch)` design point: an
+//! engineered feature vector plus the two labels the paper predicts —
+//! average power (W) and execution cycles. JSON save/load (via the
+//! in-crate [`crate::util::json`]) lets dataset generation run once and be
+//! reused by every bench and example.
+
+use crate::util::json::{jarr, jnum, jstr, Json};
+use anyhow::{anyhow, Context, Result};
+
+/// Which label a model is trained against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    PowerW,
+    Cycles,
+}
+
+impl Target {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::PowerW => "power_w",
+            Target::Cycles => "cycles",
+        }
+    }
+}
+
+/// Identifying metadata for one sample (not used as features).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleMeta {
+    pub network: String,
+    pub gpu: String,
+    pub f_mhz: f64,
+    pub batch: usize,
+}
+
+/// The dataset.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub feature_names: Vec<String>,
+    pub x: Vec<Vec<f64>>,
+    pub y_power: Vec<f64>,
+    pub y_cycles: Vec<f64>,
+    pub meta: Vec<SampleMeta>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.feature_names.len()
+    }
+
+    pub fn push(&mut self, features: Vec<f64>, power: f64, cycles: f64, meta: SampleMeta) {
+        assert_eq!(features.len(), self.n_features(), "feature width mismatch");
+        self.x.push(features);
+        self.y_power.push(power);
+        self.y_cycles.push(cycles);
+        self.meta.push(meta);
+    }
+
+    pub fn y(&self, target: Target) -> &[f64] {
+        match target {
+            Target::PowerW => &self.y_power,
+            Target::Cycles => &self.y_cycles,
+        }
+    }
+
+    /// Select rows by index into a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            feature_names: self.feature_names.clone(),
+            x: idx.iter().map(|&i| self.x[i].clone()).collect(),
+            y_power: idx.iter().map(|&i| self.y_power[i]).collect(),
+            y_cycles: idx.iter().map(|&i| self.y_cycles[i]).collect(),
+            meta: idx.iter().map(|&i| self.meta[i].clone()).collect(),
+        }
+    }
+
+    /// Rows whose metadata passes a predicate.
+    pub fn filter(&self, pred: impl Fn(&SampleMeta) -> bool) -> Dataset {
+        let idx: Vec<usize> = (0..self.len()).filter(|&i| pred(&self.meta[i])).collect();
+        self.subset(&idx)
+    }
+
+    /// Project onto a feature subset (by name) — used by the feature
+    /// ablation bench.
+    pub fn project(&self, keep: &[&str]) -> Dataset {
+        let cols: Vec<usize> = keep
+            .iter()
+            .map(|k| {
+                self.feature_names
+                    .iter()
+                    .position(|n| n == k)
+                    .unwrap_or_else(|| panic!("unknown feature '{k}'"))
+            })
+            .collect();
+        Dataset {
+            feature_names: keep.iter().map(|s| s.to_string()).collect(),
+            x: self
+                .x
+                .iter()
+                .map(|row| cols.iter().map(|&c| row[c]).collect())
+                .collect(),
+            y_power: self.y_power.clone(),
+            y_cycles: self.y_cycles.clone(),
+            meta: self.meta.clone(),
+        }
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "feature_names",
+            jarr(self.feature_names.iter().map(|s| jstr(s)).collect()),
+        );
+        o.set(
+            "x",
+            jarr(self
+                .x
+                .iter()
+                .map(|row| jarr(row.iter().map(|&v| jnum(v)).collect()))
+                .collect()),
+        );
+        o.set("y_power", jarr(self.y_power.iter().map(|&v| jnum(v)).collect()));
+        o.set(
+            "y_cycles",
+            jarr(self.y_cycles.iter().map(|&v| jnum(v)).collect()),
+        );
+        o.set(
+            "meta",
+            jarr(self
+                .meta
+                .iter()
+                .map(|m| {
+                    let mut mo = Json::obj();
+                    mo.set("network", jstr(&m.network))
+                        .set("gpu", jstr(&m.gpu))
+                        .set("f_mhz", jnum(m.f_mhz))
+                        .set("batch", jnum(m.batch as f64));
+                    mo
+                })
+                .collect()),
+        );
+        o
+    }
+
+    /// Deserialize from JSON.
+    pub fn from_json(j: &Json) -> Result<Dataset> {
+        let names = j
+            .get("feature_names")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing feature_names"))?;
+        let feature_names: Vec<String> = names
+            .iter()
+            .map(|n| n.as_str().unwrap_or_default().to_string())
+            .collect();
+        let x = j
+            .get("x")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing x"))?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .map(|r| r.iter().filter_map(Json::as_f64).collect::<Vec<f64>>())
+                    .ok_or_else(|| anyhow!("bad row"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let nums = |key: &str| -> Result<Vec<f64>> {
+            Ok(j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect())
+        };
+        let y_power = nums("y_power")?;
+        let y_cycles = nums("y_cycles")?;
+        let meta = j
+            .get("meta")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing meta"))?
+            .iter()
+            .map(|m| SampleMeta {
+                network: m.str_or("network", "").to_string(),
+                gpu: m.str_or("gpu", "").to_string(),
+                f_mhz: m.f64_or("f_mhz", 0.0),
+                batch: m.usize_or("batch", 1),
+            })
+            .collect::<Vec<_>>();
+        if x.len() != y_power.len() || x.len() != y_cycles.len() || x.len() != meta.len() {
+            return Err(anyhow!("inconsistent dataset lengths"));
+        }
+        Ok(Dataset {
+            feature_names,
+            x,
+            y_power,
+            y_cycles,
+            meta,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing dataset to {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading dataset from {path}"))?;
+        let j = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Feature scaler (z-score), fit on a training set. Constant features get
+/// unit scale so they pass through unchanged.
+#[derive(Debug, Clone)]
+pub struct Scaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Scaler {
+    pub fn fit(x: &[Vec<f64>]) -> Scaler {
+        assert!(!x.is_empty());
+        let d = x[0].len();
+        let n = x.len() as f64;
+        let mut mean = vec![0.0; d];
+        for row in x {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut std = vec![0.0; d];
+        for row in x {
+            for j in 0..d {
+                let dv = row[j] - mean[j];
+                std[j] += dv * dv;
+            }
+        }
+        for s in &mut std {
+            *s = (*s / n).sqrt();
+            if *s < 1e-12 {
+                *s = 1.0;
+            }
+        }
+        Scaler { mean, std }
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(&v, (&m, &s))| (v - m) / s)
+            .collect()
+    }
+
+    pub fn transform(&self, x: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        x.iter().map(|r| self.transform_row(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let mut d = Dataset {
+            feature_names: vec!["a".into(), "b".into()],
+            ..Default::default()
+        };
+        for i in 0..10 {
+            d.push(
+                vec![i as f64, 2.0 * i as f64],
+                100.0 + i as f64,
+                1000.0 * i as f64,
+                SampleMeta {
+                    network: format!("net{}", i % 2),
+                    gpu: "v100s".into(),
+                    f_mhz: 1000.0,
+                    batch: 1,
+                },
+            );
+        }
+        d
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = toy();
+        let j = d.to_json();
+        let d2 = Dataset::from_json(&j).unwrap();
+        assert_eq!(d2.len(), d.len());
+        assert_eq!(d2.feature_names, d.feature_names);
+        assert_eq!(d2.x, d.x);
+        assert_eq!(d2.y_power, d.y_power);
+        assert_eq!(d2.meta, d.meta);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let d = toy();
+        let path = "/tmp/hypa_dse_test_dataset.json";
+        d.save(path).unwrap();
+        let d2 = Dataset::load(path).unwrap();
+        assert_eq!(d2.x, d.x);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn subset_and_filter() {
+        let d = toy();
+        let s = d.subset(&[0, 2, 4]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.y_power[1], 102.0);
+        let f = d.filter(|m| m.network == "net0");
+        assert_eq!(f.len(), 5);
+    }
+
+    #[test]
+    fn project_selects_columns() {
+        let d = toy();
+        let p = d.project(&["b"]);
+        assert_eq!(p.n_features(), 1);
+        assert_eq!(p.x[3], vec![6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn project_unknown_feature_panics() {
+        toy().project(&["nope"]);
+    }
+
+    #[test]
+    fn scaler_zero_mean_unit_std() {
+        let d = toy();
+        let sc = Scaler::fit(&d.x);
+        let t = sc.transform(&d.x);
+        let col0: Vec<f64> = t.iter().map(|r| r[0]).collect();
+        let m = crate::util::stats::mean(&col0);
+        let s = crate::util::stats::std_dev(&col0);
+        assert!(m.abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaler_constant_feature_passthrough() {
+        let x = vec![vec![5.0, 1.0], vec![5.0, 2.0]];
+        let sc = Scaler::fit(&x);
+        let t = sc.transform_row(&[5.0, 1.5]);
+        assert_eq!(t[0], 0.0);
+        assert!(t[1].abs() < 1.01);
+    }
+
+    #[test]
+    fn target_accessor() {
+        let d = toy();
+        assert_eq!(d.y(Target::PowerW)[0], 100.0);
+        assert_eq!(d.y(Target::Cycles)[9], 9000.0);
+    }
+}

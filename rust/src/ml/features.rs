@@ -1,0 +1,249 @@
+//! Feature engineering.
+//!
+//! The paper's predictors use only features available *before* running on
+//! real hardware (§II): GPU specification features ("size and factor of
+//! the GPGPU, the number of cores, the frequency, and the available
+//! memory"), neural-network description features ("varying layers and
+//! neurons"), and — via HyPA — runtime-dependent instruction counts
+//! recovered *statically* from the compiled PTX.
+//!
+//! Feature groups are tracked by name so the ablation bench
+//! (`benches/ablation_features.rs`) can train on spec-only / +network /
+//! +HyPA subsets, reproducing the motivation for the HyPA tool.
+
+use crate::cnn::ir::Network;
+use crate::cnn::launch::decompose;
+use crate::gpu::specs::GpuSpec;
+use crate::ptx::codegen::generate_module;
+use crate::ptx::hypa::{analyze_network, HypaConfig, NetworkMix};
+use crate::ptx::parser::parse;
+use crate::ptx::print::to_text;
+
+/// GPU specification features.
+pub const HW_FEATURES: &[&str] = &[
+    "sm_count",
+    "cores_per_sm",
+    "total_cores",
+    "f_mhz",
+    "v_at_f",
+    "mem_bw_gbps",
+    "mem_gb",
+    "l2_kib",
+    "arch_factor",
+    "process_nm",
+    "tdp_w",
+    "idle_w",
+    "log_peak_gflops",
+];
+
+/// Network description features.
+pub const NET_FEATURES: &[&str] = &[
+    "layers",
+    "conv_layers",
+    "dense_layers",
+    "pool_layers",
+    "log_flops",
+    "log_conv_flops",
+    "log_dense_flops",
+    "log_params",
+    "log_act_bytes",
+    "batch",
+    "log_input_numel",
+];
+
+/// HyPA-derived features (static + partially simulated PTX counts).
+pub const HYPA_FEATURES: &[&str] = &[
+    "log_hypa_total",
+    "log_hypa_fp",
+    "log_hypa_int",
+    "log_hypa_ldst",
+    "hypa_fp_frac",
+    "hypa_ldst_frac",
+    "hypa_loop_depth",
+    "hypa_kernels",
+];
+
+/// Cross features (cheap analytical combinations of the above — the kind
+/// of derived feature a practitioner would add; still runtime-free).
+pub const DERIVED_FEATURES: &[&str] = &[
+    "log_compute_time_est",
+    "log_mem_time_est",
+    "log_arith_intensity",
+];
+
+/// All feature names in canonical order.
+pub fn all_feature_names() -> Vec<String> {
+    HW_FEATURES
+        .iter()
+        .chain(NET_FEATURES)
+        .chain(HYPA_FEATURES)
+        .chain(DERIVED_FEATURES)
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn log1p(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).ln()
+}
+
+/// Per-(network, batch) description: IR totals + HyPA analysis. Computed
+/// once and reused across the whole GPU × frequency sweep.
+#[derive(Debug, Clone)]
+pub struct NetDescriptor {
+    pub name: String,
+    pub batch: usize,
+    pub totals: crate::cnn::ir::NetTotals,
+    pub hypa: NetworkMix,
+    pub input_numel: usize,
+}
+
+impl NetDescriptor {
+    /// Analyze a network: shape inference + PTX generation + HyPA.
+    pub fn build(net: &Network, batch: usize) -> anyhow::Result<NetDescriptor> {
+        let totals = net.totals().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let launches = decompose(net, batch).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let module = generate_module(&launches);
+        let text = to_text(&module);
+        let parsed = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let hypa = analyze_network(&parsed.kernels, &launches, HypaConfig::default());
+        Ok(NetDescriptor {
+            name: net.name.clone(),
+            batch,
+            totals,
+            hypa,
+            input_numel: net.input.numel(),
+        })
+    }
+
+    /// Full feature vector for this network on `(gpu, f_mhz)`.
+    pub fn features(&self, g: &GpuSpec, f_mhz: f64) -> Vec<f64> {
+        let t = &self.totals;
+        let mix = &self.hypa.mix;
+        let batch_f = self.batch as f64;
+        let flops = t.flops * batch_f;
+        let ldst = mix.load_global + mix.store_global;
+        let bytes_est = ldst * 4.0;
+        let peak = g.peak_gflops(f_mhz) * 1e9;
+
+        let mut v = Vec::with_capacity(35);
+        // HW
+        v.push(g.sm_count as f64);
+        v.push(g.cores_per_sm as f64);
+        v.push(g.total_cores() as f64);
+        v.push(f_mhz);
+        v.push(g.voltage(f_mhz));
+        v.push(g.mem_bw_gbps);
+        v.push(g.mem_gb);
+        v.push(g.l2_kib as f64);
+        v.push(g.arch.factor());
+        v.push(g.arch.process_nm());
+        v.push(g.tdp_w);
+        v.push(g.idle_w);
+        v.push(log1p(g.peak_gflops(f_mhz)));
+        // NET
+        v.push(t.layers as f64);
+        v.push(t.conv_layers as f64);
+        v.push(t.dense_layers as f64);
+        v.push(t.pool_layers as f64);
+        v.push(log1p(flops));
+        v.push(log1p(t.conv_flops * batch_f));
+        v.push(log1p(t.dense_flops * batch_f));
+        v.push(log1p(t.params as f64));
+        v.push(log1p(t.activation_bytes * batch_f));
+        v.push(batch_f);
+        v.push(log1p(self.input_numel as f64 * batch_f));
+        // HYPA
+        v.push(log1p(mix.total()));
+        v.push(log1p(mix.fp));
+        v.push(log1p(mix.int));
+        v.push(log1p(ldst));
+        v.push(mix.fp / mix.total().max(1.0));
+        v.push(ldst / mix.total().max(1.0));
+        v.push(self.hypa.max_loop_depth as f64);
+        v.push(self.hypa.kernels as f64);
+        // DERIVED
+        v.push(log1p(flops / peak.max(1.0) * 1e9)); // ns-scale
+        v.push(log1p(bytes_est / (g.mem_bw_gbps * 1e9) * 1e9));
+        v.push(log1p(flops / bytes_est.max(1.0)));
+        debug_assert_eq!(v.len(), all_feature_names().len());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::gpu::specs::by_name;
+
+    #[test]
+    fn feature_vector_matches_names() {
+        let d = NetDescriptor::build(&zoo::lenet5(), 1).unwrap();
+        let g = by_name("v100s").unwrap();
+        let v = d.features(&g, 1000.0);
+        assert_eq!(v.len(), all_feature_names().len());
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn frequency_changes_only_hw_and_derived() {
+        let d = NetDescriptor::build(&zoo::lenet5(), 1).unwrap();
+        let g = by_name("v100s").unwrap();
+        let a = d.features(&g, 600.0);
+        let b = d.features(&g, 1500.0);
+        let names = all_feature_names();
+        for (i, name) in names.iter().enumerate() {
+            let differs = (a[i] - b[i]).abs() > 1e-12;
+            let freq_dependent = matches!(
+                name.as_str(),
+                "f_mhz" | "v_at_f" | "log_peak_gflops" | "log_compute_time_est"
+            );
+            assert_eq!(
+                differs, freq_dependent,
+                "feature {name}: differs={differs}"
+            );
+        }
+    }
+
+    #[test]
+    fn bigger_net_bigger_flops_feature() {
+        let small = NetDescriptor::build(&zoo::lenet5(), 1).unwrap();
+        let big = NetDescriptor::build(&zoo::squeezenet(), 1).unwrap();
+        let g = by_name("v100s").unwrap();
+        let names = all_feature_names();
+        let fi = names.iter().position(|n| n == "log_flops").unwrap();
+        assert!(big.features(&g, 1000.0)[fi] > small.features(&g, 1000.0)[fi]);
+    }
+
+    #[test]
+    fn hypa_features_track_flops() {
+        // HyPA fp count should correlate with IR MAC count (2 flops/mac,
+        // 1 fma instr/mac).
+        let d = NetDescriptor::build(&zoo::lenet5(), 1).unwrap();
+        let fp = d.hypa.mix.fp;
+        let macs = d.totals.flops / 2.0;
+        let ratio = fp / macs;
+        // fma per mac ≈ 1, plus pool/elementwise fp overhead.
+        assert!(
+            (0.8..2.5).contains(&ratio),
+            "hypa fp {fp} vs macs {macs} ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn feature_groups_are_disjoint_and_complete() {
+        let all = all_feature_names();
+        let groups: Vec<&str> = HW_FEATURES
+            .iter()
+            .chain(NET_FEATURES)
+            .chain(HYPA_FEATURES)
+            .chain(DERIVED_FEATURES)
+            .copied()
+            .collect();
+        assert_eq!(all.len(), groups.len());
+        let mut dedup = groups.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), groups.len());
+    }
+}

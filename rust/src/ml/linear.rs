@@ -1,0 +1,170 @@
+//! Ridge-regularized linear regression — the sanity baseline the ML-based
+//! predictors are compared against in the headline table (a linear model
+//! cannot capture the DVFS V²f power curve or occupancy cliffs, which is
+//! the paper's motivation for non-linear models).
+
+use crate::ml::dataset::Scaler;
+use crate::ml::regressor::Regressor;
+
+/// Ridge regression on z-scored features.
+#[derive(Debug, Clone)]
+pub struct Ridge {
+    pub lambda: f64,
+    scaler: Option<Scaler>,
+    /// Weights (d) + intercept.
+    w: Vec<f64>,
+    b: f64,
+}
+
+impl Ridge {
+    pub fn new(lambda: f64) -> Ridge {
+        Ridge {
+            lambda,
+            scaler: None,
+            w: Vec::new(),
+            b: 0.0,
+        }
+    }
+}
+
+/// Solve `A x = b` for symmetric positive-definite `A` via Gaussian
+/// elimination with partial pivoting (d ≤ a few dozen here).
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        assert!(diag.abs() > 1e-12, "singular system");
+        for r in col + 1..n {
+            let factor = a[r][col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= factor * a[col][c];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in col + 1..n {
+            acc -= a[col][c] * x[c];
+        }
+        x[col] = acc / a[col][col];
+    }
+    x
+}
+
+impl Regressor for Ridge {
+    fn name(&self) -> String {
+        format!("ridge(λ={})", self.lambda)
+    }
+
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let scaler = Scaler::fit(x);
+        let xs = scaler.transform(x);
+        let n = xs.len();
+        let d = xs[0].len();
+
+        // Normal equations on centered targets: (XᵀX + λI) w = Xᵀ(y - ȳ).
+        let y_mean = y.iter().sum::<f64>() / n as f64;
+        let mut xtx = vec![vec![0.0; d]; d];
+        let mut xty = vec![0.0; d];
+        for (row, &target) in xs.iter().zip(y) {
+            let t = target - y_mean;
+            for i in 0..d {
+                xty[i] += row[i] * t;
+                for j in i..d {
+                    xtx[i][j] += row[i] * row[j];
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..i {
+                xtx[i][j] = xtx[j][i];
+            }
+            xtx[i][i] += self.lambda.max(1e-9);
+        }
+        self.w = solve(xtx, xty);
+        self.b = y_mean;
+        self.scaler = Some(scaler);
+    }
+
+    fn predict_one(&self, q: &[f64]) -> f64 {
+        let qs = self
+            .scaler
+            .as_ref()
+            .expect("Ridge::fit not called")
+            .transform_row(q);
+        self.b + qs.iter().zip(&self.w).map(|(a, b)| a * b).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_exact_linear_relation() {
+        let mut rng = Rng::new(1);
+        let x: Vec<Vec<f64>> = (0..100)
+            .map(|_| vec![rng.f64(), rng.f64() * 10.0])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 * r[0] - 0.5 * r[1] + 7.0).collect();
+        let mut m = Ridge::new(1e-6);
+        m.fit(&x, &y);
+        for q in x.iter().take(10) {
+            let truth = 3.0 * q[0] - 0.5 * q[1] + 7.0;
+            assert!((m.predict_one(q) - truth).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn regularization_shrinks_weights() {
+        let mut rng = Rng::new(2);
+        let x: Vec<Vec<f64>> = (0..50).map(|_| vec![rng.f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|r| 10.0 * r[0] + rng.normal() * 0.1).collect();
+        let mut weak = Ridge::new(1e-6);
+        let mut strong = Ridge::new(1e3);
+        weak.fit(&x, &y);
+        strong.fit(&x, &y);
+        assert!(strong.w[0].abs() < weak.w[0].abs());
+    }
+
+    #[test]
+    fn handles_collinear_features() {
+        // x2 = 2*x1 — exactly singular without ridge.
+        let x: Vec<Vec<f64>> = (0..30)
+            .map(|i| vec![i as f64, 2.0 * i as f64])
+            .collect();
+        let y: Vec<f64> = (0..30).map(|i| 5.0 * i as f64).collect();
+        let mut m = Ridge::new(1e-3);
+        m.fit(&x, &y);
+        let p = m.predict_one(&[10.0, 20.0]);
+        assert!((p - 50.0).abs() < 1.0, "p={p}");
+    }
+
+    #[test]
+    fn solver_correct_on_known_system() {
+        // [[2,1],[1,3]] x = [3,5] → x = [4/5, 7/5]
+        let a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let b = vec![3.0, 5.0];
+        let x = solve(a, b);
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,25 @@
+//! ML substrate: the paper's predictive-modelling layer.
+//!
+//! [`features`] builds the runtime-free feature vectors, [`datagen`]
+//! sweeps the simulator to produce the labelled dataset, [`knn`]/[`tree`]/
+//! [`forest`]/[`linear`] are the model family of §II, [`metrics`] computes
+//! MAPE/R²/RMSE, and [`validate`] implements the train-many-pick-best
+//! methodology of Fig. 1.
+
+pub mod dataset;
+pub mod datagen;
+pub mod features;
+pub mod forest;
+pub mod knn;
+pub mod linear;
+pub mod metrics;
+pub mod regressor;
+pub mod tree;
+pub mod validate;
+
+pub use dataset::{Dataset, SampleMeta, Scaler, Target};
+pub use forest::{ForestConfig, ForestTensor, RandomForest};
+pub use knn::Knn;
+pub use linear::Ridge;
+pub use regressor::Regressor;
+pub use tree::{DecisionTree, TreeConfig};

@@ -1,0 +1,20 @@
+//! The regression-model interface shared by every predictor (paper Fig. 1:
+//! "we train multiple machine learning models … for each specific task,
+//! which helps improve each model's accuracy").
+
+/// A trainable regression model.
+pub trait Regressor {
+    /// Human-readable name with hyperparameters, e.g. `forest(64,d12)`.
+    fn name(&self) -> String;
+
+    /// Fit on a feature matrix and target vector.
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
+
+    /// Predict one sample.
+    fn predict_one(&self, q: &[f64]) -> f64;
+
+    /// Predict a batch (default: loop).
+    fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        qs.iter().map(|q| self.predict_one(q)).collect()
+    }
+}

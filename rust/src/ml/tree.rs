@@ -1,0 +1,336 @@
+//! CART regression tree (variance-reduction splits).
+//!
+//! One of the paper's model family ("K-Nearest Neighbor, Decision Tree,
+//! Random Forest Tree", §II). Also the base learner for
+//! [`crate::ml::forest`], which adds bootstrap + feature subsampling —
+//! the configuration that wins the paper's *power* task.
+//!
+//! Trees are stored as flat node arrays (`feature/threshold/left/right/
+//! value`), which is also exactly the tensorized layout the AOT forest
+//! predictor consumes (see `python/compile/kernels/forest.py`): the rust
+//! side exports these arrays as XLA inputs at runtime.
+
+use crate::ml::regressor::Regressor;
+use crate::util::rng::Rng;
+
+/// Sentinel for leaf nodes.
+pub const LEAF: u32 = u32::MAX;
+
+/// Flat tree node.
+#[derive(Debug, Clone, Copy)]
+pub struct Node {
+    /// Split feature index, or `LEAF`.
+    pub feature: u32,
+    pub threshold: f64,
+    pub left: u32,
+    pub right: u32,
+    /// Prediction value (mean of targets) — used when `feature == LEAF`,
+    /// kept for internal nodes too (useful for truncated descent).
+    pub value: f64,
+}
+
+/// Hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub min_samples_split: usize,
+    /// Features considered per split (None = all) — forests pass √d.
+    pub max_features: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig {
+            max_depth: 12,
+            min_samples_leaf: 2,
+            min_samples_split: 4,
+            max_features: None,
+            seed: 7,
+        }
+    }
+}
+
+/// CART regression tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    pub config: TreeConfig,
+    pub nodes: Vec<Node>,
+}
+
+impl DecisionTree {
+    pub fn new(config: TreeConfig) -> DecisionTree {
+        DecisionTree {
+            config,
+            nodes: Vec::new(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], i: u32) -> usize {
+            let n = nodes[i as usize];
+            if n.feature == LEAF {
+                1
+            } else {
+                1 + walk(nodes, n.left).max(walk(nodes, n.right))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            walk(&self.nodes, 0)
+        }
+    }
+
+    /// Recursive builder over index sets.
+    fn build(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &mut [usize],
+        depth: usize,
+        rng: &mut Rng,
+    ) -> u32 {
+        let n = idx.len();
+        let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / n as f64;
+        let node_id = self.nodes.len() as u32;
+        self.nodes.push(Node {
+            feature: LEAF,
+            threshold: 0.0,
+            left: 0,
+            right: 0,
+            value: mean,
+        });
+
+        if depth >= self.config.max_depth || n < self.config.min_samples_split {
+            return node_id;
+        }
+        // Pure node?
+        if idx.iter().all(|&i| (y[i] - mean).abs() < 1e-12) {
+            return node_id;
+        }
+
+        let d = x[0].len();
+        let mtry = self.config.max_features.unwrap_or(d).clamp(1, d);
+        let features: Vec<usize> = if mtry == d {
+            (0..d).collect()
+        } else {
+            rng.sample_indices(d, mtry)
+        };
+
+        // Best split: minimize weighted child SSE (equivalently maximize
+        // variance reduction). O(d · n log n) per node via per-feature sort.
+        let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, sse)
+        let parent_sse: f64 = idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum();
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        for &f in &features {
+            order.clear();
+            order.extend_from_slice(idx);
+            order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+
+            // Prefix sums for O(1) SSE at each cut.
+            let mut sum_l = 0.0;
+            let mut sq_l = 0.0;
+            let total_sum: f64 = order.iter().map(|&i| y[i]).sum();
+            let total_sq: f64 = order.iter().map(|&i| y[i] * y[i]).sum();
+            for cut in 1..n {
+                let yi = y[order[cut - 1]];
+                sum_l += yi;
+                sq_l += yi * yi;
+                // Skip ties: can't split between equal feature values.
+                if x[order[cut - 1]][f] >= x[order[cut]][f] {
+                    continue;
+                }
+                let nl = cut as f64;
+                let nr = (n - cut) as f64;
+                if (cut < self.config.min_samples_leaf)
+                    || (n - cut < self.config.min_samples_leaf)
+                {
+                    continue;
+                }
+                let sum_r = total_sum - sum_l;
+                let sq_r = total_sq - sq_l;
+                let sse = (sq_l - sum_l * sum_l / nl) + (sq_r - sum_r * sum_r / nr);
+                if best.map(|(_, _, b)| sse < b).unwrap_or(sse < parent_sse - 1e-12) {
+                    let threshold = 0.5 * (x[order[cut - 1]][f] + x[order[cut]][f]);
+                    best = Some((f, threshold, sse));
+                }
+            }
+        }
+
+        let Some((f, threshold, _)) = best else {
+            return node_id;
+        };
+
+        // Partition.
+        let mut left_idx: Vec<usize> = Vec::new();
+        let mut right_idx: Vec<usize> = Vec::new();
+        for &i in idx.iter() {
+            if x[i][f] <= threshold {
+                left_idx.push(i);
+            } else {
+                right_idx.push(i);
+            }
+        }
+        debug_assert!(!left_idx.is_empty() && !right_idx.is_empty());
+
+        let left = self.build(x, y, &mut left_idx, depth + 1, rng);
+        let right = self.build(x, y, &mut right_idx, depth + 1, rng);
+        let node = &mut self.nodes[node_id as usize];
+        node.feature = f as u32;
+        node.threshold = threshold;
+        node.left = left;
+        node.right = right;
+        node_id
+    }
+}
+
+impl Regressor for DecisionTree {
+    fn name(&self) -> String {
+        format!("tree(d{})", self.config.max_depth)
+    }
+
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        self.nodes.clear();
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        let mut rng = Rng::new(self.config.seed);
+        self.build(x, y, &mut idx, 0, &mut rng);
+    }
+
+    fn predict_one(&self, q: &[f64]) -> f64 {
+        let mut i = 0u32;
+        loop {
+            let n = self.nodes[i as usize];
+            if n.feature == LEAF {
+                return n.value;
+            }
+            i = if q[n.feature as usize] <= n.threshold {
+                n.left
+            } else {
+                n.right
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..100).map(|i| if i < 50 { 1.0 } else { 9.0 }).collect();
+        let mut t = DecisionTree::new(TreeConfig::default());
+        t.fit(&x, &y);
+        assert_eq!(t.predict_one(&[10.0]), 1.0);
+        assert_eq!(t.predict_one(&[80.0]), 9.0);
+        // One split suffices.
+        assert!(t.nodes.len() <= 7, "nodes: {}", t.nodes.len());
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let x: Vec<Vec<f64>> = (0..256).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..256).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut t = DecisionTree::new(TreeConfig {
+            max_depth: 3,
+            ..Default::default()
+        });
+        t.fit(&x, &y);
+        assert!(t.depth() <= 4); // root at depth 1
+    }
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y = vec![5.0; 10];
+        let mut t = DecisionTree::new(TreeConfig::default());
+        t.fit(&x, &y);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict_one(&[3.0]), 5.0);
+    }
+
+    #[test]
+    fn deep_tree_interpolates_smooth_target() {
+        let x: Vec<Vec<f64>> = (0..500)
+            .map(|i| vec![i as f64 / 50.0, (i % 37) as f64])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 5.0 * r[0] + 0.5 * r[1]).collect();
+        let mut t = DecisionTree::new(TreeConfig {
+            max_depth: 14,
+            min_samples_leaf: 1,
+            min_samples_split: 2,
+            ..Default::default()
+        });
+        t.fit(&x, &y);
+        let preds: Vec<f64> = x.iter().map(|q| t.predict_one(q)).collect();
+        let r2 = crate::ml::metrics::r2(&y, &preds);
+        assert!(r2 > 0.99, "train r2 = {r2}");
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let x: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        let mut t = DecisionTree::new(TreeConfig {
+            min_samples_leaf: 10,
+            max_depth: 10,
+            ..Default::default()
+        });
+        t.fit(&x, &y);
+        // Count samples reaching each leaf.
+        let mut counts = std::collections::HashMap::new();
+        for q in &x {
+            let mut i = 0u32;
+            loop {
+                let n = t.nodes[i as usize];
+                if n.feature == LEAF {
+                    *counts.entry(i).or_insert(0usize) += 1;
+                    break;
+                }
+                i = if q[n.feature as usize] <= n.threshold {
+                    n.left
+                } else {
+                    n.right
+                };
+            }
+        }
+        assert!(counts.values().all(|&c| c >= 10), "{counts:?}");
+    }
+
+    #[test]
+    fn ties_never_split() {
+        // All feature values identical → no split possible.
+        let x = vec![vec![1.0]; 20];
+        let y: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let mut t = DecisionTree::new(TreeConfig::default());
+        t.fit(&x, &y);
+        assert_eq!(t.nodes.len(), 1);
+    }
+
+    #[test]
+    fn prop_prediction_within_target_range() {
+        crate::util::prop::check("tree prediction bounded", |rng| {
+            let n = rng.int_range(10, 80);
+            let x: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![rng.f64() * 10.0, rng.f64() * 10.0])
+                .collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.f64() * 100.0).collect();
+            let mut t = DecisionTree::new(TreeConfig::default());
+            t.fit(&x, &y);
+            let lo = y.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let q = vec![rng.f64() * 20.0 - 5.0, rng.f64() * 20.0 - 5.0];
+            let p = t.predict_one(&q);
+            crate::prop_assert!(
+                p >= lo - 1e-9 && p <= hi + 1e-9,
+                "prediction {p} outside [{lo}, {hi}]"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,259 @@
+//! Model validation: train/test splits, k-fold cross-validation, the
+//! candidate model zoo, and best-model selection per task — the paper's
+//! Fig. 1 methodology ("we train multiple machine learning models (e.g.,
+//! K-Nearest Neighbor, Decision Tree, Random Forest Tree) for each
+//! specific task (i.e., power or performance prediction)").
+
+use crate::ml::dataset::{Dataset, Target};
+use crate::ml::forest::{ForestConfig, RandomForest};
+use crate::ml::knn::Knn;
+use crate::ml::linear::Ridge;
+use crate::ml::metrics::{mape, r2, rmse};
+use crate::ml::regressor::Regressor;
+use crate::ml::tree::{DecisionTree, TreeConfig};
+use crate::util::rng::Rng;
+
+/// Split row indices into train/test.
+pub fn train_test_indices(n: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut rng = Rng::new(seed);
+    let perm = rng.permutation(n);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let test = perm[..n_test].to_vec();
+    let train = perm[n_test..].to_vec();
+    (train, test)
+}
+
+/// K-fold index sets: `k` disjoint (train, test) pairs covering all rows.
+pub fn kfold_indices(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n);
+    let mut rng = Rng::new(seed);
+    let perm = rng.permutation(n);
+    let mut folds = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = f * n / k;
+        let hi = (f + 1) * n / k;
+        let test: Vec<usize> = perm[lo..hi].to_vec();
+        let train: Vec<usize> = perm[..lo].iter().chain(&perm[hi..]).copied().collect();
+        folds.push((train, test));
+    }
+    folds
+}
+
+/// Evaluation scores for one model on one task.
+#[derive(Debug, Clone)]
+pub struct Eval {
+    pub model: String,
+    pub target: Target,
+    pub mape: f64,
+    pub r2: f64,
+    pub rmse: f64,
+}
+
+/// Train `model` on `train` and score it on `test`.
+pub fn evaluate(
+    model: &mut dyn Regressor,
+    train: &Dataset,
+    test: &Dataset,
+    target: Target,
+) -> Eval {
+    model.fit(&train.x, train.y(target));
+    let preds = model.predict(&test.x);
+    Eval {
+        model: model.name(),
+        target,
+        mape: mape(test.y(target), &preds),
+        r2: r2(test.y(target), &preds),
+        rmse: rmse(test.y(target), &preds),
+    }
+}
+
+/// Candidate factory set (name is taken from the built model).
+pub fn candidates() -> Vec<Box<dyn Regressor>> {
+    vec![
+        Box::new(Knn::new(3)),
+        Box::new(Knn::new(5)),
+        Box::new(Knn::new(9)),
+        Box::new(Knn::uniform(5)),
+        Box::new(DecisionTree::new(TreeConfig::default())),
+        Box::new(DecisionTree::new(TreeConfig {
+            max_depth: 8,
+            ..Default::default()
+        })),
+        Box::new(RandomForest::new(ForestConfig::default())),
+        Box::new(RandomForest::new(ForestConfig {
+            n_trees: 24,
+            max_depth: 10,
+            ..Default::default()
+        })),
+        Box::new(Ridge::new(1.0)),
+    ]
+}
+
+/// Cross-validated score of one model on a dataset/task (mean MAPE over
+/// folds, plus pooled R²).
+pub fn cross_validate(
+    model: &mut dyn Regressor,
+    data: &Dataset,
+    target: Target,
+    k: usize,
+    seed: u64,
+) -> Eval {
+    let folds = kfold_indices(data.len(), k, seed);
+    let mut all_true = Vec::new();
+    let mut all_pred = Vec::new();
+    for (tr, te) in folds {
+        let train = data.subset(&tr);
+        let test = data.subset(&te);
+        model.fit(&train.x, train.y(target));
+        let preds = model.predict(&test.x);
+        all_true.extend_from_slice(test.y(target));
+        all_pred.extend(preds);
+    }
+    Eval {
+        model: model.name(),
+        target,
+        mape: mape(&all_true, &all_pred),
+        r2: r2(&all_true, &all_pred),
+        rmse: rmse(&all_true, &all_pred),
+    }
+}
+
+/// Train every candidate with k-fold CV; return all evals sorted by MAPE
+/// (best first). The winner is re-fit on the full dataset by the caller.
+pub fn select_best(data: &Dataset, target: Target, k: usize, seed: u64) -> Vec<Eval> {
+    let mut evals: Vec<Eval> = candidates()
+        .iter_mut()
+        .map(|m| cross_validate(m.as_mut(), data, target, k, seed))
+        .collect();
+    evals.sort_by(|a, b| a.mape.partial_cmp(&b.mape).unwrap());
+    evals
+}
+
+/// Group-aware split: hold out entire *networks* (all their rows) — the
+/// realistic DSE scenario where the queried CNN was never measured.
+pub fn split_by_network(data: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    let mut nets: Vec<String> = data.meta.iter().map(|m| m.network.clone()).collect();
+    nets.sort();
+    nets.dedup();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut nets);
+    let n_test = ((nets.len() as f64) * test_frac).round().max(1.0) as usize;
+    let test_nets: std::collections::HashSet<String> =
+        nets[..n_test.min(nets.len())].iter().cloned().collect();
+    let test = data.filter(|m| test_nets.contains(&m.network));
+    let train = data.filter(|m| !test_nets.contains(&m.network));
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::SampleMeta;
+
+    /// Synthetic dataset with a learnable nonlinear relationship.
+    fn synth(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset {
+            feature_names: vec!["a".into(), "b".into(), "c".into()],
+            ..Default::default()
+        };
+        for i in 0..n {
+            let a = rng.f64() * 4.0;
+            let b = rng.f64() * 2.0;
+            let c = rng.f64();
+            let power = 30.0 + 20.0 * a * a + 10.0 * b + rng.normal() * 0.5;
+            let cycles = 1e6 * (1.0 + a) * (1.0 + 0.2 * c) + rng.normal() * 1e4;
+            d.push(
+                vec![a, b, c],
+                power,
+                cycles,
+                SampleMeta {
+                    network: format!("net{}", i % 7),
+                    gpu: "v100s".into(),
+                    f_mhz: 1000.0,
+                    batch: 1,
+                },
+            );
+        }
+        d
+    }
+
+    #[test]
+    fn split_sizes() {
+        let (tr, te) = train_test_indices(100, 0.2, 1);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.len(), 80);
+        let mut all: Vec<usize> = tr.iter().chain(&te).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let folds = kfold_indices(50, 5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![false; 50];
+        for (tr, te) in &folds {
+            assert_eq!(tr.len() + te.len(), 50);
+            for &i in te {
+                assert!(!seen[i], "test fold overlap at {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn forest_beats_ridge_on_nonlinear_power() {
+        let data = synth(400, 5);
+        let (tr_idx, te_idx) = train_test_indices(data.len(), 0.25, 9);
+        let train = data.subset(&tr_idx);
+        let test = data.subset(&te_idx);
+        let mut forest = RandomForest::new(ForestConfig::default());
+        let mut ridge = Ridge::new(1.0);
+        let ef = evaluate(&mut forest, &train, &test, Target::PowerW);
+        let er = evaluate(&mut ridge, &train, &test, Target::PowerW);
+        assert!(
+            ef.mape < er.mape,
+            "forest {:.2}% vs ridge {:.2}%",
+            ef.mape,
+            er.mape
+        );
+        assert!(ef.r2 > 0.9);
+    }
+
+    #[test]
+    fn select_best_returns_sorted() {
+        let data = synth(200, 11);
+        let evals = select_best(&data, Target::Cycles, 3, 1);
+        assert_eq!(evals.len(), candidates().len());
+        for w in evals.windows(2) {
+            assert!(w[0].mape <= w[1].mape);
+        }
+        // Something must fit reasonably.
+        assert!(evals[0].mape < 10.0, "best mape {:.2}", evals[0].mape);
+    }
+
+    #[test]
+    fn network_split_holds_out_whole_networks() {
+        let data = synth(140, 13);
+        let (train, test) = split_by_network(&data, 0.3, 7);
+        assert!(!train.is_empty() && !test.is_empty());
+        let train_nets: std::collections::HashSet<&str> =
+            train.meta.iter().map(|m| m.network.as_str()).collect();
+        for m in &test.meta {
+            assert!(!train_nets.contains(m.network.as_str()));
+        }
+        assert_eq!(train.len() + test.len(), data.len());
+    }
+
+    #[test]
+    fn cross_validate_uses_all_rows() {
+        let data = synth(90, 17);
+        let mut m = Ridge::new(1.0);
+        let e = cross_validate(&mut m, &data, Target::PowerW, 3, 5);
+        assert!(e.mape > 0.0);
+        assert!(e.r2 <= 1.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! Tiny HTTP client for the offload REST API (tests, examples, and the
+//! `hypa-dse offload-client` CLI subcommand).
+
+use anyhow::Result;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::offload::http::{read_response, Response, write_response};
+
+/// Blocking one-request-per-connection client.
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadClient {
+    pub addr: SocketAddr,
+}
+
+impl OffloadClient {
+    pub fn new(addr: SocketAddr) -> OffloadClient {
+        OffloadClient { addr }
+    }
+
+    fn send(&self, method: &str, path: &str, body: &str) -> Result<(u16, Vec<u8>)> {
+        let mut stream = TcpStream::connect_timeout(&self.addr, Duration::from_secs(5))?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        // Reuse the response writer for the request by hand-rolling the
+        // request head (it has the same framing).
+        use std::io::Write;
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+        read_response(&mut stream)
+    }
+
+    pub fn get(&self, path: &str) -> Result<(u16, Vec<u8>)> {
+        self.send("GET", path, "")
+    }
+
+    pub fn post(&self, path: &str, body: &str) -> Result<(u16, Vec<u8>)> {
+        self.send("POST", path, body)
+    }
+}
+
+// Silence the unused-import lint for Response/write_response which exist so
+// the client and server share framing code paths in tests.
+#[allow(unused)]
+fn _type_check(mut s: TcpStream, r: &Response) {
+    let _ = write_response(&mut s, r);
+}

@@ -1,0 +1,205 @@
+//! Minimal HTTP/1.1 framing for the offload REST API.
+//!
+//! The vendored dependency set has no HTTP stack, so this implements the
+//! small subset the service needs: request-line + headers + fixed
+//! Content-Length bodies, over any `Read`/`Write` transport. Not a general
+//! HTTP implementation — requests without Content-Length have empty
+//! bodies, connections are close-delimited.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+/// Parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| anyhow!("non-UTF8 body"))
+    }
+}
+
+/// Response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub reason: &'static str,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            reason: reason_for(status),
+            content_type: "application/json",
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            reason: reason_for(status),
+            content_type: "text/plain",
+            body: body.as_bytes().to_vec(),
+        }
+    }
+}
+
+fn reason_for(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Read one request from a stream. Limits: 16 KiB of headers, 4 MiB body.
+pub fn read_request(stream: &mut impl Read) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing path"))?
+        .to_string();
+
+    let mut headers = BTreeMap::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        header_bytes += line.len();
+        if header_bytes > 16 * 1024 {
+            return Err(anyhow!("headers too large"));
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if len > 4 * 1024 * 1024 {
+        return Err(anyhow!("body too large"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body,
+    })
+}
+
+/// Write a response (connection: close).
+pub fn write_response(stream: &mut impl Write, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        resp.status,
+        resp.reason,
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Parse a response (client side).
+pub fn read_response(stream: &mut impl Read) -> Result<(u16, Vec<u8>)> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line '{status_line}'"))?;
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_post_with_body() {
+        let raw = b"POST /v1/offload/decide HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"a\":1}";
+        let req = read_request(&mut Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/offload/decide");
+        assert_eq!(req.body_str().unwrap(), "{\"a\":1}");
+    }
+
+    #[test]
+    fn parse_get_without_body() {
+        let raw = b"GET /health HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response::json(200, "{\"ok\":true}".into());
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let (status, body) = read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn rejects_oversized_body_declaration() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(raw.to_vec())).is_err());
+    }
+
+    #[test]
+    fn header_case_insensitive() {
+        let raw = b"POST / HTTP/1.1\r\ncOnTeNt-LeNgTh: 2\r\n\r\nhi";
+        let req = read_request(&mut Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.body, b"hi");
+    }
+}

@@ -1,0 +1,15 @@
+//! Offloading substrate: the local-vs-cloud decision model ([`model`]),
+//! the REST API of §IV ([`server`], [`http`]), and a small client
+//! ([`client`]).
+
+pub mod client;
+pub mod http;
+pub mod model;
+pub mod server;
+
+pub use client::OffloadClient;
+pub use model::{
+    decide, local_estimate, offload_estimate, Constraints, Decision, EdgePowerProfile,
+    ExecutionEstimate, Link, Recommendation,
+};
+pub use server::{OffloadServer, ServerState};

@@ -1,0 +1,297 @@
+//! Offloading analysis model.
+//!
+//! The paper (§I, §IV): "executing object recognition on an Nvidia Jetson
+//! TX1 can consume 7 watts, but offloading the same task to the cloud
+//! reduces power consumption to 2 watts … the feasibility of offloading ML
+//! workloads depends on available bandwidth". This module models the
+//! decision: local execution (device GPU power × latency) vs offload
+//! (radio transfer energy + idle wait + remote execution), across a
+//! bandwidth/latency grid.
+
+use crate::cnn::ir::Network;
+use crate::cnn::launch::input_bytes;
+
+/// Network link between the edge device and the cloud endpoint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub bandwidth_mbps: f64,
+    pub rtt_ms: f64,
+}
+
+impl Link {
+    /// Transfer time for `bytes` including one round trip.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        self.rtt_ms * 1e-3 + (bytes as f64 * 8.0) / (self.bandwidth_mbps * 1e6)
+    }
+}
+
+/// Power profile of the edge device.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgePowerProfile {
+    /// Device draw while the local GPU runs inference (W).
+    pub local_active_w: f64,
+    /// Device draw while radio is transmitting (W).
+    pub radio_tx_w: f64,
+    /// Device draw while idle-waiting for the cloud response (W).
+    pub idle_w: f64,
+}
+
+impl EdgePowerProfile {
+    /// Jetson-TX1-flavoured defaults matching the paper's 7 W local figure.
+    pub fn jetson_tx1() -> EdgePowerProfile {
+        EdgePowerProfile {
+            local_active_w: 7.0,
+            radio_tx_w: 2.4,
+            idle_w: 1.2,
+        }
+    }
+}
+
+/// One side of the decision.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecutionEstimate {
+    /// End-to-end latency per inference (s).
+    pub latency_s: f64,
+    /// Edge-device energy per inference (J).
+    pub device_energy_j: f64,
+    /// Mean device power over the request (W).
+    pub device_power_w: f64,
+}
+
+/// Estimate local execution from a (predicted or simulated) local runtime.
+pub fn local_estimate(local_latency_s: f64, profile: &EdgePowerProfile) -> ExecutionEstimate {
+    ExecutionEstimate {
+        latency_s: local_latency_s,
+        device_energy_j: profile.local_active_w * local_latency_s,
+        device_power_w: profile.local_active_w,
+    }
+}
+
+/// Estimate offloaded execution: upload input, wait for the cloud to run
+/// it, receive the (small) result.
+pub fn offload_estimate(
+    net: &Network,
+    batch: usize,
+    link: &Link,
+    cloud_latency_s: f64,
+    profile: &EdgePowerProfile,
+) -> ExecutionEstimate {
+    let bytes = input_bytes(net, batch);
+    let tx_s = link.transfer_s(bytes);
+    let wait_s = cloud_latency_s + link.rtt_ms * 0.5e-3;
+    let latency = tx_s + wait_s;
+    let energy = profile.radio_tx_w * tx_s + profile.idle_w * wait_s;
+    ExecutionEstimate {
+        latency_s: latency,
+        device_energy_j: energy,
+        device_power_w: energy / latency.max(1e-12),
+    }
+}
+
+/// The recommendation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Recommendation {
+    Local,
+    Offload,
+    /// Offloading violates the latency constraint but local violates the
+    /// power budget (or vice versa) — no feasible option.
+    Infeasible,
+}
+
+impl Recommendation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Recommendation::Local => "local",
+            Recommendation::Offload => "offload",
+            Recommendation::Infeasible => "infeasible",
+        }
+    }
+}
+
+/// Decision constraints (§IV: "limited power supply and desired
+/// performance").
+#[derive(Debug, Clone, Copy)]
+pub struct Constraints {
+    pub max_latency_s: Option<f64>,
+    pub max_energy_j: Option<f64>,
+}
+
+/// Full decision record.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    pub local: ExecutionEstimate,
+    pub offload: ExecutionEstimate,
+    pub recommendation: Recommendation,
+}
+
+fn feasible(e: &ExecutionEstimate, c: &Constraints) -> bool {
+    c.max_latency_s.map(|m| e.latency_s <= m).unwrap_or(true)
+        && c.max_energy_j.map(|m| e.device_energy_j <= m).unwrap_or(true)
+}
+
+/// Decide local vs offload, minimizing device energy among feasible
+/// options (the battery-lifetime objective the paper motivates).
+pub fn decide(
+    local: ExecutionEstimate,
+    offload: ExecutionEstimate,
+    constraints: &Constraints,
+) -> Decision {
+    let lf = feasible(&local, constraints);
+    let of = feasible(&offload, constraints);
+    let recommendation = match (lf, of) {
+        (false, false) => Recommendation::Infeasible,
+        (true, false) => Recommendation::Local,
+        (false, true) => Recommendation::Offload,
+        (true, true) => {
+            if offload.device_energy_j < local.device_energy_j {
+                Recommendation::Offload
+            } else {
+                Recommendation::Local
+            }
+        }
+    };
+    Decision {
+        local,
+        offload,
+        recommendation,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+
+    fn profile() -> EdgePowerProfile {
+        EdgePowerProfile::jetson_tx1()
+    }
+
+    #[test]
+    fn transfer_time_components() {
+        let l = Link {
+            bandwidth_mbps: 100.0,
+            rtt_ms: 10.0,
+        };
+        // 1 MB at 100 Mbps = 80 ms, + 10 ms RTT.
+        let t = l.transfer_s(1_000_000);
+        assert!((t - 0.09).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn fast_link_favours_offload() {
+        // Paper's premise: with good connectivity, offloading saves energy
+        // (7 W local vs ~2 W effective offloaded).
+        let net = zoo::squeezenet();
+        let local = local_estimate(0.5, &profile()); // slow edge inference
+        let link = Link {
+            bandwidth_mbps: 1000.0,
+            rtt_ms: 5.0,
+        };
+        let off = offload_estimate(&net, 1, &link, 0.02, &profile());
+        let d = decide(
+            local,
+            off,
+            &Constraints {
+                max_latency_s: None,
+                max_energy_j: None,
+            },
+        );
+        assert_eq!(d.recommendation, Recommendation::Offload);
+        assert!(off.device_energy_j < local.device_energy_j / 3.0);
+    }
+
+    #[test]
+    fn slow_link_favours_local() {
+        let net = zoo::vgg16(); // big input + weights irrelevant; input 600KB
+        let local = local_estimate(0.5, &profile());
+        let link = Link {
+            bandwidth_mbps: 0.5,
+            rtt_ms: 200.0,
+        };
+        let off = offload_estimate(&net, 1, &link, 0.02, &profile());
+        let d = decide(
+            local,
+            off,
+            &Constraints {
+                max_latency_s: None,
+                max_energy_j: None,
+            },
+        );
+        assert_eq!(d.recommendation, Recommendation::Local);
+    }
+
+    #[test]
+    fn latency_constraint_can_override_energy() {
+        let net = zoo::squeezenet();
+        let local = local_estimate(0.05, &profile());
+        // Offload is cheaper energy-wise but takes 0.5 s over this link.
+        let link = Link {
+            bandwidth_mbps: 10.0,
+            rtt_ms: 50.0,
+        };
+        let off = offload_estimate(&net, 1, &link, 0.3, &profile());
+        assert!(off.latency_s > 0.3);
+        let d = decide(
+            local,
+            off,
+            &Constraints {
+                max_latency_s: Some(0.1),
+                max_energy_j: None,
+            },
+        );
+        assert_eq!(d.recommendation, Recommendation::Local);
+    }
+
+    #[test]
+    fn infeasible_when_both_violate() {
+        let local = local_estimate(1.0, &profile()); // 7 J
+        let link = Link {
+            bandwidth_mbps: 1.0,
+            rtt_ms: 100.0,
+        };
+        let off = offload_estimate(&zoo::vgg16(), 1, &link, 0.5, &profile());
+        let d = decide(
+            local,
+            off,
+            &Constraints {
+                max_latency_s: Some(0.01),
+                max_energy_j: Some(0.001),
+            },
+        );
+        assert_eq!(d.recommendation, Recommendation::Infeasible);
+    }
+
+    #[test]
+    fn crossover_exists_in_bandwidth() {
+        // Sweeping bandwidth must flip the decision somewhere (the Fig-like
+        // crossover the offload bench plots).
+        let net = zoo::resnet18();
+        let local = local_estimate(0.2, &profile());
+        let mut last = None;
+        let mut flipped = false;
+        for bw in [0.2, 1.0, 5.0, 25.0, 125.0, 625.0] {
+            let link = Link {
+                bandwidth_mbps: bw,
+                rtt_ms: 20.0,
+            };
+            let off = offload_estimate(&net, 1, &link, 0.05, &profile());
+            let d = decide(
+                local,
+                off,
+                &Constraints {
+                    max_latency_s: None,
+                    max_energy_j: None,
+                },
+            )
+            .recommendation;
+            if let Some(prev) = last {
+                if prev != d {
+                    flipped = true;
+                }
+            }
+            last = Some(d);
+        }
+        assert!(flipped, "no crossover across 3 decades of bandwidth");
+        assert_eq!(last, Some(Recommendation::Offload));
+    }
+}

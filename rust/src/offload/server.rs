@@ -1,0 +1,336 @@
+//! The offload REST API (§IV: "We have developed a REST API for offloading
+//! ML workloads and are currently studying the power and performance
+//! characteristics at various bandwidths and latencies").
+//!
+//! Endpoints (JSON over HTTP/1.1, thread-per-connection on std::net):
+//!
+//! * `GET  /health` — liveness.
+//! * `POST /v1/offload/decide` — body: `{network, batch, bandwidth_mbps,
+//!   rtt_ms, local_latency_s?, cloud_latency_s?, max_latency_s?,
+//!   max_energy_j?}` → decision record. When latencies are omitted they
+//!   are estimated by simulating the network on the edge/cloud GPUs.
+//! * `POST /v1/predict` — body: `{network, gpu, f_mhz, batch}` → the
+//!   ML-predicted power/cycles for that design point (served through the
+//!   coordinator's batched predictor when one is attached, else the
+//!   simulator).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::cnn::zoo;
+use crate::coordinator::{Predictor, Task};
+use crate::gpu::specs::by_name;
+use crate::ml::features::NetDescriptor;
+use crate::offload::http::{read_request, write_response, Request, Response};
+use crate::offload::model::{
+    decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
+};
+use crate::sim::Simulator;
+use crate::util::json::{jnum, jstr, Json};
+
+/// Server state shared across connection threads.
+pub struct ServerState {
+    /// Simulator for latency estimation (mutex: trace cache is shared).
+    pub sim: Mutex<Simulator>,
+    /// Optional ML predictor (the coordinator's batched service).
+    pub predictor: Option<Predictor>,
+    pub edge_gpu: String,
+    pub cloud_gpu: String,
+    pub requests: AtomicU64,
+}
+
+impl ServerState {
+    pub fn new(predictor: Option<Predictor>) -> ServerState {
+        ServerState {
+            sim: Mutex::new(Simulator::default()),
+            predictor,
+            edge_gpu: "jetson-tx1".into(),
+            cloud_gpu: "v100s".into(),
+            requests: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Running server handle; `stop()` or drop shuts it down.
+pub struct OffloadServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl OffloadServer {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(addr: &str, state: Arc<ServerState>) -> Result<OffloadServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("offload-server".into())
+            .spawn(move || {
+                let mut workers: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let st = state.clone();
+                            workers.push(std::thread::spawn(move || {
+                                handle_connection(stream, &st);
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                    workers.retain(|w| !w.is_finished());
+                }
+                for w in workers {
+                    let _ = w.join();
+                }
+            })?;
+        Ok(OffloadServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for OffloadServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) {
+    let resp = match read_request(&mut stream) {
+        Ok(req) => {
+            state.requests.fetch_add(1, Ordering::Relaxed);
+            route(&req, state)
+        }
+        Err(e) => Response::json(
+            400,
+            format!("{{\"error\":{}}}", Json::Str(e.to_string()).to_string()),
+        ),
+    };
+    let _ = write_response(&mut stream, &resp);
+}
+
+fn route(req: &Request, state: &ServerState) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => Response::json(200, "{\"status\":\"ok\"}".into()),
+        ("POST", "/v1/offload/decide") => {
+            json_endpoint(req, |j| offload_decide(j, state))
+        }
+        ("POST", "/v1/predict") => json_endpoint(req, |j| predict(j, state)),
+        ("POST", _) | ("GET", _) => Response::text(404, "not found"),
+        _ => Response::text(405, "method not allowed"),
+    }
+}
+
+fn json_endpoint(req: &Request, f: impl FnOnce(&Json) -> Result<Json>) -> Response {
+    let parsed = req
+        .body_str()
+        .and_then(|s| Json::parse(s).map_err(|e| anyhow!("{e}")));
+    match parsed.and_then(|j| f(&j)) {
+        Ok(body) => Response::json(200, body.to_string()),
+        Err(e) => {
+            let mut o = Json::obj();
+            o.set("error", Json::Str(format!("{e:#}")));
+            Response::json(400, o.to_string())
+        }
+    }
+}
+
+fn net_for(j: &Json) -> Result<crate::cnn::ir::Network> {
+    let name = j
+        .get("network")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'network'"))?;
+    zoo::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}'"))
+}
+
+/// POST /v1/offload/decide
+fn offload_decide(j: &Json, state: &ServerState) -> Result<Json> {
+    let net = net_for(j)?;
+    let batch = j.usize_or("batch", 1);
+    let link = Link {
+        bandwidth_mbps: j.f64_or("bandwidth_mbps", 100.0),
+        rtt_ms: j.f64_or("rtt_ms", 20.0),
+    };
+    let profile = EdgePowerProfile::jetson_tx1();
+
+    // Latencies: given, or simulated on the edge/cloud GPUs.
+    let local_latency = match j.get("local_latency_s").and_then(Json::as_f64) {
+        Some(v) => v,
+        None => {
+            let g = by_name(&state.edge_gpu).unwrap();
+            let mut sim = state.sim.lock().unwrap();
+            sim.simulate_network(&net, batch, &g, g.boost_mhz)
+                .map_err(|e| anyhow!("{e}"))?
+                .seconds
+        }
+    };
+    let cloud_latency = match j.get("cloud_latency_s").and_then(Json::as_f64) {
+        Some(v) => v,
+        None => {
+            let g = by_name(&state.cloud_gpu).unwrap();
+            let mut sim = state.sim.lock().unwrap();
+            sim.simulate_network(&net, batch, &g, g.boost_mhz)
+                .map_err(|e| anyhow!("{e}"))?
+                .seconds
+        }
+    };
+
+    let local = local_estimate(local_latency, &profile);
+    let remote = offload_estimate(&net, batch, &link, cloud_latency, &profile);
+    let d = decide(
+        local,
+        remote,
+        &Constraints {
+            max_latency_s: j.get("max_latency_s").and_then(Json::as_f64),
+            max_energy_j: j.get("max_energy_j").and_then(Json::as_f64),
+        },
+    );
+
+    let mut o = Json::obj();
+    o.set("recommendation", jstr(d.recommendation.name()));
+    let mut l = Json::obj();
+    l.set("latency_s", jnum(d.local.latency_s))
+        .set("device_energy_j", jnum(d.local.device_energy_j))
+        .set("device_power_w", jnum(d.local.device_power_w));
+    o.set("local", l);
+    let mut r = Json::obj();
+    r.set("latency_s", jnum(d.offload.latency_s))
+        .set("device_energy_j", jnum(d.offload.device_energy_j))
+        .set("device_power_w", jnum(d.offload.device_power_w));
+    o.set("offload", r);
+    Ok(o)
+}
+
+/// POST /v1/predict — ML-predicted power/cycles for a design point.
+fn predict(j: &Json, state: &ServerState) -> Result<Json> {
+    let net = net_for(j)?;
+    let gpu_name = j.str_or("gpu", "v100s");
+    let g = by_name(gpu_name).ok_or_else(|| anyhow!("unknown gpu '{gpu_name}'"))?;
+    let f_mhz = j.f64_or("f_mhz", g.base_mhz);
+    let batch = j.usize_or("batch", 1);
+
+    let desc = NetDescriptor::build(&net, batch)?;
+    let features = desc.features(&g, f_mhz);
+
+    let (power, cycles, source) = match &state.predictor {
+        Some(p) => (
+            p.predict(Task::Power, features.clone())?,
+            p.predict(Task::Cycles, features)?,
+            "ml-predictor",
+        ),
+        None => {
+            let mut sim = state.sim.lock().unwrap();
+            let s = sim
+                .simulate_network(&net, batch, &g, f_mhz)
+                .map_err(|e| anyhow!("{e}"))?;
+            (s.avg_power_w, s.cycles, "simulator")
+        }
+    };
+
+    let mut o = Json::obj();
+    o.set("network", jstr(&net.name))
+        .set("gpu", jstr(gpu_name))
+        .set("f_mhz", jnum(f_mhz))
+        .set("batch", jnum(batch as f64))
+        .set("power_w", jnum(power))
+        .set("cycles", jnum(cycles))
+        .set("source", jstr(source));
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::client::OffloadClient;
+
+    fn server() -> (OffloadServer, OffloadClient) {
+        let state = Arc::new(ServerState::new(None));
+        let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+        let client = OffloadClient::new(srv.addr);
+        (srv, client)
+    }
+
+    #[test]
+    fn health_endpoint() {
+        let (_srv, client) = server();
+        let (status, body) = client.get("/health").unwrap();
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&body).contains("ok"));
+    }
+
+    #[test]
+    fn decide_endpoint_roundtrip() {
+        let (_srv, client) = server();
+        let req = r#"{"network":"lenet5","batch":1,"bandwidth_mbps":500,"rtt_ms":5}"#;
+        let (status, body) = client.post("/v1/offload/decide", req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let rec = j.get("recommendation").and_then(Json::as_str).unwrap();
+        assert!(["local", "offload", "infeasible"].contains(&rec));
+        assert!(j.path(&["local", "latency_s"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn predict_endpoint_simulator_fallback() {
+        let (_srv, client) = server();
+        let req = r#"{"network":"lenet5","gpu":"v100s","f_mhz":1000,"batch":1}"#;
+        let (status, body) = client.post("/v1/predict", req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(j.get("power_w").unwrap().as_f64().unwrap() > 20.0);
+        assert_eq!(j.get("source").unwrap().as_str(), Some("simulator"));
+    }
+
+    #[test]
+    fn unknown_network_is_400() {
+        let (_srv, client) = server();
+        let (status, body) = client
+            .post("/v1/offload/decide", r#"{"network":"nope"}"#)
+            .unwrap();
+        assert_eq!(status, 400);
+        assert!(String::from_utf8_lossy(&body).contains("unknown network"));
+    }
+
+    #[test]
+    fn not_found_404() {
+        let (_srv, client) = server();
+        let (status, _) = client.get("/nope").unwrap();
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let (_srv, client) = server();
+        let addr = client.addr;
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            handles.push(std::thread::spawn(move || {
+                let c = OffloadClient::new(addr);
+                let (status, _) = c.get("/health").unwrap();
+                assert_eq!(status, 200);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

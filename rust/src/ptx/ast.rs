@@ -1,0 +1,592 @@
+//! PTX-subset abstract syntax.
+//!
+//! The Hybrid PTX Analyzer operates on "the compiled ML model" — the PTX
+//! of each CNN kernel. We model the subset of PTX that CNN inference
+//! kernels actually use: typed virtual registers, integer/FP arithmetic,
+//! predicated branches, parameterized loads/stores in `global`/`shared`
+//! space, and special registers (`%tid`, `%ctaid`, `%ntid`). The textual
+//! form emitted by [`crate::ptx::codegen`] and consumed by
+//! [`crate::ptx::parser`] stays close to real PTX so the parser and CFG
+//! machinery face realistic input.
+
+use std::fmt;
+
+/// Register classes, mirroring PTX virtual register types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RegClass {
+    /// `%p` — predicate.
+    Pred,
+    /// `%r` — 32-bit integer.
+    R32,
+    /// `%rd` — 64-bit integer (addresses).
+    R64,
+    /// `%f` — 32-bit float.
+    F32,
+}
+
+impl RegClass {
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            RegClass::Pred => "%p",
+            RegClass::R32 => "%r",
+            RegClass::R64 => "%rd",
+            RegClass::F32 => "%f",
+        }
+    }
+}
+
+/// A virtual register: class + index (`%r12` → `(R32, 12)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Reg {
+    pub class: RegClass,
+    pub index: u32,
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.class.prefix(), self.index)
+    }
+}
+
+/// Special (read-only) hardware registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpecialReg {
+    TidX,
+    CtaIdX,
+    NtidX,
+    NctaIdX,
+}
+
+impl SpecialReg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecialReg::TidX => "%tid.x",
+            SpecialReg::CtaIdX => "%ctaid.x",
+            SpecialReg::NtidX => "%ntid.x",
+            SpecialReg::NctaIdX => "%nctaid.x",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpecialReg> {
+        match s {
+            "%tid.x" => Some(SpecialReg::TidX),
+            "%ctaid.x" => Some(SpecialReg::CtaIdX),
+            "%ntid.x" => Some(SpecialReg::NtidX),
+            "%nctaid.x" => Some(SpecialReg::NctaIdX),
+            _ => None,
+        }
+    }
+}
+
+/// Instruction operand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operand {
+    Reg(Reg),
+    /// Integer immediate (also used for u64).
+    Imm(i64),
+    /// Float immediate (printed as PTX `0f%08X` hex form in codegen, but we
+    /// keep decimal text for readability).
+    FImm(f64),
+    Special(SpecialReg),
+}
+
+impl fmt::Display for Operand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Operand::Reg(r) => write!(f, "{r}"),
+            Operand::Imm(i) => write!(f, "{i}"),
+            Operand::FImm(x) => write!(f, "{x:?}"),
+            Operand::Special(s) => write!(f, "{}", s.name()),
+        }
+    }
+}
+
+/// Memory state spaces we model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Space {
+    Global,
+    Shared,
+    Param,
+}
+
+impl Space {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Space::Global => "global",
+            Space::Shared => "shared",
+            Space::Param => "param",
+        }
+    }
+}
+
+/// Comparison predicates for `setp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CmpOp::Lt => "lt",
+            CmpOp::Le => "le",
+            CmpOp::Gt => "gt",
+            CmpOp::Ge => "ge",
+            CmpOp::Eq => "eq",
+            CmpOp::Ne => "ne",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CmpOp> {
+        match s {
+            "lt" => Some(CmpOp::Lt),
+            "le" => Some(CmpOp::Le),
+            "gt" => Some(CmpOp::Gt),
+            "ge" => Some(CmpOp::Ge),
+            "eq" => Some(CmpOp::Eq),
+            "ne" => Some(CmpOp::Ne),
+            _ => None,
+        }
+    }
+
+    pub fn eval_i(&self, a: i64, b: i64) -> bool {
+        match self {
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+        }
+    }
+
+    pub fn eval_f(&self, a: f64, b: f64) -> bool {
+        match self {
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+        }
+    }
+}
+
+/// Integer binary ALU operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IAluOp {
+    Add,
+    Sub,
+    Mul, // mul.lo
+    Div,
+    Rem,
+    Min,
+    Max,
+    Shl,
+    Shr,
+    And,
+    Or,
+}
+
+impl IAluOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IAluOp::Add => "add",
+            IAluOp::Sub => "sub",
+            IAluOp::Mul => "mul.lo",
+            IAluOp::Div => "div",
+            IAluOp::Rem => "rem",
+            IAluOp::Min => "min",
+            IAluOp::Max => "max",
+            IAluOp::Shl => "shl",
+            IAluOp::Shr => "shr",
+            IAluOp::And => "and",
+            IAluOp::Or => "or",
+        }
+    }
+
+    pub fn eval(&self, a: i64, b: i64) -> i64 {
+        match self {
+            IAluOp::Add => a.wrapping_add(b),
+            IAluOp::Sub => a.wrapping_sub(b),
+            IAluOp::Mul => a.wrapping_mul(b),
+            IAluOp::Div => {
+                if b == 0 {
+                    0
+                } else {
+                    a.wrapping_div(b)
+                }
+            }
+            IAluOp::Rem => {
+                if b == 0 {
+                    0
+                } else {
+                    a.wrapping_rem(b)
+                }
+            }
+            IAluOp::Min => a.min(b),
+            IAluOp::Max => a.max(b),
+            IAluOp::Shl => a.wrapping_shl(b as u32),
+            IAluOp::Shr => ((a as u64) >> (b as u32 & 63)) as i64,
+            IAluOp::And => a & b,
+            IAluOp::Or => a | b,
+        }
+    }
+}
+
+/// FP32 binary/ternary arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FAluOp {
+    Add,
+    Sub,
+    Mul,
+    Max,
+    Min,
+    /// `div.rn.f32` — modelled as multi-cycle.
+    Div,
+}
+
+impl FAluOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FAluOp::Add => "add",
+            FAluOp::Sub => "sub",
+            FAluOp::Mul => "mul",
+            FAluOp::Max => "max",
+            FAluOp::Min => "min",
+            FAluOp::Div => "div.rn",
+        }
+    }
+
+    pub fn eval(&self, a: f64, b: f64) -> f64 {
+        match self {
+            FAluOp::Add => a + b,
+            FAluOp::Sub => a - b,
+            FAluOp::Mul => a * b,
+            FAluOp::Max => a.max(b),
+            FAluOp::Min => a.min(b),
+            FAluOp::Div => {
+                if b == 0.0 {
+                    0.0
+                } else {
+                    a / b
+                }
+            }
+        }
+    }
+}
+
+/// Special-function unit ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SfuOp {
+    Ex2,
+    Lg2,
+    Rsqrt,
+    Rcp,
+}
+
+impl SfuOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SfuOp::Ex2 => "ex2.approx",
+            SfuOp::Lg2 => "lg2.approx",
+            SfuOp::Rsqrt => "rsqrt.approx",
+            SfuOp::Rcp => "rcp.approx",
+        }
+    }
+
+    pub fn eval(&self, a: f64) -> f64 {
+        match self {
+            SfuOp::Ex2 => a.exp2(),
+            SfuOp::Lg2 => {
+                if a <= 0.0 {
+                    -128.0
+                } else {
+                    a.log2()
+                }
+            }
+            SfuOp::Rsqrt => {
+                if a <= 0.0 {
+                    0.0
+                } else {
+                    1.0 / a.sqrt()
+                }
+            }
+            SfuOp::Rcp => {
+                if a == 0.0 {
+                    0.0
+                } else {
+                    1.0 / a
+                }
+            }
+        }
+    }
+}
+
+/// One PTX instruction (structured form).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    /// `ld.param.u64 %rdN, [name];` — bind a kernel parameter.
+    LdParam { dst: Reg, name: String },
+    /// `mov.<ty> dst, src;` (src may be a special register or immediate).
+    Mov { dst: Reg, src: Operand },
+    /// `cvt.<to>.<from> dst, src;` — width/sign conversion (r32 ↔ r64,
+    /// s32 → f32).
+    Cvt { dst: Reg, src: Operand },
+    /// Integer ALU: `op.s32 dst, a, b;` (or `.s64` when dst is R64).
+    IAlu {
+        op: IAluOp,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+    },
+    /// `mad.lo.s32 dst, a, b, c;` — integer multiply-add (addressing).
+    IMad {
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+        c: Operand,
+    },
+    /// FP ALU: `op.f32 dst, a, b;`
+    FAlu {
+        op: FAluOp,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+    },
+    /// `fma.rn.f32 dst, a, b, c;`
+    Fma {
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+        c: Operand,
+    },
+    /// SFU: `ex2.approx.f32 dst, a;`
+    Sfu { op: SfuOp, dst: Reg, a: Operand },
+    /// `setp.<cmp>.<ty> %p, a, b;`
+    Setp {
+        cmp: CmpOp,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+        /// true → operands are f32.
+        float: bool,
+    },
+    /// `selp.<ty> dst, a, b, %p;` — predicated select.
+    Selp {
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+        pred: Reg,
+    },
+    /// `@%p bra TARGET;` / `@!%p bra TARGET;` / `bra TARGET;`
+    Bra {
+        pred: Option<(Reg, bool)>, // (predicate, negated)
+        target: String,
+    },
+    /// `ld.<space>.f32 dst, [addr+off];`
+    Ld {
+        space: Space,
+        dst: Reg,
+        addr: Reg,
+        offset: i64,
+    },
+    /// `st.<space>.f32 [addr+off], src;`
+    St {
+        space: Space,
+        src: Operand,
+        addr: Reg,
+        offset: i64,
+    },
+    /// `bar.sync 0;`
+    BarSync,
+    /// `ret;`
+    Ret,
+}
+
+/// Instruction class for activity accounting (maps onto
+/// [`crate::gpu::power::Activity`] fields).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstrClass {
+    Fp,
+    Int,
+    Sfu,
+    Ctrl,
+    LoadGlobal,
+    StoreGlobal,
+    LoadShared,
+    StoreShared,
+    Other,
+}
+
+impl Instr {
+    /// Classify for power/timing accounting.
+    pub fn class(&self) -> InstrClass {
+        match self {
+            Instr::FAlu { .. } | Instr::Fma { .. } => InstrClass::Fp,
+            Instr::Setp { float: true, .. } => InstrClass::Fp,
+            Instr::IAlu { .. }
+            | Instr::IMad { .. }
+            | Instr::Setp { float: false, .. }
+            | Instr::Selp { .. }
+            | Instr::Cvt { .. } => InstrClass::Int,
+            Instr::Sfu { .. } => InstrClass::Sfu,
+            Instr::Bra { .. } | Instr::Ret | Instr::BarSync => InstrClass::Ctrl,
+            Instr::Ld {
+                space: Space::Global,
+                ..
+            } => InstrClass::LoadGlobal,
+            Instr::St {
+                space: Space::Global,
+                ..
+            } => InstrClass::StoreGlobal,
+            Instr::Ld {
+                space: Space::Shared,
+                ..
+            } => InstrClass::LoadShared,
+            Instr::St {
+                space: Space::Shared,
+                ..
+            } => InstrClass::StoreShared,
+            Instr::Ld { .. } | Instr::St { .. } => InstrClass::Other,
+            Instr::Mov { .. } | Instr::LdParam { .. } => InstrClass::Other,
+        }
+    }
+
+    /// Whether this instruction ends a basic block.
+    pub fn is_terminator(&self) -> bool {
+        matches!(self, Instr::Bra { .. } | Instr::Ret)
+    }
+}
+
+/// A statement in a kernel body: label or instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    Label(String),
+    Instr(Instr),
+}
+
+/// Kernel parameter declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDecl {
+    pub name: String,
+    /// true → `.u64` pointer; false → `.u32` scalar.
+    pub is_ptr: bool,
+}
+
+/// One `.entry` kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDef {
+    pub name: String,
+    pub params: Vec<ParamDecl>,
+    pub body: Vec<Stmt>,
+}
+
+impl KernelDef {
+    pub fn instructions(&self) -> impl Iterator<Item = &Instr> {
+        self.body.iter().filter_map(|s| match s {
+            Stmt::Instr(i) => Some(i),
+            Stmt::Label(_) => None,
+        })
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+/// A PTX module: header info + kernels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Module {
+    pub version: String,
+    pub target: String,
+    pub kernels: Vec<KernelDef>,
+}
+
+impl Module {
+    pub fn kernel(&self, name: &str) -> Option<&KernelDef> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_instructions() {
+        let r = |i| Reg {
+            class: RegClass::F32,
+            index: i,
+        };
+        let fma = Instr::Fma {
+            dst: r(0),
+            a: Operand::Reg(r(1)),
+            b: Operand::Reg(r(2)),
+            c: Operand::Reg(r(0)),
+        };
+        assert_eq!(fma.class(), InstrClass::Fp);
+        let bra = Instr::Bra {
+            pred: None,
+            target: "L0".into(),
+        };
+        assert_eq!(bra.class(), InstrClass::Ctrl);
+        assert!(bra.is_terminator());
+        let ld = Instr::Ld {
+            space: Space::Global,
+            dst: r(1),
+            addr: Reg {
+                class: RegClass::R64,
+                index: 0,
+            },
+            offset: 4,
+        };
+        assert_eq!(ld.class(), InstrClass::LoadGlobal);
+    }
+
+    #[test]
+    fn cmp_eval() {
+        assert!(CmpOp::Lt.eval_i(1, 2));
+        assert!(!CmpOp::Lt.eval_i(2, 2));
+        assert!(CmpOp::Ge.eval_i(2, 2));
+        assert!(CmpOp::Ne.eval_f(1.0, 2.0));
+    }
+
+    #[test]
+    fn ialu_eval_div_by_zero_safe() {
+        assert_eq!(IAluOp::Div.eval(10, 0), 0);
+        assert_eq!(IAluOp::Rem.eval(10, 3), 1);
+        assert_eq!(IAluOp::Mul.eval(3, 4), 12);
+    }
+
+    #[test]
+    fn display_registers() {
+        let r = Reg {
+            class: RegClass::R64,
+            index: 7,
+        };
+        assert_eq!(r.to_string(), "%rd7");
+        assert_eq!(
+            Operand::Special(SpecialReg::TidX).to_string(),
+            "%tid.x"
+        );
+    }
+
+    #[test]
+    fn special_reg_roundtrip() {
+        for s in [
+            SpecialReg::TidX,
+            SpecialReg::CtaIdX,
+            SpecialReg::NtidX,
+            SpecialReg::NctaIdX,
+        ] {
+            assert_eq!(SpecialReg::parse(s.name()), Some(s));
+        }
+        assert_eq!(SpecialReg::parse("%tid.y"), None);
+    }
+}

@@ -1,0 +1,433 @@
+//! Control-flow graph construction and loop analysis over parsed PTX.
+//!
+//! HyPA's static half works at basic-block granularity: it builds the CFG,
+//! finds natural loops (via dominators + back edges), and tallies a
+//! per-block instruction histogram. Its dynamic half then only needs
+//! per-block *execution counts* to produce exact dynamic instruction
+//! counts (see [`crate::ptx::hypa`]).
+
+use crate::ptx::ast::{Instr, InstrClass, KernelDef, Stmt};
+use std::collections::HashMap;
+
+/// A basic block: a maximal straight-line instruction run.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub id: usize,
+    /// Indices into the kernel's instruction list (labels excluded).
+    pub instrs: Vec<usize>,
+    /// Successor block ids.
+    pub succs: Vec<usize>,
+    /// Predecessor block ids.
+    pub preds: Vec<usize>,
+    /// Per-class instruction histogram for this block.
+    pub histogram: HashMap<InstrClass, usize>,
+}
+
+impl Block {
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+}
+
+/// A natural loop discovered from a back edge `tail → head`.
+#[derive(Debug, Clone)]
+pub struct NaturalLoop {
+    pub head: usize,
+    pub tail: usize,
+    /// All blocks in the loop body (including head and tail).
+    pub body: Vec<usize>,
+    /// Nesting depth (1 = outermost).
+    pub depth: usize,
+}
+
+/// The CFG of one kernel.
+#[derive(Debug, Clone)]
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+    /// Flat instruction list (labels stripped), in program order.
+    pub instrs: Vec<Instr>,
+    /// instruction index → block id.
+    pub block_of_instr: Vec<usize>,
+    pub loops: Vec<NaturalLoop>,
+}
+
+impl Cfg {
+    /// Build the CFG for a kernel.
+    pub fn build(k: &KernelDef) -> Cfg {
+        // Flatten: instruction list + label positions.
+        let mut instrs: Vec<Instr> = Vec::new();
+        let mut label_at: HashMap<String, usize> = HashMap::new(); // label → next instr index
+        for stmt in &k.body {
+            match stmt {
+                Stmt::Label(l) => {
+                    label_at.insert(l.clone(), instrs.len());
+                }
+                Stmt::Instr(i) => instrs.push(i.clone()),
+            }
+        }
+        let n = instrs.len();
+
+        // Leaders: 0, branch targets, instruction after a terminator.
+        let mut is_leader = vec![false; n + 1];
+        if n > 0 {
+            is_leader[0] = true;
+        }
+        for (i, ins) in instrs.iter().enumerate() {
+            if let Instr::Bra { target, .. } = ins {
+                if let Some(&t) = label_at.get(target) {
+                    is_leader[t] = true;
+                }
+                is_leader[i + 1] = true;
+            } else if matches!(ins, Instr::Ret) {
+                is_leader[i + 1] = true;
+            }
+        }
+
+        // Blocks from leader boundaries.
+        let mut blocks: Vec<Block> = Vec::new();
+        let mut block_of_instr = vec![0usize; n];
+        let mut start = 0usize;
+        for i in 1..=n {
+            if i == n || is_leader[i] {
+                let id = blocks.len();
+                let range: Vec<usize> = (start..i).collect();
+                for &j in &range {
+                    block_of_instr[j] = id;
+                }
+                let mut histogram = HashMap::new();
+                for &j in &range {
+                    *histogram.entry(instrs[j].class()).or_insert(0) += 1;
+                }
+                blocks.push(Block {
+                    id,
+                    instrs: range,
+                    succs: Vec::new(),
+                    preds: Vec::new(),
+                    histogram,
+                });
+                start = i;
+            }
+        }
+
+        // Edges.
+        let first_instr_block: HashMap<usize, usize> = blocks
+            .iter()
+            .filter(|b| !b.instrs.is_empty())
+            .map(|b| (b.instrs[0], b.id))
+            .collect();
+        let block_at = |instr_idx: usize| -> Option<usize> {
+            if instr_idx < n {
+                Some(block_of_instr[instr_idx])
+            } else {
+                None
+            }
+        };
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for b in &blocks {
+            let Some(&last) = b.instrs.last() else {
+                continue;
+            };
+            match &instrs[last] {
+                Instr::Ret => {}
+                Instr::Bra { pred, target } => {
+                    if let Some(&t) = label_at.get(target) {
+                        if let Some(tb) = block_at(t).or_else(|| {
+                            // Branch to end-of-function: no block.
+                            first_instr_block.get(&t).copied()
+                        }) {
+                            edges.push((b.id, tb));
+                        }
+                    }
+                    if pred.is_some() {
+                        // Fall through.
+                        if let Some(fb) = block_at(last + 1) {
+                            edges.push((b.id, fb));
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(fb) = block_at(last + 1) {
+                        edges.push((b.id, fb));
+                    }
+                }
+            }
+        }
+        for (a, bid) in edges {
+            if !blocks[a].succs.contains(&bid) {
+                blocks[a].succs.push(bid);
+            }
+            if !blocks[bid].preds.contains(&a) {
+                blocks[bid].preds.push(a);
+            }
+        }
+
+        let loops = find_loops(&blocks);
+        Cfg {
+            blocks,
+            instrs,
+            block_of_instr,
+            loops,
+        }
+    }
+
+    /// Static instruction count.
+    pub fn static_instr_count(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Maximum loop nesting depth in the kernel.
+    pub fn max_loop_depth(&self) -> usize {
+        self.loops.iter().map(|l| l.depth).max().unwrap_or(0)
+    }
+
+    /// Number of conditional branches (static).
+    pub fn branch_count(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::Bra { pred: Some(_), .. }))
+            .count()
+    }
+}
+
+/// Immediate dominators via the iterative algorithm (Cooper/Harvey/Kennedy).
+pub fn dominators(blocks: &[Block]) -> Vec<usize> {
+    let n = blocks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Reverse postorder.
+    let rpo = reverse_postorder(blocks);
+    let mut order_of = vec![usize::MAX; n];
+    for (i, &b) in rpo.iter().enumerate() {
+        order_of[b] = i;
+    }
+    let mut idom = vec![usize::MAX; n];
+    idom[0] = 0;
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in rpo.iter().skip(1) {
+            let mut new_idom = usize::MAX;
+            for &p in &blocks[b].preds {
+                if idom[p] == usize::MAX {
+                    continue;
+                }
+                new_idom = if new_idom == usize::MAX {
+                    p
+                } else {
+                    intersect(&idom, &order_of, p, new_idom)
+                };
+            }
+            if new_idom != usize::MAX && idom[b] != new_idom {
+                idom[b] = new_idom;
+                changed = true;
+            }
+        }
+    }
+    idom
+}
+
+fn intersect(idom: &[usize], order: &[usize], mut a: usize, mut b: usize) -> usize {
+    while a != b {
+        while order[a] > order[b] {
+            a = idom[a];
+        }
+        while order[b] > order[a] {
+            b = idom[b];
+        }
+    }
+    a
+}
+
+fn reverse_postorder(blocks: &[Block]) -> Vec<usize> {
+    let n = blocks.len();
+    let mut visited = vec![false; n];
+    let mut post = Vec::with_capacity(n);
+    // Iterative DFS from entry (block 0).
+    let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
+    visited[0] = true;
+    while let Some(&mut (b, ref mut ci)) = stack.last_mut() {
+        if *ci < blocks[b].succs.len() {
+            let s = blocks[b].succs[*ci];
+            *ci += 1;
+            if !visited[s] {
+                visited[s] = true;
+                stack.push((s, 0));
+            }
+        } else {
+            post.push(b);
+            stack.pop();
+        }
+    }
+    post.reverse();
+    post
+}
+
+/// `a` dominates `b`?
+fn dominates(idom: &[usize], a: usize, mut b: usize) -> bool {
+    loop {
+        if a == b {
+            return true;
+        }
+        if b == 0 || idom[b] == usize::MAX {
+            return false;
+        }
+        let next = idom[b];
+        if next == b {
+            return false;
+        }
+        b = next;
+    }
+}
+
+/// Find natural loops: back edge = edge `t → h` where `h` dominates `t`.
+fn find_loops(blocks: &[Block]) -> Vec<NaturalLoop> {
+    let idom = dominators(blocks);
+    let mut loops = Vec::new();
+    for b in blocks {
+        for &s in &b.succs {
+            if dominates(&idom, s, b.id) {
+                // Collect body: s plus all blocks reaching b.id without s.
+                let mut body = vec![s];
+                let mut stack = vec![b.id];
+                while let Some(x) = stack.pop() {
+                    if body.contains(&x) {
+                        continue;
+                    }
+                    body.push(x);
+                    for &p in &blocks[x].preds {
+                        stack.push(p);
+                    }
+                }
+                body.sort_unstable();
+                loops.push(NaturalLoop {
+                    head: s,
+                    tail: b.id,
+                    body,
+                    depth: 0,
+                });
+            }
+        }
+    }
+    // Nesting depth: loop L's depth = 1 + number of loops strictly
+    // containing it.
+    let snapshot: Vec<(usize, Vec<usize>)> =
+        loops.iter().map(|l| (l.head, l.body.clone())).collect();
+    for l in &mut loops {
+        let mut depth = 1;
+        for (oh, ob) in &snapshot {
+            if *oh != l.head && ob.contains(&l.head) && ob.len() > l.body.len() {
+                depth += 1;
+            }
+        }
+        l.depth = depth;
+    }
+    loops.sort_by_key(|l| l.head);
+    loops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::codegen::{generate, test_conv_launch};
+    use crate::ptx::parser::parse;
+    use crate::ptx::print::kernel_to_text;
+
+    fn conv_cfg(pad: usize) -> Cfg {
+        let k = generate(&test_conv_launch(1, 3, 8, 4, 3, 1, pad));
+        // Analysis runs on parsed text, like the real pipeline.
+        let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+        let m = parse(&text).unwrap();
+        Cfg::build(&m.kernels[0])
+    }
+
+    #[test]
+    fn conv_has_three_nested_loops() {
+        let cfg = conv_cfg(1);
+        assert_eq!(cfg.loops.len(), 3, "ic, ky, kx loops");
+        assert_eq!(cfg.max_loop_depth(), 3);
+        let depths: Vec<usize> = cfg.loops.iter().map(|l| l.depth).collect();
+        let mut sorted = depths.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn blocks_partition_instructions() {
+        let cfg = conv_cfg(1);
+        let total: usize = cfg.blocks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, cfg.instrs.len());
+        // Every instruction belongs to exactly one block.
+        for (i, &b) in cfg.block_of_instr.iter().enumerate() {
+            assert!(cfg.blocks[b].instrs.contains(&i));
+        }
+    }
+
+    #[test]
+    fn edges_are_consistent() {
+        let cfg = conv_cfg(1);
+        for b in &cfg.blocks {
+            for &s in &b.succs {
+                assert!(
+                    cfg.blocks[s].preds.contains(&b.id),
+                    "succ {s} missing pred {}",
+                    b.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_totals_match() {
+        let cfg = conv_cfg(1);
+        let hist_total: usize = cfg
+            .blocks
+            .iter()
+            .flat_map(|b| b.histogram.values())
+            .sum();
+        assert_eq!(hist_total, cfg.instrs.len());
+    }
+
+    #[test]
+    fn unpadded_conv_has_fewer_branches() {
+        assert!(conv_cfg(1).branch_count() > conv_cfg(0).branch_count());
+        // Loop structure identical though.
+        assert_eq!(conv_cfg(0).loops.len(), 3);
+    }
+
+    #[test]
+    fn straight_line_kernel_single_loopless_cfg() {
+        let src = "
+.visible .entry k(
+    .param .u64 out,
+    .param .u32 total
+)
+{
+    ld.param.u64 %rd0, [out];
+    mov.u32 %r0, %tid.x;
+    st.global.f32 [%rd0], 0F00000000;
+    ret;
+}
+";
+        let m = parse(src).unwrap();
+        let cfg = Cfg::build(&m.kernels[0]);
+        assert_eq!(cfg.blocks.len(), 1);
+        assert!(cfg.loops.is_empty());
+    }
+
+    #[test]
+    fn dominators_entry_dominates_all() {
+        let cfg = conv_cfg(1);
+        let idom = dominators(&cfg.blocks);
+        for b in 1..cfg.blocks.len() {
+            // Walk up to entry.
+            assert!(
+                dominates(&idom, 0, b),
+                "entry must dominate block {b}"
+            );
+        }
+    }
+}

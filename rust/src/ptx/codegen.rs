@@ -1,0 +1,975 @@
+//! PTX code generation for CNN layer kernels.
+//!
+//! Stands in for `nvcc`: lowers each [`KernelLaunch`] to a PTX-subset
+//! kernel with the same analysable structure real CUDA conv/GEMM/pool
+//! kernels have — an `idx = ctaid.x*ntid.x + tid.x` guard, index decoding
+//! with div/rem, nested reduction loops whose trip counts come from kernel
+//! *parameters* (so HyPA must recover them by partial evaluation), and
+//! boundary branches that make thread behaviour position-dependent.
+//!
+//! The generator emits AST, which is printed to text and parsed back by
+//! [`crate::ptx::parser`] before any analysis — the analyzers never see
+//! the AST we built, only what survives the text round-trip, just as HyPA
+//! reads `nvcc`'s PTX text.
+
+use crate::cnn::launch::{KernelClass, KernelLaunch, LaunchDims};
+use crate::ptx::ast::*;
+
+/// Register/label allocator + instruction buffer.
+struct Gen {
+    body: Vec<Stmt>,
+    nr: u32,
+    nrd: u32,
+    nf: u32,
+    np: u32,
+    nlabel: u32,
+}
+
+impl Gen {
+    fn new() -> Gen {
+        Gen {
+            body: Vec::new(),
+            nr: 0,
+            nrd: 0,
+            nf: 0,
+            np: 0,
+            nlabel: 0,
+        }
+    }
+
+    fn r(&mut self) -> Reg {
+        self.nr += 1;
+        Reg {
+            class: RegClass::R32,
+            index: self.nr - 1,
+        }
+    }
+    fn rd(&mut self) -> Reg {
+        self.nrd += 1;
+        Reg {
+            class: RegClass::R64,
+            index: self.nrd - 1,
+        }
+    }
+    fn f(&mut self) -> Reg {
+        self.nf += 1;
+        Reg {
+            class: RegClass::F32,
+            index: self.nf - 1,
+        }
+    }
+    fn p(&mut self) -> Reg {
+        self.np += 1;
+        Reg {
+            class: RegClass::Pred,
+            index: self.np - 1,
+        }
+    }
+
+    fn label(&mut self, base: &str) -> String {
+        self.nlabel += 1;
+        format!("${}_{}", base, self.nlabel - 1)
+    }
+
+    fn emit(&mut self, i: Instr) {
+        self.body.push(Stmt::Instr(i));
+    }
+
+    fn place(&mut self, l: &str) {
+        self.body.push(Stmt::Label(l.to_string()));
+    }
+
+    // --- convenience emitters -------------------------------------------
+
+    fn ld_param_ptr(&mut self, name: &str) -> Reg {
+        let dst = self.rd();
+        self.emit(Instr::LdParam {
+            dst,
+            name: name.into(),
+        });
+        dst
+    }
+
+    fn ld_param_u32(&mut self, name: &str) -> Reg {
+        let dst = self.r();
+        self.emit(Instr::LdParam {
+            dst,
+            name: name.into(),
+        });
+        dst
+    }
+
+    fn mov_imm(&mut self, v: i64) -> Reg {
+        let dst = self.r();
+        self.emit(Instr::Mov {
+            dst,
+            src: Operand::Imm(v),
+        });
+        dst
+    }
+
+    fn mov_f(&mut self, v: f64) -> Reg {
+        let dst = self.f();
+        // Normalize to f32 precision: float immediates are printed as f32
+        // bit patterns, so keeping the AST f32-exact makes print→parse a
+        // true round-trip.
+        self.emit(Instr::Mov {
+            dst,
+            src: Operand::FImm(v as f32 as f64),
+        });
+        dst
+    }
+
+    fn ialu(&mut self, op: IAluOp, a: Operand, b: Operand) -> Reg {
+        let dst = self.r();
+        self.emit(Instr::IAlu { op, dst, a, b });
+        dst
+    }
+
+    fn imad(&mut self, a: Operand, b: Operand, c: Operand) -> Reg {
+        let dst = self.r();
+        self.emit(Instr::IMad { dst, a, b, c });
+        dst
+    }
+
+    /// Thread linear index: `ctaid.x * ntid.x + tid.x`.
+    fn thread_idx(&mut self) -> Reg {
+        let ctaid = self.r();
+        self.emit(Instr::Mov {
+            dst: ctaid,
+            src: Operand::Special(SpecialReg::CtaIdX),
+        });
+        let ntid = self.r();
+        self.emit(Instr::Mov {
+            dst: ntid,
+            src: Operand::Special(SpecialReg::NtidX),
+        });
+        let tid = self.r();
+        self.emit(Instr::Mov {
+            dst: tid,
+            src: Operand::Special(SpecialReg::TidX),
+        });
+        self.imad(Operand::Reg(ctaid), Operand::Reg(ntid), Operand::Reg(tid))
+    }
+
+    /// Emit `if (idx >= bound) goto exit_label`.
+    fn guard_ge(&mut self, idx: Reg, bound: Operand, exit_label: &str) {
+        let p = self.p();
+        self.emit(Instr::Setp {
+            cmp: CmpOp::Ge,
+            dst: p,
+            a: Operand::Reg(idx),
+            b: bound,
+            float: false,
+        });
+        self.emit(Instr::Bra {
+            pred: Some((p, false)),
+            target: exit_label.into(),
+        });
+    }
+
+    /// Compute a global f32 element address: `base + 4*off` (off is r32).
+    fn addr(&mut self, base: Reg, off: Reg) -> Reg {
+        let wide = self.rd();
+        self.emit(Instr::Cvt {
+            dst: wide,
+            src: Operand::Reg(off),
+        });
+        let scaled = self.rd();
+        self.emit(Instr::IAlu {
+            op: IAluOp::Shl,
+            dst: scaled,
+            a: Operand::Reg(wide),
+            b: Operand::Imm(2),
+        });
+        let out = self.rd();
+        self.emit(Instr::IAlu {
+            op: IAluOp::Add,
+            dst: out,
+            a: Operand::Reg(base),
+            b: Operand::Reg(scaled),
+        });
+        out
+    }
+
+    fn ld_global(&mut self, base: Reg, off: Reg) -> Reg {
+        let a = self.addr(base, off);
+        let dst = self.f();
+        self.emit(Instr::Ld {
+            space: Space::Global,
+            dst,
+            addr: a,
+            offset: 0,
+        });
+        dst
+    }
+
+    fn st_global(&mut self, base: Reg, off: Reg, v: Reg) {
+        let a = self.addr(base, off);
+        self.emit(Instr::St {
+            space: Space::Global,
+            src: Operand::Reg(v),
+            addr: a,
+            offset: 0,
+        });
+    }
+
+    /// Counted loop header: returns (counter_reg, body_label). Call
+    /// `loop_end` with the same pieces to close it. `bound` must be a
+    /// register holding the trip count (loops run 0..bound).
+    fn loop_start(&mut self, name: &str, zero_init: bool) -> (Reg, String) {
+        let ctr = if zero_init {
+            self.mov_imm(0)
+        } else {
+            self.r()
+        };
+        let body = self.label(name);
+        self.place(&body);
+        (ctr, body)
+    }
+
+    fn loop_end(&mut self, ctr: Reg, bound: Operand, body_label: &str) {
+        let next = self.ialu(IAluOp::Add, Operand::Reg(ctr), Operand::Imm(1));
+        // Write back into the counter register (SSA is not required).
+        self.emit(Instr::Mov {
+            dst: ctr,
+            src: Operand::Reg(next),
+        });
+        let p = self.p();
+        self.emit(Instr::Setp {
+            cmp: CmpOp::Lt,
+            dst: p,
+            a: Operand::Reg(ctr),
+            b: bound,
+            float: false,
+        });
+        self.emit(Instr::Bra {
+            pred: Some((p, false)),
+            target: body_label.into(),
+        });
+    }
+}
+
+fn params(ptrs: &[&str], scalars: &[&str]) -> Vec<ParamDecl> {
+    ptrs.iter()
+        .map(|n| ParamDecl {
+            name: n.to_string(),
+            is_ptr: true,
+        })
+        .chain(scalars.iter().map(|n| ParamDecl {
+            name: n.to_string(),
+            is_ptr: false,
+        }))
+        .collect()
+}
+
+/// Concrete parameter bindings (name → value) for a launch: pointer params
+/// get synthetic, well-separated base addresses (the simulator's memory
+/// model only needs distinct address streams, not real storage).
+pub fn param_values(launch: &KernelLaunch) -> Vec<(String, u64)> {
+    let d = &launch.dims;
+    let total = launch.useful_threads() as u64;
+    let v: Vec<(String, u64)> = vec![
+        ("in".into(), 0x1000_0000),
+        ("w".into(), 0x2000_0000),
+        ("bias".into(), 0x2800_0000),
+        ("in2".into(), 0x1800_0000),
+        ("out".into(), 0x3000_0000),
+        ("total".into(), total),
+        ("in_c".into(), d.in_c as u64),
+        ("in_h".into(), d.in_h as u64),
+        ("in_w".into(), d.in_w as u64),
+        ("out_c".into(), d.out_c as u64),
+        ("out_h".into(), d.out_h as u64),
+        ("out_w".into(), d.out_w as u64),
+        ("kk".into(), d.kernel as u64),
+        ("stride".into(), d.stride as u64),
+        ("pad".into(), d.pad as u64),
+        ("in_f".into(), d.in_f as u64),
+        ("out_f".into(), d.out_f as u64),
+        ("hw".into(), (d.in_h * d.in_w) as u64),
+    ];
+    v
+}
+
+/// Decode `idx` into (n, c, y, x) given (C, H, W) output dims.
+/// Returns (n, c, y, x) registers.
+fn decode_nchw(
+    g: &mut Gen,
+    idx: Reg,
+    c: Reg,
+    h: Reg,
+    w: Reg,
+) -> (Reg, Reg, Reg, Reg) {
+    let x = g.ialu(IAluOp::Rem, Operand::Reg(idx), Operand::Reg(w));
+    let t1 = g.ialu(IAluOp::Div, Operand::Reg(idx), Operand::Reg(w));
+    let y = g.ialu(IAluOp::Rem, Operand::Reg(t1), Operand::Reg(h));
+    let t2 = g.ialu(IAluOp::Div, Operand::Reg(t1), Operand::Reg(h));
+    let cc = g.ialu(IAluOp::Rem, Operand::Reg(t2), Operand::Reg(c));
+    let n = g.ialu(IAluOp::Div, Operand::Reg(t2), Operand::Reg(c));
+    (n, cc, y, x)
+}
+
+/// Direct convolution kernel: one thread per output element; loops
+/// `in_c × k × k` with boundary branches when `pad > 0`.
+fn gen_direct_conv(launch: &KernelLaunch) -> KernelDef {
+    let g = &mut Gen::new();
+    let exit = g.label("EXIT");
+
+    let in_p = g.ld_param_ptr("in");
+    let w_p = g.ld_param_ptr("w");
+    let bias_p = g.ld_param_ptr("bias");
+    let out_p = g.ld_param_ptr("out");
+    let total = g.ld_param_u32("total");
+    let in_c = g.ld_param_u32("in_c");
+    let in_h = g.ld_param_u32("in_h");
+    let in_w = g.ld_param_u32("in_w");
+    let out_c = g.ld_param_u32("out_c");
+    let out_h = g.ld_param_u32("out_h");
+    let out_w = g.ld_param_u32("out_w");
+    let kk = g.ld_param_u32("kk");
+    let stride = g.ld_param_u32("stride");
+    let pad = g.ld_param_u32("pad");
+
+    let idx = g.thread_idx();
+    g.guard_ge(idx, Operand::Reg(total), &exit);
+
+    let (n, oc, oy, ox) = decode_nchw(g, idx, out_c, out_h, out_w);
+
+    // acc = bias[oc]
+    let acc = g.ld_global(bias_p, oc);
+
+    // Base row/col: oy*stride - pad, ox*stride - pad.
+    let y0 = {
+        let t = g.ialu(IAluOp::Mul, Operand::Reg(oy), Operand::Reg(stride));
+        g.ialu(IAluOp::Sub, Operand::Reg(t), Operand::Reg(pad))
+    };
+    let x0 = {
+        let t = g.ialu(IAluOp::Mul, Operand::Reg(ox), Operand::Reg(stride));
+        g.ialu(IAluOp::Sub, Operand::Reg(t), Operand::Reg(pad))
+    };
+
+    let has_boundary = launch.dims.pad > 0;
+
+    let (ic, l_ic) = g.loop_start("IC", true);
+    let (ky, l_ky) = g.loop_start("KY", true);
+    let ky_cont = g.label("KY_CONT");
+
+    // iy = y0 + ky; skip the kx loop if out of range.
+    let iy = g.ialu(IAluOp::Add, Operand::Reg(y0), Operand::Reg(ky));
+    if has_boundary {
+        let p_lo = g.p();
+        g.emit(Instr::Setp {
+            cmp: CmpOp::Lt,
+            dst: p_lo,
+            a: Operand::Reg(iy),
+            b: Operand::Imm(0),
+            float: false,
+        });
+        g.emit(Instr::Bra {
+            pred: Some((p_lo, false)),
+            target: ky_cont.clone(),
+        });
+        let p_hi = g.p();
+        g.emit(Instr::Setp {
+            cmp: CmpOp::Ge,
+            dst: p_hi,
+            a: Operand::Reg(iy),
+            b: Operand::Reg(in_h),
+            float: false,
+        });
+        g.emit(Instr::Bra {
+            pred: Some((p_hi, false)),
+            target: ky_cont.clone(),
+        });
+    }
+
+    let (kx, l_kx) = g.loop_start("KX", true);
+    let kx_cont = g.label("KX_CONT");
+
+    let ix = g.ialu(IAluOp::Add, Operand::Reg(x0), Operand::Reg(kx));
+    if has_boundary {
+        let p_lo = g.p();
+        g.emit(Instr::Setp {
+            cmp: CmpOp::Lt,
+            dst: p_lo,
+            a: Operand::Reg(ix),
+            b: Operand::Imm(0),
+            float: false,
+        });
+        g.emit(Instr::Bra {
+            pred: Some((p_lo, false)),
+            target: kx_cont.clone(),
+        });
+        let p_hi = g.p();
+        g.emit(Instr::Setp {
+            cmp: CmpOp::Ge,
+            dst: p_hi,
+            a: Operand::Reg(ix),
+            b: Operand::Reg(in_w),
+            float: false,
+        });
+        g.emit(Instr::Bra {
+            pred: Some((p_hi, false)),
+            target: kx_cont.clone(),
+        });
+    }
+
+    // in_off = ((n*in_c + ic)*in_h + iy)*in_w + ix
+    let t = g.imad(Operand::Reg(n), Operand::Reg(in_c), Operand::Reg(ic));
+    let t = g.imad(Operand::Reg(t), Operand::Reg(in_h), Operand::Reg(iy));
+    let in_off = g.imad(Operand::Reg(t), Operand::Reg(in_w), Operand::Reg(ix));
+    // w_off = ((oc*in_c + ic)*kk + ky)*kk + kx
+    let t = g.imad(Operand::Reg(oc), Operand::Reg(in_c), Operand::Reg(ic));
+    let t = g.imad(Operand::Reg(t), Operand::Reg(kk), Operand::Reg(ky));
+    let w_off = g.imad(Operand::Reg(t), Operand::Reg(kk), Operand::Reg(kx));
+
+    let v_in = g.ld_global(in_p, in_off);
+    let v_w = g.ld_global(w_p, w_off);
+    g.emit(Instr::Fma {
+        dst: acc,
+        a: Operand::Reg(v_in),
+        b: Operand::Reg(v_w),
+        c: Operand::Reg(acc),
+    });
+
+    g.place(&kx_cont);
+    g.loop_end(kx, Operand::Reg(kk), &l_kx);
+    g.place(&ky_cont);
+    g.loop_end(ky, Operand::Reg(kk), &l_ky);
+    g.loop_end(ic, Operand::Reg(in_c), &l_ic);
+
+    g.st_global(out_p, idx, acc);
+    g.place(&exit);
+    g.emit(Instr::Ret);
+
+    KernelDef {
+        name: launch.name.clone(),
+        params: params(
+            &["in", "w", "bias", "out"],
+            &[
+                "total", "in_c", "in_h", "in_w", "out_c", "out_h", "out_w", "kk",
+                "stride", "pad",
+            ],
+        ),
+        body: std::mem::take(&mut g.body),
+    }
+}
+
+/// Depthwise convolution: like direct conv but channel-local (no ic loop).
+fn gen_depthwise(launch: &KernelLaunch) -> KernelDef {
+    let g = &mut Gen::new();
+    let exit = g.label("EXIT");
+
+    let in_p = g.ld_param_ptr("in");
+    let w_p = g.ld_param_ptr("w");
+    let bias_p = g.ld_param_ptr("bias");
+    let out_p = g.ld_param_ptr("out");
+    let total = g.ld_param_u32("total");
+    let in_c = g.ld_param_u32("in_c");
+    let in_h = g.ld_param_u32("in_h");
+    let in_w = g.ld_param_u32("in_w");
+    let out_h = g.ld_param_u32("out_h");
+    let out_w = g.ld_param_u32("out_w");
+    let kk = g.ld_param_u32("kk");
+    let stride = g.ld_param_u32("stride");
+    let pad = g.ld_param_u32("pad");
+
+    let idx = g.thread_idx();
+    g.guard_ge(idx, Operand::Reg(total), &exit);
+    let (n, c, oy, ox) = decode_nchw(g, idx, in_c, out_h, out_w);
+
+    let acc = g.ld_global(bias_p, c);
+    let y0 = {
+        let t = g.ialu(IAluOp::Mul, Operand::Reg(oy), Operand::Reg(stride));
+        g.ialu(IAluOp::Sub, Operand::Reg(t), Operand::Reg(pad))
+    };
+    let x0 = {
+        let t = g.ialu(IAluOp::Mul, Operand::Reg(ox), Operand::Reg(stride));
+        g.ialu(IAluOp::Sub, Operand::Reg(t), Operand::Reg(pad))
+    };
+
+    let (ky, l_ky) = g.loop_start("KY", true);
+    let ky_cont = g.label("KY_CONT");
+    let iy = g.ialu(IAluOp::Add, Operand::Reg(y0), Operand::Reg(ky));
+    let p_lo = g.p();
+    g.emit(Instr::Setp {
+        cmp: CmpOp::Lt,
+        dst: p_lo,
+        a: Operand::Reg(iy),
+        b: Operand::Imm(0),
+        float: false,
+    });
+    g.emit(Instr::Bra {
+        pred: Some((p_lo, false)),
+        target: ky_cont.clone(),
+    });
+    let p_hi = g.p();
+    g.emit(Instr::Setp {
+        cmp: CmpOp::Ge,
+        dst: p_hi,
+        a: Operand::Reg(iy),
+        b: Operand::Reg(in_h),
+        float: false,
+    });
+    g.emit(Instr::Bra {
+        pred: Some((p_hi, false)),
+        target: ky_cont.clone(),
+    });
+
+    let (kx, l_kx) = g.loop_start("KX", true);
+    let kx_cont = g.label("KX_CONT");
+    let ix = g.ialu(IAluOp::Add, Operand::Reg(x0), Operand::Reg(kx));
+    let q_lo = g.p();
+    g.emit(Instr::Setp {
+        cmp: CmpOp::Lt,
+        dst: q_lo,
+        a: Operand::Reg(ix),
+        b: Operand::Imm(0),
+        float: false,
+    });
+    g.emit(Instr::Bra {
+        pred: Some((q_lo, false)),
+        target: kx_cont.clone(),
+    });
+    let q_hi = g.p();
+    g.emit(Instr::Setp {
+        cmp: CmpOp::Ge,
+        dst: q_hi,
+        a: Operand::Reg(ix),
+        b: Operand::Reg(in_w),
+        float: false,
+    });
+    g.emit(Instr::Bra {
+        pred: Some((q_hi, false)),
+        target: kx_cont.clone(),
+    });
+
+    // in_off = ((n*in_c + c)*in_h + iy)*in_w + ix
+    let t = g.imad(Operand::Reg(n), Operand::Reg(in_c), Operand::Reg(c));
+    let t = g.imad(Operand::Reg(t), Operand::Reg(in_h), Operand::Reg(iy));
+    let in_off = g.imad(Operand::Reg(t), Operand::Reg(in_w), Operand::Reg(ix));
+    // w_off = (c*kk + ky)*kk + kx
+    let t = g.imad(Operand::Reg(c), Operand::Reg(kk), Operand::Reg(ky));
+    let w_off = g.imad(Operand::Reg(t), Operand::Reg(kk), Operand::Reg(kx));
+
+    let v_in = g.ld_global(in_p, in_off);
+    let v_w = g.ld_global(w_p, w_off);
+    g.emit(Instr::Fma {
+        dst: acc,
+        a: Operand::Reg(v_in),
+        b: Operand::Reg(v_w),
+        c: Operand::Reg(acc),
+    });
+
+    g.place(&kx_cont);
+    g.loop_end(kx, Operand::Reg(kk), &l_kx);
+    g.place(&ky_cont);
+    g.loop_end(ky, Operand::Reg(kk), &l_ky);
+
+    g.st_global(out_p, idx, acc);
+    g.place(&exit);
+    g.emit(Instr::Ret);
+
+    KernelDef {
+        name: launch.name.clone(),
+        params: params(
+            &["in", "w", "bias", "out"],
+            &[
+                "total", "in_c", "in_h", "in_w", "out_h", "out_w", "kk", "stride",
+                "pad",
+            ],
+        ),
+        body: std::mem::take(&mut g.body),
+    }
+}
+
+/// Dense layer (GEMV per sample): one thread per (n, out_feature).
+fn gen_gemm(launch: &KernelLaunch) -> KernelDef {
+    let _ = launch;
+    let g = &mut Gen::new();
+    let exit = g.label("EXIT");
+
+    let in_p = g.ld_param_ptr("in");
+    let w_p = g.ld_param_ptr("w");
+    let bias_p = g.ld_param_ptr("bias");
+    let out_p = g.ld_param_ptr("out");
+    let total = g.ld_param_u32("total");
+    let in_f = g.ld_param_u32("in_f");
+    let out_f = g.ld_param_u32("out_f");
+
+    let idx = g.thread_idx();
+    g.guard_ge(idx, Operand::Reg(total), &exit);
+
+    let of = g.ialu(IAluOp::Rem, Operand::Reg(idx), Operand::Reg(out_f));
+    let n = g.ialu(IAluOp::Div, Operand::Reg(idx), Operand::Reg(out_f));
+
+    let acc = g.ld_global(bias_p, of);
+    let in_base = g.ialu(IAluOp::Mul, Operand::Reg(n), Operand::Reg(in_f));
+    let w_base = g.ialu(IAluOp::Mul, Operand::Reg(of), Operand::Reg(in_f));
+
+    let (i, l_i) = g.loop_start("I", true);
+    let in_off = g.ialu(IAluOp::Add, Operand::Reg(in_base), Operand::Reg(i));
+    let w_off = g.ialu(IAluOp::Add, Operand::Reg(w_base), Operand::Reg(i));
+    let v_in = g.ld_global(in_p, in_off);
+    let v_w = g.ld_global(w_p, w_off);
+    g.emit(Instr::Fma {
+        dst: acc,
+        a: Operand::Reg(v_in),
+        b: Operand::Reg(v_w),
+        c: Operand::Reg(acc),
+    });
+    g.loop_end(i, Operand::Reg(in_f), &l_i);
+
+    g.st_global(out_p, idx, acc);
+    g.place(&exit);
+    g.emit(Instr::Ret);
+
+    KernelDef {
+        name: launch.name.clone(),
+        params: params(&["in", "w", "bias", "out"], &["total", "in_f", "out_f"]),
+        body: std::mem::take(&mut g.body),
+    }
+}
+
+/// Pooling: one thread per output element, k×k window (no padding).
+fn gen_pool(launch: &KernelLaunch) -> KernelDef {
+    let g = &mut Gen::new();
+    let exit = g.label("EXIT");
+
+    let in_p = g.ld_param_ptr("in");
+    let out_p = g.ld_param_ptr("out");
+    let total = g.ld_param_u32("total");
+    let in_c = g.ld_param_u32("in_c");
+    let in_h = g.ld_param_u32("in_h");
+    let in_w = g.ld_param_u32("in_w");
+    let out_h = g.ld_param_u32("out_h");
+    let out_w = g.ld_param_u32("out_w");
+    let kk = g.ld_param_u32("kk");
+    let stride = g.ld_param_u32("stride");
+
+    let idx = g.thread_idx();
+    g.guard_ge(idx, Operand::Reg(total), &exit);
+    let (n, c, oy, ox) = decode_nchw(g, idx, in_c, out_h, out_w);
+
+    let acc = g.mov_f(-3.0e38); // max-pool identity; avg uses same loop
+    let y0 = g.ialu(IAluOp::Mul, Operand::Reg(oy), Operand::Reg(stride));
+    let x0 = g.ialu(IAluOp::Mul, Operand::Reg(ox), Operand::Reg(stride));
+
+    let (ky, l_ky) = g.loop_start("KY", true);
+    let iy = g.ialu(IAluOp::Add, Operand::Reg(y0), Operand::Reg(ky));
+    // Clamp rows that fall off the edge (kernel 3 stride 2 overhangs).
+    let iy_max = g.ialu(IAluOp::Sub, Operand::Reg(in_h), Operand::Imm(1));
+    let iy_cl = g.ialu(IAluOp::Min, Operand::Reg(iy), Operand::Reg(iy_max));
+    let (kx, l_kx) = g.loop_start("KX", true);
+    let ix = g.ialu(IAluOp::Add, Operand::Reg(x0), Operand::Reg(kx));
+    let ix_max = g.ialu(IAluOp::Sub, Operand::Reg(in_w), Operand::Imm(1));
+    let ix_cl = g.ialu(IAluOp::Min, Operand::Reg(ix), Operand::Reg(ix_max));
+
+    let t = g.imad(Operand::Reg(n), Operand::Reg(in_c), Operand::Reg(c));
+    let t = g.imad(Operand::Reg(t), Operand::Reg(in_h), Operand::Reg(iy_cl));
+    let off = g.imad(Operand::Reg(t), Operand::Reg(in_w), Operand::Reg(ix_cl));
+    let v = g.ld_global(in_p, off);
+    g.emit(Instr::FAlu {
+        op: FAluOp::Max,
+        dst: acc,
+        a: Operand::Reg(acc),
+        b: Operand::Reg(v),
+    });
+
+    g.loop_end(kx, Operand::Reg(kk), &l_kx);
+    g.loop_end(ky, Operand::Reg(kk), &l_ky);
+
+    g.st_global(out_p, idx, acc);
+    g.place(&exit);
+    g.emit(Instr::Ret);
+
+    KernelDef {
+        name: launch.name.clone(),
+        params: params(
+            &["in", "out"],
+            &[
+                "total", "in_c", "in_h", "in_w", "out_h", "out_w", "kk", "stride",
+            ],
+        ),
+        body: std::mem::take(&mut g.body),
+    }
+}
+
+/// Global average pool: one thread per (n, channel), loop over H·W.
+fn gen_global_pool(launch: &KernelLaunch) -> KernelDef {
+    let g = &mut Gen::new();
+    let exit = g.label("EXIT");
+
+    let in_p = g.ld_param_ptr("in");
+    let out_p = g.ld_param_ptr("out");
+    let total = g.ld_param_u32("total");
+    let hw = g.ld_param_u32("hw");
+
+    let idx = g.thread_idx();
+    g.guard_ge(idx, Operand::Reg(total), &exit);
+
+    let acc = g.mov_f(0.0);
+    let base = g.ialu(IAluOp::Mul, Operand::Reg(idx), Operand::Reg(hw));
+    let (i, l_i) = g.loop_start("I", true);
+    let off = g.ialu(IAluOp::Add, Operand::Reg(base), Operand::Reg(i));
+    let v = g.ld_global(in_p, off);
+    g.emit(Instr::FAlu {
+        op: FAluOp::Add,
+        dst: acc,
+        a: Operand::Reg(acc),
+        b: Operand::Reg(v),
+    });
+    g.loop_end(i, Operand::Reg(hw), &l_i);
+
+    // acc *= 1/hw  (rcp on the SFU, like fast-math nvcc output)
+    let hw_f = g.f();
+    g.emit(Instr::Cvt {
+        dst: hw_f,
+        src: Operand::Reg(hw),
+    });
+    let inv = g.f();
+    g.emit(Instr::Sfu {
+        op: SfuOp::Rcp,
+        dst: inv,
+        a: Operand::Reg(hw_f),
+    });
+    g.emit(Instr::FAlu {
+        op: FAluOp::Mul,
+        dst: acc,
+        a: Operand::Reg(acc),
+        b: Operand::Reg(inv),
+    });
+
+    g.st_global(out_p, idx, acc);
+    g.place(&exit);
+    g.emit(Instr::Ret);
+
+    KernelDef {
+        name: launch.name.clone(),
+        params: params(&["in", "out"], &["total", "hw"]),
+        body: std::mem::take(&mut g.body),
+    }
+}
+
+/// Elementwise kernels: relu (1 operand), residual add (2 operands).
+/// BatchNorm folds to scale+shift which we model as fma with constants.
+fn gen_elementwise(launch: &KernelLaunch) -> KernelDef {
+    let two = launch.dims.operands == 2;
+    let g = &mut Gen::new();
+    let exit = g.label("EXIT");
+
+    let in_p = g.ld_param_ptr("in");
+    let in2_p = if two { Some(g.ld_param_ptr("in2")) } else { None };
+    let out_p = g.ld_param_ptr("out");
+    let total = g.ld_param_u32("total");
+
+    let idx = g.thread_idx();
+    g.guard_ge(idx, Operand::Reg(total), &exit);
+
+    let a = g.ld_global(in_p, idx);
+    let res = if let Some(p2) = in2_p {
+        let b = g.ld_global(p2, idx);
+        let r = g.f();
+        g.emit(Instr::FAlu {
+            op: FAluOp::Add,
+            dst: r,
+            a: Operand::Reg(a),
+            b: Operand::Reg(b),
+        });
+        r
+    } else {
+        // relu: max(a, 0)
+        let zero = g.mov_f(0.0);
+        let r = g.f();
+        g.emit(Instr::FAlu {
+            op: FAluOp::Max,
+            dst: r,
+            a: Operand::Reg(a),
+            b: Operand::Reg(zero),
+        });
+        r
+    };
+    g.st_global(out_p, idx, res);
+    g.place(&exit);
+    g.emit(Instr::Ret);
+
+    let ptrs: Vec<&str> = if two {
+        vec!["in", "in2", "out"]
+    } else {
+        vec!["in", "out"]
+    };
+    KernelDef {
+        name: launch.name.clone(),
+        params: params(&ptrs, &["total"]),
+        body: std::mem::take(&mut g.body),
+    }
+}
+
+/// Generate the kernel for one launch.
+pub fn generate(launch: &KernelLaunch) -> KernelDef {
+    match launch.class {
+        KernelClass::DirectConv => gen_direct_conv(launch),
+        KernelClass::DepthwiseConv => gen_depthwise(launch),
+        KernelClass::Gemm => gen_gemm(launch),
+        KernelClass::Pool => gen_pool(launch),
+        KernelClass::GlobalPool => gen_global_pool(launch),
+        KernelClass::Elementwise => gen_elementwise(launch),
+    }
+}
+
+/// Generate a whole module for a list of launches.
+pub fn generate_module(launches: &[KernelLaunch]) -> Module {
+    Module {
+        version: "7.0".into(),
+        target: "sm_70".into(),
+        kernels: launches.iter().map(generate).collect(),
+    }
+}
+
+/// Convenience: dims for a standalone conv test kernel.
+pub fn test_conv_launch(
+    batch: usize,
+    in_c: usize,
+    hw: usize,
+    out_c: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+) -> KernelLaunch {
+    use crate::gpu::occupancy::KernelResources;
+    let out_hw = (hw + 2 * pad - kernel) / stride + 1;
+    let dims = LaunchDims {
+        batch,
+        in_c,
+        in_h: hw,
+        in_w: hw,
+        out_c,
+        out_h: out_hw,
+        out_w: out_hw,
+        kernel,
+        stride,
+        pad,
+        ..Default::default()
+    };
+    let useful = batch * out_c * out_hw * out_hw;
+    KernelLaunch {
+        name: "test_conv".into(),
+        class: KernelClass::DirectConv,
+        dims,
+        grid_blocks: useful.div_ceil(256),
+        resources: KernelResources {
+            threads_per_block: 256,
+            regs_per_thread: 40,
+            smem_per_block: 0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{launch::decompose, zoo};
+    use crate::ptx::print::to_text;
+
+    #[test]
+    fn conv_kernel_has_expected_structure() {
+        let l = test_conv_launch(1, 3, 8, 4, 3, 1, 1);
+        let k = generate(&l);
+        let text = crate::ptx::print::kernel_to_text(&k);
+        // Thread-guard, three loops, boundary branches, fma.
+        assert!(text.contains("%ctaid.x"));
+        assert!(text.contains("setp.ge.s32"));
+        assert!(text.contains("$IC_"));
+        assert!(text.contains("$KY_"));
+        assert!(text.contains("$KX_"));
+        assert!(text.contains("fma.rn.f32"));
+        assert!(text.contains("ld.global.f32"));
+        assert!(text.contains("st.global.f32"));
+    }
+
+    #[test]
+    fn unpadded_conv_has_no_boundary_branches() {
+        let padded = generate(&test_conv_launch(1, 3, 8, 4, 3, 1, 1));
+        let unpadded = generate(&test_conv_launch(1, 3, 8, 4, 3, 1, 0));
+        let count_bra = |k: &KernelDef| {
+            k.instructions()
+                .filter(|i| matches!(i, Instr::Bra { .. }))
+                .count()
+        };
+        assert!(count_bra(&padded) > count_bra(&unpadded) + 3);
+    }
+
+    #[test]
+    fn whole_zoo_generates() {
+        for net in zoo::zoo() {
+            let launches = decompose(&net, 1).unwrap();
+            let module = generate_module(&launches);
+            assert_eq!(module.kernels.len(), launches.len());
+            let text = to_text(&module);
+            assert!(text.len() > 1000);
+        }
+    }
+
+    #[test]
+    fn param_values_cover_kernel_params() {
+        let net = zoo::lenet5();
+        let launches = decompose(&net, 1).unwrap();
+        for l in &launches {
+            let k = generate(l);
+            let vals = param_values(l);
+            for p in &k.params {
+                assert!(
+                    vals.iter().any(|(n, _)| n == &p.name),
+                    "{}: missing param value {}",
+                    l.name,
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn labels_unique_within_kernel() {
+        let k = generate(&test_conv_launch(1, 8, 16, 8, 3, 1, 1));
+        let mut labels: Vec<&String> = k
+            .body
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::Label(l) => Some(l),
+                _ => None,
+            })
+            .collect();
+        let n = labels.len();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), n);
+    }
+
+    #[test]
+    fn branch_targets_resolve() {
+        for net in zoo::zoo().into_iter().take(3) {
+            let launches = decompose(&net, 1).unwrap();
+            for l in &launches {
+                let k = generate(l);
+                let labels: std::collections::HashSet<&str> = k
+                    .body
+                    .iter()
+                    .filter_map(|s| match s {
+                        Stmt::Label(l) => Some(l.as_str()),
+                        _ => None,
+                    })
+                    .collect();
+                for i in k.instructions() {
+                    if let Instr::Bra { target, .. } = i {
+                        assert!(
+                            labels.contains(target.as_str()),
+                            "{}: dangling target {target}",
+                            k.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,594 @@
+//! HyPA — the Hybrid PTX Analyzer.
+//!
+//! The paper's tool "determine[s] the exact number of executed instructions
+//! in the PTX without running the code on physical devices. To achieve
+//! this, we simulate critical code sections such as loops or if-statements
+//! to construct an accurate control flow graph that encompasses all
+//! necessary instructions" (§II).
+//!
+//! Implementation = static × dynamic hybrid:
+//!
+//! 1. **Static half**: build the CFG ([`crate::ptx::cfg`]), tally a
+//!    per-block instruction histogram, and compute the *control slice* —
+//!    the registers/instructions that (transitively) feed branch
+//!    conditions.
+//! 2. **Dynamic half**: for a small stratified sample of threads,
+//!    interpret *only* the control slice (loop counters, index decoding,
+//!    boundary tests — no FP math, no memory) to obtain exact per-block
+//!    visit counts for those threads.
+//! 3. **Extrapolate**: dynamic instruction count = Σ_blocks visits ×
+//!    histogram, scaled from the sample strata to the full launch (plus
+//!    the exact guard-only cost of the padded tail threads).
+//!
+//! This is why HyPA is orders of magnitude faster than the simulator (see
+//! `benches/hypa_speed.rs`): it executes ~⅓ of the instructions of ~1% of
+//! the threads and touches no memory model, yet recovers instruction
+//! counts that match full simulation almost exactly.
+
+use crate::cnn::launch::KernelLaunch;
+use crate::ptx::ast::{Instr, InstrClass, KernelDef, Operand, Reg};
+use crate::ptx::cfg::Cfg;
+use crate::ptx::codegen::param_values;
+use crate::ptx::interp::{env_for_thread, Code, NullMem, Thread};
+use std::collections::HashSet;
+
+/// Dynamic instruction counts by class, for a whole launch.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct InstrMix {
+    pub fp: f64,
+    pub int: f64,
+    pub sfu: f64,
+    pub ctrl: f64,
+    pub load_global: f64,
+    pub store_global: f64,
+    pub load_shared: f64,
+    pub store_shared: f64,
+    pub other: f64,
+}
+
+impl InstrMix {
+    pub fn total(&self) -> f64 {
+        self.fp
+            + self.int
+            + self.sfu
+            + self.ctrl
+            + self.load_global
+            + self.store_global
+            + self.load_shared
+            + self.store_shared
+            + self.other
+    }
+
+    pub fn add_class(&mut self, class: InstrClass, n: f64) {
+        match class {
+            InstrClass::Fp => self.fp += n,
+            InstrClass::Int => self.int += n,
+            InstrClass::Sfu => self.sfu += n,
+            InstrClass::Ctrl => self.ctrl += n,
+            InstrClass::LoadGlobal => self.load_global += n,
+            InstrClass::StoreGlobal => self.store_global += n,
+            InstrClass::LoadShared => self.load_shared += n,
+            InstrClass::StoreShared => self.store_shared += n,
+            InstrClass::Other => self.other += n,
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> InstrMix {
+        InstrMix {
+            fp: self.fp * s,
+            int: self.int * s,
+            sfu: self.sfu * s,
+            ctrl: self.ctrl * s,
+            load_global: self.load_global * s,
+            store_global: self.store_global * s,
+            load_shared: self.load_shared * s,
+            store_shared: self.store_shared * s,
+            other: self.other * s,
+        }
+    }
+
+    pub fn accumulate(&mut self, o: &InstrMix) {
+        self.fp += o.fp;
+        self.int += o.int;
+        self.sfu += o.sfu;
+        self.ctrl += o.ctrl;
+        self.load_global += o.load_global;
+        self.store_global += o.store_global;
+        self.load_shared += o.load_shared;
+        self.store_shared += o.store_shared;
+        self.other += o.other;
+    }
+}
+
+/// Static kernel-structure features (part of the ML feature vector).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticFeatures {
+    pub static_instrs: usize,
+    pub basic_blocks: usize,
+    pub loop_count: usize,
+    pub max_loop_depth: usize,
+    pub cond_branches: usize,
+    /// Fraction of static instructions in the control slice.
+    pub slice_fraction: f64,
+}
+
+/// Full HyPA result for one kernel launch.
+#[derive(Debug, Clone)]
+pub struct HypaResult {
+    pub kernel: String,
+    pub mix: InstrMix,
+    pub static_features: StaticFeatures,
+    /// Threads actually interpreted.
+    pub sampled_threads: usize,
+}
+
+/// Compute the control slice: instruction indices whose execution can
+/// affect control flow. Conservative reg-level taint fixpoint.
+pub fn control_slice(code: &Code) -> Vec<bool> {
+    let mut relevant: HashSet<Reg> = HashSet::new();
+    // Seed: predicate registers used by branches.
+    for ins in &code.instrs {
+        if let Instr::Bra {
+            pred: Some((p, _)), ..
+        } = ins
+        {
+            relevant.insert(*p);
+        }
+    }
+    let op_reg = |o: &Operand| -> Option<Reg> {
+        match o {
+            Operand::Reg(r) => Some(*r),
+            _ => None,
+        }
+    };
+    let mut in_slice = vec![false; code.instrs.len()];
+    loop {
+        let mut changed = false;
+        for (i, ins) in code.instrs.iter().enumerate() {
+            if in_slice[i] {
+                continue;
+            }
+            let (dst, srcs): (Option<Reg>, Vec<Reg>) = match ins {
+                Instr::LdParam { dst, .. } => (Some(*dst), vec![]),
+                Instr::Mov { dst, src } | Instr::Cvt { dst, src } => {
+                    (Some(*dst), op_reg(src).into_iter().collect())
+                }
+                Instr::IAlu { dst, a, b, .. }
+                | Instr::FAlu { dst, a, b, .. }
+                | Instr::Setp { dst, a, b, .. } => (
+                    Some(*dst),
+                    [op_reg(a), op_reg(b)].into_iter().flatten().collect(),
+                ),
+                Instr::IMad { dst, a, b, c } | Instr::Fma { dst, a, b, c } => (
+                    Some(*dst),
+                    [op_reg(a), op_reg(b), op_reg(c)]
+                        .into_iter()
+                        .flatten()
+                        .collect(),
+                ),
+                Instr::Sfu { dst, a, .. } => {
+                    (Some(*dst), op_reg(a).into_iter().collect())
+                }
+                Instr::Selp { dst, a, b, pred } => (
+                    Some(*dst),
+                    [op_reg(a), op_reg(b), Some(*pred)]
+                        .into_iter()
+                        .flatten()
+                        .collect(),
+                ),
+                Instr::Ld { dst, addr, .. } => (Some(*dst), vec![*addr]),
+                // Control & effects.
+                Instr::Bra { .. } | Instr::Ret | Instr::BarSync => {
+                    in_slice[i] = true;
+                    changed = true;
+                    continue;
+                }
+                Instr::St { .. } => (None, vec![]),
+            };
+            if let Some(d) = dst {
+                if relevant.contains(&d) {
+                    in_slice[i] = true;
+                    changed = true;
+                    for s in srcs {
+                        relevant.insert(s);
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    in_slice
+}
+
+/// Per-thread block-visit profile obtained by slice interpretation.
+fn thread_block_visits(
+    code: &Code,
+    cfg: &Cfg,
+    slice: &[bool],
+    params: &[(String, u64)],
+    ctaid: u32,
+    tid: u32,
+    ntid: u32,
+    nctaid: u32,
+    budget: usize,
+) -> Option<Vec<u32>> {
+    let env = env_for_thread(params, ctaid, tid, ntid, nctaid);
+    let mut t = Thread::new(code);
+    let mut mem = NullMem;
+    let mut visits = vec![0u32; cfg.blocks.len()];
+    // Block leader set: first instruction index → block id.
+    let mut steps = 0usize;
+    while !t.done && t.pc < code.len() {
+        let pc = t.pc;
+        let b = cfg.block_of_instr[pc];
+        if cfg.blocks[b].instrs.first() == Some(&pc) {
+            visits[b] += 1;
+        }
+        if slice[pc] {
+            t.step(code, &env, &mut mem);
+        } else {
+            // Non-slice instructions cannot change control flow — skip the
+            // evaluation, just advance.
+            t.pc = pc + 1;
+        }
+        steps += 1;
+        if steps > budget {
+            return None;
+        }
+    }
+    Some(visits)
+}
+
+/// Configuration for the sampling strategy.
+#[derive(Debug, Clone, Copy)]
+pub struct HypaConfig {
+    /// Max threads to interpret per launch.
+    pub max_samples: usize,
+    /// Per-thread step budget (slice instructions).
+    pub thread_budget: usize,
+}
+
+impl Default for HypaConfig {
+    fn default() -> Self {
+        HypaConfig {
+            max_samples: 48,
+            thread_budget: 80_000_000,
+        }
+    }
+}
+
+/// Analyze one generated + parsed kernel for a given launch.
+pub fn analyze(k: &KernelDef, launch: &KernelLaunch, cfg_opts: HypaConfig) -> HypaResult {
+    let cfg = Cfg::build(k);
+    let code = Code::build(k);
+    let slice = control_slice(&code);
+    let params = param_values(launch);
+
+    let ntid = launch.resources.threads_per_block as u32;
+    let nctaid = launch.grid_blocks as u32;
+    let useful = launch.useful_threads();
+    let total = launch.total_threads();
+
+    // Stratified sample of useful threads: K evenly-spaced strata with a
+    // deterministic pseudo-jitter to avoid aliasing with periodic boundary
+    // structure. Each sample's visit vector is weighted by its stratum
+    // size.
+    let k_samples = cfg_opts.max_samples.min(useful).max(1);
+    let mut visit_sum = vec![0f64; cfg.blocks.len()];
+    let mut sampled = 0usize;
+    // Adaptive early exit (§Perf): most kernels have only a handful of
+    // distinct per-thread behaviours (interior vs boundary). Once several
+    // consecutive samples repeat already-seen visit vectors, the stratum
+    // mean has converged; remaining strata are extrapolated from the
+    // sample mean instead of interpreted.
+    const CONVERGE_MIN_SAMPLES: usize = 12;
+    const CONVERGE_STREAK: usize = 6;
+    let mut seen: std::collections::HashSet<Vec<u32>> = std::collections::HashSet::new();
+    let mut dup_streak = 0usize;
+    let mut mean_acc = vec![0f64; cfg.blocks.len()];
+    let mut weight_done = 0f64;
+    for s in 0..k_samples {
+        let lo = s * useful / k_samples;
+        let hi = ((s + 1) * useful / k_samples).max(lo + 1);
+        let jitter = (s.wrapping_mul(0x9E37_79B9) >> 7) % (hi - lo);
+        let t_lin = (lo + jitter).min(useful - 1);
+        let (ctaid, tid) = ((t_lin / ntid as usize) as u32, (t_lin % ntid as usize) as u32);
+        if let Some(v) = thread_block_visits(
+            &code,
+            &cfg,
+            &slice,
+            &params,
+            ctaid,
+            tid,
+            ntid,
+            nctaid,
+            cfg_opts.thread_budget,
+        ) {
+            let weight = (hi - lo) as f64;
+            for ((acc, m), x) in visit_sum.iter_mut().zip(&mut mean_acc).zip(&v) {
+                *acc += *x as f64 * weight;
+                *m += *x as f64;
+            }
+            weight_done += weight;
+            sampled += 1;
+            if seen.insert(v) {
+                dup_streak = 0;
+            } else {
+                dup_streak += 1;
+            }
+            if sampled >= CONVERGE_MIN_SAMPLES && dup_streak >= CONVERGE_STREAK {
+                // Extrapolate the remaining strata from the sample mean.
+                let weight_rest = useful as f64 - weight_done;
+                if weight_rest > 0.0 {
+                    for (acc, m) in visit_sum.iter_mut().zip(&mean_acc) {
+                        *acc += m / sampled as f64 * weight_rest;
+                    }
+                }
+                break;
+            }
+        }
+    }
+
+    // Padded tail threads run the guard path exactly once.
+    let pad_threads = total - useful;
+    let mut pad_visits = vec![0f64; cfg.blocks.len()];
+    if pad_threads > 0 {
+        if let Some(v) = thread_block_visits(
+            &code,
+            &cfg,
+            &slice,
+            &params,
+            (total - 1) as u32 / ntid,
+            (total - 1) as u32 % ntid,
+            ntid,
+            nctaid,
+            cfg_opts.thread_budget,
+        ) {
+            for (acc, x) in pad_visits.iter_mut().zip(&v) {
+                *acc = *x as f64 * pad_threads as f64;
+            }
+        }
+    }
+
+    // Mix = Σ_blocks (useful visits + pad visits) × histogram.
+    let mut mix = InstrMix::default();
+    for b in &cfg.blocks {
+        let visits = visit_sum[b.id] + pad_visits[b.id];
+        if visits == 0.0 {
+            continue;
+        }
+        for (&class, &count) in &b.histogram {
+            mix.add_class(class, visits * count as f64);
+        }
+    }
+
+    let slice_count = slice.iter().filter(|&&s| s).count();
+    HypaResult {
+        kernel: k.name.clone(),
+        mix,
+        static_features: StaticFeatures {
+            static_instrs: cfg.static_instr_count(),
+            basic_blocks: cfg.blocks.len(),
+            loop_count: cfg.loops.len(),
+            max_loop_depth: cfg.max_loop_depth(),
+            cond_branches: cfg.branch_count(),
+            slice_fraction: slice_count as f64 / cfg.static_instr_count().max(1) as f64,
+        },
+        sampled_threads: sampled,
+    }
+}
+
+/// Exact (exhaustive) per-launch mix: interpret *every* thread's control
+/// slice. Used by tests and the HyPA accuracy benchmark as ground truth —
+/// O(threads), so only call on small launches.
+pub fn analyze_exact(k: &KernelDef, launch: &KernelLaunch) -> InstrMix {
+    let cfg = Cfg::build(k);
+    let code = Code::build(k);
+    let slice = control_slice(&code);
+    let params = param_values(launch);
+    let ntid = launch.resources.threads_per_block as u32;
+    let nctaid = launch.grid_blocks as u32;
+    let total = launch.total_threads();
+
+    let mut mix = InstrMix::default();
+    for t_lin in 0..total {
+        let v = thread_block_visits(
+            &code,
+            &cfg,
+            &slice,
+            &params,
+            (t_lin / ntid as usize) as u32,
+            (t_lin % ntid as usize) as u32,
+            ntid,
+            nctaid,
+            usize::MAX,
+        )
+        .unwrap();
+        for b in &cfg.blocks {
+            let visits = v[b.id] as f64;
+            if visits == 0.0 {
+                continue;
+            }
+            for (&class, &count) in &b.histogram {
+                mix.add_class(class, visits * count as f64);
+            }
+        }
+    }
+    mix
+}
+
+/// Aggregate HyPA features over a whole network's launches (the ML
+/// feature extractor consumes this).
+#[derive(Debug, Clone, Default)]
+pub struct NetworkMix {
+    pub mix: InstrMix,
+    pub kernels: usize,
+    pub max_loop_depth: usize,
+    pub mean_slice_fraction: f64,
+}
+
+/// Run HyPA over every kernel of a module (one entry per launch).
+pub fn analyze_network(
+    kernels: &[KernelDef],
+    launches: &[KernelLaunch],
+    cfg: HypaConfig,
+) -> NetworkMix {
+    assert_eq!(kernels.len(), launches.len());
+    let mut out = NetworkMix {
+        kernels: kernels.len(),
+        ..Default::default()
+    };
+    let mut slice_sum = 0.0;
+    for (k, l) in kernels.iter().zip(launches) {
+        let r = analyze(k, l, cfg);
+        out.mix.accumulate(&r.mix);
+        out.max_loop_depth = out.max_loop_depth.max(r.static_features.max_loop_depth);
+        slice_sum += r.static_features.slice_fraction;
+    }
+    out.mean_slice_fraction = slice_sum / kernels.len().max(1) as f64;
+    out
+}
+
+/// Relative error between two mixes' totals.
+pub fn total_error(a: &InstrMix, b: &InstrMix) -> f64 {
+    let (ta, tb) = (a.total(), b.total());
+    if tb == 0.0 {
+        return if ta == 0.0 { 0.0 } else { 1.0 };
+    }
+    (ta - tb).abs() / tb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::codegen::{generate, test_conv_launch};
+    use crate::ptx::parser::parse;
+    use crate::ptx::print::kernel_to_text;
+
+    fn parsed(launch: &KernelLaunch) -> KernelDef {
+        let k = generate(launch);
+        let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+        parse(&text).unwrap().kernels.remove(0)
+    }
+
+    #[test]
+    fn slice_excludes_fp_and_stores() {
+        let launch = test_conv_launch(1, 3, 8, 4, 3, 1, 1);
+        let k = parsed(&launch);
+        let code = Code::build(&k);
+        let slice = control_slice(&code);
+        for (i, ins) in code.instrs.iter().enumerate() {
+            if matches!(ins, Instr::Fma { .. } | Instr::St { .. }) {
+                assert!(!slice[i], "fp/store must be outside the slice: {ins:?}");
+            }
+            if matches!(ins, Instr::Bra { .. } | Instr::Setp { .. }) {
+                assert!(slice[i], "control must be in the slice");
+            }
+        }
+        let frac =
+            slice.iter().filter(|&&s| s).count() as f64 / code.instrs.len() as f64;
+        assert!(frac > 0.2 && frac < 0.8, "slice fraction {frac}");
+    }
+
+    #[test]
+    fn sampled_matches_exact_on_small_conv() {
+        let launch = test_conv_launch(1, 3, 8, 4, 3, 1, 1); // 256 threads
+        let k = parsed(&launch);
+        let exact = analyze_exact(&k, &launch);
+        let approx = analyze(&k, &launch, HypaConfig::default());
+        let err = total_error(&approx.mix, &exact);
+        assert!(
+            err < 0.02,
+            "sampled mix off by {:.3}% (exact {} vs approx {})",
+            err * 100.0,
+            exact.total(),
+            approx.mix.total()
+        );
+    }
+
+    #[test]
+    fn exact_when_sample_covers_all_threads() {
+        let launch = test_conv_launch(1, 2, 6, 2, 3, 1, 0); // 32 threads
+        let k = parsed(&launch);
+        let exact = analyze_exact(&k, &launch);
+        let approx = analyze(
+            &k,
+            &launch,
+            HypaConfig {
+                max_samples: 10_000,
+                thread_budget: usize::MAX,
+            },
+        );
+        assert!(
+            total_error(&approx.mix, &exact) < 1e-9,
+            "full sampling must be exact"
+        );
+    }
+
+    #[test]
+    fn unpadded_conv_fp_count_closed_form() {
+        // No boundary branches → every useful thread does inC*k*k fmas +
+        // 1 store; fp = useful * (inC*k*k) (+ none from pool etc).
+        let launch = test_conv_launch(1, 4, 10, 4, 3, 1, 0);
+        let k = parsed(&launch);
+        let r = analyze(&k, &launch, HypaConfig::default());
+        let useful = launch.useful_threads() as f64;
+        let expect_fp = useful * (4.0 * 9.0);
+        let rel = (r.mix.fp - expect_fp).abs() / expect_fp;
+        assert!(rel < 1e-9, "fp {} vs expected {}", r.mix.fp, expect_fp);
+        // Loads: 2 per fma (input + weight) + 1 bias.
+        let expect_ld = useful * (2.0 * 36.0 + 1.0);
+        let rel = (r.mix.load_global - expect_ld).abs() / expect_ld;
+        assert!(rel < 1e-9);
+    }
+
+    #[test]
+    fn static_features_sane() {
+        let launch = test_conv_launch(1, 3, 8, 4, 3, 1, 1);
+        let k = parsed(&launch);
+        let r = analyze(&k, &launch, HypaConfig::default());
+        let f = r.static_features;
+        assert_eq!(f.loop_count, 3);
+        assert_eq!(f.max_loop_depth, 3);
+        assert!(f.cond_branches >= 7); // guard + 4 boundary + 3 loop ends
+        assert!(f.basic_blocks > 5);
+        assert!(f.slice_fraction > 0.0 && f.slice_fraction < 1.0);
+    }
+
+    #[test]
+    fn prop_sampling_error_small_across_shapes() {
+        crate::util::prop::check_named("hypa sampling error", 12, |rng| {
+            let in_c = rng.int_range(1, 6);
+            let hw = rng.int_range(5, 12);
+            let out_c = rng.int_range(1, 5);
+            let pad = rng.below(2);
+            let launch = test_conv_launch(1, in_c, hw, out_c, 3, 1, pad);
+            let k = parsed(&launch);
+            let exact = analyze_exact(&k, &launch);
+            let approx = analyze(&k, &launch, HypaConfig::default());
+            let err = total_error(&approx.mix, &exact);
+            crate::prop_assert!(
+                err < 0.05,
+                "err {:.4} for in_c={in_c} hw={hw} out_c={out_c} pad={pad}",
+                err
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn network_aggregation() {
+        use crate::cnn::{launch::decompose, zoo};
+        let net = zoo::lenet5();
+        let launches = decompose(&net, 1).unwrap();
+        let module = crate::ptx::codegen::generate_module(&launches);
+        let text = crate::ptx::print::to_text(&module);
+        let parsed = parse(&text).unwrap();
+        let agg = analyze_network(&parsed.kernels, &launches, HypaConfig::default());
+        assert_eq!(agg.kernels, launches.len());
+        assert!(agg.mix.fp > 1e5, "lenet has ~0.4M MACs: {}", agg.mix.fp);
+        assert_eq!(agg.max_loop_depth, 3);
+    }
+}

@@ -1,0 +1,564 @@
+//! Scalar PTX interpreter core.
+//!
+//! One thread's architectural state + a `step` function, shared by the two
+//! dynamic analyses built on top of it:
+//!
+//! * [`crate::ptx::hypa`] interprets only the *control slice* of sampled
+//!   threads (no memory, no FP) to recover per-block execution counts;
+//! * [`crate::sim`] interprets full warps in lockstep (all instructions,
+//!   with a memory hook for coalescing/cache modelling).
+//!
+//! Branch targets are pre-resolved to instruction indices by [`Code`], so
+//! stepping is an array walk, not a label lookup.
+
+use crate::ptx::ast::*;
+use std::collections::HashMap;
+
+/// Pre-processed kernel code: flat instruction array + resolved branch
+/// targets (instruction indices).
+#[derive(Debug, Clone)]
+pub struct Code {
+    pub instrs: Vec<Instr>,
+    /// For each instruction: branch target as instruction index (only for
+    /// `Bra`), usize::MAX otherwise.
+    pub bra_target: Vec<usize>,
+    /// Register file sizes needed (max index + 1 per class).
+    pub nr: usize,
+    pub nrd: usize,
+    pub nf: usize,
+    pub np: usize,
+}
+
+fn bump(max: &mut usize, r: &Reg) {
+    *max = (*max).max(r.index as usize + 1);
+}
+
+impl Code {
+    pub fn build(k: &KernelDef) -> Code {
+        let mut instrs = Vec::new();
+        let mut label_at: HashMap<&str, usize> = HashMap::new();
+        for stmt in &k.body {
+            match stmt {
+                Stmt::Label(l) => {
+                    label_at.insert(l.as_str(), instrs.len());
+                }
+                Stmt::Instr(i) => instrs.push(i.clone()),
+            }
+        }
+        let mut bra_target = vec![usize::MAX; instrs.len()];
+        let (mut nr, mut nrd, mut nf, mut np) = (0, 0, 0, 0);
+        let mut visit_reg = |r: &Reg| match r.class {
+            RegClass::R32 => bump(&mut nr, r),
+            RegClass::R64 => bump(&mut nrd, r),
+            RegClass::F32 => bump(&mut nf, r),
+            RegClass::Pred => bump(&mut np, r),
+        };
+        let visit_op = |visit_reg: &mut dyn FnMut(&Reg), o: &Operand| {
+            if let Operand::Reg(r) = o {
+                visit_reg(r);
+            }
+        };
+        for (i, ins) in instrs.iter().enumerate() {
+            match ins {
+                Instr::Bra { target, pred } => {
+                    bra_target[i] = *label_at.get(target.as_str()).unwrap_or(&usize::MAX);
+                    if let Some((p, _)) = pred {
+                        visit_reg(p);
+                    }
+                }
+                Instr::LdParam { dst, .. } => visit_reg(dst),
+                Instr::Mov { dst, src } | Instr::Cvt { dst, src } => {
+                    visit_reg(dst);
+                    visit_op(&mut visit_reg, src);
+                }
+                Instr::IAlu { dst, a, b, .. }
+                | Instr::FAlu { dst, a, b, .. }
+                | Instr::Setp { dst, a, b, .. } => {
+                    visit_reg(dst);
+                    visit_op(&mut visit_reg, a);
+                    visit_op(&mut visit_reg, b);
+                }
+                Instr::IMad { dst, a, b, c } | Instr::Fma { dst, a, b, c } => {
+                    visit_reg(dst);
+                    visit_op(&mut visit_reg, a);
+                    visit_op(&mut visit_reg, b);
+                    visit_op(&mut visit_reg, c);
+                }
+                Instr::Sfu { dst, a, .. } => {
+                    visit_reg(dst);
+                    visit_op(&mut visit_reg, a);
+                }
+                Instr::Selp { dst, a, b, pred } => {
+                    visit_reg(dst);
+                    visit_op(&mut visit_reg, a);
+                    visit_op(&mut visit_reg, b);
+                    visit_reg(pred);
+                }
+                Instr::Ld { dst, addr, .. } => {
+                    visit_reg(dst);
+                    visit_reg(addr);
+                }
+                Instr::St { src, addr, .. } => {
+                    visit_op(&mut visit_reg, src);
+                    visit_reg(addr);
+                }
+                Instr::BarSync | Instr::Ret => {}
+            }
+        }
+        Code {
+            instrs,
+            bra_target,
+            nr,
+            nrd,
+            nf,
+            np,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+}
+
+/// Kernel-launch environment visible to a thread: parameter values and
+/// special registers.
+#[derive(Debug, Clone)]
+pub struct ThreadEnv {
+    /// Parameter name → value (pointers and scalars).
+    pub params: HashMap<String, u64>,
+    pub tid_x: u32,
+    pub ctaid_x: u32,
+    pub ntid_x: u32,
+    pub nctaid_x: u32,
+}
+
+impl ThreadEnv {
+    pub fn special(&self, s: SpecialReg) -> i64 {
+        match s {
+            SpecialReg::TidX => self.tid_x as i64,
+            SpecialReg::CtaIdX => self.ctaid_x as i64,
+            SpecialReg::NtidX => self.ntid_x as i64,
+            SpecialReg::NctaIdX => self.nctaid_x as i64,
+        }
+    }
+}
+
+/// Memory hook invoked on loads/stores. Lets the simulator model
+/// coalescing and caches; HyPA's slice interpreter uses [`NullMem`].
+pub trait MemHook {
+    /// Return the loaded value (synthetic values are fine — no kernel in
+    /// the generated set branches on loaded data).
+    fn load(&mut self, space: Space, addr: u64) -> f64;
+    fn store(&mut self, space: Space, addr: u64, value: f64);
+}
+
+/// Memory hook that returns a cheap deterministic value and ignores stores.
+pub struct NullMem;
+
+impl MemHook for NullMem {
+    fn load(&mut self, _space: Space, addr: u64) -> f64 {
+        // Deterministic pseudo-value derived from the address.
+        ((addr >> 2) % 251) as f64 / 251.0
+    }
+    fn store(&mut self, _space: Space, _addr: u64, _value: f64) {}
+}
+
+/// One thread's register state + program counter.
+#[derive(Debug, Clone)]
+pub struct Thread {
+    pub r32: Vec<i64>,
+    pub r64: Vec<i64>,
+    pub f32: Vec<f64>,
+    pub pred: Vec<bool>,
+    pub pc: usize,
+    pub done: bool,
+}
+
+impl Thread {
+    pub fn new(code: &Code) -> Thread {
+        Thread {
+            r32: vec![0; code.nr],
+            r64: vec![0; code.nrd],
+            f32: vec![0.0; code.nf],
+            pred: vec![false; code.np],
+            pc: 0,
+            done: false,
+        }
+    }
+
+    #[inline]
+    pub fn get_i(&self, r: &Reg) -> i64 {
+        match r.class {
+            RegClass::R32 => self.r32[r.index as usize],
+            RegClass::R64 => self.r64[r.index as usize],
+            _ => panic!("get_i on {r}"),
+        }
+    }
+
+    #[inline]
+    fn set_i(&mut self, r: &Reg, v: i64) {
+        match r.class {
+            RegClass::R32 => self.r32[r.index as usize] = v as i32 as i64,
+            RegClass::R64 => self.r64[r.index as usize] = v,
+            _ => panic!("set_i on {r}"),
+        }
+    }
+
+    #[inline]
+    pub fn get_f(&self, r: &Reg) -> f64 {
+        self.f32[r.index as usize]
+    }
+
+    #[inline]
+    fn operand_i(&self, env: &ThreadEnv, o: &Operand) -> i64 {
+        match o {
+            Operand::Reg(r) => self.get_i(r),
+            Operand::Imm(i) => *i,
+            Operand::FImm(_) => panic!("float imm in int context"),
+            Operand::Special(s) => env.special(*s),
+        }
+    }
+
+    #[inline]
+    fn operand_f(&self, o: &Operand) -> f64 {
+        match o {
+            Operand::Reg(r) => self.get_f(r),
+            Operand::FImm(x) => *x,
+            Operand::Imm(i) => *i as f64,
+            Operand::Special(_) => panic!("special reg in float context"),
+        }
+    }
+
+    /// Execute the instruction at `pc`; advances `pc` (or jumps / retires).
+    /// Returns `false` once the thread has retired.
+    pub fn step(&mut self, code: &Code, env: &ThreadEnv, mem: &mut impl MemHook) -> bool {
+        if self.done || self.pc >= code.len() {
+            self.done = true;
+            return false;
+        }
+        let pc = self.pc;
+        let instr = &code.instrs[pc];
+        self.exec(instr, code.bra_target[pc], env, mem);
+        !self.done
+    }
+
+    /// Execute one specific instruction (used by the lockstep warp
+    /// executor, which drives PCs itself).
+    #[inline]
+    pub fn exec(
+        &mut self,
+        instr: &Instr,
+        bra_target: usize,
+        env: &ThreadEnv,
+        mem: &mut impl MemHook,
+    ) {
+        let mut next = self.pc + 1;
+        match instr {
+            Instr::LdParam { dst, name } => {
+                let v = *env.params.get(name).unwrap_or_else(|| {
+                    panic!("unbound kernel parameter '{name}'")
+                });
+                match dst.class {
+                    RegClass::F32 => self.f32[dst.index as usize] = v as f64,
+                    _ => self.set_i(dst, v as i64),
+                }
+            }
+            Instr::Mov { dst, src } => match dst.class {
+                RegClass::F32 => self.f32[dst.index as usize] = self.operand_f(src),
+                RegClass::Pred => {
+                    if let Operand::Reg(r) = src {
+                        self.pred[dst.index as usize] = self.pred[r.index as usize];
+                    }
+                }
+                _ => {
+                    let v = self.operand_i(env, src);
+                    self.set_i(dst, v);
+                }
+            },
+            Instr::Cvt { dst, src } => match dst.class {
+                RegClass::F32 => {
+                    self.f32[dst.index as usize] = self.operand_i(env, src) as f64
+                }
+                _ => {
+                    let v = self.operand_i(env, src);
+                    self.set_i(dst, v);
+                }
+            },
+            Instr::IAlu { op, dst, a, b } => {
+                let v = op.eval(self.operand_i(env, a), self.operand_i(env, b));
+                self.set_i(dst, v);
+            }
+            Instr::IMad { dst, a, b, c } => {
+                let v = self
+                    .operand_i(env, a)
+                    .wrapping_mul(self.operand_i(env, b))
+                    .wrapping_add(self.operand_i(env, c));
+                self.set_i(dst, v);
+            }
+            Instr::FAlu { op, dst, a, b } => {
+                self.f32[dst.index as usize] =
+                    op.eval(self.operand_f(a), self.operand_f(b));
+            }
+            Instr::Fma { dst, a, b, c } => {
+                self.f32[dst.index as usize] = self
+                    .operand_f(a)
+                    .mul_add(self.operand_f(b), self.operand_f(c));
+            }
+            Instr::Sfu { op, dst, a } => {
+                self.f32[dst.index as usize] = op.eval(self.operand_f(a));
+            }
+            Instr::Setp {
+                cmp,
+                dst,
+                a,
+                b,
+                float,
+            } => {
+                let v = if *float {
+                    cmp.eval_f(self.operand_f(a), self.operand_f(b))
+                } else {
+                    cmp.eval_i(self.operand_i(env, a), self.operand_i(env, b))
+                };
+                self.pred[dst.index as usize] = v;
+            }
+            Instr::Selp { dst, a, b, pred } => {
+                let take_a = self.pred[pred.index as usize];
+                match dst.class {
+                    RegClass::F32 => {
+                        self.f32[dst.index as usize] = if take_a {
+                            self.operand_f(a)
+                        } else {
+                            self.operand_f(b)
+                        }
+                    }
+                    _ => {
+                        let v = if take_a {
+                            self.operand_i(env, a)
+                        } else {
+                            self.operand_i(env, b)
+                        };
+                        self.set_i(dst, v);
+                    }
+                }
+            }
+            Instr::Bra { pred, target: _ } => {
+                let taken = match pred {
+                    None => true,
+                    Some((p, negated)) => self.pred[p.index as usize] != *negated,
+                };
+                if taken {
+                    if bra_target == usize::MAX {
+                        self.done = true;
+                        self.pc = usize::MAX;
+                        return;
+                    }
+                    next = bra_target;
+                }
+            }
+            Instr::Ld {
+                space,
+                dst,
+                addr,
+                offset,
+            } => {
+                let a = (self.get_i(addr) as u64).wrapping_add(*offset as u64);
+                self.f32[dst.index as usize] = mem.load(*space, a);
+            }
+            Instr::St {
+                space,
+                src,
+                addr,
+                offset,
+            } => {
+                let a = (self.get_i(addr) as u64).wrapping_add(*offset as u64);
+                let v = self.operand_f(src);
+                mem.store(*space, a, v);
+            }
+            Instr::BarSync => {}
+            Instr::Ret => {
+                self.done = true;
+                self.pc = usize::MAX;
+                return;
+            }
+        }
+        self.pc = next;
+    }
+
+    /// Run a whole thread to retirement, with an instruction budget guard.
+    /// Returns executed instruction count (or None if budget exceeded).
+    pub fn run(
+        &mut self,
+        code: &Code,
+        env: &ThreadEnv,
+        mem: &mut impl MemHook,
+        budget: usize,
+    ) -> Option<usize> {
+        let mut executed = 0usize;
+        while !self.done {
+            if executed >= budget {
+                return None;
+            }
+            self.step(code, env, mem);
+            executed += 1;
+        }
+        Some(executed)
+    }
+}
+
+/// Build the default environment for (cta, tid) of a launch.
+pub fn env_for_thread(
+    params: &[(String, u64)],
+    ctaid: u32,
+    tid: u32,
+    ntid: u32,
+    nctaid: u32,
+) -> ThreadEnv {
+    ThreadEnv {
+        params: params.iter().cloned().collect(),
+        tid_x: tid,
+        ctaid_x: ctaid,
+        ntid_x: ntid,
+        nctaid_x: nctaid,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::launch::{KernelClass, KernelLaunch, LaunchDims};
+    use crate::gpu::occupancy::KernelResources;
+    use crate::ptx::codegen::{generate, param_values, test_conv_launch};
+    use crate::ptx::parser::parse;
+    use crate::ptx::print::kernel_to_text;
+
+    fn build(launch: &KernelLaunch) -> (Code, Vec<(String, u64)>) {
+        let k = generate(launch);
+        let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+        let m = parse(&text).unwrap();
+        (Code::build(&m.kernels[0]), param_values(launch))
+    }
+
+    #[test]
+    fn guard_thread_retires_fast() {
+        // Thread beyond `total` must exit via the guard immediately.
+        let launch = test_conv_launch(1, 3, 8, 4, 3, 1, 1);
+        let (code, params) = build(&launch);
+        let total = launch.useful_threads() as u32;
+        let env = env_for_thread(&params, total / 256 + 10, 0, 256, total / 256 + 11);
+        let mut t = Thread::new(&code);
+        let n = t.run(&code, &env, &mut NullMem, 100_000).unwrap();
+        assert!(n < 30, "guarded thread executed {n} instrs");
+    }
+
+    #[test]
+    fn interior_conv_thread_executes_all_macs() {
+        // 3-channel 3x3 conv, interior pixel: 27 fma instructions.
+        let launch = test_conv_launch(1, 3, 8, 4, 3, 1, 1);
+        let (code, params) = build(&launch);
+        // Pick an interior output: oy=4, ox=4 of an 8x8 map → idx = oc*64 + 4*8+4.
+        let idx = 36u32;
+        let env = env_for_thread(&params, idx / 256, idx % 256, 256, launch.grid_blocks as u32);
+        let mut t = Thread::new(&code);
+
+        struct OnesMem;
+        impl MemHook for OnesMem {
+            fn load(&mut self, _s: Space, _a: u64) -> f64 {
+                1.0
+            }
+            fn store(&mut self, _s: Space, _a: u64, _v: f64) {}
+        }
+        let mut mem = OnesMem;
+        // Count fmas by stepping manually.
+        let mut fmas = 0;
+        while !t.done {
+            if matches!(code.instrs.get(t.pc), Some(Instr::Fma { .. })) {
+                fmas += 1;
+            }
+            t.step(&code, &env, &mut mem);
+        }
+        assert_eq!(fmas, 27, "interior thread should run inC*k*k fmas");
+    }
+
+    #[test]
+    fn corner_thread_skips_out_of_range_taps() {
+        let launch = test_conv_launch(1, 3, 8, 4, 3, 1, 1);
+        let (code, params) = build(&launch);
+        // Corner output (0,0): only 2x2 of the 3x3 window is in range → 3ch*4 = 12 fmas.
+        let env = env_for_thread(&params, 0, 0, 256, launch.grid_blocks as u32);
+        let mut t = Thread::new(&code);
+        let mut fmas = 0;
+        while !t.done {
+            if matches!(code.instrs.get(t.pc), Some(Instr::Fma { .. })) {
+                fmas += 1;
+            }
+            t.step(&code, &env, &mut NullMem);
+        }
+        assert_eq!(fmas, 12);
+    }
+
+    #[test]
+    fn gemm_thread_runs_in_f_iterations() {
+        let dims = LaunchDims {
+            batch: 1,
+            in_f: 50,
+            out_f: 4,
+            ..Default::default()
+        };
+        let launch = KernelLaunch {
+            name: "fc".into(),
+            class: KernelClass::Gemm,
+            dims,
+            grid_blocks: 1,
+            resources: KernelResources {
+                threads_per_block: 256,
+                regs_per_thread: 40,
+                smem_per_block: 0,
+            },
+        };
+        let (code, params) = build(&launch);
+        let env = env_for_thread(&params, 0, 1, 256, 1);
+        let mut t = Thread::new(&code);
+        let mut fmas = 0;
+        while !t.done {
+            if matches!(code.instrs.get(t.pc), Some(Instr::Fma { .. })) {
+                fmas += 1;
+            }
+            t.step(&code, &env, &mut NullMem);
+        }
+        assert_eq!(fmas, 50);
+    }
+
+    #[test]
+    fn budget_guard_catches_runaway() {
+        let launch = test_conv_launch(1, 64, 32, 64, 3, 1, 1);
+        let (code, params) = build(&launch);
+        let env = env_for_thread(&params, 0, 0, 256, launch.grid_blocks as u32);
+        let mut t = Thread::new(&code);
+        assert!(t.run(&code, &env, &mut NullMem, 10).is_none());
+    }
+
+    #[test]
+    fn stores_reach_memory_hook() {
+        let launch = test_conv_launch(1, 1, 4, 1, 3, 1, 1);
+        let (code, params) = build(&launch);
+        struct Recorder(Vec<u64>);
+        impl MemHook for Recorder {
+            fn load(&mut self, _s: Space, _a: u64) -> f64 {
+                1.0
+            }
+            fn store(&mut self, _s: Space, a: u64, _v: f64) {
+                self.0.push(a);
+            }
+        }
+        let mut mem = Recorder(Vec::new());
+        let env = env_for_thread(&params, 0, 0, 256, 1);
+        let mut t = Thread::new(&code);
+        t.run(&code, &env, &mut mem, 100_000).unwrap();
+        // One output store, at out base (idx 0).
+        assert_eq!(mem.0, vec![0x3000_0000]);
+    }
+}

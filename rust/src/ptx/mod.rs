@@ -1,0 +1,16 @@
+//! PTX substrate: AST ([`ast`]), code generation standing in for `nvcc`
+//! ([`codegen`]), text printer ([`print`]) and parser ([`parser`]), CFG +
+//! loop analysis ([`cfg`]), the scalar interpreter core ([`interp`]), and
+//! the paper's Hybrid PTX Analyzer ([`hypa`]).
+
+pub mod ast;
+pub mod cfg;
+pub mod codegen;
+pub mod hypa;
+pub mod interp;
+pub mod parser;
+pub mod print;
+
+pub use ast::{Instr, InstrClass, KernelDef, Module};
+pub use cfg::Cfg;
+pub use hypa::{analyze, analyze_exact, analyze_network, HypaConfig, HypaResult, InstrMix};

@@ -1,0 +1,543 @@
+//! PTX text parser.
+//!
+//! Parses the PTX-subset text emitted by [`crate::ptx::print`] (and any
+//! hand-written kernel in the same subset) back into the [`Module`] AST.
+//! This is the entry point through which *all* analysis flows: HyPA, the
+//! CFG builder, and the simulator only ever see parsed text, mirroring how
+//! the real HyPA consumes `nvcc`-emitted PTX.
+
+use crate::ptx::ast::*;
+use std::fmt;
+
+/// Parse error with line number.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PTX parse error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for ParseError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// Parse a register like `%r3`, `%rd7`, `%f0`, `%p2`.
+fn parse_reg(s: &str, line: usize) -> Result<Reg, ParseError> {
+    let s = s.trim();
+    let (class, rest) = if let Some(r) = s.strip_prefix("%rd") {
+        (RegClass::R64, r)
+    } else if let Some(r) = s.strip_prefix("%r") {
+        (RegClass::R32, r)
+    } else if let Some(r) = s.strip_prefix("%f") {
+        (RegClass::F32, r)
+    } else if let Some(r) = s.strip_prefix("%p") {
+        (RegClass::Pred, r)
+    } else {
+        return err(line, format!("expected register, got '{s}'"));
+    };
+    let index: u32 = rest
+        .parse()
+        .map_err(|_| ParseError {
+            line,
+            msg: format!("bad register index in '{s}'"),
+        })?;
+    Ok(Reg { class, index })
+}
+
+/// Parse an operand: register, special register, integer, or `0F....` float.
+fn parse_operand(s: &str, line: usize) -> Result<Operand, ParseError> {
+    let s = s.trim();
+    if let Some(sp) = SpecialReg::parse(s) {
+        return Ok(Operand::Special(sp));
+    }
+    if s.starts_with('%') {
+        return Ok(Operand::Reg(parse_reg(s, line)?));
+    }
+    if let Some(hex) = s.strip_prefix("0F").or_else(|| s.strip_prefix("0f")) {
+        let bits = u32::from_str_radix(hex, 16)
+            .map_err(|_| ParseError {
+                line,
+                msg: format!("bad float literal '{s}'"),
+            })?;
+        return Ok(Operand::FImm(f32::from_bits(bits) as f64));
+    }
+    s.parse::<i64>()
+        .map(Operand::Imm)
+        .map_err(|_| ParseError {
+            line,
+            msg: format!("bad operand '{s}'"),
+        })
+}
+
+/// Split `a, b, c` operand lists respecting `[...]` brackets.
+fn split_operands(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Parse `[%rd3]` / `[%rd3+8]` → (reg, offset), or `[name]` → param name.
+enum AddrOrName {
+    Addr(Reg, i64),
+    Name(String),
+}
+
+fn parse_bracket(s: &str, line: usize) -> Result<AddrOrName, ParseError> {
+    let s = s.trim();
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|t| t.strip_suffix(']'))
+        .ok_or_else(|| ParseError {
+            line,
+            msg: format!("expected [..], got '{s}'"),
+        })?;
+    if inner.starts_with('%') {
+        if let Some((r, off)) = inner.split_once('+') {
+            Ok(AddrOrName::Addr(
+                parse_reg(r, line)?,
+                off.trim().parse().map_err(|_| ParseError {
+                    line,
+                    msg: format!("bad offset '{off}'"),
+                })?,
+            ))
+        } else {
+            Ok(AddrOrName::Addr(parse_reg(inner, line)?, 0))
+        }
+    } else {
+        Ok(AddrOrName::Name(inner.trim().to_string()))
+    }
+}
+
+/// Parse one instruction line (without trailing `;`, without `@pred`).
+fn parse_instr(
+    opcode: &str,
+    rest: &str,
+    pred: Option<(Reg, bool)>,
+    line: usize,
+) -> Result<Instr, ParseError> {
+    let parts: Vec<&str> = opcode.split('.').collect();
+    let ops = split_operands(rest);
+    let reg0 = |i: usize| -> Result<Reg, ParseError> {
+        parse_reg(ops.get(i).map(String::as_str).unwrap_or(""), line)
+    };
+    let opnd = |i: usize| -> Result<Operand, ParseError> {
+        parse_operand(ops.get(i).map(String::as_str).unwrap_or(""), line)
+    };
+
+    // Only `bra` may be predicated.
+    if pred.is_some() && parts[0] != "bra" {
+        return err(line, "predication only supported on bra");
+    }
+
+    let instr = match parts[0] {
+        "ld" => match parts.get(1) {
+            Some(&"param") => {
+                let dst = reg0(0)?;
+                match parse_bracket(&ops[1], line)? {
+                    AddrOrName::Name(name) => Instr::LdParam { dst, name },
+                    _ => return err(line, "ld.param needs [name]"),
+                }
+            }
+            Some(&"global") | Some(&"shared") => {
+                let space = if parts[1] == "global" {
+                    Space::Global
+                } else {
+                    Space::Shared
+                };
+                let dst = reg0(0)?;
+                match parse_bracket(&ops[1], line)? {
+                    AddrOrName::Addr(addr, offset) => Instr::Ld {
+                        space,
+                        dst,
+                        addr,
+                        offset,
+                    },
+                    _ => return err(line, "ld needs [reg]"),
+                }
+            }
+            _ => return err(line, format!("unknown ld space in '{opcode}'")),
+        },
+        "st" => {
+            let space = match parts.get(1) {
+                Some(&"global") => Space::Global,
+                Some(&"shared") => Space::Shared,
+                _ => return err(line, format!("unknown st space in '{opcode}'")),
+            };
+            match parse_bracket(&ops[0], line)? {
+                AddrOrName::Addr(addr, offset) => Instr::St {
+                    space,
+                    src: opnd(1)?,
+                    addr,
+                    offset,
+                },
+                _ => return err(line, "st needs [reg]"),
+            }
+        }
+        "mov" => Instr::Mov {
+            dst: reg0(0)?,
+            src: opnd(1)?,
+        },
+        "cvt" => Instr::Cvt {
+            dst: reg0(0)?,
+            src: opnd(1)?,
+        },
+        "add" | "sub" | "min" | "max" | "div" | "rem" | "shl" | "shr" | "and"
+        | "or" | "mul" => {
+            // Disambiguate int vs float by type suffix.
+            let is_f32 = parts.last() == Some(&"f32");
+            if is_f32 {
+                let op = match parts[0] {
+                    "add" => FAluOp::Add,
+                    "sub" => FAluOp::Sub,
+                    "mul" => FAluOp::Mul,
+                    "max" => FAluOp::Max,
+                    "min" => FAluOp::Min,
+                    "div" => FAluOp::Div,
+                    _ => return err(line, format!("bad f32 op '{opcode}'")),
+                };
+                Instr::FAlu {
+                    op,
+                    dst: reg0(0)?,
+                    a: opnd(1)?,
+                    b: opnd(2)?,
+                }
+            } else {
+                let op = match parts[0] {
+                    "add" => IAluOp::Add,
+                    "sub" => IAluOp::Sub,
+                    "mul" => IAluOp::Mul, // mul.lo.s32
+                    "div" => IAluOp::Div,
+                    "rem" => IAluOp::Rem,
+                    "min" => IAluOp::Min,
+                    "max" => IAluOp::Max,
+                    "shl" => IAluOp::Shl,
+                    "shr" => IAluOp::Shr,
+                    "and" => IAluOp::And,
+                    "or" => IAluOp::Or,
+                    _ => unreachable!(),
+                };
+                Instr::IAlu {
+                    op,
+                    dst: reg0(0)?,
+                    a: opnd(1)?,
+                    b: opnd(2)?,
+                }
+            }
+        }
+        "mad" => Instr::IMad {
+            dst: reg0(0)?,
+            a: opnd(1)?,
+            b: opnd(2)?,
+            c: opnd(3)?,
+        },
+        "fma" => Instr::Fma {
+            dst: reg0(0)?,
+            a: opnd(1)?,
+            b: opnd(2)?,
+            c: opnd(3)?,
+        },
+        "ex2" | "lg2" | "rsqrt" | "rcp" => {
+            let op = match parts[0] {
+                "ex2" => SfuOp::Ex2,
+                "lg2" => SfuOp::Lg2,
+                "rsqrt" => SfuOp::Rsqrt,
+                _ => SfuOp::Rcp,
+            };
+            Instr::Sfu {
+                op,
+                dst: reg0(0)?,
+                a: opnd(1)?,
+            }
+        }
+        "setp" => {
+            let cmp = parts
+                .get(1)
+                .and_then(|s| CmpOp::parse(s))
+                .ok_or_else(|| ParseError {
+                    line,
+                    msg: format!("bad setp cmp in '{opcode}'"),
+                })?;
+            let float = parts.last() == Some(&"f32");
+            Instr::Setp {
+                cmp,
+                dst: reg0(0)?,
+                a: opnd(1)?,
+                b: opnd(2)?,
+                float,
+            }
+        }
+        "selp" => Instr::Selp {
+            dst: reg0(0)?,
+            a: opnd(1)?,
+            b: opnd(2)?,
+            pred: reg0(3)?,
+        },
+        "bra" => Instr::Bra {
+            pred,
+            target: rest.trim().to_string(),
+        },
+        "bar" => Instr::BarSync,
+        "ret" => Instr::Ret,
+        other => return err(line, format!("unknown opcode '{other}'")),
+    };
+    Ok(instr)
+}
+
+/// Parse a full PTX-subset module.
+pub fn parse(text: &str) -> Result<Module, ParseError> {
+    let mut version = String::from("7.0");
+    let mut target = String::from("sm_70");
+    let mut kernels = Vec::new();
+
+    let mut lines = text.lines().enumerate().peekable();
+    while let Some((ln, raw)) = lines.next() {
+        let line = raw.split("//").next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(v) = line.strip_prefix(".version") {
+            version = v.trim().to_string();
+            continue;
+        }
+        if let Some(t) = line.strip_prefix(".target") {
+            target = t.trim().to_string();
+            continue;
+        }
+        if line.starts_with(".address_size") {
+            continue;
+        }
+        if line.starts_with(".visible") || line.starts_with(".entry") {
+            // Kernel header: `.visible .entry name(` then params until `)`.
+            let name = line
+                .split(".entry")
+                .nth(1)
+                .map(|s| s.trim().trim_end_matches('(').trim().to_string())
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| ParseError {
+                    line: ln + 1,
+                    msg: "bad .entry header".into(),
+                })?;
+            let mut params = Vec::new();
+            // Parameters: lines until `)`.
+            for (pln, praw) in lines.by_ref() {
+                let p = praw.trim();
+                if p.starts_with(')') {
+                    break;
+                }
+                if p.is_empty() {
+                    continue;
+                }
+                let p = p.trim_end_matches(',');
+                let mut toks = p.split_whitespace();
+                match (toks.next(), toks.next(), toks.next()) {
+                    (Some(".param"), Some(ty), Some(nm)) => params.push(ParamDecl {
+                        name: nm.to_string(),
+                        is_ptr: ty == ".u64",
+                    }),
+                    _ => {
+                        return err(pln + 1, format!("bad param decl '{p}'"));
+                    }
+                }
+            }
+            // Body: `{` ... `}`.
+            let mut body = Vec::new();
+            let mut in_body = false;
+            loop {
+                let Some((bln, braw)) = lines.next() else {
+                    return err(ln + 1, "unterminated kernel body");
+                };
+                let b = braw.split("//").next().unwrap_or("").trim();
+                if b.is_empty() {
+                    continue;
+                }
+                if b == "{" {
+                    in_body = true;
+                    continue;
+                }
+                if b == "}" {
+                    break;
+                }
+                if !in_body {
+                    return err(bln + 1, "expected '{'");
+                }
+                // Label?
+                if let Some(lbl) = b.strip_suffix(':') {
+                    if !lbl.contains(' ') {
+                        body.push(Stmt::Label(lbl.to_string()));
+                        continue;
+                    }
+                }
+                // Instruction: optional @pred prefix, then `opcode rest;`.
+                let mut stmt = b.trim_end_matches(';').trim();
+                let mut pred = None;
+                if let Some(rest) = stmt.strip_prefix("@!") {
+                    let (p, r) = rest.split_once(' ').ok_or_else(|| ParseError {
+                        line: bln + 1,
+                        msg: "bad predicate".into(),
+                    })?;
+                    pred = Some((parse_reg(p, bln + 1)?, true));
+                    stmt = r.trim();
+                } else if let Some(rest) = stmt.strip_prefix('@') {
+                    let (p, r) = rest.split_once(' ').ok_or_else(|| ParseError {
+                        line: bln + 1,
+                        msg: "bad predicate".into(),
+                    })?;
+                    pred = Some((parse_reg(p, bln + 1)?, false));
+                    stmt = r.trim();
+                }
+                let (opcode, rest) = match stmt.split_once(' ') {
+                    Some((o, r)) => (o, r),
+                    None => (stmt, ""),
+                };
+                body.push(Stmt::Instr(parse_instr(opcode, rest, pred, bln + 1)?));
+            }
+            kernels.push(KernelDef {
+                name,
+                params,
+                body,
+            });
+            continue;
+        }
+        return err(ln + 1, format!("unexpected top-level line '{line}'"));
+    }
+    Ok(Module {
+        version,
+        target,
+        kernels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{launch::decompose, zoo};
+    use crate::ptx::codegen::{generate_module, test_conv_launch};
+    use crate::ptx::print::to_text;
+
+    #[test]
+    fn roundtrip_conv_kernel() {
+        let module = generate_module(&[test_conv_launch(1, 3, 8, 4, 3, 1, 1)]);
+        let text = to_text(&module);
+        let parsed = parse(&text).unwrap();
+        assert_eq!(parsed, module);
+    }
+
+    #[test]
+    fn roundtrip_whole_zoo() {
+        for net in zoo::zoo() {
+            let launches = decompose(&net, 1).unwrap();
+            let module = generate_module(&launches);
+            let text = to_text(&module);
+            let parsed = parse(&text).unwrap_or_else(|e| {
+                panic!("{}: {e}", net.name);
+            });
+            assert_eq!(parsed, module, "{} round-trip mismatch", net.name);
+        }
+    }
+
+    #[test]
+    fn parses_handwritten_kernel() {
+        let src = r#"
+.version 7.0
+.target sm_70
+.address_size 64
+
+.visible .entry saxpy(
+    .param .u64 x,
+    .param .u64 y,
+    .param .u32 n
+)
+{
+    ld.param.u64 %rd0, [x];
+    ld.param.u64 %rd1, [y];
+    ld.param.u32 %r0, [n];
+    mov.u32 %r1, %tid.x;
+    setp.ge.s32 %p0, %r1, %r0;
+    @%p0 bra $EXIT_0;   // guard
+    ld.global.f32 %f0, [%rd0+4];
+    fma.rn.f32 %f1, %f0, 0F40000000, %f0;
+    st.global.f32 [%rd1], %f1;
+$EXIT_0:
+    ret;
+}
+"#;
+        let m = parse(src).unwrap();
+        assert_eq!(m.kernels.len(), 1);
+        let k = &m.kernels[0];
+        assert_eq!(k.name, "saxpy");
+        assert_eq!(k.params.len(), 3);
+        assert!(k.params[0].is_ptr);
+        assert!(!k.params[2].is_ptr);
+        // 2.0f literal survives.
+        let has_two = k.instructions().any(|i| {
+            matches!(i, Instr::Fma { b: Operand::FImm(x), .. } if (*x - 2.0).abs() < 1e-9)
+        });
+        assert!(has_two);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let src = ".version 7.0\n.target sm_70\nbogus line\n";
+        let e = parse(src).unwrap_err();
+        assert_eq!(e.line, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_opcode() {
+        let src = "
+.visible .entry k(
+    .param .u32 n
+)
+{
+    frobnicate.s32 %r0, %r1;
+}
+";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let src = "
+.version 7.0
+// full line comment
+.visible .entry k(
+    .param .u32 n
+)
+{
+    ret; // trailing
+}
+";
+        let m = parse(src).unwrap();
+        assert_eq!(m.kernels[0].body.len(), 1);
+    }
+}

@@ -1,0 +1,226 @@
+//! PTX text printer: serializes a [`Module`] into the textual PTX-subset
+//! form that [`crate::ptx::parser`] consumes. Codegen → print → parse is
+//! round-trip tested; this is the interchange format between the "compiler"
+//! side and the analyzer/simulator side, exactly as real PTX text is for
+//! HyPA.
+
+use crate::ptx::ast::*;
+
+fn operand(o: &Operand) -> String {
+    match o {
+        Operand::Reg(r) => r.to_string(),
+        Operand::Imm(i) => i.to_string(),
+        Operand::FImm(x) => format!("0F{:08X}", (*x as f32).to_bits()),
+        Operand::Special(s) => s.name().to_string(),
+    }
+}
+
+fn ity(dst: &Reg) -> &'static str {
+    match dst.class {
+        RegClass::R64 => "s64",
+        _ => "s32",
+    }
+}
+
+fn instr(i: &Instr) -> String {
+    match i {
+        Instr::LdParam { dst, name } => {
+            let ty = match dst.class {
+                RegClass::R64 => "u64",
+                RegClass::F32 => "f32",
+                _ => "u32",
+            };
+            format!("ld.param.{ty} {dst}, [{name}];")
+        }
+        Instr::Mov { dst, src } => {
+            let ty = match dst.class {
+                RegClass::R64 => "u64",
+                RegClass::F32 => "f32",
+                RegClass::Pred => "pred",
+                RegClass::R32 => "u32",
+            };
+            format!("mov.{ty} {dst}, {};", operand(src))
+        }
+        Instr::Cvt { dst, src } => {
+            let (to, from) = match dst.class {
+                RegClass::R64 => ("s64", "s32"),
+                RegClass::F32 => ("rn.f32", "s32"),
+                _ => ("s32", "s64"),
+            };
+            format!("cvt.{to}.{from} {dst}, {};", operand(src))
+        }
+        Instr::IAlu { op, dst, a, b } => {
+            format!(
+                "{}.{} {dst}, {}, {};",
+                op.name(),
+                ity(dst),
+                operand(a),
+                operand(b)
+            )
+        }
+        Instr::IMad { dst, a, b, c } => format!(
+            "mad.lo.{} {dst}, {}, {}, {};",
+            ity(dst),
+            operand(a),
+            operand(b),
+            operand(c)
+        ),
+        Instr::FAlu { op, dst, a, b } => format!(
+            "{}.f32 {dst}, {}, {};",
+            op.name(),
+            operand(a),
+            operand(b)
+        ),
+        Instr::Fma { dst, a, b, c } => format!(
+            "fma.rn.f32 {dst}, {}, {}, {};",
+            operand(a),
+            operand(b),
+            operand(c)
+        ),
+        Instr::Sfu { op, dst, a } => {
+            format!("{}.f32 {dst}, {};", op.name(), operand(a))
+        }
+        Instr::Setp {
+            cmp,
+            dst,
+            a,
+            b,
+            float,
+        } => format!(
+            "setp.{}.{} {dst}, {}, {};",
+            cmp.name(),
+            if *float { "f32" } else { "s32" },
+            operand(a),
+            operand(b)
+        ),
+        Instr::Selp { dst, a, b, pred } => format!(
+            "selp.{} {dst}, {}, {}, {pred};",
+            if dst.class == RegClass::F32 { "f32" } else { "b32" },
+            operand(a),
+            operand(b)
+        ),
+        Instr::Bra { pred, target } => match pred {
+            None => format!("bra {target};"),
+            Some((p, false)) => format!("@{p} bra {target};"),
+            Some((p, true)) => format!("@!{p} bra {target};"),
+        },
+        Instr::Ld {
+            space,
+            dst,
+            addr,
+            offset,
+        } => {
+            if *offset == 0 {
+                format!("ld.{}.f32 {dst}, [{addr}];", space.name())
+            } else {
+                format!("ld.{}.f32 {dst}, [{addr}+{offset}];", space.name())
+            }
+        }
+        Instr::St {
+            space,
+            src,
+            addr,
+            offset,
+        } => {
+            if *offset == 0 {
+                format!("st.{}.f32 [{addr}], {};", space.name(), operand(src))
+            } else {
+                format!(
+                    "st.{}.f32 [{addr}+{offset}], {};",
+                    space.name(),
+                    operand(src)
+                )
+            }
+        }
+        Instr::BarSync => "bar.sync 0;".to_string(),
+        Instr::Ret => "ret;".to_string(),
+    }
+}
+
+/// Serialize one kernel.
+pub fn kernel_to_text(k: &KernelDef) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(".visible .entry {}(\n", k.name));
+    for (i, p) in k.params.iter().enumerate() {
+        let ty = if p.is_ptr { ".u64" } else { ".u32" };
+        let comma = if i + 1 < k.params.len() { "," } else { "" };
+        out.push_str(&format!("    .param {ty} {}{comma}\n", p.name));
+    }
+    out.push_str(")\n{\n");
+    for s in &k.body {
+        match s {
+            Stmt::Label(l) => out.push_str(&format!("{l}:\n")),
+            Stmt::Instr(i) => {
+                out.push_str("    ");
+                out.push_str(&instr(i));
+                out.push('\n');
+            }
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Serialize a module.
+pub fn to_text(m: &Module) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(".version {}\n", m.version));
+    out.push_str(&format!(".target {}\n", m.target));
+    out.push_str(".address_size 64\n\n");
+    for k in &m.kernels {
+        out.push_str(&kernel_to_text(k));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prints_simple_kernel() {
+        let k = KernelDef {
+            name: "t".into(),
+            params: vec![
+                ParamDecl {
+                    name: "out".into(),
+                    is_ptr: true,
+                },
+                ParamDecl {
+                    name: "n".into(),
+                    is_ptr: false,
+                },
+            ],
+            body: vec![
+                Stmt::Instr(Instr::LdParam {
+                    dst: Reg {
+                        class: RegClass::R64,
+                        index: 0,
+                    },
+                    name: "out".into(),
+                }),
+                Stmt::Label("L0".into()),
+                Stmt::Instr(Instr::Ret),
+            ],
+        };
+        let text = kernel_to_text(&k);
+        assert!(text.contains(".visible .entry t("));
+        assert!(text.contains(".param .u64 out,"));
+        assert!(text.contains("ld.param.u64 %rd0, [out];"));
+        assert!(text.contains("L0:"));
+        assert!(text.contains("ret;"));
+    }
+
+    #[test]
+    fn float_imm_hex_form() {
+        let i = Instr::Mov {
+            dst: Reg {
+                class: RegClass::F32,
+                index: 1,
+            },
+            src: Operand::FImm(1.0),
+        };
+        assert_eq!(instr(&i), "mov.f32 %f1, 0F3F800000;");
+    }
+}

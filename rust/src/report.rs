@@ -1,0 +1,249 @@
+//! Per-layer analysis reports.
+//!
+//! The artifact a computer architect actually consumes from this system:
+//! for one `(network, GPU, frequency, batch)` design point, a per-layer
+//! breakdown of simulated time/bound/occupancy, the HyPA instruction mix,
+//! and the network-level totals + power/energy — exportable as JSON
+//! (`hypa-dse report`) for downstream tooling.
+
+use anyhow::{anyhow, Result};
+
+use crate::cnn::ir::Network;
+use crate::cnn::launch::{decompose, KernelLaunch};
+use crate::gpu::specs::GpuSpec;
+use crate::ptx::codegen::generate;
+use crate::ptx::hypa::{analyze, HypaConfig, HypaResult};
+use crate::ptx::parser::parse;
+use crate::ptx::print::kernel_to_text;
+use crate::sim::{KernelSim, Simulator};
+use crate::util::json::{jarr, jnum, jstr, Json};
+use crate::util::table::{dur, f, si, Table};
+
+/// One layer's combined record.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub class: String,
+    pub threads: usize,
+    pub sim: KernelSim,
+    pub hypa: HypaResult,
+    /// Share of total network busy time.
+    pub time_share: f64,
+}
+
+/// Whole design-point report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub network: String,
+    pub gpu: String,
+    pub f_mhz: f64,
+    pub batch: usize,
+    pub layers: Vec<LayerReport>,
+    pub total_seconds: f64,
+    pub total_cycles: f64,
+    pub avg_power_w: f64,
+    pub energy_j: f64,
+}
+
+/// Build the report (simulates + analyzes every kernel).
+pub fn build(
+    sim: &mut Simulator,
+    net: &Network,
+    batch: usize,
+    g: &GpuSpec,
+    f_mhz: f64,
+) -> Result<Report> {
+    let launches = decompose(net, batch).map_err(|e| anyhow!("{e}"))?;
+    let net_sim = sim
+        .simulate_network(net, batch, g, f_mhz)
+        .map_err(|e| anyhow!("{e}"))?;
+    let busy: f64 = net_sim.per_kernel.iter().map(|k| k.seconds).sum();
+
+    let mut layers = Vec::with_capacity(launches.len());
+    for (launch, ksim) in launches.iter().zip(net_sim.per_kernel.iter()) {
+        let hypa = hypa_for(launch)?;
+        layers.push(LayerReport {
+            name: launch.name.clone(),
+            class: launch.class.name().to_string(),
+            threads: launch.useful_threads(),
+            sim: ksim.clone(),
+            hypa,
+            time_share: if busy > 0.0 { ksim.seconds / busy } else { 0.0 },
+        });
+    }
+    Ok(Report {
+        network: net.name.clone(),
+        gpu: g.name.to_string(),
+        f_mhz,
+        batch,
+        layers,
+        total_seconds: net_sim.seconds,
+        total_cycles: net_sim.cycles,
+        avg_power_w: net_sim.avg_power_w,
+        energy_j: net_sim.energy_j,
+    })
+}
+
+fn hypa_for(launch: &KernelLaunch) -> Result<HypaResult> {
+    let k = generate(launch);
+    let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+    let parsed = parse(&text).map_err(|e| anyhow!("{e}"))?;
+    Ok(analyze(&parsed.kernels[0], launch, HypaConfig::default()))
+}
+
+impl Report {
+    /// The hottest `n` layers by time share.
+    pub fn hottest(&self, n: usize) -> Vec<&LayerReport> {
+        let mut v: Vec<&LayerReport> = self.layers.iter().collect();
+        v.sort_by(|a, b| b.time_share.partial_cmp(&a.time_share).unwrap());
+        v.truncate(n);
+        v
+    }
+
+    /// Render the human-readable table (hottest layers first).
+    pub fn render(&self, top: usize) -> String {
+        let mut out = format!(
+            "{} b{} on {} @{:.0} MHz: {} / {:.1} W / {:.3} J  ({} kernels)\n",
+            self.network,
+            self.batch,
+            self.gpu,
+            self.f_mhz,
+            dur(self.total_seconds),
+            self.avg_power_w,
+            self.energy_j,
+            self.layers.len()
+        );
+        let mut t = Table::new(&[
+            "layer", "class", "time", "share %", "bound", "occ %", "instrs", "fp %",
+        ]);
+        for l in self.hottest(top) {
+            let mix = &l.hypa.mix;
+            t.row(&[
+                l.name.clone(),
+                l.class.clone(),
+                dur(l.sim.seconds),
+                f(l.time_share * 100.0, 1),
+                l.sim.bound.name().to_string(),
+                f(l.sim.occupancy.fraction * 100.0, 0),
+                si(mix.total()),
+                f(100.0 * mix.fp / mix.total().max(1.0), 0),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+
+    /// JSON export.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("network", jstr(&self.network))
+            .set("gpu", jstr(&self.gpu))
+            .set("f_mhz", jnum(self.f_mhz))
+            .set("batch", jnum(self.batch as f64))
+            .set("total_seconds", jnum(self.total_seconds))
+            .set("total_cycles", jnum(self.total_cycles))
+            .set("avg_power_w", jnum(self.avg_power_w))
+            .set("energy_j", jnum(self.energy_j));
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut lo = Json::obj();
+                lo.set("name", jstr(&l.name))
+                    .set("class", jstr(&l.class))
+                    .set("threads", jnum(l.threads as f64))
+                    .set("seconds", jnum(l.sim.seconds))
+                    .set("cycles", jnum(l.sim.cycles))
+                    .set("time_share", jnum(l.time_share))
+                    .set("bound", jstr(l.sim.bound.name()))
+                    .set("occupancy", jnum(l.sim.occupancy.fraction))
+                    .set("dram_bytes", jnum(l.sim.dram_bytes))
+                    .set("hypa_instrs", jnum(l.hypa.mix.total()))
+                    .set("hypa_fp", jnum(l.hypa.mix.fp))
+                    .set("hypa_loads", jnum(l.hypa.mix.load_global))
+                    .set(
+                        "loop_depth",
+                        jnum(l.hypa.static_features.max_loop_depth as f64),
+                    );
+                lo
+            })
+            .collect();
+        o.set("layers", jarr(layers));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::gpu::specs::by_name;
+
+    fn small_report() -> Report {
+        let mut sim = Simulator::default();
+        let g = by_name("v100s").unwrap();
+        build(&mut sim, &zoo::lenet5(), 1, &g, 1245.0).unwrap()
+    }
+
+    #[test]
+    fn layer_count_and_shares() {
+        let r = small_report();
+        assert_eq!(r.layers.len(), zoo::lenet5().layers.len());
+        let share_sum: f64 = r.layers.iter().map(|l| l.time_share).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to {share_sum}");
+    }
+
+    #[test]
+    fn hottest_sorted_desc() {
+        let r = small_report();
+        let hot = r.hottest(5);
+        for w in hot.windows(2) {
+            assert!(w[0].time_share >= w[1].time_share);
+        }
+        // LeNet's conv2 (16ch 5x5 over 14x14) should be near the top.
+        assert!(hot[0].class == "direct_conv" || hot[0].class == "gemm");
+    }
+
+    #[test]
+    fn render_contains_totals_and_layers() {
+        let r = small_report();
+        let text = r.render(5);
+        assert!(text.contains("lenet5 b1 on v100s"));
+        assert!(text.lines().count() >= 8);
+    }
+
+    #[test]
+    fn json_roundtrips_and_is_complete() {
+        let r = small_report();
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("layers").and_then(Json::as_arr).unwrap().len(),
+            r.layers.len()
+        );
+        assert!(parsed.get("avg_power_w").unwrap().as_f64().unwrap() > 0.0);
+        // Every layer entry carries both sim and hypa fields.
+        for l in parsed.get("layers").and_then(Json::as_arr).unwrap() {
+            assert!(l.get("seconds").is_some());
+            assert!(l.get("hypa_instrs").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn hypa_and_sim_consistent_per_layer() {
+        // Within the report, per-layer HyPA totals should track the
+        // simulator's lane-op-derived activity (same order of magnitude,
+        // typically within a few percent).
+        let r = small_report();
+        for l in &r.layers {
+            let sim_ops = l.sim.activity.total_ops();
+            let hypa_ops = l.hypa.mix.total();
+            let ratio = hypa_ops / sim_ops.max(1.0);
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{}: hypa {hypa_ops:.3e} vs sim {sim_ops:.3e}",
+                l.name
+            );
+        }
+    }
+}

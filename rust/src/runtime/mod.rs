@@ -1,0 +1,202 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust hot path.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once; afterwards the rust
+//! binary is self-contained: [`Runtime`] compiles each `artifacts/*.hlo.txt`
+//! with the PJRT CPU client at startup and serves execution for the
+//! coordinator's batched prediction service. Python never runs on the
+//! request path.
+
+mod forest_exec;
+mod knn_exec;
+
+pub use forest_exec::ForestExecutable;
+pub use knn_exec::KnnExecutable;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Static shape constants — must match `python/compile/model.py`.
+/// (Checked at startup against `artifacts/meta.json`.)
+pub mod shapes {
+    pub const KNN_N: usize = 4096;
+    pub const KNN_F: usize = 64;
+    pub const KNN_B: usize = 256;
+    pub const KNN_K: usize = 3;
+    pub const FOREST_T: usize = 64;
+    pub const FOREST_M: usize = 4096;
+    pub const FOREST_B: usize = 256;
+    pub const FOREST_F: usize = 64;
+    pub const FOREST_DEPTH: usize = 16;
+    pub const CNN_B: usize = 8;
+}
+
+/// Loaded PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let rt = Runtime {
+            client,
+            dir,
+            execs: HashMap::new(),
+        };
+        rt.check_meta()?;
+        Ok(rt)
+    }
+
+    /// Validate `meta.json` shape constants against the compiled-in ones.
+    fn check_meta(&self) -> Result<()> {
+        let meta_path = self.dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                meta_path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let check = |path: &[&str], expect: usize| -> Result<()> {
+            let got = j
+                .path(path)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta.json missing {path:?}"))?;
+            anyhow::ensure!(
+                got == expect,
+                "artifact shape mismatch at {path:?}: artifacts built with {got}, \
+                 binary expects {expect} — re-run `make artifacts`"
+            );
+            Ok(())
+        };
+        check(&["knn", "n"], shapes::KNN_N)?;
+        check(&["knn", "f"], shapes::KNN_F)?;
+        check(&["knn", "b"], shapes::KNN_B)?;
+        check(&["knn", "k"], shapes::KNN_K)?;
+        check(&["forest", "t"], shapes::FOREST_T)?;
+        check(&["forest", "m"], shapes::FOREST_M)?;
+        check(&["forest", "b"], shapes::FOREST_B)?;
+        check(&["forest", "f"], shapes::FOREST_F)?;
+        check(&["forest", "depth"], shapes::FOREST_DEPTH)?;
+        Ok(())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name (idempotent).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact; unwraps the 1-tuple output.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.execs.keys().map(String::as_str).collect()
+    }
+
+    /// Upload a literal to the device once; the returned buffer can be
+    /// passed to [`Runtime::execute_buffers`] on every subsequent call.
+    /// This is the §Perf fix for the prediction hot path: model parameters
+    /// (KNN training matrix, forest node arrays — megabytes) were being
+    /// re-marshalled host→device on every batch.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute with device-resident buffers; unwraps the 1-tuple output.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<xla::Literal> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of shape `dims` from an f64 iterator (row-major).
+pub fn literal_f32(
+    values: impl Iterator<Item = f64>,
+    dims: &[i64],
+) -> Result<xla::Literal> {
+    let v: Vec<f32> = values.map(|x| x as f32).collect();
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        v.len() as i64 == expect,
+        "literal size {} != shape {:?}",
+        v.len(),
+        dims
+    );
+    xla::Literal::vec1(&v)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of shape `dims`.
+pub fn literal_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(values.len() as i64 == expect, "literal size mismatch");
+    xla::Literal::vec1(values)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Extract an f32 literal into f64s.
+pub fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+/// Sentinel coordinate for padded KNN training rows: far enough that a
+/// padded row can never enter the top-k, small enough that its square is
+/// finite in f32 arithmetic on real data scales.
+pub const KNN_PAD_SENTINEL: f64 = 1e15;

@@ -1,0 +1,375 @@
+//! Per-kernel simulation: trace phase (GPU-independent) + timing phase
+//! (GPU/frequency-dependent).
+//!
+//! The trace phase lockstep-executes a stratified sample of warps
+//! ([`crate::sim::warp`]) and extrapolates instruction/memory statistics to
+//! the full launch. Because the trace does not depend on which GPU runs it
+//! (only on the kernel and its launch dimensions), traces are cached and
+//! reused across the whole GPU catalog and DVFS sweep — this is what makes
+//! dataset generation tractable while keeping the *slow* per-instruction
+//! simulation HyPA is benchmarked against honest.
+//!
+//! The timing phase converts a trace into cycles/seconds/activity for one
+//! `(gpu, frequency)` point using an SM issue model, the coalesced-sector
+//! L2/DRAM split, and a latency-hiding (MLP) bound — the same three roofs
+//! as [`crate::gpu::timing`], but fed by measured (simulated) counts
+//! rather than analytical estimates.
+
+use crate::cnn::launch::KernelLaunch;
+use crate::gpu::occupancy::{occupancy, Occupancy};
+use crate::gpu::power::Activity;
+use crate::gpu::specs::{GpuSpec, WARP_SIZE};
+use crate::gpu::timing::{dram_latency_cycles, Bound};
+use crate::ptx::hypa::InstrMix;
+use crate::ptx::interp::Code;
+use crate::sim::memory::{hit_rates_for_sizes, SECTOR_BYTES};
+use crate::sim::warp::{run_warp, warp_envs, WarpStats};
+use crate::util::stats::{ceil_div, interp};
+
+/// GPU-independent statistics of one kernel launch, extrapolated from
+/// sampled warps to the full grid.
+#[derive(Debug, Clone)]
+pub struct KernelTrace {
+    pub name: String,
+    /// Warp-level issues, full launch.
+    pub issues: InstrMix,
+    /// Per-lane executed ops, full launch (drives the energy model).
+    pub lane_ops: InstrMix,
+    /// Global-memory warp issues, full launch.
+    pub mem_issues: f64,
+    /// Coalesced 32 B sectors requested, full launch.
+    pub sectors: f64,
+    /// L2 hit-rate curve at canonical cache sizes (KiB, rate).
+    pub l2_curve: Vec<(usize, f64)>,
+    pub sampled_warps: usize,
+    pub truncated: bool,
+}
+
+/// Trace-phase configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Warps to sample per launch.
+    pub sample_warps: usize,
+    /// Per-warp issue budget.
+    pub warp_budget: u64,
+    /// L2 sizes (KiB) at which to record the hit-rate curve.
+    pub l2_sizes_kib: [usize; 5],
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            sample_warps: 4,
+            warp_budget: 40_000_000,
+            l2_sizes_kib: [256, 1024, 4096, 6144, 40960],
+        }
+    }
+}
+
+/// Interleave per-warp sector streams in fixed-size chunks, approximating
+/// the access order an L2 shared by many concurrent warps observes.
+fn interleave(streams: &[&[u64]], chunk: usize) -> Vec<u64> {
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut pos = vec![0usize; streams.len()];
+    let mut remaining = total;
+    while remaining > 0 {
+        for (i, s) in streams.iter().enumerate() {
+            let p = pos[i];
+            if p < s.len() {
+                let end = (p + chunk).min(s.len());
+                out.extend_from_slice(&s[p..end]);
+                remaining -= end - p;
+                pos[i] = end;
+            }
+        }
+    }
+    out
+}
+
+/// Run the trace phase for one kernel launch.
+pub fn trace(code: &Code, launch: &KernelLaunch, cfg: &TraceConfig) -> KernelTrace {
+    let params = crate::ptx::codegen::param_values(launch);
+    let ntid = launch.resources.threads_per_block as u32;
+    let nctaid = launch.grid_blocks as u32;
+    let warps_per_block = ceil_div(launch.resources.threads_per_block, WARP_SIZE);
+    let total_warps = launch.grid_blocks * warps_per_block;
+    let useful_warps = ceil_div(launch.useful_threads(), WARP_SIZE).max(1);
+
+    // Stratified warp sample over the useful range.
+    let k = cfg.sample_warps.min(useful_warps).max(1);
+    let mut sampled: Vec<(WarpStats, f64)> = Vec::with_capacity(k);
+    let mut truncated = false;
+    for s in 0..k {
+        let lo = s * useful_warps / k;
+        let hi = (((s + 1) * useful_warps) / k).max(lo + 1);
+        let jitter = (s.wrapping_mul(0x9E37_79B9) >> 9) % (hi - lo);
+        let w = (lo + jitter).min(useful_warps - 1);
+        let envs = warp_envs(&params, w, ntid, nctaid);
+        let st = run_warp(code, &envs, cfg.warp_budget);
+        truncated |= st.truncated;
+        sampled.push((st, (hi - lo) as f64));
+    }
+
+    // Scale issue/lane statistics by strata weights.
+    let mut issues = InstrMix::default();
+    let mut lane_ops = InstrMix::default();
+    let mut mem_issues = 0.0;
+    let mut sectors = 0.0;
+    for (st, weight) in &sampled {
+        issues.accumulate(&st.issues.scale(*weight));
+        lane_ops.accumulate(&st.lane_ops.scale(*weight));
+        mem_issues += st.mem_issues as f64 * weight;
+        sectors += st.sectors.len() as f64 * weight;
+    }
+
+    // Guard-only tail warps (padding to the block boundary).
+    let tail = total_warps - useful_warps;
+    if tail > 0 {
+        let envs = warp_envs(&params, total_warps - 1, ntid, nctaid);
+        let st = run_warp(code, &envs, cfg.warp_budget);
+        issues.accumulate(&st.issues.scale(tail as f64));
+        lane_ops.accumulate(&st.lane_ops.scale(tail as f64));
+    }
+
+    // L2 hit-rate curve from interleaved sampled streams.
+    let streams: Vec<&[u64]> = sampled.iter().map(|(s, _)| s.sectors.as_slice()).collect();
+    let merged = interleave(&streams, 8);
+    let l2_curve = if merged.is_empty() {
+        cfg.l2_sizes_kib.iter().map(|&s| (s, 0.0)).collect()
+    } else {
+        hit_rates_for_sizes(&merged, &cfg.l2_sizes_kib)
+    };
+
+    KernelTrace {
+        name: launch.name.clone(),
+        issues,
+        lane_ops,
+        mem_issues,
+        sectors,
+        l2_curve,
+        sampled_warps: sampled.len(),
+        truncated,
+    }
+}
+
+/// Timing/energy result for one kernel on one `(gpu, f)` point.
+#[derive(Debug, Clone)]
+pub struct KernelSim {
+    pub name: String,
+    pub cycles: f64,
+    pub seconds: f64,
+    pub bound: Bound,
+    pub occupancy: Occupancy,
+    pub activity: Activity,
+    pub l2_bytes: f64,
+    pub dram_bytes: f64,
+}
+
+/// Weighted issue cost: SFU ops occupy the narrow special pipe, everything
+/// else single-issues.
+fn weighted_issues(m: &InstrMix) -> f64 {
+    (m.total() - m.sfu) + 4.0 * m.sfu
+}
+
+/// Timing phase: evaluate a trace on a concrete GPU + core frequency.
+pub fn time_on(
+    tracev: &KernelTrace,
+    launch: &KernelLaunch,
+    g: &GpuSpec,
+    f_mhz: f64,
+) -> KernelSim {
+    let f_hz = f_mhz * 1e6;
+    let occ = occupancy(g, &launch.resources);
+
+    // --- compute roof: weighted warp issues over SM issue bandwidth.
+    let issue_width = (g.cores_per_sm / WARP_SIZE) as f64; // warp-instr/cycle/SM
+    let compute_cycles =
+        weighted_issues(&tracev.issues) / (issue_width * g.sm_count as f64);
+
+    // --- memory roof: sector traffic split L2/DRAM by the hit curve.
+    let curve: Vec<(f64, f64)> = tracev
+        .l2_curve
+        .iter()
+        .map(|&(k, r)| (k as f64, r))
+        .collect();
+    let hit = interp(&curve, g.l2_kib as f64).clamp(0.0, 1.0);
+    let bytes = tracev.sectors * SECTOR_BYTES as f64;
+    let dram_bytes = bytes * (1.0 - hit);
+    let l2_bytes = bytes;
+    let mem_seconds = dram_bytes / (g.mem_bw_gbps * 1e9);
+    let mem_cycles = mem_seconds * f_hz;
+
+    // --- latency roof: outstanding-miss parallelism limited by resident
+    // warps.
+    let lat = dram_latency_cycles(g, f_mhz);
+    let miss_issues = tracev.mem_issues * (1.0 - hit);
+    let parallelism = (occ.warps_per_sm as f64 * g.sm_count as f64 * 4.0).max(1.0);
+    let latency_cycles = miss_issues / parallelism * lat;
+
+    let mut cycles = compute_cycles.max(mem_cycles).max(latency_cycles).max(1.0);
+    let bound = if cycles == compute_cycles {
+        Bound::Compute
+    } else if cycles == mem_cycles {
+        Bound::Memory
+    } else {
+        Bound::Latency
+    };
+
+    // Wave quantization: the tail wave runs at partial occupancy.
+    let ctas_per_wave = (occ.blocks_per_sm * g.sm_count).max(1);
+    let waves_frac = launch.grid_blocks as f64 / ctas_per_wave as f64;
+    if waves_frac > 0.0 {
+        let tail_factor = waves_frac.ceil() / waves_frac;
+        // Tail affects at most one wave; damp for long kernels.
+        cycles *= 1.0 + (tail_factor - 1.0) / waves_frac.ceil();
+    }
+
+    let seconds = cycles / f_hz;
+    let activity = Activity {
+        fp_ops: tracev.lane_ops.fp,
+        int_ops: tracev.lane_ops.int + tracev.lane_ops.other,
+        sfu_ops: tracev.lane_ops.sfu,
+        ctrl_ops: tracev.lane_ops.ctrl,
+        smem_bytes: (tracev.lane_ops.load_shared + tracev.lane_ops.store_shared) * 4.0,
+        l2_bytes,
+        dram_bytes,
+        elapsed_s: seconds,
+    };
+    KernelSim {
+        name: tracev.name.clone(),
+        cycles,
+        seconds,
+        bound,
+        occupancy: occ,
+        activity,
+        l2_bytes,
+        dram_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::by_name;
+    use crate::ptx::codegen::{generate, test_conv_launch};
+    use crate::ptx::parser::parse;
+    use crate::ptx::print::kernel_to_text;
+
+    fn build_code(launch: &KernelLaunch) -> Code {
+        let k = generate(launch);
+        let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+        Code::build(&parse(&text).unwrap().kernels[0])
+    }
+
+    #[test]
+    fn trace_fp_matches_closed_form_unpadded() {
+        // Unpadded conv, no divergence: lane fp ops = useful * inC*k*k.
+        let launch = test_conv_launch(2, 4, 10, 8, 3, 1, 0);
+        let code = build_code(&launch);
+        let t = trace(&code, &launch, &TraceConfig::default());
+        let expect = launch.useful_threads() as f64 * (4.0 * 9.0);
+        let rel = (t.lane_ops.fp - expect).abs() / expect;
+        assert!(rel < 0.02, "fp {} vs {}", t.lane_ops.fp, expect);
+        assert!(!t.truncated);
+    }
+
+    #[test]
+    fn trace_matches_hypa_mix() {
+        // Two independent dynamic analyses must agree on lane-op totals.
+        let launch = test_conv_launch(1, 3, 12, 4, 3, 1, 1);
+        let code = build_code(&launch);
+        let t = trace(&code, &launch, &TraceConfig::default());
+        let k = generate(&launch);
+        let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+        let parsed = parse(&text).unwrap();
+        let h = crate::ptx::hypa::analyze(
+            &parsed.kernels[0],
+            &launch,
+            crate::ptx::hypa::HypaConfig::default(),
+        );
+        let rel = (t.lane_ops.total() - h.mix.total()).abs() / h.mix.total();
+        assert!(
+            rel < 0.05,
+            "sim lane ops {} vs hypa {} ({:.2}%)",
+            t.lane_ops.total(),
+            h.mix.total(),
+            rel * 100.0
+        );
+    }
+
+    #[test]
+    fn timing_scales_with_frequency_for_compute_bound() {
+        let launch = test_conv_launch(8, 64, 16, 64, 3, 1, 1);
+        let code = build_code(&launch);
+        let t = trace(&code, &launch, &TraceConfig::default());
+        let g = by_name("v100s").unwrap();
+        let lo = time_on(&t, &launch, &g, 600.0);
+        let hi = time_on(&t, &launch, &g, 1200.0);
+        assert!(lo.seconds > 1.5 * hi.seconds);
+    }
+
+    #[test]
+    fn elementwise_kernel_is_memory_bound_on_v100s() {
+        use crate::cnn::launch::{KernelClass, LaunchDims};
+        use crate::gpu::occupancy::KernelResources;
+        let n = 4 * 1024 * 1024;
+        let launch = KernelLaunch {
+            name: "relu".into(),
+            class: KernelClass::Elementwise,
+            dims: LaunchDims {
+                batch: 1,
+                in_f: n,
+                operands: 1,
+                ..Default::default()
+            },
+            grid_blocks: n / 256,
+            resources: KernelResources {
+                threads_per_block: 256,
+                regs_per_thread: 16,
+                smem_per_block: 0,
+            },
+        };
+        let code = build_code(&launch);
+        let t = trace(&code, &launch, &TraceConfig::default());
+        let g = by_name("v100s").unwrap();
+        let sim = time_on(&t, &launch, &g, g.boost_mhz);
+        assert_eq!(sim.bound, Bound::Memory, "4M-elem relu must be bw-bound");
+        // Streaming data with no reuse: low hit rate → DRAM sees most bytes.
+        assert!(sim.dram_bytes > 0.5 * sim.l2_bytes);
+    }
+
+    #[test]
+    fn small_gpu_slower_than_big_gpu() {
+        let launch = test_conv_launch(4, 32, 28, 32, 3, 1, 1);
+        let code = build_code(&launch);
+        let t = trace(&code, &launch, &TraceConfig::default());
+        let v100s = by_name("v100s").unwrap();
+        let tx1 = by_name("jetson-tx1").unwrap();
+        let fast = time_on(&t, &launch, &v100s, v100s.boost_mhz);
+        let slow = time_on(&t, &launch, &tx1, tx1.boost_mhz);
+        assert!(slow.seconds > 5.0 * fast.seconds);
+    }
+
+    #[test]
+    fn interleave_preserves_all_elements() {
+        let a = vec![1u64, 2, 3];
+        let b = vec![10u64, 20];
+        let merged = interleave(&[&a, &b], 2);
+        assert_eq!(merged.len(), 5);
+        let mut sorted = merged.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 3, 10, 20]);
+    }
+
+    #[test]
+    fn activity_elapsed_matches_seconds() {
+        let launch = test_conv_launch(1, 8, 14, 8, 3, 1, 1);
+        let code = build_code(&launch);
+        let t = trace(&code, &launch, &TraceConfig::default());
+        let g = by_name("t4").unwrap();
+        let s = time_on(&t, &launch, &g, 1000.0);
+        assert!((s.activity.elapsed_s - s.seconds).abs() < 1e-12);
+        assert!(s.activity.fp_ops > 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Memory-system model: per-warp coalescing and an L2 cache simulator.
+//!
+//! The simulator records, for every global load/store issue, the addresses
+//! touched by the active lanes. Those are coalesced into 32-byte sectors
+//! (Volta-style), streamed through a set-associative LRU L2 model, and the
+//! miss traffic becomes DRAM bytes for the power/timing models.
+
+use std::collections::HashMap;
+
+/// Sector (transaction) size in bytes — 32B sectors as on Volta/Turing.
+pub const SECTOR_BYTES: u64 = 32;
+
+/// Coalesce one warp memory issue: lane addresses → distinct sector ids.
+pub fn coalesce(addrs: &[u64], out: &mut Vec<u64>) {
+    out.clear();
+    for &a in addrs {
+        let sector = a / SECTOR_BYTES;
+        if !out.contains(&sector) {
+            out.push(sector);
+        }
+    }
+}
+
+/// Set-associative LRU cache model. Tags are tracked at *sector* (32 B)
+/// granularity — Volta-class L2s are sectored, so a streaming access
+/// pattern that never revisits a sector gets no spurious "neighbour hits"
+/// from 64 B line pairing.
+#[derive(Debug)]
+pub struct CacheModel {
+    sets: usize,
+    ways: usize,
+    /// sets × ways: (sector_id, lru_tick); sector_id == u64::MAX → empty.
+    slots: Vec<(u64, u64)>,
+    tick: u64,
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl CacheModel {
+    /// Build a cache of `size_bytes` with `ways` associativity.
+    pub fn new(size_bytes: usize, ways: usize) -> CacheModel {
+        let sectors = (size_bytes as u64 / SECTOR_BYTES).max(1);
+        let sets = (sectors / ways as u64).max(1) as usize;
+        CacheModel {
+            sets,
+            ways,
+            slots: vec![(u64::MAX, 0); sets * ways],
+            tick: 0,
+            accesses: 0,
+            hits: 0,
+        }
+    }
+
+    /// Access a sector address stream entry; returns true on hit.
+    pub fn access(&mut self, sector: u64) -> bool {
+        let line = sector;
+        let set = (line as usize) % self.sets;
+        let base = set * self.ways;
+        self.tick += 1;
+        self.accesses += 1;
+        // Hit?
+        for w in 0..self.ways {
+            if self.slots[base + w].0 == line {
+                self.slots[base + w].1 = self.tick;
+                self.hits += 1;
+                return true;
+            }
+        }
+        // Miss: fill LRU way.
+        let mut victim = 0;
+        let mut oldest = u64::MAX;
+        for w in 0..self.ways {
+            let (id, t) = self.slots[base + w];
+            if id == u64::MAX {
+                victim = w;
+                break;
+            }
+            if t < oldest {
+                oldest = t;
+                victim = w;
+            }
+        }
+        self.slots[base + victim] = (line, self.tick);
+        false
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Estimate L2 hit rates of a sector stream for several cache sizes in one
+/// pass each. Returns `(size_kib, hit_rate)` pairs sorted by size.
+pub fn hit_rates_for_sizes(stream: &[u64], sizes_kib: &[usize]) -> Vec<(usize, f64)> {
+    let mut out = Vec::with_capacity(sizes_kib.len());
+    for &kib in sizes_kib {
+        let mut c = CacheModel::new(kib * 1024, 16);
+        for &s in stream {
+            c.access(s);
+        }
+        out.push((kib, c.hit_rate()));
+    }
+    out.sort_by_key(|&(k, _)| k);
+    out
+}
+
+/// Count distinct sectors in a stream (compulsory-miss floor).
+pub fn distinct_sectors(stream: &[u64]) -> usize {
+    let mut seen: HashMap<u64, ()> = HashMap::with_capacity(stream.len() / 4 + 1);
+    for &s in stream {
+        seen.insert(s, ());
+    }
+    seen.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesce_contiguous_warp() {
+        // 32 lanes × 4B consecutive → 4 sectors of 32B.
+        let addrs: Vec<u64> = (0..32).map(|i| 0x1000 + i * 4).collect();
+        let mut out = Vec::new();
+        coalesce(&addrs, &mut out);
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn coalesce_strided_warp_explodes() {
+        // 128B stride → every lane its own sector.
+        let addrs: Vec<u64> = (0..32).map(|i| 0x1000 + i * 128).collect();
+        let mut out = Vec::new();
+        coalesce(&addrs, &mut out);
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn coalesce_broadcast_single_sector() {
+        let addrs = vec![0x2000u64; 32];
+        let mut out = Vec::new();
+        coalesce(&addrs, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn cache_hits_on_repeat() {
+        let mut c = CacheModel::new(64 * 1024, 8);
+        assert!(!c.access(100));
+        assert!(c.access(100));
+        // Sectored cache: the neighbouring sector is NOT resident.
+        assert!(!c.access(101));
+        assert!((c.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_evicts_lru() {
+        // 1-set cache with 2 ways holding 32B sectors.
+        let mut c = CacheModel::new(64, 2);
+        assert_eq!(c.sets, 1);
+        c.access(0); // sector 0
+        c.access(2); // sector 2
+        c.access(0); // hit, refresh
+        c.access(4); // sector 4 → evicts sector 2 (LRU)
+        assert!(c.access(0), "sector 0 should still be resident");
+        assert!(!c.access(2), "sector 2 was evicted");
+    }
+
+    #[test]
+    fn working_set_vs_cache_size() {
+        // Stream cycling over 1 MiB working set: tiny cache misses, big
+        // cache hits after the first pass.
+        let sectors_1mib = (1 << 20) / SECTOR_BYTES;
+        let stream: Vec<u64> = (0..3)
+            .flat_map(|_| (0..sectors_1mib).map(|s| s * 2)) // distinct lines
+            .collect();
+        let rates = hit_rates_for_sizes(&stream, &[64, 8192]);
+        let small = rates[0].1;
+        let big = rates[1].1;
+        assert!(small < 0.05, "64 KiB cache should thrash: {small}");
+        assert!(big > 0.6, "8 MiB cache should mostly hit: {big}");
+    }
+
+    #[test]
+    fn distinct_sector_count() {
+        let stream = vec![1, 2, 3, 2, 1, 4];
+        assert_eq!(distinct_sectors(&stream), 4);
+    }
+}

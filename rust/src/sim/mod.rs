@@ -1,0 +1,22 @@
+//! Warp-level GPGPU simulator (GPGPU-Sim-lite).
+//!
+//! This is the substrate the paper's evaluation implicitly depends on
+//! twice over: (a) it generates the power/cycles *labels* that stand in
+//! for the authors' physical V100S measurements, and (b) it is the
+//! "significantly slower" per-instruction simulator HyPA is compared
+//! against (`benches/hypa_speed.rs`).
+//!
+//! Pipeline: [`warp`] lockstep-executes sampled warps of each generated
+//! kernel; [`memory`] models coalescing and the L2; [`kernel`] extrapolates
+//! to the full launch and applies the SM timing model; [`network`] sums
+//! kernels into per-inference latency/power/energy with trace caching.
+
+pub mod kernel;
+pub mod memory;
+pub mod network;
+pub mod warp;
+
+pub use kernel::{time_on, trace, KernelSim, KernelTrace, TraceConfig};
+pub use memory::{CacheModel, SECTOR_BYTES};
+pub use network::{NetSim, Simulator, LAUNCH_OVERHEAD_S};
+pub use warp::{run_warp, warp_envs, WarpStats};

@@ -1,0 +1,261 @@
+//! Whole-network simulation with trace caching.
+//!
+//! [`Simulator`] is the stateful façade the rest of the system uses: give
+//! it a network + batch size + GPU + frequency, get back per-kernel and
+//! total cycles, execution time, activity, and the modelled power/energy —
+//! the "ground truth" labels the ML models are trained against (standing
+//! in for the paper's nvml/nvprof measurements, see DESIGN.md §5).
+//!
+//! Traces are cached by `(kernel class, launch dims)` and shared across
+//! GPUs, frequencies, and even networks (identical layer shapes recur),
+//! which keeps full-catalog dataset generation tractable.
+
+use crate::cnn::ir::Network;
+use crate::cnn::launch::{decompose, KernelLaunch, LaunchDims};
+use crate::gpu::power::{average_power, Activity};
+use crate::gpu::specs::GpuSpec;
+use crate::ptx::codegen::generate;
+use crate::ptx::interp::Code;
+use crate::ptx::parser::parse;
+use crate::ptx::print::kernel_to_text;
+use crate::sim::kernel::{time_on, trace, KernelSim, KernelTrace, TraceConfig};
+use std::collections::HashMap;
+
+/// Fixed host-side kernel-launch overhead (seconds) — CUDA launch latency.
+pub const LAUNCH_OVERHEAD_S: f64 = 4.0e-6;
+
+/// Result of simulating one network inference on one `(gpu, f)` point.
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    pub network: String,
+    pub gpu: String,
+    pub f_mhz: f64,
+    pub batch: usize,
+    pub per_kernel: Vec<KernelSim>,
+    /// GPU-busy cycles (sum over kernels).
+    pub cycles: f64,
+    /// End-to-end inference latency including launch overheads.
+    pub seconds: f64,
+    /// Aggregate activity over the whole inference.
+    pub activity: Activity,
+    /// Modelled average board power over the busy period (W).
+    pub avg_power_w: f64,
+    /// Energy for one inference (J).
+    pub energy_j: f64,
+}
+
+impl NetSim {
+    /// Throughput in inferences/second (batch / latency).
+    pub fn throughput(&self) -> f64 {
+        self.batch as f64 / self.seconds
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct TraceKey {
+    class: crate::cnn::launch::KernelClass,
+    dims: LaunchDims,
+}
+
+/// Stateful simulator with a cross-run trace cache.
+pub struct Simulator {
+    cfg: TraceConfig,
+    traces: HashMap<TraceKey, KernelTrace>,
+    /// Compiled/parsed code cache (same key).
+    code: HashMap<TraceKey, Code>,
+    pub stats_trace_hits: u64,
+    pub stats_trace_misses: u64,
+}
+
+impl Default for Simulator {
+    fn default() -> Self {
+        Self::new(TraceConfig::default())
+    }
+}
+
+impl Simulator {
+    pub fn new(cfg: TraceConfig) -> Simulator {
+        Simulator {
+            cfg,
+            traces: HashMap::new(),
+            code: HashMap::new(),
+            stats_trace_hits: 0,
+            stats_trace_misses: 0,
+        }
+    }
+
+    /// Generate → print → parse → build code for a launch (cached).
+    fn code_for(&mut self, launch: &KernelLaunch) -> &Code {
+        let key = TraceKey {
+            class: launch.class,
+            dims: launch.dims,
+        };
+        self.code.entry(key).or_insert_with(|| {
+            let k = generate(launch);
+            let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+            let m = parse(&text).expect("generated PTX must re-parse");
+            Code::build(&m.kernels[0])
+        })
+    }
+
+    /// Trace one launch (cached by class+dims).
+    pub fn trace_for(&mut self, launch: &KernelLaunch) -> KernelTrace {
+        let key = TraceKey {
+            class: launch.class,
+            dims: launch.dims,
+        };
+        if let Some(t) = self.traces.get(&key) {
+            self.stats_trace_hits += 1;
+            let mut t = t.clone();
+            // Cached under a different kernel name potentially.
+            t.name = launch.name.clone();
+            return t;
+        }
+        self.stats_trace_misses += 1;
+        let cfg = self.cfg;
+        let code = self.code_for(launch).clone();
+        let t = trace(&code, launch, &cfg);
+        self.traces.insert(key, t.clone());
+        t
+    }
+
+    /// Simulate one kernel launch on `(gpu, f)`.
+    pub fn simulate_kernel(
+        &mut self,
+        launch: &KernelLaunch,
+        g: &GpuSpec,
+        f_mhz: f64,
+    ) -> KernelSim {
+        let t = self.trace_for(launch);
+        time_on(&t, launch, g, f_mhz)
+    }
+
+    /// Simulate a full network inference on `(gpu, f)`.
+    pub fn simulate_network(
+        &mut self,
+        net: &Network,
+        batch: usize,
+        g: &GpuSpec,
+        f_mhz: f64,
+    ) -> Result<NetSim, crate::cnn::ir::IrError> {
+        let launches = decompose(net, batch)?;
+        let mut per_kernel = Vec::with_capacity(launches.len());
+        let mut activity = Activity::default();
+        let mut cycles = 0.0;
+        for l in &launches {
+            let s = self.simulate_kernel(l, g, f_mhz);
+            cycles += s.cycles;
+            activity.add(&s.activity);
+            per_kernel.push(s);
+        }
+        let busy_s = activity.elapsed_s;
+        let seconds = busy_s + launches.len() as f64 * LAUNCH_OVERHEAD_S;
+        let avg_power_w = if busy_s > 0.0 {
+            average_power(g, f_mhz, &activity).total_w
+        } else {
+            g.idle_w
+        };
+        // Launch-overhead gaps draw idle-ish power.
+        let energy_j = avg_power_w * busy_s + g.idle_w * (seconds - busy_s);
+        Ok(NetSim {
+            network: net.name.clone(),
+            gpu: g.name.to_string(),
+            f_mhz,
+            batch,
+            per_kernel,
+            cycles,
+            seconds,
+            activity,
+            avg_power_w,
+            energy_j,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::gpu::specs::by_name;
+
+    #[test]
+    fn lenet_simulates_fast_and_sane() {
+        let mut sim = Simulator::default();
+        let g = by_name("v100s").unwrap();
+        let s = sim
+            .simulate_network(&zoo::lenet5(), 1, &g, g.boost_mhz)
+            .unwrap();
+        assert_eq!(s.per_kernel.len(), zoo::lenet5().layers.len());
+        // LeNet on a V100S: well under a millisecond of busy time.
+        assert!(s.seconds < 2e-3, "lenet latency {}", s.seconds);
+        assert!(s.avg_power_w >= g.idle_w && s.avg_power_w <= g.tdp_w * 1.09);
+        assert!(s.energy_j > 0.0);
+    }
+
+    #[test]
+    fn trace_cache_hits_across_gpus_and_freqs() {
+        let mut sim = Simulator::default();
+        let net = zoo::lenet5();
+        let v = by_name("v100s").unwrap();
+        let t = by_name("t4").unwrap();
+        sim.simulate_network(&net, 1, &v, 1000.0).unwrap();
+        let misses_after_first = sim.stats_trace_misses;
+        sim.simulate_network(&net, 1, &v, 600.0).unwrap();
+        sim.simulate_network(&net, 1, &t, 1000.0).unwrap();
+        assert_eq!(
+            sim.stats_trace_misses, misses_after_first,
+            "no new traces needed for other gpus/freqs"
+        );
+        assert!(sim.stats_trace_hits >= 2 * misses_after_first);
+    }
+
+    #[test]
+    fn power_rises_with_frequency() {
+        // The Fig. 2 premise: same net, same GPU, higher clock → more power.
+        let mut sim = Simulator::default();
+        let net = zoo::lenet5();
+        let g = by_name("v100s").unwrap();
+        let lo = sim.simulate_network(&net, 8, &g, 500.0).unwrap();
+        let hi = sim.simulate_network(&net, 8, &g, 1500.0).unwrap();
+        assert!(
+            hi.avg_power_w > lo.avg_power_w + 5.0,
+            "power {} -> {}",
+            lo.avg_power_w,
+            hi.avg_power_w
+        );
+        // And latency falls.
+        assert!(hi.seconds < lo.seconds);
+    }
+
+    #[test]
+    fn bigger_network_costs_more() {
+        let mut sim = Simulator::default();
+        let g = by_name("v100s").unwrap();
+        let small = sim
+            .simulate_network(&zoo::lenet5(), 1, &g, g.base_mhz)
+            .unwrap();
+        let big = sim
+            .simulate_network(&zoo::squeezenet(), 1, &g, g.base_mhz)
+            .unwrap();
+        assert!(big.cycles > 5.0 * small.cycles);
+        assert!(big.energy_j > 5.0 * small.energy_j);
+    }
+
+    #[test]
+    fn batch_increases_throughput() {
+        let mut sim = Simulator::default();
+        let g = by_name("v100s").unwrap();
+        let b1 = sim
+            .simulate_network(&zoo::lenet5(), 1, &g, g.base_mhz)
+            .unwrap();
+        let b16 = sim
+            .simulate_network(&zoo::lenet5(), 16, &g, g.base_mhz)
+            .unwrap();
+        assert!(
+            b16.throughput() > 2.0 * b1.throughput(),
+            "batching must amortize: {} vs {}",
+            b16.throughput(),
+            b1.throughput()
+        );
+    }
+}

@@ -1,0 +1,238 @@
+//! Lockstep SIMT warp executor.
+//!
+//! Executes one 32-lane warp of a kernel with min-PC scheduling: at each
+//! step the warp issues the instruction at the *smallest* program counter
+//! held by any unretired lane, for exactly the lanes sitting at that PC
+//! (the active mask). Structured control flow (forward if-skips, backward
+//! loop edges — the only shapes our codegen emits) reconverges naturally
+//! under this discipline, because lanes that skip ahead simply wait at the
+//! join point while the lanes still inside the region catch up.
+//!
+//! Output: warp-level issue counts, per-lane executed-op counts (for the
+//! energy model), and the coalesced global-memory sector stream (for the
+//! cache model).
+
+use crate::gpu::specs::WARP_SIZE;
+use crate::ptx::ast::{InstrClass, Space};
+use crate::ptx::hypa::InstrMix;
+use crate::ptx::interp::{Code, MemHook, Thread, ThreadEnv};
+use crate::sim::memory::coalesce;
+
+/// Per-warp execution statistics.
+#[derive(Debug, Clone, Default)]
+pub struct WarpStats {
+    /// Warp-level instruction issues by class.
+    pub issues: InstrMix,
+    /// Per-lane executed operations by class (Σ over lanes of each issue).
+    pub lane_ops: InstrMix,
+    /// Coalesced global-memory sector ids, in issue order (loads+stores).
+    pub sectors: Vec<u64>,
+    /// Number of global load/store issues.
+    pub mem_issues: u64,
+    /// Total issue steps.
+    pub steps: u64,
+    /// True if the step budget was exhausted before retirement.
+    pub truncated: bool,
+}
+
+/// Memory hook that records lane addresses for the current issue.
+struct RecordingMem {
+    addrs: Vec<u64>,
+}
+
+impl MemHook for RecordingMem {
+    fn load(&mut self, space: Space, addr: u64) -> f64 {
+        if space == Space::Global {
+            self.addrs.push(addr);
+        }
+        // Deterministic synthetic value; FP values never drive control flow
+        // in the generated kernels.
+        ((addr >> 2) % 257) as f64 / 257.0
+    }
+    fn store(&mut self, space: Space, addr: u64, _value: f64) {
+        if space == Space::Global {
+            self.addrs.push(addr);
+        }
+    }
+}
+
+/// Execute one warp (`warp_idx` within the launch) to completion.
+///
+/// `envs` must hold one [`ThreadEnv`] per lane (tid differs per lane).
+/// `budget` bounds total issue steps (guards against pathological loops).
+pub fn run_warp(code: &Code, envs: &[ThreadEnv], budget: u64) -> WarpStats {
+    assert_eq!(envs.len(), WARP_SIZE);
+    let mut lanes: Vec<Thread> = (0..WARP_SIZE).map(|_| Thread::new(code)).collect();
+    let mut stats = WarpStats::default();
+    let mut mem = RecordingMem { addrs: Vec::new() };
+    let mut sector_buf: Vec<u64> = Vec::new();
+
+    loop {
+        // Min PC over unretired lanes.
+        let mut min_pc = usize::MAX;
+        for l in &lanes {
+            if !l.done && l.pc < min_pc {
+                min_pc = l.pc;
+            }
+        }
+        if min_pc == usize::MAX || min_pc >= code.len() {
+            break;
+        }
+        if stats.steps >= budget {
+            stats.truncated = true;
+            break;
+        }
+        let instr = &code.instrs[min_pc];
+        let target = code.bra_target[min_pc];
+        let class = instr.class();
+
+        // Execute for all lanes parked at min_pc.
+        mem.addrs.clear();
+        let mut active = 0usize;
+        for (lane, env) in lanes.iter_mut().zip(envs) {
+            if !lane.done && lane.pc == min_pc {
+                lane.exec(instr, target, env, &mut mem);
+                active += 1;
+            }
+        }
+
+        stats.steps += 1;
+        stats.issues.add_class(class, 1.0);
+        stats.lane_ops.add_class(class, active as f64);
+
+        if matches!(class, InstrClass::LoadGlobal | InstrClass::StoreGlobal) {
+            stats.mem_issues += 1;
+            coalesce(&mem.addrs, &mut sector_buf);
+            stats.sectors.extend_from_slice(&sector_buf);
+        }
+    }
+    stats
+}
+
+/// Build per-lane environments for warp `warp_idx` of a launch.
+pub fn warp_envs(
+    params: &[(String, u64)],
+    warp_idx: usize,
+    ntid: u32,
+    nctaid: u32,
+) -> Vec<ThreadEnv> {
+    let warps_per_block = (ntid as usize) / WARP_SIZE;
+    let block = warp_idx / warps_per_block;
+    let warp_in_block = warp_idx % warps_per_block;
+    (0..WARP_SIZE)
+        .map(|lane| {
+            crate::ptx::interp::env_for_thread(
+                params,
+                block as u32,
+                (warp_in_block * WARP_SIZE + lane) as u32,
+                ntid,
+                nctaid,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::codegen::{generate, param_values, test_conv_launch};
+    use crate::ptx::parser::parse;
+    use crate::ptx::print::kernel_to_text;
+
+    fn setup(
+        launch: &crate::cnn::launch::KernelLaunch,
+    ) -> (Code, Vec<(String, u64)>) {
+        let k = generate(launch);
+        let text = format!(".version 7.0\n.target sm_70\n{}", kernel_to_text(&k));
+        let m = parse(&text).unwrap();
+        (Code::build(&m.kernels[0]), param_values(launch))
+    }
+
+    #[test]
+    fn warp_retires_and_counts_fp() {
+        // Unpadded conv: no divergence; every lane does in_c*k*k fmas.
+        let launch = test_conv_launch(1, 2, 10, 4, 3, 1, 0);
+        let (code, params) = setup(&launch);
+        let envs = warp_envs(&params, 0, 256, launch.grid_blocks as u32);
+        let s = run_warp(&code, &envs, u64::MAX);
+        assert!(!s.truncated);
+        // lane fp ops = 32 lanes × 18 fmas.
+        assert_eq!(s.lane_ops.fp as u64, 32 * 18);
+        // no divergence → warp issues 18 fma steps.
+        assert_eq!(s.issues.fp as u64, 18);
+    }
+
+    #[test]
+    fn divergent_boundary_warp_issues_more() {
+        // Padded conv: warp 0 covers corner+edge pixels → divergence makes
+        // per-lane work differ; lockstep still retires everyone.
+        let launch = test_conv_launch(1, 2, 10, 4, 3, 1, 1);
+        let (code, params) = setup(&launch);
+        let envs = warp_envs(&params, 0, 256, launch.grid_blocks as u32);
+        let s = run_warp(&code, &envs, u64::MAX);
+        assert!(!s.truncated);
+        // Interior lanes do 18 fmas; boundary lanes fewer. Warp-level fma
+        // issues must be ≥ max-lane (18) and lane ops < 32*18.
+        assert!(s.issues.fp as u64 >= 12);
+        assert!((s.lane_ops.fp as u64) < 32 * 18);
+        assert!((s.lane_ops.fp as u64) > 0);
+    }
+
+    #[test]
+    fn guard_warp_beyond_total_is_cheap() {
+        let launch = test_conv_launch(1, 2, 10, 4, 3, 1, 0);
+        let (code, params) = setup(&launch);
+        // A warp index far past the useful range.
+        let beyond = launch.grid_blocks * 8; // 256/32 = 8 warps per block
+        let envs = warp_envs(&params, beyond + 5, 256, launch.grid_blocks as u32);
+        let s = run_warp(&code, &envs, u64::MAX);
+        assert!(s.steps < 30, "guard-only warp took {} steps", s.steps);
+        assert_eq!(s.lane_ops.fp, 0.0);
+    }
+
+    #[test]
+    fn coalescing_contiguous_output_stores() {
+        // Elementwise-style accesses: thread idx maps 1:1 to f32 elements →
+        // a 32-lane warp's store coalesces into 4 sectors.
+        let launch = test_conv_launch(1, 1, 18, 1, 3, 1, 0); // out 16x16=256
+        let (code, params) = setup(&launch);
+        let envs = warp_envs(&params, 0, 256, launch.grid_blocks as u32);
+        let s = run_warp(&code, &envs, u64::MAX);
+        // Final store: 32 consecutive f32 → 4 sectors; they are the last 4
+        // entries of the stream.
+        let tail: Vec<u64> = s.sectors[s.sectors.len() - 4..].to_vec();
+        let mut sorted = tail.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+    }
+
+    #[test]
+    fn lockstep_matches_independent_threads_on_lane_ops() {
+        // Lane-op totals from the lockstep executor must equal the sum of
+        // independently interpreted threads (divergence changes issue
+        // counts, never lane-op counts).
+        use crate::ptx::interp::NullMem;
+        let launch = test_conv_launch(1, 2, 6, 2, 3, 1, 1);
+        let (code, params) = setup(&launch);
+        let envs = warp_envs(&params, 0, 256, launch.grid_blocks as u32);
+        let s = run_warp(&code, &envs, u64::MAX);
+
+        let mut indep = 0u64;
+        for env in &envs {
+            let mut t = Thread::new(&code);
+            indep += t.run(&code, env, &mut NullMem, usize::MAX).unwrap() as u64;
+        }
+        let lane_total = s.lane_ops.total() as u64;
+        assert_eq!(lane_total, indep);
+    }
+
+    #[test]
+    fn budget_truncation_flagged() {
+        let launch = test_conv_launch(1, 64, 16, 8, 3, 1, 1);
+        let (code, params) = setup(&launch);
+        let envs = warp_envs(&params, 0, 256, launch.grid_blocks as u32);
+        let s = run_warp(&code, &envs, 100);
+        assert!(s.truncated);
+    }
+}

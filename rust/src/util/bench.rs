@@ -1,0 +1,124 @@
+//! Micro-benchmark harness.
+//!
+//! `criterion` is not in the offline vendor set, so the `cargo bench`
+//! targets (all `harness = false`) use this small timing harness: warmup,
+//! fixed-duration sampling, and mean / p50 / p95 reporting with a
+//! `black_box` to defeat dead-code elimination.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export so benches write `bench::black_box(..)`.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        crate::util::stats::mean(&self.samples)
+    }
+    pub fn p50(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples, 95.0)
+    }
+    pub fn std(&self) -> f64 {
+        crate::util::stats::std_dev(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            crate::util::table::dur(self.mean()),
+            crate::util::table::dur(self.p50()),
+            crate::util::table::dur(self.p95()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Time `f` repeatedly: a short warmup, then sample until `budget` elapses
+/// (at least `min_samples` samples, at most `max_samples`).
+pub fn run<F, R>(name: &str, budget: Duration, mut f: F) -> Measurement
+where
+    F: FnMut() -> R,
+{
+    // Warmup: ~10% of budget or 3 iterations, whichever is more.
+    let warm_until = Instant::now() + budget.mul_f64(0.1);
+    let mut warm_iters = 0;
+    while warm_iters < 3 || Instant::now() < warm_until {
+        bb(f());
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let min_samples = 10;
+    let max_samples = 10_000;
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < min_samples || start.elapsed() < budget)
+        && samples.len() < max_samples
+    {
+        let t0 = Instant::now();
+        bb(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        samples,
+    }
+}
+
+/// Run + print in one call; returns the measurement for further use.
+pub fn bench<F, R>(name: &str, budget: Duration, f: F) -> Measurement
+where
+    F: FnMut() -> R,
+{
+    let m = run(name, budget, f);
+    println!("{}", m.report());
+    m
+}
+
+/// Default per-benchmark budget, overridable with `BENCH_BUDGET_MS`.
+pub fn default_budget() -> Duration {
+    let ms = std::env::var("BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300u64);
+    Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let m = run("noop", Duration::from_millis(20), || 1 + 1);
+        assert!(m.samples.len() >= 10);
+        assert!(m.mean() >= 0.0);
+        assert!(m.report().contains("noop"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = run("spin", Duration::from_millis(20), || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(m.p50() <= m.p95() + 1e-12);
+    }
+}

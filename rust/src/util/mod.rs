@@ -1,0 +1,9 @@
+//! Shared utilities: PRNG, statistics, JSON, tables, property testing,
+//! and the micro-benchmark harness used by the `cargo bench` targets.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,90 @@
+//! Tiny property-based testing helper.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so this module
+//! provides the subset we need: run a property over many seeded random
+//! inputs, and on failure report the exact case index + seed so the failure
+//! can be replayed deterministically (`PROP_SEED=<seed> cargo test`).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable via `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` on `cases` random inputs. The property receives a fresh `Rng`
+/// per case and returns `Err(message)` to fail. Panics with a replayable
+/// seed on the first failure.
+pub fn check_named<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} (replay: PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a property with the default case count.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_named(name, default_cases(), prop);
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_named("count", 10, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        check_named("fails", 10, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.0, "x={x} not negative");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,211 @@
+//! Plain-text table rendering for benchmark reports and examples.
+//!
+//! The benchmark harness prints the same rows/series the paper reports;
+//! this module produces the aligned, markdown-compatible tables used in
+//! EXPERIMENTS.md and on stdout.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from `&str` cells.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as a markdown-compatible pipe table with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimal places.
+pub fn f(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Format a number with SI-ish magnitude suffix (k, M, G).
+pub fn si(x: f64) -> String {
+    let a = x.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn dur(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.2}s")
+    } else if seconds >= 1e-3 {
+        format!("{:.2}ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.2}us", seconds * 1e6)
+    } else {
+        format!("{:.0}ns", seconds * 1e9)
+    }
+}
+
+/// Render a simple ASCII sparkline-style series plot (for DVFS sweeps etc.),
+/// two series overlaid: `a` drawn with '*', `b` with 'o', collisions '#'.
+pub fn ascii_plot2(
+    title: &str,
+    xs: &[f64],
+    a: &[f64],
+    b: &[f64],
+    label_a: &str,
+    label_b: &str,
+    height: usize,
+) -> String {
+    assert_eq!(xs.len(), a.len());
+    assert_eq!(xs.len(), b.len());
+    let n = xs.len();
+    if n == 0 {
+        return String::new();
+    }
+    let ymin = a
+        .iter()
+        .chain(b.iter())
+        .cloned()
+        .fold(f64::INFINITY, f64::min);
+    let ymax = a
+        .iter()
+        .chain(b.iter())
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-9);
+    let level = |y: f64| -> usize {
+        (((y - ymin) / span) * (height - 1) as f64).round() as usize
+    };
+    let mut grid = vec![vec![b' '; n]; height];
+    for i in 0..n {
+        let la = level(a[i]);
+        let lb = level(b[i]);
+        grid[height - 1 - la][i] = b'*';
+        let cell = &mut grid[height - 1 - lb][i];
+        *cell = if *cell == b'*' { b'#' } else { b'o' };
+    }
+    let mut out = format!(
+        "{title}   [*={label_a}  o={label_b}  #=both]   y:[{ymin:.1}, {ymax:.1}]\n"
+    );
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(n));
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["net", "mape"]);
+        t.row_str(&["resnet18", "5.03"]);
+        t.row_str(&["vgg16", "4.2"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines same width.
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(r.contains("resnet18"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(si(1500.0), "1.50k");
+        assert_eq!(si(2.5e6), "2.50M");
+        assert_eq!(dur(0.002), "2.00ms");
+        assert_eq!(dur(2.0), "2.00s");
+    }
+
+    #[test]
+    fn plot_has_expected_shape() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [4.0, 3.0, 2.0, 1.0];
+        let p = ascii_plot2("t", &xs, &a, &b, "a", "b", 5);
+        assert_eq!(p.lines().count(), 7); // title + 5 rows + axis
+        assert!(p.contains('*') && p.contains('o'));
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration tests across coordinator + runtime + offload server.
+//! Requires `artifacts/` (`make artifacts`); tests no-op politely if absent.
+
+use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::offload::{OffloadClient, OffloadServer, ServerState};
+use hypa_dse::util::json::Json;
+use hypa_dse::util::rng::Rng;
+use std::sync::Arc;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/meta.json").exists()
+}
+
+/// Train small models on synthetic data; return (power forest, cycles knn).
+fn small_models(rng: &mut Rng, d: usize) -> (RandomForest, Knn, Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+    let n = 300;
+    let mut x = Vec::with_capacity(n);
+    let mut yp = Vec::with_capacity(n);
+    let mut yc = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f64> = (0..d).map(|_| rng.f64() * 3.0).collect();
+        yp.push(40.0 + 25.0 * row[0] * row[0] + 5.0 * row[1 % d]);
+        yc.push(1e7 * (1.0 + row[0]) * (1.0 + 0.1 * row[2 % d]));
+        x.push(row);
+    }
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 16,
+        max_depth: 10,
+        ..Default::default()
+    });
+    forest.fit(&x, &yp);
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &yc);
+    (forest, knn, x, yp, yc)
+}
+
+#[test]
+fn prediction_service_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rng = Rng::new(1);
+    let d = 8;
+    let (forest, knn, x, _, _) = small_models(&mut rng, d);
+    let native_p = forest.predict(&x[..40].to_vec());
+    let native_c = knn.predict(&x[..40].to_vec());
+
+    let service = PredictionService::start(
+        "artifacts".into(),
+        forest,
+        knn,
+        d,
+        BatchPolicy::default(),
+    )
+    .expect("service start");
+    let p = service.predictor();
+
+    // Bulk submission exercises batching.
+    let got_p = p.predict_many(Task::Power, &x[..40]).unwrap();
+    let got_c = p.predict_many(Task::Cycles, &x[..40]).unwrap();
+    for i in 0..40 {
+        let rp = (got_p[i] - native_p[i]).abs() / native_p[i].max(1.0);
+        let rc = (got_c[i] - native_c[i]).abs() / native_c[i].max(1.0);
+        assert!(rp < 1e-2, "power[{i}]: {} vs {}", got_p[i], native_p[i]);
+        assert!(rc < 5e-3, "cycles[{i}]: {} vs {}", got_c[i], native_c[i]);
+    }
+    // Batching actually batched (fill > 1 on average).
+    assert!(p.metrics.mean_batch_fill() > 1.5, "{}", p.metrics.summary());
+}
+
+#[test]
+fn prediction_service_concurrent_clients() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rng = Rng::new(3);
+    let d = 6;
+    let (forest, knn, x, _, _) = small_models(&mut rng, d);
+    let service = PredictionService::start(
+        "artifacts".into(),
+        forest,
+        knn,
+        d,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let p = service.predictor();
+        let rows: Vec<Vec<f64>> = x[t * 20..(t + 1) * 20].to_vec();
+        handles.push(std::thread::spawn(move || {
+            let task = if t % 2 == 0 { Task::Power } else { Task::Cycles };
+            let out = p.predict_many(task, &rows).unwrap();
+            assert_eq!(out.len(), 20);
+            assert!(out.iter().all(|v| v.is_finite()));
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(service.predictor().metrics.summary().contains("requests=80"));
+}
+
+#[test]
+fn rest_predict_uses_ml_predictor() {
+    if !have_artifacts() {
+        return;
+    }
+    // Feature width must match the real extractor (the REST endpoint
+    // builds real features), so train on real-shaped synthetic rows.
+    let d = hypa_dse::ml::features::all_feature_names().len();
+    let mut rng = Rng::new(5);
+    let (forest, knn, _, _, _) = small_models(&mut rng, d);
+    let service = PredictionService::start(
+        "artifacts".into(),
+        forest,
+        knn,
+        d,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let state = Arc::new(ServerState::new(Some(service.predictor())));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+    let (status, body) = client
+        .post(
+            "/v1/predict",
+            r#"{"network":"lenet5","gpu":"t4","f_mhz":900,"batch":1}"#,
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("source").unwrap().as_str(), Some("ml-predictor"));
+    assert!(j.get("power_w").unwrap().as_f64().unwrap().is_finite());
+}
+
+#[test]
+fn offload_decide_over_rest_matches_direct_model() {
+    // No predictor needed (simulator path).
+    let state = Arc::new(ServerState::new(None));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+    let req = r#"{"network":"squeezenet","batch":1,"bandwidth_mbps":2000,"rtt_ms":2,
+                  "local_latency_s":0.5,"cloud_latency_s":0.01}"#;
+    let (status, body) = client.post("/v1/offload/decide", req).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    // Fast link + slow edge → offload.
+    assert_eq!(
+        j.get("recommendation").unwrap().as_str(),
+        Some("offload"),
+        "{j:?}"
+    );
+    // Direct model agrees.
+    use hypa_dse::offload::{
+        decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
+    };
+    let net = hypa_dse::cnn::zoo::squeezenet();
+    let profile = EdgePowerProfile::jetson_tx1();
+    let d = decide(
+        local_estimate(0.5, &profile),
+        offload_estimate(
+            &net,
+            1,
+            &Link {
+                bandwidth_mbps: 2000.0,
+                rtt_ms: 2.0,
+            },
+            0.01,
+            &profile,
+        ),
+        &Constraints {
+            max_latency_s: None,
+            max_energy_j: None,
+        },
+    );
+    let rest_energy = j
+        .path(&["offload", "device_energy_j"])
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!((rest_energy - d.offload.device_energy_j).abs() < 1e-9);
+}

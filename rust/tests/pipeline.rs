@@ -1,0 +1,194 @@
+//! Whole-pipeline integration: simulator → dataset → feature extraction →
+//! model training → prediction quality, plus HyPA-vs-simulator agreement
+//! on real zoo networks. Pure-rust (no artifacts needed).
+
+use hypa_dse::cnn::launch::decompose;
+use hypa_dse::cnn::zoo;
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::ml::dataset::Target;
+use hypa_dse::ml::datagen::{generate, DatagenConfig};
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::metrics::{mape, r2};
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::ml::validate::train_test_indices;
+use hypa_dse::ptx::codegen::generate_module;
+use hypa_dse::ptx::hypa::{analyze_network, HypaConfig};
+use hypa_dse::ptx::parser::parse;
+use hypa_dse::ptx::print::to_text;
+use hypa_dse::sim::{Simulator, TraceConfig};
+
+/// Small-but-real dataset: 2 GPUs, few freqs, small nets only.
+fn small_dataset() -> hypa_dse::ml::dataset::Dataset {
+    let cfg = DatagenConfig {
+        freq_steps: 6,
+        batches: vec![1],
+        widths: vec![0.25],
+        resolutions: vec![],
+        gpus: vec!["v100s".into(), "t4".into(), "jetson-tx1".into()],
+        ..Default::default()
+    };
+    let mut sim = Simulator::new(TraceConfig {
+        sample_warps: 3,
+        ..Default::default()
+    });
+    // variants(cfg) includes width-0.25 copies of the big nets — still a
+    // lot; trim to the 6 cheapest variants for test runtime.
+    let mut data = hypa_dse::ml::dataset::Dataset {
+        feature_names: hypa_dse::ml::features::all_feature_names(),
+        ..Default::default()
+    };
+    let nets: Vec<_> = hypa_dse::ml::datagen::variants(&cfg)
+        .into_iter()
+        .filter(|n| {
+            let f = n.totals().map(|t| t.flops).unwrap_or(f64::MAX);
+            f < 1e9 // < 1 GFLOP nets only
+        })
+        .take(8)
+        .collect();
+    assert!(nets.len() >= 3, "need several small variants");
+    let gpus: Vec<_> = hypa_dse::gpu::specs::catalog()
+        .into_iter()
+        .filter(|g| cfg.gpus.iter().any(|n| n == g.name))
+        .collect();
+    let mut rng = hypa_dse::Rng::new(cfg.seed);
+    for net in &nets {
+        let desc = hypa_dse::ml::features::NetDescriptor::build(net, 1).unwrap();
+        for g in &gpus {
+            for f_mhz in g.dvfs_steps(cfg.freq_steps) {
+                let s = sim.simulate_network(net, 1, g, f_mhz).unwrap();
+                let noise = rng.mult_noise(cfg.noise_sigma, 1.2);
+                data.push(
+                    desc.features(g, f_mhz),
+                    s.avg_power_w * noise,
+                    s.cycles * rng.mult_noise(cfg.noise_sigma, 1.2),
+                    hypa_dse::ml::dataset::SampleMeta {
+                        network: net.name.clone(),
+                        gpu: g.name.to_string(),
+                        f_mhz,
+                        batch: 1,
+                    },
+                );
+            }
+        }
+    }
+    data
+}
+
+#[test]
+fn models_learn_simulated_labels() {
+    let data = small_dataset();
+    assert!(data.len() >= 100, "dataset too small: {}", data.len());
+    let (tr, te) = train_test_indices(data.len(), 0.25, 3);
+    let train = data.subset(&tr);
+    let test = data.subset(&te);
+
+    // Power via random forest (the paper's winner for power).
+    let mut forest = RandomForest::new(ForestConfig::default());
+    forest.fit(&train.x, train.y(Target::PowerW));
+    let preds = forest.predict(&test.x);
+    let m = mape(test.y(Target::PowerW), &preds);
+    let r = r2(test.y(Target::PowerW), &preds);
+    assert!(m < 15.0, "power MAPE {m:.2}% too high");
+    assert!(r > 0.85, "power R² {r:.3} too low");
+
+    // Cycles via KNN (the paper's winner for performance).
+    let mut knn = Knn::new(3);
+    knn.fit(&train.x, train.y(Target::Cycles));
+    let preds = knn.predict(&test.x);
+    let m = mape(test.y(Target::Cycles), &preds);
+    assert!(m < 25.0, "cycles MAPE {m:.2}% too high");
+}
+
+#[test]
+fn generate_helper_roundtrips_via_disk() {
+    let cfg = DatagenConfig {
+        freq_steps: 3,
+        batches: vec![1],
+        widths: vec![0.25],
+        resolutions: vec![],
+        gpus: vec!["t4".into()],
+        ..Default::default()
+    };
+    // Use the library generate() on a trimmed variant list via tiny cfg:
+    // full variants would be slow; instead run generate with the tiny cfg
+    // but only assert on structure.
+    let mut sim = Simulator::default();
+    let mut small = cfg.clone();
+    small.widths = vec![0.25];
+    let t0 = std::time::Instant::now();
+    let data = generate(&mut sim, &small).unwrap();
+    assert!(data.len() > 0);
+    assert_eq!(data.n_features(), data.feature_names.len());
+    let path = "/tmp/hypa_dse_pipeline_dataset.json";
+    data.save(path).unwrap();
+    let loaded = hypa_dse::ml::dataset::Dataset::load(path).unwrap();
+    assert_eq!(loaded.len(), data.len());
+    std::fs::remove_file(path).ok();
+    eprintln!("generate_helper took {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+#[test]
+fn hypa_and_simulator_agree_on_zoo_kernels() {
+    // The two independent dynamic analyses (slice-interpreted HyPA and
+    // lockstep warp simulation) must report consistent lane-op totals on
+    // every lenet kernel.
+    let net = zoo::lenet5();
+    let launches = decompose(&net, 1).unwrap();
+    let module = generate_module(&launches);
+    let parsed = parse(&to_text(&module)).unwrap();
+    let agg = analyze_network(&parsed.kernels, &launches, HypaConfig::default());
+
+    let mut sim = Simulator::default();
+    let mut sim_total = 0.0;
+    for l in &launches {
+        sim_total += sim.trace_for(l).lane_ops.total();
+    }
+    let rel = (agg.mix.total() - sim_total).abs() / sim_total;
+    assert!(
+        rel < 0.05,
+        "hypa {:.3e} vs sim {:.3e} ({:.2}%)",
+        agg.mix.total(),
+        sim_total,
+        rel * 100.0
+    );
+}
+
+#[test]
+fn dvfs_power_curve_is_monotone_and_superlinear() {
+    // The Fig. 2 premise, end to end through the simulator: power rises
+    // with frequency, and the rise steepens (V² effect).
+    let mut sim = Simulator::default();
+    let g = by_name("v100s").unwrap();
+    let net = zoo::lenet5();
+    let freqs: Vec<f64> = g.dvfs_steps(8);
+    let powers: Vec<f64> = freqs
+        .iter()
+        .map(|&f| sim.simulate_network(&net, 8, &g, f).unwrap().avg_power_w)
+        .collect();
+    for w in powers.windows(2) {
+        assert!(w[1] > w[0], "power not monotone: {powers:?}");
+    }
+    // Superlinearity: last-step slope > first-step slope.
+    let d_first = powers[1] - powers[0];
+    let d_last = powers[powers.len() - 1] - powers[powers.len() - 2];
+    assert!(
+        d_last > d_first,
+        "no superlinear DVFS effect: {powers:?}"
+    );
+}
+
+#[test]
+fn cycles_decrease_with_bigger_gpu() {
+    let mut sim = Simulator::default();
+    let net = zoo::squeezenet();
+    let tx1 = by_name("jetson-tx1").unwrap();
+    let v100s = by_name("v100s").unwrap();
+    let small = sim
+        .simulate_network(&net, 1, &tx1, tx1.boost_mhz)
+        .unwrap();
+    let big = sim
+        .simulate_network(&net, 1, &v100s, v100s.boost_mhz)
+        .unwrap();
+    assert!(small.seconds > 3.0 * big.seconds);
+}

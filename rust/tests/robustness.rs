@@ -1,0 +1,206 @@
+//! Robustness & failure-injection tests: malformed inputs must produce
+//! errors (never panics/corruption), and independent estimators must stay
+//! mutually consistent.
+
+use hypa_dse::cnn::launch::decompose;
+use hypa_dse::cnn::zoo;
+use hypa_dse::gpu::occupancy::occupancy;
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::gpu::timing::{estimate, KernelWork};
+use hypa_dse::ptx::parser::parse;
+use hypa_dse::sim::Simulator;
+use hypa_dse::util::json::Json;
+use hypa_dse::util::prop;
+use hypa_dse::util::rng::Rng;
+
+#[test]
+fn parser_rejects_mutated_programs_without_panicking() {
+    // Take a real generated kernel, mutate random bytes, and require the
+    // parser to either parse (harmless mutation) or return Err — never
+    // panic. This is the fuzz-lite guard for the text front door.
+    let launch = hypa_dse::ptx::codegen::test_conv_launch(1, 3, 8, 4, 3, 1, 1);
+    let k = hypa_dse::ptx::codegen::generate(&launch);
+    let base = format!(
+        ".version 7.0\n.target sm_70\n{}",
+        hypa_dse::ptx::print::kernel_to_text(&k)
+    );
+    prop::check_named("parser fuzz", 200, |rng: &mut Rng| {
+        let mut bytes = base.clone().into_bytes();
+        for _ in 0..rng.int_range(1, 6) {
+            let i = rng.below(bytes.len());
+            bytes[i] = b" %rdfabc0123;.()[]"[rng.below(18)];
+        }
+        if let Ok(text) = String::from_utf8(bytes) {
+            // Must not panic; Err is fine.
+            let _ = parse(&text);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_parser_survives_mutations() {
+    let base = r#"{"a": [1, 2.5, {"b": "x\ny", "c": null}], "d": true}"#;
+    prop::check_named("json fuzz", 300, |rng: &mut Rng| {
+        let mut bytes = base.as_bytes().to_vec();
+        for _ in 0..rng.int_range(1, 4) {
+            let i = rng.below(bytes.len());
+            bytes[i] = b"{}[],:\"0123456789ae"[rng.below(19)];
+        }
+        if let Ok(text) = String::from_utf8(bytes) {
+            if let Ok(v) = Json::parse(&text) {
+                // Anything that parses must re-parse from its own output.
+                let re = Json::parse(&v.to_string()).unwrap();
+                crate::assert_json_eq(&v, &re)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+fn assert_json_eq(a: &Json, b: &Json) -> Result<(), String> {
+    if a != b {
+        return Err(format!("roundtrip mismatch: {a:?} vs {b:?}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn sim_and_analytical_timing_agree_within_factor() {
+    // The warp simulator and the closed-form roofline model are built
+    // independently; on a clean compute-bound conv they must agree within
+    // a small factor (sanity net for both).
+    let mut sim = Simulator::default();
+    let g = by_name("v100s").unwrap();
+    let net = zoo::squeezenet();
+    let launches = decompose(&net, 8).unwrap();
+    // Largest conv launch.
+    let l = launches
+        .iter()
+        .filter(|l| l.class == hypa_dse::cnn::launch::KernelClass::DirectConv)
+        .max_by_key(|l| l.useful_threads())
+        .unwrap();
+    let s = sim.simulate_kernel(l, &g, g.boost_mhz);
+
+    // Analytical estimate from HyPA-style counts.
+    let t = sim.trace_for(l);
+    let occ = occupancy(&g, &l.resources);
+    let w = KernelWork {
+        instructions: t.lane_ops.total(),
+        fp_fraction: t.lane_ops.fp / t.lane_ops.total(),
+        dram_bytes: s.dram_bytes,
+        l2_bytes: s.l2_bytes,
+        threads: l.useful_threads() as f64,
+    };
+    let a = estimate(&g, g.boost_mhz, &w, &occ);
+    let ratio = s.seconds / a.seconds;
+    assert!(
+        (0.3..3.0).contains(&ratio),
+        "sim {:.3e}s vs analytical {:.3e}s (ratio {ratio:.2})",
+        s.seconds,
+        a.seconds
+    );
+}
+
+#[test]
+fn decompose_rejects_zero_batch() {
+    let net = zoo::lenet5();
+    let r = std::panic::catch_unwind(|| decompose(&net, 0));
+    assert!(r.is_err(), "batch 0 must be rejected (assert)");
+}
+
+#[test]
+fn scaled_variant_that_breaks_shapes_errors_cleanly() {
+    // Tiny input resolution breaks the deep pooling stack of vgg16:
+    // analyze() must return Err (not panic), and datagen skips it.
+    let bad = zoo::scale_input(&zoo::vgg16(), 20);
+    assert!(bad.analyze().is_err());
+}
+
+#[test]
+fn service_rejects_wrong_feature_width() {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        return;
+    }
+    use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
+    use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+    use hypa_dse::ml::knn::Knn;
+    use hypa_dse::ml::regressor::Regressor;
+    let mut rng = Rng::new(9);
+    let d = 6;
+    let x: Vec<Vec<f64>> = (0..100)
+        .map(|_| (0..d).map(|_| rng.f64()).collect())
+        .collect();
+    let y: Vec<f64> = (0..100).map(|_| rng.f64() * 10.0).collect();
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 8,
+        max_depth: 6,
+        ..Default::default()
+    });
+    forest.fit(&x, &y);
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &y);
+    let service =
+        PredictionService::start("artifacts".into(), forest, knn, d, BatchPolicy::default())
+            .unwrap();
+    let p = service.predictor();
+    // Wrong width (d+3): the batch fails, the error must reach the caller
+    // AND the service must keep serving correct requests afterwards.
+    let bad = p.predict(Task::Cycles, vec![0.0; d + 3]);
+    assert!(bad.is_err());
+    let good = p.predict(Task::Cycles, vec![0.1; d]);
+    assert!(good.is_ok(), "service must survive a failed batch");
+}
+
+#[test]
+fn offload_server_survives_garbage_requests() {
+    use hypa_dse::offload::{OffloadClient, OffloadServer, ServerState};
+    use std::sync::Arc;
+    let state = Arc::new(ServerState::new(None));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+    // Garbage JSON.
+    let (status, _) = client.post("/v1/offload/decide", "{not json").unwrap();
+    assert_eq!(status, 400);
+    // Wrong types.
+    let (status, _) = client
+        .post("/v1/offload/decide", r#"{"network": 42}"#)
+        .unwrap();
+    assert_eq!(status, 400);
+    // Raw garbage over the socket (not even HTTP).
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(srv.addr).unwrap();
+        s.write_all(b"\x00\x01\x02garbage\r\n\r\n").unwrap();
+    }
+    // Server still healthy.
+    let (status, _) = client.get("/health").unwrap();
+    assert_eq!(status, 200);
+}
+
+#[test]
+fn prop_simulator_monotone_in_network_size() {
+    // Wider variant of the same net must never be cheaper in cycles.
+    let mut sim = Simulator::default();
+    let g = by_name("t4").unwrap();
+    prop::check_named("sim monotone in width", 6, |rng: &mut Rng| {
+        let base = zoo::lenet5();
+        let w1 = 0.5 + rng.f64();
+        let w2 = w1 + 0.5;
+        let n1 = zoo::scale_width(&base, w1);
+        let n2 = zoo::scale_width(&base, w2);
+        let c1 = sim
+            .simulate_network(&n1, 1, &g, g.base_mhz)
+            .map_err(|e| e.to_string())?
+            .cycles;
+        let c2 = sim
+            .simulate_network(&n2, 1, &g, g.base_mhz)
+            .map_err(|e| e.to_string())?
+            .cycles;
+        hypa_dse::prop_assert!(
+            c2 >= c1 * 0.95,
+            "wider net cheaper: w{w1:.2}={c1:.3e} vs w{w2:.2}={c2:.3e}"
+        );
+        Ok(())
+    });
+}
