@@ -116,8 +116,8 @@ fn main() -> anyhow::Result<()> {
         mape(&real, &pred)
     );
 
-    // ---- 5. DSE through the XLA coordinator -------------------------------
-    if std::path::Path::new("artifacts/meta.json").exists() {
+    // ---- 5. DSE through the batched coordinator ---------------------------
+    {
         let service = PredictionService::start(
             "artifacts".into(),
             power_model,
@@ -162,8 +162,6 @@ fn main() -> anyhow::Result<()> {
         print!("{}", t.render());
         println!("    best under 250 W: {} @ {:.0} MHz (batch {})", ranked[0].point.gpu, ranked[0].point.f_mhz, ranked[0].point.batch);
         println!("    coordinator: {}\n", predictor.metrics.summary());
-    } else {
-        println!("[5] skipped DSE (run `make artifacts` first)\n");
     }
 
     // ---- 6. offload sanity -------------------------------------------------

@@ -1,27 +1,68 @@
 //! Hot-path performance benchmarks (the §Perf deliverable).
 //!
-//! Measures every stage of the request path and the heavy build-time
-//! paths, with `BENCH_BUDGET_MS` controlling per-measurement budget:
+//! Measures every stage of the batched DSE evaluation engine against its
+//! scalar baseline, with `BENCH_BUDGET_MS` controlling per-measurement
+//! budget:
 //!
-//! * XLA batched prediction (forest + knn) throughput vs the native rust
-//!   implementations — the L3 batching decision hinges on this ratio;
-//! * coordinator round-trip latency (single + bulk);
-//! * HyPA per-kernel analysis throughput;
-//! * simulator trace + timing throughput;
-//! * feature extraction.
+//! * native forest batch-256 prediction (SoA level-wise descent, threaded)
+//!   vs the per-tree pointer-chase baseline (`predict_one` per row);
+//! * the AOT-shape `ForestTensor` batch descent vs its scalar descent;
+//! * native kNN batch-256 (flat matrix, blocked distances, O(n) top-k)
+//!   vs the scalar per-row scan;
+//! * coordinator service round trips: single-row vs one bulk submission;
+//! * `explore` over the default grid (catalog × 8 freq steps × 4 batches):
+//!   sequential vs worker-pool sharded;
+//! * feature extraction and the simulator timing path.
+//!
+//! Besides the human-readable table, writes `BENCH_hotpath.json` (p50 ns
+//! per stage, predictions/sec, before/after ratios) so the perf trajectory
+//! is tracked across PRs.
+
+use std::time::Duration;
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
+use hypa_dse::dse::{explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints};
+use hypa_dse::ml::batch::{BatchForest, BatchKnn};
 use hypa_dse::ml::features::NetDescriptor;
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
 use hypa_dse::ml::knn::Knn;
 use hypa_dse::ml::regressor::Regressor;
-use hypa_dse::runtime::{ForestExecutable, KnnExecutable, Runtime};
-use hypa_dse::util::bench;
+use hypa_dse::util::bench::{self, Measurement};
+use hypa_dse::util::json::{jnum, Json};
+use hypa_dse::util::pool;
 use hypa_dse::util::rng::Rng;
+
+struct Record {
+    json: Json,
+}
+
+impl Record {
+    fn new() -> Record {
+        Record { json: Json::obj() }
+    }
+
+    /// Record one stage: p50/mean latency plus items-per-second at p50.
+    fn stage(&mut self, m: &Measurement, items_per_call: usize) {
+        let mut o = Json::obj();
+        o.set("p50_ns", jnum(m.p50() * 1e9))
+            .set("mean_ns", jnum(m.mean() * 1e9))
+            .set(
+                "per_sec",
+                jnum(items_per_call as f64 / m.p50().max(1e-12)),
+            );
+        self.json.set(&m.name.replace(' ', "_"), o);
+    }
+}
 
 fn main() {
     let budget = bench::default_budget();
-    println!("== hot-path benchmarks (budget {:?} per measurement) ==\n", budget);
+    println!(
+        "== hot-path benchmarks (budget {:?} per measurement, {} threads) ==\n",
+        budget,
+        pool::num_threads()
+    );
+    let mut stages = Record::new();
+    let mut ratios = Json::obj();
 
     // Synthetic trained models at realistic sizes.
     let mut rng = Rng::new(1);
@@ -39,74 +80,154 @@ fn main() {
     let mut knn = Knn::new(3);
     knn.fit(&x, &y);
 
-    let queries: Vec<Vec<f64>> = (0..256)
+    const B: usize = 256;
+    let queries: Vec<Vec<f64>> = (0..B)
         .map(|_| (0..d).map(|_| rng.f64() * 5.0).collect())
         .collect();
 
-    println!("-- native (rust) batch-256 prediction --");
-    let m_nf = bench::bench("native forest predict x256", budget, || {
+    println!("-- forest batch-256: SoA batch kernel vs per-tree pointer chase --");
+    let m_fs = bench::bench("forest scalar x256", budget, || {
+        queries.iter().map(|q| forest.predict_one(q)).collect::<Vec<f64>>()
+    });
+    let staged_forest = BatchForest::from_forest(&forest);
+    let m_fb = bench::bench("forest batch x256", budget, || {
+        staged_forest.predict_many(&queries)
+    });
+    let m_fbu = bench::bench("forest batch unstaged x256", budget, || {
         forest.predict(&queries)
     });
-    let m_nk = bench::bench("native knn (n=2000) predict x256", budget, || {
-        knn.predict(&queries)
+    let forest_ratio = m_fs.p50() / m_fb.p50();
+    println!("  speedup (staged batch vs scalar): {forest_ratio:.2}x\n");
+    stages.stage(&m_fs, B);
+    stages.stage(&m_fb, B);
+    stages.stage(&m_fbu, B);
+    ratios.set("forest_batch_vs_scalar", jnum(forest_ratio));
+
+    println!("-- AOT-shape ForestTensor descent --");
+    let tensor = forest.export_tensor(forest.max_tree_nodes());
+    let depth = forest.max_tree_depth();
+    let m_ts = bench::bench("tensor scalar x256", budget, || {
+        queries
+            .iter()
+            .map(|q| tensor.predict_one(q, depth))
+            .collect::<Vec<f64>>()
     });
+    let m_tb = bench::bench("tensor batch x256", budget, || {
+        tensor.predict_batch(&queries, depth)
+    });
+    let tensor_ratio = m_ts.p50() / m_tb.p50();
+    println!("  speedup: {tensor_ratio:.2}x\n");
+    stages.stage(&m_ts, B);
+    stages.stage(&m_tb, B);
+    ratios.set("tensor_batch_vs_scalar", jnum(tensor_ratio));
 
-    if std::path::Path::new("artifacts/meta.json").exists() {
-        println!("\n-- XLA executable batch-256 prediction --");
-        let mut rt = Runtime::new("artifacts").unwrap();
-        let fx = ForestExecutable::stage(&mut rt, &forest, d).unwrap();
-        let kx = KnnExecutable::stage(&mut rt, &knn).unwrap();
-        let m_xf = bench::bench("xla forest predict x256", budget, || {
-            fx.predict(&rt, &queries).unwrap()
-        });
-        let m_xk = bench::bench("xla knn predict x256", budget, || {
-            kx.predict(&rt, &queries).unwrap()
-        });
-        println!(
-            "\nspeed ratios (native/xla): forest {:.2}x, knn {:.2}x",
-            m_nf.p50() / m_xf.p50(),
-            m_nk.p50() / m_xk.p50()
-        );
+    println!("-- knn (n=2000) batch-256: flat-matrix kernel vs scalar scan --");
+    let m_ks = bench::bench("knn scalar x256", budget, || {
+        queries.iter().map(|q| knn.predict_one(q)).collect::<Vec<f64>>()
+    });
+    let staged_knn = BatchKnn::from_model(&knn);
+    let m_kb = bench::bench("knn batch x256", budget, || {
+        staged_knn.predict_many(&queries)
+    });
+    let knn_ratio = m_ks.p50() / m_kb.p50();
+    println!("  speedup: {knn_ratio:.2}x\n");
+    stages.stage(&m_ks, B);
+    stages.stage(&m_kb, B);
+    ratios.set("knn_batch_vs_scalar", jnum(knn_ratio));
 
-        println!("\n-- coordinator service round trips --");
-        let service = PredictionService::start(
-            "artifacts".into(),
-            forest.clone(),
-            knn.clone(),
-            d,
-            BatchPolicy::default(),
-        )
-        .unwrap();
-        let p = service.predictor();
-        bench::bench("service single predict (power)", budget, || {
-            p.predict(Task::Power, queries[0].clone()).unwrap()
-        });
-        bench::bench("service bulk predict x256 (power)", budget, || {
-            p.predict_many(Task::Power, &queries).unwrap()
-        });
-        bench::bench("service bulk predict x256 (cycles)", budget, || {
-            p.predict_many(Task::Cycles, &queries).unwrap()
-        });
-        println!("service metrics: {}", p.metrics.summary());
-    } else {
-        println!("\n(artifacts missing — skipping XLA/coordinator benches; run `make artifacts`)");
+    println!("-- coordinator service round trips --");
+    let service = PredictionService::start(
+        "artifacts".into(),
+        forest.clone(),
+        knn.clone(),
+        d,
+        BatchPolicy::default(),
+    )
+    .expect("prediction service");
+    let p = service.predictor();
+    let m_ss = bench::bench("service single predict (power)", budget, || {
+        p.predict(Task::Power, queries[0].clone()).unwrap()
+    });
+    let m_sb = bench::bench("service bulk x256 (power)", budget, || {
+        p.predict_many(Task::Power, &queries).unwrap()
+    });
+    let m_sc = bench::bench("service bulk x256 (cycles)", budget, || {
+        p.predict_many(Task::Cycles, &queries).unwrap()
+    });
+    // Per-row cost: single round trip vs one bulk row.
+    let service_ratio = m_ss.p50() / (m_sb.p50() / B as f64);
+    println!("  per-row speedup (bulk vs single round trip): {service_ratio:.2}x\n");
+    stages.stage(&m_ss, 1);
+    stages.stage(&m_sb, B);
+    stages.stage(&m_sc, B);
+    ratios.set("service_bulk_vs_single_per_row", jnum(service_ratio));
+
+    println!("-- explore: default grid (catalog x 8 freq steps x 4 batches) --");
+    let net = hypa_dse::cnn::zoo::lenet5();
+    let space = DesignSpace::default_grid(8, &[1, 2, 4, 8]);
+    let constraints = DseConstraints {
+        max_power_w: Some(250.0),
+        respect_memory: true,
+        ..Default::default()
+    };
+    let cache = DescriptorCache::new();
+    // Warm the descriptor cache so both variants measure pure scoring.
+    let _ = explore_seq(&net, &space, &p, &constraints, &cache).expect("explore");
+    let explore_budget = budget.min(Duration::from_millis(500));
+    // Serial baseline: pin the pool to one thread (disables both grid
+    // sharding and kernel-internal threading); bulk predictions execute on
+    // the calling thread, so the pin is deterministic here.
+    let saved_threads = std::env::var("HYPA_DSE_THREADS").ok();
+    std::env::set_var("HYPA_DSE_THREADS", "1");
+    let m_es = bench::bench("explore serial 1 thread", explore_budget, || {
+        explore_seq(&net, &space, &p, &constraints, &cache).unwrap()
+    });
+    match &saved_threads {
+        Some(v) => std::env::set_var("HYPA_DSE_THREADS", v),
+        None => std::env::remove_var("HYPA_DSE_THREADS"),
     }
+    let m_ep = bench::bench("explore parallel", explore_budget, || {
+        explore_with_cache(&net, &space, &p, &constraints, &cache).unwrap()
+    });
+    let explore_ratio = m_es.p50() / m_ep.p50();
+    println!(
+        "  {} points; parallel speedup {:.2}x ({:.0} points/s)\n",
+        space.len(),
+        explore_ratio,
+        space.len() as f64 / m_ep.p50()
+    );
+    stages.stage(&m_es, space.len());
+    stages.stage(&m_ep, space.len());
+    ratios.set("explore_parallel_vs_seq", jnum(explore_ratio));
+    println!("service metrics: {}", p.metrics.summary());
 
     println!("\n-- analysis paths --");
-    let net = hypa_dse::cnn::zoo::resnet18();
-    bench::bench("feature extraction resnet18 (IR+PTX+HyPA)", budget, || {
-        NetDescriptor::build(&net, 1).unwrap()
+    let resnet = hypa_dse::cnn::zoo::resnet18();
+    let m_feat = bench::bench("feature extraction resnet18 (IR+PTX+HyPA)", budget, || {
+        NetDescriptor::build(&resnet, 1).unwrap()
     });
+    stages.stage(&m_feat, 1);
     let small = hypa_dse::cnn::zoo::lenet5();
-    bench::bench("NetDescriptor lenet5", budget, || {
+    let m_lenet = bench::bench("NetDescriptor lenet5", budget, || {
         NetDescriptor::build(&small, 1).unwrap()
     });
+    stages.stage(&m_lenet, 1);
 
     let mut sim = hypa_dse::sim::Simulator::default();
     let g = hypa_dse::gpu::specs::by_name("v100s").unwrap();
     // Warm the trace cache, then measure the analytic timing path alone.
     let _ = sim.simulate_network(&small, 1, &g, 1000.0).unwrap();
-    bench::bench("sim lenet5 (traces cached, timing only)", budget, || {
+    let m_sim = bench::bench("sim lenet5 (traces cached, timing only)", budget, || {
         sim.simulate_network(&small, 1, &g, 997.0).unwrap()
     });
+    stages.stage(&m_sim, 1);
+
+    let mut out = Json::obj();
+    out.set("threads", jnum(pool::num_threads() as f64))
+        .set("batch", jnum(B as f64))
+        .set("grid_points", jnum(space.len() as f64))
+        .set("stages", stages.json)
+        .set("ratios", ratios);
+    std::fs::write("BENCH_hotpath.json", out.pretty()).expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json");
 }

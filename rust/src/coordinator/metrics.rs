@@ -10,6 +10,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub errors: AtomicU64,
+    /// `Predictor::predict` invocations (one-row round trips).
+    pub single_calls: AtomicU64,
+    /// `Predictor::predict_many` invocations (bulk submissions).
+    pub bulk_calls: AtomicU64,
     /// Recent per-batch latencies (seconds), ring buffer.
     latencies: Mutex<Vec<f64>>,
 }
@@ -36,6 +40,26 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One single-row `predict` call.
+    pub fn record_single(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.single_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One bulk `predict_many` call covering `rows` rows.
+    pub fn record_bulk(&self, rows: usize) {
+        self.requests.fetch_add(rows as u64, Ordering::Relaxed);
+        self.bulk_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn single_calls(&self) -> u64 {
+        self.single_calls.load(Ordering::Relaxed)
+    }
+
+    pub fn bulk_calls(&self) -> u64 {
+        self.bulk_calls.load(Ordering::Relaxed)
+    }
+
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
@@ -58,8 +82,10 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} fill={:.1} p50={} p95={} errors={}",
+            "requests={} singles={} bulks={} batches={} fill={:.1} p50={} p95={} errors={}",
             self.requests.load(Ordering::Relaxed),
+            self.single_calls.load(Ordering::Relaxed),
+            self.bulk_calls.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_fill(),
             crate::util::table::dur(self.latency_percentile(50.0)),

@@ -1,13 +1,20 @@
 //! Batched prediction service: the L3 coordination hot path.
 //!
-//! DSE sweeps and the offload REST API submit feature vectors for scoring;
-//! a dedicated worker thread owns the PJRT runtime and the staged model
-//! executables, collects requests into AOT-sized batches (dynamic
-//! batching: fill up to the batch capacity, or flush when the queue goes
-//! momentarily idle), executes the XLA predictor once per batch, and
-//! routes each result back to its requester. This is the vLLM-router
-//! pattern scaled to the paper's workload: many small independent
-//! predictions with a throughput-optimal batched backend.
+//! DSE sweeps and the offload REST API submit feature vectors for scoring.
+//! The staged models live in an immutable, thread-safe [`Engine`]:
+//!
+//! * **Single-row requests** ([`Predictor::predict`]) go through a
+//!   dedicated worker thread that collects them into batches (dynamic
+//!   batching: fill up to the batch capacity, or flush when the queue goes
+//!   momentarily idle) and answers each requester — the vLLM-router
+//!   pattern scaled to the paper's workload: many small independent
+//!   predictions with a throughput-optimal batched backend.
+//! * **Bulk submissions** ([`Predictor::predict_many`]) execute the batch
+//!   kernel *directly on the calling thread* against the shared engine —
+//!   no channel round trip at all, and concurrent callers (e.g. the
+//!   sharded `explore` worker pool) score truly in parallel. This is the
+//!   §Perf fix for `explore`'s 2×N single-row round trips, measured in
+//!   `benches/hotpath.rs` as the single-vs-bulk service ratio.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -29,6 +36,23 @@ pub enum Task {
     Cycles,
 }
 
+/// The staged models plus their runtime — immutable after staging and
+/// shared (`Arc`) between the batching worker and every bulk caller.
+struct Engine {
+    rt: Runtime,
+    forest: ForestExecutable,
+    knn: KnnExecutable,
+}
+
+impl Engine {
+    fn execute(&self, task: Task, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        match task {
+            Task::Power => self.forest.predict(&self.rt, rows),
+            Task::Cycles => self.knn.predict(&self.rt, rows),
+        }
+    }
+}
+
 struct Request {
     task: Task,
     features: Vec<f64>,
@@ -44,6 +68,7 @@ enum Control {
 #[derive(Clone)]
 pub struct Predictor {
     tx: mpsc::Sender<Control>,
+    engine: Arc<Engine>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -53,7 +78,7 @@ pub struct PredictionService {
     predictor: Predictor,
 }
 
-/// Batching policy.
+/// Batching policy for single-row requests.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Max items per batch per task (AOT capacity).
@@ -72,9 +97,10 @@ impl Default for BatchPolicy {
 }
 
 impl PredictionService {
-    /// Start the service: stages the trained models onto the PJRT runtime
-    /// inside the worker thread (Runtime is not Send-safe to share, so it
-    /// lives entirely on the worker).
+    /// Start the service: stages the trained models onto the runtime, then
+    /// spawns the single-row batching worker. `artifacts_dir` anchors the
+    /// (optional) AOT metadata; the native backend needs no artifacts on
+    /// disk.
     pub fn start(
         artifacts_dir: String,
         power_model: RandomForest,
@@ -82,47 +108,27 @@ impl PredictionService {
         n_features: usize,
         policy: BatchPolicy,
     ) -> Result<PredictionService> {
+        let mut rt = Runtime::new(&artifacts_dir)?;
+        let forest = ForestExecutable::stage(&mut rt, &power_model, n_features)?;
+        let knn = KnnExecutable::stage(&mut rt, &cycles_model)?;
+        let engine = Arc::new(Engine { rt, forest, knn });
+
         let (tx, rx) = mpsc::channel::<Control>();
         let metrics = Arc::new(Metrics::new());
         let m = metrics.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-
+        let worker_engine = engine.clone();
         let handle = std::thread::Builder::new()
             .name("predictor".into())
-            .spawn(move || {
-                let mut rt = match Runtime::new(&artifacts_dir) {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                let staged = (|| -> Result<(ForestExecutable, KnnExecutable)> {
-                    Ok((
-                        ForestExecutable::stage(&mut rt, &power_model, n_features)?,
-                        KnnExecutable::stage(&mut rt, &cycles_model)?,
-                    ))
-                })();
-                let (forest, knn) = match staged {
-                    Ok(s) => s,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                let _ = ready_tx.send(Ok(()));
-                worker_loop(rt, forest, knn, rx, m, policy);
-            })
+            .spawn(move || worker_loop(worker_engine, rx, m, policy))
             .map_err(|e| anyhow!("spawn: {e}"))?;
-
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("prediction worker died during startup"))?
-            .map_err(|e| anyhow!("prediction service startup: {e}"))?;
 
         Ok(PredictionService {
             handle: Some(handle),
-            predictor: Predictor { tx, metrics },
+            predictor: Predictor {
+                tx,
+                engine,
+                metrics,
+            },
         })
     }
 
@@ -144,7 +150,7 @@ impl Predictor {
     /// Predict one feature vector (blocks until the batch it joins runs).
     pub fn predict(&self, task: Task, features: Vec<f64>) -> Result<f64> {
         let (tx, rx) = mpsc::channel();
-        self.metrics.record_request();
+        self.metrics.record_single();
         self.tx
             .send(Control::Request(Request {
                 task,
@@ -157,51 +163,33 @@ impl Predictor {
             .map_err(|e| anyhow!(e))
     }
 
-    /// Predict many feature vectors; submits all up front so the batcher
-    /// can fill whole batches, then collects in order.
+    /// Predict many feature vectors as one batch, executed directly on the
+    /// calling thread against the shared engine (no queueing, no copies).
+    /// Results come back in input order; concurrent bulk callers run in
+    /// parallel.
     pub fn predict_many(&self, task: Task, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
-        let mut pending = Vec::with_capacity(rows.len());
-        for row in rows {
-            let (tx, rx) = mpsc::channel();
-            self.metrics.record_request();
-            self.tx
-                .send(Control::Request(Request {
-                    task,
-                    features: row.clone(),
-                    respond: tx,
-                }))
-                .map_err(|_| anyhow!("prediction service stopped"))?;
-            pending.push(rx);
+        if rows.is_empty() {
+            return Ok(Vec::new());
         }
-        pending
-            .into_iter()
-            .map(|rx| {
-                rx.recv()
-                    .map_err(|_| anyhow!("dropped request"))?
-                    .map_err(|e| anyhow!(e))
-            })
-            .collect()
+        self.metrics.record_bulk(rows.len());
+        let t0 = Instant::now();
+        let result = self.engine.execute(task, rows);
+        if result.is_err() {
+            self.metrics.record_error();
+        }
+        self.metrics
+            .record_batch(rows.len(), t0.elapsed().as_secs_f64());
+        result
     }
 }
 
-fn flush(
-    rt: &Runtime,
-    forest: &ForestExecutable,
-    knn: &KnnExecutable,
-    task: Task,
-    queue: &mut Vec<Request>,
-    metrics: &Metrics,
-) {
+fn flush(engine: &Engine, task: Task, queue: &mut Vec<Request>, metrics: &Metrics) {
     if queue.is_empty() {
         return;
     }
     let t0 = Instant::now();
     let feats: Vec<Vec<f64>> = queue.iter().map(|r| r.features.clone()).collect();
-    let result = match task {
-        Task::Power => forest.predict(rt, &feats),
-        Task::Cycles => knn.predict(rt, &feats),
-    };
-    match result {
+    match engine.execute(task, &feats) {
         Ok(values) => {
             for (req, v) in queue.drain(..).zip(values) {
                 let _ = req.respond.send(Ok(v));
@@ -219,9 +207,7 @@ fn flush(
 }
 
 fn worker_loop(
-    rt: Runtime,
-    forest: ForestExecutable,
-    knn: KnnExecutable,
+    engine: Arc<Engine>,
     rx: mpsc::Receiver<Control>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
@@ -230,15 +216,14 @@ fn worker_loop(
     let mut cycles_q: Vec<Request> = Vec::new();
     'outer: loop {
         // Block for the first item.
-        let first = match rx.recv() {
-            Ok(Control::Request(r)) => r,
+        match rx.recv() {
+            Ok(Control::Request(r)) => match r.task {
+                Task::Power => power_q.push(r),
+                Task::Cycles => cycles_q.push(r),
+            },
             Ok(Control::Shutdown) | Err(_) => break,
-        };
-        match first.task {
-            Task::Power => power_q.push(first),
-            Task::Cycles => cycles_q.push(first),
         }
-        // Linger to fill batches.
+        // Linger to fill batches of single-row requests.
         let deadline = Instant::now() + policy.linger;
         loop {
             let timeout = deadline.saturating_duration_since(Instant::now());
@@ -259,18 +244,18 @@ fn worker_loop(
                             Task::Power => &mut power_q,
                             Task::Cycles => &mut cycles_q,
                         };
-                        flush(&rt, &forest, &knn, task, q, &metrics);
+                        flush(&engine, task, q, &metrics);
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Ok(Control::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    flush(&rt, &forest, &knn, Task::Power, &mut power_q, &metrics);
-                    flush(&rt, &forest, &knn, Task::Cycles, &mut cycles_q, &metrics);
+                    flush(&engine, Task::Power, &mut power_q, &metrics);
+                    flush(&engine, Task::Cycles, &mut cycles_q, &metrics);
                     break 'outer;
                 }
             }
         }
-        flush(&rt, &forest, &knn, Task::Power, &mut power_q, &metrics);
-        flush(&rt, &forest, &knn, Task::Cycles, &mut cycles_q, &metrics);
+        flush(&engine, Task::Power, &mut power_q, &metrics);
+        flush(&engine, Task::Cycles, &mut cycles_q, &metrics);
     }
 }

@@ -5,21 +5,38 @@
 //! `GPU catalog × DVFS step × batch size` for a given CNN; each point is
 //! scored by the *ML predictors* (power via random forest, cycles via KNN
 //! — the paper's winning models) served through the coordinator's batched
-//! XLA service, and ranked under user constraints (power cap, latency
-//! target, memory capacity).
+//! service, and ranked under user constraints (power cap, latency target,
+//! memory capacity).
+//!
+//! The evaluation engine is built for throughput (predictions/sec is the
+//! metric DSE quality scales with):
+//!
+//! * [`DescriptorCache`] — feature extraction per `(network, batch)` and
+//!   the GPU-name index are computed once and shared by [`explore`],
+//!   [`search::random_search`] and [`search::local_search`], instead of
+//!   per-call `HashMap` rebuilds and O(catalog) linear lookups;
+//! * [`explore`] shards the grid across a scoped worker pool
+//!   ([`crate::util::pool`]), each shard scoring its rows with two bulk
+//!   [`Predictor::predict_many`] calls; shards are concatenated in order,
+//!   so the output is identical (element-for-element) to the sequential
+//!   path — asserted by `rust/tests/batch_parity.rs`.
 
 pub mod search;
 
-use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
 
 use crate::cnn::ir::Network;
 use crate::cnn::launch::working_set_bytes;
 use crate::coordinator::{Predictor, Task};
 use crate::gpu::specs::{catalog, GpuSpec};
 use crate::ml::features::NetDescriptor;
+use crate::util::pool;
 
 /// One candidate design point.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DesignPoint {
     pub gpu: String,
     pub f_mhz: f64,
@@ -27,7 +44,7 @@ pub struct DesignPoint {
 }
 
 /// A scored design point.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScoredPoint {
     pub point: DesignPoint,
     /// Predicted average power (W).
@@ -91,64 +108,260 @@ impl DesignSpace {
     }
 }
 
-/// Score every point with the batched ML predictor.
+/// Shared evaluation-engine state: the GPU-name index (prebuilt once, no
+/// per-candidate `find()` scans) and the per-`(network, batch)` feature
+/// descriptors (HyPA + IR analysis — by far the most expensive part of
+/// scoring a candidate, and identical across the GPU/frequency axes).
+///
+/// Thread-safe: `explore` shares one cache across its worker shards, and a
+/// long-lived service can share one across whole sweeps.
+pub struct DescriptorCache {
+    gpus: Vec<GpuSpec>,
+    index: HashMap<String, usize>,
+    descs: Mutex<HashMap<(String, usize), Arc<NetDescriptor>>>,
+}
+
+impl DescriptorCache {
+    /// Cache over the full GPU catalog.
+    pub fn new() -> DescriptorCache {
+        Self::with_gpus(catalog())
+    }
+
+    /// Cache over a restricted GPU set.
+    pub fn with_gpus(gpus: Vec<GpuSpec>) -> DescriptorCache {
+        let index = gpus
+            .iter()
+            .enumerate()
+            .map(|(i, g)| (g.name.to_string(), i))
+            .collect();
+        DescriptorCache {
+            gpus,
+            index,
+            descs: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The GPU set this cache indexes.
+    pub fn gpus(&self) -> &[GpuSpec] {
+        &self.gpus
+    }
+
+    /// O(1) GPU lookup; unknown names are an error, not a panic.
+    pub fn gpu(&self, name: &str) -> Result<&GpuSpec> {
+        self.index
+            .get(name)
+            .map(|&i| &self.gpus[i])
+            .ok_or_else(|| anyhow!("design point names unknown GPU '{name}'"))
+    }
+
+    /// Feature descriptor for `(net, batch)`, built on first use.
+    ///
+    /// The cache key is the network *name* (plus batch): the zoo
+    /// guarantees variant names are unique, and a cheap structural check
+    /// below catches the misuse of sharing one cache across two different
+    /// networks that happen to collide on a name.
+    pub fn descriptor(&self, net: &Network, batch: usize) -> Result<Arc<NetDescriptor>> {
+        let key = (net.name.clone(), batch);
+        if let Some(d) = self.descs.lock().unwrap().get(&key) {
+            anyhow::ensure!(
+                d.input_numel == net.input.numel()
+                    && d.totals.layers == net.layers.len(),
+                "descriptor cache collision: two different networks named \
+                 '{}' were used with the same cache",
+                net.name
+            );
+            return Ok(d.clone());
+        }
+        // Build outside the lock (expensive); a racing duplicate build is
+        // harmless — last writer wins, both values are identical.
+        let built = Arc::new(NetDescriptor::build(net, batch)?);
+        self.descs
+            .lock()
+            .unwrap()
+            .insert(key, built.clone());
+        Ok(built)
+    }
+
+    /// Number of cached descriptors (introspection/tests).
+    pub fn cached_descriptors(&self) -> usize {
+        self.descs.lock().unwrap().len()
+    }
+}
+
+impl Default for DescriptorCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Derive the scored record for one design point from its predicted power
+/// and cycles. `mem_ok` carries the (optional) memory-capacity check.
+pub(crate) fn derive_scored(
+    p: &DesignPoint,
+    power_w: f64,
+    cycles: f64,
+    constraints: &DseConstraints,
+    mem_ok: bool,
+) -> ScoredPoint {
+    let latency = cycles.max(1.0) / (p.f_mhz * 1e6);
+    let throughput = p.batch as f64 / latency;
+    let energy = power_w * latency / p.batch as f64;
+    let mut feasible = mem_ok;
+    if let Some(cap) = constraints.max_power_w {
+        feasible &= power_w <= cap;
+    }
+    if let Some(cap) = constraints.max_latency_s {
+        feasible &= latency <= cap;
+    }
+    if let Some(min) = constraints.min_throughput {
+        feasible &= throughput >= min;
+    }
+    ScoredPoint {
+        point: p.clone(),
+        power_w,
+        cycles,
+        latency_s: latency,
+        throughput,
+        energy_per_inf_j: energy,
+        feasible,
+    }
+}
+
+/// Minimum design points per worker shard (below this, spawn cost beats
+/// the win).
+const EXPLORE_MIN_SHARD: usize = 32;
+
+/// Score every point with the batched ML predictor, sharding the grid
+/// across the worker pool. Output order matches `space.points`.
 pub fn explore(
     net: &Network,
     space: &DesignSpace,
     predictor: &Predictor,
     constraints: &DseConstraints,
 ) -> Result<Vec<ScoredPoint>> {
-    let gpus = catalog();
-    let gpu_of = |name: &str| gpus.iter().find(|g| g.name == name).unwrap();
+    explore_with_cache(net, space, predictor, constraints, &DescriptorCache::new())
+}
 
-    // Feature extraction per (net, batch) is reused across GPU/freq.
-    let mut descs: std::collections::HashMap<usize, NetDescriptor> =
-        std::collections::HashMap::new();
-    for p in &space.points {
+/// [`explore`] reusing a shared [`DescriptorCache`] across calls.
+pub fn explore_with_cache(
+    net: &Network,
+    space: &DesignSpace,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    cache: &DescriptorCache,
+) -> Result<Vec<ScoredPoint>> {
+    explore_impl(net, space, predictor, constraints, cache, pool::num_threads())
+}
+
+/// [`explore_with_cache`] with an explicit worker count (tests and
+/// benchmarks pin this to compare scheduling-independent output).
+pub fn explore_with_threads(
+    net: &Network,
+    space: &DesignSpace,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    cache: &DescriptorCache,
+    workers: usize,
+) -> Result<Vec<ScoredPoint>> {
+    explore_impl(net, space, predictor, constraints, cache, workers)
+}
+
+/// Sequential reference path (also used by benches to measure the pool's
+/// speedup). Produces exactly the same output as the parallel path.
+pub fn explore_seq(
+    net: &Network,
+    space: &DesignSpace,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    cache: &DescriptorCache,
+) -> Result<Vec<ScoredPoint>> {
+    explore_impl(net, space, predictor, constraints, cache, 1)
+}
+
+fn explore_impl(
+    net: &Network,
+    space: &DesignSpace,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    cache: &DescriptorCache,
+    workers: usize,
+) -> Result<Vec<ScoredPoint>> {
+    if space.is_empty() {
+        return Ok(Vec::new());
+    }
+    // Pre-warm the per-batch descriptors sequentially so worker shards hit
+    // the cache instead of racing on the expensive HyPA analysis.
+    let mut batches: Vec<usize> = space.points.iter().map(|p| p.batch).collect();
+    batches.sort_unstable();
+    batches.dedup();
+    for &b in &batches {
+        cache.descriptor(net, b)?;
+    }
+
+    let shard_results = pool::map_shards_ctx(
+        &space.points,
+        EXPLORE_MIN_SHARD,
+        workers,
+        || predictor.clone(),
+        |p, _offset, shard| score_points(net, shard, &p, constraints, cache, true),
+    );
+
+    let mut scored = Vec::with_capacity(space.points.len());
+    for r in shard_results {
+        scored.extend(r?);
+    }
+    Ok(scored)
+}
+
+/// Score a contiguous run of design points: build all feature rows
+/// through the cache, make exactly two bulk predictor calls (power,
+/// cycles), derive the records. Shared by `explore`'s shards and both
+/// budgeted searches; `apply_memory` gates the working-set check (the
+/// searches skip it — they explore the continuous frequency axis where
+/// the working set depends only on batch, better handled by restricting
+/// `batches` up front).
+pub(crate) fn score_points(
+    net: &Network,
+    points: &[DesignPoint],
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    cache: &DescriptorCache,
+    apply_memory: bool,
+) -> Result<Vec<ScoredPoint>> {
+    // Resolve per-batch state once per chunk, not once per point: the
+    // descriptor lookup takes the cache mutex and clones a String key,
+    // and the working set needs a full per-layer analysis — both depend
+    // only on (net, batch).
+    let check_memory = apply_memory && constraints.respect_memory;
+    let mut descs: HashMap<usize, Arc<NetDescriptor>> = HashMap::new();
+    let mut ws_by_batch: HashMap<usize, f64> = HashMap::new();
+    for p in points {
         if !descs.contains_key(&p.batch) {
-            descs.insert(p.batch, NetDescriptor::build(net, p.batch)?);
+            descs.insert(p.batch, cache.descriptor(net, p.batch)?);
+            if check_memory {
+                let ws = working_set_bytes(net, p.batch).unwrap_or(usize::MAX);
+                ws_by_batch.insert(p.batch, ws as f64);
+            }
         }
     }
 
-    // Build all feature rows, then submit in bulk so the coordinator can
-    // fill whole XLA batches.
-    let rows: Vec<Vec<f64>> = space
-        .points
-        .iter()
-        .map(|p| descs[&p.batch].features(gpu_of(&p.gpu), p.f_mhz))
-        .collect();
+    let mut rows = Vec::with_capacity(points.len());
+    for p in points {
+        let g = cache.gpu(&p.gpu)?;
+        rows.push(descs[&p.batch].features(g, p.f_mhz));
+    }
     let power = predictor.predict_many(Task::Power, &rows)?;
     let cycles = predictor.predict_many(Task::Cycles, &rows)?;
 
-    let mut scored = Vec::with_capacity(space.points.len());
-    for ((p, pw), cy) in space.points.iter().zip(power).zip(cycles) {
-        let g = gpu_of(&p.gpu);
-        let latency = cy.max(1.0) / (p.f_mhz * 1e6);
-        let throughput = p.batch as f64 / latency;
-        let energy = pw * latency / p.batch as f64;
-        let mut feasible = true;
-        if let Some(cap) = constraints.max_power_w {
-            feasible &= pw <= cap;
-        }
-        if let Some(cap) = constraints.max_latency_s {
-            feasible &= latency <= cap;
-        }
-        if let Some(min) = constraints.min_throughput {
-            feasible &= throughput >= min;
-        }
-        if constraints.respect_memory {
-            let ws = working_set_bytes(net, p.batch).unwrap_or(usize::MAX);
-            feasible &= (ws as f64) <= g.mem_gb * 1e9;
-        }
-        scored.push(ScoredPoint {
-            point: p.clone(),
-            power_w: pw,
-            cycles: cy,
-            latency_s: latency,
-            throughput,
-            energy_per_inf_j: energy,
-            feasible,
-        });
+    let mut scored = Vec::with_capacity(points.len());
+    for ((p, pw), cy) in points.iter().zip(power).zip(cycles) {
+        let mem_ok = if check_memory {
+            let g = cache.gpu(&p.gpu)?;
+            ws_by_batch[&p.batch] <= g.mem_gb * 1e9
+        } else {
+            true
+        };
+        scored.push(derive_scored(p, pw, cy, constraints, mem_ok));
     }
     Ok(scored)
 }
@@ -278,9 +491,50 @@ mod tests {
 
     #[test]
     fn edp_balances() {
-        let fast_hungry = fake_scored(200.0, 0.1, true); // edp 2.0*0.1... e=20,edp=2
+        let fast_hungry = fake_scored(200.0, 0.1, true); // e=20, edp=2
         let slow_frugal = fake_scored(10.0, 1.0, true); // e=10, edp=10
         let ranked = rank(&[fast_hungry, slow_frugal], Objective::MinEdp);
         assert_eq!(ranked[0].power_w, 200.0);
+    }
+
+    #[test]
+    fn cache_gpu_lookup() {
+        let cache = DescriptorCache::new();
+        assert!(cache.gpu("v100s").is_ok());
+        let err = cache.gpu("imaginary-gpu").unwrap_err();
+        assert!(format!("{err}").contains("unknown GPU"));
+    }
+
+    #[test]
+    fn cache_descriptor_reused() {
+        let cache = DescriptorCache::new();
+        let net = crate::cnn::zoo::lenet5();
+        let a = cache.descriptor(&net, 1).unwrap();
+        let b = cache.descriptor(&net, 1).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "descriptor must be cached");
+        assert_eq!(cache.cached_descriptors(), 1);
+        cache.descriptor(&net, 4).unwrap();
+        assert_eq!(cache.cached_descriptors(), 2);
+    }
+
+    #[test]
+    fn derive_scored_constraints() {
+        let p = DesignPoint {
+            gpu: "v100s".into(),
+            f_mhz: 1000.0,
+            batch: 2,
+        };
+        let c = DseConstraints {
+            max_power_w: Some(100.0),
+            ..Default::default()
+        };
+        let ok = derive_scored(&p, 80.0, 1e9, &c, true);
+        assert!(ok.feasible);
+        assert!((ok.latency_s - 1.0).abs() < 1e-12);
+        assert!((ok.throughput - 2.0).abs() < 1e-12);
+        let hot = derive_scored(&p, 150.0, 1e9, &c, true);
+        assert!(!hot.feasible);
+        let no_mem = derive_scored(&p, 80.0, 1e9, &c, false);
+        assert!(!no_mem.feasible);
     }
 }

@@ -14,15 +14,20 @@
 //!
 //! Both consume the same batched [`Predictor`] service as the exhaustive
 //! sweep, so their *cost* is measured in prediction calls — the honest
-//! budget unit for an ML-driven DSE.
+//! budget unit for an ML-driven DSE. Candidates are scored in chunks
+//! (whole random-search blocks; all neighbours of a hill-climbing step)
+//! through [`Predictor::predict_many`] — two bulk calls per chunk instead
+//! of two single-row round trips per candidate — and GPU/feature lookups
+//! go through a shared [`DescriptorCache`].
 
 use anyhow::Result;
 
 use crate::cnn::ir::Network;
-use crate::coordinator::{Predictor, Task};
-use crate::dse::{DesignPoint, DseConstraints, Objective, ScoredPoint};
-use crate::gpu::specs::{catalog, GpuSpec};
-use crate::ml::features::NetDescriptor;
+use crate::coordinator::Predictor;
+use crate::dse::{
+    score_points, DescriptorCache, DesignPoint, DseConstraints, Objective, ScoredPoint,
+};
+use crate::gpu::specs::GpuSpec;
 use crate::util::rng::Rng;
 
 /// Search outcome.
@@ -34,47 +39,21 @@ pub struct SearchResult {
     pub evaluations: usize,
 }
 
-/// Score one candidate through the predictor.
-fn score(
+/// Random-search candidates scored per bulk predictor call.
+const RANDOM_CHUNK: usize = 64;
+
+/// Score a chunk of candidates through the shared scoring pipeline
+/// ([`crate::dse::score_points`]): exactly two bulk predictor calls per
+/// chunk, no memory-constraint check (searches restrict `batches` up
+/// front instead).
+fn score_chunk(
     net: &Network,
-    descs: &mut std::collections::HashMap<usize, NetDescriptor>,
-    p: &DesignPoint,
-    gpus: &[GpuSpec],
+    cache: &DescriptorCache,
+    points: &[DesignPoint],
     predictor: &Predictor,
     constraints: &DseConstraints,
-) -> Result<ScoredPoint> {
-    let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
-    if !descs.contains_key(&p.batch) {
-        descs.insert(
-            p.batch,
-            NetDescriptor::build(net, p.batch).map_err(|e| anyhow::anyhow!("{e}"))?,
-        );
-    }
-    let row = descs[&p.batch].features(g, p.f_mhz);
-    let power = predictor.predict(Task::Power, row.clone())?;
-    let cycles = predictor.predict(Task::Cycles, row)?;
-    let latency = cycles.max(1.0) / (p.f_mhz * 1e6);
-    let throughput = p.batch as f64 / latency;
-    let energy = power * latency / p.batch as f64;
-    let mut feasible = true;
-    if let Some(cap) = constraints.max_power_w {
-        feasible &= power <= cap;
-    }
-    if let Some(cap) = constraints.max_latency_s {
-        feasible &= latency <= cap;
-    }
-    if let Some(min) = constraints.min_throughput {
-        feasible &= throughput >= min;
-    }
-    Ok(ScoredPoint {
-        point: p.clone(),
-        power_w: power,
-        cycles,
-        latency_s: latency,
-        throughput,
-        energy_per_inf_j: energy,
-        feasible,
-    })
+) -> Result<Vec<ScoredPoint>> {
+    score_points(net, points, predictor, constraints, cache, false)
 }
 
 fn random_point(rng: &mut Rng, gpus: &[GpuSpec], batches: &[usize]) -> DesignPoint {
@@ -83,6 +62,21 @@ fn random_point(rng: &mut Rng, gpus: &[GpuSpec], batches: &[usize]) -> DesignPoi
         gpu: g.name.to_string(),
         f_mhz: rng.range(g.min_mhz, g.boost_mhz).round(),
         batch: batches[rng.below(batches.len())],
+    }
+}
+
+fn update_best(
+    s: &ScoredPoint,
+    objective: Objective,
+    best: &mut Option<ScoredPoint>,
+) {
+    if s.feasible
+        && best
+            .as_ref()
+            .map(|b| objective.key(s) < objective.key(b))
+            .unwrap_or(true)
+    {
+        *best = Some(s.clone());
     }
 }
 
@@ -96,28 +90,51 @@ pub fn random_search(
     budget: usize,
     seed: u64,
 ) -> Result<SearchResult> {
-    let gpus = catalog();
+    random_search_with_cache(
+        net,
+        predictor,
+        constraints,
+        objective,
+        batches,
+        budget,
+        seed,
+        &DescriptorCache::new(),
+    )
+}
+
+/// [`random_search`] reusing a shared [`DescriptorCache`]. Candidates are
+/// drawn in the same sequence as the scalar implementation (chunking does
+/// not consume extra RNG draws), so results are seed-stable.
+#[allow(clippy::too_many_arguments)]
+pub fn random_search_with_cache(
+    net: &Network,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+    cache: &DescriptorCache,
+) -> Result<SearchResult> {
     let mut rng = Rng::new(seed);
-    let mut descs = std::collections::HashMap::new();
     let mut best: Option<ScoredPoint> = None;
     let mut trajectory = Vec::with_capacity(budget);
-    for _ in 0..budget {
-        let p = random_point(&mut rng, &gpus, batches);
-        let s = score(net, &mut descs, &p, &gpus, predictor, constraints)?;
-        if s.feasible
-            && best
-                .as_ref()
-                .map(|b| objective.key(&s) < objective.key(b))
-                .unwrap_or(true)
-        {
-            best = Some(s);
+    let mut evals = 0usize;
+    while evals < budget {
+        let m = (budget - evals).min(RANDOM_CHUNK);
+        let pts: Vec<DesignPoint> = (0..m)
+            .map(|_| random_point(&mut rng, cache.gpus(), batches))
+            .collect();
+        for s in score_chunk(net, cache, &pts, predictor, constraints)? {
+            evals += 1;
+            update_best(&s, objective, &mut best);
+            trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
         }
-        trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
     }
     Ok(SearchResult {
         best,
         trajectory,
-        evaluations: budget,
+        evaluations: evals,
     })
 }
 
@@ -132,57 +149,76 @@ pub fn local_search(
     budget: usize,
     seed: u64,
 ) -> Result<SearchResult> {
-    let gpus = catalog();
+    local_search_with_cache(
+        net,
+        predictor,
+        constraints,
+        objective,
+        batches,
+        budget,
+        seed,
+        &DescriptorCache::new(),
+    )
+}
+
+/// [`local_search`] reusing a shared [`DescriptorCache`]. All neighbours
+/// of a hill-climbing step are scored as one bulk chunk; the climb still
+/// moves to the *first* improving neighbour in move order, but every
+/// scored neighbour is charged to the budget (they were all predicted)
+/// and feeds the best-so-far record.
+#[allow(clippy::too_many_arguments)]
+pub fn local_search_with_cache(
+    net: &Network,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+    cache: &DescriptorCache,
+) -> Result<SearchResult> {
     let mut rng = Rng::new(seed);
-    let mut descs = std::collections::HashMap::new();
     let mut best: Option<ScoredPoint> = None;
     let mut trajectory = Vec::with_capacity(budget);
     let mut evals = 0usize;
 
-    let update_best = |s: &ScoredPoint, best: &mut Option<ScoredPoint>| {
-        if s.feasible
-            && best
-                .as_ref()
-                .map(|b| objective.key(s) < objective.key(b))
-                .unwrap_or(true)
-        {
-            *best = Some(s.clone());
-        }
-    };
-
     while evals < budget {
         // Restart.
-        let mut cur_pt = random_point(&mut rng, &gpus, batches);
-        let mut cur = score(net, &mut descs, &cur_pt, &gpus, predictor, constraints)?;
+        let mut cur_pt = random_point(&mut rng, cache.gpus(), batches);
+        let mut cur = score_chunk(net, cache, std::slice::from_ref(&cur_pt), predictor, constraints)?
+            .pop()
+            .expect("chunk of one");
         evals += 1;
-        update_best(&cur, &mut best);
+        update_best(&cur, objective, &mut best);
         trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
 
         // Climb until no improving neighbour or budget exhausted.
         let mut improved = true;
         while improved && evals < budget {
             improved = false;
-            let neighbours = neighbours_of(&cur_pt, &gpus, batches, &mut rng);
-            for np in neighbours {
-                if evals >= budget {
-                    break;
-                }
-                let ns = score(net, &mut descs, &np, &gpus, predictor, constraints)?;
+            let mut neighbours = neighbours_of(&cur_pt, cache.gpus(), batches, &mut rng);
+            neighbours.truncate(budget - evals);
+            if neighbours.is_empty() {
+                break;
+            }
+            let scored = score_chunk(net, cache, &neighbours, predictor, constraints)?;
+            for ns in &scored {
                 evals += 1;
-                update_best(&ns, &mut best);
+                update_best(ns, objective, &mut best);
                 trajectory
                     .push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
-                let better = match (ns.feasible, cur.feasible) {
+            }
+            let first_better = neighbours.iter().zip(&scored).find(|&(_, ns)| {
+                match (ns.feasible, cur.feasible) {
                     (true, false) => true,
                     (false, _) => false,
-                    (true, true) => objective.key(&ns) < objective.key(&cur),
-                };
-                if better {
-                    cur = ns;
-                    cur_pt = np;
-                    improved = true;
-                    break; // first-improvement
+                    (true, true) => objective.key(ns) < objective.key(&cur),
                 }
+            });
+            if let Some((np, ns)) = first_better {
+                cur = ns.clone();
+                cur_pt = np.clone();
+                improved = true;
             }
         }
     }
@@ -199,7 +235,9 @@ fn neighbours_of(
     batches: &[usize],
     rng: &mut Rng,
 ) -> Vec<DesignPoint> {
-    let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
+    let Some(g) = gpus.iter().find(|g| g.name == p.gpu) else {
+        return Vec::new();
+    };
     let mut out = Vec::with_capacity(6);
     // Frequency ±10%, clamped.
     for mult in [0.9, 1.1] {
@@ -242,6 +280,7 @@ fn neighbours_of(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpu::specs::catalog;
 
     #[test]
     fn random_point_within_gpu_envelope() {
@@ -282,5 +321,17 @@ mod tests {
         let ns = neighbours_of(&p, &gpus, &[1, 8, 16], &mut rng);
         assert!(ns.iter().any(|n| n.f_mhz != p.f_mhz && n.gpu == p.gpu));
         assert!(ns.iter().any(|n| n.batch != p.batch));
+    }
+
+    #[test]
+    fn neighbours_of_unknown_gpu_is_empty() {
+        let gpus = catalog();
+        let mut rng = Rng::new(4);
+        let p = DesignPoint {
+            gpu: "not-a-gpu".into(),
+            f_mhz: 1000.0,
+            batch: 1,
+        };
+        assert!(neighbours_of(&p, &gpus, &[1], &mut rng).is_empty());
     }
 }

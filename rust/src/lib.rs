@@ -7,11 +7,14 @@
 //! features without GPU execution, a design-space-exploration engine over a
 //! GPGPU catalog, and a local-vs-cloud offload advisor.
 //!
-//! Architecture (see DESIGN.md): a three-layer stack where this Rust crate
-//! is the coordinator (L3), JAX compute graphs are AOT-lowered to HLO at
-//! build time (L2), and Pallas kernels implement the prediction hot-spots
-//! (L1). Python never runs on the request path; the compiled artifacts in
-//! `artifacts/` are loaded through PJRT by `runtime`.
+//! Architecture: this Rust crate is the whole serving stack. The
+//! coordinator (L3) batches prediction requests onto staged executables;
+//! the execution backend (L1/L2, [`runtime`] + [`ml::batch`]) is a native
+//! batched engine — SoA level-wise forest descent and a blocked flat-matrix
+//! kNN kernel, sharded across cores by [`util::pool`]. The AOT/XLA shape
+//! contract from `python/compile/` is still enforced at staging time
+//! ([`runtime::shapes`]) so a PJRT backend can be swapped back in behind
+//! the same executable API; Python never runs on the request path.
 
 pub mod cnn;
 pub mod config;

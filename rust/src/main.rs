@@ -18,8 +18,10 @@ use anyhow::{anyhow, Result};
 use hypa_dse::cnn::zoo;
 use hypa_dse::config::AppConfig;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
-use hypa_dse::dse::search::{local_search, random_search};
-use hypa_dse::dse::{explore, rank, DesignSpace, DseConstraints, Objective};
+use hypa_dse::dse::search::{local_search_with_cache, random_search_with_cache};
+use hypa_dse::dse::{
+    explore, explore_with_cache, rank, DescriptorCache, DesignSpace, DseConstraints, Objective,
+};
 use hypa_dse::gpu::specs::{by_name, catalog};
 use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
 use hypa_dse::ml::dataset::Target;
@@ -355,12 +357,19 @@ fn cmd_search(args: &Args) -> Result<()> {
     let budget = args.usize("budget", cfg.search_budget);
     let batches = cfg.dse_batches.clone();
 
-    let rs = random_search(&net, &predictor, &constraints, objective, &batches, budget, 1)?;
-    let ls = local_search(&net, &predictor, &constraints, objective, &batches, budget, 1)?;
+    // One shared feature/GPU cache across both searches and the grid
+    // reference: the per-(net, batch) HyPA analysis is paid once.
+    let cache = DescriptorCache::new();
+    let rs = random_search_with_cache(
+        &net, &predictor, &constraints, objective, &batches, budget, 1, &cache,
+    )?;
+    let ls = local_search_with_cache(
+        &net, &predictor, &constraints, objective, &batches, budget, 1, &cache,
+    )?;
 
     // Exhaustive reference on the quantized grid.
     let space = DesignSpace::default_grid(cfg.dse_freq_steps, &batches);
-    let scored = explore(&net, &space, &predictor, &constraints)?;
+    let scored = explore_with_cache(&net, &space, &predictor, &constraints, &cache)?;
     let grid_best = rank(&scored, objective).into_iter().next();
 
     let show = |label: &str, s: Option<&hypa_dse::dse::ScoredPoint>, evals: usize| {

@@ -1,0 +1,537 @@
+//! Batched, cache-friendly prediction kernels — the DSE evaluation engine's
+//! hot path.
+//!
+//! The scalar paths (`RandomForest::predict_one`, `Knn::predict_one`) walk
+//! pointer-heavy per-row structures: every query re-streams every tree's
+//! 32-byte AoS nodes (or the whole `Vec<Vec<f64>>` kNN training matrix),
+//! so a 256-query sweep loads the model state 256 times. The kernels here
+//! restructure the computation around *batches*:
+//!
+//! * [`BatchForest`] — all trees flattened into structure-of-arrays node
+//!   pools (`f64` thresholds, `u32` features/children) with absolute child
+//!   indices and self-looping leaves. Descent is level-wise over a block
+//!   of queries per tree: the tree's SoA arrays stay hot in L1/L2 across
+//!   the whole block, and the 32 independent descent chains per block give
+//!   the CPU memory-level parallelism a single pointer chase cannot.
+//! * [`BatchKnn`] — the scaled training matrix flattened into one
+//!   contiguous row-major buffer; distances are computed row-outer /
+//!   query-inner so each training row is loaded once per query block, and
+//!   top-k selection uses `select_nth_unstable_by` (O(n)) instead of a
+//!   maintained sorted list.
+//!
+//! **Exactness contract:** both kernels reproduce the scalar paths
+//! *bit-for-bit* (asserted by `rust/tests/batch_parity.rs`). That rules
+//! out the classic `|x|² - 2x·q + |q|²` norm expansion for kNN (different
+//! floating-point rounding) — the speedup comes from memory layout,
+//! blocking, selection, and threading, not from re-associating arithmetic.
+//! Ties in kNN selection are broken by training-row index, which is
+//! provably the same neighbour set and ordering the scalar insertion path
+//! produces.
+//!
+//! Large batches are additionally sharded across cores via
+//! [`crate::util::pool`]; per-query results are independent, so threading
+//! never changes output.
+
+use crate::ml::dataset::Scaler;
+use crate::ml::forest::{ForestTensor, RandomForest};
+use crate::ml::knn::Knn;
+use crate::ml::tree::LEAF;
+use crate::util::pool;
+
+/// Queries per descent block (fits block state in registers/L1 while
+/// giving enough independent chains to hide load latency).
+const FOREST_BLOCK: usize = 32;
+
+/// Queries per kNN distance block (bounds the `block × n` scratch buffer).
+const KNN_BLOCK: usize = 16;
+
+/// Minimum batch size before sharding across the worker pool.
+const PAR_MIN: usize = 128;
+
+/// A trained random forest staged in flat SoA form for batched descent.
+///
+/// Node arrays are concatenated across trees with absolute child indices;
+/// leaves self-loop (`left == right == self`) with `threshold = +inf` so a
+/// converged chain stays put. `predict_many` bit-matches
+/// `RandomForest::predict_one` per row.
+#[derive(Debug, Clone)]
+pub struct BatchForest {
+    n_trees: usize,
+    /// Root node index of each tree (absolute).
+    roots: Vec<u32>,
+    feature: Vec<u32>,
+    threshold: Vec<f64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    value: Vec<f64>,
+    /// Upper bound on descent steps (deepest tree).
+    max_depth: usize,
+    /// Largest feature index any split consults (+1) — queries must be at
+    /// least this wide.
+    min_width: usize,
+}
+
+impl BatchForest {
+    /// Flatten a fitted forest. Cost is one pass over all nodes; amortize
+    /// it by staging once and predicting many times (the prediction
+    /// service does), or let `RandomForest::predict` build one per batch —
+    /// still profitable beyond a handful of rows.
+    pub fn from_forest(forest: &RandomForest) -> BatchForest {
+        let total: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut out = BatchForest {
+            n_trees: forest.trees.len(),
+            roots: Vec::with_capacity(forest.trees.len()),
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            value: Vec::with_capacity(total),
+            max_depth: 0,
+            min_width: 1,
+        };
+        for tree in &forest.trees {
+            let base = out.feature.len() as u32;
+            out.roots.push(base);
+            out.max_depth = out.max_depth.max(tree.depth());
+            for (i, n) in tree.nodes.iter().enumerate() {
+                let at = base + i as u32;
+                if n.feature == LEAF {
+                    out.feature.push(0);
+                    out.threshold.push(f64::INFINITY);
+                    out.left.push(at);
+                    out.right.push(at);
+                } else {
+                    out.feature.push(n.feature);
+                    out.min_width = out.min_width.max(n.feature as usize + 1);
+                    out.threshold.push(n.threshold);
+                    out.left.push(base + n.left);
+                    out.right.push(base + n.right);
+                }
+                out.value.push(n.value);
+            }
+        }
+        out
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    /// Minimum query width this forest can consume (largest split feature
+    /// index + 1). Staging layers check this up front so a width mismatch
+    /// is an error at stage time, not a panic on the serving path.
+    pub fn min_width(&self) -> usize {
+        self.min_width
+    }
+
+    /// Batched prediction; shards across the worker pool for large
+    /// batches. Panics (like the scalar path) if a query row is narrower
+    /// than the widest split feature.
+    pub fn predict_many(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        let d = qs[0].len();
+        assert!(
+            d >= self.min_width,
+            "query width {d} < required {} (forest split features)",
+            self.min_width
+        );
+        // Stay serial when already on a pool worker (e.g. inside an
+        // `explore` shard) — nested sharding would oversubscribe cores.
+        if qs.len() >= PAR_MIN && !pool::in_pool_worker() && pool::num_threads() > 1 {
+            return pool::map_shards(qs, FOREST_BLOCK, |_, shard| self.predict_serial(shard))
+                .into_iter()
+                .flatten()
+                .collect();
+        }
+        self.predict_serial(qs)
+    }
+
+    fn predict_serial(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        let d = qs[0].len();
+        let mut out = Vec::with_capacity(qs.len());
+        let mut qflat = vec![0f64; FOREST_BLOCK * d];
+        let mut idx = [0u32; FOREST_BLOCK];
+        let mut acc = [0f64; FOREST_BLOCK];
+        for block in qs.chunks(FOREST_BLOCK) {
+            let bl = block.len();
+            for (b, q) in block.iter().enumerate() {
+                assert_eq!(q.len(), d, "ragged query batch");
+                qflat[b * d..b * d + d].copy_from_slice(q);
+            }
+            acc[..bl].fill(0.0);
+            for &root in &self.roots {
+                idx[..bl].fill(root);
+                // Level-wise descent: all chains advance one level per
+                // sweep; leaves self-loop, so convergence = no change.
+                for _ in 0..=self.max_depth {
+                    let mut changed = false;
+                    for b in 0..bl {
+                        let n = idx[b] as usize;
+                        let f = self.feature[n] as usize;
+                        let v = qflat[b * d + f];
+                        let next = if v <= self.threshold[n] {
+                            self.left[n]
+                        } else {
+                            self.right[n]
+                        };
+                        changed |= next != idx[b];
+                        idx[b] = next;
+                    }
+                    if !changed {
+                        break;
+                    }
+                }
+                // Accumulate in tree order — the exact addition sequence
+                // of the scalar path.
+                for b in 0..bl {
+                    acc[b] += self.value[idx[b] as usize];
+                }
+            }
+            // Division (not multiply-by-reciprocal) keeps bit parity with
+            // the scalar path's `sum / len`.
+            out.extend(acc[..bl].iter().map(|&s| s / self.n_trees.max(1) as f64));
+        }
+        out
+    }
+}
+
+impl ForestTensor {
+    /// Level-wise batched descent over the flat `[n_trees, max_nodes]`
+    /// layout — the same fixed-`depth` semantics as
+    /// [`ForestTensor::predict_one`], bit-for-bit, but with each tree's
+    /// node arrays kept hot across the whole query batch.
+    pub fn predict_batch(&self, qs: &[Vec<f64>], depth: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(qs.len());
+        let mut idx = [0usize; FOREST_BLOCK];
+        let mut acc = [0f64; FOREST_BLOCK];
+        for block in qs.chunks(FOREST_BLOCK) {
+            let bl = block.len();
+            acc[..bl].fill(0.0);
+            for t in 0..self.n_trees {
+                let base = t * self.max_nodes;
+                idx[..bl].fill(0);
+                for _ in 0..depth {
+                    for b in 0..bl {
+                        let at = base + idx[b];
+                        let f = self.feature[at] as usize;
+                        let thr = self.threshold[at] as f64;
+                        let v = block[b].get(f).copied().unwrap_or(0.0);
+                        idx[b] = if v <= thr {
+                            self.left[at] as usize
+                        } else {
+                            self.right[at] as usize
+                        };
+                    }
+                }
+                for b in 0..bl {
+                    acc[b] += self.value[base + idx[b]] as f64;
+                }
+            }
+            out.extend(acc[..bl].iter().map(|&s| s / self.n_trees as f64));
+        }
+        out
+    }
+}
+
+/// A trained kNN model staged for batched querying: contiguous row-major
+/// scaled training matrix + targets. `predict_many` bit-matches
+/// `Knn::predict_one` per row.
+#[derive(Debug, Clone)]
+pub struct BatchKnn {
+    k: usize,
+    weighted: bool,
+    n: usize,
+    d: usize,
+    x: Vec<f64>,
+    y: Vec<f64>,
+    scaler: Scaler,
+}
+
+impl BatchKnn {
+    /// Stage a fitted model (flattens the training matrix once).
+    pub fn from_model(model: &Knn) -> BatchKnn {
+        let (x, y) = model.train_matrix();
+        let n = x.len();
+        let d = if n > 0 { x[0].len() } else { 0 };
+        let mut flat = Vec::with_capacity(n * d);
+        for row in x {
+            debug_assert_eq!(row.len(), d);
+            flat.extend_from_slice(row);
+        }
+        BatchKnn {
+            k: model.k,
+            weighted: model.weighted,
+            n,
+            d,
+            x: flat,
+            y: y.to_vec(),
+            scaler: model.scaler().clone(),
+        }
+    }
+
+    pub fn n_train_rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.d
+    }
+
+    /// Batched prediction of raw (unscaled) query rows; shards across the
+    /// worker pool for large batches.
+    pub fn predict_many(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        if qs.len() >= PAR_MIN / 2 && !pool::in_pool_worker() && pool::num_threads() > 1 {
+            return pool::map_shards(qs, KNN_BLOCK, |_, shard| self.predict_serial(shard))
+                .into_iter()
+                .flatten()
+                .collect();
+        }
+        self.predict_serial(qs)
+    }
+
+    fn predict_serial(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        let n = self.n;
+        let mut out = Vec::with_capacity(qs.len());
+        let mut dist = vec![0f64; KNN_BLOCK * n];
+        let mut order: Vec<(f64, u32)> = Vec::with_capacity(n);
+        for block in qs.chunks(KNN_BLOCK) {
+            let bl = block.len();
+            let scaled: Vec<Vec<f64>> = block
+                .iter()
+                .map(|q| self.scaler.transform_row(q))
+                .collect();
+            // Row-outer / query-inner: each training row is streamed once
+            // per block and reused from L1 across `bl` queries. The inner
+            // feature loop matches the scalar accumulation order exactly.
+            for (r, xrow) in self.x.chunks_exact(self.d.max(1)).enumerate() {
+                for (b, q) in scaled.iter().enumerate().take(bl) {
+                    let mut d2 = 0.0;
+                    for (a, v) in xrow.iter().zip(q.iter()) {
+                        let diff = a - v;
+                        d2 += diff * diff;
+                    }
+                    dist[b * n + r] = d2;
+                }
+            }
+            for b in 0..bl {
+                out.push(self.reduce(&dist[b * n..b * n + n], &mut order));
+            }
+        }
+        out
+    }
+
+    /// Top-k selection + the scalar path's exact weighting arithmetic.
+    fn reduce(&self, d2s: &[f64], order: &mut Vec<(f64, u32)>) -> f64 {
+        let n = d2s.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let k = self.k.min(n).max(1);
+        order.clear();
+        order.extend(d2s.iter().enumerate().map(|(i, &d2)| (d2, i as u32)));
+        // Lexicographic (d², row index): the same neighbour set — and the
+        // same tie-breaking toward earlier training rows — as the scalar
+        // insertion path.
+        let cmp = |a: &(f64, u32), b: &(f64, u32)| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        };
+        if k < n {
+            order.select_nth_unstable_by(k - 1, cmp);
+        }
+        let top = &mut order[..k];
+        top.sort_unstable_by(cmp);
+
+        if self.weighted {
+            let mut wsum = 0.0;
+            let mut vsum = 0.0;
+            for &(d2, i) in top.iter() {
+                let t = self.y[i as usize];
+                if d2 < 1e-18 {
+                    return t;
+                }
+                let w = 1.0 / d2.sqrt();
+                wsum += w;
+                vsum += w * t;
+            }
+            vsum / wsum
+        } else {
+            top.iter().map(|&(_, i)| self.y[i as usize]).sum::<f64>() / top.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::forest::ForestConfig;
+    use crate::ml::regressor::Regressor;
+    use crate::util::rng::Rng;
+
+    fn data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut x = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f64> = (0..d).map(|_| rng.f64() * 4.0).collect();
+            let t = 10.0 * row[0] + 3.0 * row[1 % d] * row[1 % d] + (row[2 % d] * 2.0).sin();
+            x.push(row);
+            y.push(t);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn forest_batch_bitmatches_scalar() {
+        let mut rng = Rng::new(101);
+        let (x, y) = data(&mut rng, 400, 8);
+        let mut f = RandomForest::new(ForestConfig {
+            n_trees: 16,
+            max_depth: 10,
+            ..Default::default()
+        });
+        f.fit(&x, &y);
+        let qs: Vec<Vec<f64>> = (0..150)
+            .map(|_| (0..8).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        let batch = BatchForest::from_forest(&f).predict_many(&qs);
+        for (q, b) in qs.iter().zip(&batch) {
+            assert_eq!(*b, f.predict_one(q), "bit mismatch");
+        }
+    }
+
+    #[test]
+    fn forest_single_tree_and_tiny_blocks() {
+        let mut rng = Rng::new(7);
+        let (x, y) = data(&mut rng, 60, 3);
+        let mut f = RandomForest::new(ForestConfig {
+            n_trees: 1,
+            max_depth: 4,
+            ..Default::default()
+        });
+        f.fit(&x, &y);
+        let bf = BatchForest::from_forest(&f);
+        // Batch smaller than one block, and an odd remainder over blocks.
+        for n in [1usize, 3, 33] {
+            let qs: Vec<Vec<f64>> = x.iter().take(n).cloned().collect();
+            let batch = bf.predict_many(&qs);
+            for (q, b) in qs.iter().zip(&batch) {
+                assert_eq!(*b, f.predict_one(q));
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_batch_bitmatches_tensor_scalar() {
+        let mut rng = Rng::new(23);
+        let (x, y) = data(&mut rng, 300, 6);
+        let mut f = RandomForest::new(ForestConfig {
+            n_trees: 8,
+            max_depth: 8,
+            ..Default::default()
+        });
+        f.fit(&x, &y);
+        let tensor = f.export_tensor(f.max_tree_nodes());
+        let depth = f.max_tree_depth() + 1;
+        let qs: Vec<Vec<f64>> = x.iter().take(70).cloned().collect();
+        let batch = tensor.predict_batch(&qs, depth);
+        for (q, b) in qs.iter().zip(&batch) {
+            assert_eq!(*b, tensor.predict_one(q, depth));
+        }
+    }
+
+    #[test]
+    fn knn_batch_bitmatches_scalar() {
+        let mut rng = Rng::new(55);
+        let (x, y) = data(&mut rng, 500, 5);
+        let mut m = Knn::new(3);
+        m.fit(&x, &y);
+        let qs: Vec<Vec<f64>> = (0..90)
+            .map(|_| (0..5).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        let batch = BatchKnn::from_model(&m).predict_many(&qs);
+        for (q, b) in qs.iter().zip(&batch) {
+            assert_eq!(*b, m.predict_one(q), "bit mismatch");
+        }
+    }
+
+    #[test]
+    fn knn_batch_handles_exact_training_hits_and_ties() {
+        // Duplicated training rows force distance ties; an exact query hit
+        // exercises the epsilon short-circuit. Both must match scalar.
+        let x = vec![
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![1.0, 0.0], // duplicate of row 1
+            vec![0.0, 1.0],
+            vec![2.0, 2.0],
+        ];
+        let y = vec![10.0, 20.0, 30.0, 40.0, 50.0];
+        for model in [Knn::new(2), Knn::uniform(3)] {
+            let mut m = model;
+            m.fit(&x, &y);
+            let qs = vec![
+                vec![1.0, 0.0],
+                vec![0.5, 0.1],
+                vec![0.0, 0.0],
+                vec![5.0, 5.0],
+            ];
+            let batch = BatchKnn::from_model(&m).predict_many(&qs);
+            for (q, b) in qs.iter().zip(&batch) {
+                assert_eq!(*b, m.predict_one(q), "q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn knn_uniform_batch_bitmatches() {
+        let mut rng = Rng::new(77);
+        let (x, y) = data(&mut rng, 120, 4);
+        let mut m = Knn::uniform(5);
+        m.fit(&x, &y);
+        let qs: Vec<Vec<f64>> = x.iter().take(40).cloned().collect();
+        let batch = BatchKnn::from_model(&m).predict_many(&qs);
+        for (q, b) in qs.iter().zip(&batch) {
+            assert_eq!(*b, m.predict_one(q));
+        }
+    }
+
+    #[test]
+    fn k_larger_than_dataset() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![1.0, 3.0];
+        let mut m = Knn::uniform(10);
+        m.fit(&x, &y);
+        let b = BatchKnn::from_model(&m).predict_many(&[vec![0.5]]);
+        assert_eq!(b[0], m.predict_one(&[0.5]));
+    }
+
+    #[test]
+    fn large_batch_parallel_path_matches() {
+        // Above PAR_MIN the pool path kicks in (when >1 core); results must
+        // be identical elementwise either way.
+        let mut rng = Rng::new(301);
+        let (x, y) = data(&mut rng, 200, 6);
+        let mut f = RandomForest::new(ForestConfig {
+            n_trees: 8,
+            max_depth: 8,
+            ..Default::default()
+        });
+        f.fit(&x, &y);
+        let qs: Vec<Vec<f64>> = (0..400)
+            .map(|_| (0..6).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        let bf = BatchForest::from_forest(&f);
+        let par = bf.predict_many(&qs);
+        let seq = bf.predict_serial(&qs);
+        assert_eq!(par, seq);
+
+        let mut m = Knn::new(3);
+        m.fit(&x, &y);
+        let bk = BatchKnn::from_model(&m);
+        assert_eq!(bk.predict_many(&qs), bk.predict_serial(&qs));
+    }
+}

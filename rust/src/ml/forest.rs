@@ -188,6 +188,17 @@ impl Regressor for RandomForest {
         }
         sum / self.trees.len().max(1) as f64
     }
+
+    /// Batched prediction through the SoA descent kernel
+    /// ([`crate::ml::batch::BatchForest`]); bit-identical to mapping
+    /// [`RandomForest::predict_one`] over the rows. Small batches skip the
+    /// staging cost and use the scalar path directly.
+    fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        if qs.len() < 16 || self.trees.is_empty() {
+            return qs.iter().map(|q| self.predict_one(q)).collect();
+        }
+        crate::ml::batch::BatchForest::from_forest(self).predict_many(qs)
+    }
 }
 
 #[cfg(test)]

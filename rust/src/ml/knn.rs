@@ -116,6 +116,17 @@ impl Regressor for Knn {
             nn.iter().map(|&(_, t)| t).sum::<f64>() / nn.len() as f64
         }
     }
+
+    /// Batched prediction through the flat-matrix kernel
+    /// ([`crate::ml::batch::BatchKnn`]); bit-identical to mapping
+    /// [`Knn::predict_one`] over the rows. Small batches skip the staging
+    /// (matrix flattening) cost and use the scalar path directly.
+    fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        if qs.len() < 16 || self.x.is_empty() {
+            return qs.iter().map(|q| self.predict_one(q)).collect();
+        }
+        crate::ml::batch::BatchKnn::from_model(self).predict_many(qs)
+    }
 }
 
 #[cfg(test)]

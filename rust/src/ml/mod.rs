@@ -6,6 +6,7 @@
 //! MAPE/R²/RMSE, and [`validate`] implements the train-many-pick-best
 //! methodology of Fig. 1.
 
+pub mod batch;
 pub mod dataset;
 pub mod datagen;
 pub mod features;
@@ -17,6 +18,7 @@ pub mod regressor;
 pub mod tree;
 pub mod validate;
 
+pub use batch::{BatchForest, BatchKnn};
 pub use dataset::{Dataset, SampleMeta, Scaler, Target};
 pub use forest::{ForestConfig, ForestTensor, RandomForest};
 pub use knn::Knn;

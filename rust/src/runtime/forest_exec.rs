@@ -1,33 +1,29 @@
-//! Random-forest prediction via the AOT-compiled XLA executable.
+//! Random-forest prediction executable: a trained forest staged into the
+//! SoA batch kernel ([`crate::ml::batch::BatchForest`]).
 //!
-//! Wraps a trained [`crate::ml::RandomForest`]: the tensorized node arrays
-//! (`ml::forest::ForestTensor`) are padded to the static `(FOREST_T,
-//! FOREST_M)` AOT shape once; `predict` chunks queries into `(FOREST_B,
-//! FOREST_F)` batches. Matches `RandomForest::predict` to f32 threshold
-//! precision — asserted by `rust/tests/runtime_hlo.rs`.
+//! Staging validates the AOT shape contract (tree count / node count /
+//! depth / feature width within [`shapes`]) so every staged model remains
+//! servable by an XLA backend compiled for those static shapes, then
+//! flattens the trees once; `predict` runs the level-wise batched descent.
+//! Results are bit-identical to `RandomForest::predict_one` per row —
+//! asserted by `rust/tests/runtime_hlo.rs`.
 
 use anyhow::Result;
 
+use crate::ml::batch::BatchForest;
 use crate::ml::forest::RandomForest;
-use crate::runtime::{literal_f32, literal_i32, literal_to_f64, shapes, Runtime};
+use crate::runtime::{shapes, Runtime};
 
-/// A random forest staged for XLA execution.
+/// A random forest staged for batched execution.
 pub struct ForestExecutable {
-    /// Device-resident node arrays (uploaded once at stage time).
-    feature: xla::PjRtBuffer,
-    threshold: xla::PjRtBuffer,
-    left: xla::PjRtBuffer,
-    right: xla::PjRtBuffer,
-    value: xla::PjRtBuffer,
-    /// Host copies kept alive: PJRT's host→device copy is asynchronous
-    /// and borrows the source literal (see knn_exec.rs).
-    _hosts: Vec<xla::Literal>,
+    batch: BatchForest,
     n_features: usize,
 }
 
 impl ForestExecutable {
-    /// Stage a trained forest. Requires `n_trees <= FOREST_T`, every tree
-    /// to fit in `FOREST_M` nodes, and depth ≤ `FOREST_DEPTH`.
+    /// Stage a trained forest. Requires a fitted model within the AOT
+    /// capacity: `n_trees <= FOREST_T`, every tree within `FOREST_M`
+    /// nodes and `FOREST_DEPTH` depth, `n_features <= FOREST_F`.
     pub fn stage(
         rt: &mut Runtime,
         model: &RandomForest,
@@ -57,97 +53,27 @@ impl ForestExecutable {
             "feature width {n_features} exceeds AOT capacity {}",
             shapes::FOREST_F
         );
-        rt.load("forest_predict")?;
-
-        let t = model.trees.len();
-        let tensor = model.export_tensor(shapes::FOREST_M);
-
-        // Pad the tree dimension by replicating real trees cyclically:
-        // the mean over FOREST_T slots then equals the mean over the real
-        // trees exactly when t divides FOREST_T (zero-padding would bias
-        // the ensemble mean instead).
+        rt.note_staged("forest_predict");
+        let batch = BatchForest::from_forest(model);
         anyhow::ensure!(
-            shapes::FOREST_T % t == 0,
-            "n_trees {t} must divide AOT tree count {} (pick n_trees from \
-             {{1,2,4,8,16,32,64}})",
-            shapes::FOREST_T
+            n_features >= batch.min_width(),
+            "declared feature width {n_features} is narrower than the widest \
+             split feature ({}) this forest was trained on",
+            batch.min_width()
         );
-        let m = shapes::FOREST_M;
-        let reps = shapes::FOREST_T / t;
-        let tile_i32 = |src: &[i32]| -> Vec<i32> {
-            let mut out = Vec::with_capacity(reps * src.len());
-            for _ in 0..reps {
-                out.extend_from_slice(src);
-            }
-            out
-        };
-        let tile_f32 = |src: &[f32]| -> Vec<f32> {
-            let mut out = Vec::with_capacity(reps * src.len());
-            for _ in 0..reps {
-                out.extend_from_slice(src);
-            }
-            out
-        };
-
-        let dims = [shapes::FOREST_T as i64, m as i64];
-        let hosts = vec![
-            literal_i32(&tile_i32(&tensor.feature), &dims)?,
-            literal_f32(
-                tile_f32(&tensor.threshold).into_iter().map(|v| v as f64),
-                &dims,
-            )?,
-            literal_i32(&tile_i32(&tensor.left), &dims)?,
-            literal_i32(&tile_i32(&tensor.right), &dims)?,
-            literal_f32(
-                tile_f32(&tensor.value).into_iter().map(|v| v as f64),
-                &dims,
-            )?,
-        ];
-        Ok(ForestExecutable {
-            feature: rt.upload(&hosts[0])?,
-            threshold: rt.upload(&hosts[1])?,
-            left: rt.upload(&hosts[2])?,
-            right: rt.upload(&hosts[3])?,
-            value: rt.upload(&hosts[4])?,
-            _hosts: hosts,
-            n_features,
-        })
+        Ok(ForestExecutable { batch, n_features })
     }
 
     /// Predict raw feature rows (forests are scale-free: no scaler).
-    pub fn predict(&self, rt: &Runtime, queries: &[Vec<f64>]) -> Result<Vec<f64>> {
-        let mut out = Vec::with_capacity(queries.len());
-        for chunk in queries.chunks(shapes::FOREST_B) {
-            let mut qp = vec![0f64; shapes::FOREST_B * shapes::FOREST_F];
-            for (i, q) in chunk.iter().enumerate() {
-                anyhow::ensure!(
-                    q.len() == self.n_features,
-                    "query width {} != expected {}",
-                    q.len(),
-                    self.n_features
-                );
-                qp[i * shapes::FOREST_F..i * shapes::FOREST_F + q.len()]
-                    .copy_from_slice(q);
-            }
-            let q_lit = literal_f32(
-                qp.into_iter(),
-                &[shapes::FOREST_B as i64, shapes::FOREST_F as i64],
-            )?;
-            let q_buf = rt.upload(&q_lit)?;
-            let result = rt.execute_buffers(
-                "forest_predict",
-                &[
-                    &self.feature,
-                    &self.threshold,
-                    &self.left,
-                    &self.right,
-                    &self.value,
-                    &q_buf,
-                ],
-            )?;
-            let vals = literal_to_f64(&result)?;
-            out.extend_from_slice(&vals[..chunk.len()]);
+    pub fn predict(&self, _rt: &Runtime, queries: &[Vec<f64>]) -> Result<Vec<f64>> {
+        for q in queries {
+            anyhow::ensure!(
+                q.len() == self.n_features,
+                "query width {} != expected {}",
+                q.len(),
+                self.n_features
+            );
         }
-        Ok(out)
+        Ok(self.batch.predict_many(queries))
     }
 }

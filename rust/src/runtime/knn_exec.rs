@@ -1,47 +1,29 @@
-//! KNN prediction via the AOT-compiled XLA executable.
+//! KNN prediction executable: a trained model staged into the flat-matrix
+//! batch kernel ([`crate::ml::batch::BatchKnn`]).
 //!
-//! Wraps a trained [`crate::ml::Knn`]: the (scaled) training matrix is
-//! padded to the static AOT shape `(KNN_N, KNN_F)` once and kept as XLA
-//! literals; each `predict` call pads/chunks queries to `(KNN_B, KNN_F)`,
-//! executes `knn_predict.hlo.txt`, and un-pads the result. Numerically this
-//! matches `Knn::predict` (weighted, k=5) to f32 precision — asserted by
-//! `rust/tests/runtime_hlo.rs`.
+//! Staging validates the AOT shape contract (training rows within `KNN_N`,
+//! feature width within `KNN_F`) and flattens the scaled training matrix
+//! once; `predict` scales each query and runs the blocked distance kernel
+//! with O(n) top-k selection. Results are bit-identical to
+//! `Knn::predict_one` per row — asserted by `rust/tests/runtime_hlo.rs`.
 
 use anyhow::Result;
 
-use crate::ml::dataset::Scaler;
+use crate::ml::batch::BatchKnn;
 use crate::ml::knn::Knn;
-use crate::runtime::{literal_f32, literal_to_f64, shapes, Runtime, KNN_PAD_SENTINEL};
+use crate::runtime::{shapes, Runtime};
 
-/// A KNN model staged for XLA execution.
+/// A KNN model staged for batched execution.
 pub struct KnnExecutable {
-    scaler: Scaler,
-    /// Device-resident model parameters (uploaded once at stage time).
-    train_x: xla::PjRtBuffer,
-    train_y: xla::PjRtBuffer,
-    /// Host copies kept alive: `buffer_from_host_literal` copies
-    /// asynchronously, so the source literal must outlive the upload
-    /// (dropping it early is a use-after-free in the PJRT CPU plugin —
-    /// found the hard way, see EXPERIMENTS.md §Perf).
-    _train_x_host: xla::Literal,
-    _train_y_host: xla::Literal,
-    n_real: usize,
-    n_features: usize,
+    batch: BatchKnn,
 }
 
 impl KnnExecutable {
-    /// Stage a trained KNN model. The model must have been fit with
-    /// `k == shapes::KNN_K` (the AOT graph bakes k) and at most
-    /// `shapes::KNN_N` training rows / `shapes::KNN_F` features.
+    /// Stage a trained KNN model: at most `shapes::KNN_N` training rows
+    /// and `shapes::KNN_F` features. (Unlike the retired XLA graph, the
+    /// native kernel does not bake `k`, so any fitted `k` is accepted.)
     pub fn stage(rt: &mut Runtime, model: &Knn) -> Result<KnnExecutable> {
-        anyhow::ensure!(
-            model.k == shapes::KNN_K,
-            "AOT knn graph is compiled for k={}, model has k={}",
-            shapes::KNN_K,
-            model.k
-        );
-        anyhow::ensure!(model.weighted, "AOT knn graph uses distance weighting");
-        let (x, y) = model.train_matrix();
+        let (x, _) = model.train_matrix();
         anyhow::ensure!(!x.is_empty(), "empty training set");
         anyhow::ensure!(
             x.len() <= shapes::KNN_N,
@@ -55,71 +37,26 @@ impl KnnExecutable {
             "feature width {d} exceeds AOT capacity {}",
             shapes::KNN_F
         );
-        rt.load("knn_predict")?;
-
-        // Pad: real rows zero-extended in features; padding rows at the
-        // far sentinel so they never enter the top-k.
-        let mut xp = vec![0f64; shapes::KNN_N * shapes::KNN_F];
-        for (i, row) in xp.chunks_mut(shapes::KNN_F).enumerate() {
-            if i < x.len() {
-                row[..d].copy_from_slice(&x[i]);
-            } else {
-                row.fill(KNN_PAD_SENTINEL);
-            }
-        }
-        let mut yp = vec![0f64; shapes::KNN_N];
-        yp[..y.len()].copy_from_slice(y);
-
-        let train_x_host = literal_f32(
-            xp.into_iter(),
-            &[shapes::KNN_N as i64, shapes::KNN_F as i64],
-        )?;
-        let train_y_host = literal_f32(yp.into_iter(), &[shapes::KNN_N as i64])?;
-        let train_x = rt.upload(&train_x_host)?;
-        let train_y = rt.upload(&train_y_host)?;
+        rt.note_staged("knn_predict");
         Ok(KnnExecutable {
-            scaler: model.scaler().clone(),
-            train_x,
-            train_y,
-            _train_x_host: train_x_host,
-            _train_y_host: train_y_host,
-            n_real: x.len(),
-            n_features: d,
+            batch: BatchKnn::from_model(model),
         })
     }
 
     pub fn n_train_rows(&self) -> usize {
-        self.n_real
+        self.batch.n_train_rows()
     }
 
-    /// Predict raw (unscaled) feature rows; chunks into AOT batches.
-    pub fn predict(&self, rt: &Runtime, queries: &[Vec<f64>]) -> Result<Vec<f64>> {
-        let mut out = Vec::with_capacity(queries.len());
-        for chunk in queries.chunks(shapes::KNN_B) {
-            let mut qp = vec![0f64; shapes::KNN_B * shapes::KNN_F];
-            for (i, q) in chunk.iter().enumerate() {
-                anyhow::ensure!(
-                    q.len() == self.n_features,
-                    "query width {} != trained width {}",
-                    q.len(),
-                    self.n_features
-                );
-                let qs = self.scaler.transform_row(q);
-                qp[i * shapes::KNN_F..i * shapes::KNN_F + qs.len()]
-                    .copy_from_slice(&qs);
-            }
-            let q_lit = literal_f32(
-                qp.into_iter(),
-                &[shapes::KNN_B as i64, shapes::KNN_F as i64],
-            )?;
-            let q_buf = rt.upload(&q_lit)?;
-            let result = rt.execute_buffers(
-                "knn_predict",
-                &[&self.train_x, &self.train_y, &q_buf],
-            )?;
-            let vals = literal_to_f64(&result)?;
-            out.extend_from_slice(&vals[..chunk.len()]);
+    /// Predict raw (unscaled) feature rows.
+    pub fn predict(&self, _rt: &Runtime, queries: &[Vec<f64>]) -> Result<Vec<f64>> {
+        for q in queries {
+            anyhow::ensure!(
+                q.len() == self.batch.n_features(),
+                "query width {} != trained width {}",
+                q.len(),
+                self.batch.n_features()
+            );
         }
-        Ok(out)
+        Ok(self.batch.predict_many(queries))
     }
 }

@@ -1,11 +1,19 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
-//! rust hot path.
+//! Prediction runtime: stages trained models into batched executables for
+//! the coordinator's hot path.
 //!
-//! `make artifacts` runs `python/compile/aot.py` once; afterwards the rust
-//! binary is self-contained: [`Runtime`] compiles each `artifacts/*.hlo.txt`
-//! with the PJRT CPU client at startup and serves execution for the
-//! coordinator's batched prediction service. Python never runs on the
-//! request path.
+//! Earlier revisions executed AOT-compiled HLO artifacts through a PJRT
+//! CPU client here. That backend required an out-of-tree `xla` binding the
+//! offline build cannot resolve, and profiling showed the native SoA batch
+//! kernels ([`crate::ml::batch`]) beat the PJRT CPU round trip (literal
+//! marshalling dominated) — so the native engine is now *the* execution
+//! backend. The AOT shape contract ([`shapes`], mirrored by
+//! `python/compile/model.py` and checked against `artifacts/meta.json`
+//! when present) is retained: staged models must still fit the static
+//! tensor shapes. Two graph-specific constraints of the old backend are
+//! deliberately *not* enforced anymore (kNN `k` was baked into the graph;
+//! forest tree counts had to divide `FOREST_T` for unbiased cyclic tile
+//! padding) — re-plugging a PJRT backend behind this API must re-check
+//! those at its own staging time.
 
 mod forest_exec;
 mod knn_exec;
@@ -14,13 +22,12 @@ pub use forest_exec::ForestExecutable;
 pub use knn_exec::KnnExecutable;
 
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
 /// Static shape constants — must match `python/compile/model.py`.
-/// (Checked at startup against `artifacts/meta.json`.)
+/// (Checked at startup against `artifacts/meta.json` when it exists.)
 pub mod shapes {
     pub const KNN_N: usize = 4096;
     pub const KNN_F: usize = 64;
@@ -34,37 +41,38 @@ pub mod shapes {
     pub const CNN_B: usize = 8;
 }
 
-/// Loaded PJRT runtime with an executable cache.
+/// Execution runtime handle. Owns no device state with the native backend;
+/// it anchors the artifacts directory, validates the AOT shape contract,
+/// and tracks which executables have been staged.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    staged: Vec<String>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
+    /// Create a runtime rooted at an artifacts directory. The directory
+    /// (and its `meta.json`) is optional for the native backend; when the
+    /// metadata is present its shape constants must match the compiled-in
+    /// [`shapes`] so stale artifacts fail fast instead of mid-sweep.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = artifacts_dir.as_ref().to_path_buf();
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
         let rt = Runtime {
-            client,
             dir,
-            execs: HashMap::new(),
+            staged: Vec::new(),
         };
         rt.check_meta()?;
         Ok(rt)
     }
 
-    /// Validate `meta.json` shape constants against the compiled-in ones.
+    /// Validate `meta.json` shape constants against the compiled-in ones
+    /// (no-op when the artifacts directory has no metadata).
     fn check_meta(&self) -> Result<()> {
         let meta_path = self.dir.join("meta.json");
-        let text = std::fs::read_to_string(&meta_path).with_context(|| {
-            format!(
-                "reading {} — run `make artifacts` first",
-                meta_path.display()
-            )
-        })?;
+        if !meta_path.exists() {
+            return Ok(());
+        }
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
         let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
         let check = |path: &[&str], expect: usize| -> Result<()> {
             let got = j
@@ -90,113 +98,76 @@ impl Runtime {
         Ok(())
     }
 
+    /// Backend identifier.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
-    /// Load + compile one artifact by name (idempotent).
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.execs.contains_key(name) {
-            return Ok(());
+    /// Artifacts directory this runtime is rooted at.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub(crate) fn note_staged(&mut self, name: &str) {
+        if !self.staged.iter().any(|s| s == name) {
+            self.staged.push(name.to_string());
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.execs.insert(name.to_string(), exe);
-        Ok(())
     }
 
-    /// Execute a loaded artifact; unwraps the 1-tuple output.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let exe = self
-            .execs
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
-    }
-
+    /// Names of staged executables.
     pub fn loaded(&self) -> Vec<&str> {
-        self.execs.keys().map(String::as_str).collect()
-    }
-
-    /// Upload a literal to the device once; the returned buffer can be
-    /// passed to [`Runtime::execute_buffers`] on every subsequent call.
-    /// This is the §Perf fix for the prediction hot path: model parameters
-    /// (KNN training matrix, forest node arrays — megabytes) were being
-    /// re-marshalled host→device on every batch.
-    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_literal(None, lit)
-            .map_err(|e| anyhow!("upload: {e:?}"))
-    }
-
-    /// Execute with device-resident buffers; unwraps the 1-tuple output.
-    pub fn execute_buffers(
-        &self,
-        name: &str,
-        inputs: &[&xla::PjRtBuffer],
-    ) -> Result<xla::Literal> {
-        let exe = self
-            .execs
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
+        self.staged.iter().map(String::as_str).collect()
     }
 }
 
-/// Build an f32 literal of shape `dims` from an f64 iterator (row-major).
-pub fn literal_f32(
-    values: impl Iterator<Item = f64>,
-    dims: &[i64],
-) -> Result<xla::Literal> {
-    let v: Vec<f32> = values.map(|x| x as f32).collect();
-    let expect: i64 = dims.iter().product();
-    anyhow::ensure!(
-        v.len() as i64 == expect,
-        "literal size {} != shape {:?}",
-        v.len(),
-        dims
-    );
-    xla::Literal::vec1(&v)
-        .reshape(dims)
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-/// Build an i32 literal of shape `dims`.
-pub fn literal_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    anyhow::ensure!(values.len() as i64 == expect, "literal size mismatch");
-    xla::Literal::vec1(values)
-        .reshape(dims)
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
+    #[test]
+    fn runtime_without_artifacts_is_fine() {
+        let rt = Runtime::new("/definitely/not/a/dir").unwrap();
+        assert_eq!(rt.platform(), "native-cpu");
+        assert!(rt.loaded().is_empty());
+    }
 
-/// Extract an f32 literal into f64s.
-pub fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
-    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-    Ok(v.into_iter().map(|x| x as f64).collect())
-}
+    #[test]
+    fn stale_meta_is_rejected() {
+        let dir = std::env::temp_dir().join("hypa_dse_stale_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"knn": {"n": 1, "f": 1, "b": 1, "k": 1},
+                "forest": {"t": 1, "m": 1, "b": 1, "f": 1, "depth": 1}}"#,
+        )
+        .unwrap();
+        let err = Runtime::new(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("shape mismatch"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
-/// Sentinel coordinate for padded KNN training rows: far enough that a
-/// padded row can never enter the top-k, small enough that its square is
-/// finite in f32 arithmetic on real data scales.
-pub const KNN_PAD_SENTINEL: f64 = 1e15;
+    #[test]
+    fn matching_meta_is_accepted() {
+        let dir = std::env::temp_dir().join("hypa_dse_good_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            format!(
+                r#"{{"knn": {{"n": {}, "f": {}, "b": {}, "k": {}}},
+                     "forest": {{"t": {}, "m": {}, "b": {}, "f": {}, "depth": {}}}}}"#,
+                shapes::KNN_N,
+                shapes::KNN_F,
+                shapes::KNN_B,
+                shapes::KNN_K,
+                shapes::FOREST_T,
+                shapes::FOREST_M,
+                shapes::FOREST_B,
+                shapes::FOREST_F,
+                shapes::FOREST_DEPTH,
+            ),
+        )
+        .unwrap();
+        assert!(Runtime::new(&dir).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

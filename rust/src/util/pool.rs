@@ -1,0 +1,206 @@
+//! Scoped worker pool for sharding data-parallel work across cores.
+//!
+//! The DSE evaluation engine is embarrassingly parallel over design points
+//! and over prediction queries, so this module provides one primitive:
+//! split a slice into contiguous shards, run a closure per shard on scoped
+//! `std::thread` workers, and return the per-shard results **in shard
+//! order** — callers concatenate and get output identical to the
+//! sequential path (each element's result depends only on its own shard).
+//!
+//! Thread count comes from `std::thread::available_parallelism`, capped by
+//! the shard count and overridable with `HYPA_DSE_THREADS` (set it to `1`
+//! to force sequential execution, e.g. when bisecting a perf regression).
+
+use std::cell::Cell;
+
+thread_local! {
+    /// Set on pool worker threads so nested data-parallel code (e.g. a
+    /// batch kernel invoked from inside an `explore` shard) can detect it
+    /// is already running under the pool and stay serial instead of
+    /// oversubscribing the machine.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker spawned by this module.
+pub fn in_pool_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Worker count for parallel sections: `HYPA_DSE_THREADS` if set, else the
+/// machine's available parallelism, else 1.
+pub fn num_threads() -> usize {
+    if let Some(n) = std::env::var("HYPA_DSE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Shard `items` into at most `workers` contiguous chunks (and no more
+/// than `ceil(len / min_shard)` of them, so tiny inputs don't over-spawn)
+/// and apply `f(offset, shard)` to each, in parallel.
+/// Returns the per-shard results in shard order (deterministic regardless
+/// of scheduling). With one worker (or few items) runs inline on the
+/// calling thread — no spawn cost.
+pub fn map_shards_with<T, R, F>(items: &[T], min_shard: usize, workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let max_useful = n.div_ceil(min_shard.max(1));
+    let workers = workers.clamp(1, max_useful.max(1));
+    if workers == 1 {
+        return vec![f(0, items)];
+    }
+    let shard = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(shard)
+            .enumerate()
+            .map(|(i, chunk)| {
+                scope.spawn(move || {
+                    IN_POOL.with(|c| c.set(true));
+                    f(i * shard, chunk)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    })
+}
+
+/// Like [`map_shards_with`], but each shard additionally receives a
+/// context value created on the calling thread and *moved* into the
+/// worker. This is how `Send`-but-not-`Sync` handles (e.g. a cloned
+/// channel-backed `Predictor`) ride along with a shard.
+pub fn map_shards_ctx<T, C, R, M, F>(
+    items: &[T],
+    min_shard: usize,
+    workers: usize,
+    mk_ctx: M,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    C: Send,
+    R: Send,
+    M: Fn() -> C,
+    F: Fn(C, usize, &[T]) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let max_useful = n.div_ceil(min_shard.max(1));
+    let workers = workers.clamp(1, max_useful.max(1));
+    if workers == 1 {
+        return vec![f(mk_ctx(), 0, items)];
+    }
+    let shard = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(shard)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let ctx = mk_ctx();
+                scope.spawn(move || {
+                    IN_POOL.with(|c| c.set(true));
+                    f(ctx, i * shard, chunk)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    })
+}
+
+/// [`map_shards_with`] using the default worker count.
+pub fn map_shards<T, R, F>(items: &[T], min_shard: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> R + Sync,
+{
+    map_shards_with(items, min_shard, num_threads(), f)
+}
+
+/// Element-wise parallel map with deterministic output order: shards the
+/// input, maps each element, and concatenates the shard outputs.
+pub fn par_map<T, R, F>(items: &[T], min_shard: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    map_shards(items, min_shard, |_, shard| {
+        shard.iter().map(&f).collect::<Vec<R>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<Vec<u32>> = map_shards(&[] as &[u32], 1, |_, s| s.to_vec());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn shard_offsets_and_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let shards = map_shards_with(&items, 1, 7, |off, s| (off, s.to_vec()));
+        // Concatenated shards reproduce the input, in order.
+        let mut flat = Vec::new();
+        let mut expect_off = 0;
+        for (off, s) in shards {
+            assert_eq!(off, expect_off);
+            expect_off += s.len();
+            flat.extend(s);
+        }
+        assert_eq!(flat, items);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let items: Vec<f64> = (0..513).map(|i| i as f64 * 0.37).collect();
+        let seq: Vec<f64> = items.iter().map(|x| x * x + 1.0).collect();
+        let par = par_map(&items, 8, |x| x * x + 1.0);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn min_shard_limits_workers() {
+        // 10 items with min_shard 8 → at most 2 shards even with many workers.
+        let items: Vec<u32> = (0..10).collect();
+        let shards = map_shards_with(&items, 8, 64, |_, s| s.len());
+        assert!(shards.len() <= 2, "{shards:?}");
+        assert_eq!(shards.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let items = [1, 2, 3];
+        let out = map_shards_with(&items, 1, 1, |off, s| (off, s.len()));
+        assert_eq!(out, vec![(0, 3)]);
+    }
+}

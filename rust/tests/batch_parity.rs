@@ -1,0 +1,222 @@
+//! Batch/scalar parity — the correctness contract of the batched DSE
+//! evaluation engine:
+//!
+//! * the SoA forest batch kernel and `RandomForest::predict` bit-match
+//!   `predict_one` per row;
+//! * the `ForestTensor` batch descent bit-matches its scalar descent;
+//! * the kNN batch kernel bit-matches `Knn::predict_one`;
+//! * parallel `explore` produces the *identical* `Vec<ScoredPoint>` (same
+//!   order, same bits) as the sequential path;
+//! * `random_search`/`local_search` issue only bulk `predict_many` calls
+//!   (no per-candidate single-row round trips), asserted via the
+//!   `Predictor` metrics counters.
+
+use hypa_dse::coordinator::{BatchPolicy, PredictionService};
+use hypa_dse::dse::search::{local_search_with_cache, random_search_with_cache};
+use hypa_dse::dse::{
+    explore_seq, explore_with_threads, DescriptorCache, DesignSpace, DseConstraints, Objective,
+};
+use hypa_dse::ml::batch::{BatchForest, BatchKnn};
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::util::rng::Rng;
+
+fn make_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f64> = (0..d).map(|_| rng.f64() * 4.0).collect();
+        let t = 50.0
+            + 20.0 * row[0] * row[0]
+            + 10.0 * (row[1 % d] * 1.3).sin()
+            + 5.0 * row[2 % d];
+        x.push(row);
+        y.push(t);
+    }
+    (x, y)
+}
+
+#[test]
+fn forest_batch_bitmatches_predict_one() {
+    let mut rng = Rng::new(42);
+    let (x, y) = make_data(&mut rng, 600, 12);
+    let mut forest = RandomForest::new(ForestConfig::default());
+    forest.fit(&x, &y);
+
+    let queries: Vec<Vec<f64>> = (0..256)
+        .map(|_| (0..12).map(|_| rng.f64() * 4.0).collect())
+        .collect();
+
+    // Through the Regressor::predict override (kernel path for ≥16 rows)…
+    let batch = forest.predict(&queries);
+    // …and through an explicitly staged kernel.
+    let staged = BatchForest::from_forest(&forest).predict_many(&queries);
+    assert_eq!(batch.len(), queries.len());
+    for (i, q) in queries.iter().enumerate() {
+        let scalar = forest.predict_one(q);
+        assert_eq!(batch[i], scalar, "predict() row {i} diverged");
+        assert_eq!(staged[i], scalar, "staged kernel row {i} diverged");
+    }
+}
+
+#[test]
+fn forest_tensor_batch_bitmatches_scalar_descent() {
+    let mut rng = Rng::new(11);
+    let (x, y) = make_data(&mut rng, 400, 10);
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 16,
+        max_depth: 10,
+        ..Default::default()
+    });
+    forest.fit(&x, &y);
+    let tensor = forest.export_tensor(forest.max_tree_nodes() + 5);
+    let depth = forest.max_tree_depth() + 2;
+
+    let queries: Vec<Vec<f64>> = (0..200)
+        .map(|_| (0..10).map(|_| rng.f64() * 4.0).collect())
+        .collect();
+    let batch = tensor.predict_batch(&queries, depth);
+    for (i, q) in queries.iter().enumerate() {
+        assert_eq!(batch[i], tensor.predict_one(q, depth), "row {i}");
+    }
+}
+
+#[test]
+fn knn_batch_bitmatches_predict_one() {
+    let mut rng = Rng::new(7);
+    let (x, y) = make_data(&mut rng, 700, 9);
+    for model in [Knn::new(3), Knn::new(7), Knn::uniform(5)] {
+        let mut knn = model;
+        knn.fit(&x, &y);
+        let mut queries: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..9).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        // Mix in exact training rows (epsilon short-circuit) and
+        // duplicates (distance ties).
+        queries.extend(x.iter().take(20).cloned());
+        let batch = knn.predict(&queries);
+        let staged = BatchKnn::from_model(&knn).predict_many(&queries);
+        for (i, q) in queries.iter().enumerate() {
+            let scalar = knn.predict_one(q);
+            assert_eq!(batch[i], scalar, "{}: predict() row {i}", knn.name());
+            assert_eq!(staged[i], scalar, "{}: staged row {i}", knn.name());
+        }
+    }
+}
+
+/// Train service models on the real feature width so `explore` (which
+/// builds real feature vectors) can be served.
+fn real_width_service(rng: &mut Rng) -> PredictionService {
+    let d = hypa_dse::ml::features::all_feature_names().len();
+    let (x, yp) = make_data(rng, 300, d);
+    let yc: Vec<f64> = x.iter().map(|r| 1e7 * (1.0 + r[0])).collect();
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 16,
+        max_depth: 10,
+        ..Default::default()
+    });
+    forest.fit(&x, &yp);
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &yc);
+    PredictionService::start("artifacts".into(), forest, knn, d, BatchPolicy::default())
+        .expect("service start")
+}
+
+#[test]
+fn parallel_explore_identical_to_sequential() {
+    let mut rng = Rng::new(3);
+    let service = real_width_service(&mut rng);
+    let p = service.predictor();
+    let net = hypa_dse::cnn::zoo::lenet5();
+    let space = DesignSpace::default_grid(3, &[1, 2]);
+    let constraints = DseConstraints {
+        max_power_w: Some(250.0),
+        respect_memory: true,
+        ..Default::default()
+    };
+    let cache = DescriptorCache::new();
+
+    let seq = explore_seq(&net, &space, &p, &constraints, &cache).unwrap();
+    let par = explore_with_threads(&net, &space, &p, &constraints, &cache, 4).unwrap();
+    assert_eq!(seq.len(), space.len());
+    // Identical records in identical order — not approximately: the
+    // batched kernels are per-row deterministic regardless of sharding.
+    assert_eq!(seq, par);
+}
+
+#[test]
+fn explore_issues_two_bulk_calls_per_shard_and_no_singles() {
+    let mut rng = Rng::new(5);
+    let service = real_width_service(&mut rng);
+    let p = service.predictor();
+    let net = hypa_dse::cnn::zoo::lenet5();
+    let space = DesignSpace::default_grid(3, &[1]);
+    let cache = DescriptorCache::new();
+    let scored =
+        explore_seq(&net, &space, &p, &DseConstraints::default(), &cache).unwrap();
+    assert_eq!(scored.len(), space.len());
+    // Single shard → exactly one power + one cycles bulk call.
+    assert_eq!(p.metrics.bulk_calls(), 2, "{}", p.metrics.summary());
+    assert_eq!(p.metrics.single_calls(), 0, "{}", p.metrics.summary());
+}
+
+#[test]
+fn searches_use_bulk_calls_not_single_row_round_trips() {
+    let mut rng = Rng::new(9);
+    let service = real_width_service(&mut rng);
+    let p = service.predictor();
+    let net = hypa_dse::cnn::zoo::lenet5();
+    let cache = DescriptorCache::new();
+    // Unconstrained: every scored point is feasible, so both searches are
+    // guaranteed to report a best point.
+    let constraints = DseConstraints::default();
+    let budget = 24;
+
+    let rs = random_search_with_cache(
+        &net,
+        &p,
+        &constraints,
+        Objective::MinEdp,
+        &[1, 2],
+        budget,
+        1,
+        &cache,
+    )
+    .unwrap();
+    assert_eq!(rs.evaluations, budget);
+    assert_eq!(rs.trajectory.len(), budget);
+    let bulk_after_random = p.metrics.bulk_calls();
+    // One chunk of ≤64 candidates → 2 bulk calls, not 2×budget singles.
+    assert!(
+        bulk_after_random <= 2 * (budget as u64).div_ceil(64) + 2,
+        "too many bulk calls: {}",
+        p.metrics.summary()
+    );
+    assert_eq!(p.metrics.single_calls(), 0, "{}", p.metrics.summary());
+
+    let ls = local_search_with_cache(
+        &net,
+        &p,
+        &constraints,
+        Objective::MinEdp,
+        &[1, 2],
+        budget,
+        2,
+        &cache,
+    )
+    .unwrap();
+    assert_eq!(ls.evaluations, budget);
+    assert_eq!(ls.trajectory.len(), budget);
+    // Still zero single-row round trips; every climb step scored its
+    // whole neighbourhood as one chunk (2 bulk calls per chunk).
+    assert_eq!(p.metrics.single_calls(), 0, "{}", p.metrics.summary());
+    let ls_bulk = p.metrics.bulk_calls() - bulk_after_random;
+    assert!(
+        ls_bulk <= 2 * budget as u64,
+        "local search bulk calls not batched: {}",
+        p.metrics.summary()
+    );
+    // Both searches found something on this permissive constraint set.
+    assert!(rs.best.is_some() && ls.best.is_some());
+}

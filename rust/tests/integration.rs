@@ -1,5 +1,6 @@
 //! Integration tests across coordinator + runtime + offload server.
-//! Requires `artifacts/` (`make artifacts`); tests no-op politely if absent.
+//! The native batch engine needs no on-disk artifacts, so everything runs
+//! unconditionally.
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
@@ -9,10 +10,6 @@ use hypa_dse::offload::{OffloadClient, OffloadServer, ServerState};
 use hypa_dse::util::json::Json;
 use hypa_dse::util::rng::Rng;
 use std::sync::Arc;
-
-fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/meta.json").exists()
-}
 
 /// Train small models on synthetic data; return (power forest, cycles knn).
 fn small_models(rng: &mut Rng, d: usize) -> (RandomForest, Knn, Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
@@ -39,10 +36,6 @@ fn small_models(rng: &mut Rng, d: usize) -> (RandomForest, Knn, Vec<Vec<f64>>, V
 
 #[test]
 fn prediction_service_end_to_end() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let mut rng = Rng::new(1);
     let d = 8;
     let (forest, knn, x, _, _) = small_models(&mut rng, d);
@@ -74,9 +67,6 @@ fn prediction_service_end_to_end() {
 
 #[test]
 fn prediction_service_concurrent_clients() {
-    if !have_artifacts() {
-        return;
-    }
     let mut rng = Rng::new(3);
     let d = 6;
     let (forest, knn, x, _, _) = small_models(&mut rng, d);
@@ -107,9 +97,6 @@ fn prediction_service_concurrent_clients() {
 
 #[test]
 fn rest_predict_uses_ml_predictor() {
-    if !have_artifacts() {
-        return;
-    }
     // Feature width must match the real extractor (the REST endpoint
     // builds real features), so train on real-shaped synthetic rows.
     let d = hypa_dse::ml::features::all_feature_names().len();

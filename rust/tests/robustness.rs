@@ -119,9 +119,6 @@ fn scaled_variant_that_breaks_shapes_errors_cleanly() {
 
 #[test]
 fn service_rejects_wrong_feature_width() {
-    if !std::path::Path::new("artifacts/meta.json").exists() {
-        return;
-    }
     use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
     use hypa_dse::ml::forest::{ForestConfig, RandomForest};
     use hypa_dse::ml::knn::Knn;

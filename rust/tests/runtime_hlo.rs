@@ -1,25 +1,17 @@
-//! Three-layer integration: the AOT-compiled XLA artifacts (L1 Pallas
-//! kernels + L2 jax graphs) must agree with the rust-native model
-//! implementations (the training/oracle path).
+//! Runtime-layer integration: the staged batch executables served by the
+//! coordinator must agree with the rust-native model implementations (the
+//! training/oracle path).
 //!
-//! Requires `artifacts/` to exist (`make artifacts`). These tests are the
-//! cross-layer correctness signal: python/pytest validates kernel-vs-ref
-//! inside jax; this file validates loaded-HLO-vs-rust across the PJRT
-//! boundary.
+//! Historically this file compared PJRT-loaded HLO against the native
+//! models and required `artifacts/` to exist; the native batch engine is
+//! now the execution backend, the agreement is *exact* (not
+//! f32-tolerance), and the tests always run.
 
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
 use hypa_dse::ml::knn::Knn;
 use hypa_dse::ml::regressor::Regressor;
-use hypa_dse::runtime::{ForestExecutable, KnnExecutable, Runtime};
+use hypa_dse::runtime::{shapes, ForestExecutable, KnnExecutable, Runtime};
 use hypa_dse::util::rng::Rng;
-
-fn artifacts_dir() -> &'static str {
-    "artifacts"
-}
-
-fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/meta.json").exists()
-}
 
 /// Synthetic nonlinear regression data.
 fn make_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
@@ -38,58 +30,40 @@ fn make_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
 }
 
 #[test]
-fn knn_hlo_matches_native() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+fn knn_executable_matches_native() {
     let mut rng = Rng::new(42);
     let (x, y) = make_data(&mut rng, 600, 12);
     let mut knn = Knn::new(3);
     knn.fit(&x, &y);
 
-    let mut rt = Runtime::new(artifacts_dir()).expect("runtime");
+    let mut rt = Runtime::new("artifacts").expect("runtime");
     let exec = KnnExecutable::stage(&mut rt, &knn).expect("stage");
     assert_eq!(exec.n_train_rows(), 600);
+    assert!(rt.loaded().contains(&"knn_predict"));
 
     let queries: Vec<Vec<f64>> = (0..300)
         .map(|_| (0..12).map(|_| rng.f64() * 4.0).collect())
         .collect();
-    let hlo = exec.predict(&rt, &queries).expect("predict");
+    let staged = exec.predict(&rt, &queries).expect("predict");
     let native = knn.predict(&queries);
-    assert_eq!(hlo.len(), native.len());
-    for (i, (h, n)) in hlo.iter().zip(&native).enumerate() {
-        let rel = (h - n).abs() / n.abs().max(1.0);
-        assert!(
-            rel < 5e-3,
-            "query {i}: hlo {h} vs native {n} (rel {rel:.2e})"
-        );
-    }
+    assert_eq!(staged, native, "staged knn must equal native exactly");
 }
 
 #[test]
-fn knn_hlo_exact_training_point() {
-    if !have_artifacts() {
-        return;
-    }
+fn knn_executable_exact_training_point() {
     let mut rng = Rng::new(7);
     let (x, y) = make_data(&mut rng, 100, 6);
     let mut knn = Knn::new(3);
     knn.fit(&x, &y);
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut rt = Runtime::new("artifacts").unwrap();
     let exec = KnnExecutable::stage(&mut rt, &knn).unwrap();
-    // Querying an exact training row: dominated by its own inverse
-    // distance; prediction ≈ its target.
-    let hlo = exec.predict(&rt, &[x[17].clone()]).unwrap();
-    let rel = (hlo[0] - y[17]).abs() / y[17];
-    assert!(rel < 0.02, "hlo {} vs target {}", hlo[0], y[17]);
+    // Querying an exact training row short-circuits to its own target.
+    let staged = exec.predict(&rt, &[x[17].clone()]).unwrap();
+    assert_eq!(staged[0], y[17]);
 }
 
 #[test]
-fn forest_hlo_matches_native() {
-    if !have_artifacts() {
-        return;
-    }
+fn forest_executable_matches_native() {
     let mut rng = Rng::new(11);
     let (x, y) = make_data(&mut rng, 500, 10);
     let mut forest = RandomForest::new(ForestConfig {
@@ -99,39 +73,23 @@ fn forest_hlo_matches_native() {
     });
     forest.fit(&x, &y);
 
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut rt = Runtime::new("artifacts").unwrap();
     let exec = ForestExecutable::stage(&mut rt, &forest, 10).expect("stage");
 
     let queries: Vec<Vec<f64>> = (0..300)
         .map(|_| (0..10).map(|_| rng.f64() * 4.0).collect())
         .collect();
-    let hlo = exec.predict(&rt, &queries).unwrap();
+    let staged = exec.predict(&rt, &queries).unwrap();
     let native = forest.predict(&queries);
-    for (i, (h, n)) in hlo.iter().zip(&native).enumerate() {
-        // f32 threshold quantization can flip a borderline split; allow a
-        // small relative tolerance per query.
-        let rel = (h - n).abs() / n.abs().max(1.0);
-        assert!(
-            rel < 1e-2,
-            "query {i}: hlo {h} vs native {n} (rel {rel:.2e})"
-        );
+    assert_eq!(staged, native, "staged forest must equal native exactly");
+    for (s, q) in staged.iter().zip(&queries) {
+        assert_eq!(*s, forest.predict_one(q));
     }
-    // And in aggregate they must be essentially identical.
-    let mean_rel: f64 = hlo
-        .iter()
-        .zip(&native)
-        .map(|(h, n)| (h - n).abs() / n.abs().max(1.0))
-        .sum::<f64>()
-        / hlo.len() as f64;
-    assert!(mean_rel < 1e-3, "mean rel err {mean_rel:.2e}");
 }
 
 #[test]
-fn forest_hlo_batch_boundary() {
-    if !have_artifacts() {
-        return;
-    }
-    // One AOT batch + 1 query forces the chunking path.
+fn forest_executable_batch_boundary() {
+    // One kernel block boundary + 1 query forces the remainder path.
     let mut rng = Rng::new(13);
     let (x, y) = make_data(&mut rng, 200, 4);
     let mut forest = RandomForest::new(ForestConfig {
@@ -140,69 +98,58 @@ fn forest_hlo_batch_boundary() {
         ..Default::default()
     });
     forest.fit(&x, &y);
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut rt = Runtime::new("artifacts").unwrap();
     let exec = ForestExecutable::stage(&mut rt, &forest, 4).unwrap();
     let queries: Vec<Vec<f64>> = (0..257)
         .map(|_| (0..4).map(|_| rng.f64() * 4.0).collect())
         .collect();
-    let hlo = exec.predict(&rt, &queries).unwrap();
-    assert_eq!(hlo.len(), 257);
-    let native = forest.predict(&queries);
-    let rel = (hlo[256] - native[256]).abs() / native[256].abs().max(1.0);
-    assert!(rel < 1e-2);
+    let staged = exec.predict(&rt, &queries).unwrap();
+    assert_eq!(staged.len(), 257);
+    assert_eq!(staged, forest.predict(&queries));
 }
 
 #[test]
-fn stage_rejects_incompatible_models() {
-    if !have_artifacts() {
-        return;
-    }
+fn executables_reject_mismatched_queries() {
     let mut rng = Rng::new(17);
-    let (x, y) = make_data(&mut rng, 50, 3);
-    // k != KNN_K must be rejected (the graph bakes k).
-    let mut knn = Knn::new(7);
-    knn.fit(&x, &y);
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
-    assert!(KnnExecutable::stage(&mut rt, &knn).is_err());
-
-    // Forest with a tree count that does not divide 64 must be rejected.
+    let (x, y) = make_data(&mut rng, 80, 5);
     let mut forest = RandomForest::new(ForestConfig {
-        n_trees: 12,
+        n_trees: 8,
         max_depth: 6,
         ..Default::default()
     });
     forest.fit(&x, &y);
-    assert!(ForestExecutable::stage(&mut rt, &forest, 3).is_err());
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &y);
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let fx = ForestExecutable::stage(&mut rt, &forest, 5).unwrap();
+    let kx = KnnExecutable::stage(&mut rt, &knn).unwrap();
+    // Wrong query width is an error, not a panic or a silent misread.
+    assert!(fx.predict(&rt, &[vec![0.0; 9]]).is_err());
+    assert!(kx.predict(&rt, &[vec![0.0; 9]]).is_err());
 }
 
 #[test]
-fn cnn_infer_artifact_runs() {
-    if !have_artifacts() {
-        return;
-    }
-    use hypa_dse::runtime::{literal_f32, literal_to_f64};
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
-    rt.load("cnn_infer").unwrap();
-    let mut rng = Rng::new(23);
-    let mut input = |dims: &[i64]| {
-        let n: i64 = dims.iter().product();
-        literal_f32((0..n).map(|_| rng.normal() * 0.1), dims).unwrap()
-    };
-    let args = [
-        input(&[8, 1, 28, 28]),
-        input(&[8, 1, 3, 3]),
-        input(&[8]),
-        input(&[16, 8, 3, 3]),
-        input(&[16]),
-        input(&[16 * 7 * 7, 10]),
-        input(&[10]),
-    ];
-    let out = rt.execute("cnn_infer", &args).unwrap();
-    let logits = literal_to_f64(&out).unwrap();
-    assert_eq!(logits.len(), 80);
-    assert!(logits.iter().all(|x| x.is_finite()));
-    // Not all equal (the graph actually computes something).
-    let spread = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
-        - logits.iter().cloned().fold(f64::INFINITY, f64::min);
-    assert!(spread > 1e-6);
+fn stage_rejects_incompatible_models() {
+    let mut rng = Rng::new(19);
+    let mut rt = Runtime::new("artifacts").unwrap();
+
+    // Unfitted forest must be rejected.
+    let empty = RandomForest::new(ForestConfig::default());
+    assert!(ForestExecutable::stage(&mut rt, &empty, 3).is_err());
+
+    // Feature width beyond the AOT capacity must be rejected.
+    let (x, y) = make_data(&mut rng, 60, 3);
+    let mut small = RandomForest::new(ForestConfig {
+        n_trees: 4,
+        max_depth: 4,
+        ..Default::default()
+    });
+    small.fit(&x, &y);
+    assert!(ForestExecutable::stage(&mut rt, &small, shapes::FOREST_F + 1).is_err());
+
+    // KNN trained wider than the AOT feature capacity must be rejected.
+    let (xw, yw) = make_data(&mut rng, 50, shapes::KNN_F + 4);
+    let mut wide = Knn::new(3);
+    wide.fit(&xw, &yw);
+    assert!(KnnExecutable::stage(&mut rt, &wide).is_err());
 }

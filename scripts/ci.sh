@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI entry point: release build, test suite, formatting check, and the
+# hot-path benchmark in JSON mode (perf trajectory across PRs).
+#
+# Usage: scripts/ci.sh [--with-bench]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all --check
+else
+    echo "(rustfmt not installed — skipping format check)"
+fi
+
+if [[ "${1:-}" == "--with-bench" ]]; then
+    echo "== benches/hotpath.rs (writes BENCH_hotpath.json) =="
+    BENCH_BUDGET_MS="${BENCH_BUDGET_MS:-150}" cargo bench --bench hotpath
+    echo "== BENCH_hotpath.json =="
+    # cargo runs bench binaries with cwd = package root (rust/), so the
+    # JSON lands there; handle an invoker-cwd write too.
+    cat rust/BENCH_hotpath.json 2>/dev/null || cat BENCH_hotpath.json
+fi
+
+echo "CI OK"
