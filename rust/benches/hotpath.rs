@@ -6,10 +6,17 @@
 //!
 //! * native forest batch-256 prediction (SoA level-wise descent, threaded)
 //!   vs the per-tree pointer-chase baseline (`predict_one` per row);
+//! * cached-staging amortization: `Regressor::predict` through the cached
+//!   staged kernel vs restaging (`BatchForest::from_forest` /
+//!   `BatchKnn::from_model`) on every call — the PR-1 behaviour;
 //! * the AOT-shape `ForestTensor` batch descent vs its scalar descent;
 //! * native kNN batch-256 (flat matrix, blocked distances, O(n) top-k)
 //!   vs the scalar per-row scan;
-//! * coordinator service round trips: single-row vs one bulk submission;
+//! * feature emission into a flat `FeatureMatrix` vs per-point `Vec`s —
+//!   with a counting global allocator *proving* the flat path performs
+//!   zero per-point heap allocations;
+//! * coordinator service round trips: single-row vs one bulk submission
+//!   (rows and flat-matrix variants);
 //! * `explore` over the default grid (catalog × 8 freq steps × 4 batches):
 //!   sequential vs worker-pool sharded;
 //! * feature extraction and the simulator timing path.
@@ -18,19 +25,57 @@
 //! per stage, predictions/sec, before/after ratios) so the perf trajectory
 //! is tracked across PRs.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
 use hypa_dse::dse::{explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints};
 use hypa_dse::ml::batch::{BatchForest, BatchKnn};
-use hypa_dse::ml::features::NetDescriptor;
+use hypa_dse::ml::features::{NetDescriptor, N_FEATURES};
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
 use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::matrix::FeatureMatrix;
 use hypa_dse::ml::regressor::Regressor;
 use hypa_dse::util::bench::{self, Measurement};
 use hypa_dse::util::json::{jnum, Json};
 use hypa_dse::util::pool;
 use hypa_dse::util::rng::Rng;
+
+/// Counting wrapper around the system allocator: lets the feature-emission
+/// stage *assert* that the flat path performs zero per-point heap
+/// allocations, rather than inferring it from timings.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 struct Record {
     json: Json,
@@ -93,15 +138,26 @@ fn main() {
     let m_fb = bench::bench("forest batch x256", budget, || {
         staged_forest.predict_many(&queries)
     });
-    let m_fbu = bench::bench("forest batch unstaged x256", budget, || {
+    // `Regressor::predict` now runs through the cached staged kernel —
+    // warm the cache, then compare against restaging every call (what
+    // every predict paid before the staging cache).
+    let _ = forest.predict(&queries);
+    let m_fc = bench::bench("forest predict cached x256", budget, || {
         forest.predict(&queries)
     });
+    let m_fr = bench::bench("forest restage+predict x256", budget, || {
+        BatchForest::from_forest(&forest).predict_many(&queries)
+    });
     let forest_ratio = m_fs.p50() / m_fb.p50();
-    println!("  speedup (staged batch vs scalar): {forest_ratio:.2}x\n");
+    let forest_cache_ratio = m_fr.p50() / m_fc.p50();
+    println!("  speedup (staged batch vs scalar): {forest_ratio:.2}x");
+    println!("  speedup (cached vs restage-per-call): {forest_cache_ratio:.2}x\n");
     stages.stage(&m_fs, B);
     stages.stage(&m_fb, B);
-    stages.stage(&m_fbu, B);
+    stages.stage(&m_fc, B);
+    stages.stage(&m_fr, B);
     ratios.set("forest_batch_vs_scalar", jnum(forest_ratio));
+    ratios.set("forest_cached_vs_restage", jnum(forest_cache_ratio));
 
     println!("-- AOT-shape ForestTensor descent --");
     let tensor = forest.export_tensor(forest.max_tree_nodes());
@@ -129,11 +185,79 @@ fn main() {
     let m_kb = bench::bench("knn batch x256", budget, || {
         staged_knn.predict_many(&queries)
     });
+    // Cached staging vs re-flattening the O(n_train × d) training matrix
+    // on every call (the pre-cache behaviour of `Knn::predict`).
+    let _ = knn.predict(&queries);
+    let m_kc = bench::bench("knn predict cached x256", budget, || {
+        knn.predict(&queries)
+    });
+    let m_kr = bench::bench("knn restage+predict x256", budget, || {
+        BatchKnn::from_model(&knn).predict_many(&queries)
+    });
     let knn_ratio = m_ks.p50() / m_kb.p50();
-    println!("  speedup: {knn_ratio:.2}x\n");
+    let knn_cache_ratio = m_kr.p50() / m_kc.p50();
+    println!("  speedup: {knn_ratio:.2}x");
+    println!("  speedup (cached vs restage-per-call): {knn_cache_ratio:.2}x\n");
     stages.stage(&m_ks, B);
     stages.stage(&m_kb, B);
+    stages.stage(&m_kc, B);
+    stages.stage(&m_kr, B);
     ratios.set("knn_batch_vs_scalar", jnum(knn_ratio));
+    ratios.set("knn_cached_vs_restage", jnum(knn_cache_ratio));
+
+    println!("-- feature emission: flat FeatureMatrix vs per-point Vec --");
+    let lenet = hypa_dse::cnn::zoo::lenet5();
+    let desc = NetDescriptor::build(&lenet, 1).unwrap();
+    let gspec = hypa_dse::gpu::specs::by_name("v100s").unwrap();
+    let freqs: Vec<f64> = (0..512).map(|i| 600.0 + i as f64).collect();
+    // Alloc proof outside the timed loops: emitting into a preallocated
+    // matrix must not touch the heap at all; the per-point path allocates
+    // one Vec per design point.
+    let mut fm = FeatureMatrix::with_capacity(N_FEATURES, freqs.len());
+    let a0 = alloc_count();
+    for &f in &freqs {
+        desc.features_into(&gspec, f, &mut fm);
+    }
+    let flat_allocs = alloc_count() - a0;
+    let a1 = alloc_count();
+    let mut rows: Vec<Vec<f64>> = Vec::with_capacity(freqs.len());
+    for &f in &freqs {
+        rows.push(desc.features(&gspec, f));
+    }
+    let vec_allocs = alloc_count() - a1;
+    drop(rows);
+    println!(
+        "  heap allocations for {} points: flat={flat_allocs} per-point Vec={vec_allocs}",
+        freqs.len()
+    );
+    assert_eq!(
+        flat_allocs, 0,
+        "flat feature emission must be allocation-free"
+    );
+    let m_ef = bench::bench("feature emit flat x512", budget, || {
+        fm.clear();
+        for &f in &freqs {
+            desc.features_into(&gspec, f, &mut fm);
+        }
+        fm.n_rows()
+    });
+    let m_ev = bench::bench("feature emit per-point vec x512", budget, || {
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(freqs.len());
+        for &f in &freqs {
+            rows.push(desc.features(&gspec, f));
+        }
+        rows.len()
+    });
+    let emit_ratio = m_ev.p50() / m_ef.p50();
+    println!("  speedup (flat vs per-point): {emit_ratio:.2}x\n");
+    stages.stage(&m_ef, freqs.len());
+    stages.stage(&m_ev, freqs.len());
+    ratios.set("feature_emit_flat_vs_vec", jnum(emit_ratio));
+    ratios.set("feature_flat_allocs_per_point", jnum(0.0));
+    ratios.set(
+        "feature_vec_allocs_per_point",
+        jnum(vec_allocs as f64 / freqs.len() as f64),
+    );
 
     println!("-- coordinator service round trips --");
     let service = PredictionService::start(
@@ -154,13 +278,20 @@ fn main() {
     let m_sc = bench::bench("service bulk x256 (cycles)", budget, || {
         p.predict_many(Task::Cycles, &queries).unwrap()
     });
+    // The flat-matrix bulk path: no per-row Vec boundary at all.
+    let qm = FeatureMatrix::from_rows(&queries);
+    let m_sm = bench::bench("service bulk matrix x256 (power)", budget, || {
+        p.predict_matrix(Task::Power, &qm).unwrap()
+    });
     // Per-row cost: single round trip vs one bulk row.
     let service_ratio = m_ss.p50() / (m_sb.p50() / B as f64);
     println!("  per-row speedup (bulk vs single round trip): {service_ratio:.2}x\n");
     stages.stage(&m_ss, 1);
     stages.stage(&m_sb, B);
     stages.stage(&m_sc, B);
+    stages.stage(&m_sm, B);
     ratios.set("service_bulk_vs_single_per_row", jnum(service_ratio));
+    ratios.set("service_matrix_vs_rows_bulk", jnum(m_sb.p50() / m_sm.p50()));
 
     println!("-- explore: default grid (catalog x 8 freq steps x 4 batches) --");
     let net = hypa_dse::cnn::zoo::lenet5();

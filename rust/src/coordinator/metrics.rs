@@ -14,6 +14,14 @@ pub struct Metrics {
     pub single_calls: AtomicU64,
     /// `Predictor::predict_many` invocations (bulk submissions).
     pub bulk_calls: AtomicU64,
+    /// Dynamic-batch flushes executed on the flush pool.
+    pub pool_flushes: AtomicU64,
+    /// Flushes currently executing on the pool.
+    pub inflight_flushes: AtomicU64,
+    /// High-water mark of concurrently executing flushes (≥ 2 proves the
+    /// pool overlapped flushes that the old single worker thread ran
+    /// serially).
+    pub max_inflight_flushes: AtomicU64,
     /// Recent per-batch latencies (seconds), ring buffer.
     latencies: Mutex<Vec<f64>>,
 }
@@ -64,6 +72,28 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A pool flush started executing; tracks the concurrency high-water
+    /// mark. Pair with [`Metrics::flush_end`].
+    pub fn flush_begin(&self) {
+        self.pool_flushes.fetch_add(1, Ordering::Relaxed);
+        let now = self.inflight_flushes.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max_inflight_flushes.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// A pool flush finished executing.
+    pub fn flush_end(&self) {
+        self.inflight_flushes.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn pool_flushes(&self) -> u64 {
+        self.pool_flushes.load(Ordering::Relaxed)
+    }
+
+    /// Most flushes ever observed executing at once.
+    pub fn max_concurrent_flushes(&self) -> u64 {
+        self.max_inflight_flushes.load(Ordering::Relaxed)
+    }
+
     /// Mean items per batch (batching efficiency).
     pub fn mean_batch_fill(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -82,12 +112,15 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} singles={} bulks={} batches={} fill={:.1} p50={} p95={} errors={}",
+            "requests={} singles={} bulks={} batches={} fill={:.1} \
+             flushes={} max_inflight={} p50={} p95={} errors={}",
             self.requests.load(Ordering::Relaxed),
             self.single_calls.load(Ordering::Relaxed),
             self.bulk_calls.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_fill(),
+            self.pool_flushes.load(Ordering::Relaxed),
+            self.max_inflight_flushes.load(Ordering::Relaxed),
             crate::util::table::dur(self.latency_percentile(50.0)),
             crate::util::table::dur(self.latency_percentile(95.0)),
             self.errors.load(Ordering::Relaxed),
@@ -134,5 +167,44 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=1"));
         assert!(s.contains("fill=5.0"));
+    }
+
+    #[test]
+    fn flush_inflight_watermark() {
+        let m = Metrics::new();
+        m.flush_begin();
+        m.flush_begin(); // two flushes executing at once
+        m.flush_end();
+        m.flush_begin(); // back to two — watermark must not move
+        m.flush_end();
+        m.flush_end();
+        assert_eq!(m.pool_flushes(), 3);
+        assert_eq!(m.max_concurrent_flushes(), 2);
+        assert_eq!(m.inflight_flushes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn concurrent_flushes_overlap_is_observable() {
+        // Two threads rendezvous inside their flush_begin/flush_end
+        // windows: the watermark must record that both were inflight
+        // simultaneously.
+        use std::sync::{Arc, Barrier};
+        let m = Arc::new(Metrics::new());
+        let gate = Arc::new(Barrier::new(2));
+        let threads: Vec<_> = (0..2)
+            .map(|_| {
+                let m = m.clone();
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    m.flush_begin();
+                    gate.wait(); // both inside the flush window here
+                    m.flush_end();
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.max_concurrent_flushes(), 2);
     }
 }

@@ -1,7 +1,16 @@
 //! L3 coordinator: the batched prediction service ([`service`]) that owns
-//! the PJRT runtime and routes power/cycles prediction requests from the
-//! DSE engine and the offload REST API into AOT-sized XLA batches, plus
-//! its [`metrics`].
+//! the staged runtime and routes power/cycles prediction requests from the
+//! DSE engine and the offload REST API into AOT-sized batches, plus its
+//! [`metrics`].
+//!
+//! Two request classes, two execution paths:
+//!
+//! * single-row requests are dynamically batched by a dispatcher thread
+//!   and flushed on a small worker pool (concurrent flushes overlap —
+//!   see [`Metrics::max_concurrent_flushes`]);
+//! * bulk/matrix submissions ([`Predictor::predict_many`],
+//!   [`Predictor::predict_matrix`]) execute the staged batch kernels
+//!   directly on the calling thread against the shared engine.
 
 pub mod metrics;
 pub mod service;

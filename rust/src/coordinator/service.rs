@@ -1,20 +1,28 @@
 //! Batched prediction service: the L3 coordination hot path.
 //!
 //! DSE sweeps and the offload REST API submit feature vectors for scoring.
-//! The staged models live in an immutable, thread-safe [`Engine`]:
+//! The staged models live in an immutable, thread-safe engine shared by
+//! every execution path:
 //!
 //! * **Single-row requests** ([`Predictor::predict`]) go through a
-//!   dedicated worker thread that collects them into batches (dynamic
+//!   dedicated dispatcher thread that collects them into batches (dynamic
 //!   batching: fill up to the batch capacity, or flush when the queue goes
-//!   momentarily idle) and answers each requester — the vLLM-router
-//!   pattern scaled to the paper's workload: many small independent
-//!   predictions with a throughput-optimal batched backend.
-//! * **Bulk submissions** ([`Predictor::predict_many`]) execute the batch
-//!   kernel *directly on the calling thread* against the shared engine —
-//!   no channel round trip at all, and concurrent callers (e.g. the
-//!   sharded `explore` worker pool) score truly in parallel. This is the
-//!   §Perf fix for `explore`'s 2×N single-row round trips, measured in
-//!   `benches/hotpath.rs` as the single-vs-bulk service ratio.
+//!   momentarily idle) — the vLLM-router pattern scaled to the paper's
+//!   workload: many small independent predictions with a
+//!   throughput-optimal batched backend. Filled batches are *executed on a
+//!   small flush pool* ([`crate::util::pool::TaskPool`]), so concurrent
+//!   REST traffic overlaps flushes instead of serializing behind one
+//!   worker thread; the `Metrics` flush watermark
+//!   ([`Metrics::max_concurrent_flushes`]) observes the overlap.
+//! * **Bulk submissions** ([`Predictor::predict_many`] /
+//!   [`Predictor::predict_matrix`]) execute the batch kernel *directly on
+//!   the calling thread* against the shared engine — no channel round trip
+//!   at all, and concurrent callers (e.g. the sharded `explore` worker
+//!   pool) score truly in parallel. `predict_matrix` consumes the flat
+//!   [`FeatureMatrix`] the DSE layer emits, so a sweep's features never
+//!   exist as per-point `Vec`s. This is the §Perf fix for `explore`'s
+//!   2×N single-row round trips, measured in `benches/hotpath.rs` as the
+//!   single-vs-bulk service ratio.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -26,7 +34,9 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::metrics::Metrics;
 use crate::ml::forest::RandomForest;
 use crate::ml::knn::Knn;
+use crate::ml::matrix::FeatureMatrix;
 use crate::runtime::{shapes, ForestExecutable, KnnExecutable, Runtime};
+use crate::util::pool::{self, TaskPool};
 
 /// Which predictor to route a request to (paper: RF for power, KNN for
 /// cycles).
@@ -49,6 +59,13 @@ impl Engine {
         match task {
             Task::Power => self.forest.predict(&self.rt, rows),
             Task::Cycles => self.knn.predict(&self.rt, rows),
+        }
+    }
+
+    fn execute_matrix(&self, task: Task, m: &FeatureMatrix) -> Result<Vec<f64>> {
+        match task {
+            Task::Power => self.forest.predict_matrix(&self.rt, m),
+            Task::Cycles => self.knn.predict_matrix(&self.rt, m),
         }
     }
 }
@@ -85,6 +102,10 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// How long to linger for more requests once at least one is queued.
     pub linger: Duration,
+    /// Worker threads executing flushed batches (0 → auto: the machine's
+    /// parallelism, capped at 4 — enough to overlap flushes without
+    /// starving the bulk path's sharding).
+    pub flush_workers: usize,
 }
 
 impl Default for BatchPolicy {
@@ -92,6 +113,17 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: shapes::KNN_B,
             linger: Duration::from_micros(200),
+            flush_workers: 0,
+        }
+    }
+}
+
+impl BatchPolicy {
+    fn resolved_flush_workers(&self) -> usize {
+        if self.flush_workers > 0 {
+            self.flush_workers
+        } else {
+            pool::num_threads().clamp(1, 4)
         }
     }
 }
@@ -168,50 +200,93 @@ impl Predictor {
     /// Results come back in input order; concurrent bulk callers run in
     /// parallel.
     pub fn predict_many(&self, task: Task, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
-        if rows.is_empty() {
+        self.bulk_call(rows.len(), || self.engine.execute(task, rows))
+    }
+
+    /// Predict a flat row-major feature matrix as one batch — the sweep
+    /// hot path: the caller's [`FeatureMatrix`] goes straight into the
+    /// batch kernels with no per-row `Vec`s anywhere. Executes on the
+    /// calling thread like [`Predictor::predict_many`].
+    pub fn predict_matrix(&self, task: Task, m: &FeatureMatrix) -> Result<Vec<f64>> {
+        self.bulk_call(m.n_rows(), || self.engine.execute_matrix(task, m))
+    }
+
+    /// Shared bulk-submission bookkeeping: counters, timing, error
+    /// accounting — identical for the rows and matrix paths.
+    fn bulk_call(
+        &self,
+        n_rows: usize,
+        exec: impl FnOnce() -> Result<Vec<f64>>,
+    ) -> Result<Vec<f64>> {
+        if n_rows == 0 {
             return Ok(Vec::new());
         }
-        self.metrics.record_bulk(rows.len());
+        self.metrics.record_bulk(n_rows);
         let t0 = Instant::now();
-        let result = self.engine.execute(task, rows);
+        let result = exec();
         if result.is_err() {
             self.metrics.record_error();
         }
         self.metrics
-            .record_batch(rows.len(), t0.elapsed().as_secs_f64());
+            .record_batch(n_rows, t0.elapsed().as_secs_f64());
         result
     }
 }
 
-fn flush(engine: &Engine, task: Task, queue: &mut Vec<Request>, metrics: &Metrics) {
+/// Hand a filled batch to the flush pool; the dispatcher immediately goes
+/// back to collecting, so concurrent flushes overlap.
+fn dispatch_flush(
+    flush_pool: &TaskPool,
+    engine: &Arc<Engine>,
+    task: Task,
+    queue: &mut Vec<Request>,
+    metrics: &Arc<Metrics>,
+) {
     if queue.is_empty() {
         return;
     }
+    let batch = std::mem::take(queue);
+    let engine = engine.clone();
+    let metrics = metrics.clone();
+    flush_pool.submit(move || run_flush(&engine, task, batch, &metrics));
+}
+
+/// Execute one flushed batch on a pool worker and answer every requester.
+fn run_flush(engine: &Engine, task: Task, batch: Vec<Request>, metrics: &Metrics) {
+    metrics.flush_begin();
     let t0 = Instant::now();
-    let feats: Vec<Vec<f64>> = queue.iter().map(|r| r.features.clone()).collect();
-    match engine.execute(task, &feats) {
+    let (rows, responders): (Vec<Vec<f64>>, Vec<mpsc::Sender<Result<f64, String>>>) =
+        batch.into_iter().map(|r| (r.features, r.respond)).unzip();
+    match engine.execute(task, &rows) {
         Ok(values) => {
-            for (req, v) in queue.drain(..).zip(values) {
-                let _ = req.respond.send(Ok(v));
+            for (tx, v) in responders.iter().zip(values) {
+                let _ = tx.send(Ok(v));
             }
         }
         Err(e) => {
             metrics.record_error();
             let msg = format!("{e:#}");
-            for req in queue.drain(..) {
-                let _ = req.respond.send(Err(msg.clone()));
+            for tx in &responders {
+                let _ = tx.send(Err(msg.clone()));
             }
         }
     }
-    metrics.record_batch(feats.len(), t0.elapsed().as_secs_f64());
+    metrics.record_batch(rows.len(), t0.elapsed().as_secs_f64());
+    metrics.flush_end();
 }
 
+/// The dynamic-batching dispatcher: collects single-row requests into
+/// per-task queues and hands filled (or linger-expired) batches to the
+/// flush pool. Owning the pool here means dropping the service joins the
+/// dispatcher, which drains and joins the pool — every accepted request
+/// is answered before shutdown completes.
 fn worker_loop(
     engine: Arc<Engine>,
     rx: mpsc::Receiver<Control>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
 ) {
+    let flush_pool = TaskPool::new(policy.resolved_flush_workers(), "predictor-flush");
     let mut power_q: Vec<Request> = Vec::new();
     let mut cycles_q: Vec<Request> = Vec::new();
     'outer: loop {
@@ -244,18 +319,20 @@ fn worker_loop(
                             Task::Power => &mut power_q,
                             Task::Cycles => &mut cycles_q,
                         };
-                        flush(&engine, task, q, &metrics);
+                        dispatch_flush(&flush_pool, &engine, task, q, &metrics);
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Ok(Control::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    flush(&engine, Task::Power, &mut power_q, &metrics);
-                    flush(&engine, Task::Cycles, &mut cycles_q, &metrics);
+                    dispatch_flush(&flush_pool, &engine, Task::Power, &mut power_q, &metrics);
+                    dispatch_flush(&flush_pool, &engine, Task::Cycles, &mut cycles_q, &metrics);
                     break 'outer;
                 }
             }
         }
-        flush(&engine, Task::Power, &mut power_q, &metrics);
-        flush(&engine, Task::Cycles, &mut cycles_q, &metrics);
+        dispatch_flush(&flush_pool, &engine, Task::Power, &mut power_q, &metrics);
+        dispatch_flush(&flush_pool, &engine, Task::Cycles, &mut cycles_q, &metrics);
     }
+    // `flush_pool` drops here: the queue closes, pending flushes drain,
+    // workers join — all before the service's Drop returns.
 }

@@ -15,11 +15,18 @@
 //!   the GPU-name index are computed once and shared by [`explore`],
 //!   [`search::random_search`] and [`search::local_search`], instead of
 //!   per-call `HashMap` rebuilds and O(catalog) linear lookups;
+//! * feature rows are emitted straight into a flat
+//!   [`FeatureMatrix`](crate::ml::FeatureMatrix) (one preallocated
+//!   buffer per scoring chunk — zero per-design-point heap allocations)
+//!   and scored with two bulk [`Predictor::predict_matrix`] calls per
+//!   chunk, which the staged batch kernels consume without any row
+//!   repacking;
 //! * [`explore`] shards the grid across a scoped worker pool
-//!   ([`crate::util::pool`]), each shard scoring its rows with two bulk
-//!   [`Predictor::predict_many`] calls; shards are concatenated in order,
-//!   so the output is identical (element-for-element) to the sequential
-//!   path — asserted by `rust/tests/batch_parity.rs`.
+//!   ([`crate::util::pool`]); shards are concatenated in order, so the
+//!   output is identical (element-for-element) to the sequential path —
+//!   asserted by `rust/tests/batch_parity.rs`. The budgeted searches
+//!   ([`search`]) parallelize the same way: scoring chunks and restart
+//!   arms run as deterministic parallel units on the pool.
 
 pub mod search;
 
@@ -32,7 +39,8 @@ use crate::cnn::ir::Network;
 use crate::cnn::launch::working_set_bytes;
 use crate::coordinator::{Predictor, Task};
 use crate::gpu::specs::{catalog, GpuSpec};
-use crate::ml::features::NetDescriptor;
+use crate::ml::features::{NetDescriptor, N_FEATURES};
+use crate::ml::matrix::FeatureMatrix;
 use crate::util::pool;
 
 /// One candidate design point.
@@ -115,6 +123,19 @@ impl DesignSpace {
 ///
 /// Thread-safe: `explore` shares one cache across its worker shards, and a
 /// long-lived service can share one across whole sweeps.
+///
+/// ```
+/// use hypa_dse::cnn::zoo;
+/// use hypa_dse::dse::DescriptorCache;
+///
+/// let cache = DescriptorCache::new();
+/// let net = zoo::lenet5();
+/// let first = cache.descriptor(&net, 1).unwrap(); // built (HyPA runs)
+/// let again = cache.descriptor(&net, 1).unwrap(); // cache hit
+/// assert!(std::sync::Arc::ptr_eq(&first, &again));
+/// assert!(cache.gpu("v100s").is_ok()); // O(1) name lookup
+/// assert!(cache.gpu("not-a-gpu").is_err()); // error, not a panic
+/// ```
 pub struct DescriptorCache {
     gpus: Vec<GpuSpec>,
     index: HashMap<String, usize>,
@@ -233,6 +254,52 @@ const EXPLORE_MIN_SHARD: usize = 32;
 
 /// Score every point with the batched ML predictor, sharding the grid
 /// across the worker pool. Output order matches `space.points`.
+///
+/// ```
+/// use hypa_dse::cnn::zoo;
+/// use hypa_dse::coordinator::{BatchPolicy, PredictionService};
+/// use hypa_dse::dse::{explore, rank, DesignSpace, DseConstraints, Objective};
+/// use hypa_dse::ml::features::N_FEATURES;
+/// use hypa_dse::ml::{ForestConfig, Knn, RandomForest, Regressor};
+///
+/// // Train tiny stand-in models at the real feature width.
+/// let x: Vec<Vec<f64>> = (0..40)
+///     .map(|i| (0..N_FEATURES).map(|j| ((i * 31 + j * 7) % 97) as f64).collect())
+///     .collect();
+/// let y_power: Vec<f64> = x.iter().map(|r| 40.0 + r[0]).collect();
+/// let y_cycles: Vec<f64> = x.iter().map(|r| 1e6 + 1e4 * r[1]).collect();
+/// let mut forest = RandomForest::new(ForestConfig {
+///     n_trees: 4,
+///     max_depth: 4,
+///     ..Default::default()
+/// });
+/// forest.fit(&x, &y_power);
+/// let mut knn = Knn::new(3);
+/// knn.fit(&x, &y_cycles);
+///
+/// // Stage them onto the batched prediction service…
+/// let service = PredictionService::start(
+///     "artifacts".into(),
+///     forest,
+///     knn,
+///     N_FEATURES,
+///     BatchPolicy::default(),
+/// )
+/// .unwrap();
+///
+/// // …and sweep a small grid.
+/// let space = DesignSpace::default_grid(2, &[1]);
+/// let scored = explore(
+///     &zoo::lenet5(),
+///     &space,
+///     &service.predictor(),
+///     &DseConstraints::default(),
+/// )
+/// .unwrap();
+/// assert_eq!(scored.len(), space.len());
+/// let ranked = rank(&scored, Objective::MinLatency);
+/// assert!(!ranked.is_empty());
+/// ```
 pub fn explore(
     net: &Network,
     space: &DesignSpace,
@@ -345,13 +412,16 @@ pub(crate) fn score_points(
         }
     }
 
-    let mut rows = Vec::with_capacity(points.len());
+    // Emit every feature row into one flat matrix: zero per-point heap
+    // allocations (the buffer is sized up front), and the batch kernels
+    // consume the storage directly.
+    let mut rows = FeatureMatrix::with_capacity(N_FEATURES, points.len());
     for p in points {
         let g = cache.gpu(&p.gpu)?;
-        rows.push(descs[&p.batch].features(g, p.f_mhz));
+        descs[&p.batch].features_into(g, p.f_mhz, &mut rows);
     }
-    let power = predictor.predict_many(Task::Power, &rows)?;
-    let cycles = predictor.predict_many(Task::Cycles, &rows)?;
+    let power = predictor.predict_matrix(Task::Power, &rows)?;
+    let cycles = predictor.predict_matrix(Task::Cycles, &rows)?;
 
     let mut scored = Vec::with_capacity(points.len());
     for ((p, pw), cy) in points.iter().zip(power).zip(cycles) {

@@ -16,9 +16,24 @@
 //! sweep, so their *cost* is measured in prediction calls — the honest
 //! budget unit for an ML-driven DSE. Candidates are scored in chunks
 //! (whole random-search blocks; all neighbours of a hill-climbing step)
-//! through [`Predictor::predict_many`] — two bulk calls per chunk instead
-//! of two single-row round trips per candidate — and GPU/feature lookups
-//! go through a shared [`DescriptorCache`].
+//! through [`Predictor::predict_matrix`] — two bulk calls per chunk
+//! instead of two single-row round trips per candidate — and GPU/feature
+//! lookups go through a shared [`DescriptorCache`].
+//!
+//! Both searches also *parallelize across the worker pool*
+//! ([`crate::util::pool`]) without giving up determinism:
+//!
+//! * `random_search` draws its whole candidate sequence from the seed up
+//!   front (the same sequence the sequential implementation scores), then
+//!   shards the scoring across the pool; results are reduced in candidate
+//!   order, so the outcome is identical for any worker count.
+//! * `local_search` runs its random restarts as independent *arms*, each
+//!   with a deterministic per-arm seed and budget share; the default arm
+//!   count is derived from the budget (never the core count), arms
+//!   execute concurrently and are merged in arm order, so the outcome
+//!   depends only on `(seed, budget, arms)` — never on scheduling or the
+//!   machine. One arm reproduces the classic sequential hill climber
+//!   exactly.
 
 use anyhow::Result;
 
@@ -28,6 +43,7 @@ use crate::dse::{
     score_points, DescriptorCache, DesignPoint, DseConstraints, Objective, ScoredPoint,
 };
 use crate::gpu::specs::GpuSpec;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 /// Search outcome.
@@ -39,8 +55,26 @@ pub struct SearchResult {
     pub evaluations: usize,
 }
 
-/// Random-search candidates scored per bulk predictor call.
+/// Maximum candidates per bulk predictor call in `random_search` (bounds
+/// the per-call feature-matrix size regardless of budget or worker
+/// count); also the minimum rows per parallel scoring shard.
 const RANDOM_CHUNK: usize = 64;
+
+/// Minimum per-arm budget before `local_search` spreads restarts over
+/// another parallel arm (an arm needs enough evaluations to restart and
+/// climb, or the split just truncates climbs).
+const LOCAL_ARM_MIN_BUDGET: usize = 32;
+
+/// Cap on the derived arm count. Derived from the budget alone — never
+/// from the machine's core count — so a given `(seed, budget)` produces
+/// the same result everywhere; excess arms beyond the pool's worker
+/// count simply queue.
+const LOCAL_MAX_ARMS: usize = 8;
+
+/// Multiplier deriving a decorrelated per-arm RNG stream from the user
+/// seed (golden-ratio constant; arm 0 keeps the seed itself, so one arm
+/// reproduces the sequential search exactly).
+const ARM_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// Score a chunk of candidates through the shared scoring pipeline
 /// ([`crate::dse::score_points`]): exactly two bulk predictor calls per
@@ -103,8 +137,9 @@ pub fn random_search(
 }
 
 /// [`random_search`] reusing a shared [`DescriptorCache`]. Candidates are
-/// drawn in the same sequence as the scalar implementation (chunking does
-/// not consume extra RNG draws), so results are seed-stable.
+/// drawn in the same sequence as the scalar implementation (parallel
+/// scoring does not consume extra RNG draws), so results are seed-stable
+/// and identical for any worker count.
 #[allow(clippy::too_many_arguments)]
 pub fn random_search_with_cache(
     net: &Network,
@@ -116,16 +151,71 @@ pub fn random_search_with_cache(
     seed: u64,
     cache: &DescriptorCache,
 ) -> Result<SearchResult> {
+    random_search_with_threads(
+        net,
+        predictor,
+        constraints,
+        objective,
+        batches,
+        budget,
+        seed,
+        cache,
+        pool::num_threads(),
+    )
+}
+
+/// [`random_search_with_cache`] with an explicit worker count (tests pin
+/// this to assert scheduling-independent output).
+///
+/// The whole candidate sequence is drawn from `seed` up front, scoring is
+/// sharded across the pool (two bulk predictor calls per shard), and the
+/// best/trajectory reduction walks the scored candidates in draw order.
+#[allow(clippy::too_many_arguments)]
+pub fn random_search_with_threads(
+    net: &Network,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+    cache: &DescriptorCache,
+    workers: usize,
+) -> Result<SearchResult> {
     let mut rng = Rng::new(seed);
+    let pts: Vec<DesignPoint> = (0..budget)
+        .map(|_| random_point(&mut rng, cache.gpus(), batches))
+        .collect();
+    // Pre-warm descriptors so parallel shards hit the cache instead of
+    // racing on the expensive HyPA analysis.
+    let mut warm: Vec<usize> = pts.iter().map(|p| p.batch).collect();
+    warm.sort_unstable();
+    warm.dedup();
+    for &b in &warm {
+        cache.descriptor(net, b)?;
+    }
+
+    let shard_results = pool::map_shards_ctx(
+        &pts,
+        RANDOM_CHUNK,
+        workers,
+        || predictor.clone(),
+        |p, _offset, shard| -> Result<Vec<ScoredPoint>> {
+            // Chunk within the shard too, so no bulk call (and no feature
+            // matrix) ever exceeds RANDOM_CHUNK rows even with one worker.
+            let mut out = Vec::with_capacity(shard.len());
+            for chunk in shard.chunks(RANDOM_CHUNK) {
+                out.extend(score_chunk(net, cache, chunk, &p, constraints)?);
+            }
+            Ok(out)
+        },
+    );
+
     let mut best: Option<ScoredPoint> = None;
     let mut trajectory = Vec::with_capacity(budget);
     let mut evals = 0usize;
-    while evals < budget {
-        let m = (budget - evals).min(RANDOM_CHUNK);
-        let pts: Vec<DesignPoint> = (0..m)
-            .map(|_| random_point(&mut rng, cache.gpus(), batches))
-            .collect();
-        for s in score_chunk(net, cache, &pts, predictor, constraints)? {
+    for shard in shard_results {
+        for s in shard? {
             evals += 1;
             update_best(&s, objective, &mut best);
             trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
@@ -161,11 +251,12 @@ pub fn local_search(
     )
 }
 
-/// [`local_search`] reusing a shared [`DescriptorCache`]. All neighbours
-/// of a hill-climbing step are scored as one bulk chunk; the climb still
-/// moves to the *first* improving neighbour in move order, but every
-/// scored neighbour is charged to the budget (they were all predicted)
-/// and feeds the best-so-far record.
+/// [`local_search`] reusing a shared [`DescriptorCache`]. Restarts run as
+/// parallel arms: the budget is split over `budget / 32` arms (capped at
+/// 8 — a function of the budget only, so results are seed-stable across
+/// machines and thread counts), each arm climbs with its own
+/// deterministic seed stream, and arms are merged in arm order — see
+/// [`local_search_with_arms`].
 #[allow(clippy::too_many_arguments)]
 pub fn local_search_with_cache(
     net: &Network,
@@ -177,6 +268,129 @@ pub fn local_search_with_cache(
     seed: u64,
     cache: &DescriptorCache,
 ) -> Result<SearchResult> {
+    let arms = (budget / LOCAL_ARM_MIN_BUDGET).clamp(1, LOCAL_MAX_ARMS);
+    local_search_with_arms(
+        net,
+        predictor,
+        constraints,
+        objective,
+        batches,
+        budget,
+        seed,
+        cache,
+        arms,
+    )
+}
+
+/// [`local_search`] with an explicit number of parallel restart arms.
+///
+/// The budget is split as evenly as possible over the arms (earlier arms
+/// take the remainder). Arm `i` climbs with RNG stream
+/// `seed + i·GOLDEN` — arm 0 keeps `seed`, so `arms == 1` reproduces the
+/// sequential hill climber exactly. Every arm is self-contained (its own
+/// restarts, climbs and best-so-far record), arms execute concurrently on
+/// the worker pool, and the merge walks arms in index order; the combined
+/// trajectory is then rewritten into the global best-so-far sequence.
+/// Output therefore depends only on `(seed, budget, arms)`, never on
+/// thread scheduling.
+#[allow(clippy::too_many_arguments)]
+pub fn local_search_with_arms(
+    net: &Network,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+    cache: &DescriptorCache,
+    arms: usize,
+) -> Result<SearchResult> {
+    let arms = arms.clamp(1, budget.max(1));
+    // Split the budget: every arm gets budget/arms, the first
+    // budget%arms arms one extra.
+    let base = budget / arms;
+    let extra = budget % arms;
+    let specs: Vec<(u64, usize)> = (0..arms)
+        .map(|i| {
+            let arm_seed = seed.wrapping_add((i as u64).wrapping_mul(ARM_SEED_STRIDE));
+            let arm_budget = base + usize::from(i < extra);
+            (arm_seed, arm_budget)
+        })
+        .collect();
+    // Pre-warm descriptors so arms hit the cache instead of racing on
+    // the expensive HyPA analysis.
+    for &b in batches {
+        cache.descriptor(net, b)?;
+    }
+
+    // Cap the *threads* at the pool's worker count — never the arms: a
+    // worker that receives several arm specs runs them sequentially, so
+    // the output is identical for any machine while excess arms queue.
+    let arm_workers = arms.min(pool::num_threads()).max(1);
+    let arm_results = pool::map_shards_ctx(
+        &specs,
+        1,
+        arm_workers,
+        || predictor.clone(),
+        |p, _offset, shard| -> Result<Vec<ArmOutcome>> {
+            shard
+                .iter()
+                .map(|&(arm_seed, arm_budget)| {
+                    climb_arm(
+                        net, &p, constraints, objective, batches, arm_budget, arm_seed, cache,
+                    )
+                })
+                .collect()
+        },
+    );
+
+    let mut best: Option<ScoredPoint> = None;
+    let mut trajectory = Vec::with_capacity(budget);
+    let mut evaluations = 0usize;
+    for shard in arm_results {
+        for arm in shard? {
+            evaluations += arm.evaluations;
+            trajectory.extend(arm.trajectory);
+            if let Some(b) = arm.best {
+                update_best(&b, objective, &mut best);
+            }
+        }
+    }
+    // Rewrite the concatenated per-arm best-so-far records into the
+    // global best-so-far sequence (monotone under the objective).
+    let mut global = f64::NAN;
+    for v in trajectory.iter_mut() {
+        if !v.is_nan() && (global.is_nan() || *v < global) {
+            global = *v;
+        }
+        *v = global;
+    }
+    Ok(SearchResult {
+        best,
+        trajectory,
+        evaluations,
+    })
+}
+
+/// One self-contained hill-climbing arm (restart loop over its own
+/// budget/RNG) — the body of the classic sequential local search.
+struct ArmOutcome {
+    best: Option<ScoredPoint>,
+    trajectory: Vec<f64>,
+    evaluations: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn climb_arm(
+    net: &Network,
+    predictor: &Predictor,
+    constraints: &DseConstraints,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+    cache: &DescriptorCache,
+) -> Result<ArmOutcome> {
     let mut rng = Rng::new(seed);
     let mut best: Option<ScoredPoint> = None;
     let mut trajectory = Vec::with_capacity(budget);
@@ -185,9 +399,10 @@ pub fn local_search_with_cache(
     while evals < budget {
         // Restart.
         let mut cur_pt = random_point(&mut rng, cache.gpus(), batches);
-        let mut cur = score_chunk(net, cache, std::slice::from_ref(&cur_pt), predictor, constraints)?
-            .pop()
-            .expect("chunk of one");
+        let mut cur =
+            score_chunk(net, cache, std::slice::from_ref(&cur_pt), predictor, constraints)?
+                .pop()
+                .expect("chunk of one");
         evals += 1;
         update_best(&cur, objective, &mut best);
         trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
@@ -222,7 +437,7 @@ pub fn local_search_with_cache(
             }
         }
     }
-    Ok(SearchResult {
+    Ok(ArmOutcome {
         best,
         trajectory,
         evaluations: evals,

@@ -3,18 +3,47 @@
 //! A full-system reproduction of *"Machine Learning aided Computer
 //! Architecture Design for CNN Inferencing Systems"* (Metz, 2023): fast and
 //! accurate ML-based power/performance prediction for CNN inference on
-//! GPGPUs, the Hybrid PTX Analyzer (HyPA) that extracts runtime-dependent
-//! features without GPU execution, a design-space-exploration engine over a
-//! GPGPU catalog, and a local-vs-cloud offload advisor.
+//! GPGPUs (paper-reported MAPE 5.03% power / 5.94% performance), the
+//! Hybrid PTX Analyzer (HyPA) that extracts runtime-dependent features
+//! without GPU execution, a design-space-exploration engine over a GPGPU
+//! catalog, and a local-vs-cloud offload advisor.
 //!
-//! Architecture: this Rust crate is the whole serving stack. The
-//! coordinator (L3) batches prediction requests onto staged executables;
-//! the execution backend (L1/L2, [`runtime`] + [`ml::batch`]) is a native
-//! batched engine — SoA level-wise forest descent and a blocked flat-matrix
-//! kNN kernel, sharded across cores by [`util::pool`]. The AOT/XLA shape
-//! contract from `python/compile/` is still enforced at staging time
-//! ([`runtime::shapes`]) so a PJRT backend can be swapped back in behind
-//! the same executable API; Python never runs on the request path.
+//! ## Layer map
+//!
+//! * [`cnn`] — CNN IR, model zoo, kernel-launch decomposition.
+//! * [`ptx`] — PTX codegen/parser and HyPA static analysis.
+//! * [`gpu`] / [`sim`] — the GPGPU catalog and the analytic simulator
+//!   that labels the training dataset.
+//! * [`ml`] — feature engineering (flat [`ml::FeatureMatrix`] rows on
+//!   the hot path), the model family, staged batch kernels
+//!   ([`ml::batch`]), and validation.
+//! * [`runtime`] — staged executables enforcing the AOT shape contract
+//!   ([`runtime::shapes`]).
+//! * [`coordinator`] — the batched prediction service (dynamic batching
+//!   on a flush pool; bulk calls on the caller's thread).
+//! * [`dse`] — exhaustive and budgeted search over
+//!   `GPU × DVFS × batch`.
+//! * [`offload`] — offload advisor + REST API; [`util`] — worker pools,
+//!   RNG, JSON, bench harness (fully offline, no external deps).
+//!
+//! ## Serving architecture
+//!
+//! This Rust crate is the whole serving stack. The coordinator (L3)
+//! batches prediction requests onto staged executables; the execution
+//! backend (L1/L2, [`runtime`] + [`ml::batch`]) is a native batched
+//! engine — SoA level-wise forest descent and a blocked flat-matrix kNN
+//! kernel, sharded across cores by [`util::pool`]. Repeated prediction is
+//! allocation- and restage-free end to end: models cache their staged
+//! kernels (invalidated on `fit`), feature rows are emitted into flat
+//! matrices, and every batch path is bit-identical to its scalar oracle.
+//! The AOT/XLA shape contract from `python/compile/` is still enforced at
+//! staging time ([`runtime::shapes`]) so a PJRT backend can be swapped
+//! back in behind the same executable API; Python never runs on the
+//! request path.
+//!
+//! See `README.md` for a quickstart and `docs/ARCHITECTURE.md` for the
+//! staged-execution contract, the AOT shape contract, and the
+//! `FeatureMatrix` data flow.
 
 pub mod cnn;
 pub mod config;

@@ -12,7 +12,7 @@
 //! * `offload`   — one-shot local-vs-cloud decision
 //!
 //! The dependency set is offline-vendored (no clap); flags are simple
-//! `--key value` pairs parsed by [`Args`].
+//! `--key value` pairs parsed by the in-file `Args` helper.
 
 use anyhow::{anyhow, Result};
 use hypa_dse::cnn::zoo;

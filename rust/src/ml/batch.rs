@@ -28,13 +28,24 @@
 //! provably the same neighbour set and ordering the scalar insertion path
 //! produces.
 //!
-//! Large batches are additionally sharded across cores via
-//! [`crate::util::pool`]; per-query results are independent, so threading
-//! never changes output.
+//! Queries arrive as a flat row-major [`FeatureMatrix`] — the same layout
+//! the kernels block over internally, so the sweep path never materializes
+//! per-query `Vec`s (`predict_matrix`); the `&[Vec<f64>]` entry points
+//! remain as converting conveniences (`predict_many`). Large batches are
+//! additionally sharded across cores via [`crate::util::pool`]; per-query
+//! results are independent, so threading never changes output.
+//!
+//! Staging a kernel costs one pass over the model (O(total nodes) for the
+//! forest, O(n_train × d) for kNN). `RandomForest`/`Knn` cache their
+//! staged form after the first use and invalidate it on `fit`
+//! ([`stage_cutover`] decides when a *first* batch is big enough to stage
+//! at all), so repeated `predict` calls — CV loops, sweep after sweep on a
+//! served model — pay staging exactly once.
 
 use crate::ml::dataset::Scaler;
 use crate::ml::forest::{ForestTensor, RandomForest};
 use crate::ml::knn::Knn;
+use crate::ml::matrix::FeatureMatrix;
 use crate::ml::tree::LEAF;
 use crate::util::pool;
 
@@ -47,6 +58,19 @@ const KNN_BLOCK: usize = 16;
 
 /// Minimum batch size before sharding across the worker pool.
 const PAR_MIN: usize = 128;
+
+/// Minimum batch size at which an *unstaged* model should pay the one-off
+/// staging cost instead of looping the scalar path.
+///
+/// Staging is O(model size) — total tree nodes for the forest,
+/// `n_train × d` for the kNN training matrix — and model size grows with
+/// the training-set size, so the threshold scales with `n_train`. Once a
+/// model has cached its staged form (`RandomForest::staged`,
+/// `Knn::staged`) the threshold no longer applies: every later batch
+/// takes the staged path for free.
+pub fn stage_cutover(n_train: usize) -> usize {
+    (n_train / 256).clamp(2, 64)
+}
 
 /// A trained random forest staged in flat SoA form for batched descent.
 ///
@@ -124,42 +148,61 @@ impl BatchForest {
         self.min_width
     }
 
-    /// Batched prediction; shards across the worker pool for large
-    /// batches. Panics (like the scalar path) if a query row is narrower
-    /// than the widest split feature.
-    pub fn predict_many(&self, qs: &[Vec<f64>]) -> Vec<f64> {
-        if qs.is_empty() {
+    /// Batched prediction over a flat row-major matrix — the hot-path
+    /// entry point (no per-query `Vec`s anywhere). Shards across the
+    /// worker pool for large batches; panics (like the scalar path) if
+    /// the matrix is narrower than the widest split feature.
+    pub fn predict_matrix(&self, m: &FeatureMatrix) -> Vec<f64> {
+        if m.is_empty() {
             return Vec::new();
         }
-        let d = qs[0].len();
+        let w = m.width();
         assert!(
-            d >= self.min_width,
-            "query width {d} < required {} (forest split features)",
+            w >= self.min_width,
+            "query width {w} < required {} (forest split features)",
             self.min_width
         );
         // Stay serial when already on a pool worker (e.g. inside an
         // `explore` shard) — nested sharding would oversubscribe cores.
-        if qs.len() >= PAR_MIN && !pool::in_pool_worker() && pool::num_threads() > 1 {
-            return pool::map_shards(qs, FOREST_BLOCK, |_, shard| self.predict_serial(shard))
-                .into_iter()
-                .flatten()
-                .collect();
+        if m.n_rows() >= PAR_MIN && !pool::in_pool_worker() && pool::num_threads() > 1 {
+            let data = m.data();
+            return pool::map_range_shards(m.n_rows(), FOREST_BLOCK, pool::num_threads(), |r| {
+                self.predict_rows(&data[r.start * w..r.end * w], w)
+            })
+            .into_iter()
+            .flatten()
+            .collect();
         }
-        self.predict_serial(qs)
+        self.predict_rows(m.data(), w)
     }
 
+    /// Batched prediction of `&[Vec<f64>]` rows (converting convenience
+    /// over [`BatchForest::predict_matrix`]). Panics on ragged rows.
+    pub fn predict_many(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        self.predict_matrix(&FeatureMatrix::from_rows(qs))
+    }
+
+    /// Serial reference over row vectors (tests compare the pool path
+    /// against this).
+    #[cfg(test)]
     fn predict_serial(&self, qs: &[Vec<f64>]) -> Vec<f64> {
-        let d = qs[0].len();
-        let mut out = Vec::with_capacity(qs.len());
-        let mut qflat = vec![0f64; FOREST_BLOCK * d];
+        let m = FeatureMatrix::from_rows(qs);
+        self.predict_rows(m.data(), m.width())
+    }
+
+    /// The serial level-wise kernel over a flat `rows × width` slice.
+    fn predict_rows(&self, data: &[f64], width: usize) -> Vec<f64> {
+        let n_rows = data.len() / width;
+        let mut out = Vec::with_capacity(n_rows);
         let mut idx = [0u32; FOREST_BLOCK];
         let mut acc = [0f64; FOREST_BLOCK];
-        for block in qs.chunks(FOREST_BLOCK) {
-            let bl = block.len();
-            for (b, q) in block.iter().enumerate() {
-                assert_eq!(q.len(), d, "ragged query batch");
-                qflat[b * d..b * d + d].copy_from_slice(q);
-            }
+        let mut row0 = 0usize;
+        while row0 < n_rows {
+            let bl = FOREST_BLOCK.min(n_rows - row0);
+            let block = &data[row0 * width..(row0 + bl) * width];
             acc[..bl].fill(0.0);
             for &root in &self.roots {
                 idx[..bl].fill(root);
@@ -170,7 +213,7 @@ impl BatchForest {
                     for b in 0..bl {
                         let n = idx[b] as usize;
                         let f = self.feature[n] as usize;
-                        let v = qflat[b * d + f];
+                        let v = block[b * width + f];
                         let next = if v <= self.threshold[n] {
                             self.left[n]
                         } else {
@@ -192,6 +235,7 @@ impl BatchForest {
             // Division (not multiply-by-reciprocal) keeps bit parity with
             // the scalar path's `sum / len`.
             out.extend(acc[..bl].iter().map(|&s| s / self.n_trees.max(1) as f64));
+            row0 += bl;
         }
         out
     }
@@ -279,37 +323,69 @@ impl BatchKnn {
         self.d
     }
 
-    /// Batched prediction of raw (unscaled) query rows; shards across the
+    /// Batched prediction over a flat row-major matrix of raw (unscaled)
+    /// query rows — the hot-path entry point. Queries are z-scored into a
+    /// reused block scratch (no per-query allocation); shards across the
     /// worker pool for large batches.
+    pub fn predict_matrix(&self, m: &FeatureMatrix) -> Vec<f64> {
+        if m.is_empty() {
+            return Vec::new();
+        }
+        let w = m.width();
+        if m.n_rows() >= PAR_MIN / 2 && !pool::in_pool_worker() && pool::num_threads() > 1 {
+            let data = m.data();
+            return pool::map_range_shards(m.n_rows(), KNN_BLOCK, pool::num_threads(), |r| {
+                self.predict_rows(&data[r.start * w..r.end * w], w)
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        }
+        self.predict_rows(m.data(), w)
+    }
+
+    /// Batched prediction of `&[Vec<f64>]` rows (converting convenience
+    /// over [`BatchKnn::predict_matrix`]). Panics on ragged rows.
     pub fn predict_many(&self, qs: &[Vec<f64>]) -> Vec<f64> {
         if qs.is_empty() {
             return Vec::new();
         }
-        if qs.len() >= PAR_MIN / 2 && !pool::in_pool_worker() && pool::num_threads() > 1 {
-            return pool::map_shards(qs, KNN_BLOCK, |_, shard| self.predict_serial(shard))
-                .into_iter()
-                .flatten()
-                .collect();
-        }
-        self.predict_serial(qs)
+        self.predict_matrix(&FeatureMatrix::from_rows(qs))
     }
 
+    /// Serial reference over row vectors (tests compare the pool path
+    /// against this).
+    #[cfg(test)]
     fn predict_serial(&self, qs: &[Vec<f64>]) -> Vec<f64> {
+        let m = FeatureMatrix::from_rows(qs);
+        self.predict_rows(m.data(), m.width())
+    }
+
+    /// The serial blocked kernel over a flat `rows × width` slice.
+    fn predict_rows(&self, data: &[f64], width: usize) -> Vec<f64> {
         let n = self.n;
-        let mut out = Vec::with_capacity(qs.len());
-        let mut dist = vec![0f64; KNN_BLOCK * n];
+        let n_rows = data.len() / width;
+        let mut out = Vec::with_capacity(n_rows);
+        // Scratch sized for the actual batch: small batches (single-row
+        // coordinator flushes) shouldn't zero a full 16-row block.
+        let block_cap = KNN_BLOCK.min(n_rows);
+        let mut dist = vec![0f64; block_cap * n];
+        let mut scaled = vec![0f64; block_cap * width];
         let mut order: Vec<(f64, u32)> = Vec::with_capacity(n);
-        for block in qs.chunks(KNN_BLOCK) {
-            let bl = block.len();
-            let scaled: Vec<Vec<f64>> = block
-                .iter()
-                .map(|q| self.scaler.transform_row(q))
-                .collect();
+        let mut row0 = 0usize;
+        while row0 < n_rows {
+            let bl = KNN_BLOCK.min(n_rows - row0);
+            for b in 0..bl {
+                let q = &data[(row0 + b) * width..(row0 + b + 1) * width];
+                self.scaler
+                    .transform_into(q, &mut scaled[b * width..(b + 1) * width]);
+            }
             // Row-outer / query-inner: each training row is streamed once
             // per block and reused from L1 across `bl` queries. The inner
             // feature loop matches the scalar accumulation order exactly.
             for (r, xrow) in self.x.chunks_exact(self.d.max(1)).enumerate() {
-                for (b, q) in scaled.iter().enumerate().take(bl) {
+                for b in 0..bl {
+                    let q = &scaled[b * width..(b + 1) * width];
                     let mut d2 = 0.0;
                     for (a, v) in xrow.iter().zip(q.iter()) {
                         let diff = a - v;
@@ -321,6 +397,7 @@ impl BatchKnn {
             for b in 0..bl {
                 out.push(self.reduce(&dist[b * n..b * n + n], &mut order));
             }
+            row0 += bl;
         }
         out
     }

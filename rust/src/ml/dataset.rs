@@ -268,6 +268,20 @@ impl Scaler {
             .collect()
     }
 
+    /// Z-score `row` into a caller-provided buffer (the allocation-free
+    /// variant of [`Scaler::transform_row`], used by the batched kNN
+    /// kernel's block scratch). Writes `min(out.len(), row.len(),
+    /// mean.len())` leading values with arithmetic identical to
+    /// `transform_row`; the rest of `out` is untouched.
+    pub fn transform_into(&self, row: &[f64], out: &mut [f64]) {
+        for (o, (&v, (&m, &s))) in out
+            .iter_mut()
+            .zip(row.iter().zip(self.mean.iter().zip(&self.std)))
+        {
+            *o = (v - m) / s;
+        }
+    }
+
     pub fn transform(&self, x: &[Vec<f64>]) -> Vec<Vec<f64>> {
         x.iter().map(|r| self.transform_row(r)).collect()
     }
@@ -354,6 +368,18 @@ mod tests {
         let s = crate::util::stats::std_dev(&col0);
         assert!(m.abs() < 1e-12);
         assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transform_into_matches_transform_row() {
+        let d = toy();
+        let sc = Scaler::fit(&d.x);
+        for row in &d.x {
+            let by_vec = sc.transform_row(row);
+            let mut by_buf = vec![0.0; row.len()];
+            sc.transform_into(row, &mut by_buf);
+            assert_eq!(by_vec, by_buf);
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use crate::cnn::ir::Network;
 use crate::cnn::launch::decompose;
 use crate::gpu::specs::GpuSpec;
+use crate::ml::matrix::FeatureMatrix;
 use crate::ptx::codegen::generate_module;
 use crate::ptx::hypa::{analyze_network, HypaConfig, NetworkMix};
 use crate::ptx::parser::parse;
@@ -71,6 +72,11 @@ pub const DERIVED_FEATURES: &[&str] = &[
     "log_arith_intensity",
 ];
 
+/// Total feature-vector width (all groups, canonical order). This is the
+/// stride of every [`FeatureMatrix`] the DSE layer builds.
+pub const N_FEATURES: usize =
+    HW_FEATURES.len() + NET_FEATURES.len() + HYPA_FEATURES.len() + DERIVED_FEATURES.len();
+
 /// All feature names in canonical order.
 pub fn all_feature_names() -> Vec<String> {
     HW_FEATURES
@@ -115,8 +121,27 @@ impl NetDescriptor {
         })
     }
 
-    /// Full feature vector for this network on `(gpu, f_mhz)`.
+    /// Full feature vector for this network on `(gpu, f_mhz)` as a fresh
+    /// heap `Vec`. The sweep hot path avoids the per-point allocation by
+    /// emitting into a shared flat matrix instead
+    /// ([`NetDescriptor::features_into`]); both paths run the *same*
+    /// emission code, so their values are bit-identical.
     pub fn features(&self, g: &GpuSpec, f_mhz: f64) -> Vec<f64> {
+        let mut v = Vec::with_capacity(N_FEATURES);
+        self.emit(g, f_mhz, &mut v);
+        debug_assert_eq!(v.len(), all_feature_names().len());
+        v
+    }
+
+    /// Emit this network's feature row for `(gpu, f_mhz)` directly into a
+    /// flat [`FeatureMatrix`] — no intermediate `Vec` per design point.
+    pub fn features_into(&self, g: &GpuSpec, f_mhz: f64, out: &mut FeatureMatrix) {
+        out.emit_row(|buf| self.emit(g, f_mhz, buf));
+    }
+
+    /// Append the canonical feature sequence to `v` (exactly
+    /// [`N_FEATURES`] values).
+    fn emit(&self, g: &GpuSpec, f_mhz: f64, v: &mut Vec<f64>) {
         let t = &self.totals;
         let mix = &self.hypa.mix;
         let batch_f = self.batch as f64;
@@ -125,7 +150,6 @@ impl NetDescriptor {
         let bytes_est = ldst * 4.0;
         let peak = g.peak_gflops(f_mhz) * 1e9;
 
-        let mut v = Vec::with_capacity(35);
         // HW
         v.push(g.sm_count as f64);
         v.push(g.cores_per_sm as f64);
@@ -165,8 +189,6 @@ impl NetDescriptor {
         v.push(log1p(flops / peak.max(1.0) * 1e9)); // ns-scale
         v.push(log1p(bytes_est / (g.mem_bw_gbps * 1e9) * 1e9));
         v.push(log1p(flops / bytes_est.max(1.0)));
-        debug_assert_eq!(v.len(), all_feature_names().len());
-        v
     }
 }
 
@@ -182,7 +204,32 @@ mod tests {
         let g = by_name("v100s").unwrap();
         let v = d.features(&g, 1000.0);
         assert_eq!(v.len(), all_feature_names().len());
+        assert_eq!(v.len(), N_FEATURES);
         assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn features_into_bit_identical_to_features() {
+        // The flat-matrix emission path must produce exactly the bits the
+        // per-point `Vec` path produces, across GPUs, frequencies and
+        // batches.
+        let g1 = by_name("v100s").unwrap();
+        let g2 = by_name("t4").unwrap();
+        for batch in [1usize, 4] {
+            let d = NetDescriptor::build(&zoo::lenet5(), batch).unwrap();
+            let mut m = FeatureMatrix::with_capacity(N_FEATURES, 6);
+            let mut expect: Vec<Vec<f64>> = Vec::new();
+            for g in [&g1, &g2] {
+                for f in [600.0, 1000.0, 1400.0] {
+                    d.features_into(g, f, &mut m);
+                    expect.push(d.features(g, f));
+                }
+            }
+            assert_eq!(m.n_rows(), expect.len());
+            for (i, e) in expect.iter().enumerate() {
+                assert_eq!(m.row(i), e.as_slice(), "row {i} diverged");
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! layout the AOT forest predictor consumes on the DSE hot path
 //! ([`RandomForest::export_tensor`]).
 
+use std::sync::{Arc, OnceLock};
+
+use crate::ml::batch::{self, BatchForest};
+use crate::ml::matrix::FeatureMatrix;
 use crate::ml::regressor::Regressor;
 use crate::ml::tree::{DecisionTree, TreeConfig, LEAF};
 use crate::util::rng::Rng;
@@ -40,10 +44,21 @@ impl Default for ForestConfig {
 }
 
 /// Random forest regressor.
+///
+/// After `fit`, the forest lazily caches its staged batch form
+/// ([`BatchForest`], built on first batched use) so repeated `predict`
+/// calls and re-staging layers never pay the O(total nodes) flattening
+/// again; `fit` invalidates the cache. Cloning shares the cached staged
+/// form (it is immutable once built).
 #[derive(Debug, Clone)]
 pub struct RandomForest {
     pub config: ForestConfig,
     pub trees: Vec<DecisionTree>,
+    /// Training-set size of the last `fit` (scales the batch-path
+    /// cutover for a first, unstaged batch).
+    n_train: usize,
+    /// Staged batch kernel, built once per fitted forest.
+    staged: OnceLock<Arc<BatchForest>>,
 }
 
 impl RandomForest {
@@ -51,7 +66,24 @@ impl RandomForest {
         RandomForest {
             config,
             trees: Vec::new(),
+            n_train: 0,
+            staged: OnceLock::new(),
         }
+    }
+
+    /// The staged batch form of this fitted forest, building and caching
+    /// it on first use. Subsequent calls (and every batched `predict`)
+    /// return the same [`Arc`] until the next [`Regressor::fit`].
+    pub fn staged(&self) -> &Arc<BatchForest> {
+        self.staged
+            .get_or_init(|| Arc::new(BatchForest::from_forest(self)))
+    }
+
+    /// Drop the cached staged form. Only needed if `trees` was mutated
+    /// directly instead of through [`Regressor::fit`] (which invalidates
+    /// automatically).
+    pub fn invalidate_staged(&mut self) {
+        self.staged = OnceLock::new();
     }
 
     /// Tensorized export for the XLA forest predictor: `(feature, threshold,
@@ -156,7 +188,11 @@ impl Regressor for RandomForest {
     fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
         assert_eq!(x.len(), y.len());
         assert!(!x.is_empty());
+        // Refitting invalidates the staged cache — the next batched
+        // predict restages against the new trees.
+        self.staged = OnceLock::new();
         let n = x.len();
+        self.n_train = n;
         let d = x[0].len();
         let mtry = self
             .config
@@ -189,15 +225,29 @@ impl Regressor for RandomForest {
         sum / self.trees.len().max(1) as f64
     }
 
-    /// Batched prediction through the SoA descent kernel
-    /// ([`crate::ml::batch::BatchForest`]); bit-identical to mapping
-    /// [`RandomForest::predict_one`] over the rows. Small batches skip the
-    /// staging cost and use the scalar path directly.
+    /// Batched prediction through the *cached* SoA descent kernel
+    /// ([`BatchForest`]); bit-identical to mapping
+    /// [`RandomForest::predict_one`] over the rows. The staged form is
+    /// built at most once per fit; only a first-ever batch smaller than
+    /// [`batch::stage_cutover`] takes the scalar path instead of staging.
     fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
-        if qs.len() < 16 || self.trees.is_empty() {
+        if self.trees.is_empty()
+            || (self.staged.get().is_none() && qs.len() < batch::stage_cutover(self.n_train))
+        {
             return qs.iter().map(|q| self.predict_one(q)).collect();
         }
-        crate::ml::batch::BatchForest::from_forest(self).predict_many(qs)
+        self.staged().predict_many(qs)
+    }
+
+    /// Flat-matrix batched prediction through the cached kernel (zero
+    /// per-query allocations); bit-identical to the scalar path.
+    fn predict_matrix(&self, m: &FeatureMatrix) -> Vec<f64> {
+        if self.trees.is_empty()
+            || (self.staged.get().is_none() && m.n_rows() < batch::stage_cutover(self.n_train))
+        {
+            return m.rows().map(|q| self.predict_one(q)).collect();
+        }
+        self.staged().predict_matrix(m)
     }
 }
 
@@ -298,6 +348,50 @@ mod tests {
         let a = tensor.predict_one(q, d);
         let b = tensor.predict_one(q, d + 20);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn staged_form_cached_across_predicts() {
+        let mut rng = Rng::new(21);
+        let (x, y) = friedman(&mut rng, 150);
+        let mut f = RandomForest::new(ForestConfig {
+            n_trees: 8,
+            ..Default::default()
+        });
+        f.fit(&x, &y);
+        let qs: Vec<Vec<f64>> = x.iter().take(80).cloned().collect();
+        let _ = f.predict(&qs);
+        let a = f.staged().clone();
+        let _ = f.predict(&qs);
+        // Same Arc — no restage between calls.
+        assert!(Arc::ptr_eq(&a, f.staged()), "predict restaged the forest");
+    }
+
+    #[test]
+    fn refit_invalidates_staged_cache() {
+        let mut rng = Rng::new(22);
+        let (x1, y1) = friedman(&mut rng, 120);
+        let mut f = RandomForest::new(ForestConfig {
+            n_trees: 8,
+            ..Default::default()
+        });
+        f.fit(&x1, &y1);
+        let qs: Vec<Vec<f64>> = x1.iter().take(60).cloned().collect();
+        let _ = f.predict(&qs); // stage against fit #1
+        let stale = f.staged().clone();
+
+        // Refit on shifted targets: a stale staged form would keep
+        // predicting fit-#1 values.
+        let y2: Vec<f64> = y1.iter().map(|v| v * 3.0 + 100.0).collect();
+        f.fit(&x1, &y2);
+        assert!(
+            !Arc::ptr_eq(&stale, f.staged()),
+            "fit must drop the staged cache"
+        );
+        let batch = f.predict(&qs);
+        for (q, b) in qs.iter().zip(&batch) {
+            assert_eq!(*b, f.predict_one(q), "stale staged forest served");
+        }
     }
 
     #[test]

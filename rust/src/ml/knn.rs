@@ -11,10 +11,20 @@
 //! fed with this model's training matrix at runtime. Integration tests
 //! assert the two paths agree.
 
+use std::sync::{Arc, OnceLock};
+
+use crate::ml::batch::{self, BatchKnn};
 use crate::ml::dataset::Scaler;
+use crate::ml::matrix::FeatureMatrix;
 use crate::ml::regressor::Regressor;
 
 /// KNN regressor.
+///
+/// After `fit`, the model lazily caches its staged batch form
+/// ([`BatchKnn`], the flattened O(n_train × d) training matrix) so
+/// repeated `predict` calls and re-staging layers never pay the copy
+/// again; `fit` invalidates the cache. Cloning shares the cached staged
+/// form (it is immutable once built).
 #[derive(Debug, Clone)]
 pub struct Knn {
     pub k: usize,
@@ -23,6 +33,8 @@ pub struct Knn {
     scaler: Option<Scaler>,
     x: Vec<Vec<f64>>, // scaled training features
     y: Vec<f64>,
+    /// Staged batch kernel, built once per fitted model.
+    staged: OnceLock<Arc<BatchKnn>>,
 }
 
 impl Knn {
@@ -33,6 +45,7 @@ impl Knn {
             scaler: None,
             x: Vec::new(),
             y: Vec::new(),
+            staged: OnceLock::new(),
         }
     }
 
@@ -41,6 +54,13 @@ impl Knn {
             weighted: false,
             ..Knn::new(k)
         }
+    }
+
+    /// The staged batch form of this fitted model, building and caching
+    /// it on first use. Subsequent calls (and every batched `predict`)
+    /// return the same [`Arc`] until the next [`Regressor::fit`].
+    pub fn staged(&self) -> &Arc<BatchKnn> {
+        self.staged.get_or_init(|| Arc::new(BatchKnn::from_model(self)))
     }
 
     /// Scaled training matrix (for export to the XLA predictor).
@@ -85,6 +105,9 @@ impl Regressor for Knn {
     fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
         assert_eq!(x.len(), y.len());
         assert!(!x.is_empty(), "empty training set");
+        // Refitting invalidates the staged cache — the next batched
+        // predict restages against the new training matrix.
+        self.staged = OnceLock::new();
         let scaler = Scaler::fit(x);
         self.x = scaler.transform(x);
         self.scaler = Some(scaler);
@@ -117,15 +140,29 @@ impl Regressor for Knn {
         }
     }
 
-    /// Batched prediction through the flat-matrix kernel
-    /// ([`crate::ml::batch::BatchKnn`]); bit-identical to mapping
-    /// [`Knn::predict_one`] over the rows. Small batches skip the staging
-    /// (matrix flattening) cost and use the scalar path directly.
+    /// Batched prediction through the *cached* flat-matrix kernel
+    /// ([`BatchKnn`]); bit-identical to mapping [`Knn::predict_one`] over
+    /// the rows. The staged form (an O(n_train × d) flattening) is built
+    /// at most once per fit; only a first-ever batch smaller than
+    /// [`batch::stage_cutover`] takes the scalar path instead of staging.
     fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
-        if qs.len() < 16 || self.x.is_empty() {
+        if self.x.is_empty()
+            || (self.staged.get().is_none() && qs.len() < batch::stage_cutover(self.x.len()))
+        {
             return qs.iter().map(|q| self.predict_one(q)).collect();
         }
-        crate::ml::batch::BatchKnn::from_model(self).predict_many(qs)
+        self.staged().predict_many(qs)
+    }
+
+    /// Flat-matrix batched prediction through the cached kernel (zero
+    /// per-query allocations); bit-identical to the scalar path.
+    fn predict_matrix(&self, m: &FeatureMatrix) -> Vec<f64> {
+        if self.x.is_empty()
+            || (self.staged.get().is_none() && m.n_rows() < batch::stage_cutover(self.x.len()))
+        {
+            return m.rows().map(|q| self.predict_one(q)).collect();
+        }
+        self.staged().predict_matrix(m)
     }
 }
 
@@ -220,5 +257,36 @@ mod tests {
         let batch = m.predict(&qs);
         assert_eq!(batch[0], m.predict_one(&qs[0]));
         assert_eq!(batch[1], m.predict_one(&qs[1]));
+    }
+
+    #[test]
+    fn staged_form_cached_and_refit_invalidates() {
+        let mut rng = Rng::new(31);
+        let x: Vec<Vec<f64>> = (0..100)
+            .map(|_| vec![rng.f64() * 3.0, rng.f64()])
+            .collect();
+        let y1: Vec<f64> = x.iter().map(|r| 10.0 * r[0] + r[1]).collect();
+        let mut m = Knn::new(3);
+        m.fit(&x, &y1);
+        let qs: Vec<Vec<f64>> = x.iter().take(50).cloned().collect();
+        let _ = m.predict(&qs);
+        let a = m.staged().clone();
+        let _ = m.predict(&qs);
+        assert!(
+            std::sync::Arc::ptr_eq(&a, m.staged()),
+            "predict restaged the training matrix"
+        );
+
+        // Refit with rescaled targets: a stale cache would keep serving y1.
+        let y2: Vec<f64> = y1.iter().map(|v| v + 500.0).collect();
+        m.fit(&x, &y2);
+        assert!(
+            !std::sync::Arc::ptr_eq(&a, m.staged()),
+            "fit must drop the staged cache"
+        );
+        let batch = m.predict(&qs);
+        for (q, b) in qs.iter().zip(&batch) {
+            assert_eq!(*b, m.predict_one(q), "stale staged kNN served");
+        }
     }
 }

@@ -1,0 +1,197 @@
+//! Flat row-major feature matrices — the allocation-free query container
+//! of the prediction hot path.
+//!
+//! The DSE sweep used to materialize every design point's ~35-value
+//! feature vector as its own heap `Vec<f64>` and hand the kernels a
+//! `&[Vec<f64>]`, even though the batch kernels immediately re-pack those
+//! rows into flat buffers. [`FeatureMatrix`] removes that boundary: rows
+//! live contiguously in one `Vec<f64>` with a fixed stride, feature
+//! emission appends *in place* ([`FeatureMatrix::emit_row`], used by
+//! `NetDescriptor::features_into`), and the batch kernels consume the flat
+//! storage directly. A whole sweep's feature extraction performs zero
+//! per-point heap allocations (one amortized buffer growth instead),
+//! which `benches/hotpath.rs` pins with a counting allocator.
+
+/// A dense row-major matrix of feature rows with a fixed width (stride).
+///
+/// ```
+/// use hypa_dse::ml::FeatureMatrix;
+///
+/// let mut m = FeatureMatrix::new(3);
+/// m.push_row(&[1.0, 2.0, 3.0]);
+/// m.emit_row(|buf| buf.extend_from_slice(&[4.0, 5.0, 6.0]));
+/// assert_eq!(m.n_rows(), 2);
+/// assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+/// assert_eq!(m.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMatrix {
+    data: Vec<f64>,
+    width: usize,
+}
+
+impl FeatureMatrix {
+    /// Empty matrix of `width` columns. `width` must be at least 1.
+    pub fn new(width: usize) -> FeatureMatrix {
+        assert!(width > 0, "FeatureMatrix width must be >= 1");
+        FeatureMatrix {
+            data: Vec::new(),
+            width,
+        }
+    }
+
+    /// Empty matrix with storage preallocated for `rows` rows.
+    pub fn with_capacity(width: usize, rows: usize) -> FeatureMatrix {
+        assert!(width > 0, "FeatureMatrix width must be >= 1");
+        FeatureMatrix {
+            data: Vec::with_capacity(width * rows),
+            width,
+        }
+    }
+
+    /// Copy a `&[Vec<f64>]` row set into flat storage. Panics on ragged
+    /// rows. An empty row set produces an empty one-column matrix.
+    pub fn from_rows(rows: &[Vec<f64>]) -> FeatureMatrix {
+        let width = rows.first().map(|r| r.len()).unwrap_or(1).max(1);
+        let mut m = FeatureMatrix::with_capacity(width, rows.len());
+        for r in rows {
+            m.push_row(r);
+        }
+        m
+    }
+
+    /// Column count (row stride).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Row count.
+    pub fn n_rows(&self) -> usize {
+        self.data.len() / self.width
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Iterate rows in order.
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks_exact(self.width)
+    }
+
+    /// The flat row-major storage (length `n_rows * width`).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Append a row by copy. Panics if `row.len() != width`.
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.width, "row width mismatch");
+        self.data.extend_from_slice(row);
+    }
+
+    /// Append a row *in place*: `fill` pushes exactly `width` values onto
+    /// the storage buffer. This is the zero-copy emission path used by
+    /// `NetDescriptor::features_into` — no intermediate `Vec` per row.
+    /// Panics if `fill` appends the wrong number of values.
+    pub fn emit_row(&mut self, fill: impl FnOnce(&mut Vec<f64>)) {
+        let before = self.data.len();
+        fill(&mut self.data);
+        assert_eq!(
+            self.data.len() - before,
+            self.width,
+            "emit_row appended {} values, expected {}",
+            self.data.len() - before,
+            self.width
+        );
+    }
+
+    /// Drop all rows, keeping the allocation (for buffer reuse across
+    /// sweeps).
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read_rows() {
+        let mut m = FeatureMatrix::with_capacity(2, 3);
+        m.push_row(&[1.0, 2.0]);
+        m.push_row(&[3.0, 4.0]);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.width(), 2);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        let rows: Vec<&[f64]> = m.rows().collect();
+        assert_eq!(rows, vec![&[1.0, 2.0][..], &[3.0, 4.0][..]]);
+    }
+
+    #[test]
+    fn emit_row_appends_in_place() {
+        let mut m = FeatureMatrix::new(3);
+        m.emit_row(|buf| {
+            buf.push(1.0);
+            buf.push(2.0);
+            buf.push(3.0);
+        });
+        assert_eq!(m.n_rows(), 1);
+        assert_eq!(m.data(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "emit_row appended")]
+    fn emit_row_width_checked() {
+        let mut m = FeatureMatrix::new(3);
+        m.emit_row(|buf| buf.push(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn push_row_width_checked() {
+        let mut m = FeatureMatrix::new(2);
+        m.push_row(&[1.0]);
+    }
+
+    #[test]
+    fn from_rows_round_trips() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let m = FeatureMatrix::from_rows(&rows);
+        assert_eq!(m.n_rows(), 3);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(m.row(i), r.as_slice());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn from_rows_rejects_ragged() {
+        FeatureMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0]]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = FeatureMatrix::from_rows(&[]);
+        assert!(m.is_empty());
+        assert_eq!(m.n_rows(), 0);
+        assert_eq!(m.rows().count(), 0);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut m = FeatureMatrix::with_capacity(2, 4);
+        m.push_row(&[1.0, 2.0]);
+        let cap = m.data.capacity();
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.data.capacity(), cap);
+    }
+}

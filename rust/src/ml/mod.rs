@@ -1,10 +1,12 @@
 //! ML substrate: the paper's predictive-modelling layer.
 //!
-//! [`features`] builds the runtime-free feature vectors, [`datagen`]
+//! [`features`] builds the runtime-free feature vectors (emitted into
+//! flat [`matrix::FeatureMatrix`] rows on the hot path), [`datagen`]
 //! sweeps the simulator to produce the labelled dataset, [`knn`]/[`tree`]/
-//! [`forest`]/[`linear`] are the model family of §II, [`metrics`] computes
-//! MAPE/R²/RMSE, and [`validate`] implements the train-many-pick-best
-//! methodology of Fig. 1.
+//! [`forest`]/[`linear`] are the model family of §II, [`batch`] holds the
+//! staged batch kernels those models cache after `fit`, [`metrics`]
+//! computes MAPE/R²/RMSE, and [`validate`] implements the
+//! train-many-pick-best methodology of Fig. 1.
 
 pub mod batch;
 pub mod dataset;
@@ -13,6 +15,7 @@ pub mod features;
 pub mod forest;
 pub mod knn;
 pub mod linear;
+pub mod matrix;
 pub mod metrics;
 pub mod regressor;
 pub mod tree;
@@ -23,5 +26,6 @@ pub use dataset::{Dataset, SampleMeta, Scaler, Target};
 pub use forest::{ForestConfig, ForestTensor, RandomForest};
 pub use knn::Knn;
 pub use linear::Ridge;
+pub use matrix::FeatureMatrix;
 pub use regressor::Regressor;
 pub use tree::{DecisionTree, TreeConfig};

@@ -2,12 +2,40 @@
 //! "we train multiple machine learning models … for each specific task,
 //! which helps improve each model's accuracy").
 
+use crate::ml::matrix::FeatureMatrix;
+
 /// A trainable regression model.
+///
+/// Models are fit once and then queried many times; the batched entry
+/// points ([`Regressor::predict`], [`Regressor::predict_matrix`]) are the
+/// hot path — `RandomForest` and `Knn` override them to run their cached
+/// staged kernels, which are bit-identical to looping
+/// [`Regressor::predict_one`].
+///
+/// ```
+/// use hypa_dse::ml::{ForestConfig, RandomForest, Regressor};
+///
+/// // y = 2·a + b on a tiny grid.
+/// let x: Vec<Vec<f64>> = (0..20)
+///     .map(|i| vec![i as f64, (i % 5) as f64])
+///     .collect();
+/// let y: Vec<f64> = x.iter().map(|r| 2.0 * r[0] + r[1]).collect();
+///
+/// let mut model = RandomForest::new(ForestConfig::default());
+/// model.fit(&x, &y);
+///
+/// // Batched prediction matches the scalar path bit-for-bit.
+/// let batch = model.predict(&x);
+/// for (q, b) in x.iter().zip(&batch) {
+///     assert_eq!(*b, model.predict_one(q));
+/// }
+/// ```
 pub trait Regressor {
     /// Human-readable name with hyperparameters, e.g. `forest(64,d12)`.
     fn name(&self) -> String;
 
-    /// Fit on a feature matrix and target vector.
+    /// Fit on a feature matrix and target vector. Implementations that
+    /// cache derived state (staged batch kernels) invalidate it here.
     fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
 
     /// Predict one sample.
@@ -16,5 +44,12 @@ pub trait Regressor {
     /// Predict a batch (default: loop).
     fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
         qs.iter().map(|q| self.predict_one(q)).collect()
+    }
+
+    /// Predict a flat row-major batch (default: loop over the rows).
+    /// Overridden by the staged models to run their batch kernels
+    /// directly on the matrix storage.
+    fn predict_matrix(&self, m: &FeatureMatrix) -> Vec<f64> {
+        m.rows().map(|q| self.predict_one(q)).collect()
     }
 }

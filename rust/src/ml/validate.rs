@@ -3,6 +3,12 @@
 //! Fig. 1 methodology ("we train multiple machine learning models (e.g.,
 //! K-Nearest Neighbor, Decision Tree, Random Forest Tree) for each
 //! specific task (i.e., power or performance prediction)").
+//!
+//! Every fold scores its test split through `Regressor::predict`, so CV
+//! rides the models' cached staged kernels: each `fit` invalidates the
+//! cache, the fold's first batched predict restages once, and every
+//! prediction within the fold reuses that staged form (bit-identical to
+//! the scalar path — see `ml::batch`).
 
 use crate::ml::dataset::{Dataset, Target};
 use crate::ml::forest::{ForestConfig, RandomForest};
@@ -255,5 +261,38 @@ mod tests {
         let e = cross_validate(&mut m, &data, Target::PowerW, 3, 5);
         assert!(e.mape > 0.0);
         assert!(e.r2 <= 1.0);
+    }
+
+    #[test]
+    fn cv_folds_never_serve_stale_staged_models() {
+        // Each fold refits the same model object; the staged-kernel cache
+        // must be invalidated per fit or fold k would predict with fold
+        // k-1's model. Pin CV output against a scalar-only reference
+        // implementation of the same folds.
+        let data = synth(120, 23);
+        let mut cached = RandomForest::new(ForestConfig {
+            n_trees: 8,
+            max_depth: 6,
+            ..Default::default()
+        });
+        let e = cross_validate(&mut cached, &data, Target::PowerW, 3, 5);
+
+        let folds = kfold_indices(data.len(), 3, 5);
+        let mut all_true = Vec::new();
+        let mut all_pred = Vec::new();
+        for (tr, te) in folds {
+            let train = data.subset(&tr);
+            let test = data.subset(&te);
+            let mut m = RandomForest::new(ForestConfig {
+                n_trees: 8,
+                max_depth: 6,
+                ..Default::default()
+            });
+            m.fit(&train.x, train.y(Target::PowerW));
+            all_pred.extend(test.x.iter().map(|q| m.predict_one(q)));
+            all_true.extend_from_slice(test.y(Target::PowerW));
+        }
+        let scalar_mape = mape(&all_true, &all_pred);
+        assert_eq!(e.mape, scalar_mape, "CV served a stale staged model");
     }
 }

@@ -4,19 +4,25 @@
 //! Staging validates the AOT shape contract (tree count / node count /
 //! depth / feature width within [`shapes`]) so every staged model remains
 //! servable by an XLA backend compiled for those static shapes, then
-//! flattens the trees once; `predict` runs the level-wise batched descent.
-//! Results are bit-identical to `RandomForest::predict_one` per row —
-//! asserted by `rust/tests/runtime_hlo.rs`.
+//! *shares* the model's cached staged form (an `Arc` — no second
+//! flattening if the forest was already staged, and no restage ever on
+//! the serving path); `predict`/`predict_matrix` run the level-wise
+//! batched descent. Results are bit-identical to
+//! `RandomForest::predict_one` per row — asserted by
+//! `rust/tests/runtime_hlo.rs`.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::ml::batch::BatchForest;
 use crate::ml::forest::RandomForest;
+use crate::ml::matrix::FeatureMatrix;
 use crate::runtime::{shapes, Runtime};
 
 /// A random forest staged for batched execution.
 pub struct ForestExecutable {
-    batch: BatchForest,
+    batch: Arc<BatchForest>,
     n_features: usize,
 }
 
@@ -54,7 +60,9 @@ impl ForestExecutable {
             shapes::FOREST_F
         );
         rt.note_staged("forest_predict");
-        let batch = BatchForest::from_forest(model);
+        // Share the model's cached staged form (built on first use,
+        // invalidated by `fit`) instead of flattening a private copy.
+        let batch = model.staged().clone();
         anyhow::ensure!(
             n_features >= batch.min_width(),
             "declared feature width {n_features} is narrower than the widest \
@@ -75,5 +83,17 @@ impl ForestExecutable {
             );
         }
         Ok(self.batch.predict_many(queries))
+    }
+
+    /// Predict a flat row-major query matrix (the width check is one
+    /// comparison, not one per row).
+    pub fn predict_matrix(&self, _rt: &Runtime, m: &FeatureMatrix) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            m.is_empty() || m.width() == self.n_features,
+            "query width {} != expected {}",
+            m.width(),
+            self.n_features
+        );
+        Ok(self.batch.predict_matrix(m))
     }
 }

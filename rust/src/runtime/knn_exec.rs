@@ -2,20 +2,26 @@
 //! batch kernel ([`crate::ml::batch::BatchKnn`]).
 //!
 //! Staging validates the AOT shape contract (training rows within `KNN_N`,
-//! feature width within `KNN_F`) and flattens the scaled training matrix
-//! once; `predict` scales each query and runs the blocked distance kernel
-//! with O(n) top-k selection. Results are bit-identical to
-//! `Knn::predict_one` per row — asserted by `rust/tests/runtime_hlo.rs`.
+//! feature width within `KNN_F`) and *shares* the model's cached staged
+//! form (an `Arc` of the flattened training matrix — no O(n_train × d)
+//! copy if the model was already staged, and no restage ever on the
+//! serving path); `predict`/`predict_matrix` scale each query and run the
+//! blocked distance kernel with O(n) top-k selection. Results are
+//! bit-identical to `Knn::predict_one` per row — asserted by
+//! `rust/tests/runtime_hlo.rs`.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::ml::batch::BatchKnn;
 use crate::ml::knn::Knn;
+use crate::ml::matrix::FeatureMatrix;
 use crate::runtime::{shapes, Runtime};
 
 /// A KNN model staged for batched execution.
 pub struct KnnExecutable {
-    batch: BatchKnn,
+    batch: Arc<BatchKnn>,
 }
 
 impl KnnExecutable {
@@ -38,8 +44,10 @@ impl KnnExecutable {
             shapes::KNN_F
         );
         rt.note_staged("knn_predict");
+        // Share the model's cached staged form (built on first use,
+        // invalidated by `fit`) instead of flattening a private copy.
         Ok(KnnExecutable {
-            batch: BatchKnn::from_model(model),
+            batch: model.staged().clone(),
         })
     }
 
@@ -58,5 +66,17 @@ impl KnnExecutable {
             );
         }
         Ok(self.batch.predict_many(queries))
+    }
+
+    /// Predict a flat row-major query matrix (the width check is one
+    /// comparison, not one per row).
+    pub fn predict_matrix(&self, _rt: &Runtime, m: &FeatureMatrix) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            m.is_empty() || m.width() == self.batch.n_features(),
+            "query width {} != trained width {}",
+            m.width(),
+            self.batch.n_features()
+        );
+        Ok(self.batch.predict_matrix(m))
     }
 }

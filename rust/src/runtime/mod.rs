@@ -14,6 +14,12 @@
 //! forest tree counts had to divide `FOREST_T` for unbiased cyclic tile
 //! padding) — re-plugging a PJRT backend behind this API must re-check
 //! those at its own staging time.
+//!
+//! Staging here *shares* the models' cached staged kernels (an `Arc`
+//! built on first use, invalidated by `fit`) rather than flattening
+//! private copies, and the executables accept flat
+//! [`crate::ml::FeatureMatrix`] batches as well as row vectors — see
+//! `docs/ARCHITECTURE.md` for the full staged-execution contract.
 
 mod forest_exec;
 mod knn_exec;

@@ -1,17 +1,28 @@
-//! Scoped worker pool for sharding data-parallel work across cores.
+//! Worker pools for sharding data-parallel work across cores.
 //!
 //! The DSE evaluation engine is embarrassingly parallel over design points
-//! and over prediction queries, so this module provides one primitive:
-//! split a slice into contiguous shards, run a closure per shard on scoped
-//! `std::thread` workers, and return the per-shard results **in shard
-//! order** — callers concatenate and get output identical to the
-//! sequential path (each element's result depends only on its own shard).
+//! and over prediction queries, so this module provides two primitives:
+//!
+//! * **Scoped sharding** ([`map_shards`], [`map_shards_ctx`],
+//!   [`map_range_shards`], [`par_map`]) — split a slice (or a flat
+//!   row-range) into contiguous shards, run a closure per shard on scoped
+//!   `std::thread` workers, and return the per-shard results **in shard
+//!   order** — callers concatenate and get output identical to the
+//!   sequential path (each element's result depends only on its own
+//!   shard).
+//! * **A persistent job pool** ([`TaskPool`]) — a small set of long-lived
+//!   worker threads draining a job queue, used by the coordinator to
+//!   execute dynamic-batch flushes concurrently instead of serially on
+//!   the dispatcher thread.
 //!
 //! Thread count comes from `std::thread::available_parallelism`, capped by
 //! the shard count and overridable with `HYPA_DSE_THREADS` (set it to `1`
 //! to force sequential execution, e.g. when bisecting a perf regression).
 
 use std::cell::Cell;
+use std::ops::Range;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 
 thread_local! {
     /// Set on pool worker threads so nested data-parallel code (e.g. a
@@ -52,32 +63,8 @@ where
     R: Send,
     F: Fn(usize, &[T]) -> R + Sync,
 {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let max_useful = n.div_ceil(min_shard.max(1));
-    let workers = workers.clamp(1, max_useful.max(1));
-    if workers == 1 {
-        return vec![f(0, items)];
-    }
-    let shard = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        let f = &f;
-        let handles: Vec<_> = items
-            .chunks(shard)
-            .enumerate()
-            .map(|(i, chunk)| {
-                scope.spawn(move || {
-                    IN_POOL.with(|c| c.set(true));
-                    f(i * shard, chunk)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
-            .collect()
+    map_range_shards(items.len(), min_shard, workers, |r| {
+        f(r.start, &items[r.start..r.end])
     })
 }
 
@@ -129,6 +116,46 @@ where
     })
 }
 
+/// Shard the index range `0..n_rows` into at most `workers` contiguous
+/// ranges (and no more than `ceil(n_rows / min_shard)` of them) and
+/// apply `f(range)` to each in parallel; results come back in range
+/// order. The core sharding primitive: [`map_shards_with`] delegates
+/// here, and flat row-major buffers (e.g. [`crate::ml::FeatureMatrix`])
+/// use it directly, since they have no `&[T]` of rows to chunk. With one
+/// worker (or few rows) runs inline on the calling thread.
+pub fn map_range_shards<R, F>(n_rows: usize, min_shard: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(Range<usize>) -> R + Sync,
+{
+    if n_rows == 0 {
+        return Vec::new();
+    }
+    let max_useful = n_rows.div_ceil(min_shard.max(1));
+    let workers = workers.clamp(1, max_useful.max(1));
+    if workers == 1 {
+        return vec![f(0..n_rows)];
+    }
+    let shard = n_rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|i| (i * shard, ((i + 1) * shard).min(n_rows)))
+            .filter(|&(lo, hi)| lo < hi)
+            .map(|(lo, hi)| {
+                scope.spawn(move || {
+                    IN_POOL.with(|c| c.set(true));
+                    f(lo..hi)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    })
+}
+
 /// [`map_shards_with`] using the default worker count.
 pub fn map_shards<T, R, F>(items: &[T], min_shard: usize, f: F) -> Vec<R>
 where
@@ -153,6 +180,84 @@ where
     .into_iter()
     .flatten()
     .collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of worker threads draining a FIFO job queue.
+///
+/// Unlike the scoped sharding helpers above (which spawn per call and
+/// join before returning), a `TaskPool` lives as long as its owner and
+/// accepts fire-and-forget jobs; up to `workers` jobs execute
+/// *concurrently*. The coordinator uses one to overlap dynamic-batch
+/// flushes ([`crate::coordinator::PredictionService`]). Workers are
+/// flagged as pool threads, so nested batch kernels stay serial instead
+/// of oversubscribing the machine.
+///
+/// Dropping the pool closes the queue, lets the workers drain every job
+/// already submitted, and joins them.
+pub struct TaskPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl TaskPool {
+    /// Spawn `workers` (at least 1) named worker threads.
+    pub fn new(workers: usize, name: &str) -> TaskPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        IN_POOL.with(|c| c.set(true));
+                        loop {
+                            // Hold the lock only while receiving, not
+                            // while running the job.
+                            let job = rx.lock().unwrap().recv();
+                            match job {
+                                Ok(job) => job(),
+                                Err(_) => break, // queue closed and drained
+                            }
+                        }
+                    })
+                    .expect("spawn task-pool worker")
+            })
+            .collect();
+        TaskPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    /// Enqueue a job; some idle worker will run it. Panics if called
+    /// after the pool started shutting down (it cannot: shutdown happens
+    /// in `Drop`).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("task pool shut down")
+            .send(Box::new(job))
+            .expect("task pool workers gone");
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        // Closing the channel makes `recv` error once the queue is
+        // drained; every submitted job still runs before join returns.
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +307,76 @@ mod tests {
         let items = [1, 2, 3];
         let out = map_shards_with(&items, 1, 1, |off, s| (off, s.len()));
         assert_eq!(out, vec![(0, 3)]);
+    }
+
+    #[test]
+    fn range_shards_cover_rows_in_order() {
+        for (n, min_shard, workers) in [(1000usize, 1, 7), (5, 1, 4), (10, 8, 64), (3, 1, 1)] {
+            let ranges = map_range_shards(n, min_shard, workers, |r| r);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "n={n} ranges={ranges:?}");
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn range_shards_empty() {
+        let out = map_range_shards(0, 1, 8, |r| r);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn task_pool_runs_all_jobs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = TaskPool::new(3, "test-pool");
+            assert_eq!(pool.workers(), 3);
+            for _ in 0..50 {
+                let c = count.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // Drop joins after draining the queue.
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn task_pool_jobs_run_concurrently() {
+        // Two jobs rendezvous on a barrier: impossible to complete unless
+        // both are executing at the same time on different workers.
+        let pool = TaskPool::new(2, "test-pool");
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..2 {
+            let b = barrier.clone();
+            let tx = tx.clone();
+            pool.submit(move || {
+                b.wait();
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..2 {
+            rx.recv_timeout(std::time::Duration::from_secs(10))
+                .expect("jobs did not overlap");
+        }
+    }
+
+    #[test]
+    fn task_pool_workers_are_pool_threads() {
+        let pool = TaskPool::new(1, "test-pool");
+        let (tx, rx) = mpsc::channel();
+        pool.submit(move || {
+            tx.send(in_pool_worker()).unwrap();
+        });
+        assert!(rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .unwrap());
     }
 }

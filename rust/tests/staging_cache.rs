@@ -1,0 +1,337 @@
+//! The zero-restage pipeline's correctness contract:
+//!
+//! * staged-model caches are reused across predicts and invalidated by
+//!   `fit` (no stale `BatchForest`/`BatchKnn` ever served);
+//! * `FeatureMatrix` rows are bit-identical to the per-point `features()`
+//!   vectors, and the matrix prediction paths are bit-identical to the
+//!   scalar oracles end to end (model → executable → `Predictor`);
+//! * the coordinator's single-row flushes execute on the flush pool and
+//!   overlap (metrics watermark);
+//! * both budgeted searches are deterministic for any worker count, and
+//!   `local_search` arms merge deterministically.
+
+use std::sync::Arc;
+
+use hypa_dse::cnn::zoo;
+use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
+use hypa_dse::dse::search::{
+    local_search_with_arms, random_search_with_threads,
+};
+use hypa_dse::dse::{DescriptorCache, DseConstraints, Objective};
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::ml::features::{all_feature_names, N_FEATURES};
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::matrix::FeatureMatrix;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::util::rng::Rng;
+
+fn make_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f64> = (0..d).map(|_| rng.f64() * 4.0).collect();
+        let t = 40.0 + 12.0 * row[0] + 4.0 * row[1 % d] * row[1 % d];
+        x.push(row);
+        y.push(t);
+    }
+    (x, y)
+}
+
+fn real_width_service(rng: &mut Rng, policy: BatchPolicy) -> PredictionService {
+    let (x, yp) = make_data(rng, 300, N_FEATURES);
+    let yc: Vec<f64> = x.iter().map(|r| 1e7 * (1.0 + r[0])).collect();
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 12,
+        max_depth: 8,
+        ..Default::default()
+    });
+    forest.fit(&x, &yp);
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &yc);
+    PredictionService::start("artifacts".into(), forest, knn, N_FEATURES, policy)
+        .expect("service start")
+}
+
+#[test]
+fn n_features_matches_names() {
+    assert_eq!(N_FEATURES, all_feature_names().len());
+}
+
+#[test]
+fn staging_shared_model_to_executable() {
+    // The executable must reuse the model's cached staged form — same
+    // Arc, no second flattening.
+    let mut rng = Rng::new(1);
+    let (x, y) = make_data(&mut rng, 200, 10);
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 8,
+        max_depth: 8,
+        ..Default::default()
+    });
+    forest.fit(&x, &y);
+    let before = forest.staged().clone();
+    let mut rt = hypa_dse::runtime::Runtime::new("artifacts").unwrap();
+    let _exec = hypa_dse::runtime::ForestExecutable::stage(&mut rt, &forest, 10).unwrap();
+    assert!(
+        Arc::ptr_eq(&before, forest.staged()),
+        "staging flattened a second copy"
+    );
+
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &y);
+    let kbefore = knn.staged().clone();
+    let _kexec = hypa_dse::runtime::KnnExecutable::stage(&mut rt, &knn).unwrap();
+    assert!(
+        Arc::ptr_eq(&kbefore, knn.staged()),
+        "staging flattened a second kNN copy"
+    );
+}
+
+#[test]
+fn refit_after_service_staging_is_isolated() {
+    // A started service must keep serving the models it staged even if
+    // the caller refits its own copies afterwards (the staged Arcs are
+    // snapshots, not live references).
+    let mut rng = Rng::new(2);
+    let (x, yp) = make_data(&mut rng, 200, N_FEATURES);
+    let yc: Vec<f64> = x.iter().map(|r| 1e6 * (1.0 + r[0])).collect();
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 8,
+        max_depth: 8,
+        ..Default::default()
+    });
+    forest.fit(&x, &yp);
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &yc);
+
+    let service = PredictionService::start(
+        "artifacts".into(),
+        forest.clone(),
+        knn.clone(),
+        N_FEATURES,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let p = service.predictor();
+    let qs: Vec<Vec<f64>> = x.iter().take(30).cloned().collect();
+    let before = p.predict_many(Task::Power, &qs).unwrap();
+
+    // Refit the caller's copies on garbage; the service must not change.
+    let y_other: Vec<f64> = yp.iter().map(|v| -v).collect();
+    forest.fit(&x, &y_other);
+    knn.fit(&x, &y_other);
+    let after = p.predict_many(Task::Power, &qs).unwrap();
+    assert_eq!(before, after, "service predictions changed after caller refit");
+
+    // And the refit models themselves serve the *new* fit, bit-identical
+    // to their scalar paths.
+    let batch = forest.predict(&qs);
+    for (q, b) in qs.iter().zip(&batch) {
+        assert_eq!(*b, forest.predict_one(q));
+    }
+    let kbatch = knn.predict(&qs);
+    for (q, b) in qs.iter().zip(&kbatch) {
+        assert_eq!(*b, knn.predict_one(q));
+    }
+}
+
+#[test]
+fn feature_matrix_rows_bit_identical_to_features() {
+    let cache = DescriptorCache::new();
+    let net = zoo::lenet5();
+    let desc = cache.descriptor(&net, 2).unwrap();
+    let g = by_name("v100s").unwrap();
+    let mut m = FeatureMatrix::with_capacity(N_FEATURES, 8);
+    let mut expect: Vec<Vec<f64>> = Vec::new();
+    for f in [540.0, 800.0, 1000.0, 1100.0, 1245.0, 1300.0, 1400.0, 1500.0] {
+        desc.features_into(&g, f, &mut m);
+        expect.push(desc.features(&g, f));
+    }
+    assert_eq!(m.n_rows(), expect.len());
+    assert_eq!(m.width(), N_FEATURES);
+    for (i, e) in expect.iter().enumerate() {
+        assert_eq!(m.row(i), e.as_slice(), "row {i} diverged");
+    }
+}
+
+#[test]
+fn predict_matrix_bit_identical_through_service() {
+    // FeatureMatrix → Predictor::predict_matrix must reproduce both the
+    // rows path and the scalar oracle bit-for-bit.
+    let mut rng = Rng::new(3);
+    let service = real_width_service(&mut rng, BatchPolicy::default());
+    let p = service.predictor();
+    let rows: Vec<Vec<f64>> = (0..120)
+        .map(|_| (0..N_FEATURES).map(|_| rng.f64() * 4.0).collect())
+        .collect();
+    let m = FeatureMatrix::from_rows(&rows);
+    for task in [Task::Power, Task::Cycles] {
+        let via_matrix = p.predict_matrix(task, &m).unwrap();
+        let via_rows = p.predict_many(task, &rows).unwrap();
+        assert_eq!(via_matrix, via_rows, "{task:?} matrix/rows diverged");
+    }
+}
+
+#[test]
+fn regressor_predict_matrix_bit_identical_to_scalar() {
+    let mut rng = Rng::new(4);
+    let (x, y) = make_data(&mut rng, 250, 9);
+    let qs: Vec<Vec<f64>> = (0..80)
+        .map(|_| (0..9).map(|_| rng.f64() * 4.0).collect())
+        .collect();
+    let m = FeatureMatrix::from_rows(&qs);
+
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 10,
+        max_depth: 8,
+        ..Default::default()
+    });
+    forest.fit(&x, &y);
+    let fm = forest.predict_matrix(&m);
+    for (i, q) in qs.iter().enumerate() {
+        assert_eq!(fm[i], forest.predict_one(q), "forest row {i}");
+    }
+
+    for model in [Knn::new(3), Knn::uniform(5)] {
+        let mut knn = model;
+        knn.fit(&x, &y);
+        let km = knn.predict_matrix(&m);
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(km[i], knn.predict_one(q), "{} row {i}", knn.name());
+        }
+    }
+}
+
+#[test]
+fn single_row_flushes_run_on_pool_and_overlap() {
+    // Hammer the dynamic-batching path with concurrent single-row
+    // clients: every flush must execute on the flush pool, and with a
+    // multi-worker pool plus a slow (large-n kNN) engine, flushes overlap
+    // — observed by the metrics inflight watermark.
+    let mut rng = Rng::new(5);
+    let (x, yp) = make_data(&mut rng, 2500, N_FEATURES);
+    let yc: Vec<f64> = x.iter().map(|r| 1e7 * (1.0 + r[0])).collect();
+    let mut forest = RandomForest::new(ForestConfig {
+        n_trees: 8,
+        max_depth: 8,
+        ..Default::default()
+    });
+    forest.fit(&x, &yp);
+    let mut knn = Knn::new(3);
+    knn.fit(&x, &yc);
+    let policy = BatchPolicy {
+        max_batch: 8,
+        linger: std::time::Duration::from_micros(100),
+        flush_workers: 4,
+    };
+    let service =
+        PredictionService::start("artifacts".into(), forest, knn, N_FEATURES, policy).unwrap();
+    let p = service.predictor();
+
+    let mut overlapped = false;
+    for _round in 0..20 {
+        std::thread::scope(|scope| {
+            for c in 0..32 {
+                let p = p.clone();
+                let q: Vec<f64> = x[c % x.len()].clone();
+                scope.spawn(move || {
+                    // Cycles hits the kNN (n=2500 distance scan per row:
+                    // a flush takes long enough to be overlapped).
+                    let v = p.predict(Task::Cycles, q).unwrap();
+                    assert!(v.is_finite());
+                });
+            }
+        });
+        if p.metrics.max_concurrent_flushes() >= 2 {
+            overlapped = true;
+            break;
+        }
+    }
+    assert!(p.metrics.pool_flushes() > 0, "{}", p.metrics.summary());
+    assert!(
+        overlapped,
+        "flushes never overlapped on a 4-worker pool: {}",
+        p.metrics.summary()
+    );
+}
+
+#[test]
+fn random_search_identical_for_any_worker_count() {
+    let mut rng = Rng::new(6);
+    let service = real_width_service(&mut rng, BatchPolicy::default());
+    let p = service.predictor();
+    let net = zoo::lenet5();
+    let cache = DescriptorCache::new();
+    let constraints = DseConstraints::default();
+    let budget = 160; // several RANDOM_CHUNK shards
+
+    let mut results = Vec::new();
+    for workers in [1usize, 2, 5] {
+        let r = random_search_with_threads(
+            &net,
+            &p,
+            &constraints,
+            Objective::MinEdp,
+            &[1, 2],
+            budget,
+            7,
+            &cache,
+            workers,
+        )
+        .unwrap();
+        assert_eq!(r.evaluations, budget);
+        assert_eq!(r.trajectory.len(), budget);
+        results.push(r);
+    }
+    let best0 = results[0].best.clone().expect("unconstrained search finds a point");
+    for r in &results[1..] {
+        assert_eq!(r.best.as_ref().unwrap(), &best0, "best depends on workers");
+        assert_eq!(
+            r.trajectory, results[0].trajectory,
+            "trajectory depends on workers"
+        );
+    }
+}
+
+#[test]
+fn local_search_arms_deterministic_and_budget_exact() {
+    let mut rng = Rng::new(8);
+    let service = real_width_service(&mut rng, BatchPolicy::default());
+    let p = service.predictor();
+    let net = zoo::lenet5();
+    let cache = DescriptorCache::new();
+    let constraints = DseConstraints::default();
+    let budget = 90;
+
+    let run = |arms: usize| {
+        local_search_with_arms(
+            &net,
+            &p,
+            &constraints,
+            Objective::MinEdp,
+            &[1, 2],
+            budget,
+            11,
+            &cache,
+            arms,
+        )
+        .unwrap()
+    };
+    for arms in [1usize, 3, 4] {
+        let a = run(arms);
+        let b = run(arms);
+        assert_eq!(a.evaluations, budget, "arms={arms}");
+        assert_eq!(a.trajectory.len(), budget, "arms={arms}");
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.trajectory, b.trajectory, "arms={arms} not deterministic");
+        assert_eq!(a.best, b.best, "arms={arms} best not deterministic");
+        assert!(a.best.is_some());
+        // Merged trajectory is monotone under the objective.
+        for w in a.trajectory.windows(2) {
+            if !w[0].is_nan() && !w[1].is_nan() {
+                assert!(w[1] <= w[0], "trajectory not best-so-far: {w:?}");
+            }
+        }
+    }
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# CI entry point: release build, test suite, formatting check, and the
-# hot-path benchmark in JSON mode (perf trajectory across PRs).
+# CI entry point: release build, test suite, doctests, rustdoc (warnings
+# denied), formatting check, and the hot-path benchmark in JSON mode
+# (perf trajectory across PRs).
 #
 # Usage: scripts/ci.sh [--with-bench]
 set -euo pipefail
@@ -9,8 +10,17 @@ cd "$(dirname "$0")/.."
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test =="
-cargo test -q
+echo "== cargo test (unit/integration; doctests run separately below) =="
+cargo test -q --lib --bins --tests --examples
+
+echo "== cargo test --doc (doc-examples) =="
+cargo test -q --doc
+
+echo "== cargo check --benches (bench targets compile) =="
+cargo check -q --benches
+
+echo "== cargo doc --no-deps (warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
