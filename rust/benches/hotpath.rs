@@ -12,9 +12,15 @@
 //! * the AOT-shape `ForestTensor` batch descent vs its scalar descent;
 //! * native kNN batch-256 (flat matrix, blocked distances, O(n) top-k)
 //!   vs the scalar per-row scan;
+//! * the tiered kNN engine: the norm-trick kernel vs the bit-exact
+//!   direct scan at the large-n cutover point (n=4096, d=16), and the
+//!   opt-in KD-tree vs the norm path in its low-d regime (n=8192, d=8) —
+//!   tier parity asserted before timing;
 //! * feature emission into a flat `FeatureMatrix` vs per-point `Vec`s —
 //!   with a counting global allocator *proving* the flat path performs
-//!   zero per-point heap allocations;
+//!   zero per-point heap allocations, and that chunked scoring through
+//!   the per-worker scratch matrix (`pool::with_scratch`) performs zero
+//!   allocations once the worker's buffer is warm;
 //! * coordinator service round trips: single-row vs one bulk submission
 //!   (rows and flat-matrix variants);
 //! * `explore` over the default grid (catalog × 8 freq steps × 4 batches):
@@ -31,7 +37,7 @@ use std::time::Duration;
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
 use hypa_dse::dse::{explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints};
-use hypa_dse::ml::batch::{BatchForest, BatchKnn};
+use hypa_dse::ml::batch::{BatchForest, BatchKnn, KnnTier};
 use hypa_dse::ml::features::{NetDescriptor, N_FEATURES};
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
 use hypa_dse::ml::knn::Knn;
@@ -205,6 +211,65 @@ fn main() {
     ratios.set("knn_batch_vs_scalar", jnum(knn_ratio));
     ratios.set("knn_cached_vs_restage", jnum(knn_cache_ratio));
 
+    println!("-- knn tiers: norm-trick vs direct (n=4096 d=16), tree vs norm (n=8192 d=8) --");
+    // Norm-vs-direct at the acceptance point: large n, wide-enough d for
+    // the unrolled dot core to amortize the exact re-computation pass.
+    let (tn, td) = (4096usize, 16usize);
+    let tx: Vec<Vec<f64>> = (0..tn)
+        .map(|_| (0..td).map(|_| rng.f64() * 8.0).collect())
+        .collect();
+    let ty: Vec<f64> = tx.iter().map(|r| 7.0 * r[0] + r[1] * r[2]).collect();
+    let mut knn_big = Knn::new(5);
+    knn_big.fit(&tx, &ty);
+    let tq: Vec<Vec<f64>> = (0..B)
+        .map(|_| (0..td).map(|_| rng.f64() * 8.0).collect())
+        .collect();
+    let k_direct = BatchKnn::from_model_with_tier(&knn_big, KnnTier::Direct);
+    let k_norm = BatchKnn::from_model_with_tier(&knn_big, KnnTier::Norm);
+    // Parity sanity before timing: the tiers must agree on predictions.
+    let p_direct = k_direct.predict_many(&tq);
+    let p_norm = k_norm.predict_many(&tq);
+    for i in 0..tq.len() {
+        let rel = (p_norm[i] - p_direct[i]).abs() / p_direct[i].abs().max(1e-12);
+        assert!(rel <= 1e-9, "norm tier diverged at row {i}: rel={rel:e}");
+    }
+    let m_td = bench::bench("knn tier direct x256", budget, || {
+        k_direct.predict_many(&tq)
+    });
+    let m_tn = bench::bench("knn tier norm x256", budget, || k_norm.predict_many(&tq));
+    let norm_ratio = m_td.p50() / m_tn.p50();
+    println!("  speedup (norm vs direct, n=4096 d=16): {norm_ratio:.2}x");
+    stages.stage(&m_td, B);
+    stages.stage(&m_tn, B);
+    ratios.set("knn_norm_vs_direct", jnum(norm_ratio));
+
+    // Tree-vs-norm in the KD-tree's regime: very large n, low d (pruning
+    // collapses in high dimensions, which is why the tier is opt-in).
+    let (un, ud) = (8192usize, 8usize);
+    let ux: Vec<Vec<f64>> = (0..un)
+        .map(|_| (0..ud).map(|_| rng.f64() * 8.0).collect())
+        .collect();
+    let uy: Vec<f64> = ux.iter().map(|r| 7.0 * r[0] + r[1] * r[2]).collect();
+    let mut knn_huge = Knn::new(5);
+    knn_huge.fit(&ux, &uy);
+    let uq: Vec<Vec<f64>> = (0..B)
+        .map(|_| (0..ud).map(|_| rng.f64() * 8.0).collect())
+        .collect();
+    let u_norm = BatchKnn::from_model_with_tier(&knn_huge, KnnTier::Norm);
+    let u_tree = BatchKnn::from_model_with_tier(&knn_huge, KnnTier::Tree);
+    let q_direct = BatchKnn::from_model_with_tier(&knn_huge, KnnTier::Direct).predict_many(&uq);
+    let q_tree = u_tree.predict_many(&uq);
+    for i in 0..uq.len() {
+        assert_eq!(q_tree[i], q_direct[i], "tree tier diverged at row {i}");
+    }
+    let m_un = bench::bench("knn tier norm8 x256", budget, || u_norm.predict_many(&uq));
+    let m_ut = bench::bench("knn tier tree8 x256", budget, || u_tree.predict_many(&uq));
+    let tree_ratio = m_un.p50() / m_ut.p50();
+    println!("  speedup (tree vs norm, n=8192 d=8): {tree_ratio:.2}x\n");
+    stages.stage(&m_un, B);
+    stages.stage(&m_ut, B);
+    ratios.set("knn_tree_vs_norm", jnum(tree_ratio));
+
     println!("-- feature emission: flat FeatureMatrix vs per-point Vec --");
     let lenet = hypa_dse::cnn::zoo::lenet5();
     let desc = NetDescriptor::build(&lenet, 1).unwrap();
@@ -258,6 +323,37 @@ fn main() {
         "feature_vec_allocs_per_point",
         jnum(vec_allocs as f64 / freqs.len() as f64),
     );
+
+    // Chunked scoring through the per-worker scratch matrix
+    // (`pool::with_scratch`, the `score_points` pattern: reset — clear,
+    // not reallocate — then emit a whole chunk). After one warm-up that
+    // grows the worker's buffer, a full chunked sweep must not touch the
+    // heap at all.
+    pool::with_scratch(|m: &mut FeatureMatrix| {
+        m.reset(N_FEATURES);
+        m.reserve_rows(64);
+    });
+    let a2 = alloc_count();
+    for chunk in freqs.chunks(64) {
+        pool::with_scratch(|m: &mut FeatureMatrix| {
+            m.reset(N_FEATURES);
+            m.reserve_rows(chunk.len());
+            for &f in chunk {
+                desc.features_into(&gspec, f, m);
+            }
+            assert_eq!(m.n_rows(), chunk.len());
+        });
+    }
+    let chunk_allocs = alloc_count() - a2;
+    println!(
+        "  heap allocations across {} scratch-scored chunks: {chunk_allocs}",
+        freqs.len().div_ceil(64)
+    );
+    assert_eq!(
+        chunk_allocs, 0,
+        "chunked scoring must reuse the per-worker scratch matrix"
+    );
+    ratios.set("score_chunk_allocs", jnum(chunk_allocs as f64));
 
     println!("-- coordinator service round trips --");
     let service = PredictionService::start(

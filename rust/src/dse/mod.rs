@@ -16,11 +16,12 @@
 //!   [`search::random_search`] and [`search::local_search`], instead of
 //!   per-call `HashMap` rebuilds and O(catalog) linear lookups;
 //! * feature rows are emitted straight into a flat
-//!   [`FeatureMatrix`](crate::ml::FeatureMatrix) (one preallocated
-//!   buffer per scoring chunk — zero per-design-point heap allocations)
-//!   and scored with two bulk [`Predictor::predict_matrix`] calls per
-//!   chunk, which the staged batch kernels consume without any row
-//!   repacking;
+//!   [`FeatureMatrix`](crate::ml::FeatureMatrix) recycled per worker
+//!   ([`crate::util::pool::with_scratch`]: cleared, not reallocated, per
+//!   scoring chunk — zero per-design-point heap allocations, and zero
+//!   per-chunk allocations once a worker's buffer is warm) and scored
+//!   with two bulk [`Predictor::predict_matrix`] calls per chunk, which
+//!   the staged batch kernels consume without any row repacking;
 //! * [`explore`] shards the grid across a scoped worker pool
 //!   ([`crate::util::pool`]); shards are concatenated in order, so the
 //!   output is identical (element-for-element) to the sequential path —
@@ -412,16 +413,26 @@ pub(crate) fn score_points(
         }
     }
 
-    // Emit every feature row into one flat matrix: zero per-point heap
-    // allocations (the buffer is sized up front), and the batch kernels
-    // consume the storage directly.
-    let mut rows = FeatureMatrix::with_capacity(N_FEATURES, points.len());
-    for p in points {
-        let g = cache.gpu(&p.gpu)?;
-        descs[&p.batch].features_into(g, p.f_mhz, &mut rows);
-    }
-    let power = predictor.predict_matrix(Task::Power, &rows)?;
-    let cycles = predictor.predict_matrix(Task::Cycles, &rows)?;
+    // Emit every feature row into the *per-worker scratch* matrix
+    // (cleared, not reallocated, per chunk): zero per-point heap
+    // allocations, and — once a worker's first chunk has grown the
+    // buffer — zero per-chunk allocations too, across all the chunks a
+    // search or sweep feeds this worker (asserted by the counting
+    // allocator in `benches/hotpath.rs`). The batch kernels consume the
+    // flat storage directly.
+    let (power, cycles) =
+        pool::with_scratch(|rows: &mut FeatureMatrix| -> Result<(Vec<f64>, Vec<f64>)> {
+            rows.reset(N_FEATURES);
+            rows.reserve_rows(points.len());
+            for p in points {
+                let g = cache.gpu(&p.gpu)?;
+                descs[&p.batch].features_into(g, p.f_mhz, rows);
+            }
+            Ok((
+                predictor.predict_matrix(Task::Power, rows)?,
+                predictor.predict_matrix(Task::Cycles, rows)?,
+            ))
+        })?;
 
     let mut scored = Vec::with_capacity(points.len());
     for ((p, pw), cy) in points.iter().zip(power).zip(cycles) {

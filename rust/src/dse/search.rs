@@ -395,6 +395,9 @@ fn climb_arm(
     let mut best: Option<ScoredPoint> = None;
     let mut trajectory = Vec::with_capacity(budget);
     let mut evals = 0usize;
+    // One neighbour buffer per arm, cleared (not reallocated) per climb
+    // step — the move set is tiny but regenerated every step.
+    let mut neighbours: Vec<DesignPoint> = Vec::with_capacity(6);
 
     while evals < budget {
         // Restart.
@@ -411,7 +414,7 @@ fn climb_arm(
         let mut improved = true;
         while improved && evals < budget {
             improved = false;
-            let mut neighbours = neighbours_of(&cur_pt, cache.gpus(), batches, &mut rng);
+            neighbours_into(&cur_pt, cache.gpus(), batches, &mut rng, &mut neighbours);
             neighbours.truncate(budget - evals);
             if neighbours.is_empty() {
                 break;
@@ -444,16 +447,33 @@ fn climb_arm(
     })
 }
 
+/// Allocating convenience over [`neighbours_into`] (tests).
+#[cfg(test)]
 fn neighbours_of(
     p: &DesignPoint,
     gpus: &[GpuSpec],
     batches: &[usize],
     rng: &mut Rng,
 ) -> Vec<DesignPoint> {
-    let Some(g) = gpus.iter().find(|g| g.name == p.gpu) else {
-        return Vec::new();
-    };
     let mut out = Vec::with_capacity(6);
+    neighbours_into(p, gpus, batches, rng, &mut out);
+    out
+}
+
+/// Generate the hill-climbing move set of `p` into a reused buffer
+/// (cleared first). RNG draws are identical to the historical allocating
+/// version, so seeds reproduce the same climbs.
+fn neighbours_into(
+    p: &DesignPoint,
+    gpus: &[GpuSpec],
+    batches: &[usize],
+    rng: &mut Rng,
+    out: &mut Vec<DesignPoint>,
+) {
+    out.clear();
+    let Some(g) = gpus.iter().find(|g| g.name == p.gpu) else {
+        return;
+    };
     // Frequency ±10%, clamped.
     for mult in [0.9, 1.1] {
         let f = (p.f_mhz * mult).clamp(g.min_mhz, g.boost_mhz).round();
@@ -489,7 +509,6 @@ fn neighbours_of(
             batch: p.batch,
         });
     }
-    out
 }
 
 #[cfg(test)]

@@ -31,11 +31,16 @@
 //! This Rust crate is the whole serving stack. The coordinator (L3)
 //! batches prediction requests onto staged executables; the execution
 //! backend (L1/L2, [`runtime`] + [`ml::batch`]) is a native batched
-//! engine — SoA level-wise forest descent and a blocked flat-matrix kNN
-//! kernel, sharded across cores by [`util::pool`]. Repeated prediction is
-//! allocation- and restage-free end to end: models cache their staged
-//! kernels (invalidated on `fit`), feature rows are emitted into flat
-//! matrices, and every batch path is bit-identical to its scalar oracle.
+//! engine — SoA level-wise forest descent and a tiered flat-matrix kNN
+//! kernel (direct scan / norm expansion / opt-in KD-tree, picked by
+//! [`ml::batch::knn_tier`] at staging time), sharded across cores by
+//! [`util::pool`]. Repeated prediction is allocation- and restage-free
+//! end to end: models cache their staged kernels (invalidated on `fit`),
+//! feature rows are emitted into flat matrices reused per worker
+//! ([`util::pool::with_scratch`]), and every batch path is bit-identical
+//! to its scalar oracle except the kNN norm tier, which is within 1e-9
+//! relative (its large-n speedup comes from re-associating the distance
+//! arithmetic; the selected winners are still re-scored exactly).
 //! The AOT/XLA shape contract from `python/compile/` is still enforced at
 //! staging time ([`runtime::shapes`]) so a PJRT backend can be swapped
 //! back in behind the same executable API; Python never runs on the

@@ -14,19 +14,34 @@
 //!   the whole block, and the 32 independent descent chains per block give
 //!   the CPU memory-level parallelism a single pointer chase cannot.
 //! * [`BatchKnn`] — the scaled training matrix flattened into one
-//!   contiguous row-major buffer; distances are computed row-outer /
-//!   query-inner so each training row is loaded once per query block, and
-//!   top-k selection uses `select_nth_unstable_by` (O(n)) instead of a
-//!   maintained sorted list.
+//!   contiguous row-major buffer, staged into one of three execution
+//!   *tiers* picked by a data-driven cutover policy ([`knn_tier`]):
+//!   `Direct` (blocked `(a-b)²` accumulation, bit-exact), `Norm` (the
+//!   `|x|² − 2x·q + |q|²` expansion with cached training-row norms and an
+//!   unrolled dot-product core — the default large-n path), and `Tree`
+//!   (an opt-in KD-tree built at staging time for very large, low-d
+//!   training sets). Top-k selection uses `select_nth_unstable_by` (O(n))
+//!   in the scan tiers and a pruned descent in the tree tier.
 //!
-//! **Exactness contract:** both kernels reproduce the scalar paths
-//! *bit-for-bit* (asserted by `rust/tests/batch_parity.rs`). That rules
-//! out the classic `|x|² - 2x·q + |q|²` norm expansion for kNN (different
-//! floating-point rounding) — the speedup comes from memory layout,
-//! blocking, selection, and threading, not from re-associating arithmetic.
-//! Ties in kNN selection are broken by training-row index, which is
-//! provably the same neighbour set and ordering the scalar insertion path
-//! produces.
+//! **Exactness contract:** the forest kernel and the kNN `Direct` and
+//! `Tree` tiers reproduce the scalar paths *bit-for-bit* (asserted by
+//! `rust/tests/batch_parity.rs`; the tree computes each candidate's
+//! distance with the oracle's accumulation order and prunes only on
+//! strict bound violations, so even index tie-breaking is identical).
+//! The `Norm` tier re-associates arithmetic for speed — it ranks by the
+//! norm expansion, then *re-computes the winners' distances exactly*
+//! before weighting, so predictions stay within 1e-9 relative of the
+//! oracle on continuous data (`rust/tests/knn_tiers.rs`). The one
+//! residual divergence is which member of a near-tie at the k-boundary
+//! made the cut: distinct rows within ~1e-13 relative distance of each
+//! other can swap membership, and the prediction then moves by that
+//! pair's weight share times their *target* gap — not by 1e-9 of
+//! arithmetic. Exact training hits and ulp-level duplicate collisions
+//! are excluded from that caveat: expansions that cancel to exactly
+//! zero are widened to exact re-scoring, so they always resolve like
+//! the oracle. Ties in kNN selection are broken by training-row index
+//! in every tier, which is provably the same neighbour set and ordering
+//! the scalar insertion path produces.
 //!
 //! Queries arrive as a flat row-major [`FeatureMatrix`] — the same layout
 //! the kernels block over internally, so the sweep path never materializes
@@ -70,6 +85,76 @@ const PAR_MIN: usize = 128;
 /// takes the staged path for free.
 pub fn stage_cutover(n_train: usize) -> usize {
     (n_train / 256).clamp(2, 64)
+}
+
+/// Training rows below which the norm-expansion tier cannot recoup its
+/// extra selection pass (see [`knn_tier`]).
+const NORM_MIN_TRAIN: usize = 1024;
+
+/// Minimum per-query distance work (`n_train × d`) before the
+/// norm-expansion tier wins over the bit-exact direct scan.
+const NORM_MIN_WORK: usize = 32 * 1024;
+
+/// Training rows below which a KD-tree cannot beat the blocked scans
+/// (descent overhead dominates).
+const TREE_MIN_TRAIN: usize = 4096;
+
+/// Dimensionality ceiling for the KD-tree tier — pruning collapses in
+/// high dimensions (every subtree's bound overlaps the k-th best), so
+/// past this width the scan tiers stay faster.
+const TREE_MAX_DIM: usize = 12;
+
+/// KD-tree leaf size (rows scanned exhaustively per reached leaf).
+const KDTREE_LEAF: usize = 16;
+
+/// Which kNN execution path a staged [`BatchKnn`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnnTier {
+    /// Blocked `(a-b)²` scan — bit-exact vs `Knn::predict_one`.
+    Direct,
+    /// `|x|² − 2x·q + |q|²` with cached training norms; winners'
+    /// distances are re-computed exactly, predictions within 1e-9
+    /// relative of the oracle.
+    Norm,
+    /// KD-tree descent (opt-in, staged for very large low-d training
+    /// sets) — bit-exact vs `Knn::predict_one`.
+    Tree,
+}
+
+/// Data-driven tier cutover for the kNN engine, the staging-time
+/// companion of [`stage_cutover`] (which decides *whether* to stage;
+/// this decides *what* to stage).
+///
+/// ```text
+///                 BatchKnn staging (from_model)
+///                             │
+///            spatial index opted in on the model
+///            AND n ≥ 4096 AND d ≤ 12 ?          (pruning needs low d)
+///                  │ yes              │ no
+///                  ▼                  ▼
+///             ┌────────┐   n ≥ 1024 AND n·d ≥ 32768 ?
+///             │  TREE  │        │ yes           │ no
+///             └────────┘        ▼               ▼
+///                          ┌────────┐     ┌──────────┐
+///                          │  NORM  │     │  DIRECT  │
+///                          └────────┘     └──────────┘
+/// ```
+///
+/// `Direct` keeps small models bit-exact for free (its blocked scan is
+/// already within noise of the norm path there); `Norm` needs enough
+/// per-query work for the re-association win to dominate its extra
+/// exact re-computation of the k winners; `Tree` must be opted in on
+/// the model ([`Knn::with_spatial_index`]) because its win is
+/// workload-shaped: large n, low d, and queries off the training
+/// manifold degrade it to a scan with descent overhead.
+pub fn knn_tier(n_train: usize, d: usize, spatial_index: bool) -> KnnTier {
+    if spatial_index && n_train >= TREE_MIN_TRAIN && d <= TREE_MAX_DIM && d > 0 {
+        KnnTier::Tree
+    } else if n_train >= NORM_MIN_TRAIN && n_train * d >= NORM_MIN_WORK {
+        KnnTier::Norm
+    } else {
+        KnnTier::Direct
+    }
 }
 
 /// A trained random forest staged in flat SoA form for batched descent.
@@ -279,9 +364,241 @@ impl ForestTensor {
     }
 }
 
+/// Lexicographic `(d², training-row index)` — the neighbour order (and
+/// the tie break toward earlier training rows) of the scalar insertion
+/// path. Every tier selects and sorts under this comparator.
+fn cmp_d2_idx(a: &(f64, u32), b: &(f64, u32)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+}
+
+/// Squared Euclidean distance in the scalar oracle's exact accumulation
+/// order (serial left-to-right over features, zip-truncated). Every
+/// bit-exact guarantee in this module — the `Direct` kernel, the KD-tree
+/// leaf scan, the `Norm` tier's exact re-score and its exact-hit
+/// short-circuit — depends on all call sites using precisely this loop.
+/// Do NOT vectorize, unroll, or re-associate it; that is what
+/// [`dot_unrolled`] is for.
+#[inline]
+fn d2_exact(a: &[f64], b: &[f64]) -> f64 {
+    let mut d2 = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let diff = x - y;
+        d2 += diff * diff;
+    }
+    d2
+}
+
+/// Dot product with four independent accumulators — breaks the serial
+/// FP dependency chain the bit-exact direct kernel must keep, which is
+/// where the norm tier's throughput comes from. Deterministic (fixed
+/// association), but NOT the scalar oracle's accumulation order: norm
+/// tier only. Training norms and query norms are summed by this same
+/// function so an exact training hit cancels `|x|² − 2x·q + |q|²` to
+/// exactly zero.
+#[inline]
+fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Insert a candidate into the sorted k-best list (ascending under
+/// [`cmp_d2_idx`]), dropping the current worst when full.
+fn insert_best(best: &mut Vec<(f64, u32)>, k: usize, cand: (f64, u32)) {
+    if best.len() == k {
+        if cmp_d2_idx(&cand, &best[k - 1]) != std::cmp::Ordering::Less {
+            return;
+        }
+        best.pop();
+    }
+    let pos = best.partition_point(|e| cmp_d2_idx(e, &cand) == std::cmp::Ordering::Less);
+    best.insert(pos, cand);
+}
+
+/// Axis marker for KD-tree leaf nodes.
+const KD_LEAF: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+struct KdNode {
+    /// Split axis, or [`KD_LEAF`].
+    axis: u32,
+    split: f64,
+    /// Child node ids; for a leaf, the `lo..hi` re-ordered row range.
+    a: u32,
+    b: u32,
+}
+
+/// An exact KD-tree over the scaled training matrix (the `Tree` tier),
+/// built once at staging time.
+///
+/// Points are re-ordered into contiguous per-leaf storage (`pts`) so leaf
+/// scans stream sequentially; `orig` maps re-ordered rows back to
+/// training-row indices so tie-breaking matches the exhaustive scan.
+/// Candidate distances use the scalar oracle's accumulation order, and a
+/// subtree is pruned only when its minimum possible axis distance
+/// *strictly* exceeds the current k-th best, so the returned neighbour
+/// set — including `(d², row)` tie-breaks — is identical to the direct
+/// kernel's.
+#[derive(Debug, Clone)]
+struct KdTree {
+    nodes: Vec<KdNode>,
+    /// Re-ordered row-major point storage (leaf ranges are contiguous).
+    pts: Vec<f64>,
+    /// Original training-row index of each re-ordered row.
+    orig: Vec<u32>,
+    root: u32,
+}
+
+impl KdTree {
+    /// Build over `n` rows of width `d` (median split on the
+    /// widest-spread axis, leaf size [`KDTREE_LEAF`]). O(n log n · d).
+    fn build(flat: &[f64], n: usize, d: usize) -> KdTree {
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut nodes = Vec::with_capacity(2 * n.div_ceil(KDTREE_LEAF));
+        let root = Self::build_rec(flat, d, &mut order, 0, &mut nodes);
+        let mut pts = Vec::with_capacity(n * d);
+        for &i in &order {
+            pts.extend_from_slice(&flat[i as usize * d..(i as usize + 1) * d]);
+        }
+        KdTree {
+            nodes,
+            pts,
+            orig: order,
+            root,
+        }
+    }
+
+    fn build_rec(
+        flat: &[f64],
+        d: usize,
+        idxs: &mut [u32],
+        offset: usize,
+        nodes: &mut Vec<KdNode>,
+    ) -> u32 {
+        if idxs.len() <= KDTREE_LEAF {
+            nodes.push(KdNode {
+                axis: KD_LEAF,
+                split: 0.0,
+                a: offset as u32,
+                b: (offset + idxs.len()) as u32,
+            });
+            return (nodes.len() - 1) as u32;
+        }
+        // Widest-spread axis over this subset.
+        let mut axis = 0usize;
+        let mut spread = -1.0f64;
+        for ax in 0..d {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for &i in idxs.iter() {
+                let v = flat[i as usize * d + ax];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if hi - lo > spread {
+                spread = hi - lo;
+                axis = ax;
+            }
+        }
+        // Median split; the (coordinate, row-index) order makes the
+        // partition total, so left ≤ split ≤ right holds even under
+        // duplicate coordinates.
+        let mid = idxs.len() / 2;
+        idxs.select_nth_unstable_by(mid, |&i, &j| {
+            flat[i as usize * d + axis]
+                .partial_cmp(&flat[j as usize * d + axis])
+                .unwrap()
+                .then(i.cmp(&j))
+        });
+        let split = flat[idxs[mid] as usize * d + axis];
+        let slot = nodes.len();
+        // Placeholder; patched once both children exist.
+        nodes.push(KdNode {
+            axis: KD_LEAF,
+            split: 0.0,
+            a: 0,
+            b: 0,
+        });
+        let (l, r) = idxs.split_at_mut(mid);
+        let a = Self::build_rec(flat, d, l, offset, nodes);
+        let b = Self::build_rec(flat, d, r, offset + mid, nodes);
+        nodes[slot] = KdNode {
+            axis: axis as u32,
+            split,
+            a,
+            b,
+        };
+        slot as u32
+    }
+
+    /// Fill `best` with the k nearest `(d², original row)` of the scaled
+    /// query `q`, sorted ascending under [`cmp_d2_idx`].
+    fn query(&self, d: usize, q: &[f64], k: usize, best: &mut Vec<(f64, u32)>) {
+        best.clear();
+        if self.pts.is_empty() || k == 0 {
+            return;
+        }
+        self.search(self.root, d, q, k, best);
+    }
+
+    fn search(&self, id: u32, d: usize, q: &[f64], k: usize, best: &mut Vec<(f64, u32)>) {
+        let node = &self.nodes[id as usize];
+        if node.axis == KD_LEAF {
+            for r in node.a as usize..node.b as usize {
+                let row = &self.pts[r * d..(r + 1) * d];
+                insert_best(best, k, (d2_exact(row, q), self.orig[r]));
+            }
+            return;
+        }
+        let qa = q[node.axis as usize];
+        let (near, far) = if qa <= node.split {
+            (node.a, node.b)
+        } else {
+            (node.b, node.a)
+        };
+        self.search(near, d, q, k, best);
+        // Visit the far side unless its closest possible point is
+        // *strictly* worse than the current k-th best: `<=` keeps
+        // equal-distance candidates reachable, so index tie-breaking
+        // matches the exhaustive scan.
+        let gap = qa - node.split;
+        if best.len() < k || gap * gap <= best[best.len() - 1].0 {
+            self.search(far, d, q, k, best);
+        }
+    }
+}
+
+/// Per-worker scratch for the kNN kernels, recycled through
+/// [`pool::with_scratch`]: one set of block buffers per worker thread
+/// (and per serving thread) instead of one per `predict_*` call.
+#[derive(Default)]
+struct KnnScratch {
+    /// Z-scored query block (`bl × width`).
+    scaled: Vec<f64>,
+    /// Distance block (`bl × n_train`).
+    dist: Vec<f64>,
+    /// Cached query norms `|q|²` (norm tier, `bl`).
+    qnorm: Vec<f64>,
+    /// Selection buffer: `(d², training row)` pairs.
+    order: Vec<(f64, u32)>,
+}
+
 /// A trained kNN model staged for batched querying: contiguous row-major
-/// scaled training matrix + targets. `predict_many` bit-matches
-/// `Knn::predict_one` per row.
+/// scaled training matrix + targets, executed by the tier [`knn_tier`]
+/// selected at staging time (`Direct`/`Tree` bit-match
+/// `Knn::predict_one` per row; `Norm` is within 1e-9 relative — see the
+/// module docs for the exactness contract).
 #[derive(Debug, Clone)]
 pub struct BatchKnn {
     k: usize,
@@ -291,19 +608,46 @@ pub struct BatchKnn {
     x: Vec<f64>,
     y: Vec<f64>,
     scaler: Scaler,
+    tier: KnnTier,
+    /// Cached `|x|²` per training row (norm tier) — summed by
+    /// [`dot_unrolled`], the same kernel as the query dots, so an exact
+    /// training hit cancels to exactly zero.
+    norms: Vec<f64>,
+    /// Spatial index (tree tier), built once at staging time.
+    tree: Option<KdTree>,
 }
 
 impl BatchKnn {
-    /// Stage a fitted model (flattens the training matrix once).
+    /// Stage a fitted model (flattens the training matrix once) on the
+    /// tier the cutover policy selects for its size, width and
+    /// spatial-index opt-in.
     pub fn from_model(model: &Knn) -> BatchKnn {
+        let (x, _) = model.train_matrix();
+        let n = x.len();
+        let d = if n > 0 { x[0].len() } else { 0 };
+        Self::from_model_with_tier(model, knn_tier(n, d, model.spatial_index()))
+    }
+
+    /// Stage a fitted model on an explicit tier, bypassing [`knn_tier`]
+    /// — the A/B entry point for `benches/hotpath.rs` and the parity
+    /// suites. Degenerate models (no rows or no features) always stage
+    /// `Direct`.
+    pub fn from_model_with_tier(model: &Knn, tier: KnnTier) -> BatchKnn {
         let (x, y) = model.train_matrix();
         let n = x.len();
         let d = if n > 0 { x[0].len() } else { 0 };
+        let tier = if n == 0 || d == 0 { KnnTier::Direct } else { tier };
         let mut flat = Vec::with_capacity(n * d);
         for row in x {
             debug_assert_eq!(row.len(), d);
             flat.extend_from_slice(row);
         }
+        let norms = if tier == KnnTier::Norm {
+            flat.chunks_exact(d).map(|r| dot_unrolled(r, r)).collect()
+        } else {
+            Vec::new()
+        };
+        let tree = (tier == KnnTier::Tree).then(|| KdTree::build(&flat, n, d));
         BatchKnn {
             k: model.k,
             weighted: model.weighted,
@@ -312,7 +656,15 @@ impl BatchKnn {
             x: flat,
             y: y.to_vec(),
             scaler: model.scaler().clone(),
+            tier,
+            norms,
+            tree,
         }
+    }
+
+    /// The execution tier this staged form runs.
+    pub fn tier(&self) -> KnnTier {
+        self.tier
     }
 
     pub fn n_train_rows(&self) -> usize {
@@ -361,48 +713,129 @@ impl BatchKnn {
         self.predict_rows(m.data(), m.width())
     }
 
-    /// The serial blocked kernel over a flat `rows × width` slice.
+    /// The serial kernel over a flat `rows × width` slice: dispatch to
+    /// the staged tier. Tiers that re-associate arithmetic or descend an
+    /// index require the query width to match the training width; a
+    /// mismatch falls back to the bit-exact direct scan, whose
+    /// zip-truncation semantics are the scalar oracle's.
     fn predict_rows(&self, data: &[f64], width: usize) -> Vec<f64> {
+        match self.tier {
+            KnnTier::Norm if width == self.d => self.predict_rows_norm(data, width),
+            KnnTier::Tree if width == self.d && self.tree.is_some() => {
+                self.predict_rows_tree(data, width)
+            }
+            _ => self.predict_rows_direct(data, width),
+        }
+    }
+
+    /// The bit-exact blocked `(a-b)²` kernel (the `Direct` tier, and the
+    /// oracle every other tier is tested against).
+    fn predict_rows_direct(&self, data: &[f64], width: usize) -> Vec<f64> {
         let n = self.n;
         let n_rows = data.len() / width;
         let mut out = Vec::with_capacity(n_rows);
-        // Scratch sized for the actual batch: small batches (single-row
-        // coordinator flushes) shouldn't zero a full 16-row block.
-        let block_cap = KNN_BLOCK.min(n_rows);
-        let mut dist = vec![0f64; block_cap * n];
-        let mut scaled = vec![0f64; block_cap * width];
-        let mut order: Vec<(f64, u32)> = Vec::with_capacity(n);
-        let mut row0 = 0usize;
-        while row0 < n_rows {
-            let bl = KNN_BLOCK.min(n_rows - row0);
-            for b in 0..bl {
-                let q = &data[(row0 + b) * width..(row0 + b + 1) * width];
-                self.scaler
-                    .transform_into(q, &mut scaled[b * width..(b + 1) * width]);
-            }
-            // Row-outer / query-inner: each training row is streamed once
-            // per block and reused from L1 across `bl` queries. The inner
-            // feature loop matches the scalar accumulation order exactly.
-            for (r, xrow) in self.x.chunks_exact(self.d.max(1)).enumerate() {
+        pool::with_scratch(|s: &mut KnnScratch| {
+            // Scratch sized for the actual batch: small batches
+            // (single-row coordinator flushes) shouldn't zero a full
+            // 16-row block.
+            let block_cap = KNN_BLOCK.min(n_rows);
+            s.dist.resize(block_cap * n, 0.0);
+            s.scaled.resize(block_cap * width, 0.0);
+            let mut row0 = 0usize;
+            while row0 < n_rows {
+                let bl = KNN_BLOCK.min(n_rows - row0);
                 for b in 0..bl {
-                    let q = &scaled[b * width..(b + 1) * width];
-                    let mut d2 = 0.0;
-                    for (a, v) in xrow.iter().zip(q.iter()) {
-                        let diff = a - v;
-                        d2 += diff * diff;
-                    }
-                    dist[b * n + r] = d2;
+                    let q = &data[(row0 + b) * width..(row0 + b + 1) * width];
+                    self.scaler
+                        .transform_into(q, &mut s.scaled[b * width..(b + 1) * width]);
                 }
+                // Row-outer / query-inner: each training row is streamed
+                // once per block and reused from L1 across `bl` queries.
+                // The inner feature loop matches the scalar accumulation
+                // order exactly.
+                for (r, xrow) in self.x.chunks_exact(self.d.max(1)).enumerate() {
+                    for b in 0..bl {
+                        let q = &s.scaled[b * width..(b + 1) * width];
+                        s.dist[b * n + r] = d2_exact(xrow, q);
+                    }
+                }
+                for b in 0..bl {
+                    out.push(self.reduce(&s.dist[b * n..b * n + n], &mut s.order));
+                }
+                row0 += bl;
             }
-            for b in 0..bl {
-                out.push(self.reduce(&dist[b * n..b * n + n], &mut order));
-            }
-            row0 += bl;
-        }
+        });
         out
     }
 
-    /// Top-k selection + the scalar path's exact weighting arithmetic.
+    /// The norm-expansion kernel (the `Norm` tier): distances ranked via
+    /// `|x|² − 2x·q + |q|²` with cached training norms and the unrolled
+    /// dot core, winners re-computed exactly before weighting.
+    fn predict_rows_norm(&self, data: &[f64], width: usize) -> Vec<f64> {
+        let n = self.n;
+        let d = self.d;
+        let n_rows = data.len() / width;
+        let mut out = Vec::with_capacity(n_rows);
+        pool::with_scratch(|s: &mut KnnScratch| {
+            let block_cap = KNN_BLOCK.min(n_rows);
+            s.dist.resize(block_cap * n, 0.0);
+            s.scaled.resize(block_cap * width, 0.0);
+            s.qnorm.resize(block_cap, 0.0);
+            let mut row0 = 0usize;
+            while row0 < n_rows {
+                let bl = KNN_BLOCK.min(n_rows - row0);
+                for b in 0..bl {
+                    let q = &data[(row0 + b) * width..(row0 + b + 1) * width];
+                    self.scaler
+                        .transform_into(q, &mut s.scaled[b * width..(b + 1) * width]);
+                }
+                for b in 0..bl {
+                    let q = &s.scaled[b * width..(b + 1) * width];
+                    s.qnorm[b] = dot_unrolled(q, q);
+                }
+                // Row-outer / query-inner like the direct kernel, but the
+                // inner product runs on four independent accumulators —
+                // the re-association the bit-exact tier cannot do.
+                for (r, xrow) in self.x.chunks_exact(d).enumerate() {
+                    let xn = self.norms[r];
+                    for b in 0..bl {
+                        let q = &s.scaled[b * width..(b + 1) * width];
+                        let dot = dot_unrolled(xrow, q);
+                        // Cancellation can dip a few ulps below zero for
+                        // near-duplicates; distances are non-negative.
+                        s.dist[b * n + r] = (xn - 2.0 * dot + s.qnorm[b]).max(0.0);
+                    }
+                }
+                for b in 0..bl {
+                    let q = &s.scaled[b * width..(b + 1) * width];
+                    out.push(self.reduce_norm(&s.dist[b * n..b * n + n], q, &mut s.order));
+                }
+                row0 += bl;
+            }
+        });
+        out
+    }
+
+    /// The KD-tree kernel (the `Tree` tier): per-query pruned descent,
+    /// bit-exact selection and weighting.
+    fn predict_rows_tree(&self, data: &[f64], width: usize) -> Vec<f64> {
+        let tree = self.tree.as_ref().expect("tree tier staged without index");
+        let n_rows = data.len() / width;
+        let k = self.k.min(self.n).max(1);
+        let mut out = Vec::with_capacity(n_rows);
+        pool::with_scratch(|s: &mut KnnScratch| {
+            s.scaled.resize(width, 0.0);
+            for q in data.chunks_exact(width) {
+                self.scaler.transform_into(q, &mut s.scaled[..width]);
+                tree.query(self.d, &s.scaled[..width], k, &mut s.order);
+                out.push(self.weigh(&s.order));
+            }
+        });
+        out
+    }
+
+    /// Top-k selection over exact distances + the scalar weighting
+    /// arithmetic (`Direct` tier reduction).
     fn reduce(&self, d2s: &[f64], order: &mut Vec<(f64, u32)>) -> f64 {
         let n = d2s.len();
         if n == 0 {
@@ -411,18 +844,64 @@ impl BatchKnn {
         let k = self.k.min(n).max(1);
         order.clear();
         order.extend(d2s.iter().enumerate().map(|(i, &d2)| (d2, i as u32)));
-        // Lexicographic (d², row index): the same neighbour set — and the
-        // same tie-breaking toward earlier training rows — as the scalar
-        // insertion path.
-        let cmp = |a: &(f64, u32), b: &(f64, u32)| {
-            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
-        };
         if k < n {
-            order.select_nth_unstable_by(k - 1, cmp);
+            order.select_nth_unstable_by(k - 1, cmp_d2_idx);
         }
         let top = &mut order[..k];
-        top.sort_unstable_by(cmp);
+        top.sort_unstable_by(cmp_d2_idx);
+        self.weigh(top)
+    }
 
+    /// `Norm`-tier reduction: top-k by the norm-expansion distances, then
+    /// *exact* re-computation of the winners' distances with the scalar
+    /// accumulation order — the weighting arithmetic only ever sees
+    /// oracle-grade d² values, so the only tolerance left is which
+    /// near-tied neighbour made the cut.
+    fn reduce_norm(&self, d2s: &[f64], q: &[f64], order: &mut Vec<(f64, u32)>) -> f64 {
+        let n = d2s.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let k = self.k.min(n).max(1);
+        order.clear();
+        order.extend(d2s.iter().enumerate().map(|(i, &d2)| (d2, i as u32)));
+        if k < n {
+            order.select_nth_unstable_by(k - 1, cmp_d2_idx);
+        }
+        order.truncate(k);
+        // Clamp collisions: every expansion that cancelled to exactly 0.0
+        // (the query within rounding of that training row) is
+        // indistinguishable to the approximate ranking, so the (0.0, idx)
+        // tie-break could pick a near-duplicate over the true nearest row
+        // — and their targets may differ. If any was selected, widen the
+        // exact re-scoring pool to *all* of them: membership among
+        // clamp-collided rows is then decided by exact distance, so exact
+        // hits short-circuit to the right target even among ulp-level
+        // near-duplicates.
+        if order.iter().any(|e| e.0 == 0.0) {
+            order.retain(|e| e.0 != 0.0);
+            order.extend(
+                d2s.iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| v == 0.0)
+                    .map(|(i, _)| (0.0, i as u32)),
+            );
+        }
+        for e in order.iter_mut() {
+            let r = e.1 as usize;
+            e.0 = d2_exact(&self.x[r * self.d..(r + 1) * self.d], q);
+        }
+        order.sort_unstable_by(cmp_d2_idx);
+        order.truncate(k);
+        self.weigh(&order[..])
+    }
+
+    /// The scalar path's exact weighting arithmetic over a sorted
+    /// neighbour list (shared by every tier).
+    fn weigh(&self, top: &[(f64, u32)]) -> f64 {
+        if top.is_empty() {
+            return 0.0;
+        }
         if self.weighted {
             let mut wsum = 0.0;
             let mut vsum = 0.0;
@@ -584,6 +1063,179 @@ mod tests {
         m.fit(&x, &y);
         let b = BatchKnn::from_model(&m).predict_many(&[vec![0.5]]);
         assert_eq!(b[0], m.predict_one(&[0.5]));
+    }
+
+    #[test]
+    fn tier_policy_cutovers() {
+        // Small models stay on the bit-exact direct scan.
+        assert_eq!(knn_tier(500, 5, false), KnnTier::Direct);
+        assert_eq!(knn_tier(700, 64, false), KnnTier::Direct); // n too small
+        assert_eq!(knn_tier(2000, 8, false), KnnTier::Direct); // n·d too small
+        // Enough rows AND enough per-query work → norm expansion.
+        assert_eq!(knn_tier(2048, 16, false), KnnTier::Norm);
+        assert_eq!(knn_tier(4096, 35, false), KnnTier::Norm);
+        // The KD-tree requires the opt-in, very large n, and low d.
+        assert_eq!(knn_tier(8192, 8, false), KnnTier::Norm);
+        assert_eq!(knn_tier(8192, 8, true), KnnTier::Tree);
+        assert_eq!(knn_tier(2048, 8, true), KnnTier::Direct); // n too small for tree, n·d too small for norm
+        assert_eq!(knn_tier(8192, 64, true), KnnTier::Norm); // d too high for tree
+        assert_eq!(knn_tier(0, 0, true), KnnTier::Direct);
+    }
+
+    #[test]
+    fn default_staging_keeps_small_models_bit_exact() {
+        let mut rng = Rng::new(9);
+        let (x, y) = data(&mut rng, 300, 6);
+        let mut m = Knn::new(3);
+        m.fit(&x, &y);
+        assert_eq!(BatchKnn::from_model(&m).tier(), KnnTier::Direct);
+    }
+
+    #[test]
+    fn norm_tier_within_tolerance_of_scalar() {
+        let mut rng = Rng::new(201);
+        let (x, y) = data(&mut rng, 400, 7);
+        for model in [Knn::new(4), Knn::uniform(6)] {
+            let mut m = model;
+            m.fit(&x, &y);
+            let mut qs: Vec<Vec<f64>> = (0..80)
+                .map(|_| (0..7).map(|_| rng.f64() * 4.0).collect())
+                .collect();
+            qs.extend(x.iter().take(10).cloned()); // exact hits
+            let norm = BatchKnn::from_model_with_tier(&m, KnnTier::Norm);
+            assert_eq!(norm.tier(), KnnTier::Norm);
+            let preds = norm.predict_many(&qs);
+            for (q, p) in qs.iter().zip(&preds) {
+                let oracle = m.predict_one(q);
+                let rel = (p - oracle).abs() / oracle.abs().max(1e-12);
+                assert!(rel <= 1e-9, "q={q:?} p={p} oracle={oracle} rel={rel:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn norm_tier_exact_training_hit_short_circuits() {
+        // An exact training hit must return its own target *exactly*:
+        // the norm expansion cancels to 0 (norms and dots share one
+        // summation kernel), and the winners' distances are re-computed
+        // exactly before weighting.
+        let mut rng = Rng::new(77);
+        let (x, y) = data(&mut rng, 200, 5);
+        let mut m = Knn::new(3);
+        m.fit(&x, &y);
+        let norm = BatchKnn::from_model_with_tier(&m, KnnTier::Norm);
+        let qs: Vec<Vec<f64>> = x.iter().take(30).cloned().collect();
+        let preds = norm.predict_many(&qs);
+        for (i, p) in preds.iter().enumerate() {
+            assert_eq!(*p, y[i], "row {i} did not short-circuit to its target");
+        }
+    }
+
+    #[test]
+    fn norm_tier_near_duplicate_rows_with_divergent_targets() {
+        // Adversarial clamp-collision case: two training rows one ulp
+        // apart carry very different targets, and the query lands exactly
+        // on one of them. The approximate ranking may clamp both
+        // expansions to exactly 0.0 (indistinguishable), so selection
+        // alone would tie-break by index; the widened exact re-scoring
+        // pool must hand the short-circuit to the true hit, matching the
+        // scalar oracle on both rows of the pair.
+        let x = vec![
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![5.0, 5.0, 5.0, 5.0],
+            vec![9.0, 1.0, 4.0, 2.0],
+            vec![2.0, 7.0, 1.0, 3.0],
+            vec![2.0, 7.0, 1.0 + f64::EPSILON, 3.0], // near-dup of row 3
+        ];
+        let y = vec![1.0, 2.0, 3.0, 10.0, 1000.0];
+        for k in [1usize, 2] {
+            let mut m = Knn::new(k);
+            m.fit(&x, &y);
+            let norm = BatchKnn::from_model_with_tier(&m, KnnTier::Norm);
+            for q in [&x[3], &x[4]] {
+                let p = norm.predict_many(std::slice::from_ref(q));
+                assert_eq!(p[0], m.predict_one(q), "k={k} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_tier_bitmatches_direct_and_scalar() {
+        let mut rng = Rng::new(303);
+        let (x, y) = data(&mut rng, 500, 4);
+        for model in [Knn::new(3), Knn::new(7), Knn::uniform(5)] {
+            let mut m = model;
+            m.fit(&x, &y);
+            let mut qs: Vec<Vec<f64>> = (0..120)
+                .map(|_| (0..4).map(|_| rng.f64() * 4.0).collect())
+                .collect();
+            qs.extend(x.iter().take(15).cloned()); // exact hits + near-dups
+            let tree = BatchKnn::from_model_with_tier(&m, KnnTier::Tree);
+            assert_eq!(tree.tier(), KnnTier::Tree);
+            let direct = BatchKnn::from_model_with_tier(&m, KnnTier::Direct);
+            let tp = tree.predict_many(&qs);
+            let dp = direct.predict_many(&qs);
+            for (i, q) in qs.iter().enumerate() {
+                assert_eq!(tp[i], dp[i], "{}: tree != direct at row {i}", m.name());
+                assert_eq!(tp[i], m.predict_one(q), "{}: tree != scalar at row {i}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tree_tier_duplicate_rows_and_k_overflow() {
+        // Duplicated training rows force (d², idx) tie-breaks through the
+        // tree's pruned descent; k > n exercises the clamp.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..40 {
+            let row = vec![(i / 2) as f64, ((i * 3) % 7) as f64];
+            x.push(row.clone());
+            x.push(row); // duplicate
+            y.push(i as f64);
+            y.push(i as f64 + 100.0);
+        }
+        for k in [1usize, 3, 200] {
+            let mut m = Knn::uniform(k);
+            m.fit(&x, &y);
+            let tree = BatchKnn::from_model_with_tier(&m, KnnTier::Tree);
+            let qs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64 * 0.7, 1.3]).collect();
+            let tp = tree.predict_many(&qs);
+            for (i, q) in qs.iter().enumerate() {
+                assert_eq!(tp[i], m.predict_one(q), "k={k} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn spatial_index_opt_in_threads_through_model_staging() {
+        // Policy path (not forced tier): a large low-d model with the
+        // opt-in stages the tree; without it, the norm path.
+        let mut rng = Rng::new(41);
+        let (x, y) = data(&mut rng, TREE_MIN_TRAIN, 8);
+        let mut plain = Knn::new(3);
+        plain.fit(&x, &y);
+        assert_eq!(plain.staged().tier(), KnnTier::Norm);
+
+        let mut indexed = Knn::new(3).with_spatial_index(true);
+        indexed.fit(&x, &y);
+        assert!(indexed.spatial_index());
+        assert_eq!(indexed.staged().tier(), KnnTier::Tree);
+
+        // Toggling the index invalidates the staged cache like a refit.
+        let before = indexed.staged().clone();
+        indexed.set_spatial_index(false);
+        assert_eq!(indexed.staged().tier(), KnnTier::Norm);
+        assert!(!std::sync::Arc::ptr_eq(&before, indexed.staged()));
+
+        // Tree predictions agree with the scalar oracle on live queries.
+        let qs: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..8).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        let tp = before.predict_many(&qs);
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(tp[i], plain.predict_one(q), "row {i}");
+        }
     }
 
     #[test]

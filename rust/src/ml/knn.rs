@@ -17,19 +17,36 @@ use crate::ml::batch::{self, BatchKnn};
 use crate::ml::dataset::Scaler;
 use crate::ml::matrix::FeatureMatrix;
 use crate::ml::regressor::Regressor;
+use crate::util::pool;
+
+/// Per-worker scratch for the scalar oracle path: the z-scored query and
+/// the k-best list used to be fresh `Vec`s per query; `predict_one`
+/// loops (CV folds, small first batches, parity oracles) now recycle
+/// them through [`pool::with_scratch`].
+#[derive(Default)]
+struct ScalarScratch {
+    scaled: Vec<f64>,
+    best: Vec<(f64, f64)>,
+}
 
 /// KNN regressor.
 ///
 /// After `fit`, the model lazily caches its staged batch form
-/// ([`BatchKnn`], the flattened O(n_train × d) training matrix) so
-/// repeated `predict` calls and re-staging layers never pay the copy
-/// again; `fit` invalidates the cache. Cloning shares the cached staged
-/// form (it is immutable once built).
+/// ([`BatchKnn`], the flattened O(n_train × d) training matrix staged on
+/// the execution tier [`batch::knn_tier`] picks — direct scan, norm
+/// expansion, or the opt-in KD-tree) so repeated `predict` calls and
+/// re-staging layers never pay the copy again; `fit` (and toggling
+/// [`Knn::set_spatial_index`]) invalidates the cache. Cloning shares the
+/// cached staged form (it is immutable once built).
 #[derive(Debug, Clone)]
 pub struct Knn {
     pub k: usize,
     /// Inverse-distance weighting (vs uniform).
     pub weighted: bool,
+    /// Opt-in to the KD-tree tier at staging time (the cutover policy
+    /// still requires the training set to qualify — see
+    /// [`batch::knn_tier`]).
+    spatial_index: bool,
     scaler: Option<Scaler>,
     x: Vec<Vec<f64>>, // scaled training features
     y: Vec<f64>,
@@ -42,6 +59,7 @@ impl Knn {
         Knn {
             k,
             weighted: true,
+            spatial_index: false,
             scaler: None,
             x: Vec::new(),
             y: Vec::new(),
@@ -54,6 +72,28 @@ impl Knn {
             weighted: false,
             ..Knn::new(k)
         }
+    }
+
+    /// Builder-style [`Knn::set_spatial_index`].
+    pub fn with_spatial_index(mut self, on: bool) -> Knn {
+        self.set_spatial_index(on);
+        self
+    }
+
+    /// Opt in to (or out of) the KD-tree spatial index for very large
+    /// training sets. Takes effect at the next staging: if a staged form
+    /// is already cached it is invalidated, exactly like a refit.
+    pub fn set_spatial_index(&mut self, on: bool) {
+        if self.spatial_index != on {
+            self.spatial_index = on;
+            self.staged = OnceLock::new();
+        }
+    }
+
+    /// Whether the KD-tree tier is opted in (consulted by
+    /// [`batch::knn_tier`] at staging time).
+    pub fn spatial_index(&self) -> bool {
+        self.spatial_index
     }
 
     /// The staged batch form of this fitted model, building and caching
@@ -72,9 +112,11 @@ impl Knn {
         self.scaler.as_ref().expect("Knn::fit not called")
     }
 
-    fn neighbors(&self, q: &[f64]) -> Vec<(f64, f64)> {
-        // (distance², target) of the k nearest.
-        let mut best: Vec<(f64, f64)> = Vec::with_capacity(self.k + 1);
+    /// Fill `best` with the (distance², target) of the k nearest — the
+    /// scalar path's former per-query `Vec` allocation, now a reused
+    /// per-worker buffer.
+    fn neighbors_into(&self, q: &[f64], best: &mut Vec<(f64, f64)>) {
+        best.clear();
         for (row, &target) in self.x.iter().zip(&self.y) {
             let mut d2 = 0.0;
             for (a, b) in row.iter().zip(q) {
@@ -89,7 +131,6 @@ impl Knn {
                 best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
             }
         }
-        best
     }
 }
 
@@ -116,34 +157,44 @@ impl Regressor for Knn {
     }
 
     fn predict_one(&self, q: &[f64]) -> f64 {
-        let qs = self.scaler().transform_row(q);
-        let nn = self.neighbors(&qs);
-        if nn.is_empty() {
-            return 0.0;
-        }
-        if self.weighted {
-            // Inverse-distance weights with an epsilon floor; exact match
-            // short-circuits to that target.
-            let mut wsum = 0.0;
-            let mut vsum = 0.0;
-            for &(d2, t) in &nn {
-                if d2 < 1e-18 {
-                    return t;
-                }
-                let w = 1.0 / d2.sqrt();
-                wsum += w;
-                vsum += w * t;
+        pool::with_scratch(|s: &mut ScalarScratch| {
+            let ScalarScratch { scaled, best } = s;
+            // Z-score into the reused buffer, truncated to the trained
+            // width exactly like `Scaler::transform_row`'s zip would be.
+            let qw = q.len().min(self.scaler().mean.len());
+            scaled.clear();
+            scaled.resize(qw, 0.0);
+            self.scaler().transform_into(q, scaled);
+            self.neighbors_into(scaled, best);
+            if best.is_empty() {
+                return 0.0;
             }
-            vsum / wsum
-        } else {
-            nn.iter().map(|&(_, t)| t).sum::<f64>() / nn.len() as f64
-        }
+            if self.weighted {
+                // Inverse-distance weights with an epsilon floor; exact
+                // match short-circuits to that target.
+                let mut wsum = 0.0;
+                let mut vsum = 0.0;
+                for &(d2, t) in best.iter() {
+                    if d2 < 1e-18 {
+                        return t;
+                    }
+                    let w = 1.0 / d2.sqrt();
+                    wsum += w;
+                    vsum += w * t;
+                }
+                vsum / wsum
+            } else {
+                best.iter().map(|&(_, t)| t).sum::<f64>() / best.len() as f64
+            }
+        })
     }
 
     /// Batched prediction through the *cached* flat-matrix kernel
-    /// ([`BatchKnn`]); bit-identical to mapping [`Knn::predict_one`] over
-    /// the rows. The staged form (an O(n_train × d) flattening) is built
-    /// at most once per fit; only a first-ever batch smaller than
+    /// ([`BatchKnn`]): bit-identical to mapping [`Knn::predict_one`] over
+    /// the rows on the `Direct`/`Tree` tiers, within 1e-9 relative on the
+    /// large-n `Norm` tier ([`batch::knn_tier`]). The staged form (an
+    /// O(n_train × d) flattening, plus the KD-tree when opted in) is
+    /// built at most once per fit; only a first-ever batch smaller than
     /// [`batch::stage_cutover`] takes the scalar path instead of staging.
     fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
         if self.x.is_empty()
@@ -155,7 +206,8 @@ impl Regressor for Knn {
     }
 
     /// Flat-matrix batched prediction through the cached kernel (zero
-    /// per-query allocations); bit-identical to the scalar path.
+    /// per-query allocations); same tier-dependent exactness contract as
+    /// [`Regressor::predict`] above.
     fn predict_matrix(&self, m: &FeatureMatrix) -> Vec<f64> {
         if self.x.is_empty()
             || (self.staged.get().is_none() && m.n_rows() < batch::stage_cutover(self.x.len()))

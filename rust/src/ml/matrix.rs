@@ -116,6 +116,32 @@ impl FeatureMatrix {
     pub fn clear(&mut self) {
         self.data.clear();
     }
+
+    /// Drop all rows *and* set the column count, keeping the allocation —
+    /// the per-worker scratch entry point
+    /// ([`crate::util::pool::with_scratch`]): a worker recycling one
+    /// matrix across scoring chunks calls `reset` instead of constructing
+    /// a fresh matrix per chunk. `width` must be at least 1.
+    pub fn reset(&mut self, width: usize) {
+        assert!(width > 0, "FeatureMatrix width must be >= 1");
+        self.data.clear();
+        self.width = width;
+    }
+
+    /// Reserve storage for at least `rows` additional rows (one amortized
+    /// growth up front instead of several mid-emission).
+    pub fn reserve_rows(&mut self, rows: usize) {
+        self.data.reserve(rows * self.width);
+    }
+}
+
+impl Default for FeatureMatrix {
+    /// An empty one-column matrix — the neutral value scratch reuse
+    /// starts from; call [`FeatureMatrix::reset`] with the real width
+    /// before emitting rows.
+    fn default() -> FeatureMatrix {
+        FeatureMatrix::new(1)
+    }
 }
 
 #[cfg(test)]
@@ -193,5 +219,39 @@ mod tests {
         m.clear();
         assert!(m.is_empty());
         assert_eq!(m.data.capacity(), cap);
+    }
+
+    #[test]
+    fn reset_changes_width_and_keeps_capacity() {
+        let mut m = FeatureMatrix::with_capacity(4, 8);
+        m.push_row(&[1.0, 2.0, 3.0, 4.0]);
+        let cap = m.data.capacity();
+        m.reset(3);
+        assert!(m.is_empty());
+        assert_eq!(m.width(), 3);
+        assert_eq!(m.data.capacity(), cap);
+        m.push_row(&[9.0, 8.0, 7.0]);
+        assert_eq!(m.row(0), &[9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn reserve_rows_preallocates() {
+        let mut m = FeatureMatrix::new(5);
+        m.reserve_rows(10);
+        assert!(m.data.capacity() >= 50);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn default_is_empty_one_column() {
+        let m = FeatureMatrix::default();
+        assert!(m.is_empty());
+        assert_eq!(m.width(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "width must be >= 1")]
+    fn reset_rejects_zero_width() {
+        FeatureMatrix::default().reset(0);
     }
 }

@@ -21,7 +21,7 @@ pub mod regressor;
 pub mod tree;
 pub mod validate;
 
-pub use batch::{BatchForest, BatchKnn};
+pub use batch::{knn_tier, BatchForest, BatchKnn, KnnTier};
 pub use dataset::{Dataset, SampleMeta, Scaler, Target};
 pub use forest::{ForestConfig, ForestTensor, RandomForest};
 pub use knn::Knn;

@@ -13,6 +13,22 @@
 //!   ML-predicted power/cycles for that design point (served through the
 //!   coordinator's batched predictor when one is attached, else the
 //!   simulator).
+//! * `POST /v1/predict/bulk` — body: `{points: [{network, gpu, f_mhz,
+//!   batch}, …]}` → `{results: […]}`: every point's feature row is
+//!   emitted into one flat matrix and the predictor is called twice
+//!   total (power, cycles), not twice per point.
+//!
+//! The ML-predictor path is the REST hot path: feature descriptors come
+//! from a shared [`DescriptorCache`] (the HyPA analysis — by far the
+//! dominant per-request cost before this — runs once per
+//! `(network, batch)`, bounded by [`MAX_REST_BATCH`], not once per
+//! request), rows are emitted straight into one flat [`FeatureMatrix`]
+//! (no per-row feature `Vec`s; a whole bulk request is two
+//! [`Predictor::predict_matrix`] calls on the connection thread). The
+//! matrix comes from [`crate::util::pool::with_scratch`]; note the
+//! server is thread-per-connection, so that scratch amortizes *within*
+//! a request (bulk) — cross-request buffer reuse would need a
+//! persistent connection worker pool.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -21,16 +37,20 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
+use crate::cnn::ir::Network;
 use crate::cnn::zoo;
 use crate::coordinator::{Predictor, Task};
+use crate::dse::DescriptorCache;
 use crate::gpu::specs::by_name;
-use crate::ml::features::NetDescriptor;
+use crate::ml::features::N_FEATURES;
+use crate::ml::matrix::FeatureMatrix;
 use crate::offload::http::{read_request, write_response, Request, Response};
 use crate::offload::model::{
     decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
 };
 use crate::sim::Simulator;
-use crate::util::json::{jnum, jstr, Json};
+use crate::util::json::{jarr, jnum, jstr, Json};
+use crate::util::pool;
 
 /// Server state shared across connection threads.
 pub struct ServerState {
@@ -38,6 +58,10 @@ pub struct ServerState {
     pub sim: Mutex<Simulator>,
     /// Optional ML predictor (the coordinator's batched service).
     pub predictor: Option<Predictor>,
+    /// Shared feature-descriptor + GPU-name cache: the expensive HyPA
+    /// analysis behind `/v1/predict` runs once per `(network, batch)`
+    /// across all connection threads.
+    pub cache: DescriptorCache,
     pub edge_gpu: String,
     pub cloud_gpu: String,
     pub requests: AtomicU64,
@@ -48,6 +72,7 @@ impl ServerState {
         ServerState {
             sim: Mutex::new(Simulator::default()),
             predictor,
+            cache: DescriptorCache::new(),
             edge_gpu: "jetson-tx1".into(),
             cloud_gpu: "v100s".into(),
             requests: AtomicU64::new(0),
@@ -135,6 +160,7 @@ fn route(req: &Request, state: &ServerState) -> Response {
             json_endpoint(req, |j| offload_decide(j, state))
         }
         ("POST", "/v1/predict") => json_endpoint(req, |j| predict(j, state)),
+        ("POST", "/v1/predict/bulk") => json_endpoint(req, |j| predict_bulk(j, state)),
         ("POST", _) | ("GET", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
@@ -220,40 +246,122 @@ fn offload_decide(j: &Json, state: &ServerState) -> Result<Json> {
     Ok(o)
 }
 
+/// Largest inference batch size the predict endpoints accept. The
+/// bound exists for safety, not modelling: descriptors are cached per
+/// `(network, batch)` for the process lifetime, so the client-supplied
+/// `batch` must come from a bounded set or a hostile client could grow
+/// the cache (and the HyPA analyses behind it) without limit.
+const MAX_REST_BATCH: usize = 1024;
+
+/// One parsed `/v1/predict`(-`/bulk`) design point.
+struct PredictPoint {
+    net: Network,
+    gpu: String,
+    f_mhz: f64,
+    batch: usize,
+}
+
+impl PredictPoint {
+    fn parse(j: &Json, state: &ServerState) -> Result<PredictPoint> {
+        let net = net_for(j)?;
+        let gpu = j.str_or("gpu", "v100s").to_string();
+        let g = state
+            .cache
+            .gpu(&gpu)
+            .map_err(|_| anyhow!("unknown gpu '{gpu}'"))?;
+        let batch = j.usize_or("batch", 1);
+        anyhow::ensure!(
+            (1..=MAX_REST_BATCH).contains(&batch),
+            "'batch' must be in 1..={MAX_REST_BATCH}, got {batch}"
+        );
+        Ok(PredictPoint {
+            net,
+            f_mhz: j.f64_or("f_mhz", g.base_mhz),
+            batch,
+            gpu,
+        })
+    }
+
+    fn record(&self, power: f64, cycles: f64, source: &str) -> Json {
+        let mut o = Json::obj();
+        o.set("network", jstr(&self.net.name))
+            .set("gpu", jstr(&self.gpu))
+            .set("f_mhz", jnum(self.f_mhz))
+            .set("batch", jnum(self.batch as f64))
+            .set("power_w", jnum(power))
+            .set("cycles", jnum(cycles))
+            .set("source", jstr(source));
+        o
+    }
+}
+
+/// Score parsed points: cached descriptors, every feature row emitted
+/// into one per-thread scratch matrix, two `predict_matrix` calls total
+/// — the zero-alloc REST hot path. Falls back to the simulator per
+/// point when no predictor is attached.
+fn score_points(points: &[PredictPoint], state: &ServerState) -> Result<Vec<Json>> {
+    match &state.predictor {
+        Some(p) => {
+            let (power, cycles) =
+                pool::with_scratch(|m: &mut FeatureMatrix| -> Result<(Vec<f64>, Vec<f64>)> {
+                    m.reset(N_FEATURES);
+                    m.reserve_rows(points.len());
+                    for pt in points {
+                        let desc = state.cache.descriptor(&pt.net, pt.batch)?;
+                        let g = state.cache.gpu(&pt.gpu)?;
+                        desc.features_into(g, pt.f_mhz, m);
+                    }
+                    Ok((
+                        p.predict_matrix(Task::Power, m)?,
+                        p.predict_matrix(Task::Cycles, m)?,
+                    ))
+                })?;
+            Ok(points
+                .iter()
+                .zip(power.iter().zip(&cycles))
+                .map(|(pt, (&pw, &cy))| pt.record(pw, cy, "ml-predictor"))
+                .collect())
+        }
+        None => {
+            // One lock acquisition per request, not per point.
+            let mut sim = state.sim.lock().unwrap();
+            points
+                .iter()
+                .map(|pt| {
+                    // `parse` already validated the name against the cache.
+                    let g = state.cache.gpu(&pt.gpu)?;
+                    let s = sim
+                        .simulate_network(&pt.net, pt.batch, g, pt.f_mhz)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    Ok(pt.record(s.avg_power_w, s.cycles, "simulator"))
+                })
+                .collect()
+        }
+    }
+}
+
 /// POST /v1/predict — ML-predicted power/cycles for a design point.
 fn predict(j: &Json, state: &ServerState) -> Result<Json> {
-    let net = net_for(j)?;
-    let gpu_name = j.str_or("gpu", "v100s");
-    let g = by_name(gpu_name).ok_or_else(|| anyhow!("unknown gpu '{gpu_name}'"))?;
-    let f_mhz = j.f64_or("f_mhz", g.base_mhz);
-    let batch = j.usize_or("batch", 1);
+    let pt = PredictPoint::parse(j, state)?;
+    let mut records = score_points(std::slice::from_ref(&pt), state)?;
+    Ok(records.pop().expect("one point scored"))
+}
 
-    let desc = NetDescriptor::build(&net, batch)?;
-    let features = desc.features(&g, f_mhz);
-
-    let (power, cycles, source) = match &state.predictor {
-        Some(p) => (
-            p.predict(Task::Power, features.clone())?,
-            p.predict(Task::Cycles, features)?,
-            "ml-predictor",
-        ),
-        None => {
-            let mut sim = state.sim.lock().unwrap();
-            let s = sim
-                .simulate_network(&net, batch, &g, f_mhz)
-                .map_err(|e| anyhow!("{e}"))?;
-            (s.avg_power_w, s.cycles, "simulator")
-        }
-    };
-
+/// POST /v1/predict/bulk — many design points in one request, one flat
+/// feature matrix, two predictor calls total.
+fn predict_bulk(j: &Json, state: &ServerState) -> Result<Json> {
+    let pts = j
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'points' array"))?;
+    anyhow::ensure!(!pts.is_empty(), "'points' is empty");
+    let points = pts
+        .iter()
+        .map(|pj| PredictPoint::parse(pj, state))
+        .collect::<Result<Vec<_>>>()?;
+    let records = score_points(&points, state)?;
     let mut o = Json::obj();
-    o.set("network", jstr(&net.name))
-        .set("gpu", jstr(gpu_name))
-        .set("f_mhz", jnum(f_mhz))
-        .set("batch", jnum(batch as f64))
-        .set("power_w", jnum(power))
-        .set("cycles", jnum(cycles))
-        .set("source", jstr(source));
+    o.set("results", jarr(records));
     Ok(o)
 }
 
@@ -298,6 +406,75 @@ mod tests {
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert!(j.get("power_w").unwrap().as_f64().unwrap() > 20.0);
         assert_eq!(j.get("source").unwrap().as_str(), Some("simulator"));
+    }
+
+    #[test]
+    fn bulk_predict_matches_single_requests() {
+        // The bulk endpoint must return, per point, exactly the record
+        // the single endpoint returns (same simulator, same state).
+        let (_srv, client) = server();
+        let points = [
+            r#"{"network":"lenet5","gpu":"v100s","f_mhz":1000,"batch":1}"#,
+            r#"{"network":"lenet5","gpu":"t4","f_mhz":900,"batch":2}"#,
+            r#"{"network":"alexnet","gpu":"v100s","f_mhz":1200,"batch":1}"#,
+        ];
+        let mut singles = Vec::new();
+        for p in &points {
+            let (status, body) = client.post("/v1/predict", p).unwrap();
+            assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+            singles.push(Json::parse(std::str::from_utf8(&body).unwrap()).unwrap());
+        }
+        let bulk_body = format!(r#"{{"points":[{}]}}"#, points.join(","));
+        let (status, body) = client.post("/v1/predict/bulk", &bulk_body).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let results = j.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), points.len());
+        for (r, s) in results.iter().zip(&singles) {
+            for key in ["network", "gpu", "source"] {
+                assert_eq!(r.get(key).unwrap().as_str(), s.get(key).unwrap().as_str());
+            }
+            for key in ["f_mhz", "batch", "power_w", "cycles"] {
+                assert_eq!(
+                    r.get(key).unwrap().as_f64(),
+                    s.get(key).unwrap().as_f64(),
+                    "bulk/single diverged on {key}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_predict_rejects_bad_bodies() {
+        let (_srv, client) = server();
+        let (status, _) = client.post("/v1/predict/bulk", r#"{"points":[]}"#).unwrap();
+        assert_eq!(status, 400);
+        let (status, _) = client.post("/v1/predict/bulk", r#"{"nope":1}"#).unwrap();
+        assert_eq!(status, 400);
+        let (status, body) = client
+            .post(
+                "/v1/predict/bulk",
+                r#"{"points":[{"network":"lenet5","gpu":"not-a-gpu"}]}"#,
+            )
+            .unwrap();
+        assert_eq!(status, 400);
+        assert!(String::from_utf8_lossy(&body).contains("unknown gpu"));
+    }
+
+    #[test]
+    fn predict_rejects_out_of_range_batch() {
+        // The (network, batch) descriptor cache lives for the process;
+        // client-supplied batch values must be bounded or a hostile
+        // client could grow it without limit.
+        let (_srv, client) = server();
+        for bad in [r#"{"network":"lenet5","batch":0}"#, r#"{"network":"lenet5","batch":99999}"#] {
+            let (status, body) = client.post("/v1/predict", bad).unwrap();
+            assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+            assert!(String::from_utf8_lossy(&body).contains("'batch'"));
+        }
+        let ok = r#"{"network":"lenet5","batch":4}"#;
+        let (status, _) = client.post("/v1/predict", ok).unwrap();
+        assert_eq!(status, 200);
     }
 
     #[test]

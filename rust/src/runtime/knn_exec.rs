@@ -1,20 +1,24 @@
-//! KNN prediction executable: a trained model staged into the flat-matrix
+//! KNN prediction executable: a trained model staged into the tiered
 //! batch kernel ([`crate::ml::batch::BatchKnn`]).
 //!
 //! Staging validates the AOT shape contract (training rows within `KNN_N`,
 //! feature width within `KNN_F`) and *shares* the model's cached staged
-//! form (an `Arc` of the flattened training matrix — no O(n_train × d)
-//! copy if the model was already staged, and no restage ever on the
-//! serving path); `predict`/`predict_matrix` scale each query and run the
-//! blocked distance kernel with O(n) top-k selection. Results are
-//! bit-identical to `Knn::predict_one` per row — asserted by
-//! `rust/tests/runtime_hlo.rs`.
+//! form (an `Arc` of the flattened training matrix, already staged on the
+//! execution tier [`crate::ml::batch::knn_tier`] selected — no
+//! O(n_train × d) copy if the model was already staged, no index rebuild,
+//! and no restage ever on the serving path); `predict`/`predict_matrix`
+//! scale each query and run the staged tier. The `Direct` and `Tree`
+//! tiers are bit-identical to `Knn::predict_one` per row (asserted by
+//! `rust/tests/runtime_hlo.rs`); the `Norm` tier — selected for large
+//! training sets — is within 1e-9 relative on continuous data
+//! (`rust/tests/knn_tiers.rs`; see the near-tie caveat in the
+//! [`crate::ml::batch`] module docs).
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::ml::batch::BatchKnn;
+use crate::ml::batch::{BatchKnn, KnnTier};
 use crate::ml::knn::Knn;
 use crate::ml::matrix::FeatureMatrix;
 use crate::runtime::{shapes, Runtime};
@@ -53,6 +57,13 @@ impl KnnExecutable {
 
     pub fn n_train_rows(&self) -> usize {
         self.batch.n_train_rows()
+    }
+
+    /// The execution tier the staged kernel runs
+    /// ([`crate::ml::batch::knn_tier`]): `Direct`/`Tree` are bit-exact
+    /// vs the scalar oracle, `Norm` is within 1e-9 relative.
+    pub fn tier(&self) -> KnnTier {
+        self.batch.tier()
     }
 
     /// Predict raw (unscaled) feature rows.

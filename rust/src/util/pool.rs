@@ -14,12 +14,18 @@
 //!   worker threads draining a job queue, used by the coordinator to
 //!   execute dynamic-batch flushes concurrently instead of serially on
 //!   the dispatcher thread.
+//! * **Per-worker scratch** ([`with_scratch`]) — type-keyed thread-local
+//!   buffer reuse, so hot loops (chunked DSE scoring, the kNN kernels,
+//!   the REST predict path) clear-and-refill one set of buffers per
+//!   worker instead of reallocating per call.
 //!
 //! Thread count comes from `std::thread::available_parallelism`, capped by
 //! the shard count and overridable with `HYPA_DSE_THREADS` (set it to `1`
 //! to force sequential execution, e.g. when bisecting a perf regression).
 
-use std::cell::Cell;
+use std::any::{Any, TypeId};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -35,6 +41,50 @@ thread_local! {
 /// True when the current thread is a pool worker spawned by this module.
 pub fn in_pool_worker() -> bool {
     IN_POOL.with(|c| c.get())
+}
+
+thread_local! {
+    /// Per-thread pools of reusable scratch values, keyed by type
+    /// ([`with_scratch`]). One stack per type, so nested borrows of the
+    /// same type receive distinct values.
+    static SCRATCH: RefCell<HashMap<TypeId, Vec<Box<dyn Any>>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Borrow a per-worker reusable scratch value of type `T`.
+///
+/// The value is handed to `f` **as the previous borrower on this thread
+/// left it** — callers reset whatever state they rely on (`Vec::clear`,
+/// `FeatureMatrix::reset`, …) and in exchange keep the backing
+/// allocations: a worker scoring chunk after chunk, or a serving thread
+/// answering request after request, reuses one set of buffers instead of
+/// reallocating per call. The query-side counterpart of the staged-model
+/// caches: model state is staged once per fit, query scratch is
+/// allocated once per worker.
+///
+/// Nested calls with the same `T` receive distinct values (a stack per
+/// type), so re-entrancy is safe; a value borrowed when `f` panics is
+/// dropped, not recycled.
+pub fn with_scratch<T: Default + 'static, R>(f: impl FnOnce(&mut T) -> R) -> R {
+    let mut val: Box<T> = SCRATCH
+        .with(|s| {
+            s.borrow_mut()
+                .get_mut(&TypeId::of::<T>())
+                .and_then(Vec::pop)
+        })
+        .map(|b| {
+            b.downcast::<T>()
+                .unwrap_or_else(|_| unreachable!("scratch stack keyed by TypeId"))
+        })
+        .unwrap_or_default();
+    let out = f(&mut val);
+    SCRATCH.with(|s| {
+        s.borrow_mut()
+            .entry(TypeId::of::<T>())
+            .or_default()
+            .push(val)
+    });
+    out
 }
 
 /// Worker count for parallel sections: `HYPA_DSE_THREADS` if set, else the
@@ -327,6 +377,48 @@ mod tests {
     fn range_shards_empty() {
         let out = map_range_shards(0, 1, 8, |r| r);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scratch_reuses_allocation_across_calls() {
+        // Each #[test] runs on its own thread, so this thread's scratch
+        // pool starts empty and the two calls below see the same value.
+        let cap = with_scratch(|v: &mut Vec<f64>| {
+            v.clear();
+            v.extend(std::iter::repeat(1.0).take(100));
+            v.capacity()
+        });
+        let (cap2, len2) = with_scratch(|v: &mut Vec<f64>| (v.capacity(), v.len()));
+        assert!(cap2 >= cap, "allocation was not recycled");
+        // Contents persist — the contract is reset-by-caller.
+        assert_eq!(len2, 100);
+    }
+
+    #[test]
+    fn scratch_nested_borrows_are_distinct() {
+        with_scratch(|a: &mut Vec<u32>| {
+            a.clear();
+            a.push(1);
+            with_scratch(|b: &mut Vec<u32>| {
+                b.clear();
+                b.push(2);
+                b.push(3);
+                assert_eq!(a.len(), 1, "nested borrow aliased the outer one");
+            });
+            assert_eq!(a[..], [1]);
+        });
+    }
+
+    #[test]
+    fn scratch_types_have_separate_pools() {
+        with_scratch(|v: &mut Vec<f64>| {
+            v.clear();
+            v.push(1.5);
+        });
+        with_scratch(|v: &mut Vec<u64>| {
+            // A different T starts from Default, not from the f64 pool.
+            assert!(v.is_empty());
+        });
     }
 
     #[test]

@@ -126,6 +126,54 @@ fn rest_predict_uses_ml_predictor() {
 }
 
 #[test]
+fn rest_bulk_predict_matches_singles_through_ml_predictor() {
+    // The zero-alloc bulk path (one FeatureMatrix, two predict_matrix
+    // calls) must reproduce the single-request responses value-for-value.
+    let d = hypa_dse::ml::features::all_feature_names().len();
+    let mut rng = Rng::new(7);
+    let (forest, knn, _, _, _) = small_models(&mut rng, d);
+    let service = PredictionService::start(
+        "artifacts".into(),
+        forest,
+        knn,
+        d,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let state = Arc::new(ServerState::new(Some(service.predictor())));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+
+    let points = [
+        r#"{"network":"lenet5","gpu":"t4","f_mhz":900,"batch":1}"#,
+        r#"{"network":"lenet5","gpu":"v100s","f_mhz":1100,"batch":4}"#,
+        r#"{"network":"alexnet","gpu":"t4","f_mhz":850,"batch":2}"#,
+    ];
+    let mut singles = Vec::new();
+    for p in &points {
+        let (status, body) = client.post("/v1/predict", p).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        singles.push(Json::parse(std::str::from_utf8(&body).unwrap()).unwrap());
+    }
+    let bulk = format!(r#"{{"points":[{}]}}"#, points.join(","));
+    let (status, body) = client.post("/v1/predict/bulk", &bulk).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let results = j.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), points.len());
+    for (r, s) in results.iter().zip(&singles) {
+        assert_eq!(r.get("source").unwrap().as_str(), Some("ml-predictor"));
+        for key in ["power_w", "cycles", "f_mhz", "batch"] {
+            assert_eq!(
+                r.get(key).unwrap().as_f64(),
+                s.get(key).unwrap().as_f64(),
+                "bulk/single diverged on {key}"
+            );
+        }
+    }
+}
+
+#[test]
 fn offload_decide_over_rest_matches_direct_model() {
     // No predictor needed (simulator path).
     let state = Arc::new(ServerState::new(None));

@@ -1,0 +1,213 @@
+//! Tolerance-based parity for the tiered kNN engine
+//! (`ml::batch::KnnTier`): the norm-trick and KD-tree paths vs the
+//! scalar oracle (`Knn::predict_one`), across scaled/unscaled feature
+//! distributions, weighted/uniform models, and tie-heavy datasets.
+//!
+//! Contract under test (see `ml/batch.rs` module docs): `Direct` and
+//! `Tree` are bit-exact; `Norm` ranks by the re-associated
+//! `|x|² − 2x·q + |q|²` expansion but re-computes the winners' distances
+//! exactly, so predictions stay within `REL_TOL` of the oracle — the
+//! only admissible divergence is which member of a near-tie made the
+//! cut, which the tie-heavy suites neutralize by making every tie-break
+//! prediction-equivalent (k covers whole duplicate groups).
+
+use hypa_dse::ml::batch::{knn_tier, BatchKnn, KnnTier};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::util::rng::Rng;
+
+const REL_TOL: f64 = 1e-9;
+
+fn assert_close(got: f64, oracle: f64, ctx: &str) {
+    let rel = (got - oracle).abs() / oracle.abs().max(1e-12);
+    assert!(
+        rel <= REL_TOL,
+        "{ctx}: got {got}, oracle {oracle}, rel {rel:e}"
+    );
+}
+
+/// Features on comparable scales (z-scoring is a near-no-op).
+fn unscaled_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f64> = (0..d).map(|_| rng.f64() * 4.0 - 2.0).collect();
+        let t = 100.0 + 30.0 * row[0] + 5.0 * row[1 % d] * row[1 % d];
+        x.push(row);
+        y.push(t);
+    }
+    (x, y)
+}
+
+/// Features spanning seven decades of magnitude (z-scoring does real
+/// work; the norm expansion sees large cancellation).
+fn scaled_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f64> = (0..d)
+            .map(|j| (rng.f64() + 0.1) * 10f64.powi((j % 7) as i32 - 3))
+            .collect();
+        let t = 1e4 + 2e3 * row[0] * 10f64.powi(3) + row[d - 1];
+        x.push(row);
+        y.push(t);
+    }
+    (x, y)
+}
+
+/// Mixed query set: off-manifold randoms plus exact training hits.
+fn queries(rng: &mut Rng, x: &[Vec<f64>], extra: usize) -> Vec<Vec<f64>> {
+    let d = x[0].len();
+    let mut qs: Vec<Vec<f64>> = (0..extra)
+        .map(|_| {
+            let base = &x[rng.below(x.len())];
+            base.iter().map(|v| v + (rng.f64() - 0.5) * 0.2).collect()
+        })
+        .collect();
+    qs.extend(x.iter().take(20).cloned());
+    qs
+}
+
+fn check_tier(m: &Knn, tier: KnnTier, qs: &[Vec<f64>], ctx: &str) {
+    let staged = BatchKnn::from_model_with_tier(m, tier);
+    assert_eq!(staged.tier(), tier, "{ctx}: tier was demoted");
+    let preds = staged.predict_many(qs);
+    assert_eq!(preds.len(), qs.len());
+    for (i, q) in qs.iter().enumerate() {
+        assert_close(preds[i], m.predict_one(q), &format!("{ctx} row {i}"));
+    }
+}
+
+#[test]
+fn norm_and_tree_parity_unscaled() {
+    let mut rng = Rng::new(11);
+    let (x, y) = unscaled_data(&mut rng, 600, 8);
+    for model in [Knn::new(3), Knn::new(7), Knn::uniform(5)] {
+        let mut m = model;
+        m.fit(&x, &y);
+        let qs = queries(&mut rng, &x, 100);
+        check_tier(&m, KnnTier::Norm, &qs, &format!("norm/{}", m.name()));
+        check_tier(&m, KnnTier::Tree, &qs, &format!("tree/{}", m.name()));
+    }
+}
+
+#[test]
+fn norm_and_tree_parity_scaled() {
+    let mut rng = Rng::new(23);
+    let (x, y) = scaled_data(&mut rng, 500, 9);
+    for model in [Knn::new(4), Knn::uniform(6)] {
+        let mut m = model;
+        m.fit(&x, &y);
+        let qs = queries(&mut rng, &x, 80);
+        check_tier(&m, KnnTier::Norm, &qs, &format!("norm/{}", m.name()));
+        check_tier(&m, KnnTier::Tree, &qs, &format!("tree/{}", m.name()));
+    }
+}
+
+#[test]
+fn tie_heavy_duplicates_all_tiers() {
+    // Every training point appears DUP times with the same target, and k
+    // is a multiple of DUP ≥ DUP, so *any* tie-break selects
+    // prediction-equivalent neighbour sets — exactly the regime where a
+    // re-associated ranking is allowed to differ, and must not matter.
+    const DUP: usize = 3;
+    let mut rng = Rng::new(37);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..150usize {
+        // (i % 13, i / 13) is injective over 0..150, so duplicate groups
+        // are exact within and distinct across — the only ties are the
+        // constructed ones.
+        let row = vec![
+            (i % 13) as f64,
+            (i / 13) as f64,
+            ((i * 3) % 5) as f64,
+            1.0,
+            ((i * 7) % 11) as f64,
+        ];
+        let t = 10.0 + i as f64;
+        for _ in 0..DUP {
+            x.push(row.clone());
+            y.push(t);
+        }
+    }
+    let qs: Vec<Vec<f64>> = (0..60)
+        .map(|_| (0..5).map(|_| rng.f64() * 13.0).collect())
+        .collect();
+    for k in [DUP, 2 * DUP] {
+        for model in [Knn::new(k), Knn::uniform(k)] {
+            let mut m = model;
+            m.fit(&x, &y);
+            check_tier(&m, KnnTier::Norm, &qs, &format!("tie-norm/{}", m.name()));
+            check_tier(&m, KnnTier::Tree, &qs, &format!("tie-tree/{}", m.name()));
+        }
+    }
+}
+
+#[test]
+fn exact_training_hits_short_circuit_exactly() {
+    // Weighted kNN short-circuits an exact hit to its own target; every
+    // tier must reproduce that *exactly* (the norm expansion cancels an
+    // exact hit to 0 because training norms and query dots share one
+    // summation kernel).
+    let mut rng = Rng::new(41);
+    let (x, y) = unscaled_data(&mut rng, 300, 6);
+    let mut m = Knn::new(3);
+    m.fit(&x, &y);
+    let qs: Vec<Vec<f64>> = x.iter().take(40).cloned().collect();
+    for tier in [KnnTier::Direct, KnnTier::Norm, KnnTier::Tree] {
+        let preds = BatchKnn::from_model_with_tier(&m, tier).predict_many(&qs);
+        for (i, p) in preds.iter().enumerate() {
+            assert_eq!(*p, y[i], "{tier:?} row {i} did not return its target");
+        }
+    }
+}
+
+#[test]
+fn k_wider_than_duplicate_groups_and_dataset() {
+    // k ≥ n forces every tier to weigh the full (tie-heavy) training set.
+    let x = vec![
+        vec![0.0, 0.0],
+        vec![0.0, 0.0],
+        vec![1.0, 0.0],
+        vec![1.0, 0.0],
+        vec![0.0, 1.0],
+    ];
+    let y = vec![10.0, 10.0, 20.0, 20.0, 50.0];
+    for model in [Knn::new(8), Knn::uniform(8)] {
+        let mut m = model;
+        m.fit(&x, &y);
+        let qs = vec![vec![0.4, 0.1], vec![2.0, 2.0], vec![0.0, 0.0]];
+        check_tier(&m, KnnTier::Norm, &qs, &format!("k>n norm/{}", m.name()));
+        check_tier(&m, KnnTier::Tree, &qs, &format!("k>n tree/{}", m.name()));
+    }
+}
+
+#[test]
+fn default_policy_selects_documented_tiers() {
+    // The data-driven cutover lives next to stage_cutover; pin its shape.
+    assert_eq!(knn_tier(300, 35, false), KnnTier::Direct);
+    assert_eq!(knn_tier(2000, 35, false), KnnTier::Norm);
+    assert_eq!(knn_tier(4096, 16, false), KnnTier::Norm);
+    assert_eq!(knn_tier(4096, 8, true), KnnTier::Tree);
+    assert_eq!(knn_tier(4096, 16, true), KnnTier::Norm); // d too high for tree
+    assert_eq!(knn_tier(1024, 32, false), KnnTier::Norm);
+    assert_eq!(knn_tier(1023, 64, false), KnnTier::Direct);
+}
+
+#[test]
+fn staged_model_predict_uses_selected_tier_and_stays_close() {
+    // End-to-end through Regressor::predict on a training set large
+    // enough for the norm tier: the staged cache serves the norm kernel,
+    // and predictions stay within tolerance of the scalar oracle.
+    let mut rng = Rng::new(53);
+    let (x, y) = unscaled_data(&mut rng, 1500, 24);
+    let mut m = Knn::new(5);
+    m.fit(&x, &y);
+    assert_eq!(m.staged().tier(), KnnTier::Norm);
+    let qs = queries(&mut rng, &x, 64);
+    let preds = m.predict(&qs);
+    for (i, q) in qs.iter().enumerate() {
+        assert_close(preds[i], m.predict_one(q), &format!("staged norm row {i}"));
+    }
+}

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Gate the hot-path benchmark output.
+
+Usage: check_bench.py BENCH_hotpath.json [baseline.json]
+
+Asserts that every required stage and ratio is present in the bench JSON
+(so a refactor cannot silently drop a measurement), then compares the
+speedup ratios against the recorded baseline: a ratio that fell by more
+than REGRESSION_FACTOR (1.5x) vs its recorded value fails the build.
+
+The baseline is self-recording: on the first run (no baseline file yet)
+the current ratios are written as the baseline and the gate passes.
+Machines differ, so the baseline should always be (re-)recorded on the
+machine that enforces it; the 1.5x headroom absorbs ordinary noise.
+"""
+
+import json
+import sys
+
+REGRESSION_FACTOR = 1.5
+
+# Bigger-is-better speedup ratios the bench must emit, and the only keys
+# the regression comparison runs over (existing engine stages + the
+# tiered kNN engine added with the norm-trick/KD-tree work). The
+# `ratios` JSON object also carries allocation *counts*, which are
+# lower-is-better — those are gated by ZERO_RATIOS / informational, not
+# by the speedup comparison.
+REQUIRED_RATIOS = [
+    "forest_batch_vs_scalar",
+    "forest_cached_vs_restage",
+    "tensor_batch_vs_scalar",
+    "knn_batch_vs_scalar",
+    "knn_cached_vs_restage",
+    "knn_norm_vs_direct",
+    "knn_tree_vs_norm",
+    "feature_emit_flat_vs_vec",
+    "service_bulk_vs_single_per_row",
+    "service_matrix_vs_rows_bulk",
+    "explore_parallel_vs_seq",
+]
+
+# Allocation-count keys that must be present AND exactly zero (the
+# bench also asserts these internally; the double-check here means a
+# refactor cannot silently drop the measurement).
+ZERO_RATIOS = [
+    "feature_flat_allocs_per_point",
+    "score_chunk_allocs",
+]
+
+# Informational lower-is-better counts: must be present, not gated.
+INFO_RATIOS = [
+    "feature_vec_allocs_per_point",
+]
+
+# Stage entries (p50/mean/per_sec records) the tiered engine must emit.
+REQUIRED_STAGES = [
+    "knn_tier_direct_x256",
+    "knn_tier_norm_x256",
+    "knn_tier_norm8_x256",
+    "knn_tier_tree8_x256",
+]
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        fail("usage: check_bench.py BENCH_hotpath.json [baseline.json]")
+    bench_path = sys.argv[1]
+    baseline_path = sys.argv[2] if len(sys.argv) > 2 else None
+
+    with open(bench_path) as f:
+        bench = json.load(f)
+    stages = bench.get("stages", {})
+    ratios = bench.get("ratios", {})
+
+    missing = [
+        k for k in REQUIRED_RATIOS + ZERO_RATIOS + INFO_RATIOS if k not in ratios
+    ]
+    if missing:
+        fail(f"missing required ratio(s) in {bench_path}: {', '.join(missing)}")
+    missing = [k for k in REQUIRED_STAGES if k not in stages]
+    if missing:
+        fail(f"missing required stage(s) in {bench_path}: {', '.join(missing)}")
+    nonzero = [k for k in ZERO_RATIOS if ratios[k] != 0]
+    if nonzero:
+        fail(
+            "allocation count(s) expected to be zero are not: "
+            + ", ".join(f"{k}={ratios[k]}" for k in nonzero)
+        )
+    print(
+        f"check_bench: all {len(REQUIRED_RATIOS)} speedup ratios, "
+        f"{len(ZERO_RATIOS) + len(INFO_RATIOS)} allocation counts and "
+        f"{len(REQUIRED_STAGES)} tier stages present"
+    )
+
+    if baseline_path is None:
+        return
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        # Speedup ratios only — allocation counts have their own gate.
+        record = {k: ratios[k] for k in REQUIRED_RATIOS}
+        with open(baseline_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(
+            f"check_bench: WARNING — no baseline yet; recorded {baseline_path} "
+            "from this run. The regression gate is inert until a baseline "
+            "exists: re-run to gate against these numbers, and keep the file "
+            "local to the enforcing machine (machine-specific; gitignored)."
+        )
+        return
+
+    # Compare only the bigger-is-better speedup ratios; every key in
+    # REQUIRED_RATIOS was asserted present above, so nothing baselined
+    # here can silently vanish from the bench.
+    regressions = []
+    for key in REQUIRED_RATIOS:
+        old = baseline.get(key)
+        if not isinstance(old, (int, float)) or old <= 0:
+            continue
+        new = ratios[key]
+        if new * REGRESSION_FACTOR < old:
+            regressions.append(f"{key}: {old:.2f} -> {new:.2f}")
+        else:
+            print(f"check_bench: {key}: baseline {old:.2f}, now {new:.2f} — ok")
+    if regressions:
+        fail(
+            f">{REGRESSION_FACTOR}x regression vs {baseline_path}: "
+            + "; ".join(regressions)
+        )
+    print("check_bench: OK (no speedup ratio regressed beyond the 1.5x gate)")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,7 +35,13 @@ if [[ "${1:-}" == "--with-bench" ]]; then
     echo "== BENCH_hotpath.json =="
     # cargo runs bench binaries with cwd = package root (rust/), so the
     # JSON lands there; handle an invoker-cwd write too.
-    cat rust/BENCH_hotpath.json 2>/dev/null || cat BENCH_hotpath.json
+    BENCH_JSON=rust/BENCH_hotpath.json
+    [[ -f "$BENCH_JSON" ]] || BENCH_JSON=BENCH_hotpath.json
+    cat "$BENCH_JSON"
+    echo "== scripts/check_bench.py (stage presence + >1.5x regression gate) =="
+    # Asserts the tiered-kNN stages/ratios were emitted and that no
+    # recorded ratio regressed >1.5x; records the baseline on first run.
+    python3 scripts/check_bench.py "$BENCH_JSON" scripts/bench_baseline.json
 fi
 
 echo "CI OK"
