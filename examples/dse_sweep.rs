@@ -3,15 +3,19 @@
 //!
 //!     cargo run --release --example dse_sweep
 //!
-//! Requires `make artifacts` (the XLA predictors) and a dataset
-//! (`hypa-dse datagen`, auto-generated on first run). The sweep scores
-//! every `GPU × DVFS step × batch` point through the coordinator's batched
-//! XLA prediction service and prints the ranking, the Pareto frontier, and
-//! the service's batching metrics.
+//! One `Explorer` session sweeps the full grid and then spends a small
+//! budget on the `Anneal` strategy for comparison: same network, same
+//! predictor, same `DescriptorCache`, same constraints — the strategy is
+//! the only thing that changes. The sweep prints the per-objective
+//! rankings, the Pareto frontier, the run telemetry (including how many
+//! candidates each constraint rejected) and the service's batching
+//! metrics.
 
 use hypa_dse::cnn::zoo;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService};
-use hypa_dse::dse::{explore, pareto_frontier, rank, DesignSpace, DseConstraints, Objective};
+use hypa_dse::dse::{
+    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, Objective,
+};
 use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
 use hypa_dse::ml::dataset::Target;
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
@@ -30,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let mut cycles = Knn::new(3);
     cycles.fit(&data.x, data.y(Target::Cycles));
 
-    // Serve them through the batched XLA coordinator.
+    // Serve them through the batched coordinator.
     let service = PredictionService::start(
         "artifacts".into(),
         power,
@@ -40,29 +44,38 @@ fn main() -> anyhow::Result<()> {
     )?;
     let predictor = service.predictor();
 
-    let space = DesignSpace::default_grid(10, &[1, 4, 16]);
-    let t0 = std::time::Instant::now();
-    let scored = explore(
-        &net,
-        &space,
-        &predictor,
-        &DseConstraints {
+    // One session: constraints, objective, cache and seed set once.
+    let cache = DescriptorCache::new();
+    let explorer = Explorer::new(&net, &predictor)
+        .constraints(DseConstraints {
             max_power_w: Some(250.0),
             max_latency_s: None,
             min_throughput: None,
             respect_memory: true,
-        },
-    )?;
+        })
+        .objective(Objective::MinEdp)
+        .cache(&cache)
+        .seed(1);
+
+    let t0 = std::time::Instant::now();
+    let sweep = explorer.run(&Grid::new(DesignSpace::default_grid(10, &[1, 4, 16])))?;
     let dt = t0.elapsed();
     println!(
-        "scored {} design points in {:.0} ms ({:.0} points/s)\n",
-        space.len(),
+        "scored {} design points in {:.0} ms ({:.0} points/s); rejected: {}\n",
+        sweep.telemetry.evaluations,
         dt.as_secs_f64() * 1e3,
-        space.len() as f64 / dt.as_secs_f64()
+        sweep.telemetry.evaluations as f64 / dt.as_secs_f64(),
+        sweep.telemetry.rejected
     );
 
-    for objective in [Objective::MinLatency, Objective::MinEnergy, Objective::MinEdp] {
-        let ranked = rank(&scored, objective);
+    for objective in [
+        Objective::MinLatency,
+        Objective::MinEnergy,
+        Objective::MinEdp,
+        Objective::EnergyPerInference,
+    ] {
+        // Re-rank the already-scored sweep under each objective.
+        let ranked = hypa_dse::dse::rank(&sweep.scored, objective);
         println!("top 5 by {}:", objective.name());
         let mut t = Table::new(&["gpu", "MHz", "batch", "W", "ms", "J/inf"]);
         for s in ranked.iter().take(5) {
@@ -78,10 +91,10 @@ fn main() -> anyhow::Result<()> {
         print!("{}\n", t.render());
     }
 
-    let frontier = pareto_frontier(&scored);
-    println!("Pareto frontier (power vs latency), {} points:", frontier.len());
+    let pareto = sweep.pareto();
+    println!("Pareto frontier (power vs latency), {} points:", pareto.len());
     let mut t = Table::new(&["gpu", "MHz", "batch", "W", "ms"]);
-    for s in &frontier {
+    for s in &pareto {
         t.row(&[
             s.point.gpu.clone(),
             format!("{:.0}", s.point.f_mhz),
@@ -91,6 +104,32 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
+
+    // Typed failure handling: `best()` is a NoFeasiblePoint error, never
+    // a panic on an empty ranking.
+    let best = sweep.best()?;
+    println!(
+        "\ngrid best under 250 W: {} @ {:.0} MHz (batch {})",
+        best.point.gpu, best.point.f_mhz, best.point.batch
+    );
+
+    // Same session, different strategy: a budgeted simulated-annealing
+    // walk reaches a near-grid-quality point with ~40x fewer predictor
+    // evaluations.
+    let annealed = explorer.budget(200).run(&Anneal::new(&[1, 4, 16]))?;
+    match annealed.best() {
+        Ok(b) => println!(
+            "anneal (budget {}): {} @ {:.0} MHz (batch {}) — EDP {:.3e} vs grid {:.3e}",
+            annealed.telemetry.evaluations,
+            b.point.gpu,
+            b.point.f_mhz,
+            b.point.batch,
+            Objective::MinEdp.key(b),
+            Objective::MinEdp.key(best),
+        ),
+        Err(e) => println!("anneal: {e}"),
+    }
+
     println!("\nservice metrics: {}", predictor.metrics.summary());
     Ok(())
 }

@@ -20,7 +20,7 @@
 
 use hypa_dse::cnn::zoo;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService};
-use hypa_dse::dse::{explore, rank, DesignSpace, DseConstraints, Objective};
+use hypa_dse::dse::{DesignSpace, DseConstraints, Explorer, Grid, Objective};
 use hypa_dse::gpu::specs::by_name;
 use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
 use hypa_dse::ml::dataset::Target;
@@ -126,29 +126,26 @@ fn main() -> anyhow::Result<()> {
             BatchPolicy::default(),
         )?;
         let predictor = service.predictor();
-        let space = DesignSpace::default_grid(10, &[1, 4, 16]);
         let t5 = std::time::Instant::now();
-        let scored = explore(
-            &net,
-            &space,
-            &predictor,
-            &DseConstraints {
+        let exploration = Explorer::new(&net, &predictor)
+            .constraints(DseConstraints {
                 max_power_w: Some(250.0),
                 max_latency_s: None,
                 min_throughput: None,
                 respect_memory: true,
-            },
-        )?;
+            })
+            .objective(Objective::MinEdp)
+            .run(&Grid::new(DesignSpace::default_grid(10, &[1, 4, 16])))?;
         let dse_dt = t5.elapsed();
-        let ranked = rank(&scored, Objective::MinEdp);
+        let n_points = exploration.telemetry.evaluations;
         println!(
-            "[5] DSE via batched XLA predictors: {} points in {:.0} ms ({:.0} pts/s)",
-            space.len(),
+            "[5] DSE via the batched Explorer session: {} points in {:.0} ms ({:.0} pts/s)",
+            n_points,
             dse_dt.as_secs_f64() * 1e3,
-            space.len() as f64 / dse_dt.as_secs_f64()
+            n_points as f64 / dse_dt.as_secs_f64()
         );
         let mut t = Table::new(&["rank", "gpu", "MHz", "batch", "W", "ms", "J/inf"]);
-        for (i, s) in ranked.iter().take(5).enumerate() {
+        for (i, s) in exploration.top_k(5).iter().enumerate() {
             t.row(&[
                 format!("{}", i + 1),
                 s.point.gpu.clone(),
@@ -160,7 +157,16 @@ fn main() -> anyhow::Result<()> {
             ]);
         }
         print!("{}", t.render());
-        println!("    best under 250 W: {} @ {:.0} MHz (batch {})", ranked[0].point.gpu, ranked[0].point.f_mhz, ranked[0].point.batch);
+        // Typed feasibility: an impossible constraint set would surface
+        // here as DseError::NoFeasiblePoint, not an indexing panic.
+        let best = exploration.best()?;
+        println!(
+            "    best under 250 W: {} @ {:.0} MHz (batch {}); rejected: {}",
+            best.point.gpu,
+            best.point.f_mhz,
+            best.point.batch,
+            exploration.telemetry.rejected
+        );
         println!("    coordinator: {}\n", predictor.metrics.summary());
     }
 

@@ -1,19 +1,48 @@
 //! Offload advisor: should an edge device run a CNN locally or ship it to
-//! the cloud? Demonstrates both the in-process decision model and the REST
-//! API of §IV (server + client over loopback).
+//! the cloud? Demonstrates the in-process decision model and the REST
+//! API of §IV (server + client over loopback), including the server-side
+//! DSE endpoint `/v1/search` — the cloud half of the offload story: the
+//! edge asks the cloud *which* GPGPU configuration it would run on.
 //!
 //!     cargo run --release --example offload_advisor
 
 use hypa_dse::cnn::zoo;
+use hypa_dse::coordinator::{BatchPolicy, PredictionService};
 use hypa_dse::gpu::specs::by_name;
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
 use hypa_dse::offload::{
     decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
     OffloadClient, OffloadServer, ServerState,
 };
 use hypa_dse::sim::Simulator;
 use hypa_dse::util::json::Json;
+use hypa_dse::util::rng::Rng;
 use hypa_dse::util::table::{f, Table};
 use std::sync::Arc;
+
+/// Tiny stand-in predictor at the real feature width, so the example
+/// starts instantly (no dataset generation). Swap in dataset-trained
+/// models (`hypa-dse serve --with-predictor`) for real predictions.
+fn standin_service() -> anyhow::Result<PredictionService> {
+    let d = hypa_dse::ml::features::all_feature_names().len();
+    let mut rng = Rng::new(42);
+    let x: Vec<Vec<f64>> = (0..200)
+        .map(|_| (0..d).map(|_| rng.f64() * 3.0).collect())
+        .collect();
+    let yp: Vec<f64> = x.iter().map(|r| 45.0 + 20.0 * r[0] + 5.0 * r[1]).collect();
+    let yc: Vec<f64> = x.iter().map(|r| 1e7 * (1.0 + r[0])).collect();
+    let mut power = RandomForest::new(ForestConfig {
+        n_trees: 16,
+        max_depth: 10,
+        ..Default::default()
+    });
+    power.fit(&x, &yp);
+    let mut cycles = Knn::new(3);
+    cycles.fit(&x, &yc);
+    PredictionService::start("artifacts".into(), power, cycles, d, BatchPolicy::default())
+}
 
 fn main() -> anyhow::Result<()> {
     let net = zoo::squeezenet();
@@ -77,7 +106,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- the same decision through the REST API ---------------------------
     println!("querying the REST API (paper §IV)...");
-    let state = Arc::new(ServerState::new(None));
+    let service = standin_service()?;
+    let state = Arc::new(ServerState::new(Some(service.predictor())));
     let server = OffloadServer::start("127.0.0.1:0", state)?;
     let client = OffloadClient::new(server.addr);
     let body = format!(
@@ -96,6 +126,36 @@ fn main() -> anyhow::Result<()> {
         j.path(&["local", "device_energy_j"]).unwrap().as_f64().unwrap() * 1e3,
         j.path(&["offload", "latency_s"]).unwrap().as_f64().unwrap() * 1e3,
         j.path(&["offload", "device_energy_j"]).unwrap().as_f64().unwrap() * 1e3,
+    );
+
+    // --- server-side DSE: which cloud config would the offload land on? ---
+    // A budgeted `anneal` run through the Explorer session API, entirely
+    // server-side: strategy, budget, constraints and objective travel in
+    // the request body; top-k + telemetry come back.
+    let body = format!(
+        r#"{{"network":"{}","strategy":"anneal","budget":64,"batches":[1,4],
+            "seed":7,"objective":"min-edp","max_power_w":250,"top_k":3}}"#,
+        net.name
+    );
+    let (status, resp) = client.post("/v1/search", &body)?;
+    let j = Json::parse(std::str::from_utf8(&resp)?).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\nPOST /v1/search (anneal, budget 64, ≤250 W) -> {status}:");
+    match j.get("best") {
+        Some(Json::Null) | None => println!("  no feasible cloud configuration"),
+        Some(best) => println!(
+            "  best: {} @ {:.0} MHz b{} ({:.1} W, {:.2} ms)",
+            best.get("gpu").and_then(Json::as_str).unwrap_or("?"),
+            best.get("f_mhz").and_then(Json::as_f64).unwrap_or(0.0),
+            best.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            best.get("power_w").and_then(Json::as_f64).unwrap_or(0.0),
+            best.get("latency_s").and_then(Json::as_f64).unwrap_or(0.0) * 1e3,
+        ),
+    }
+    println!(
+        "  telemetry: {} evals over {} scoring shards, rejected by power cap: {}",
+        j.path(&["telemetry", "evaluations"]).and_then(Json::as_usize).unwrap_or(0),
+        j.path(&["telemetry", "shards"]).and_then(Json::as_usize).unwrap_or(0),
+        j.path(&["telemetry", "rejected", "power"]).and_then(Json::as_usize).unwrap_or(0),
     );
     Ok(())
 }

@@ -27,16 +27,24 @@
 //!   sequential vs worker-pool sharded;
 //! * feature extraction and the simulator timing path.
 //!
+//! * the `Explorer` session API vs the legacy `explore` free function on
+//!   the same grid/cache (`search_builder_vs_legacy` — the API redesign
+//!   may not tax the hot path, so the ratio must stay ~1.0).
+//!
 //! Besides the human-readable table, writes `BENCH_hotpath.json` (p50 ns
 //! per stage, predictions/sec, before/after ratios) so the perf trajectory
 //! is tracked across PRs.
+#![allow(deprecated)] // measures the deprecated wrappers against Explorer
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
-use hypa_dse::dse::{explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints};
+use hypa_dse::dse::{
+    explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints, Explorer,
+    Grid,
+};
 use hypa_dse::ml::batch::{BatchForest, BatchKnn, KnnTier};
 use hypa_dse::ml::features::{NetDescriptor, N_FEATURES};
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
@@ -426,6 +434,31 @@ fn main() {
     stages.stage(&m_es, space.len());
     stages.stage(&m_ep, space.len());
     ratios.set("explore_parallel_vs_seq", jnum(explore_ratio));
+
+    println!("-- Explorer session API vs legacy explore (same grid/cache) --");
+    // The redesign must not tax the hot path. Both sides execute the
+    // same scoring core (the legacy function is now a wrapper), so this
+    // ratio gates the *wrapper/adaptation layer* at ~1.0 — builder
+    // construction, outcome assembly, and the SearchResult adaptation
+    // must stay in the noise next to scoring. Absolute scoring cost is
+    // covered by the explore stages above (same grid, same baselines).
+    // Parity asserted before timing.
+    let explorer = Explorer::new(&net, &p).constraints(constraints).cache(&cache);
+    let grid = Grid::borrowed(&space);
+    let builder_out = explorer.run(&grid).expect("builder grid run").scored;
+    let legacy_out = explore_with_cache(&net, &space, &p, &constraints, &cache).unwrap();
+    assert_eq!(builder_out, legacy_out, "Explorer diverged from legacy explore");
+    let m_lg = bench::bench("search legacy explore", explore_budget, || {
+        explore_with_cache(&net, &space, &p, &constraints, &cache).unwrap()
+    });
+    let m_bd = bench::bench("search builder grid", explore_budget, || {
+        explorer.run(&grid).unwrap()
+    });
+    let builder_ratio = m_lg.p50() / m_bd.p50();
+    println!("  builder vs legacy: {builder_ratio:.2}x (must stay ~1.0)\n");
+    stages.stage(&m_lg, space.len());
+    stages.stage(&m_bd, space.len());
+    ratios.set("search_builder_vs_legacy", jnum(builder_ratio));
     println!("service metrics: {}", p.metrics.summary());
 
     println!("\n-- analysis paths --");

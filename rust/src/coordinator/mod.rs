@@ -16,4 +16,4 @@ pub mod metrics;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use service::{BatchPolicy, PredictionService, Predictor, Task};
+pub use service::{BatchPolicy, EvalBudget, PredictionService, Predictor, Task};

@@ -23,7 +23,12 @@
 //!   exist as per-point `Vec`s. This is the §Perf fix for `explore`'s
 //!   2×N single-row round trips, measured in `benches/hotpath.rs` as the
 //!   single-vs-bulk service ratio.
+//! * **Budgeted handles** ([`Predictor::with_eval_budget`]) share an
+//!   [`EvalBudget`] row counter across every clone, giving the DSE
+//!   layer's evaluation budget a hard, service-level backstop: once the
+//!   row limit is spent, further calls fail instead of executing.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -70,6 +75,59 @@ impl Engine {
     }
 }
 
+/// A shared, thread-safe cap on predictor *row-evaluations* — the hard
+/// backstop behind the DSE layer's evaluation budget
+/// ([`crate::dse::Explorer::budget`]).
+///
+/// The unit is one feature row scored by one task kernel: a design point
+/// costs two rows (power + cycles). Attach a budget to a [`Predictor`]
+/// clone with [`Predictor::with_eval_budget`]; every clone of that handle
+/// draws down the same shared counter, so a budgeted search cannot
+/// overspend no matter how many worker shards score concurrently. A call
+/// that would exceed the limit fails *before* executing (and charges
+/// nothing), so the budget is exact, not best-effort.
+#[derive(Debug)]
+pub struct EvalBudget {
+    limit: u64,
+    used: AtomicU64,
+}
+
+impl EvalBudget {
+    /// Budget of `limit` rows.
+    pub fn new(limit: usize) -> EvalBudget {
+        EvalBudget {
+            limit: limit as u64,
+            used: AtomicU64::new(0),
+        }
+    }
+
+    /// Rows charged so far.
+    pub fn used(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    /// The row limit.
+    pub fn limit(&self) -> u64 {
+        self.limit
+    }
+
+    /// Rows still available.
+    pub fn remaining(&self) -> u64 {
+        self.limit.saturating_sub(self.used())
+    }
+
+    /// Atomically charge `rows`; `false` (and no charge) if that would
+    /// exceed the limit.
+    fn try_charge(&self, rows: u64) -> bool {
+        self.used
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |u| {
+                let next = u.checked_add(rows)?;
+                (next <= self.limit).then_some(next)
+            })
+            .is_ok()
+    }
+}
+
 struct Request {
     task: Task,
     features: Vec<f64>,
@@ -87,6 +145,9 @@ pub struct Predictor {
     tx: mpsc::Sender<Control>,
     engine: Arc<Engine>,
     pub metrics: Arc<Metrics>,
+    /// Optional row-evaluation budget shared by every clone of this
+    /// handle ([`Predictor::with_eval_budget`]).
+    budget: Option<Arc<EvalBudget>>,
 }
 
 /// Owns the worker thread; dropping shuts the service down.
@@ -160,6 +221,7 @@ impl PredictionService {
                 tx,
                 engine,
                 metrics,
+                budget: None,
             },
         })
     }
@@ -179,8 +241,39 @@ impl Drop for PredictionService {
 }
 
 impl Predictor {
+    /// A clone of this handle whose predictions draw down `budget`.
+    ///
+    /// Every clone *of the returned handle* (e.g. the per-shard clones a
+    /// parallel sweep makes) shares the same counter; the original handle
+    /// stays unbudgeted. Exceeding the budget fails the offending call
+    /// with an error instead of executing it — the service itself is
+    /// unaffected and other handles keep working.
+    pub fn with_eval_budget(&self, budget: Arc<EvalBudget>) -> Predictor {
+        Predictor {
+            tx: self.tx.clone(),
+            engine: self.engine.clone(),
+            metrics: self.metrics.clone(),
+            budget: Some(budget),
+        }
+    }
+
+    /// Charge `rows` against the attached budget, if any.
+    fn charge(&self, rows: usize) -> Result<()> {
+        if let Some(b) = &self.budget {
+            anyhow::ensure!(
+                b.try_charge(rows as u64),
+                "prediction eval budget exhausted ({} of {} rows used, {} more requested)",
+                b.used(),
+                b.limit(),
+                rows
+            );
+        }
+        Ok(())
+    }
+
     /// Predict one feature vector (blocks until the batch it joins runs).
     pub fn predict(&self, task: Task, features: Vec<f64>) -> Result<f64> {
+        self.charge(1)?;
         let (tx, rx) = mpsc::channel();
         self.metrics.record_single();
         self.tx
@@ -221,6 +314,7 @@ impl Predictor {
         if n_rows == 0 {
             return Ok(Vec::new());
         }
+        self.charge(n_rows)?;
         self.metrics.record_bulk(n_rows);
         let t0 = Instant::now();
         let result = exec();
@@ -335,4 +429,49 @@ fn worker_loop(
     }
     // `flush_pool` drops here: the queue closes, pending flushes drain,
     // workers join — all before the service's Drop returns.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_budget_charges_exactly_to_the_limit() {
+        let b = EvalBudget::new(10);
+        assert!(b.try_charge(4));
+        assert!(b.try_charge(6)); // lands exactly on the limit
+        assert_eq!(b.used(), 10);
+        assert_eq!(b.remaining(), 0);
+        assert!(!b.try_charge(1));
+        // A refused charge spends nothing.
+        assert_eq!(b.used(), 10);
+    }
+
+    #[test]
+    fn eval_budget_refuses_overshooting_bulk() {
+        let b = EvalBudget::new(8);
+        assert!(b.try_charge(5));
+        // 5 + 4 > 8: refused wholesale, the 3 remaining rows stay.
+        assert!(!b.try_charge(4));
+        assert_eq!(b.remaining(), 3);
+        assert!(b.try_charge(3));
+    }
+
+    #[test]
+    fn eval_budget_is_shared_across_threads() {
+        let b = Arc::new(EvalBudget::new(1000));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let b = b.clone();
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        let _ = b.try_charge(1);
+                    }
+                });
+            }
+        });
+        // 1600 attempted, capped at the limit.
+        assert_eq!(b.used(), 1000);
+        assert!(!b.try_charge(1));
+    }
 }

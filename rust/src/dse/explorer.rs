@@ -1,0 +1,765 @@
+//! The unified DSE session API: one [`Explorer`] builder, one scoring
+//! core, any [`SearchStrategy`].
+//!
+//! Historically every search flavour was its own free function threading
+//! `(net, predictor, constraints, cache, workers, seed)` by hand — ten
+//! near-duplicates (`explore`×4, `random_search`×3, `local_search`×3)
+//! whose surface multiplied with every new knob. The
+//! `Explorer` collapses them: the builder accumulates the *session*
+//! (network, predictor, constraints, objective, cache, worker count, RNG
+//! seed, evaluation budget), and [`Explorer::run`] executes any strategy
+//! against the one shared scoring core (the crate-private
+//! `dse::score_points` behind an [`Evaluator`]), returning a uniform
+//! [`Exploration`] outcome:
+//! every scored point, the constraint-feasible best, the Pareto frontier,
+//! the best-so-far trajectory, and [`Telemetry`] (evaluations used,
+//! per-constraint rejection counts, scoring shards dispatched).
+//!
+//! Budgets are enforced twice: strategies claim candidates from the
+//! builder's budget ([`Evaluator::take_budget`]), and the predictor
+//! handle itself carries a row-level
+//! [`EvalBudget`](crate::coordinator::EvalBudget) backstop (two rows —
+//! power + cycles — per candidate), so a miscounting strategy fails
+//! instead of overspending.
+//!
+//! Determinism is inherited from the strategies and the pool: outcomes
+//! depend only on `(strategy, seed, budget, constraints)`, never on the
+//! worker count or scheduling.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cnn::ir::Network;
+use crate::coordinator::{EvalBudget, Predictor};
+use crate::dse::strategy::SearchStrategy;
+use crate::dse::{
+    pareto_frontier, rank, score_points, DescriptorCache, DesignPoint, DseConstraints,
+    Objective, ScoredPoint,
+};
+use crate::gpu::specs::GpuSpec;
+use crate::util::pool;
+
+/// Typed exploration failure.
+///
+/// The vendored `anyhow` cannot downcast, so callers that need to react
+/// to a specific failure (e.g. *"no design point satisfied the
+/// constraints — relax them"*, as opposed to an I/O or staging error)
+/// match on this enum before the error is erased into `anyhow::Error`
+/// (the `From` conversion is automatic via `std::error::Error`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DseError {
+    /// Every scored candidate violated at least one constraint (or the
+    /// exploration scored nothing at all). Carries the telemetry needed
+    /// to report *which* constraints did the rejecting.
+    NoFeasiblePoint {
+        /// Candidates that were scored.
+        evaluations: usize,
+        /// Per-constraint rejection counts.
+        rejected: Rejections,
+    },
+}
+
+impl fmt::Display for DseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DseError::NoFeasiblePoint {
+                evaluations,
+                rejected,
+            } => write!(
+                f,
+                "no feasible design point ({evaluations} candidates evaluated; \
+                 rejected by constraint: {rejected})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DseError {}
+
+/// How many scored candidates each constraint rejected (a candidate
+/// violating several constraints counts against each).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Rejections {
+    pub power: u64,
+    pub latency: u64,
+    pub throughput: u64,
+    pub memory: u64,
+}
+
+impl Rejections {
+    /// Sum of all rejection counts (≥ the number of infeasible points;
+    /// a point can trip several constraints).
+    pub fn total(&self) -> u64 {
+        self.power + self.latency + self.throughput + self.memory
+    }
+}
+
+impl fmt::Display for Rejections {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "power={} latency={} throughput={} memory={}",
+            self.power, self.latency, self.throughput, self.memory
+        )
+    }
+}
+
+/// Thread-safe rejection tally shared by every scoring unit of one
+/// exploration (shards score concurrently; counts are order-free sums).
+#[derive(Default)]
+pub(crate) struct RejectionCounters {
+    power: AtomicU64,
+    latency: AtomicU64,
+    throughput: AtomicU64,
+    memory: AtomicU64,
+}
+
+impl RejectionCounters {
+    /// Tally one scored candidate against each constraint it violates.
+    /// `mem_rejected` carries the working-set check result (only the
+    /// grid applies it; see `dse::score_points`).
+    pub(crate) fn count(&self, s: &ScoredPoint, c: &DseConstraints, mem_rejected: bool) {
+        if mem_rejected {
+            self.memory.fetch_add(1, Ordering::Relaxed);
+        }
+        if c.max_power_w.is_some_and(|cap| s.power_w > cap) {
+            self.power.fetch_add(1, Ordering::Relaxed);
+        }
+        if c.max_latency_s.is_some_and(|cap| s.latency_s > cap) {
+            self.latency.fetch_add(1, Ordering::Relaxed);
+        }
+        if c.min_throughput.is_some_and(|min| s.throughput < min) {
+            self.throughput.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn snapshot(&self) -> Rejections {
+        Rejections {
+            power: self.power.load(Ordering::Relaxed),
+            latency: self.latency.load(Ordering::Relaxed),
+            throughput: self.throughput.load(Ordering::Relaxed),
+            memory: self.memory.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Run accounting attached to every [`Exploration`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Telemetry {
+    /// Candidates scored (= predictor row-pairs spent).
+    pub evaluations: usize,
+    /// The builder's evaluation budget, if one was set.
+    pub budget: Option<usize>,
+    /// Scoring units dispatched to the worker pool (grid shards, random
+    /// chunks, per-arm/per-step chunks) — the wall-clock parallelism
+    /// record.
+    pub shards: usize,
+    /// Per-constraint rejection counts, uniform across strategies.
+    pub rejected: Rejections,
+}
+
+/// The uniform outcome of [`Explorer::run`].
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    /// Machine name of the strategy that produced this outcome.
+    pub strategy: &'static str,
+    /// Objective the session ranked under.
+    pub objective: Objective,
+    /// Every scored candidate, in the strategy's canonical deterministic
+    /// order (grid order, draw order, concatenated arm order, annealing
+    /// step order).
+    pub scored: Vec<ScoredPoint>,
+    /// Constraint-feasible best under the objective (first-seen wins
+    /// ties), if any candidate was feasible. Prefer [`Exploration::best`]
+    /// for the typed-error accessor.
+    pub best: Option<ScoredPoint>,
+    /// Best-so-far objective value after each evaluation (`NaN` until the
+    /// first feasible candidate).
+    pub trajectory: Vec<f64>,
+    pub telemetry: Telemetry,
+}
+
+impl Exploration {
+    /// Pareto frontier of the feasible set, minimizing (power, latency).
+    /// Computed on demand (O(feasible²)): scored-only consumers — the
+    /// deprecated `explore*`/search wrappers among them — never pay for
+    /// it.
+    pub fn pareto(&self) -> Vec<ScoredPoint> {
+        pareto_frontier(&self.scored)
+    }
+
+    /// The feasible best, or the typed [`DseError::NoFeasiblePoint`]
+    /// (never a panic or a silently empty ranking).
+    pub fn best(&self) -> Result<&ScoredPoint, DseError> {
+        self.best.as_ref().ok_or(DseError::NoFeasiblePoint {
+            evaluations: self.telemetry.evaluations,
+            rejected: self.telemetry.rejected,
+        })
+    }
+
+    /// The `k` best feasible points under the session objective.
+    pub fn top_k(&self, k: usize) -> Vec<ScoredPoint> {
+        let mut ranked = rank(&self.scored, self.objective);
+        ranked.truncate(k);
+        ranked
+    }
+}
+
+/// Keep `best` at the objective-minimal *feasible* point; first-seen
+/// wins ties (strict improvement only).
+fn update_best(s: &ScoredPoint, objective: Objective, best: &mut Option<ScoredPoint>) {
+    if s.feasible
+        && best
+            .as_ref()
+            .map(|b| objective.key(s) < objective.key(b))
+            .unwrap_or(true)
+    {
+        *best = Some(s.clone());
+    }
+}
+
+/// One DSE session: shared context accumulated by a builder, executed
+/// against any [`SearchStrategy`] by [`Explorer::run`].
+///
+/// ```
+/// use hypa_dse::cnn::zoo;
+/// use hypa_dse::coordinator::{BatchPolicy, PredictionService};
+/// use hypa_dse::dse::{DesignSpace, DseConstraints, Explorer, Grid, Objective, Random};
+/// use hypa_dse::ml::features::N_FEATURES;
+/// use hypa_dse::ml::{ForestConfig, Knn, RandomForest, Regressor};
+///
+/// // Train tiny stand-in models at the real feature width…
+/// let x: Vec<Vec<f64>> = (0..40)
+///     .map(|i| (0..N_FEATURES).map(|j| ((i * 31 + j * 7) % 97) as f64).collect())
+///     .collect();
+/// let y_power: Vec<f64> = x.iter().map(|r| 40.0 + r[0]).collect();
+/// let y_cycles: Vec<f64> = x.iter().map(|r| 1e6 + 1e4 * r[1]).collect();
+/// let mut forest = RandomForest::new(ForestConfig {
+///     n_trees: 4,
+///     max_depth: 4,
+///     ..Default::default()
+/// });
+/// forest.fit(&x, &y_power);
+/// let mut knn = Knn::new(3);
+/// knn.fit(&x, &y_cycles);
+///
+/// // …serve them through the batched coordinator…
+/// let service = PredictionService::start(
+///     "artifacts".into(),
+///     forest,
+///     knn,
+///     N_FEATURES,
+///     BatchPolicy::default(),
+/// )
+/// .unwrap();
+/// let predictor = service.predictor();
+///
+/// // …and run two strategies through one session.
+/// let net = zoo::lenet5();
+/// let explorer = Explorer::new(&net, &predictor)
+///     .constraints(DseConstraints {
+///         max_power_w: Some(400.0),
+///         ..Default::default()
+///     })
+///     .objective(Objective::MinEdp)
+///     .seed(7)
+///     .budget(16);
+///
+/// let grid = explorer.run(&Grid::new(DesignSpace::default_grid(2, &[1]))).unwrap();
+/// assert!(grid.telemetry.evaluations <= 16); // budget truncates the grid
+///
+/// let random = explorer.run(&Random::new(&[1])).unwrap();
+/// assert_eq!(random.telemetry.evaluations, 16);
+/// assert_eq!(random.trajectory.len(), 16);
+/// if let Ok(best) = random.best() {
+///     assert!(best.feasible);
+/// }
+/// ```
+pub struct Explorer<'a> {
+    net: &'a Network,
+    predictor: &'a Predictor,
+    constraints: DseConstraints,
+    objective: Objective,
+    cache: Option<&'a DescriptorCache>,
+    workers: usize,
+    seed: u64,
+    budget: Option<usize>,
+}
+
+impl<'a> Explorer<'a> {
+    /// A session over `net` scored by `predictor`, with default context:
+    /// no constraints, [`Objective::MinEdp`], a private descriptor cache,
+    /// the machine's worker count, seed 1 and no evaluation budget.
+    pub fn new(net: &'a Network, predictor: &'a Predictor) -> Explorer<'a> {
+        Explorer {
+            net,
+            predictor,
+            constraints: DseConstraints::default(),
+            objective: Objective::MinEdp,
+            cache: None,
+            workers: pool::num_threads(),
+            seed: 1,
+            budget: None,
+        }
+    }
+
+    /// Feasibility constraints applied to every scored candidate.
+    pub fn constraints(mut self, constraints: DseConstraints) -> Self {
+        self.constraints = constraints;
+        self
+    }
+
+    /// Ranking objective (best point, trajectory, `top_k`).
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Reuse a shared [`DescriptorCache`] (services share one across
+    /// sessions so the per-`(net, batch)` HyPA analysis is paid once).
+    pub fn cache(mut self, cache: &'a DescriptorCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Worker count for parallel scoring (outputs never depend on it).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// RNG seed for the stochastic strategies.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Evaluation budget: at most `max_evals` candidates are scored
+    /// (grid runs truncate deterministically; the budgeted searches use
+    /// it as their sample/step count). Also arms a row-level
+    /// [`EvalBudget`] backstop on the predictor handle.
+    pub fn budget(mut self, max_evals: usize) -> Self {
+        self.budget = Some(max_evals);
+        self
+    }
+
+    /// Execute `strategy` against this session's shared scoring core and
+    /// assemble the uniform [`Exploration`] outcome.
+    pub fn run(&self, strategy: &dyn SearchStrategy) -> Result<Exploration> {
+        let own_cache;
+        let cache = match self.cache {
+            Some(c) => c,
+            None => {
+                own_cache = DescriptorCache::new();
+                &own_cache
+            }
+        };
+        // Row-level backstop: a budgeted session may spend at most two
+        // predictor rows (power + cycles) per candidate, even if a
+        // strategy miscounts its own evaluations.
+        let guarded;
+        let predictor = match self.budget {
+            Some(b) => {
+                guarded = self
+                    .predictor
+                    .with_eval_budget(Arc::new(EvalBudget::new(b.saturating_mul(2))));
+                &guarded
+            }
+            None => self.predictor,
+        };
+
+        let mut ev = Evaluator {
+            net: self.net,
+            predictor,
+            constraints: &self.constraints,
+            cache,
+            objective: self.objective,
+            workers: self.workers,
+            seed: self.seed,
+            budget: self.budget,
+            remaining: self.budget.unwrap_or(usize::MAX),
+            shards: AtomicUsize::new(0),
+            tally: RejectionCounters::default(),
+        };
+        let scored = strategy.run(&mut ev)?;
+
+        // Uniform outcome assembly: walking the canonical scored order
+        // with first-seen-wins strict improvement reproduces each legacy
+        // search's best/trajectory bit-for-bit (for the parallel arms,
+        // the global walk equals the legacy per-arm merge + monotone
+        // rewrite).
+        let mut best: Option<ScoredPoint> = None;
+        let mut trajectory = Vec::with_capacity(scored.len());
+        for s in &scored {
+            update_best(s, self.objective, &mut best);
+            trajectory.push(best.as_ref().map(|b| self.objective.key(b)).unwrap_or(f64::NAN));
+        }
+        let telemetry = Telemetry {
+            evaluations: scored.len(),
+            budget: self.budget,
+            shards: ev.shards.load(Ordering::Relaxed),
+            rejected: ev.tally.snapshot(),
+        };
+        Ok(Exploration {
+            strategy: strategy.name(),
+            objective: self.objective,
+            scored,
+            best,
+            trajectory,
+            telemetry,
+        })
+    }
+}
+
+/// The scoring core handed to a running [`SearchStrategy`]: the session
+/// context plus the *only* paths into the crate-private
+/// `dse::score_points` pipeline —
+/// sharded scoring for candidate lists ([`Evaluator::score_sharded`])
+/// and per-worker sequential scorers for chain strategies
+/// ([`Evaluator::run_arms`], [`Evaluator::scorer`]). Strategies never
+/// touch the predictor or the pool directly, so exactly one scoring /
+/// sharding implementation exists.
+pub struct Evaluator<'a> {
+    net: &'a Network,
+    predictor: &'a Predictor,
+    constraints: &'a DseConstraints,
+    cache: &'a DescriptorCache,
+    objective: Objective,
+    workers: usize,
+    seed: u64,
+    budget: Option<usize>,
+    remaining: usize,
+    shards: AtomicUsize,
+    tally: RejectionCounters,
+}
+
+impl Evaluator<'_> {
+    /// The GPU set candidates may draw from.
+    pub fn gpus(&self) -> &[GpuSpec] {
+        self.cache.gpus()
+    }
+
+    /// The session seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The session objective.
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// The session constraints.
+    pub fn constraints(&self) -> &DseConstraints {
+        self.constraints
+    }
+
+    /// The session worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The session budget (`None` = unlimited).
+    pub fn budget(&self) -> Option<usize> {
+        self.budget
+    }
+
+    /// Claim up to `want` evaluations from the remaining budget; returns
+    /// how many were granted (= `want` when no budget is set).
+    pub fn take_budget(&mut self, want: usize) -> usize {
+        let granted = want.min(self.remaining);
+        self.remaining -= granted;
+        granted
+    }
+
+    /// Claim the whole remaining budget; error if the builder never set
+    /// one (for strategies with no intrinsic size of their own).
+    pub fn take_required_budget(&mut self, strategy: &str) -> Result<usize> {
+        anyhow::ensure!(
+            self.budget.is_some(),
+            "the {strategy} strategy needs an evaluation budget: set Explorer::budget(n)"
+        );
+        Ok(self.take_budget(usize::MAX))
+    }
+
+    /// Pre-build the per-`(net, batch)` descriptors sequentially so
+    /// parallel scoring units hit the cache instead of racing on the
+    /// expensive HyPA analysis.
+    pub fn warm(&self, batches: &[usize]) -> Result<()> {
+        for &b in batches {
+            self.cache.descriptor(self.net, b)?;
+        }
+        Ok(())
+    }
+
+    /// Score a candidate list across the worker pool with deterministic
+    /// output order (shards are concatenated in shard order; each
+    /// candidate's record depends only on itself).
+    ///
+    /// `chunk` additionally bounds the rows per bulk predictor call
+    /// *within* a shard (the budgeted searches cap their feature-matrix
+    /// size this way); `apply_memory` gates the working-set feasibility
+    /// check (the grid applies it; searches restrict `batches` up front
+    /// instead).
+    pub fn score_sharded(
+        &self,
+        points: &[DesignPoint],
+        min_shard: usize,
+        chunk: Option<usize>,
+        apply_memory: bool,
+    ) -> Result<Vec<ScoredPoint>> {
+        if points.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut batches: Vec<usize> = points.iter().map(|p| p.batch).collect();
+        batches.sort_unstable();
+        batches.dedup();
+        self.warm(&batches)?;
+
+        // The worker closure may only capture `Sync` state (the
+        // `Predictor` handle is `Send`-not-`Sync`; it rides along as the
+        // per-shard moved context).
+        let (net, constraints, cache) = (self.net, self.constraints, self.cache);
+        let (tally, shards) = (&self.tally, &self.shards);
+        let predictor = self.predictor;
+        let shard_results = pool::map_shards_ctx(
+            points,
+            min_shard,
+            self.workers,
+            || predictor.clone(),
+            move |p, _offset, shard| -> Result<Vec<ScoredPoint>> {
+                match chunk {
+                    Some(c) => {
+                        let mut out = Vec::with_capacity(shard.len());
+                        for ch in shard.chunks(c) {
+                            shards.fetch_add(1, Ordering::Relaxed);
+                            out.extend(score_points(
+                                net, ch, &p, constraints, cache, apply_memory, tally,
+                            )?);
+                        }
+                        Ok(out)
+                    }
+                    None => {
+                        shards.fetch_add(1, Ordering::Relaxed);
+                        score_points(net, shard, &p, constraints, cache, apply_memory, tally)
+                    }
+                }
+            },
+        );
+
+        let mut scored = Vec::with_capacity(points.len());
+        for r in shard_results {
+            scored.extend(r?);
+        }
+        Ok(scored)
+    }
+
+    /// Run `specs` = `(arm_seed, arm_budget)` pairs as independent
+    /// sequential units on the worker pool, returning their results in
+    /// spec order (a worker that receives several specs runs them
+    /// back-to-back, so output never depends on the worker count). Each
+    /// unit receives its own [`ChunkScorer`].
+    pub fn run_arms<R, F>(&self, specs: &[(u64, usize)], f: F) -> Vec<Result<R>>
+    where
+        R: Send,
+        F: Fn(&ChunkScorer<'_>, u64, usize) -> Result<R> + Sync,
+    {
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        let arm_workers = specs.len().min(self.workers).max(1);
+        let (net, constraints, cache) = (self.net, self.constraints, self.cache);
+        let (tally, shards) = (&self.tally, &self.shards);
+        let predictor = self.predictor;
+        pool::map_shards_ctx(
+            specs,
+            1,
+            arm_workers,
+            || predictor.clone(),
+            |p, _offset, shard| -> Vec<Result<R>> {
+                let scorer = ChunkScorer {
+                    net,
+                    constraints,
+                    cache,
+                    tally,
+                    shards,
+                    predictor: p,
+                };
+                shard
+                    .iter()
+                    .map(|&(seed, budget)| f(&scorer, seed, budget))
+                    .collect()
+            },
+        )
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// A caller-thread [`ChunkScorer`] for strategies that are one
+    /// sequential chain (e.g. annealing).
+    pub fn scorer(&self) -> ChunkScorer<'_> {
+        ChunkScorer {
+            net: self.net,
+            constraints: self.constraints,
+            cache: self.cache,
+            tally: &self.tally,
+            shards: &self.shards,
+            predictor: self.predictor.clone(),
+        }
+    }
+}
+
+/// Per-worker scoring handle for sequential strategy chains (hill-climb
+/// arms, annealing steps): scores one chunk at a time through the shared
+/// core on the calling thread — two bulk predictor calls per chunk, no
+/// memory-constraint check (chain strategies restrict `batches` up
+/// front).
+pub struct ChunkScorer<'a> {
+    net: &'a Network,
+    constraints: &'a DseConstraints,
+    cache: &'a DescriptorCache,
+    tally: &'a RejectionCounters,
+    shards: &'a AtomicUsize,
+    predictor: Predictor,
+}
+
+impl ChunkScorer<'_> {
+    /// The GPU set candidates may draw from.
+    pub fn gpus(&self) -> &[GpuSpec] {
+        self.cache.gpus()
+    }
+
+    /// Score one chunk of candidates (order-preserving).
+    pub fn score_chunk(&self, points: &[DesignPoint]) -> Result<Vec<ScoredPoint>> {
+        if points.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.shards.fetch_add(1, Ordering::Relaxed);
+        score_points(
+            self.net,
+            points,
+            &self.predictor,
+            self.constraints,
+            self.cache,
+            false,
+            self.tally,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::DesignPoint;
+
+    fn fake(pw: f64, lat: f64, feasible: bool) -> ScoredPoint {
+        ScoredPoint {
+            point: DesignPoint {
+                gpu: "x".into(),
+                f_mhz: 1000.0,
+                batch: 1,
+            },
+            power_w: pw,
+            cycles: lat * 1e9,
+            latency_s: lat,
+            throughput: 1.0 / lat,
+            energy_per_inf_j: pw * lat,
+            feasible,
+        }
+    }
+
+    #[test]
+    fn no_feasible_point_error_is_typed_and_displayable() {
+        let e = DseError::NoFeasiblePoint {
+            evaluations: 12,
+            rejected: Rejections {
+                power: 12,
+                ..Default::default()
+            },
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("no feasible design point"), "{msg}");
+        assert!(msg.contains("power=12"), "{msg}");
+        // The vendored anyhow's blanket From<std::error::Error> applies.
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any:#}").contains("12 candidates"));
+    }
+
+    #[test]
+    fn rejection_counters_tally_every_violated_constraint() {
+        let c = DseConstraints {
+            max_power_w: Some(100.0),
+            max_latency_s: Some(0.5),
+            min_throughput: Some(4.0),
+            respect_memory: true,
+        };
+        let tally = RejectionCounters::default();
+        // Violates power + latency + throughput (throughput 1.0 < 4.0)
+        // and the memory check.
+        tally.count(&fake(150.0, 1.0, false), &c, true);
+        // Feasible point: nothing counted.
+        tally.count(&fake(50.0, 0.1, true), &c, false);
+        let r = tally.snapshot();
+        assert_eq!(
+            r,
+            Rejections {
+                power: 1,
+                latency: 1,
+                throughput: 1,
+                memory: 1
+            }
+        );
+        assert_eq!(r.total(), 4);
+    }
+
+    #[test]
+    fn update_best_prefers_feasible_first_seen_on_ties() {
+        let mut best = None;
+        let a = fake(100.0, 0.2, true);
+        let tie = fake(90.0, 0.2, true); // same latency key, later
+        let worse = fake(80.0, 0.3, true);
+        let infeasible = fake(1.0, 0.01, false);
+        update_best(&infeasible, Objective::MinLatency, &mut best);
+        assert!(best.is_none());
+        update_best(&a, Objective::MinLatency, &mut best);
+        update_best(&tie, Objective::MinLatency, &mut best);
+        update_best(&worse, Objective::MinLatency, &mut best);
+        assert_eq!(best.unwrap().power_w, 100.0, "first-seen must win ties");
+    }
+
+    #[test]
+    fn exploration_best_returns_typed_error_when_empty() {
+        let e = Exploration {
+            strategy: "grid",
+            objective: Objective::MinEdp,
+            scored: vec![fake(500.0, 0.1, false)],
+            best: None,
+            trajectory: vec![f64::NAN],
+            telemetry: Telemetry {
+                evaluations: 1,
+                budget: None,
+                shards: 1,
+                rejected: Rejections {
+                    power: 1,
+                    ..Default::default()
+                },
+            },
+        };
+        match e.best() {
+            Err(DseError::NoFeasiblePoint {
+                evaluations,
+                rejected,
+            }) => {
+                assert_eq!(evaluations, 1);
+                assert_eq!(rejected.power, 1);
+            }
+            other => panic!("expected NoFeasiblePoint, got {other:?}"),
+        }
+        assert!(e.top_k(5).is_empty());
+        assert!(e.pareto().is_empty());
+    }
+}

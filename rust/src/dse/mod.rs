@@ -8,13 +8,23 @@
 //! service, and ranked under user constraints (power cap, latency target,
 //! memory capacity).
 //!
+//! The public surface is one session API: [`Explorer`] (a builder
+//! accumulating network, predictor, constraints, objective, cache,
+//! workers, seed and evaluation budget) executes any [`SearchStrategy`]
+//! — [`Grid`], [`Random`], [`LocalRestarts`], [`Anneal`] — against one
+//! shared scoring core and returns a uniform [`Exploration`] outcome
+//! (scored points, feasible best, Pareto frontier, trajectory,
+//! [`Telemetry`]). The historical free functions ([`explore`] and the
+//! [`search`] module) survive as thin deprecated wrappers with
+//! bit-exact outputs.
+//!
 //! The evaluation engine is built for throughput (predictions/sec is the
 //! metric DSE quality scales with):
 //!
 //! * [`DescriptorCache`] — feature extraction per `(network, batch)` and
-//!   the GPU-name index are computed once and shared by [`explore`],
-//!   [`search::random_search`] and [`search::local_search`], instead of
-//!   per-call `HashMap` rebuilds and O(catalog) linear lookups;
+//!   the GPU-name index are computed once and shared by every strategy a
+//!   session runs, instead of per-call `HashMap` rebuilds and O(catalog)
+//!   linear lookups;
 //! * feature rows are emitted straight into a flat
 //!   [`FeatureMatrix`](crate::ml::FeatureMatrix) recycled per worker
 //!   ([`crate::util::pool::with_scratch`]: cleared, not reallocated, per
@@ -22,14 +32,22 @@
 //!   per-chunk allocations once a worker's buffer is warm) and scored
 //!   with two bulk [`Predictor::predict_matrix`] calls per chunk, which
 //!   the staged batch kernels consume without any row repacking;
-//! * [`explore`] shards the grid across a scoped worker pool
+//! * scoring shards across a scoped worker pool
 //!   ([`crate::util::pool`]); shards are concatenated in order, so the
 //!   output is identical (element-for-element) to the sequential path —
-//!   asserted by `rust/tests/batch_parity.rs`. The budgeted searches
-//!   ([`search`]) parallelize the same way: scoring chunks and restart
-//!   arms run as deterministic parallel units on the pool.
+//!   asserted by `rust/tests/batch_parity.rs` and
+//!   `rust/tests/explorer_parity.rs`. The budgeted strategies
+//!   parallelize the same way: scoring chunks and restart arms run as
+//!   deterministic parallel units on the pool.
 
+pub mod explorer;
 pub mod search;
+pub mod strategy;
+
+pub use explorer::{
+    ChunkScorer, DseError, Evaluator, Exploration, Explorer, Rejections, Telemetry,
+};
+pub use strategy::{Anneal, Grid, LocalRestarts, Random, SearchStrategy};
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -251,66 +269,31 @@ pub(crate) fn derive_scored(
 
 /// Minimum design points per worker shard (below this, spawn cost beats
 /// the win).
-const EXPLORE_MIN_SHARD: usize = 32;
+pub(crate) const EXPLORE_MIN_SHARD: usize = 32;
 
 /// Score every point with the batched ML predictor, sharding the grid
 /// across the worker pool. Output order matches `space.points`.
-///
-/// ```
-/// use hypa_dse::cnn::zoo;
-/// use hypa_dse::coordinator::{BatchPolicy, PredictionService};
-/// use hypa_dse::dse::{explore, rank, DesignSpace, DseConstraints, Objective};
-/// use hypa_dse::ml::features::N_FEATURES;
-/// use hypa_dse::ml::{ForestConfig, Knn, RandomForest, Regressor};
-///
-/// // Train tiny stand-in models at the real feature width.
-/// let x: Vec<Vec<f64>> = (0..40)
-///     .map(|i| (0..N_FEATURES).map(|j| ((i * 31 + j * 7) % 97) as f64).collect())
-///     .collect();
-/// let y_power: Vec<f64> = x.iter().map(|r| 40.0 + r[0]).collect();
-/// let y_cycles: Vec<f64> = x.iter().map(|r| 1e6 + 1e4 * r[1]).collect();
-/// let mut forest = RandomForest::new(ForestConfig {
-///     n_trees: 4,
-///     max_depth: 4,
-///     ..Default::default()
-/// });
-/// forest.fit(&x, &y_power);
-/// let mut knn = Knn::new(3);
-/// knn.fit(&x, &y_cycles);
-///
-/// // Stage them onto the batched prediction service…
-/// let service = PredictionService::start(
-///     "artifacts".into(),
-///     forest,
-///     knn,
-///     N_FEATURES,
-///     BatchPolicy::default(),
-/// )
-/// .unwrap();
-///
-/// // …and sweep a small grid.
-/// let space = DesignSpace::default_grid(2, &[1]);
-/// let scored = explore(
-///     &zoo::lenet5(),
-///     &space,
-///     &service.predictor(),
-///     &DseConstraints::default(),
-/// )
-/// .unwrap();
-/// assert_eq!(scored.len(), space.len());
-/// let ranked = rank(&scored, Objective::MinLatency);
-/// assert!(!ranked.is_empty());
-/// ```
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer::new(net, predictor).run(&Grid::new(space)) — see dse::Explorer"
+)]
 pub fn explore(
     net: &Network,
     space: &DesignSpace,
     predictor: &Predictor,
     constraints: &DseConstraints,
 ) -> Result<Vec<ScoredPoint>> {
-    explore_with_cache(net, space, predictor, constraints, &DescriptorCache::new())
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .run(&Grid::borrowed(space))?
+        .scored)
 }
 
 /// [`explore`] reusing a shared [`DescriptorCache`] across calls.
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer::new(net, predictor).cache(cache).run(&Grid::new(space))"
+)]
 pub fn explore_with_cache(
     net: &Network,
     space: &DesignSpace,
@@ -318,11 +301,19 @@ pub fn explore_with_cache(
     constraints: &DseConstraints,
     cache: &DescriptorCache,
 ) -> Result<Vec<ScoredPoint>> {
-    explore_impl(net, space, predictor, constraints, cache, pool::num_threads())
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .cache(cache)
+        .run(&Grid::borrowed(space))?
+        .scored)
 }
 
 /// [`explore_with_cache`] with an explicit worker count (tests and
 /// benchmarks pin this to compare scheduling-independent output).
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer::new(net, predictor).cache(cache).workers(n).run(&Grid::new(space))"
+)]
 pub fn explore_with_threads(
     net: &Network,
     space: &DesignSpace,
@@ -331,11 +322,20 @@ pub fn explore_with_threads(
     cache: &DescriptorCache,
     workers: usize,
 ) -> Result<Vec<ScoredPoint>> {
-    explore_impl(net, space, predictor, constraints, cache, workers)
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .cache(cache)
+        .workers(workers)
+        .run(&Grid::borrowed(space))?
+        .scored)
 }
 
 /// Sequential reference path (also used by benches to measure the pool's
 /// speedup). Produces exactly the same output as the parallel path.
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer::new(net, predictor).cache(cache).workers(1).run(&Grid::new(space))"
+)]
 pub fn explore_seq(
     net: &Network,
     space: &DesignSpace,
@@ -343,50 +343,23 @@ pub fn explore_seq(
     constraints: &DseConstraints,
     cache: &DescriptorCache,
 ) -> Result<Vec<ScoredPoint>> {
-    explore_impl(net, space, predictor, constraints, cache, 1)
-}
-
-fn explore_impl(
-    net: &Network,
-    space: &DesignSpace,
-    predictor: &Predictor,
-    constraints: &DseConstraints,
-    cache: &DescriptorCache,
-    workers: usize,
-) -> Result<Vec<ScoredPoint>> {
-    if space.is_empty() {
-        return Ok(Vec::new());
-    }
-    // Pre-warm the per-batch descriptors sequentially so worker shards hit
-    // the cache instead of racing on the expensive HyPA analysis.
-    let mut batches: Vec<usize> = space.points.iter().map(|p| p.batch).collect();
-    batches.sort_unstable();
-    batches.dedup();
-    for &b in &batches {
-        cache.descriptor(net, b)?;
-    }
-
-    let shard_results = pool::map_shards_ctx(
-        &space.points,
-        EXPLORE_MIN_SHARD,
-        workers,
-        || predictor.clone(),
-        |p, _offset, shard| score_points(net, shard, &p, constraints, cache, true),
-    );
-
-    let mut scored = Vec::with_capacity(space.points.len());
-    for r in shard_results {
-        scored.extend(r?);
-    }
-    Ok(scored)
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .cache(cache)
+        .workers(1)
+        .run(&Grid::borrowed(space))?
+        .scored)
 }
 
 /// Score a contiguous run of design points: build all feature rows
 /// through the cache, make exactly two bulk predictor calls (power,
-/// cycles), derive the records. Shared by `explore`'s shards and both
-/// budgeted searches; `apply_memory` gates the working-set check (the
-/// searches skip it — they explore the continuous frequency axis where
-/// the working set depends only on batch, better handled by restricting
+/// cycles), derive the records, tally per-constraint rejections into the
+/// exploration's shared counters. **The one scoring implementation**:
+/// every strategy reaches it through the [`Explorer`]'s evaluator
+/// (sharded grid/random scoring, per-arm chunks, annealing steps).
+/// `apply_memory` gates the working-set check (the budgeted searches
+/// skip it — they explore the continuous frequency axis where the
+/// working set depends only on batch, better handled by restricting
 /// `batches` up front).
 pub(crate) fn score_points(
     net: &Network,
@@ -395,6 +368,7 @@ pub(crate) fn score_points(
     constraints: &DseConstraints,
     cache: &DescriptorCache,
     apply_memory: bool,
+    tally: &explorer::RejectionCounters,
 ) -> Result<Vec<ScoredPoint>> {
     // Resolve per-batch state once per chunk, not once per point: the
     // descriptor lookup takes the cache mutex and clones a String key,
@@ -442,7 +416,9 @@ pub(crate) fn score_points(
         } else {
             true
         };
-        scored.push(derive_scored(p, pw, cy, constraints, mem_ok));
+        let s = derive_scored(p, pw, cy, constraints, mem_ok);
+        tally.count(&s, constraints, check_memory && !mem_ok);
+        scored.push(s);
     }
     Ok(scored)
 }
@@ -451,10 +427,17 @@ pub(crate) fn score_points(
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Objective {
     MinLatency,
+    /// Per-inference energy: `power × latency / batch`.
     MinEnergy,
     MaxThroughput,
     /// Energy-delay product.
     MinEdp,
+    /// Predicted power × predicted latency — the whole-inference-pass
+    /// energy pick criterion from Metz et al., *Pick the Right Edge
+    /// Device*. Unlike [`Objective::MinEnergy`] it does not amortize
+    /// over the batch, so it prefers designs that finish one pass
+    /// cheaply over designs that pipeline many inferences per pass.
+    EnergyPerInference,
 }
 
 impl Objective {
@@ -464,6 +447,7 @@ impl Objective {
             Objective::MinEnergy => s.energy_per_inf_j,
             Objective::MaxThroughput => -s.throughput,
             Objective::MinEdp => s.energy_per_inf_j * s.latency_s,
+            Objective::EnergyPerInference => s.power_w * s.latency_s,
         }
     }
 
@@ -473,7 +457,31 @@ impl Objective {
             Objective::MinEnergy => "min-energy",
             Objective::MaxThroughput => "max-throughput",
             Objective::MinEdp => "min-edp",
+            Objective::EnergyPerInference => "energy-per-inference",
         }
+    }
+
+    /// Parse the machine name back (CLI flags, REST bodies).
+    pub fn parse(name: &str) -> Option<Objective> {
+        Some(match name {
+            "min-latency" => Objective::MinLatency,
+            "min-energy" => Objective::MinEnergy,
+            "max-throughput" => Objective::MaxThroughput,
+            "min-edp" => Objective::MinEdp,
+            "energy-per-inference" => Objective::EnergyPerInference,
+            _ => return None,
+        })
+    }
+
+    /// Every objective, for help strings and validation messages.
+    pub fn all() -> [Objective; 5] {
+        [
+            Objective::MinLatency,
+            Objective::MinEnergy,
+            Objective::MaxThroughput,
+            Objective::MinEdp,
+            Objective::EnergyPerInference,
+        ]
     }
 }
 
@@ -576,6 +584,68 @@ mod tests {
         let slow_frugal = fake_scored(10.0, 1.0, true); // e=10, edp=10
         let ranked = rank(&[fast_hungry, slow_frugal], Objective::MinEdp);
         assert_eq!(ranked[0].power_w, 200.0);
+    }
+
+    /// Like `fake_scored` but with a batch, so per-inference energy
+    /// (power·latency/batch) and per-pass energy (power·latency) diverge.
+    fn fake_scored_batch(pw: f64, lat: f64, batch: usize) -> ScoredPoint {
+        ScoredPoint {
+            point: DesignPoint {
+                gpu: "x".into(),
+                f_mhz: 1000.0,
+                batch,
+            },
+            power_w: pw,
+            cycles: lat * 1e9,
+            latency_s: lat,
+            throughput: batch as f64 / lat,
+            energy_per_inf_j: pw * lat / batch as f64,
+            feasible: true,
+        }
+    }
+
+    #[test]
+    fn energy_per_inference_ignores_batch_amortization() {
+        // Big batch: cheap per inference (1.25 J) but an expensive pass
+        // (20 J). Single inference: 15 J either way.
+        let batched = fake_scored_batch(100.0, 0.2, 16);
+        let single = fake_scored_batch(50.0, 0.3, 1);
+        let by_energy = rank(&[batched.clone(), single.clone()], Objective::MinEnergy);
+        assert_eq!(by_energy[0].point.batch, 16, "MinEnergy amortizes");
+        let by_pass = rank(&[batched, single], Objective::EnergyPerInference);
+        assert_eq!(
+            by_pass[0].point.batch, 1,
+            "EnergyPerInference must rank by power × latency"
+        );
+    }
+
+    #[test]
+    fn energy_per_inference_winner_is_on_the_pareto_frontier() {
+        // The power×latency minimum can never be (power, latency)-
+        // dominated: a dominator would have a strictly smaller product.
+        let pts = vec![
+            fake_scored_batch(100.0, 0.1, 1),
+            fake_scored_batch(50.0, 0.25, 4),
+            fake_scored_batch(20.0, 0.9, 1),
+            fake_scored_batch(60.0, 0.3, 2), // dominated by (50, 0.25)
+        ];
+        let best = rank(&pts, Objective::EnergyPerInference)
+            .into_iter()
+            .next()
+            .unwrap();
+        let front = pareto_frontier(&pts);
+        assert!(
+            front.iter().any(|s| s == &best),
+            "EPI best {best:?} missing from frontier {front:?}"
+        );
+    }
+
+    #[test]
+    fn objective_parse_roundtrips_every_name() {
+        for o in Objective::all() {
+            assert_eq!(Objective::parse(o.name()), Some(o), "{}", o.name());
+        }
+        assert_eq!(Objective::parse("nope"), None);
     }
 
     #[test]

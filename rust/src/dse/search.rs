@@ -1,50 +1,24 @@
-//! Optimization-based search over the design space — the paper's stated
-//! future work: "we aim to incorporate optimization techniques to search
-//! for the best GPGPU to enhance ML model inference while considering
-//! factors such as limited power supply and desired performance" (§IV).
+//! Legacy budgeted-search free functions — thin `#[deprecated]` wrappers
+//! over the unified [`Explorer`] session API.
 //!
-//! Two budgeted strategies over `GPU × continuous frequency × batch`
-//! (finer-grained than the exhaustive grid, whose frequency axis is
-//! quantized):
-//!
-//! * [`random_search`] — uniform sampling, the standard strong baseline;
-//! * [`local_search`]  — random restarts + hill climbing on (freq step,
-//!   batch step, GPU swap) moves, converging on the best corner with far
-//!   fewer predictor calls than the full grid.
-//!
-//! Both consume the same batched [`Predictor`] service as the exhaustive
-//! sweep, so their *cost* is measured in prediction calls — the honest
-//! budget unit for an ML-driven DSE. Candidates are scored in chunks
-//! (whole random-search blocks; all neighbours of a hill-climbing step)
-//! through [`Predictor::predict_matrix`] — two bulk calls per chunk
-//! instead of two single-row round trips per candidate — and GPU/feature
-//! lookups go through a shared [`DescriptorCache`].
-//!
-//! Both searches also *parallelize across the worker pool*
-//! ([`crate::util::pool`]) without giving up determinism:
-//!
-//! * `random_search` draws its whole candidate sequence from the seed up
-//!   front (the same sequence the sequential implementation scores), then
-//!   shards the scoring across the pool; results are reduced in candidate
-//!   order, so the outcome is identical for any worker count.
-//! * `local_search` runs its random restarts as independent *arms*, each
-//!   with a deterministic per-arm seed and budget share; the default arm
-//!   count is derived from the budget (never the core count), arms
-//!   execute concurrently and are merged in arm order, so the outcome
-//!   depends only on `(seed, budget, arms)` — never on scheduling or the
-//!   machine. One arm reproduces the classic sequential hill climber
-//!   exactly.
+//! Historically this module owned its own scoring/sharding machinery;
+//! that now lives behind [`Explorer`] and the
+//! [`SearchStrategy`](crate::dse::SearchStrategy) implementations
+//! ([`Random`], [`LocalRestarts`] in
+//! [`crate::dse::strategy`]), and these wrappers only adapt the unified
+//! [`Exploration`](crate::dse::Exploration) outcome back to the
+//! historical [`SearchResult`] shape. Outputs are bit-exact with the
+//! pre-redesign implementations (pinned by
+//! `rust/tests/explorer_parity.rs`): candidate draws, chunk sizes, arm
+//! seed streams and merge order are all preserved by the strategies.
 
 use anyhow::Result;
 
 use crate::cnn::ir::Network;
 use crate::coordinator::Predictor;
 use crate::dse::{
-    score_points, DescriptorCache, DesignPoint, DseConstraints, Objective, ScoredPoint,
+    DescriptorCache, DseConstraints, Explorer, LocalRestarts, Objective, Random, ScoredPoint,
 };
-use crate::gpu::specs::GpuSpec;
-use crate::util::pool;
-use crate::util::rng::Rng;
 
 /// Search outcome.
 #[derive(Debug, Clone)]
@@ -55,66 +29,21 @@ pub struct SearchResult {
     pub evaluations: usize,
 }
 
-/// Maximum candidates per bulk predictor call in `random_search` (bounds
-/// the per-call feature-matrix size regardless of budget or worker
-/// count); also the minimum rows per parallel scoring shard.
-const RANDOM_CHUNK: usize = 64;
-
-/// Minimum per-arm budget before `local_search` spreads restarts over
-/// another parallel arm (an arm needs enough evaluations to restart and
-/// climb, or the split just truncates climbs).
-const LOCAL_ARM_MIN_BUDGET: usize = 32;
-
-/// Cap on the derived arm count. Derived from the budget alone — never
-/// from the machine's core count — so a given `(seed, budget)` produces
-/// the same result everywhere; excess arms beyond the pool's worker
-/// count simply queue.
-const LOCAL_MAX_ARMS: usize = 8;
-
-/// Multiplier deriving a decorrelated per-arm RNG stream from the user
-/// seed (golden-ratio constant; arm 0 keeps the seed itself, so one arm
-/// reproduces the sequential search exactly).
-const ARM_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
-
-/// Score a chunk of candidates through the shared scoring pipeline
-/// ([`crate::dse::score_points`]): exactly two bulk predictor calls per
-/// chunk, no memory-constraint check (searches restrict `batches` up
-/// front instead).
-fn score_chunk(
-    net: &Network,
-    cache: &DescriptorCache,
-    points: &[DesignPoint],
-    predictor: &Predictor,
-    constraints: &DseConstraints,
-) -> Result<Vec<ScoredPoint>> {
-    score_points(net, points, predictor, constraints, cache, false)
-}
-
-fn random_point(rng: &mut Rng, gpus: &[GpuSpec], batches: &[usize]) -> DesignPoint {
-    let g = &gpus[rng.below(gpus.len())];
-    DesignPoint {
-        gpu: g.name.to_string(),
-        f_mhz: rng.range(g.min_mhz, g.boost_mhz).round(),
-        batch: batches[rng.below(batches.len())],
-    }
-}
-
-fn update_best(
-    s: &ScoredPoint,
-    objective: Objective,
-    best: &mut Option<ScoredPoint>,
-) {
-    if s.feasible
-        && best
-            .as_ref()
-            .map(|b| objective.key(s) < objective.key(b))
-            .unwrap_or(true)
-    {
-        *best = Some(s.clone());
+impl From<crate::dse::Exploration> for SearchResult {
+    fn from(e: crate::dse::Exploration) -> SearchResult {
+        SearchResult {
+            best: e.best,
+            evaluations: e.telemetry.evaluations,
+            trajectory: e.trajectory,
+        }
     }
 }
 
 /// Uniform random search with `budget` predictor evaluations.
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer::new(net, predictor).budget(budget).seed(seed).run(&Random::new(batches))"
+)]
 pub fn random_search(
     net: &Network,
     predictor: &Predictor,
@@ -124,22 +53,20 @@ pub fn random_search(
     budget: usize,
     seed: u64,
 ) -> Result<SearchResult> {
-    random_search_with_cache(
-        net,
-        predictor,
-        constraints,
-        objective,
-        batches,
-        budget,
-        seed,
-        &DescriptorCache::new(),
-    )
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .objective(objective)
+        .seed(seed)
+        .budget(budget)
+        .run(&Random::new(batches))?
+        .into())
 }
 
-/// [`random_search`] reusing a shared [`DescriptorCache`]. Candidates are
-/// drawn in the same sequence as the scalar implementation (parallel
-/// scoring does not consume extra RNG draws), so results are seed-stable
-/// and identical for any worker count.
+/// [`random_search`] reusing a shared [`DescriptorCache`].
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer with .cache(cache) and the Random strategy"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn random_search_with_cache(
     net: &Network,
@@ -151,25 +78,22 @@ pub fn random_search_with_cache(
     seed: u64,
     cache: &DescriptorCache,
 ) -> Result<SearchResult> {
-    random_search_with_threads(
-        net,
-        predictor,
-        constraints,
-        objective,
-        batches,
-        budget,
-        seed,
-        cache,
-        pool::num_threads(),
-    )
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .objective(objective)
+        .seed(seed)
+        .budget(budget)
+        .cache(cache)
+        .run(&Random::new(batches))?
+        .into())
 }
 
 /// [`random_search_with_cache`] with an explicit worker count (tests pin
 /// this to assert scheduling-independent output).
-///
-/// The whole candidate sequence is drawn from `seed` up front, scoring is
-/// sharded across the pool (two bulk predictor calls per shard), and the
-/// best/trajectory reduction walks the scored candidates in draw order.
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer with .cache(cache).workers(n) and the Random strategy"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn random_search_with_threads(
     net: &Network,
@@ -182,54 +106,23 @@ pub fn random_search_with_threads(
     cache: &DescriptorCache,
     workers: usize,
 ) -> Result<SearchResult> {
-    let mut rng = Rng::new(seed);
-    let pts: Vec<DesignPoint> = (0..budget)
-        .map(|_| random_point(&mut rng, cache.gpus(), batches))
-        .collect();
-    // Pre-warm descriptors so parallel shards hit the cache instead of
-    // racing on the expensive HyPA analysis.
-    let mut warm: Vec<usize> = pts.iter().map(|p| p.batch).collect();
-    warm.sort_unstable();
-    warm.dedup();
-    for &b in &warm {
-        cache.descriptor(net, b)?;
-    }
-
-    let shard_results = pool::map_shards_ctx(
-        &pts,
-        RANDOM_CHUNK,
-        workers,
-        || predictor.clone(),
-        |p, _offset, shard| -> Result<Vec<ScoredPoint>> {
-            // Chunk within the shard too, so no bulk call (and no feature
-            // matrix) ever exceeds RANDOM_CHUNK rows even with one worker.
-            let mut out = Vec::with_capacity(shard.len());
-            for chunk in shard.chunks(RANDOM_CHUNK) {
-                out.extend(score_chunk(net, cache, chunk, &p, constraints)?);
-            }
-            Ok(out)
-        },
-    );
-
-    let mut best: Option<ScoredPoint> = None;
-    let mut trajectory = Vec::with_capacity(budget);
-    let mut evals = 0usize;
-    for shard in shard_results {
-        for s in shard? {
-            evals += 1;
-            update_best(&s, objective, &mut best);
-            trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
-        }
-    }
-    Ok(SearchResult {
-        best,
-        trajectory,
-        evaluations: evals,
-    })
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .objective(objective)
+        .seed(seed)
+        .budget(budget)
+        .cache(cache)
+        .workers(workers)
+        .run(&Random::new(batches))?
+        .into())
 }
 
 /// Hill climbing with random restarts. Moves: ±10% frequency, batch
 /// up/down one step, switch GPU (keeping relative frequency position).
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer::new(net, predictor).budget(budget).seed(seed).run(&LocalRestarts::new(batches))"
+)]
 pub fn local_search(
     net: &Network,
     predictor: &Predictor,
@@ -239,24 +132,22 @@ pub fn local_search(
     budget: usize,
     seed: u64,
 ) -> Result<SearchResult> {
-    local_search_with_cache(
-        net,
-        predictor,
-        constraints,
-        objective,
-        batches,
-        budget,
-        seed,
-        &DescriptorCache::new(),
-    )
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .objective(objective)
+        .seed(seed)
+        .budget(budget)
+        .run(&LocalRestarts::new(batches))?
+        .into())
 }
 
-/// [`local_search`] reusing a shared [`DescriptorCache`]. Restarts run as
-/// parallel arms: the budget is split over `budget / 32` arms (capped at
-/// 8 — a function of the budget only, so results are seed-stable across
-/// machines and thread counts), each arm climbs with its own
-/// deterministic seed stream, and arms are merged in arm order — see
-/// [`local_search_with_arms`].
+/// [`local_search`] reusing a shared [`DescriptorCache`]. Restarts run
+/// as budget-derived parallel arms (see
+/// [`LocalRestarts::new`](crate::dse::LocalRestarts::new)).
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer with .cache(cache) and the LocalRestarts strategy"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn local_search_with_cache(
     net: &Network,
@@ -268,31 +159,23 @@ pub fn local_search_with_cache(
     seed: u64,
     cache: &DescriptorCache,
 ) -> Result<SearchResult> {
-    let arms = (budget / LOCAL_ARM_MIN_BUDGET).clamp(1, LOCAL_MAX_ARMS);
-    local_search_with_arms(
-        net,
-        predictor,
-        constraints,
-        objective,
-        batches,
-        budget,
-        seed,
-        cache,
-        arms,
-    )
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .objective(objective)
+        .seed(seed)
+        .budget(budget)
+        .cache(cache)
+        .run(&LocalRestarts::new(batches))?
+        .into())
 }
 
-/// [`local_search`] with an explicit number of parallel restart arms.
-///
-/// The budget is split as evenly as possible over the arms (earlier arms
-/// take the remainder). Arm `i` climbs with RNG stream
-/// `seed + i·GOLDEN` — arm 0 keeps `seed`, so `arms == 1` reproduces the
-/// sequential hill climber exactly. Every arm is self-contained (its own
-/// restarts, climbs and best-so-far record), arms execute concurrently on
-/// the worker pool, and the merge walks arms in index order; the combined
-/// trajectory is then rewritten into the global best-so-far sequence.
-/// Output therefore depends only on `(seed, budget, arms)`, never on
-/// thread scheduling.
+/// [`local_search`] with an explicit number of parallel restart arms
+/// (arm 0 keeps the seed, so `arms == 1` reproduces the sequential hill
+/// climber exactly).
+#[deprecated(
+    since = "0.3.0",
+    note = "use dse::Explorer with the LocalRestarts::with_arms strategy"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn local_search_with_arms(
     net: &Network,
@@ -305,267 +188,12 @@ pub fn local_search_with_arms(
     cache: &DescriptorCache,
     arms: usize,
 ) -> Result<SearchResult> {
-    let arms = arms.clamp(1, budget.max(1));
-    // Split the budget: every arm gets budget/arms, the first
-    // budget%arms arms one extra.
-    let base = budget / arms;
-    let extra = budget % arms;
-    let specs: Vec<(u64, usize)> = (0..arms)
-        .map(|i| {
-            let arm_seed = seed.wrapping_add((i as u64).wrapping_mul(ARM_SEED_STRIDE));
-            let arm_budget = base + usize::from(i < extra);
-            (arm_seed, arm_budget)
-        })
-        .collect();
-    // Pre-warm descriptors so arms hit the cache instead of racing on
-    // the expensive HyPA analysis.
-    for &b in batches {
-        cache.descriptor(net, b)?;
-    }
-
-    // Cap the *threads* at the pool's worker count — never the arms: a
-    // worker that receives several arm specs runs them sequentially, so
-    // the output is identical for any machine while excess arms queue.
-    let arm_workers = arms.min(pool::num_threads()).max(1);
-    let arm_results = pool::map_shards_ctx(
-        &specs,
-        1,
-        arm_workers,
-        || predictor.clone(),
-        |p, _offset, shard| -> Result<Vec<ArmOutcome>> {
-            shard
-                .iter()
-                .map(|&(arm_seed, arm_budget)| {
-                    climb_arm(
-                        net, &p, constraints, objective, batches, arm_budget, arm_seed, cache,
-                    )
-                })
-                .collect()
-        },
-    );
-
-    let mut best: Option<ScoredPoint> = None;
-    let mut trajectory = Vec::with_capacity(budget);
-    let mut evaluations = 0usize;
-    for shard in arm_results {
-        for arm in shard? {
-            evaluations += arm.evaluations;
-            trajectory.extend(arm.trajectory);
-            if let Some(b) = arm.best {
-                update_best(&b, objective, &mut best);
-            }
-        }
-    }
-    // Rewrite the concatenated per-arm best-so-far records into the
-    // global best-so-far sequence (monotone under the objective).
-    let mut global = f64::NAN;
-    for v in trajectory.iter_mut() {
-        if !v.is_nan() && (global.is_nan() || *v < global) {
-            global = *v;
-        }
-        *v = global;
-    }
-    Ok(SearchResult {
-        best,
-        trajectory,
-        evaluations,
-    })
-}
-
-/// One self-contained hill-climbing arm (restart loop over its own
-/// budget/RNG) — the body of the classic sequential local search.
-struct ArmOutcome {
-    best: Option<ScoredPoint>,
-    trajectory: Vec<f64>,
-    evaluations: usize,
-}
-
-#[allow(clippy::too_many_arguments)]
-fn climb_arm(
-    net: &Network,
-    predictor: &Predictor,
-    constraints: &DseConstraints,
-    objective: Objective,
-    batches: &[usize],
-    budget: usize,
-    seed: u64,
-    cache: &DescriptorCache,
-) -> Result<ArmOutcome> {
-    let mut rng = Rng::new(seed);
-    let mut best: Option<ScoredPoint> = None;
-    let mut trajectory = Vec::with_capacity(budget);
-    let mut evals = 0usize;
-    // One neighbour buffer per arm, cleared (not reallocated) per climb
-    // step — the move set is tiny but regenerated every step.
-    let mut neighbours: Vec<DesignPoint> = Vec::with_capacity(6);
-
-    while evals < budget {
-        // Restart.
-        let mut cur_pt = random_point(&mut rng, cache.gpus(), batches);
-        let mut cur =
-            score_chunk(net, cache, std::slice::from_ref(&cur_pt), predictor, constraints)?
-                .pop()
-                .expect("chunk of one");
-        evals += 1;
-        update_best(&cur, objective, &mut best);
-        trajectory.push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
-
-        // Climb until no improving neighbour or budget exhausted.
-        let mut improved = true;
-        while improved && evals < budget {
-            improved = false;
-            neighbours_into(&cur_pt, cache.gpus(), batches, &mut rng, &mut neighbours);
-            neighbours.truncate(budget - evals);
-            if neighbours.is_empty() {
-                break;
-            }
-            let scored = score_chunk(net, cache, &neighbours, predictor, constraints)?;
-            for ns in &scored {
-                evals += 1;
-                update_best(ns, objective, &mut best);
-                trajectory
-                    .push(best.as_ref().map(|b| objective.key(b)).unwrap_or(f64::NAN));
-            }
-            let first_better = neighbours.iter().zip(&scored).find(|&(_, ns)| {
-                match (ns.feasible, cur.feasible) {
-                    (true, false) => true,
-                    (false, _) => false,
-                    (true, true) => objective.key(ns) < objective.key(&cur),
-                }
-            });
-            if let Some((np, ns)) = first_better {
-                cur = ns.clone();
-                cur_pt = np.clone();
-                improved = true;
-            }
-        }
-    }
-    Ok(ArmOutcome {
-        best,
-        trajectory,
-        evaluations: evals,
-    })
-}
-
-/// Allocating convenience over [`neighbours_into`] (tests).
-#[cfg(test)]
-fn neighbours_of(
-    p: &DesignPoint,
-    gpus: &[GpuSpec],
-    batches: &[usize],
-    rng: &mut Rng,
-) -> Vec<DesignPoint> {
-    let mut out = Vec::with_capacity(6);
-    neighbours_into(p, gpus, batches, rng, &mut out);
-    out
-}
-
-/// Generate the hill-climbing move set of `p` into a reused buffer
-/// (cleared first). RNG draws are identical to the historical allocating
-/// version, so seeds reproduce the same climbs.
-fn neighbours_into(
-    p: &DesignPoint,
-    gpus: &[GpuSpec],
-    batches: &[usize],
-    rng: &mut Rng,
-    out: &mut Vec<DesignPoint>,
-) {
-    out.clear();
-    let Some(g) = gpus.iter().find(|g| g.name == p.gpu) else {
-        return;
-    };
-    // Frequency ±10%, clamped.
-    for mult in [0.9, 1.1] {
-        let f = (p.f_mhz * mult).clamp(g.min_mhz, g.boost_mhz).round();
-        if (f - p.f_mhz).abs() > 1.0 {
-            out.push(DesignPoint {
-                f_mhz: f,
-                ..p.clone()
-            });
-        }
-    }
-    // Batch step.
-    if let Some(i) = batches.iter().position(|&b| b == p.batch) {
-        if i > 0 {
-            out.push(DesignPoint {
-                batch: batches[i - 1],
-                ..p.clone()
-            });
-        }
-        if i + 1 < batches.len() {
-            out.push(DesignPoint {
-                batch: batches[i + 1],
-                ..p.clone()
-            });
-        }
-    }
-    // GPU swap at the same relative frequency position.
-    let rel = (p.f_mhz - g.min_mhz) / (g.boost_mhz - g.min_mhz);
-    let other = &gpus[rng.below(gpus.len())];
-    if other.name != p.gpu {
-        out.push(DesignPoint {
-            gpu: other.name.to_string(),
-            f_mhz: (other.min_mhz + rel * (other.boost_mhz - other.min_mhz)).round(),
-            batch: p.batch,
-        });
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::gpu::specs::catalog;
-
-    #[test]
-    fn random_point_within_gpu_envelope() {
-        let gpus = catalog();
-        let mut rng = Rng::new(1);
-        for _ in 0..200 {
-            let p = random_point(&mut rng, &gpus, &[1, 8]);
-            let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
-            assert!(p.f_mhz >= g.min_mhz && p.f_mhz <= g.boost_mhz);
-            assert!(p.batch == 1 || p.batch == 8);
-        }
-    }
-
-    #[test]
-    fn neighbours_stay_in_envelope() {
-        let gpus = catalog();
-        let mut rng = Rng::new(2);
-        let p = DesignPoint {
-            gpu: "v100s".into(),
-            f_mhz: 1000.0,
-            batch: 8,
-        };
-        for n in neighbours_of(&p, &gpus, &[1, 8, 16], &mut rng) {
-            let g = gpus.iter().find(|g| g.name == n.gpu).unwrap();
-            assert!(n.f_mhz >= g.min_mhz - 1.0 && n.f_mhz <= g.boost_mhz + 1.0);
-        }
-    }
-
-    #[test]
-    fn neighbour_moves_cover_axes() {
-        let gpus = catalog();
-        let mut rng = Rng::new(3);
-        let p = DesignPoint {
-            gpu: "t4".into(),
-            f_mhz: 800.0,
-            batch: 8,
-        };
-        let ns = neighbours_of(&p, &gpus, &[1, 8, 16], &mut rng);
-        assert!(ns.iter().any(|n| n.f_mhz != p.f_mhz && n.gpu == p.gpu));
-        assert!(ns.iter().any(|n| n.batch != p.batch));
-    }
-
-    #[test]
-    fn neighbours_of_unknown_gpu_is_empty() {
-        let gpus = catalog();
-        let mut rng = Rng::new(4);
-        let p = DesignPoint {
-            gpu: "not-a-gpu".into(),
-            f_mhz: 1000.0,
-            batch: 1,
-        };
-        assert!(neighbours_of(&p, &gpus, &[1], &mut rng).is_empty());
-    }
+    Ok(Explorer::new(net, predictor)
+        .constraints(*constraints)
+        .objective(objective)
+        .seed(seed)
+        .budget(budget)
+        .cache(cache)
+        .run(&LocalRestarts::with_arms(batches, arms))?
+        .into())
 }

@@ -1,0 +1,601 @@
+//! Pluggable search policies over the shared DSE evaluation core — the
+//! paper's stated future work ("we aim to incorporate optimization
+//! techniques to search for the best GPGPU…", §IV), shaped the way the
+//! ML-DSE literature frames it: search *strategies* compose against one
+//! evaluation backend instead of each owning a private copy of the
+//! scoring machinery.
+//!
+//! Four strategies ship, all driven through
+//! [`Explorer::run`](crate::dse::Explorer::run):
+//!
+//! * [`Grid`] — exhaustive sweep of a [`DesignSpace`] (budget truncates
+//!   deterministically);
+//! * [`Random`] — uniform sampling over `GPU × continuous frequency ×
+//!   batch`; the whole candidate sequence is drawn from the seed up
+//!   front and scoring is sharded, so outcomes are identical for any
+//!   worker count;
+//! * [`LocalRestarts`] — hill climbing with random restarts, run as
+//!   deterministic parallel *arms* (per-arm seed streams; arm 0 keeps
+//!   the session seed, so one arm reproduces the classic sequential
+//!   climber exactly);
+//! * [`Anneal`] — seeded simulated annealing over the frequency / batch
+//!   / GPU lattice: one random move per step, geometric temperature
+//!   decay, relative-worsening acceptance — the escape-local-minima
+//!   scenario the free-function API could not express.
+//!
+//! Every strategy scores candidates exclusively through the
+//! [`Evaluator`] it receives, and costs are measured in predictor
+//! evaluations — the honest budget unit for an ML-driven DSE.
+
+use std::borrow::Cow;
+
+use anyhow::Result;
+
+use crate::dse::explorer::{ChunkScorer, Evaluator};
+use crate::dse::{DesignPoint, DesignSpace, Objective, ScoredPoint, EXPLORE_MIN_SHARD};
+use crate::gpu::specs::GpuSpec;
+use crate::util::rng::Rng;
+
+/// Maximum candidates per bulk predictor call in [`Random`] (bounds the
+/// per-call feature-matrix size regardless of budget or worker count);
+/// also the minimum rows per parallel scoring shard.
+pub(crate) const RANDOM_CHUNK: usize = 64;
+
+/// Minimum per-arm budget before [`LocalRestarts`] spreads restarts over
+/// another parallel arm (an arm needs enough evaluations to restart and
+/// climb, or the split just truncates climbs).
+const LOCAL_ARM_MIN_BUDGET: usize = 32;
+
+/// Cap on the derived arm count. Derived from the budget alone — never
+/// from the machine's core count — so a given `(seed, budget)` produces
+/// the same result everywhere; excess arms beyond the pool's worker
+/// count simply queue.
+const LOCAL_MAX_ARMS: usize = 8;
+
+/// Multiplier deriving a decorrelated per-arm RNG stream from the
+/// session seed (golden-ratio constant; arm 0 keeps the seed itself, so
+/// one arm reproduces the sequential search exactly).
+const ARM_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A search policy executable by
+/// [`Explorer::run`](crate::dse::Explorer::run).
+///
+/// A strategy owns *where to look* (which candidates, in which order);
+/// the [`Evaluator`] owns *how to score* (the one shared
+/// cache/matrix/predictor pipeline, its sharding, the budget and the
+/// telemetry). Implementations return every scored candidate in their
+/// canonical deterministic order; the [`Explorer`](crate::dse::Explorer)
+/// derives the best point, trajectory, Pareto frontier and telemetry
+/// uniformly from that sequence.
+pub trait SearchStrategy {
+    /// Stable machine name (REST `strategy` field, telemetry).
+    fn name(&self) -> &'static str;
+
+    /// Score candidates through the shared evaluation core, returning
+    /// them in the strategy's canonical (deterministic) order.
+    fn run(&self, ev: &mut Evaluator<'_>) -> Result<Vec<ScoredPoint>>;
+}
+
+/// Exhaustive sweep of a [`DesignSpace`] grid. With a session budget,
+/// deterministically truncates to the first `budget` grid points. The
+/// only strategy that applies the working-set memory check
+/// (`DseConstraints::respect_memory`): the budgeted searches explore the
+/// continuous frequency axis where the working set depends only on
+/// batch, better handled by restricting their batch sets up front.
+pub struct Grid<'s> {
+    space: Cow<'s, DesignSpace>,
+}
+
+impl<'s> Grid<'s> {
+    pub fn new(space: DesignSpace) -> Grid<'static> {
+        Grid {
+            space: Cow::Owned(space),
+        }
+    }
+
+    /// Sweep a borrowed space without cloning it (the deprecated
+    /// `explore*` wrappers take `&DesignSpace` and use this).
+    pub fn borrowed(space: &'s DesignSpace) -> Grid<'s> {
+        Grid {
+            space: Cow::Borrowed(space),
+        }
+    }
+
+    /// Grid over the full GPU catalog.
+    pub fn default_grid(freq_steps: usize, batches: &[usize]) -> Grid<'static> {
+        Grid::new(DesignSpace::default_grid(freq_steps, batches))
+    }
+
+    /// Number of points before budget truncation.
+    pub fn len(&self) -> usize {
+        self.space.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.space.is_empty()
+    }
+}
+
+impl SearchStrategy for Grid<'_> {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn run(&self, ev: &mut Evaluator<'_>) -> Result<Vec<ScoredPoint>> {
+        let n = ev.take_budget(self.space.len());
+        ev.score_sharded(&self.space.points[..n], EXPLORE_MIN_SHARD, None, true)
+    }
+}
+
+/// Uniform random sampling over `GPU × continuous frequency × batch`.
+/// Requires a session budget (the sample count). Seed-stable for any
+/// worker count: the whole candidate sequence is drawn up front, scoring
+/// is sharded, and results reduce in draw order.
+pub struct Random {
+    batches: Vec<usize>,
+}
+
+impl Random {
+    pub fn new(batches: &[usize]) -> Random {
+        Random {
+            batches: batches.to_vec(),
+        }
+    }
+}
+
+impl SearchStrategy for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn run(&self, ev: &mut Evaluator<'_>) -> Result<Vec<ScoredPoint>> {
+        anyhow::ensure!(!self.batches.is_empty(), "random: empty batch set");
+        anyhow::ensure!(!ev.gpus().is_empty(), "random: empty GPU set");
+        let budget = ev.take_required_budget("random")?;
+        let mut rng = Rng::new(ev.seed());
+        let pts: Vec<DesignPoint> = (0..budget)
+            .map(|_| random_point(&mut rng, ev.gpus(), &self.batches))
+            .collect();
+        ev.score_sharded(&pts, RANDOM_CHUNK, Some(RANDOM_CHUNK), false)
+    }
+}
+
+/// Hill climbing with random restarts, run as deterministic parallel
+/// arms. Requires a session budget, split as evenly as possible over the
+/// arms (earlier arms take the remainder); arm `i` climbs with RNG
+/// stream `seed + i·golden`. Moves: ±10% frequency, batch up/down one
+/// step, GPU swap at the same relative frequency position.
+pub struct LocalRestarts {
+    batches: Vec<usize>,
+    arms: Option<usize>,
+}
+
+impl LocalRestarts {
+    /// Arm count derived from the budget (`budget / 32`, capped at 8 —
+    /// a function of the budget only, so results are machine-stable).
+    pub fn new(batches: &[usize]) -> LocalRestarts {
+        LocalRestarts {
+            batches: batches.to_vec(),
+            arms: None,
+        }
+    }
+
+    /// Explicit arm count (1 ≡ the classic sequential hill climber).
+    pub fn with_arms(batches: &[usize], arms: usize) -> LocalRestarts {
+        LocalRestarts {
+            batches: batches.to_vec(),
+            arms: Some(arms),
+        }
+    }
+}
+
+impl SearchStrategy for LocalRestarts {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn run(&self, ev: &mut Evaluator<'_>) -> Result<Vec<ScoredPoint>> {
+        anyhow::ensure!(!self.batches.is_empty(), "local: empty batch set");
+        anyhow::ensure!(!ev.gpus().is_empty(), "local: empty GPU set");
+        let budget = ev.take_required_budget("local")?;
+        let arms = self
+            .arms
+            .unwrap_or_else(|| (budget / LOCAL_ARM_MIN_BUDGET).clamp(1, LOCAL_MAX_ARMS))
+            .clamp(1, budget.max(1));
+        // Split the budget: every arm gets budget/arms, the first
+        // budget%arms arms one extra.
+        let base = budget / arms;
+        let extra = budget % arms;
+        let seed = ev.seed();
+        let specs: Vec<(u64, usize)> = (0..arms)
+            .map(|i| {
+                let arm_seed = seed.wrapping_add((i as u64).wrapping_mul(ARM_SEED_STRIDE));
+                (arm_seed, base + usize::from(i < extra))
+            })
+            .collect();
+        ev.warm(&self.batches)?;
+
+        let objective = ev.objective();
+        let batches = &self.batches;
+        let arm_results = ev.run_arms(&specs, move |scorer, arm_seed, arm_budget| {
+            climb_arm(scorer, objective, batches, arm_budget, arm_seed)
+        });
+        let mut scored = Vec::with_capacity(budget);
+        for arm in arm_results {
+            scored.extend(arm?);
+        }
+        Ok(scored)
+    }
+}
+
+/// One self-contained hill-climbing arm (restart loop over its own
+/// budget/RNG) — the body of the classic sequential local search.
+/// Returns every scored candidate in evaluation order.
+fn climb_arm(
+    scorer: &ChunkScorer<'_>,
+    objective: Objective,
+    batches: &[usize],
+    budget: usize,
+    seed: u64,
+) -> Result<Vec<ScoredPoint>> {
+    let mut rng = Rng::new(seed);
+    let mut scored_all = Vec::with_capacity(budget);
+    let mut evals = 0usize;
+    // One neighbour buffer per arm, cleared (not reallocated) per climb
+    // step — the move set is tiny but regenerated every step.
+    let mut neighbours: Vec<DesignPoint> = Vec::with_capacity(6);
+
+    while evals < budget {
+        // Restart.
+        let mut cur_pt = random_point(&mut rng, scorer.gpus(), batches);
+        let mut cur = scorer
+            .score_chunk(std::slice::from_ref(&cur_pt))?
+            .pop()
+            .expect("chunk of one");
+        evals += 1;
+        scored_all.push(cur.clone());
+
+        // Climb until no improving neighbour or budget exhausted.
+        let mut improved = true;
+        while improved && evals < budget {
+            improved = false;
+            neighbours_into(&cur_pt, scorer.gpus(), batches, &mut rng, &mut neighbours);
+            neighbours.truncate(budget - evals);
+            if neighbours.is_empty() {
+                break;
+            }
+            let scored = scorer.score_chunk(&neighbours)?;
+            evals += scored.len();
+            scored_all.extend(scored.iter().cloned());
+            let first_better = neighbours.iter().zip(&scored).find(|&(_, ns)| {
+                match (ns.feasible, cur.feasible) {
+                    (true, false) => true,
+                    (false, _) => false,
+                    (true, true) => objective.key(ns) < objective.key(&cur),
+                }
+            });
+            if let Some((np, ns)) = first_better {
+                cur = ns.clone();
+                cur_pt = np.clone();
+                improved = true;
+            }
+        }
+    }
+    Ok(scored_all)
+}
+
+/// Seeded simulated annealing over the `GPU × frequency × batch`
+/// lattice. Requires a session budget (the step count). Each step
+/// perturbs one random axis (±10% frequency, one batch step, or a GPU
+/// swap at the same relative frequency position) and accepts worsening
+/// moves with probability `exp(−Δrel / T)`, where `Δrel` is the
+/// *relative* objective worsening (unit-free across objectives) and the
+/// temperature decays geometrically from [`Anneal::t0`] to
+/// [`Anneal::t1`] across the budget. Feasibility dominates: a feasible
+/// candidate always displaces an infeasible incumbent and never the
+/// other way round. Fully determined by `(seed, budget, t0, t1)`.
+pub struct Anneal {
+    batches: Vec<usize>,
+    /// Initial temperature (relative objective scale). Default 0.3: a
+    /// 30% worsening is accepted with probability `1/e` at step 0.
+    pub t0: f64,
+    /// Final temperature. Default 1e-3: the walk is effectively greedy
+    /// by the end of the budget.
+    pub t1: f64,
+}
+
+impl Anneal {
+    pub fn new(batches: &[usize]) -> Anneal {
+        Anneal {
+            batches: batches.to_vec(),
+            t0: 0.3,
+            t1: 1e-3,
+        }
+    }
+}
+
+impl SearchStrategy for Anneal {
+    fn name(&self) -> &'static str {
+        "anneal"
+    }
+
+    fn run(&self, ev: &mut Evaluator<'_>) -> Result<Vec<ScoredPoint>> {
+        anyhow::ensure!(!self.batches.is_empty(), "anneal: empty batch set");
+        anyhow::ensure!(!ev.gpus().is_empty(), "anneal: empty GPU set");
+        anyhow::ensure!(
+            self.t0 > 0.0 && self.t1 > 0.0 && self.t1 <= self.t0,
+            "anneal: need 0 < t1 <= t0 (got t0={}, t1={})",
+            self.t0,
+            self.t1
+        );
+        let budget = ev.take_required_budget("anneal")?;
+        let mut scored_all = Vec::with_capacity(budget);
+        if budget == 0 {
+            return Ok(scored_all);
+        }
+        ev.warm(&self.batches)?;
+        let scorer = ev.scorer();
+        let objective = ev.objective();
+        let mut rng = Rng::new(ev.seed());
+
+        let mut cur_pt = random_point(&mut rng, scorer.gpus(), &self.batches);
+        let mut cur = scorer
+            .score_chunk(std::slice::from_ref(&cur_pt))?
+            .pop()
+            .expect("chunk of one");
+        scored_all.push(cur.clone());
+
+        for step in 1..budget {
+            // Geometric decay t0 → t1 across the budget.
+            let frac = step as f64 / (budget - 1).max(1) as f64;
+            let temp = self.t0 * (self.t1 / self.t0).powf(frac);
+            let cand_pt = anneal_move(&cur_pt, scorer.gpus(), &self.batches, &mut rng);
+            let cand = scorer
+                .score_chunk(std::slice::from_ref(&cand_pt))?
+                .pop()
+                .expect("chunk of one");
+            scored_all.push(cand.clone());
+            let accept = match (cand.feasible, cur.feasible) {
+                (true, false) => true,
+                (false, true) => false,
+                _ => {
+                    let (new, old) = (objective.key(&cand), objective.key(&cur));
+                    if new < old {
+                        true
+                    } else {
+                        // Relative worsening, scaled by |old| so the
+                        // acceptance rule is unit-free across objectives
+                        // (latency in seconds, EDP in J·s, …).
+                        let delta = (new - old) / old.abs().max(1e-300);
+                        rng.f64() < (-delta / temp).exp()
+                    }
+                }
+            };
+            if accept {
+                cur = cand;
+                cur_pt = cand_pt;
+            }
+        }
+        Ok(scored_all)
+    }
+}
+
+/// One uniformly random lattice point.
+pub(crate) fn random_point(rng: &mut Rng, gpus: &[GpuSpec], batches: &[usize]) -> DesignPoint {
+    let g = &gpus[rng.below(gpus.len())];
+    DesignPoint {
+        gpu: g.name.to_string(),
+        f_mhz: rng.range(g.min_mhz, g.boost_mhz).round(),
+        batch: batches[rng.below(batches.len())],
+    }
+}
+
+/// One annealing move: perturb a single random axis of `p`. A clamped
+/// or degenerate move may return `p` unchanged (it still costs one
+/// evaluation — the honest accounting).
+fn anneal_move(
+    p: &DesignPoint,
+    gpus: &[GpuSpec],
+    batches: &[usize],
+    rng: &mut Rng,
+) -> DesignPoint {
+    let Some(g) = gpus.iter().find(|g| g.name == p.gpu) else {
+        return random_point(rng, gpus, batches);
+    };
+    match rng.below(3) {
+        // Frequency step: ±10%, clamped to the GPU's DVFS envelope.
+        0 => {
+            let mult = if rng.chance(0.5) { 0.9 } else { 1.1 };
+            DesignPoint {
+                f_mhz: (p.f_mhz * mult).clamp(g.min_mhz, g.boost_mhz).round(),
+                ..p.clone()
+            }
+        }
+        // Batch step: one position up or down the configured ladder.
+        1 => {
+            let i = batches.iter().position(|&b| b == p.batch).unwrap_or(0);
+            let j = if rng.chance(0.5) {
+                i.saturating_sub(1)
+            } else {
+                (i + 1).min(batches.len() - 1)
+            };
+            DesignPoint {
+                batch: batches[j],
+                ..p.clone()
+            }
+        }
+        // GPU swap at the same relative frequency position.
+        _ => {
+            let other = &gpus[rng.below(gpus.len())];
+            let rel = (p.f_mhz - g.min_mhz) / (g.boost_mhz - g.min_mhz).max(1e-9);
+            DesignPoint {
+                gpu: other.name.to_string(),
+                f_mhz: (other.min_mhz + rel * (other.boost_mhz - other.min_mhz)).round(),
+                batch: p.batch,
+            }
+        }
+    }
+}
+
+/// Generate the hill-climbing move set of `p` into a reused buffer
+/// (cleared first). RNG draws are identical to the historical allocating
+/// version, so seeds reproduce the same climbs.
+fn neighbours_into(
+    p: &DesignPoint,
+    gpus: &[GpuSpec],
+    batches: &[usize],
+    rng: &mut Rng,
+    out: &mut Vec<DesignPoint>,
+) {
+    out.clear();
+    let Some(g) = gpus.iter().find(|g| g.name == p.gpu) else {
+        return;
+    };
+    // Frequency ±10%, clamped.
+    for mult in [0.9, 1.1] {
+        let f = (p.f_mhz * mult).clamp(g.min_mhz, g.boost_mhz).round();
+        if (f - p.f_mhz).abs() > 1.0 {
+            out.push(DesignPoint {
+                f_mhz: f,
+                ..p.clone()
+            });
+        }
+    }
+    // Batch step.
+    if let Some(i) = batches.iter().position(|&b| b == p.batch) {
+        if i > 0 {
+            out.push(DesignPoint {
+                batch: batches[i - 1],
+                ..p.clone()
+            });
+        }
+        if i + 1 < batches.len() {
+            out.push(DesignPoint {
+                batch: batches[i + 1],
+                ..p.clone()
+            });
+        }
+    }
+    // GPU swap at the same relative frequency position.
+    let rel = (p.f_mhz - g.min_mhz) / (g.boost_mhz - g.min_mhz);
+    let other = &gpus[rng.below(gpus.len())];
+    if other.name != p.gpu {
+        out.push(DesignPoint {
+            gpu: other.name.to_string(),
+            f_mhz: (other.min_mhz + rel * (other.boost_mhz - other.min_mhz)).round(),
+            batch: p.batch,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::catalog;
+
+    /// Allocating convenience over [`neighbours_into`].
+    fn neighbours_of(
+        p: &DesignPoint,
+        gpus: &[GpuSpec],
+        batches: &[usize],
+        rng: &mut Rng,
+    ) -> Vec<DesignPoint> {
+        let mut out = Vec::with_capacity(6);
+        neighbours_into(p, gpus, batches, rng, &mut out);
+        out
+    }
+
+    #[test]
+    fn random_point_within_gpu_envelope() {
+        let gpus = catalog();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let p = random_point(&mut rng, &gpus, &[1, 8]);
+            let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
+            assert!(p.f_mhz >= g.min_mhz && p.f_mhz <= g.boost_mhz);
+            assert!(p.batch == 1 || p.batch == 8);
+        }
+    }
+
+    #[test]
+    fn neighbours_stay_in_envelope() {
+        let gpus = catalog();
+        let mut rng = Rng::new(2);
+        let p = DesignPoint {
+            gpu: "v100s".into(),
+            f_mhz: 1000.0,
+            batch: 8,
+        };
+        for n in neighbours_of(&p, &gpus, &[1, 8, 16], &mut rng) {
+            let g = gpus.iter().find(|g| g.name == n.gpu).unwrap();
+            assert!(n.f_mhz >= g.min_mhz - 1.0 && n.f_mhz <= g.boost_mhz + 1.0);
+        }
+    }
+
+    #[test]
+    fn neighbour_moves_cover_axes() {
+        let gpus = catalog();
+        let mut rng = Rng::new(3);
+        let p = DesignPoint {
+            gpu: "t4".into(),
+            f_mhz: 800.0,
+            batch: 8,
+        };
+        let ns = neighbours_of(&p, &gpus, &[1, 8, 16], &mut rng);
+        assert!(ns.iter().any(|n| n.f_mhz != p.f_mhz && n.gpu == p.gpu));
+        assert!(ns.iter().any(|n| n.batch != p.batch));
+    }
+
+    #[test]
+    fn neighbours_of_unknown_gpu_is_empty() {
+        let gpus = catalog();
+        let mut rng = Rng::new(4);
+        let p = DesignPoint {
+            gpu: "not-a-gpu".into(),
+            f_mhz: 1000.0,
+            batch: 1,
+        };
+        assert!(neighbours_of(&p, &gpus, &[1], &mut rng).is_empty());
+    }
+
+    #[test]
+    fn anneal_move_stays_on_the_lattice() {
+        let gpus = catalog();
+        let batches = [1usize, 4, 16];
+        let mut rng = Rng::new(5);
+        let mut p = random_point(&mut rng, &gpus, &batches);
+        for _ in 0..500 {
+            p = anneal_move(&p, &gpus, &batches, &mut rng);
+            let g = gpus.iter().find(|g| g.name == p.gpu).unwrap();
+            assert!(
+                p.f_mhz >= g.min_mhz - 1.0 && p.f_mhz <= g.boost_mhz + 1.0,
+                "{p:?} out of {}'s envelope",
+                g.name
+            );
+            assert!(batches.contains(&p.batch), "{p:?} left the batch ladder");
+        }
+    }
+
+    #[test]
+    fn anneal_move_is_seed_deterministic() {
+        let gpus = catalog();
+        let batches = [1usize, 8];
+        let start = DesignPoint {
+            gpu: "v100s".into(),
+            f_mhz: 1100.0,
+            batch: 8,
+        };
+        let walk = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut p = start.clone();
+            (0..50)
+                .map(|_| {
+                    p = anneal_move(&p, &gpus, &batches, &mut rng);
+                    p.clone()
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(walk(9), walk(9));
+        assert_ne!(walk(9), walk(10));
+    }
+}

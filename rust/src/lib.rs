@@ -21,10 +21,13 @@
 //!   ([`runtime::shapes`]).
 //! * [`coordinator`] — the batched prediction service (dynamic batching
 //!   on a flush pool; bulk calls on the caller's thread).
-//! * [`dse`] — exhaustive and budgeted search over
-//!   `GPU × DVFS × batch`.
-//! * [`offload`] — offload advisor + REST API; [`util`] — worker pools,
-//!   RNG, JSON, bench harness (fully offline, no external deps).
+//! * [`dse`] — the [`dse::Explorer`] session API: pluggable
+//!   [`dse::SearchStrategy`] policies (grid / random / local restarts /
+//!   simulated annealing) over `GPU × DVFS × batch`, with budgets,
+//!   typed feasibility errors and rejection telemetry.
+//! * [`offload`] — offload advisor + REST API (including server-side
+//!   `POST /v1/search`); [`util`] — worker pools, RNG, JSON, bench
+//!   harness (fully offline, no external deps).
 //!
 //! ## Serving architecture
 //!

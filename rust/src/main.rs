@@ -18,9 +18,9 @@ use anyhow::{anyhow, Result};
 use hypa_dse::cnn::zoo;
 use hypa_dse::config::AppConfig;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
-use hypa_dse::dse::search::{local_search_with_cache, random_search_with_cache};
 use hypa_dse::dse::{
-    explore, explore_with_cache, rank, DescriptorCache, DesignSpace, DseConstraints, Objective,
+    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, LocalRestarts,
+    Objective, Random,
 };
 use hypa_dse::gpu::specs::{by_name, catalog};
 use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
@@ -234,23 +234,23 @@ fn cmd_dse(args: &Args) -> Result<()> {
         min_throughput: args.f64("min-throughput"),
         respect_memory: true,
     };
-    let objective = match args.str("objective", "min-edp").as_str() {
-        "min-latency" => Objective::MinLatency,
-        "min-energy" => Objective::MinEnergy,
-        "max-throughput" => Objective::MaxThroughput,
-        _ => Objective::MinEdp,
-    };
-    let scored = explore(&net, &space, &predictor, &constraints)?;
-    let ranked = rank(&scored, objective);
+    let objective =
+        Objective::parse(&args.str("objective", "min-edp")).unwrap_or(Objective::MinEdp);
+    let exploration = Explorer::new(&net, &predictor)
+        .constraints(constraints)
+        .objective(objective)
+        .run(&Grid::new(space))?;
+    let telemetry = &exploration.telemetry;
     println!(
-        "explored {} design points for {} ({} feasible), objective {}:",
-        space.len(),
+        "explored {} design points for {} ({} feasible; rejected: {}), objective {}:",
+        telemetry.evaluations,
         net.name,
-        ranked.len(),
+        exploration.scored.iter().filter(|s| s.feasible).count(),
+        telemetry.rejected,
         objective.name()
     );
     let mut t = Table::new(&["#", "gpu", "MHz", "batch", "W", "ms", "inf/s", "J/inf"]);
-    for (i, s) in ranked.iter().take(args.usize("top", 10)).enumerate() {
+    for (i, s) in exploration.top_k(args.usize("top", 10)).iter().enumerate() {
         t.row(&[
             format!("{}", i + 1),
             s.point.gpu.clone(),
@@ -283,6 +283,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  GET  /health");
     println!("  POST /v1/offload/decide");
     println!("  POST /v1/predict");
+    println!("  POST /v1/predict/bulk");
+    println!("  POST /v1/search        (requires --with-predictor)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -357,35 +359,53 @@ fn cmd_search(args: &Args) -> Result<()> {
     let budget = args.usize("budget", cfg.search_budget);
     let batches = cfg.dse_batches.clone();
 
-    // One shared feature/GPU cache across both searches and the grid
-    // reference: the per-(net, batch) HyPA analysis is paid once.
+    // One session, one shared feature/GPU cache: the per-(net, batch)
+    // HyPA analysis is paid once across every strategy and the grid
+    // reference.
     let cache = DescriptorCache::new();
-    let rs = random_search_with_cache(
-        &net, &predictor, &constraints, objective, &batches, budget, 1, &cache,
-    )?;
-    let ls = local_search_with_cache(
-        &net, &predictor, &constraints, objective, &batches, budget, 1, &cache,
-    )?;
+    let explorer = Explorer::new(&net, &predictor)
+        .constraints(constraints)
+        .objective(objective)
+        .cache(&cache)
+        .seed(1)
+        .budget(budget);
+    let rs = explorer.run(&Random::new(&batches))?;
+    let ls = explorer.run(&LocalRestarts::new(&batches))?;
+    let an = explorer.run(&Anneal::new(&batches))?;
 
-    // Exhaustive reference on the quantized grid.
-    let space = DesignSpace::default_grid(cfg.dse_freq_steps, &batches);
-    let scored = explore_with_cache(&net, &space, &predictor, &constraints, &cache)?;
-    let grid_best = rank(&scored, objective).into_iter().next();
+    // Exhaustive reference on the quantized grid (unbudgeted session).
+    let grid = Explorer::new(&net, &predictor)
+        .constraints(constraints)
+        .objective(objective)
+        .cache(&cache)
+        .run(&Grid::default_grid(cfg.dse_freq_steps, &batches))?;
 
-    let show = |label: &str, s: Option<&hypa_dse::dse::ScoredPoint>, evals: usize| {
-        match s {
-            Some(b) => println!(
-                "  {label:<14} {:>4} evals: {} @ {:.0} MHz b{} -> EDP {:.4e} ({:.1} W, {:.2} ms)",
-                evals, b.point.gpu, b.point.f_mhz, b.point.batch,
-                objective.key(b), b.power_w, b.latency_s * 1e3
-            ),
-            None => println!("  {label:<14} no feasible point found"),
-        }
+    let show = |e: &hypa_dse::dse::Exploration| match &e.best {
+        Some(b) => println!(
+            "  {:<14} {:>4} evals: {} @ {:.0} MHz b{} -> EDP {:.4e} ({:.1} W, {:.2} ms)",
+            e.strategy,
+            e.telemetry.evaluations,
+            b.point.gpu,
+            b.point.f_mhz,
+            b.point.batch,
+            objective.key(b),
+            b.power_w,
+            b.latency_s * 1e3
+        ),
+        None => println!(
+            "  {:<14} no feasible point in {} evals (rejected: {})",
+            e.strategy, e.telemetry.evaluations, e.telemetry.rejected
+        ),
     };
-    println!("search for {} (objective {}, budget {budget}):", net.name, objective.name());
-    show("random", rs.best.as_ref(), rs.evaluations);
-    show("local", ls.best.as_ref(), ls.evaluations);
-    show("grid (ref)", grid_best.as_ref(), space.len());
+    println!(
+        "search for {} (objective {}, budget {budget}):",
+        net.name,
+        objective.name()
+    );
+    show(&rs);
+    show(&ls);
+    show(&an);
+    show(&grid);
     Ok(())
 }
 
@@ -441,7 +461,7 @@ COMMANDS:
   dse       --network N [--max-power W] [--objective O] [--top K]
   serve     [--addr A] [--with-predictor]          REST API
   offload   --network N [--bandwidth M] [--rtt MS] local-vs-cloud decision
-  search    --network N [--budget B] [--config F]  random/local search vs grid
+  search    --network N [--budget B] [--config F]  random/local/anneal search vs grid
   report    --network N [--gpu G] [--json] [--top K] per-layer breakdown
   gpus                                             list the GPU catalog
 "

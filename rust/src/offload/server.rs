@@ -17,6 +17,15 @@
 //!   batch}, …]}` → `{results: […]}`: every point's feature row is
 //!   emitted into one flat matrix and the predictor is called twice
 //!   total (power, cycles), not twice per point.
+//! * `POST /v1/search` — body: `{network, strategy, budget, batches?,
+//!   seed?, objective?, constraints…?, top_k?}` → a full server-side DSE
+//!   run through the [`crate::dse::Explorer`] session API (any of the
+//!   four strategies), answering with the feasible best, the top-k
+//!   ranking, the Pareto frontier and the run telemetry (evaluations,
+//!   per-constraint rejection counts, scoring shards). Requires an
+//!   attached ML predictor; the budget is hard-capped server-side and
+//!   backstopped by the coordinator's row-level
+//!   [`EvalBudget`](crate::coordinator::EvalBudget).
 //!
 //! The ML-predictor path is the REST hot path: feature descriptors come
 //! from a shared [`DescriptorCache`] (the HyPA analysis — by far the
@@ -40,7 +49,10 @@ use anyhow::{anyhow, Result};
 use crate::cnn::ir::Network;
 use crate::cnn::zoo;
 use crate::coordinator::{Predictor, Task};
-use crate::dse::DescriptorCache;
+use crate::dse::{
+    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, LocalRestarts,
+    Objective, Random, ScoredPoint,
+};
 use crate::gpu::specs::by_name;
 use crate::ml::features::N_FEATURES;
 use crate::ml::matrix::FeatureMatrix;
@@ -161,6 +173,7 @@ fn route(req: &Request, state: &ServerState) -> Response {
         }
         ("POST", "/v1/predict") => json_endpoint(req, |j| predict(j, state)),
         ("POST", "/v1/predict/bulk") => json_endpoint(req, |j| predict_bulk(j, state)),
+        ("POST", "/v1/search") => json_endpoint(req, |j| search(j, state)),
         ("POST", _) | ("GET", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
@@ -365,6 +378,201 @@ fn predict_bulk(j: &Json, state: &ServerState) -> Result<Json> {
     Ok(o)
 }
 
+/// Largest evaluation budget `/v1/search` accepts: bounds the work one
+/// request can demand from the predictor (the coordinator-level
+/// [`crate::coordinator::EvalBudget`] backstops it at 2 rows/candidate).
+const MAX_REST_SEARCH_BUDGET: usize = 4096;
+
+/// Largest `top_k` a search response will carry.
+const MAX_REST_TOP_K: usize = 100;
+
+/// Largest grid frequency-step count `/v1/search` accepts.
+const MAX_REST_FREQ_STEPS: usize = 64;
+
+/// Largest number of batch-ladder entries `/v1/search` accepts (each
+/// unique batch costs one cached HyPA analysis, like `/v1/predict`).
+const MAX_REST_BATCH_SET: usize = 16;
+
+/// One scored design point as a REST record.
+fn scored_json(s: &ScoredPoint) -> Json {
+    let mut o = Json::obj();
+    o.set("gpu", jstr(&s.point.gpu))
+        .set("f_mhz", jnum(s.point.f_mhz))
+        .set("batch", jnum(s.point.batch as f64))
+        .set("power_w", jnum(s.power_w))
+        .set("cycles", jnum(s.cycles))
+        .set("latency_s", jnum(s.latency_s))
+        .set("throughput", jnum(s.throughput))
+        .set("energy_per_inf_j", jnum(s.energy_per_inf_j))
+        .set("feasible", Json::Bool(s.feasible));
+    o
+}
+
+/// Strict optional-integer field: absent → `default`; present but not a
+/// non-negative whole number → error. `/v1/search` runs are meant to be
+/// reproducible, so a malformed knob must fail loudly rather than be
+/// silently replaced by its default.
+fn req_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'{key}' must be a number"))?;
+            anyhow::ensure!(
+                f >= 0.0 && f.fract() == 0.0,
+                "'{key}' must be a non-negative integer, got {f}"
+            );
+            Ok(f as usize)
+        }
+    }
+}
+
+/// POST /v1/search — run a named strategy server-side through the shared
+/// `Explorer` session API and the server's `DescriptorCache`.
+fn search(j: &Json, state: &ServerState) -> Result<Json> {
+    let predictor = state.predictor.as_ref().ok_or_else(|| {
+        anyhow!("no ML predictor attached (start the server with one to enable /v1/search)")
+    })?;
+    let net = net_for(j)?;
+    let budget = req_usize(j, "budget", 64)?;
+    anyhow::ensure!(
+        (1..=MAX_REST_SEARCH_BUDGET).contains(&budget),
+        "'budget' must be in 1..={MAX_REST_SEARCH_BUDGET}, got {budget}"
+    );
+    let batches: Vec<usize> = match j.get("batches") {
+        None => vec![1],
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow!("'batches' must be an array of integers"))?
+            .iter()
+            .map(|b| {
+                let f = b
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("'batches' entries must be integers"))?;
+                anyhow::ensure!(
+                    f >= 1.0 && f.fract() == 0.0,
+                    "'batches' entries must be positive integers, got {f}"
+                );
+                Ok(f as usize)
+            })
+            .collect::<Result<_>>()?,
+    };
+    anyhow::ensure!(
+        !batches.is_empty() && batches.len() <= MAX_REST_BATCH_SET,
+        "'batches' must list 1..={MAX_REST_BATCH_SET} sizes"
+    );
+    for &b in &batches {
+        anyhow::ensure!(
+            (1..=MAX_REST_BATCH).contains(&b),
+            "'batches' entries must be in 1..={MAX_REST_BATCH}, got {b}"
+        );
+    }
+    let objective_name = j.str_or("objective", "min-edp");
+    let objective = Objective::parse(objective_name).ok_or_else(|| {
+        anyhow!(
+            "unknown objective '{objective_name}' (one of: {})",
+            Objective::all().map(|o| o.name()).join(", ")
+        )
+    })?;
+    let constraints = DseConstraints {
+        max_power_w: j.get("max_power_w").and_then(Json::as_f64),
+        max_latency_s: j.get("max_latency_s").and_then(Json::as_f64),
+        min_throughput: j.get("min_throughput").and_then(Json::as_f64),
+        respect_memory: j.bool_or("respect_memory", false),
+    };
+    // Strict seed parsing: JSON numbers are f64, exact only up to 2^53 —
+    // a lossy cast would silently break "same seed, same result".
+    let seed = match j.get("seed") {
+        None => 1,
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'seed' must be a number"))?;
+            anyhow::ensure!(
+                f >= 0.0 && f.fract() == 0.0 && f <= (1u64 << 53) as f64,
+                "'seed' must be a non-negative integer <= 2^53 (JSON numbers \
+                 lose integer precision beyond that), got {f}"
+            );
+            f as u64
+        }
+    };
+    let top_k = req_usize(j, "top_k", 5)?.min(MAX_REST_TOP_K);
+
+    let explorer = Explorer::new(&net, predictor)
+        .constraints(constraints)
+        .objective(objective)
+        .cache(&state.cache)
+        .seed(seed)
+        .budget(budget);
+    let strategy_name = j.str_or("strategy", "random");
+    let exploration = match strategy_name {
+        "grid" => {
+            let steps = req_usize(j, "freq_steps", 8)?;
+            anyhow::ensure!(
+                (1..=MAX_REST_FREQ_STEPS).contains(&steps),
+                "'freq_steps' must be in 1..={MAX_REST_FREQ_STEPS}, got {steps}"
+            );
+            let space = DesignSpace::grid(steps, &batches, state.cache.gpus());
+            // No silent truncation: a grid answer must cover the whole
+            // grid, so the budget has to fit it (the budgeted searches
+            // are the right tool for partial coverage).
+            anyhow::ensure!(
+                space.len() <= budget,
+                "grid has {} points but 'budget' is {budget} — raise 'budget' \
+                 (max {MAX_REST_SEARCH_BUDGET}) or reduce 'freq_steps'/'batches'",
+                space.len()
+            );
+            explorer.run(&Grid::new(space))?
+        }
+        "random" => explorer.run(&Random::new(&batches))?,
+        "local" => explorer.run(&LocalRestarts::new(&batches))?,
+        "anneal" => explorer.run(&Anneal::new(&batches))?,
+        other => {
+            return Err(anyhow!(
+                "unknown strategy '{other}' (one of: grid, random, local, anneal)"
+            ))
+        }
+    };
+
+    let mut o = Json::obj();
+    o.set("network", jstr(&net.name))
+        .set("strategy", jstr(exploration.strategy))
+        .set("objective", jstr(exploration.objective.name()))
+        .set(
+            "best",
+            exploration
+                .best
+                .as_ref()
+                .map(scored_json)
+                .unwrap_or(Json::Null),
+        )
+        .set(
+            "top",
+            jarr(exploration.top_k(top_k).iter().map(scored_json).collect()),
+        )
+        .set(
+            "pareto",
+            jarr(exploration.pareto().iter().map(scored_json).collect()),
+        );
+    let t = &exploration.telemetry;
+    let mut tj = Json::obj();
+    tj.set("evaluations", jnum(t.evaluations as f64))
+        .set(
+            "budget",
+            t.budget.map(|b| jnum(b as f64)).unwrap_or(Json::Null),
+        )
+        .set("shards", jnum(t.shards as f64));
+    let mut rj = Json::obj();
+    rj.set("power", jnum(t.rejected.power as f64))
+        .set("latency", jnum(t.rejected.latency as f64))
+        .set("throughput", jnum(t.rejected.throughput as f64))
+        .set("memory", jnum(t.rejected.memory as f64));
+    tj.set("rejected", rj);
+    o.set("telemetry", tj);
+    Ok(o)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -475,6 +683,22 @@ mod tests {
         let ok = r#"{"network":"lenet5","batch":4}"#;
         let (status, _) = client.post("/v1/predict", ok).unwrap();
         assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn search_without_predictor_is_400() {
+        // The simulator-only server cannot run server-side DSE; the
+        // error must say why instead of 404ing or panicking.
+        let (_srv, client) = server();
+        let (status, body) = client
+            .post("/v1/search", r#"{"network":"lenet5","strategy":"random","budget":8}"#)
+            .unwrap();
+        assert_eq!(status, 400);
+        assert!(
+            String::from_utf8_lossy(&body).contains("no ML predictor"),
+            "{}",
+            String::from_utf8_lossy(&body)
+        );
     }
 
     #[test]

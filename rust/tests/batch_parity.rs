@@ -10,6 +10,11 @@
 //! * `random_search`/`local_search` issue only bulk `predict_many` calls
 //!   (no per-candidate single-row round trips), asserted via the
 //!   `Predictor` metrics counters.
+//!
+//! The legacy free functions exercised here are deprecated wrappers over
+//! `dse::Explorer`; keeping these tests on the old surface doubles as
+//! regression coverage for the wrappers themselves.
+#![allow(deprecated)]
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService};
 use hypa_dse::dse::search::{local_search_with_cache, random_search_with_cache};

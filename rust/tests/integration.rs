@@ -173,6 +173,130 @@ fn rest_bulk_predict_matches_singles_through_ml_predictor() {
     }
 }
 
+/// Server with an ML predictor trained at the real feature width
+/// (the search endpoint builds real feature vectors).
+fn search_server() -> (PredictionService, OffloadServer, OffloadClient) {
+    let d = hypa_dse::ml::features::all_feature_names().len();
+    let mut rng = Rng::new(11);
+    let (forest, knn, _, _, _) = small_models(&mut rng, d);
+    let service = PredictionService::start(
+        "artifacts".into(),
+        forest,
+        knn,
+        d,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let state = Arc::new(ServerState::new(Some(service.predictor())));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+    (service, srv, client)
+}
+
+#[test]
+fn rest_search_random_and_anneal_round_trip() {
+    // Acceptance: POST /v1/search round-trips a budgeted Random and
+    // Anneal run with top-k + telemetry.
+    let (_service, _srv, client) = search_server();
+    for strategy in ["random", "anneal"] {
+        let req = format!(
+            r#"{{"network":"lenet5","strategy":"{strategy}","budget":24,
+                 "batches":[1,2],"seed":9,"objective":"min-edp","top_k":3}}"#
+        );
+        let (status, body) = client.post("/v1/search", &req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("strategy").unwrap().as_str(), Some(strategy));
+        assert_eq!(j.get("objective").unwrap().as_str(), Some("min-edp"));
+
+        // Telemetry: the whole budget was spent, nothing rejected
+        // (unconstrained), and at least one scoring shard ran.
+        let t = j.get("telemetry").unwrap();
+        assert_eq!(t.get("evaluations").unwrap().as_usize(), Some(24));
+        assert_eq!(t.get("budget").unwrap().as_usize(), Some(24));
+        assert!(t.get("shards").unwrap().as_usize().unwrap() >= 1);
+        for constraint in ["power", "latency", "throughput", "memory"] {
+            assert_eq!(
+                t.path(&["rejected", constraint]).unwrap().as_usize(),
+                Some(0),
+                "{strategy}: unconstrained run rejected on {constraint}"
+            );
+        }
+
+        // Top-k: bounded by top_k, non-empty (everything feasible),
+        // sorted by the objective, and led by "best".
+        let top = j.get("top").and_then(Json::as_arr).unwrap();
+        assert!(!top.is_empty() && top.len() <= 3, "top has {}", top.len());
+        let edp = |p: &Json| {
+            p.get("energy_per_inf_j").unwrap().as_f64().unwrap()
+                * p.get("latency_s").unwrap().as_f64().unwrap()
+        };
+        for w in top.windows(2) {
+            assert!(edp(&w[0]) <= edp(&w[1]), "{strategy}: top not sorted");
+        }
+        let best = j.get("best").unwrap();
+        assert_eq!(
+            best.get("f_mhz").unwrap().as_f64(),
+            top[0].get("f_mhz").unwrap().as_f64()
+        );
+        assert!(best.get("power_w").unwrap().as_f64().unwrap().is_finite());
+        assert!(!j.get("pareto").and_then(Json::as_arr).unwrap().is_empty());
+
+        // Seeded strategies are deterministic: the identical request
+        // reproduces the identical response byte-for-byte.
+        let (status2, body2) = client.post("/v1/search", &req).unwrap();
+        assert_eq!(status2, 200);
+        assert_eq!(body, body2, "{strategy}: response not reproducible");
+    }
+}
+
+#[test]
+fn rest_search_reports_infeasible_and_validates_input() {
+    let (_service, _srv, client) = search_server();
+
+    // Impossible power cap: 200 with best=null and every candidate
+    // tallied against the power constraint (the REST face of the typed
+    // NoFeasiblePoint error).
+    let req = r#"{"network":"lenet5","strategy":"random","budget":16,
+                  "batches":[1],"seed":3,"max_power_w":0.001}"#;
+    let (status, body) = client.post("/v1/search", req).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("best"), Some(&Json::Null));
+    assert!(j.get("top").and_then(Json::as_arr).unwrap().is_empty());
+    assert_eq!(
+        j.path(&["telemetry", "rejected", "power"]).unwrap().as_usize(),
+        Some(16),
+        "every candidate must be tallied against the power cap"
+    );
+
+    // Input validation: each bad body is a 400 with a pointed message.
+    for (body, needle) in [
+        (r#"{"network":"lenet5","strategy":"nope","budget":8}"#, "unknown strategy"),
+        (r#"{"network":"lenet5","strategy":"random","budget":0}"#, "'budget'"),
+        (r#"{"network":"lenet5","strategy":"random","budget":999999}"#, "'budget'"),
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[]}"#, "'batches'"),
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[99999]}"#, "'batches'"),
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"objective":"nope"}"#, "objective"),
+        (r#"{"network":"lenet5","strategy":"grid","budget":8,"freq_steps":1000}"#, "'freq_steps'"),
+        // Grid answers must cover the whole grid — no silent truncation
+        // to the budget (8 steps x 2 batches x the catalog >> 64).
+        (r#"{"network":"lenet5","strategy":"grid","budget":64,"freq_steps":8,"batches":[1,2]}"#, "raise 'budget'"),
+        // Seeds must survive the JSON f64 round-trip exactly.
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"seed":-1}"#, "'seed'"),
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"seed":0.5}"#, "'seed'"),
+        // Malformed knobs fail loudly — never silently fall back to the
+        // default and run a different search than requested.
+        (r#"{"network":"lenet5","strategy":"random","budget":"512"}"#, "'budget' must be a number"),
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"batches":4}"#, "'batches' must be an array"),
+    ] {
+        let (status, resp) = client.post("/v1/search", body).unwrap();
+        let text = String::from_utf8_lossy(&resp).to_string();
+        assert_eq!(status, 400, "{body} -> {text}");
+        assert!(text.contains(needle), "{body} -> {text}");
+    }
+}
+
 #[test]
 fn offload_decide_over_rest_matches_direct_model() {
     // No predictor needed (simulator path).

@@ -9,6 +9,11 @@
 //!   overlap (metrics watermark);
 //! * both budgeted searches are deterministic for any worker count, and
 //!   `local_search` arms merge deterministically.
+//!
+//! The search free functions exercised here are deprecated wrappers over
+//! `dse::Explorer`; keeping these tests on the old surface doubles as
+//! regression coverage for the wrappers themselves.
+#![allow(deprecated)]
 
 use std::sync::Arc;
 

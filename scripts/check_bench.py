@@ -37,6 +37,10 @@ REQUIRED_RATIOS = [
     "service_bulk_vs_single_per_row",
     "service_matrix_vs_rows_bulk",
     "explore_parallel_vs_seq",
+    # Explorer session API vs the legacy explore free function on the
+    # same grid: the redesign may not tax the hot path (~1.0 expected;
+    # a >1.5x fall vs the recorded baseline fails the build).
+    "search_builder_vs_legacy",
 ]
 
 # Allocation-count keys that must be present AND exactly zero (the
@@ -52,12 +56,15 @@ INFO_RATIOS = [
     "feature_vec_allocs_per_point",
 ]
 
-# Stage entries (p50/mean/per_sec records) the tiered engine must emit.
+# Stage entries (p50/mean/per_sec records) the tiered engine and the
+# Explorer-vs-legacy comparison must emit.
 REQUIRED_STAGES = [
     "knn_tier_direct_x256",
     "knn_tier_norm_x256",
     "knn_tier_norm8_x256",
     "knn_tier_tree8_x256",
+    "search_legacy_explore",
+    "search_builder_grid",
 ]
 
 

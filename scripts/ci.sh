@@ -10,6 +10,9 @@ cd "$(dirname "$0")/.."
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo build --release --examples (examples can never rot) =="
+cargo build --release --examples
+
 echo "== cargo test (unit/integration; doctests run separately below) =="
 cargo test -q --lib --bins --tests --examples
 
