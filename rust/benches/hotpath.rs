@@ -29,7 +29,13 @@
 //!
 //! * the `Explorer` session API vs the legacy `explore` free function on
 //!   the same grid/cache (`search_builder_vs_legacy` — the API redesign
-//!   may not tax the hot path, so the ratio must stay ~1.0).
+//!   may not tax the hot path, so the ratio must stay ~1.0);
+//!
+//! * the async `/v1/search/jobs` path (submit + poll-until-done) vs one
+//!   synchronous `POST /v1/search` for the same small-budget body
+//!   (`search_async_submit_overhead` — the job subsystem may not tax a
+//!   search that would also have fit the connection thread, so the
+//!   ratio must stay ~1.0; result parity asserted before timing).
 //!
 //! Besides the human-readable table, writes `BENCH_hotpath.json` (p50 ns
 //! per stage, predictions/sec, before/after ratios) so the perf trajectory
@@ -38,9 +44,11 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
+use hypa_dse::offload::{OffloadClient, OffloadServer, ServerState};
 use hypa_dse::dse::{
     explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints, Explorer,
     Grid,
@@ -459,6 +467,45 @@ fn main() {
     stages.stage(&m_lg, space.len());
     stages.stage(&m_bd, space.len());
     ratios.set("search_builder_vs_legacy", jnum(builder_ratio));
+
+    println!("-- /v1/search: synchronous vs async job (submit + poll) --");
+    // The async job subsystem must add ~no overhead over the synchronous
+    // endpoint for a small budget: submit (202) + poll-until-done vs one
+    // blocking request, same body, same server, same predictor. Parity
+    // asserted before timing: the job's `result` must be byte-identical
+    // to the synchronous response.
+    let state = Arc::new(ServerState::new(Some(p.clone())));
+    let srv = OffloadServer::start("127.0.0.1:0", state).expect("bench server");
+    let client = OffloadClient::new(srv.addr);
+    let search_req = r#"{"network":"lenet5","strategy":"random","budget":64,"batches":[1],"seed":3,"top_k":3}"#;
+    let (st, sync_body) = client.post("/v1/search", search_req).expect("sync search");
+    assert_eq!(st, 200, "{}", String::from_utf8_lossy(&sync_body));
+    let id = client.submit_search_job(search_req).expect("submit");
+    let rec = client
+        .wait_job(id, Duration::from_secs(60))
+        .expect("job completion");
+    assert_eq!(
+        rec.get("result").expect("done job result").to_string(),
+        String::from_utf8(sync_body).unwrap(),
+        "async job result diverged from the synchronous response"
+    );
+    let m_sy = bench::bench("search sync rest", explore_budget, || {
+        let (st, body) = client.post("/v1/search", search_req).unwrap();
+        assert_eq!(st, 200);
+        body.len()
+    });
+    let m_as = bench::bench("search async rest", explore_budget, || {
+        let id = client.submit_search_job(search_req).unwrap();
+        let rec = client.wait_job(id, Duration::from_secs(60)).unwrap();
+        assert_eq!(rec.get("status").unwrap().as_str(), Some("done"));
+        id as usize
+    });
+    let async_ratio = m_sy.p50() / m_as.p50();
+    println!("  sync vs async submit+poll: {async_ratio:.2}x (must stay ~1.0)\n");
+    stages.stage(&m_sy, 64);
+    stages.stage(&m_as, 64);
+    ratios.set("search_async_submit_overhead", jnum(async_ratio));
+    drop(srv);
     println!("service metrics: {}", p.metrics.summary());
 
     println!("\n-- analysis paths --");

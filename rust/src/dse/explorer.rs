@@ -25,9 +25,16 @@
 //! Determinism is inherited from the strategies and the pool: outcomes
 //! depend only on `(strategy, seed, budget, constraints)`, never on the
 //! worker count or scheduling.
+//!
+//! Long runs are *observable and cancellable*: [`Explorer::progress`]
+//! attaches a live evaluation counter a concurrent observer can poll,
+//! and [`Explorer::cancel_token`] attaches a cooperative cancel flag
+//! every scoring unit checks before each chunk, failing the run with
+//! the typed [`DseError::Cancelled`] — the REST job manager
+//! (`offload::jobs`) is built on exactly these two hooks.
 
 use std::fmt;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -60,6 +67,14 @@ pub enum DseError {
         /// Per-constraint rejection counts.
         rejected: Rejections,
     },
+    /// The session's cancel token ([`Explorer::cancel_token`]) was set
+    /// mid-run. Scoring stops at the next chunk boundary (the budgeted
+    /// chain strategies check every step — their chunks are single
+    /// candidates), so a cancelled run wastes at most one scoring chunk.
+    Cancelled {
+        /// Candidates scored before the cancellation took effect.
+        evaluations: usize,
+    },
 }
 
 impl fmt::Display for DseError {
@@ -72,6 +87,10 @@ impl fmt::Display for DseError {
                 f,
                 "no feasible design point ({evaluations} candidates evaluated; \
                  rejected by constraint: {rejected})"
+            ),
+            DseError::Cancelled { evaluations } => write!(
+                f,
+                "exploration cancelled after {evaluations} evaluations"
             ),
         }
     }
@@ -287,6 +306,8 @@ pub struct Explorer<'a> {
     workers: usize,
     seed: u64,
     budget: Option<usize>,
+    cancel: Option<Arc<AtomicBool>>,
+    progress: Option<Arc<AtomicUsize>>,
 }
 
 impl<'a> Explorer<'a> {
@@ -303,6 +324,8 @@ impl<'a> Explorer<'a> {
             workers: pool::num_threads(),
             seed: 1,
             budget: None,
+            cancel: None,
+            progress: None,
         }
     }
 
@@ -346,6 +369,34 @@ impl<'a> Explorer<'a> {
         self
     }
 
+    /// Cooperative cancellation: once `token` is set (by any thread),
+    /// every scoring unit stops at its next chunk boundary and the run
+    /// fails with the typed [`DseError::Cancelled`] (erased into
+    /// `anyhow::Error`; the caller that set the token knows why the run
+    /// failed). The budgeted chain strategies ([`Anneal`], the
+    /// [`LocalRestarts`] arms) score single-candidate chunks, so they
+    /// react within one step; sharded grid/random scoring reacts within
+    /// one shard/chunk. The same `EvalBudget`-style check-before-work
+    /// contract applies: a cancelled chunk charges nothing.
+    ///
+    /// [`Anneal`]: crate::dse::Anneal
+    /// [`LocalRestarts`]: crate::dse::LocalRestarts
+    pub fn cancel_token(mut self, token: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Live evaluation counter: `counter` is reset to 0 when a run
+    /// starts and incremented as each scoring chunk completes, ending at
+    /// `Telemetry::evaluations` for a completed run. A concurrent
+    /// observer (e.g. the REST job manager polling progress) reads it
+    /// while the run is in flight; share one counter with at most one
+    /// run at a time.
+    pub fn progress(mut self, counter: Arc<AtomicUsize>) -> Self {
+        self.progress = Some(counter);
+        self
+    }
+
     /// Execute `strategy` against this session's shared scoring core and
     /// assemble the uniform [`Exploration`] outcome.
     pub fn run(&self, strategy: &dyn SearchStrategy) -> Result<Exploration> {
@@ -371,6 +422,11 @@ impl<'a> Explorer<'a> {
             None => self.predictor,
         };
 
+        let evaluated = self
+            .progress
+            .clone()
+            .unwrap_or_else(|| Arc::new(AtomicUsize::new(0)));
+        evaluated.store(0, Ordering::Relaxed);
         let mut ev = Evaluator {
             net: self.net,
             predictor,
@@ -383,6 +439,8 @@ impl<'a> Explorer<'a> {
             remaining: self.budget.unwrap_or(usize::MAX),
             shards: AtomicUsize::new(0),
             tally: RejectionCounters::default(),
+            cancel: self.cancel.clone(),
+            evaluated,
         };
         let scored = strategy.run(&mut ev)?;
 
@@ -434,6 +492,23 @@ pub struct Evaluator<'a> {
     remaining: usize,
     shards: AtomicUsize,
     tally: RejectionCounters,
+    /// Session cancel token ([`Explorer::cancel_token`]); checked before
+    /// every scoring chunk.
+    cancel: Option<Arc<AtomicBool>>,
+    /// Live evaluation counter ([`Explorer::progress`]); incremented as
+    /// each scoring chunk completes.
+    evaluated: Arc<AtomicUsize>,
+}
+
+/// The typed cancellation error if `cancel` is set, else `None` — the
+/// shared check every scoring unit runs before touching the predictor.
+fn cancelled(cancel: Option<&AtomicBool>, evaluated: &AtomicUsize) -> Option<DseError> {
+    match cancel {
+        Some(c) if c.load(Ordering::Relaxed) => Some(DseError::Cancelled {
+            evaluations: evaluated.load(Ordering::Relaxed),
+        }),
+        _ => None,
+    }
 }
 
 impl Evaluator<'_> {
@@ -524,6 +599,7 @@ impl Evaluator<'_> {
         // per-shard moved context).
         let (net, constraints, cache) = (self.net, self.constraints, self.cache);
         let (tally, shards) = (&self.tally, &self.shards);
+        let (cancel, evaluated) = (self.cancel.as_deref(), &*self.evaluated);
         let predictor = self.predictor;
         let shard_results = pool::map_shards_ctx(
             points,
@@ -535,16 +611,26 @@ impl Evaluator<'_> {
                     Some(c) => {
                         let mut out = Vec::with_capacity(shard.len());
                         for ch in shard.chunks(c) {
+                            if let Some(e) = cancelled(cancel, evaluated) {
+                                return Err(e.into());
+                            }
                             shards.fetch_add(1, Ordering::Relaxed);
                             out.extend(score_points(
                                 net, ch, &p, constraints, cache, apply_memory, tally,
                             )?);
+                            evaluated.fetch_add(ch.len(), Ordering::Relaxed);
                         }
                         Ok(out)
                     }
                     None => {
+                        if let Some(e) = cancelled(cancel, evaluated) {
+                            return Err(e.into());
+                        }
                         shards.fetch_add(1, Ordering::Relaxed);
-                        score_points(net, shard, &p, constraints, cache, apply_memory, tally)
+                        let out =
+                            score_points(net, shard, &p, constraints, cache, apply_memory, tally)?;
+                        evaluated.fetch_add(out.len(), Ordering::Relaxed);
+                        Ok(out)
                     }
                 }
             },
@@ -573,6 +659,7 @@ impl Evaluator<'_> {
         let arm_workers = specs.len().min(self.workers).max(1);
         let (net, constraints, cache) = (self.net, self.constraints, self.cache);
         let (tally, shards) = (&self.tally, &self.shards);
+        let (cancel, evaluated) = (self.cancel.as_deref(), &*self.evaluated);
         let predictor = self.predictor;
         pool::map_shards_ctx(
             specs,
@@ -586,6 +673,8 @@ impl Evaluator<'_> {
                     cache,
                     tally,
                     shards,
+                    cancel,
+                    evaluated,
                     predictor: p,
                 };
                 shard
@@ -608,6 +697,8 @@ impl Evaluator<'_> {
             cache: self.cache,
             tally: &self.tally,
             shards: &self.shards,
+            cancel: self.cancel.as_deref(),
+            evaluated: &self.evaluated,
             predictor: self.predictor.clone(),
         }
     }
@@ -624,6 +715,8 @@ pub struct ChunkScorer<'a> {
     cache: &'a DescriptorCache,
     tally: &'a RejectionCounters,
     shards: &'a AtomicUsize,
+    cancel: Option<&'a AtomicBool>,
+    evaluated: &'a AtomicUsize,
     predictor: Predictor,
 }
 
@@ -633,13 +726,19 @@ impl ChunkScorer<'_> {
         self.cache.gpus()
     }
 
-    /// Score one chunk of candidates (order-preserving).
+    /// Score one chunk of candidates (order-preserving). Checks the
+    /// session cancel token first — a chain strategy scoring one
+    /// candidate per step therefore reacts to cancellation within one
+    /// step — and advances the live evaluation counter after scoring.
     pub fn score_chunk(&self, points: &[DesignPoint]) -> Result<Vec<ScoredPoint>> {
         if points.is_empty() {
             return Ok(Vec::new());
         }
+        if let Some(e) = cancelled(self.cancel, self.evaluated) {
+            return Err(e.into());
+        }
         self.shards.fetch_add(1, Ordering::Relaxed);
-        score_points(
+        let out = score_points(
             self.net,
             points,
             &self.predictor,
@@ -647,7 +746,9 @@ impl ChunkScorer<'_> {
             self.cache,
             false,
             self.tally,
-        )
+        )?;
+        self.evaluated.fetch_add(out.len(), Ordering::Relaxed);
+        Ok(out)
     }
 }
 
@@ -687,6 +788,30 @@ mod tests {
         // The vendored anyhow's blanket From<std::error::Error> applies.
         let any: anyhow::Error = e.into();
         assert!(format!("{any:#}").contains("12 candidates"));
+    }
+
+    #[test]
+    fn cancelled_error_is_typed_and_displayable() {
+        let e = DseError::Cancelled { evaluations: 7 };
+        let msg = format!("{e}");
+        assert!(msg.contains("cancelled after 7 evaluations"), "{msg}");
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any:#}").contains("cancelled"));
+    }
+
+    #[test]
+    fn cancel_check_fires_only_when_token_is_set() {
+        let evaluated = AtomicUsize::new(5);
+        // No token attached: never cancelled.
+        assert_eq!(cancelled(None, &evaluated), None);
+        let tok = AtomicBool::new(false);
+        assert_eq!(cancelled(Some(&tok), &evaluated), None);
+        // Token set: typed error carrying the live evaluation count.
+        tok.store(true, Ordering::Relaxed);
+        assert_eq!(
+            cancelled(Some(&tok), &evaluated),
+            Some(DseError::Cancelled { evaluations: 5 })
+        );
     }
 
     #[test]

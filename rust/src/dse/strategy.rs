@@ -67,6 +67,15 @@ const ARM_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 /// canonical deterministic order; the [`Explorer`](crate::dse::Explorer)
 /// derives the best point, trajectory, Pareto frontier and telemetry
 /// uniformly from that sequence.
+///
+/// Cancellation comes for free: every path into the scoring core
+/// ([`Evaluator::score_sharded`], [`ChunkScorer::score_chunk`]) checks
+/// the session's cancel token per chunk and propagates the typed
+/// [`DseError::Cancelled`](crate::dse::DseError::Cancelled) through the
+/// strategy's `?`s — the chain strategies ([`LocalRestarts`],
+/// [`Anneal`]) score one candidate per step, so they stop within one
+/// step of the token being set. A strategy must not swallow scoring
+/// errors, or it would also swallow cancellation.
 pub trait SearchStrategy {
     /// Stable machine name (REST `strategy` field, telemetry).
     fn name(&self) -> &'static str;

@@ -285,6 +285,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  POST /v1/predict");
     println!("  POST /v1/predict/bulk");
     println!("  POST /v1/search        (requires --with-predictor)");
+    println!("  POST /v1/search/jobs   (async; requires --with-predictor)");
+    println!("  GET  /v1/jobs");
+    println!("  GET  /v1/jobs/{{id}}");
+    println!("  DELETE /v1/jobs/{{id}}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -345,6 +349,9 @@ fn cmd_offload(args: &Args) -> Result<()> {
 /// the best GPGPU ... considering limited power supply and desired
 /// performance").
 fn cmd_search(args: &Args) -> Result<()> {
+    if args.bool("async") {
+        return cmd_search_async(args);
+    }
     let cfg = AppConfig::load(args.flags.get("config").map(String::as_str))?;
     let net = net_arg(args)?;
     let service = start_predictor(&cfg.dataset_path)?;
@@ -355,7 +362,17 @@ fn cmd_search(args: &Args) -> Result<()> {
         min_throughput: None,
         respect_memory: false,
     };
-    let objective = Objective::MinEdp;
+    // Same objective resolution as `search --async` (where the server
+    // rejects unknown names), so the two modes answer the same question
+    // and a typo'd --objective fails loudly instead of silently running
+    // min-edp.
+    let objective_name = args.str("objective", "min-edp");
+    let objective = Objective::parse(&objective_name).ok_or_else(|| {
+        anyhow!(
+            "unknown objective '{objective_name}' (one of: {})",
+            Objective::all().map(|o| o.name()).join(", ")
+        )
+    })?;
     let budget = args.usize("budget", cfg.search_budget);
     let batches = cfg.dse_batches.clone();
 
@@ -407,6 +424,106 @@ fn cmd_search(args: &Args) -> Result<()> {
     show(&an);
     show(&grid);
     Ok(())
+}
+
+/// `search --async`: run the search as a background job over REST —
+/// submit to `POST /v1/search/jobs`, poll `GET /v1/jobs/{id}` with live
+/// progress, print the final result. Targets an existing server
+/// (`--addr HOST:PORT`) or starts an in-process one.
+fn cmd_search_async(args: &Args) -> Result<()> {
+    use hypa_dse::offload::OffloadClient;
+    use hypa_dse::util::json::{jarr, jnum, jstr, Json};
+
+    let cfg = AppConfig::load(args.flags.get("config").map(String::as_str))?;
+    let net = net_arg(args)?;
+    let strategy = args.str("strategy", "random");
+    let budget = args.usize("budget", cfg.search_budget);
+    let seed = args.usize("seed", 1);
+
+    // Target server: --addr, else an ephemeral in-process one (kept
+    // alive by the handles until the job finishes).
+    let mut _local: Option<(PredictionService, OffloadServer)> = None;
+    let client = match args.flags.get("addr") {
+        // ToSocketAddrs so hostnames resolve ("localhost:7788"), not
+        // just numeric IPs.
+        Some(a) => OffloadClient::new(
+            std::net::ToSocketAddrs::to_socket_addrs(a.as_str())
+                .ok()
+                .and_then(|mut it| it.next())
+                .ok_or_else(|| anyhow!("bad --addr '{a}' (expected HOST:PORT)"))?,
+        ),
+        None => {
+            let service = start_predictor(&cfg.dataset_path)?;
+            let state =
+                std::sync::Arc::new(ServerState::new(Some(service.predictor())));
+            let server = OffloadServer::start("127.0.0.1:0", state)?;
+            let client = OffloadClient::new(server.addr);
+            println!("started in-process server on http://{}", server.addr);
+            _local = Some((service, server));
+            client
+        }
+    };
+
+    let mut body = Json::obj();
+    body.set("network", jstr(&net.name))
+        .set("strategy", jstr(&strategy))
+        .set("budget", jnum(budget as f64))
+        .set("seed", jnum(seed as f64))
+        .set("objective", jstr(&args.str("objective", "min-edp")))
+        .set(
+            "batches",
+            jarr(cfg.dse_batches.iter().map(|&b| jnum(b as f64)).collect()),
+        );
+    // Mirror the synchronous path's default power cap (250 W unless
+    // --max-power overrides it) so `search` and `search --async` answer
+    // the same question for the same flags.
+    body.set(
+        "max_power_w",
+        jnum(args.f64("max-power").unwrap_or(250.0)),
+    );
+    if let Some(l) = args.f64("max-latency") {
+        body.set("max_latency_s", jnum(l));
+    }
+
+    let id = client.submit_search_job(&body.to_string())?;
+    println!("submitted job {id} ({strategy} on {}, budget {budget})", net.name);
+    loop {
+        let rec = client.job_status(id)?;
+        let status = rec
+            .get("status")
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string();
+        let evals = rec.get("evaluations").and_then(Json::as_usize).unwrap_or(0);
+        println!("  {status}: {evals}/{budget} evaluations");
+        match status.as_str() {
+            "done" => {
+                match rec.path(&["result", "best"]) {
+                    Some(b) if *b != Json::Null => println!(
+                        "best: {} @ {:.0} MHz b{} -> {:.1} W, {:.2} ms",
+                        b.str_or("gpu", "?"),
+                        b.f64_or("f_mhz", 0.0),
+                        b.usize_or("batch", 0),
+                        b.f64_or("power_w", 0.0),
+                        b.f64_or("latency_s", 0.0) * 1e3
+                    ),
+                    _ => println!("no feasible point (see telemetry.rejected)"),
+                }
+                return Ok(());
+            }
+            "failed" => {
+                return Err(anyhow!(
+                    "job failed: {}",
+                    rec.str_or("error", "(no error recorded)")
+                ))
+            }
+            "cancelled" => {
+                println!("job was cancelled after {evals} evaluations");
+                return Ok(());
+            }
+            _ => std::thread::sleep(std::time::Duration::from_millis(200)),
+        }
+    }
 }
 
 /// Per-layer analysis report for one design point (table or JSON).
@@ -461,7 +578,10 @@ COMMANDS:
   dse       --network N [--max-power W] [--objective O] [--top K]
   serve     [--addr A] [--with-predictor]          REST API
   offload   --network N [--bandwidth M] [--rtt MS] local-vs-cloud decision
-  search    --network N [--budget B] [--config F]  random/local/anneal search vs grid
+  search    --network N [--budget B] [--objective O] [--config F]
+                                                   random/local/anneal search vs grid
+            [--async [--addr HOST:PORT] [--strategy S] [--seed N]]
+                                                   submit as a background REST job and poll
   report    --network N [--gpu G] [--json] [--top K] per-layer breakdown
   gpus                                             list the GPU catalog
 "

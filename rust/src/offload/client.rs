@@ -1,11 +1,13 @@
 //! Tiny HTTP client for the offload REST API (tests, examples, and the
-//! `hypa-dse offload-client` CLI subcommand).
+//! `hypa-dse offload-client` / `search --async` CLI paths), including
+//! submit/poll/cancel helpers for the async `/v1/search/jobs` flow.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::net::{SocketAddr, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::offload::http::{read_response, Response, write_response};
+use crate::offload::http::{read_response, write_response, Response};
+use crate::util::json::Json;
 
 /// Blocking one-request-per-connection client.
 #[derive(Debug, Clone, Copy)]
@@ -41,6 +43,68 @@ impl OffloadClient {
 
     pub fn post(&self, path: &str, body: &str) -> Result<(u16, Vec<u8>)> {
         self.send("POST", path, body)
+    }
+
+    pub fn delete(&self, path: &str) -> Result<(u16, Vec<u8>)> {
+        self.send("DELETE", path, "")
+    }
+
+    /// Parse a `(status, body)` pair, demanding `expect` (other statuses
+    /// become an error carrying the server's message).
+    fn parse_expecting(expect: u16, status: u16, body: &[u8]) -> Result<Json> {
+        let text = std::str::from_utf8(body).map_err(|_| anyhow!("non-UTF8 response body"))?;
+        anyhow::ensure!(
+            status == expect,
+            "expected HTTP {expect}, got {status}: {text}"
+        );
+        Json::parse(text).map_err(|e| anyhow!("bad response JSON: {e}"))
+    }
+
+    /// Submit an async search (`POST /v1/search/jobs`, same body schema
+    /// as `/v1/search`); returns the queued job id from the 202 record.
+    pub fn submit_search_job(&self, body: &str) -> Result<u64> {
+        let (status, resp) = self.post("/v1/search/jobs", body)?;
+        let j = Self::parse_expecting(202, status, &resp)?;
+        j.get("id")
+            .and_then(Json::as_f64)
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow!("202 record without a job id: {j:?}"))
+    }
+
+    /// Poll one job record (`GET /v1/jobs/{id}`).
+    pub fn job_status(&self, id: u64) -> Result<Json> {
+        let (status, resp) = self.get(&format!("/v1/jobs/{id}"))?;
+        Self::parse_expecting(200, status, &resp)
+    }
+
+    /// Request cancellation (`DELETE /v1/jobs/{id}`); returns the record
+    /// as it stands (a running job transitions to `cancelled` within one
+    /// scoring chunk — poll [`OffloadClient::wait_job`] to observe it).
+    pub fn cancel_job(&self, id: u64) -> Result<Json> {
+        let (status, resp) = self.delete(&format!("/v1/jobs/{id}"))?;
+        Self::parse_expecting(200, status, &resp)
+    }
+
+    /// Poll `GET /v1/jobs/{id}` until the job reaches a terminal state
+    /// (`done`/`failed`/`cancelled`), with exponential backoff from
+    /// 500 µs to 50 ms between polls. Returns the terminal record.
+    pub fn wait_job(&self, id: u64, timeout: Duration) -> Result<Json> {
+        let deadline = Instant::now() + timeout;
+        let mut pause = Duration::from_micros(500);
+        loop {
+            let record = self.job_status(id)?;
+            match record.get("status").and_then(Json::as_str) {
+                Some("done") | Some("failed") | Some("cancelled") => return Ok(record),
+                Some(_) => {}
+                None => return Err(anyhow!("job record without a status: {record:?}")),
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "job {id} did not finish within {timeout:?} (last: {record:?})"
+            );
+            std::thread::sleep(pause);
+            pause = (pause * 2).min(Duration::from_millis(50));
+        }
     }
 }
 

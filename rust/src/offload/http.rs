@@ -4,7 +4,9 @@
 //! small subset the service needs: request-line + headers + fixed
 //! Content-Length bodies, over any `Read`/`Write` transport. Not a general
 //! HTTP implementation — requests without Content-Length have empty
-//! bodies, connections are close-delimited.
+//! bodies, connections are close-delimited. Framing errors fail loudly:
+//! a malformed `Content-Length` or a connection that closes mid-headers
+//! is an error, never silently treated as an empty/complete message.
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -57,16 +59,27 @@ impl Response {
 fn reason_for(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
 }
 
-/// Read one request from a stream. Limits: 16 KiB of headers, 4 MiB body.
+/// Hard cap on the bytes one HTTP message may put on the wire: request
+/// line + headers (16 KiB) + body (4 MiB) + framing slack. Applied with
+/// `Read::take` *underneath* the line reader, so a malicious
+/// newline-free byte stream is bounded even though `read_line` buffers
+/// a whole line before the per-section checks can run.
+const MAX_WIRE_BYTES: u64 = 16 * 1024 + 4 * 1024 * 1024 + 4096;
+
+/// Read one request from a stream. Limits: 16 KiB of headers, 4 MiB
+/// body, `MAX_WIRE_BYTES` in total (enforced mid-line).
 pub fn read_request(stream: &mut impl Read) -> Result<Request> {
-    let mut reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream.take(MAX_WIRE_BYTES));
     let mut request_line = String::new();
     reader.read_line(&mut request_line)?;
     let mut parts = request_line.split_whitespace();
@@ -83,7 +96,13 @@ pub fn read_request(stream: &mut impl Read) -> Result<Request> {
     let mut header_bytes = 0usize;
     loop {
         let mut line = String::new();
-        reader.read_line(&mut line)?;
+        let read = reader.read_line(&mut line)?;
+        // `read_line` returns Ok(0) at EOF, which would leave `line`
+        // empty and masquerade as the blank end-of-headers line — a
+        // truncated request must be an error, not an empty request.
+        if read == 0 {
+            return Err(anyhow!("connection closed before end of headers"));
+        }
         header_bytes += line.len();
         if header_bytes > 16 * 1024 {
             return Err(anyhow!("headers too large"));
@@ -97,10 +116,16 @@ pub fn read_request(stream: &mut impl Read) -> Result<Request> {
         }
     }
 
-    let len: usize = headers
-        .get("content-length")
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
+    // A missing Content-Length means "no body"; a *malformed* one (not a
+    // base-10 unsigned integer: negative, fractional, garbage, overflow)
+    // is a client error and must fail loudly — silently coercing it to 0
+    // would drop the body and handle the request as if it had none.
+    let len: usize = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("invalid Content-Length '{v}'"))?,
+    };
     if len > 4 * 1024 * 1024 {
         return Err(anyhow!("body too large"));
     }
@@ -129,9 +154,10 @@ pub fn write_response(stream: &mut impl Write, resp: &Response) -> Result<()> {
     Ok(())
 }
 
-/// Parse a response (client side).
+/// Parse a response (client side). Same `MAX_WIRE_BYTES` total bound as
+/// the request reader.
 pub fn read_response(stream: &mut impl Read) -> Result<(u16, Vec<u8>)> {
-    let mut reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream.take(MAX_WIRE_BYTES));
     let mut status_line = String::new();
     reader.read_line(&mut status_line)?;
     let status: u16 = status_line
@@ -142,14 +168,20 @@ pub fn read_response(stream: &mut impl Read) -> Result<(u16, Vec<u8>)> {
     let mut len = 0usize;
     loop {
         let mut line = String::new();
-        reader.read_line(&mut line)?;
+        let read = reader.read_line(&mut line)?;
+        if read == 0 {
+            return Err(anyhow!("connection closed before end of headers"));
+        }
         let line = line.trim_end();
         if line.is_empty() {
             break;
         }
         if let Some((k, v)) = line.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
-                len = v.trim().parse().unwrap_or(0);
+                let v = v.trim();
+                len = v
+                    .parse()
+                    .map_err(|_| anyhow!("invalid Content-Length '{v}' in response"))?;
             }
         }
     }
@@ -201,5 +233,65 @@ mod tests {
         let raw = b"POST / HTTP/1.1\r\ncOnTeNt-LeNgTh: 2\r\n\r\nhi";
         let req = read_request(&mut Cursor::new(raw.to_vec())).unwrap();
         assert_eq!(req.body, b"hi");
+    }
+
+    #[test]
+    fn rejects_malformed_content_length() {
+        // Regression: these used to be silently coerced to 0, so the
+        // body was dropped and the request handled as if it had none.
+        for bad in ["abc", "-5", "2.5", "1e3", "18446744073709551616", ""] {
+            let raw = format!("POST / HTTP/1.1\r\nContent-Length: {bad}\r\n\r\nhi");
+            let err = read_request(&mut Cursor::new(raw.into_bytes()))
+                .expect_err(&format!("Content-Length '{bad}' must be rejected"));
+            assert!(
+                format!("{err}").contains("Content-Length"),
+                "'{bad}': {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_truncated_header_block() {
+        // Regression: EOF mid-headers made read_line return Ok(0) with an
+        // empty line, which the loop treated as the end-of-headers blank
+        // line — a truncated request was accepted as complete.
+        for raw in [
+            &b"POST /x HTTP/1.1\r\nHost: y\r\n"[..],
+            &b"GET /health HTTP/1.1\r\n"[..],
+        ] {
+            let err = read_request(&mut Cursor::new(raw.to_vec()))
+                .expect_err("truncated request must be an error");
+            assert!(format!("{err}").contains("closed"), "{err}");
+        }
+    }
+
+    #[test]
+    fn client_rejects_malformed_content_length() {
+        let raw = b"HTTP/1.1 200 OK\r\ncontent-length: banana\r\n\r\n";
+        let err = read_response(&mut Cursor::new(raw.to_vec())).unwrap_err();
+        assert!(format!("{err}").contains("Content-Length"), "{err}");
+    }
+
+    #[test]
+    fn client_rejects_truncated_response_headers() {
+        let raw = b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\n";
+        let err = read_response(&mut Cursor::new(raw.to_vec())).unwrap_err();
+        assert!(format!("{err}").contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn newline_free_flood_is_bounded_not_buffered() {
+        // Regression: `read_line` buffers a whole line before the header
+        // size check can run, so a byte stream that never sends '\n'
+        // used to grow one String without bound. The Read::take cap
+        // bounds it mid-line; the request then fails fast.
+        // Flood as the request line: capped, then "missing path".
+        let flood = vec![b'a'; 6 * 1024 * 1024];
+        assert!(read_request(&mut Cursor::new(flood)).is_err());
+        // Flood as a header line: capped, then "headers too large".
+        let mut raw = b"POST / HTTP/1.1\r\nx: ".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(6 * 1024 * 1024));
+        let err = read_request(&mut Cursor::new(raw)).unwrap_err();
+        assert!(format!("{err}").contains("headers too large"), "{err}");
     }
 }

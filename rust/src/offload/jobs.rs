@@ -1,0 +1,718 @@
+//! Asynchronous job subsystem behind `POST /v1/search/jobs`: a budgeted
+//! DSE run should not pin an HTTP connection thread for its whole
+//! duration (ROADMAP's `/v1/search` async follow-up; the full-stack DSE
+//! frameworks in the related work treat exploration as long-running
+//! background jobs, not request/response calls).
+//!
+//! [`JobManager`] owns a **bounded** background worker pool and a
+//! bounded submission queue. A job is an opaque task closure producing
+//! the result JSON — the server hands it the same validated
+//! [`SearchSpec`](crate::offload::server) run the synchronous endpoint
+//! executes, so a completed job's `result` is *bit-identical* to the
+//! synchronous response for the same request body (pinned by
+//! integration test).
+//!
+//! Lifecycle: `queued → running → done | failed | cancelled`
+//! (`queued → cancelled` when a job is cancelled before a worker claims
+//! it). Cancellation is cooperative: every job carries an
+//! `Arc<AtomicBool>` cancel token and an `Arc<AtomicUsize>` live
+//! progress counter, which the server threads into
+//! [`Explorer::cancel_token`](crate::dse::Explorer::cancel_token) /
+//! [`Explorer::progress`](crate::dse::Explorer::progress) — the scoring
+//! core checks the token per chunk, so a running job transitions to
+//! `cancelled` within one scoring chunk and frees its worker slot.
+//!
+//! Retention is bounded two ways so the process stays bounded no matter
+//! how many jobs a client submits: finished jobs are evicted after
+//! [`JobConfig::ttl`], and at most [`JobConfig::max_retained`] finished
+//! jobs are kept (oldest-finished evicted first). Queued and running
+//! jobs are never evicted.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::json::{jnum, jstr, Json};
+
+/// A job body: runs off the connection thread on a pool worker, given
+/// the job's cancel token and live progress counter, and returns the
+/// result JSON (for search jobs: the exact value the synchronous
+/// endpoint would have answered with).
+pub type JobTask = Box<dyn FnOnce(Arc<AtomicBool>, Arc<AtomicUsize>) -> Result<Json> + Send>;
+
+/// Sizing and retention policy for a [`JobManager`].
+#[derive(Debug, Clone, Copy)]
+pub struct JobConfig {
+    /// Background worker threads (= jobs running concurrently).
+    pub workers: usize,
+    /// How long a finished (done/failed/cancelled) job is retained for
+    /// polling before eviction.
+    pub ttl: Duration,
+    /// Cap on retained finished jobs (oldest-finished evicted first).
+    pub max_retained: usize,
+    /// Cap on queued-but-unclaimed jobs; submissions beyond it are
+    /// refused ([`SubmitError::QueueFull`] → HTTP 429).
+    pub max_queued: usize,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            workers: 2,
+            ttl: Duration::from_secs(600),
+            max_retained: 64,
+            max_queued: 32,
+        }
+    }
+}
+
+/// Job lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStatus {
+    /// Stable machine name (REST `status` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    /// Done, failed and cancelled jobs are terminal (and evictable).
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled
+        )
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The pending-job queue is at [`JobConfig::max_queued`].
+    QueueFull { pending: usize, cap: usize },
+    /// The manager is shutting down.
+    ShuttingDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { pending, cap } => write!(
+                f,
+                "job queue full ({pending} pending, cap {cap}) — retry after a job finishes"
+            ),
+            SubmitError::ShuttingDown => write!(f, "job manager is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Mutable job state behind the job's own mutex (lock order: registry
+/// mutex first when both are needed).
+struct JobState {
+    status: JobStatus,
+    /// The body; taken by the worker that claims the job.
+    task: Option<JobTask>,
+    /// Result JSON of a `Done` job.
+    result: Option<Json>,
+    /// Error chain of a `Failed` job.
+    error: Option<String>,
+    finished: Option<Instant>,
+}
+
+impl JobState {
+    /// Move a still-queued job straight to `cancelled`: drop its task,
+    /// stamp the finish time. The one transition shared by `cancel()`,
+    /// shutdown, and a worker skipping a claimed-but-cancelled entry;
+    /// callers hold the job's state lock.
+    fn cancel_queued(&mut self) {
+        self.status = JobStatus::Cancelled;
+        self.task = None;
+        self.finished = Some(Instant::now());
+    }
+}
+
+/// One submitted job: identity + progress/cancel handles + state.
+pub struct Job {
+    id: u64,
+    /// Human-readable summary ("random lenet5 budget=64") for listings.
+    label: String,
+    /// Evaluation budget of the underlying run (progress denominator).
+    budget: usize,
+    cancel: Arc<AtomicBool>,
+    progress: Arc<AtomicUsize>,
+    state: Mutex<JobState>,
+}
+
+impl Job {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.state.lock().unwrap().status
+    }
+
+    /// Live evaluation count (from the run's `Explorer::progress`
+    /// counter while running; final count once terminal).
+    pub fn evaluations(&self) -> usize {
+        self.progress.load(Ordering::Relaxed)
+    }
+
+    /// Whether cancellation has been requested (the transition to
+    /// `cancelled` happens within one scoring chunk of this).
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// The REST record. `include_result` controls whether a `Done`
+    /// job's full result JSON rides along (`GET /v1/jobs/{id}`) or is
+    /// left out (`GET /v1/jobs` listings stay small).
+    pub fn to_json(&self, include_result: bool) -> Json {
+        let st = self.state.lock().unwrap();
+        let mut o = Json::obj();
+        o.set("id", jnum(self.id as f64))
+            .set("label", jstr(&self.label))
+            .set("status", jstr(st.status.name()))
+            .set("budget", jnum(self.budget as f64))
+            .set(
+                "evaluations",
+                jnum(self.progress.load(Ordering::Relaxed) as f64),
+            )
+            .set("cancel_requested", Json::Bool(self.cancel_requested()));
+        if let Some(err) = &st.error {
+            o.set("error", jstr(err));
+        }
+        if include_result {
+            if let Some(r) = &st.result {
+                o.set("result", r.clone());
+            }
+        }
+        o
+    }
+}
+
+/// Registry behind the manager mutex: every retained job plus the FIFO
+/// of queued ids the workers drain.
+struct Registry {
+    jobs: BTreeMap<u64, Arc<Job>>,
+    queue: VecDeque<u64>,
+}
+
+struct Inner {
+    cfg: JobConfig,
+    reg: Mutex<Registry>,
+    /// Wakes workers when the queue gains an entry or shutdown starts.
+    cv: Condvar,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+}
+
+/// Bounded background worker pool running submitted jobs; see the
+/// module docs for lifecycle, cancellation and retention semantics.
+pub struct JobManager {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl JobManager {
+    /// Start `cfg.workers` background workers.
+    pub fn new(cfg: JobConfig) -> JobManager {
+        let inner = Arc::new(Inner {
+            cfg,
+            reg: Mutex::new(Registry {
+                jobs: BTreeMap::new(),
+                queue: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("search-job-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn job worker")
+            })
+            .collect();
+        JobManager { inner, workers }
+    }
+
+    /// Enqueue a job; refused when the queue is at capacity or the
+    /// manager is shutting down. Returns the job handle (status
+    /// `queued`; a worker picks it up in submission order).
+    pub fn submit(
+        &self,
+        label: String,
+        budget: usize,
+        task: JobTask,
+    ) -> Result<Arc<Job>, SubmitError> {
+        let mut reg = self.inner.reg.lock().unwrap();
+        // The shutdown check must happen *under* the registry lock:
+        // Drop sets `stop` before taking this lock for its cancellation
+        // sweep, so a racing submit either refuses here or lands before
+        // the sweep (which then cancels it) — never after, where no
+        // worker would ever give the job a terminal state.
+        if self.inner.stop.load(Ordering::Relaxed) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        Self::evict_locked(&self.inner.cfg, &mut reg);
+        if reg.queue.len() >= self.inner.cfg.max_queued {
+            return Err(SubmitError::QueueFull {
+                pending: reg.queue.len(),
+                cap: self.inner.cfg.max_queued,
+            });
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let job = Arc::new(Job {
+            id,
+            label,
+            budget,
+            cancel: Arc::new(AtomicBool::new(false)),
+            progress: Arc::new(AtomicUsize::new(0)),
+            state: Mutex::new(JobState {
+                status: JobStatus::Queued,
+                task: Some(task),
+                result: None,
+                error: None,
+                finished: None,
+            }),
+        });
+        reg.jobs.insert(id, job.clone());
+        reg.queue.push_back(id);
+        drop(reg);
+        self.inner.cv.notify_one();
+        Ok(job)
+    }
+
+    /// Look a job up by id (`None` once evicted — completed jobs are
+    /// forgotten after the TTL / retention cap).
+    pub fn get(&self, id: u64) -> Option<Arc<Job>> {
+        let mut reg = self.inner.reg.lock().unwrap();
+        Self::evict_locked(&self.inner.cfg, &mut reg);
+        reg.jobs.get(&id).cloned()
+    }
+
+    /// Every retained job, in id (= submission) order.
+    pub fn list(&self) -> Vec<Arc<Job>> {
+        let mut reg = self.inner.reg.lock().unwrap();
+        Self::evict_locked(&self.inner.cfg, &mut reg);
+        reg.jobs.values().cloned().collect()
+    }
+
+    /// Request cancellation. A queued job transitions to `cancelled`
+    /// immediately (and stops consuming queue capacity); a running one
+    /// gets its cancel token set and transitions within one scoring
+    /// chunk; a terminal job is left as-is (idempotent). `None` for
+    /// unknown/evicted ids.
+    pub fn cancel(&self, id: u64) -> Option<Arc<Job>> {
+        let job = {
+            let mut reg = self.inner.reg.lock().unwrap();
+            Self::evict_locked(&self.inner.cfg, &mut reg);
+            let job = reg.jobs.get(&id).cloned()?;
+            // Drop the id from the pending queue immediately: with every
+            // worker busy, nobody would pop-and-skip the cancelled entry
+            // for a long time, and it would keep counting against
+            // `max_queued` (refusing live submissions with 429s).
+            reg.queue.retain(|&qid| qid != id);
+            job
+        };
+        let mut st = job.state.lock().unwrap();
+        // Terminal jobs are left untouched (idempotent no-op): setting
+        // the token on a done/failed record would advertise
+        // `cancel_requested: true` on a job that can never transition.
+        if !st.status.is_terminal() {
+            // Claiming requires this same state lock, so the ordering
+            // with a racing worker is serialized: either we cancel the
+            // queued entry here, or the worker claimed it first and its
+            // task observes the token at the next scoring chunk.
+            job.cancel.store(true, Ordering::Relaxed);
+            if st.status == JobStatus::Queued {
+                st.cancel_queued();
+            }
+        }
+        drop(st);
+        Some(job)
+    }
+
+    /// Queued-but-unclaimed job count (introspection/tests).
+    pub fn pending(&self) -> usize {
+        self.inner.reg.lock().unwrap().queue.len()
+    }
+
+    /// Evict finished jobs past the TTL, then oldest-finished beyond
+    /// the retention cap. Queued/running jobs are never evicted.
+    fn evict_locked(cfg: &JobConfig, reg: &mut Registry) {
+        let now = Instant::now();
+        let mut finished: Vec<(Instant, u64)> = Vec::new();
+        reg.jobs.retain(|&id, job| {
+            let st = job.state.lock().unwrap();
+            match st.finished {
+                Some(t) if st.status.is_terminal() => {
+                    if now.duration_since(t) > cfg.ttl {
+                        false
+                    } else {
+                        finished.push((t, id));
+                        true
+                    }
+                }
+                _ => true,
+            }
+        });
+        if finished.len() > cfg.max_retained {
+            finished.sort();
+            let excess = finished.len() - cfg.max_retained;
+            for &(_, id) in &finished[..excess] {
+                reg.jobs.remove(&id);
+            }
+        }
+    }
+}
+
+impl Drop for JobManager {
+    /// Shutdown: refuse new work, cancel everything outstanding, wake
+    /// and join the workers. Running jobs abort within a scoring chunk
+    /// via their token; still-queued jobs are moved to `cancelled`
+    /// directly (workers exit without draining the queue, so nothing
+    /// else would ever give them a terminal state a poller can see).
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        {
+            let mut reg = self.inner.reg.lock().unwrap();
+            reg.queue.clear();
+            for job in reg.jobs.values() {
+                let mut st = job.state.lock().unwrap();
+                if st.status.is_terminal() {
+                    continue;
+                }
+                job.cancel.store(true, Ordering::Relaxed);
+                if st.status == JobStatus::Queued {
+                    st.cancel_queued();
+                }
+            }
+        }
+        self.inner.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One background worker: claim the oldest queued job, run it, record
+/// the outcome, repeat. An `Err` from a task whose cancel token is set
+/// is a cancellation (the cooperative `DseError::Cancelled` path), not
+/// a failure.
+fn worker_loop(inner: &Inner) {
+    loop {
+        let job = {
+            let mut reg = inner.reg.lock().unwrap();
+            loop {
+                if inner.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(id) = reg.queue.pop_front() {
+                    match reg.jobs.get(&id) {
+                        Some(j) => break j.clone(),
+                        None => continue,
+                    }
+                }
+                reg = inner.cv.wait(reg).unwrap();
+            }
+        };
+        let task = {
+            let mut st = job.state.lock().unwrap();
+            if st.status != JobStatus::Queued {
+                continue; // cancelled while queued
+            }
+            if job.cancel.load(Ordering::Relaxed) {
+                st.cancel_queued();
+                continue;
+            }
+            st.status = JobStatus::Running;
+            st.task.take().expect("queued job carries its task")
+        };
+        let res = task(job.cancel.clone(), job.progress.clone());
+        let mut st = job.state.lock().unwrap();
+        st.finished = Some(Instant::now());
+        match res {
+            // A run that completed before noticing a late cancel request
+            // still reports its (valid) result.
+            Ok(result) => {
+                st.status = JobStatus::Done;
+                st.result = Some(result);
+            }
+            Err(_) if job.cancel.load(Ordering::Relaxed) => {
+                st.status = JobStatus::Cancelled;
+            }
+            Err(e) => {
+                st.status = JobStatus::Failed;
+                st.error = Some(format!("{e:#}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    fn tiny_cfg() -> JobConfig {
+        JobConfig {
+            workers: 1,
+            ttl: Duration::from_secs(600),
+            max_retained: 64,
+            max_queued: 4,
+        }
+    }
+
+    /// Spin-wait for a terminal status (jobs here run in microseconds).
+    fn wait_terminal(job: &Job) -> JobStatus {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let s = job.status();
+            if s.is_terminal() {
+                return s;
+            }
+            assert!(Instant::now() < deadline, "job never finished");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// A task that spins until its cancel token fires (or a release
+    /// flag lets it finish), driving the progress counter like a run.
+    fn spinning_task(release: Arc<AtomicBool>) -> JobTask {
+        Box::new(move |cancel, progress| {
+            loop {
+                progress.fetch_add(1, Ordering::Relaxed);
+                if cancel.load(Ordering::Relaxed) {
+                    return Err(anyhow!("cancelled cooperatively"));
+                }
+                if release.load(Ordering::Relaxed) {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    return Ok(o);
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        })
+    }
+
+    #[test]
+    fn job_runs_to_done_with_result() {
+        let mgr = JobManager::new(tiny_cfg());
+        let job = mgr
+            .submit(
+                "quick".into(),
+                8,
+                Box::new(|_c, progress| {
+                    progress.store(8, Ordering::Relaxed);
+                    let mut o = Json::obj();
+                    o.set("answer", jnum(42.0));
+                    Ok(o)
+                }),
+            )
+            .unwrap();
+        assert_eq!(wait_terminal(&job), JobStatus::Done);
+        assert_eq!(job.evaluations(), 8);
+        let rec = job.to_json(true);
+        assert_eq!(rec.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(rec.path(&["result", "answer"]).unwrap().as_f64(), Some(42.0));
+        // Listings omit the result payload.
+        assert!(job.to_json(false).get("result").is_none());
+        // Cancelling a terminal job is a true no-op: status stays done
+        // and the record never advertises cancel_requested.
+        mgr.cancel(job.id()).unwrap();
+        assert_eq!(job.status(), JobStatus::Done);
+        assert!(!job.cancel_requested());
+    }
+
+    #[test]
+    fn failed_job_carries_error() {
+        let mgr = JobManager::new(tiny_cfg());
+        let job = mgr
+            .submit("boom".into(), 1, Box::new(|_c, _p| Err(anyhow!("kaput"))))
+            .unwrap();
+        assert_eq!(wait_terminal(&job), JobStatus::Failed);
+        let rec = job.to_json(true);
+        assert!(rec.get("error").unwrap().as_str().unwrap().contains("kaput"));
+    }
+
+    #[test]
+    fn running_job_cancels_cooperatively_and_frees_the_worker() {
+        let mgr = JobManager::new(tiny_cfg());
+        let release = Arc::new(AtomicBool::new(false));
+        let job = mgr
+            .submit("spinner".into(), 1000, spinning_task(release))
+            .unwrap();
+        // Wait until it is actually running (progress moves).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while job.evaluations() == 0 {
+            assert!(Instant::now() < deadline, "job never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(job.status(), JobStatus::Running);
+        mgr.cancel(job.id()).unwrap();
+        assert!(job.cancel_requested());
+        assert_eq!(wait_terminal(&job), JobStatus::Cancelled);
+        // The worker slot is free again: a follow-up job completes.
+        let next = mgr
+            .submit("after".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
+            .unwrap();
+        assert_eq!(wait_terminal(&next), JobStatus::Done);
+    }
+
+    #[test]
+    fn queued_job_cancels_before_running() {
+        let mgr = JobManager::new(tiny_cfg()); // 1 worker
+        let release = Arc::new(AtomicBool::new(false));
+        let blocker = mgr
+            .submit("blocker".into(), 1, spinning_task(release.clone()))
+            .unwrap();
+        let queued = mgr
+            .submit(
+                "never-runs".into(),
+                1,
+                Box::new(|_c, p| {
+                    p.store(99, Ordering::Relaxed);
+                    Ok(Json::obj())
+                }),
+            )
+            .unwrap();
+        assert_eq!(queued.status(), JobStatus::Queued);
+        mgr.cancel(queued.id()).unwrap();
+        assert_eq!(queued.status(), JobStatus::Cancelled);
+        // The cancelled entry left the pending queue immediately.
+        assert_eq!(mgr.pending(), 0);
+        release.store(true, Ordering::Relaxed);
+        assert_eq!(wait_terminal(&blocker), JobStatus::Done);
+        // The cancelled job's task never executed.
+        assert_eq!(queued.evaluations(), 0);
+    }
+
+    #[test]
+    fn submit_refused_when_queue_full() {
+        let mgr = JobManager::new(tiny_cfg()); // 1 worker, 4 queued max
+        let release = Arc::new(AtomicBool::new(false));
+        let _blocker = mgr
+            .submit("blocker".into(), 1, spinning_task(release.clone()))
+            .unwrap();
+        // Give the worker a moment to claim the blocker off the queue.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while mgr.pending() > 0 {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for i in 0..4 {
+            mgr.submit(format!("q{i}"), 1, Box::new(|_c, _p| Ok(Json::obj())))
+                .unwrap();
+        }
+        let refused = mgr.submit("overflow".into(), 1, Box::new(|_c, _p| Ok(Json::obj())));
+        let queued_id = match refused {
+            Err(SubmitError::QueueFull { pending: 4, cap: 4 }) => {
+                // Regression: cancelling a queued job must free its queue
+                // slot even while every worker is busy — a fresh submit
+                // succeeds instead of 429ing against a dead entry.
+                let victim = mgr
+                    .list()
+                    .into_iter()
+                    .find(|j| j.status() == JobStatus::Queued)
+                    .expect("a queued job to cancel");
+                mgr.cancel(victim.id()).unwrap();
+                assert_eq!(mgr.pending(), 3);
+                mgr.submit("refill".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
+                    .expect("freed slot accepts a new job")
+                    .id()
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        };
+        release.store(true, Ordering::Relaxed);
+        let refill = mgr.get(queued_id).unwrap();
+        assert_eq!(wait_terminal(&refill), JobStatus::Done);
+    }
+
+    #[test]
+    fn ttl_evicts_finished_jobs() {
+        let mgr = JobManager::new(JobConfig {
+            ttl: Duration::from_millis(0),
+            ..tiny_cfg()
+        });
+        let job = mgr
+            .submit("ephemeral".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
+            .unwrap();
+        assert_eq!(wait_terminal(&job), JobStatus::Done);
+        // Any elapsed time beats a zero TTL; the next access evicts.
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(mgr.get(job.id()).is_none(), "finished job must be evicted");
+        assert!(mgr.list().is_empty());
+    }
+
+    #[test]
+    fn retention_cap_evicts_oldest_finished() {
+        let mgr = JobManager::new(JobConfig {
+            max_retained: 2,
+            ..tiny_cfg()
+        });
+        let jobs: Vec<_> = (0..5)
+            .map(|i| {
+                let j = mgr
+                    .submit(format!("j{i}"), 1, Box::new(|_c, _p| Ok(Json::obj())))
+                    .unwrap();
+                assert_eq!(wait_terminal(&j), JobStatus::Done);
+                j
+            })
+            .collect();
+        let retained = mgr.list();
+        assert!(
+            retained.len() <= 2,
+            "retention cap violated: {} jobs retained",
+            retained.len()
+        );
+        // The most recent job is still there; the oldest is gone.
+        assert!(mgr.get(jobs[4].id()).is_some());
+        assert!(mgr.get(jobs[0].id()).is_none());
+    }
+
+    #[test]
+    fn shutdown_cancels_running_and_queued_jobs() {
+        let mgr = JobManager::new(tiny_cfg()); // 1 worker
+        let release = Arc::new(AtomicBool::new(false));
+        let running = mgr
+            .submit("spinner".into(), 1, spinning_task(release))
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while running.evaluations() == 0 {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Queued behind the busy worker; never claimed before shutdown.
+        let queued = mgr
+            .submit("never-runs".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
+            .unwrap();
+        drop(mgr); // must not hang: the token aborts the spinner
+        assert_eq!(running.status(), JobStatus::Cancelled);
+        // A queued job must land in a terminal state too, or a poller
+        // holding its handle would wait forever.
+        assert_eq!(queued.status(), JobStatus::Cancelled);
+    }
+}

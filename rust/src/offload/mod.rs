@@ -1,13 +1,15 @@
 //! Offloading substrate: the local-vs-cloud decision model ([`model`]),
-//! the REST API of §IV ([`server`], [`http`]), and a small client
-//! ([`client`]).
+//! the REST API of §IV ([`server`], [`http`]), the async search-job
+//! subsystem behind it ([`jobs`]), and a small client ([`client`]).
 
 pub mod client;
 pub mod http;
+pub mod jobs;
 pub mod model;
 pub mod server;
 
 pub use client::OffloadClient;
+pub use jobs::{Job, JobConfig, JobManager, JobStatus};
 pub use model::{
     decide, local_estimate, offload_estimate, Constraints, Decision, EdgePowerProfile,
     ExecutionEstimate, Link, Recommendation,

@@ -26,6 +26,22 @@
 //!   attached ML predictor; the budget is hard-capped server-side and
 //!   backstopped by the coordinator's row-level
 //!   [`EvalBudget`](crate::coordinator::EvalBudget).
+//! * `POST /v1/search/jobs` — same body (and the same strict
+//!   validation) as `/v1/search`, but the run executes on the
+//!   [`JobManager`](crate::offload::jobs::JobManager)'s bounded
+//!   background worker pool instead of the connection thread → `202`
+//!   with the queued job record. A completed job's `result` is
+//!   bit-identical to the synchronous response for the same body.
+//! * `GET /v1/jobs` — list retained jobs (results omitted).
+//! * `GET /v1/jobs/{id}` — job status + live progress (the run's
+//!   evaluation counter) + result once done; `404` after eviction
+//!   (finished jobs are retained for a TTL, bounded in count).
+//! * `DELETE /v1/jobs/{id}` — cooperative cancel: a queued job is
+//!   cancelled immediately, a running one within one scoring chunk.
+//!
+//! Connection hygiene: every accepted socket gets read/write timeouts
+//! ([`ServerState::io_timeout`]) so an idle or trickling client cannot
+//! pin a handler thread forever.
 //!
 //! The ML-predictor path is the REST hot path: feature descriptors come
 //! from a shared [`DescriptorCache`] (the HyPA analysis — by far the
@@ -40,9 +56,10 @@
 //! persistent connection worker pool.
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -57,12 +74,48 @@ use crate::gpu::specs::by_name;
 use crate::ml::features::N_FEATURES;
 use crate::ml::matrix::FeatureMatrix;
 use crate::offload::http::{read_request, write_response, Request, Response};
+use crate::offload::jobs::{JobConfig, JobManager, SubmitError};
 use crate::offload::model::{
     decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
 };
 use crate::sim::Simulator;
 use crate::util::json::{jarr, jnum, jstr, Json};
 use crate::util::pool;
+
+/// I/O time budget for every accepted connection: the *total* wall
+/// clock a client gets to deliver its request (headers + body, enforced
+/// by the private `DeadlineStream` adapter across reads, so a trickling
+/// slow-loris client is bounded exactly like an idle one), and the
+/// per-write timeout on the response. Before this, a socket that never sent a full request
+/// blocked `read_request` indefinitely and its `JoinHandle` was only
+/// reaped on the accept tick.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// `Read` adapter imposing one overall deadline across every read of a
+/// request. A plain `set_read_timeout` only bounds the gap between
+/// bytes — a client trickling one header byte per interval would reset
+/// it indefinitely; this wrapper re-arms the socket timeout with the
+/// *remaining* budget before each read and fails once it is spent.
+struct DeadlineStream<'a> {
+    stream: &'a mut TcpStream,
+    deadline: std::time::Instant,
+}
+
+impl std::io::Read for DeadlineStream<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let remaining = self
+            .deadline
+            .saturating_duration_since(std::time::Instant::now());
+        if remaining.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request read deadline exceeded",
+            ));
+        }
+        self.stream.set_read_timeout(Some(remaining))?;
+        std::io::Read::read(&mut *self.stream, buf)
+    }
+}
 
 /// Server state shared across connection threads.
 pub struct ServerState {
@@ -72,21 +125,35 @@ pub struct ServerState {
     pub predictor: Option<Predictor>,
     /// Shared feature-descriptor + GPU-name cache: the expensive HyPA
     /// analysis behind `/v1/predict` runs once per `(network, batch)`
-    /// across all connection threads.
-    pub cache: DescriptorCache,
+    /// across all connection threads. `Arc` so async search jobs can
+    /// keep using it after their connection thread has answered 202.
+    pub cache: Arc<DescriptorCache>,
+    /// Background worker pool for `POST /v1/search/jobs`.
+    pub jobs: JobManager,
     pub edge_gpu: String,
     pub cloud_gpu: String,
+    /// Per-connection I/O budget: total request-read deadline + each
+    /// response write's timeout (tests shrink it).
+    pub io_timeout: Duration,
     pub requests: AtomicU64,
 }
 
 impl ServerState {
     pub fn new(predictor: Option<Predictor>) -> ServerState {
+        Self::with_job_config(predictor, JobConfig::default())
+    }
+
+    /// [`ServerState::new`] with an explicit async-job policy (worker
+    /// count, retention TTL/cap, queue bound).
+    pub fn with_job_config(predictor: Option<Predictor>, jobs: JobConfig) -> ServerState {
         ServerState {
             sim: Mutex::new(Simulator::default()),
             predictor,
-            cache: DescriptorCache::new(),
+            cache: Arc::new(DescriptorCache::new()),
+            jobs: JobManager::new(jobs),
             edge_gpu: "jetson-tx1".into(),
             cloud_gpu: "v100s".into(),
+            io_timeout: DEFAULT_IO_TIMEOUT,
             requests: AtomicU64::new(0),
         }
     }
@@ -152,17 +219,41 @@ impl Drop for OffloadServer {
 }
 
 fn handle_connection(mut stream: TcpStream, state: &ServerState) {
-    let resp = match read_request(&mut stream) {
+    // Socket hygiene before the first read: without a deadline one idle
+    // or trickling client pins this handler thread forever (its
+    // JoinHandle only drains on the 2 ms accept tick). The read side
+    // gets a *total* budget via DeadlineStream; the write side a
+    // per-write timeout (responses are small and bounded).
+    let _ = stream.set_write_timeout(Some(state.io_timeout));
+    let read_result = read_request(&mut DeadlineStream {
+        deadline: std::time::Instant::now() + state.io_timeout,
+        stream: &mut stream,
+    });
+    let resp = match read_result {
         Ok(req) => {
             state.requests.fetch_add(1, Ordering::Relaxed);
             route(&req, state)
         }
-        Err(e) => Response::json(
-            400,
-            format!("{{\"error\":{}}}", Json::Str(e.to_string()).to_string()),
-        ),
+        Err(e) => error_json(400, e.to_string()),
     };
     let _ = write_response(&mut stream, &resp);
+    // Lingering close: when the client still has unread request bytes in
+    // flight (e.g. a body we refused to read after a framing error), an
+    // immediate close would RST the connection and can destroy the
+    // just-written 400 before the client reads it. Half-close our write
+    // side (response + FIN reach the client) and drain its leftovers for
+    // a bounded moment so the close is clean.
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut drain = DeadlineStream {
+        deadline: std::time::Instant::now() + Duration::from_millis(250),
+        stream: &mut stream,
+    };
+    let mut sink = [0u8; 4096];
+    while let Ok(n) = std::io::Read::read(&mut drain, &mut sink) {
+        if n == 0 {
+            break; // client finished and closed — clean shutdown
+        }
+    }
 }
 
 fn route(req: &Request, state: &ServerState) -> Response {
@@ -174,7 +265,11 @@ fn route(req: &Request, state: &ServerState) -> Response {
         ("POST", "/v1/predict") => json_endpoint(req, |j| predict(j, state)),
         ("POST", "/v1/predict/bulk") => json_endpoint(req, |j| predict_bulk(j, state)),
         ("POST", "/v1/search") => json_endpoint(req, |j| search(j, state)),
-        ("POST", _) | ("GET", _) => Response::text(404, "not found"),
+        ("POST", "/v1/search/jobs") => search_submit(req, state),
+        ("GET", "/v1/jobs") => jobs_list(state),
+        ("GET", p) if p.starts_with("/v1/jobs/") => job_status(p, state),
+        ("DELETE", p) if p.starts_with("/v1/jobs/") => job_cancel(p, state),
+        ("POST", _) | ("GET", _) | ("DELETE", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
 }
@@ -185,11 +280,7 @@ fn json_endpoint(req: &Request, f: impl FnOnce(&Json) -> Result<Json>) -> Respon
         .and_then(|s| Json::parse(s).map_err(|e| anyhow!("{e}")));
     match parsed.and_then(|j| f(&j)) {
         Ok(body) => Response::json(200, body.to_string()),
-        Err(e) => {
-            let mut o = Json::obj();
-            o.set("error", Json::Str(format!("{e:#}")));
-            Response::json(400, o.to_string())
-        }
+        Err(e) => error_json(400, format!("{e:#}")),
     }
 }
 
@@ -428,12 +519,43 @@ fn req_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
     }
 }
 
-/// POST /v1/search — run a named strategy server-side through the shared
-/// `Explorer` session API and the server's `DescriptorCache`.
-fn search(j: &Json, state: &ServerState) -> Result<Json> {
-    let predictor = state.predictor.as_ref().ok_or_else(|| {
-        anyhow!("no ML predictor attached (start the server with one to enable /v1/search)")
-    })?;
+/// A parsed, fully validated `/v1/search` request — the one validation
+/// path shared by the synchronous endpoint and `POST /v1/search/jobs`
+/// (an async submission is rejected with the same 400s at submit time,
+/// never accepted and failed later).
+struct SearchSpec {
+    net: Network,
+    strategy: StrategySpec,
+    budget: usize,
+    batches: Vec<usize>,
+    objective: Objective,
+    constraints: DseConstraints,
+    seed: u64,
+    top_k: usize,
+}
+
+/// Which strategy a `SearchSpec` runs (the grid carries its validated
+/// `DesignSpace` so submit-time and run-time agree on it).
+enum StrategySpec {
+    Grid(DesignSpace),
+    Random,
+    Local,
+    Anneal,
+}
+
+impl StrategySpec {
+    fn name(&self) -> &'static str {
+        match self {
+            StrategySpec::Grid(_) => "grid",
+            StrategySpec::Random => "random",
+            StrategySpec::Local => "local",
+            StrategySpec::Anneal => "anneal",
+        }
+    }
+}
+
+/// Validate a `/v1/search` body into a [`SearchSpec`].
+fn parse_search(j: &Json, state: &ServerState) -> Result<SearchSpec> {
     let net = net_for(j)?;
     let budget = req_usize(j, "budget", 64)?;
     anyhow::ensure!(
@@ -497,16 +619,16 @@ fn search(j: &Json, state: &ServerState) -> Result<Json> {
             f as u64
         }
     };
-    let top_k = req_usize(j, "top_k", 5)?.min(MAX_REST_TOP_K);
+    // `top_k` fails loudly like every other knob (`req_usize` contract):
+    // it used to be silently clamped to MAX_REST_TOP_K, the one knob
+    // whose out-of-range value ran a *different* query than requested.
+    let top_k = req_usize(j, "top_k", 5)?;
+    anyhow::ensure!(
+        top_k <= MAX_REST_TOP_K,
+        "'top_k' must be in 0..={MAX_REST_TOP_K}, got {top_k}"
+    );
 
-    let explorer = Explorer::new(&net, predictor)
-        .constraints(constraints)
-        .objective(objective)
-        .cache(&state.cache)
-        .seed(seed)
-        .budget(budget);
-    let strategy_name = j.str_or("strategy", "random");
-    let exploration = match strategy_name {
+    let strategy = match j.str_or("strategy", "random") {
         "grid" => {
             let steps = req_usize(j, "freq_steps", 8)?;
             anyhow::ensure!(
@@ -523,20 +645,62 @@ fn search(j: &Json, state: &ServerState) -> Result<Json> {
                  (max {MAX_REST_SEARCH_BUDGET}) or reduce 'freq_steps'/'batches'",
                 space.len()
             );
-            explorer.run(&Grid::new(space))?
+            StrategySpec::Grid(space)
         }
-        "random" => explorer.run(&Random::new(&batches))?,
-        "local" => explorer.run(&LocalRestarts::new(&batches))?,
-        "anneal" => explorer.run(&Anneal::new(&batches))?,
+        "random" => StrategySpec::Random,
+        "local" => StrategySpec::Local,
+        "anneal" => StrategySpec::Anneal,
         other => {
             return Err(anyhow!(
                 "unknown strategy '{other}' (one of: grid, random, local, anneal)"
             ))
         }
     };
+    Ok(SearchSpec {
+        net,
+        strategy,
+        budget,
+        batches,
+        objective,
+        constraints,
+        seed,
+        top_k,
+    })
+}
+
+/// Execute a validated [`SearchSpec`] and assemble the response JSON —
+/// the one execution path behind both the synchronous endpoint and the
+/// async job workers (which additionally thread in their job's cancel
+/// token and live progress counter). Same spec + same seed → the same
+/// JSON, bit for bit, on either path.
+fn run_search(
+    spec: &SearchSpec,
+    predictor: &Predictor,
+    cache: &DescriptorCache,
+    cancel: Option<Arc<AtomicBool>>,
+    progress: Option<Arc<AtomicUsize>>,
+) -> Result<Json> {
+    let mut explorer = Explorer::new(&spec.net, predictor)
+        .constraints(spec.constraints)
+        .objective(spec.objective)
+        .cache(cache)
+        .seed(spec.seed)
+        .budget(spec.budget);
+    if let Some(t) = cancel {
+        explorer = explorer.cancel_token(t);
+    }
+    if let Some(c) = progress {
+        explorer = explorer.progress(c);
+    }
+    let exploration = match &spec.strategy {
+        StrategySpec::Grid(space) => explorer.run(&Grid::borrowed(space))?,
+        StrategySpec::Random => explorer.run(&Random::new(&spec.batches))?,
+        StrategySpec::Local => explorer.run(&LocalRestarts::new(&spec.batches))?,
+        StrategySpec::Anneal => explorer.run(&Anneal::new(&spec.batches))?,
+    };
 
     let mut o = Json::obj();
-    o.set("network", jstr(&net.name))
+    o.set("network", jstr(&spec.net.name))
         .set("strategy", jstr(exploration.strategy))
         .set("objective", jstr(exploration.objective.name()))
         .set(
@@ -549,7 +713,7 @@ fn search(j: &Json, state: &ServerState) -> Result<Json> {
         )
         .set(
             "top",
-            jarr(exploration.top_k(top_k).iter().map(scored_json).collect()),
+            jarr(exploration.top_k(spec.top_k).iter().map(scored_json).collect()),
         )
         .set(
             "pareto",
@@ -571,6 +735,112 @@ fn search(j: &Json, state: &ServerState) -> Result<Json> {
     tj.set("rejected", rj);
     o.set("telemetry", tj);
     Ok(o)
+}
+
+/// The "no predictor attached" refusal shared by both search faces.
+fn search_predictor(state: &ServerState) -> Result<&Predictor> {
+    state.predictor.as_ref().ok_or_else(|| {
+        anyhow!("no ML predictor attached (start the server with one to enable /v1/search)")
+    })
+}
+
+/// POST /v1/search — run a named strategy server-side through the shared
+/// `Explorer` session API and the server's `DescriptorCache`, on the
+/// connection thread (the caller waits for the full result).
+fn search(j: &Json, state: &ServerState) -> Result<Json> {
+    let predictor = search_predictor(state)?;
+    let spec = parse_search(j, state)?;
+    run_search(&spec, predictor, &state.cache, None, None)
+}
+
+/// `{"error": …}` with an arbitrary status (the job endpoints answer
+/// 202/404/429/503, which `json_endpoint`'s fixed 200/400 can't).
+fn error_json(status: u16, msg: String) -> Response {
+    let mut o = Json::obj();
+    o.set("error", Json::Str(msg));
+    Response::json(status, o.to_string())
+}
+
+/// POST /v1/search/jobs — validate exactly like `/v1/search`, then hand
+/// the run to the background job pool and answer `202` with the queued
+/// job record. Queue at capacity → `429`; shutdown → `503`.
+fn search_submit(req: &Request, state: &ServerState) -> Response {
+    let parsed = req
+        .body_str()
+        .and_then(|s| Json::parse(s).map_err(|e| anyhow!("{e}")))
+        .and_then(|j| {
+            let predictor = search_predictor(state)?.clone();
+            Ok((parse_search(&j, state)?, predictor))
+        });
+    let (spec, predictor) = match parsed {
+        Ok(v) => v,
+        Err(e) => return error_json(400, format!("{e:#}")),
+    };
+    let label = format!(
+        "{} {} budget={}",
+        spec.strategy.name(),
+        spec.net.name,
+        spec.budget
+    );
+    let budget = spec.budget;
+    let cache = state.cache.clone();
+    let task = Box::new(move |cancel: Arc<AtomicBool>, progress: Arc<AtomicUsize>| {
+        run_search(&spec, &predictor, &cache, Some(cancel), Some(progress))
+    });
+    match state.jobs.submit(label, budget, task) {
+        Ok(job) => Response::json(202, job.to_json(true).to_string()),
+        Err(e @ SubmitError::QueueFull { .. }) => error_json(429, e.to_string()),
+        Err(e @ SubmitError::ShuttingDown) => error_json(503, e.to_string()),
+    }
+}
+
+/// `{id}` from a `/v1/jobs/{id}` path.
+fn job_id_from(path: &str) -> Result<u64> {
+    path.strip_prefix("/v1/jobs/")
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad job id in '{path}' (expected /v1/jobs/<integer>)"))
+}
+
+/// GET /v1/jobs — every retained job, submission order, results omitted.
+fn jobs_list(state: &ServerState) -> Response {
+    let mut o = Json::obj();
+    o.set(
+        "jobs",
+        jarr(state.jobs.list().iter().map(|j| j.to_json(false)).collect()),
+    );
+    Response::json(200, o.to_string())
+}
+
+/// GET /v1/jobs/{id} — status, live progress, and the result once done.
+fn job_status(path: &str, state: &ServerState) -> Response {
+    let id = match job_id_from(path) {
+        Ok(id) => id,
+        Err(e) => return error_json(400, format!("{e:#}")),
+    };
+    match state.jobs.get(id) {
+        Some(job) => Response::json(200, job.to_json(true).to_string()),
+        None => error_json(
+            404,
+            format!("unknown job id {id} (finished jobs are evicted after the retention TTL)"),
+        ),
+    }
+}
+
+/// DELETE /v1/jobs/{id} — cooperative cancel; answers with the record
+/// as it stands (a running job may still say "running" with
+/// `cancel_requested: true` — it transitions within one scoring chunk).
+fn job_cancel(path: &str, state: &ServerState) -> Response {
+    let id = match job_id_from(path) {
+        Ok(id) => id,
+        Err(e) => return error_json(400, format!("{e:#}")),
+    };
+    match state.jobs.cancel(id) {
+        Some(job) => Response::json(200, job.to_json(false).to_string()),
+        None => error_json(
+            404,
+            format!("unknown job id {id} (finished jobs are evicted after the retention TTL)"),
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -716,6 +986,172 @@ mod tests {
         let (_srv, client) = server();
         let (status, _) = client.get("/nope").unwrap();
         assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn malformed_content_length_is_400_over_the_wire() {
+        // Regression: a malformed Content-Length used to be coerced to 0
+        // and the request handled as if it had no body; it must 400.
+        use std::io::{Read, Write};
+        let (srv, _client) = server();
+        for bad in ["nope", "-7"] {
+            let mut s = std::net::TcpStream::connect(srv.addr).unwrap();
+            s.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+                .unwrap();
+            write!(
+                s,
+                "POST /v1/offload/decide HTTP/1.1\r\nContent-Length: {bad}\r\n\r\n"
+            )
+            .unwrap();
+            s.flush().unwrap();
+            let mut buf = Vec::new();
+            let _ = s.read_to_end(&mut buf);
+            let text = String::from_utf8_lossy(&buf);
+            assert!(
+                text.starts_with("HTTP/1.1 400"),
+                "Content-Length '{bad}' answered: {text}"
+            );
+            assert!(text.contains("Content-Length"), "{text}");
+        }
+    }
+
+    #[test]
+    fn truncated_request_is_an_error_not_an_empty_request() {
+        // Regression: EOF mid-headers used to read as the end-of-headers
+        // blank line, accepting the truncated request as complete.
+        use std::io::{Read, Write};
+        let (srv, _client) = server();
+        let mut s = std::net::TcpStream::connect(srv.addr).unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        s.write_all(b"GET /health HTTP/1.1\r\nHost: x\r\n").unwrap();
+        s.flush().unwrap();
+        // Half-close the write side: the server sees EOF mid-headers.
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        assert!(text.contains("closed"), "{text}");
+    }
+
+    #[test]
+    fn idle_connection_times_out_instead_of_pinning_a_thread() {
+        // Regression: accepted sockets had no read/write timeouts, so a
+        // client that connected and sent nothing pinned a handler thread
+        // forever. With `io_timeout` armed the server answers 400 (read
+        // timed out) and the connection closes.
+        use std::io::Read;
+        let mut state = ServerState::new(None);
+        state.io_timeout = std::time::Duration::from_millis(200);
+        let srv = OffloadServer::start("127.0.0.1:0", Arc::new(state)).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut s = std::net::TcpStream::connect(srv.addr).unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .unwrap();
+        // Send nothing at all; just wait for the server to give up.
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < std::time::Duration::from_secs(5),
+            "server never timed the idle connection out ({elapsed:?})"
+        );
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        // And the server is still healthy afterwards.
+        let client = OffloadClient::new(srv.addr);
+        let (status, _) = client.get("/health").unwrap();
+        assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn trickling_client_is_bounded_by_the_total_read_deadline() {
+        // A slow-loris client that keeps sending one byte per interval
+        // resets a naive per-read timeout forever; the DeadlineStream
+        // budget is *total*, so the 400 lands once io_timeout elapses no
+        // matter how alive the trickle looks.
+        use std::io::{Read, Write};
+        let mut state = ServerState::new(None);
+        state.io_timeout = std::time::Duration::from_millis(300);
+        let srv = OffloadServer::start("127.0.0.1:0", Arc::new(state)).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut s = std::net::TcpStream::connect(srv.addr).unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .unwrap();
+        let drip = b"GET /health HTTP/1.1\r\nx-slow: ";
+        let mut resp = Vec::new();
+        for &byte in drip.iter().cycle() {
+            if s.write_all(&[byte]).is_err() {
+                break; // server gave up and closed — expected
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            if t0.elapsed() > std::time::Duration::from_secs(8) {
+                panic!("server never enforced the total read deadline");
+            }
+            // Probe for the 400 without blocking the drip loop.
+            s.set_read_timeout(Some(std::time::Duration::from_millis(1)))
+                .unwrap();
+            let mut probe = [0u8; 256];
+            match s.read(&mut probe) {
+                Ok(0) => break,
+                Ok(n) => {
+                    resp.extend_from_slice(&probe[..n]);
+                    if resp.windows(4).any(|w| w == b"\r\n\r\n") {
+                        break;
+                    }
+                }
+                Err(_) => {}
+            }
+        }
+        // Drain whatever is left of the response with a generous timeout
+        // (the 1 ms probe timeout would truncate it).
+        s.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let _ = s.read_to_end(&mut resp);
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "deadline took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn job_submit_without_predictor_is_400() {
+        let (_srv, client) = server();
+        let (status, body) = client
+            .post(
+                "/v1/search/jobs",
+                r#"{"network":"lenet5","strategy":"random","budget":8}"#,
+            )
+            .unwrap();
+        assert_eq!(status, 400);
+        assert!(
+            String::from_utf8_lossy(&body).contains("no ML predictor"),
+            "{}",
+            String::from_utf8_lossy(&body)
+        );
+    }
+
+    #[test]
+    fn job_routes_validate_ids() {
+        let (_srv, client) = server();
+        // Unknown id: 404 with the eviction hint.
+        let (status, body) = client.get("/v1/jobs/424242").unwrap();
+        assert_eq!(status, 404);
+        assert!(String::from_utf8_lossy(&body).contains("unknown job id"));
+        let (status, _) = client.delete("/v1/jobs/424242").unwrap();
+        assert_eq!(status, 404);
+        // Non-numeric id: 400.
+        let (status, body) = client.get("/v1/jobs/not-a-number").unwrap();
+        assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+        // Empty list on a fresh server.
+        let (status, body) = client.get("/v1/jobs").unwrap();
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(j.get("jobs").and_then(Json::as_arr).unwrap().is_empty());
     }
 
     #[test]

@@ -289,12 +289,123 @@ fn rest_search_reports_infeasible_and_validates_input() {
         // default and run a different search than requested.
         (r#"{"network":"lenet5","strategy":"random","budget":"512"}"#, "'budget' must be a number"),
         (r#"{"network":"lenet5","strategy":"random","budget":8,"batches":4}"#, "'batches' must be an array"),
+        // Regression: an oversized top_k used to be silently clamped to
+        // the cap — the only /v1/search knob that ran a different query
+        // than requested instead of failing loudly.
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"top_k":1000}"#, "'top_k'"),
+        (r#"{"network":"lenet5","strategy":"random","budget":8,"top_k":-3}"#, "'top_k'"),
     ] {
         let (status, resp) = client.post("/v1/search", body).unwrap();
         let text = String::from_utf8_lossy(&resp).to_string();
         assert_eq!(status, 400, "{body} -> {text}");
         assert!(text.contains(needle), "{body} -> {text}");
     }
+}
+
+#[test]
+fn async_job_result_bit_identical_to_sync_search() {
+    // Acceptance: for the same (strategy, seed, budget, constraints)
+    // body, a completed async job's `result` is byte-for-byte the JSON
+    // the synchronous endpoint answers with.
+    let (_service, _srv, client) = search_server();
+    for strategy in ["random", "anneal"] {
+        let req = format!(
+            r#"{{"network":"lenet5","strategy":"{strategy}","budget":24,
+                 "batches":[1,2],"seed":9,"objective":"min-edp","top_k":3}}"#
+        );
+        let (status, sync_body) = client.post("/v1/search", &req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&sync_body));
+
+        let id = client.submit_search_job(&req).unwrap();
+        let rec = client
+            .wait_job(id, std::time::Duration::from_secs(120))
+            .unwrap();
+        assert_eq!(
+            rec.get("status").unwrap().as_str(),
+            Some("done"),
+            "{strategy}: {rec:?}"
+        );
+        let result = rec.get("result").expect("done job carries its result");
+        assert_eq!(
+            result.to_string(),
+            String::from_utf8(sync_body).unwrap(),
+            "{strategy}: async job result diverged from the synchronous response"
+        );
+        // The live progress counter ends exactly on the run's telemetry.
+        assert_eq!(rec.get("evaluations").unwrap().as_usize(), Some(24));
+        assert_eq!(rec.get("budget").unwrap().as_usize(), Some(24));
+    }
+}
+
+#[test]
+fn async_job_cancel_transitions_and_frees_worker_slot() {
+    // Acceptance: DELETE on a running job transitions it to `cancelled`
+    // within one scoring chunk (anneal scores one candidate per step,
+    // so "one chunk" = one step) and frees its worker slot.
+    let (_service, _srv, client) = search_server();
+    // The longest sequential run the endpoint allows: 4096 anneal steps.
+    let req = r#"{"network":"lenet5","strategy":"anneal","budget":4096,
+                  "batches":[1],"seed":5}"#;
+    let id = client.submit_search_job(req).unwrap();
+    let rec = client.cancel_job(id).unwrap();
+    let status = rec.get("status").unwrap().as_str().unwrap().to_string();
+    assert!(
+        rec.get("cancel_requested").unwrap().as_bool() == Some(true)
+            || status == "cancelled",
+        "{rec:?}"
+    );
+    let done = client
+        .wait_job(id, std::time::Duration::from_secs(120))
+        .unwrap();
+    assert_eq!(done.get("status").unwrap().as_str(), Some("cancelled"), "{done:?}");
+    let evals = done.get("evaluations").unwrap().as_usize().unwrap();
+    assert!(evals < 4096, "a cancelled run must stop short of its budget");
+
+    // The worker slot is free again: a fresh job runs to completion.
+    let id2 = client
+        .submit_search_job(
+            r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[1],"seed":1}"#,
+        )
+        .unwrap();
+    let rec2 = client
+        .wait_job(id2, std::time::Duration::from_secs(120))
+        .unwrap();
+    assert_eq!(rec2.get("status").unwrap().as_str(), Some("done"), "{rec2:?}");
+}
+
+#[test]
+fn async_job_listing_tracks_submissions() {
+    let (_service, _srv, client) = search_server();
+    let id = client
+        .submit_search_job(
+            r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[1],"seed":2}"#,
+        )
+        .unwrap();
+    client
+        .wait_job(id, std::time::Duration::from_secs(120))
+        .unwrap();
+    let (status, body) = client.get("/v1/jobs").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let jobs = j.get("jobs").and_then(Json::as_arr).unwrap();
+    let entry = jobs
+        .iter()
+        .find(|e| e.get("id").and_then(Json::as_usize) == Some(id as usize))
+        .expect("submitted job listed");
+    assert_eq!(entry.get("status").unwrap().as_str(), Some("done"));
+    assert!(
+        entry
+            .get("label")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("random lenet5"),
+        "{entry:?}"
+    );
+    // Listings stay small: the full result only travels on /v1/jobs/{id}.
+    assert!(entry.get("result").is_none());
+    let full = client.job_status(id).unwrap();
+    assert!(full.get("result").is_some());
 }
 
 #[test]

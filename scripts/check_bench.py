@@ -41,6 +41,11 @@ REQUIRED_RATIOS = [
     # same grid: the redesign may not tax the hot path (~1.0 expected;
     # a >1.5x fall vs the recorded baseline fails the build).
     "search_builder_vs_legacy",
+    # Async /v1/search/jobs (submit + poll-until-done) vs one
+    # synchronous /v1/search for the same small-budget body: the job
+    # subsystem may not tax a search that would also have fit the
+    # connection thread (~1.0 expected; parity asserted in-bench).
+    "search_async_submit_overhead",
 ]
 
 # Allocation-count keys that must be present AND exactly zero (the
@@ -65,6 +70,8 @@ REQUIRED_STAGES = [
     "knn_tier_tree8_x256",
     "search_legacy_explore",
     "search_builder_grid",
+    "search_sync_rest",
+    "search_async_rest",
 ]
 
 
