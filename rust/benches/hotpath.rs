@@ -48,7 +48,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
-use hypa_dse::offload::{OffloadClient, OffloadServer, ServerState};
+use hypa_dse::offload::{JobConfig, JobManager, OffloadClient, OffloadServer, ServerState};
 use hypa_dse::dse::{
     explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints, Explorer,
     Grid,
@@ -505,6 +505,34 @@ fn main() {
     stages.stage(&m_sy, 64);
     stages.stage(&m_as, 64);
     ratios.set("search_async_submit_overhead", jnum(async_ratio));
+
+    println!("-- async job: plain vs journaled (durability overhead) --");
+    // Crash-safe journaling appends a handful of small JSONL lines per
+    // job (submitted/running/done); that must stay in the noise next to
+    // the run itself. Same submit+poll loop, server whose JobManager
+    // journals every lifecycle event.
+    let journal_path =
+        std::env::temp_dir().join(format!("hypa-bench-journal-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&journal_path);
+    let jstate = Arc::new(ServerState::with_parts(
+        Some(p.clone()),
+        Arc::new(DescriptorCache::new()),
+        JobManager::with_journal(JobConfig::default(), &journal_path).expect("bench journal"),
+    ));
+    let jsrv = OffloadServer::start("127.0.0.1:0", jstate).expect("bench journal server");
+    let jclient = OffloadClient::new(jsrv.addr);
+    let m_aj = bench::bench("search async rest journal", explore_budget, || {
+        let id = jclient.submit_search_job(search_req).unwrap();
+        let rec = jclient.wait_job(id, Duration::from_secs(60)).unwrap();
+        assert_eq!(rec.get("status").unwrap().as_str(), Some("done"));
+        id as usize
+    });
+    let journal_ratio = m_as.p50() / m_aj.p50();
+    println!("  async plain vs journaled: {journal_ratio:.2}x (durability must stay ~1.0)\n");
+    stages.stage(&m_aj, 64);
+    ratios.set("search_async_journal_overhead", jnum(journal_ratio));
+    drop(jsrv);
+    let _ = std::fs::remove_file(&journal_path);
     drop(srv);
     println!("service metrics: {}", p.metrics.summary());
 

@@ -614,6 +614,15 @@ impl Evaluator<'_> {
                             if let Some(e) = cancelled(cancel, evaluated) {
                                 return Err(e.into());
                             }
+                            if cfg!(any(test, debug_assertions)) {
+                                // Deterministic fault injection per scoring
+                                // chunk (ctx = network name, so a test
+                                // targets its own search); a `Panic` here
+                                // propagates through the pool's scope join
+                                // to the job worker's catch_unwind, `Pause`
+                                // holds a run mid-flight for crash tests.
+                                crate::util::failpoint::eval_ctx("dse-score-chunk", &net.name)?;
+                            }
                             shards.fetch_add(1, Ordering::Relaxed);
                             out.extend(score_points(
                                 net, ch, &p, constraints, cache, apply_memory, tally,
@@ -625,6 +634,9 @@ impl Evaluator<'_> {
                     None => {
                         if let Some(e) = cancelled(cancel, evaluated) {
                             return Err(e.into());
+                        }
+                        if cfg!(any(test, debug_assertions)) {
+                            crate::util::failpoint::eval_ctx("dse-score-chunk", &net.name)?;
                         }
                         shards.fetch_add(1, Ordering::Relaxed);
                         let out =
@@ -736,6 +748,11 @@ impl ChunkScorer<'_> {
         }
         if let Some(e) = cancelled(self.cancel, self.evaluated) {
             return Err(e.into());
+        }
+        if cfg!(any(test, debug_assertions)) {
+            // Same injection point as score_sharded: the chain
+            // strategies' sequential scorer is a scoring chunk too.
+            crate::util::failpoint::eval_ctx("dse-score-chunk", &self.net.name)?;
         }
         self.shards.fetch_add(1, Ordering::Relaxed);
         let out = score_points(

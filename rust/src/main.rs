@@ -268,15 +268,44 @@ fn cmd_dse(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use hypa_dse::dse::DescriptorCache;
+    use hypa_dse::offload::{recovered_search_task, JobConfig, JobManager};
     let addr = args.str("addr", "127.0.0.1:7788");
-    let state = if args.bool("with-predictor") {
+    let predictor = if args.bool("with-predictor") {
         let service = start_predictor(&args.str("dataset", DEFAULT_DATASET_PATH))?;
-        let predictor = service.predictor();
+        let p = service.predictor();
         // Keep the service alive for the whole process lifetime.
         std::mem::forget(service);
-        std::sync::Arc::new(ServerState::new(Some(predictor)))
+        Some(p)
     } else {
-        std::sync::Arc::new(ServerState::new(None))
+        None
+    };
+    let state = match args.flags.get("journal") {
+        Some(path) => {
+            // Durable job journal: replay it (re-enqueueing whatever a
+            // previous process left queued/running), keep appending.
+            let path = std::path::PathBuf::from(path);
+            let cache = std::sync::Arc::new(DescriptorCache::new());
+            let jobs = match &predictor {
+                Some(p) => {
+                    let (p, c) = (p.clone(), cache.clone());
+                    JobManager::recover(JobConfig::default(), &path, move |spec| {
+                        recovered_search_task(spec, &p, &c)
+                    })?
+                }
+                // Without a predictor no search can run; interrupted
+                // jobs surface as failed instead of silently vanishing.
+                None => JobManager::recover(JobConfig::default(), &path, |_spec| {
+                    Err(anyhow!("server restarted without --with-predictor"))
+                })?,
+            };
+            let recovered = jobs.list().len();
+            if recovered > 0 {
+                println!("recovered {recovered} job(s) from {}", path.display());
+            }
+            std::sync::Arc::new(ServerState::with_parts(predictor, cache, jobs))
+        }
+        None => std::sync::Arc::new(ServerState::new(predictor)),
     };
     let server = OffloadServer::start(&addr, state)?;
     println!("offload REST API listening on http://{}", server.addr);
@@ -576,7 +605,9 @@ COMMANDS:
   sim       --network N [--gpu G] [--f-mhz F]      simulator ground truth
   hypa      --network N [--batch B]                hybrid PTX analysis
   dse       --network N [--max-power W] [--objective O] [--top K]
-  serve     [--addr A] [--with-predictor]          REST API
+  serve     [--addr A] [--with-predictor] [--journal P]
+                                                   REST API (--journal: durable job
+                                                   log, replayed on restart)
   offload   --network N [--bandwidth M] [--rtt MS] local-vs-cloud decision
   search    --network N [--budget B] [--objective O] [--config F]
                                                    random/local/anneal search vs grid

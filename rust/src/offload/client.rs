@@ -1,13 +1,65 @@
 //! Tiny HTTP client for the offload REST API (tests, examples, and the
 //! `hypa-dse offload-client` / `search --async` CLI paths), including
 //! submit/poll/cancel helpers for the async `/v1/search/jobs` flow.
+//!
+//! Robustness contract (mirrors the server's admission control):
+//!
+//! * [`OffloadClient::wait_job`] polls with capped exponential backoff
+//!   plus **deterministic jitter** (seeded by the job id, so concurrent
+//!   waiters de-synchronize without nondeterministic clocks), bounded
+//!   by a total-elapsed deadline, and reports a typed [`WaitError`]
+//!   instead of a stringly timeout.
+//! * [`OffloadClient::get_with_retry`] retries only what is *safe and
+//!   useful* to retry — transport errors and 503 load-shedding answers
+//!   on idempotent GETs — honoring the server's `Retry-After` hint,
+//!   again under a total-elapsed cap. Non-503 statuses are answers,
+//!   not congestion, and return immediately.
 
 use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::fmt;
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
-use crate::offload::http::{read_response, write_response, Response};
+use crate::offload::http::{read_response, read_response_full, write_response, Response};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Why [`OffloadClient::wait_job`] gave up.
+#[derive(Debug)]
+pub enum WaitError {
+    /// The job never reached a terminal state within the deadline: the
+    /// caller can keep waiting (the job is alive) or cancel it.
+    Timeout {
+        id: u64,
+        waited: Duration,
+        /// The last job record seen (JSON text), for diagnostics.
+        last: String,
+    },
+    /// The server no longer has the job (evicted after the retention
+    /// TTL/cap, or never existed): waiting longer cannot help.
+    Gone { id: u64, status: u16, body: String },
+    /// Transport failure or a malformed response survived the
+    /// in-deadline retries.
+    Protocol(String),
+}
+
+impl fmt::Display for WaitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WaitError::Timeout { id, waited, last } => write!(
+                f,
+                "job {id} did not reach a terminal state within {waited:?} (last record: {last})"
+            ),
+            WaitError::Gone { id, status, body } => {
+                write!(f, "job {id} is gone: HTTP {status}: {body}")
+            }
+            WaitError::Protocol(msg) => write!(f, "job polling failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
 
 /// Blocking one-request-per-connection client.
 #[derive(Debug, Clone, Copy)]
@@ -20,21 +72,39 @@ impl OffloadClient {
         OffloadClient { addr }
     }
 
-    fn send(&self, method: &str, path: &str, body: &str) -> Result<(u16, Vec<u8>)> {
+    /// One request with extra headers (e.g. `x-client-id` for quota
+    /// attribution); returns status, response headers (names
+    /// lowercased) and body.
+    pub fn send_full(
+        &self,
+        method: &str,
+        path: &str,
+        body: &str,
+        extra_headers: &[(&str, &str)],
+    ) -> Result<(u16, BTreeMap<String, String>, Vec<u8>)> {
         let mut stream = TcpStream::connect_timeout(&self.addr, Duration::from_secs(5))?;
         stream.set_read_timeout(Some(Duration::from_secs(30)))?;
         // Reuse the response writer for the request by hand-rolling the
         // request head (it has the same framing).
         use std::io::Write;
-        let head = format!(
-            "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
             self.addr,
             body.len()
         );
+        for (k, v) in extra_headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("connection: close\r\n\r\n");
         stream.write_all(head.as_bytes())?;
         stream.write_all(body.as_bytes())?;
         stream.flush()?;
-        read_response(&mut stream)
+        read_response_full(&mut stream)
+    }
+
+    fn send(&self, method: &str, path: &str, body: &str) -> Result<(u16, Vec<u8>)> {
+        self.send_full(method, path, body, &[])
+            .map(|(status, _headers, body)| (status, body))
     }
 
     pub fn get(&self, path: &str) -> Result<(u16, Vec<u8>)> {
@@ -45,8 +115,61 @@ impl OffloadClient {
         self.send("POST", path, body)
     }
 
+    /// `POST` with extra request headers (`x-client-id` etc.).
+    pub fn post_with_headers(
+        &self,
+        path: &str,
+        body: &str,
+        headers: &[(&str, &str)],
+    ) -> Result<(u16, Vec<u8>)> {
+        self.send_full("POST", path, body, headers)
+            .map(|(status, _headers, body)| (status, body))
+    }
+
     pub fn delete(&self, path: &str) -> Result<(u16, Vec<u8>)> {
         self.send("DELETE", path, "")
+    }
+
+    /// `GET` with bounded retries for *transient* trouble: transport
+    /// errors and 503 (load shedding) are retried with capped jittered
+    /// backoff — sleeping the server's `Retry-After` hint when one is
+    /// sent — until `max_elapsed` is spent, at which point the last
+    /// answer (or transport error) is returned as-is. Any non-503
+    /// status is an answer, not congestion, and returns immediately.
+    pub fn get_with_retry(&self, path: &str, max_elapsed: Duration) -> Result<(u16, Vec<u8>)> {
+        let deadline = Instant::now() + max_elapsed;
+        // Deterministic jitter: seeded by the path so concurrent
+        // retriers of different resources de-synchronize, yet a given
+        // call site behaves identically run-to-run.
+        let mut rng = Rng::new(0x9e37_79b9_7f4a_7c15 ^ path.len() as u64);
+        let mut base = Duration::from_millis(2);
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.send_full("GET", path, "", &[]) {
+                Ok((status, headers, body)) => {
+                    if status != 503 || remaining.is_zero() {
+                        return Ok((status, body));
+                    }
+                    // The server's hint wins over our backoff, but never
+                    // sleeps past the caller's deadline.
+                    let hinted = headers
+                        .get("retry-after")
+                        .and_then(|v| v.trim().parse::<u64>().ok())
+                        .map(Duration::from_secs);
+                    let pause = hinted
+                        .unwrap_or_else(|| base.mul_f64(1.0 + rng.f64()))
+                        .min(remaining);
+                    std::thread::sleep(pause);
+                }
+                Err(e) => {
+                    if remaining.is_zero() {
+                        return Err(anyhow!("GET {path} failed after {max_elapsed:?}: {e:#}"));
+                    }
+                    std::thread::sleep(base.mul_f64(1.0 + rng.f64()).min(remaining));
+                }
+            }
+            base = (base * 2).min(Duration::from_millis(250));
+        }
     }
 
     /// Parse a `(status, body)` pair, demanding `expect` (other statuses
@@ -87,23 +210,60 @@ impl OffloadClient {
 
     /// Poll `GET /v1/jobs/{id}` until the job reaches a terminal state
     /// (`done`/`failed`/`cancelled`), with exponential backoff from
-    /// 500 µs to 50 ms between polls. Returns the terminal record.
-    pub fn wait_job(&self, id: u64, timeout: Duration) -> Result<Json> {
+    /// 500 µs to a 50 ms cap between polls, jittered deterministically
+    /// by the job id. The whole wait is bounded by `timeout` — a typed
+    /// [`WaitError::Timeout`] distinguishes "still running, gave up"
+    /// from [`WaitError::Gone`] (evicted/unknown id) and
+    /// [`WaitError::Protocol`]. Transient transport errors are retried
+    /// within the deadline (the server may be mid-restart; recovered
+    /// jobs answer again once it is back).
+    pub fn wait_job(&self, id: u64, timeout: Duration) -> Result<Json, WaitError> {
         let deadline = Instant::now() + timeout;
-        let mut pause = Duration::from_micros(500);
+        let mut rng = Rng::new(id ^ 0x9e37_79b9_7f4a_7c15);
+        let mut base = Duration::from_micros(500);
+        let cap = Duration::from_millis(50);
         loop {
-            let record = self.job_status(id)?;
-            match record.get("status").and_then(Json::as_str) {
-                Some("done") | Some("failed") | Some("cancelled") => return Ok(record),
-                Some(_) => {}
-                None => return Err(anyhow!("job record without a status: {record:?}")),
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.get(&format!("/v1/jobs/{id}")) {
+                Ok((status, body)) => {
+                    let text = String::from_utf8_lossy(&body).into_owned();
+                    if status != 200 {
+                        return Err(WaitError::Gone {
+                            id,
+                            status,
+                            body: text,
+                        });
+                    }
+                    let record = Json::parse(&text).map_err(|e| {
+                        WaitError::Protocol(format!("bad job record JSON: {e}: {text}"))
+                    })?;
+                    match record.get("status").and_then(Json::as_str) {
+                        Some("done") | Some("failed") | Some("cancelled") => return Ok(record),
+                        Some(_) => {}
+                        None => {
+                            return Err(WaitError::Protocol(format!(
+                                "job record without a status: {text}"
+                            )))
+                        }
+                    }
+                    if remaining.is_zero() {
+                        return Err(WaitError::Timeout {
+                            id,
+                            waited: timeout,
+                            last: text,
+                        });
+                    }
+                }
+                Err(e) => {
+                    if remaining.is_zero() {
+                        return Err(WaitError::Protocol(format!(
+                            "polling job {id} failed after {timeout:?}: {e:#}"
+                        )));
+                    }
+                }
             }
-            anyhow::ensure!(
-                Instant::now() < deadline,
-                "job {id} did not finish within {timeout:?} (last: {record:?})"
-            );
-            std::thread::sleep(pause);
-            pause = (pause * 2).min(Duration::from_millis(50));
+            std::thread::sleep(base.mul_f64(1.0 + rng.f64()).min(cap).min(remaining));
+            base = (base * 2).min(cap);
         }
     }
 }
@@ -113,4 +273,148 @@ impl OffloadClient {
 #[allow(unused)]
 fn _type_check(mut s: TcpStream, r: &Response) {
     let _ = write_response(&mut s, r);
+    let _ = read_response(&mut s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    fn http(status_line: &str, extra_headers: &str, body: &str) -> String {
+        format!(
+            "HTTP/1.1 {status_line}\r\ncontent-type: application/json\r\n{extra_headers}content-length: {}\r\nconnection: close\r\n\r\n{body}",
+            body.len()
+        )
+    }
+
+    /// Serve a fixed script of raw responses, one per connection, then
+    /// exit. The caller must make exactly `responses.len()` requests
+    /// (join panics otherwise — that *is* the assertion that the retry
+    /// logic made the expected number of attempts).
+    fn scripted_server(responses: Vec<String>) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            for resp in responses {
+                let (mut s, _) = listener.accept().unwrap();
+                let mut buf = [0u8; 4096];
+                let _ = s.read(&mut buf); // drain the request head
+                let _ = s.write_all(resp.as_bytes());
+            }
+        });
+        (addr, handle)
+    }
+
+    /// Serve one raw response to every connection until stopped (for
+    /// tests where the number of polls is timing-dependent).
+    fn looping_server(
+        resp: String,
+    ) -> (SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || loop {
+            let (mut s, _) = listener.accept().unwrap();
+            if stop2.load(Ordering::Relaxed) {
+                return;
+            }
+            let mut buf = [0u8; 4096];
+            let _ = s.read(&mut buf);
+            let _ = s.write_all(resp.as_bytes());
+        });
+        (addr, stop, handle)
+    }
+
+    fn unblock_and_join(
+        addr: SocketAddr,
+        stop: Arc<AtomicBool>,
+        handle: std::thread::JoinHandle<()>,
+    ) {
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr); // wake the accept loop
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn get_with_retry_honors_retry_after_then_succeeds() {
+        let (addr, h) = scripted_server(vec![
+            http("503 Service Unavailable", "retry-after: 0\r\n", "{\"error\":\"overloaded\"}"),
+            http("503 Service Unavailable", "retry-after: 0\r\n", "{\"error\":\"overloaded\"}"),
+            http("200 OK", "", "{\"ok\":true}"),
+        ]);
+        let client = OffloadClient::new(addr);
+        let (status, body) = client
+            .get_with_retry("/health", Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&body).contains("\"ok\""));
+        h.join().unwrap(); // exactly 3 requests were made
+    }
+
+    #[test]
+    fn get_with_retry_returns_final_503_when_deadline_spent() {
+        let (addr, stop, h) = looping_server(http(
+            "503 Service Unavailable",
+            "retry-after: 0\r\n",
+            "{\"error\":\"overloaded\"}",
+        ));
+        let client = OffloadClient::new(addr);
+        let (status, _body) = client
+            .get_with_retry("/health", Duration::from_millis(40))
+            .unwrap();
+        assert_eq!(status, 503, "deadline spent → last shedding answer surfaces");
+        unblock_and_join(addr, stop, h);
+    }
+
+    #[test]
+    fn get_with_retry_does_not_retry_other_statuses() {
+        let (addr, h) = scripted_server(vec![http("404 Not Found", "", "{\"error\":\"no\"}")]);
+        let client = OffloadClient::new(addr);
+        let (status, _body) = client
+            .get_with_retry("/nope", Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(status, 404, "a 404 is an answer, not congestion");
+        h.join().unwrap(); // exactly one request
+    }
+
+    #[test]
+    fn wait_job_times_out_with_typed_error() {
+        let (addr, stop, h) = looping_server(http(
+            "200 OK",
+            "",
+            "{\"id\":7,\"status\":\"running\"}",
+        ));
+        let client = OffloadClient::new(addr);
+        match client.wait_job(7, Duration::from_millis(40)) {
+            Err(WaitError::Timeout { id: 7, last, .. }) => {
+                assert!(last.contains("running"), "{last}");
+            }
+            other => panic!("expected WaitError::Timeout, got {other:?}"),
+        }
+        unblock_and_join(addr, stop, h);
+    }
+
+    #[test]
+    fn wait_job_maps_missing_job_to_gone() {
+        let (addr, h) = scripted_server(vec![http(
+            "404 Not Found",
+            "",
+            "{\"error\":\"no such job\"}",
+        )]);
+        let client = OffloadClient::new(addr);
+        match client.wait_job(99, Duration::from_secs(5)) {
+            Err(WaitError::Gone {
+                id: 99,
+                status: 404,
+                body,
+            }) => assert!(body.contains("no such job")),
+            other => panic!("expected WaitError::Gone, got {other:?}"),
+        }
+        h.join().unwrap();
+    }
 }

@@ -34,6 +34,10 @@ pub struct Response {
     pub reason: &'static str,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Emitted as a `retry-after: <seconds>` header — the load-shedding
+    /// (503) and quota/queue-full (429) answers carry the server's
+    /// back-off hint for well-behaved clients.
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
@@ -43,6 +47,7 @@ impl Response {
             reason: reason_for(status),
             content_type: "application/json",
             body: body.into_bytes(),
+            retry_after: None,
         }
     }
 
@@ -52,7 +57,14 @@ impl Response {
             reason: reason_for(status),
             content_type: "text/plain",
             body: body.as_bytes().to_vec(),
+            retry_after: None,
         }
+    }
+
+    /// Attach a `retry-after` hint (seconds).
+    pub fn with_retry_after(mut self, secs: u64) -> Response {
+        self.retry_after = Some(secs);
+        self
     }
 }
 
@@ -141,12 +153,17 @@ pub fn read_request(stream: &mut impl Read) -> Result<Request> {
 
 /// Write a response (connection: close).
 pub fn write_response(stream: &mut impl Write, resp: &Response) -> Result<()> {
+    let retry = match resp.retry_after {
+        Some(secs) => format!("retry-after: {secs}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n{}connection: close\r\n\r\n",
         resp.status,
         resp.reason,
         resp.content_type,
-        resp.body.len()
+        resp.body.len(),
+        retry
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
@@ -157,6 +174,15 @@ pub fn write_response(stream: &mut impl Write, resp: &Response) -> Result<()> {
 /// Parse a response (client side). Same `MAX_WIRE_BYTES` total bound as
 /// the request reader.
 pub fn read_response(stream: &mut impl Read) -> Result<(u16, Vec<u8>)> {
+    let (status, _headers, body) = read_response_full(stream)?;
+    Ok((status, body))
+}
+
+/// [`read_response`] plus the response headers (keys lowercased) — the
+/// client's retry logic reads `retry-after` from 503/429 answers.
+pub fn read_response_full(
+    stream: &mut impl Read,
+) -> Result<(u16, BTreeMap<String, String>, Vec<u8>)> {
     let mut reader = BufReader::new(stream.take(MAX_WIRE_BYTES));
     let mut status_line = String::new();
     reader.read_line(&mut status_line)?;
@@ -165,6 +191,7 @@ pub fn read_response(stream: &mut impl Read) -> Result<(u16, Vec<u8>)> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| anyhow!("bad status line '{status_line}'"))?;
+    let mut headers = BTreeMap::new();
     let mut len = 0usize;
     loop {
         let mut line = String::new();
@@ -177,17 +204,19 @@ pub fn read_response(stream: &mut impl Read) -> Result<(u16, Vec<u8>)> {
             break;
         }
         if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                let v = v.trim();
+            let key = k.trim().to_ascii_lowercase();
+            let v = v.trim();
+            if key == "content-length" {
                 len = v
                     .parse()
                     .map_err(|_| anyhow!("invalid Content-Length '{v}' in response"))?;
             }
+            headers.insert(key, v.to_string());
         }
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
-    Ok((status, body))
+    Ok((status, headers, body))
 }
 
 #[cfg(test)]
@@ -220,6 +249,22 @@ mod tests {
         let (status, body) = read_response(&mut Cursor::new(buf)).unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn retry_after_header_roundtrips() {
+        let resp = Response::json(503, "{\"error\":\"overloaded\"}".into()).with_retry_after(2);
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let (status, headers, body) = read_response_full(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(headers.get("retry-after").map(String::as_str), Some("2"));
+        assert!(!body.is_empty());
+        // Absent unless set.
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Response::json(200, "{}".into())).unwrap();
+        let (_, headers, _) = read_response_full(&mut Cursor::new(buf)).unwrap();
+        assert!(!headers.contains_key("retry-after"));
     }
 
     #[test]

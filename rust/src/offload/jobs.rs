@@ -22,6 +22,29 @@
 //! core checks the token per chunk, so a running job transitions to
 //! `cancelled` within one scoring chunk and frees its worker slot.
 //!
+//! **Panic isolation**: the worker wraps task execution in
+//! `catch_unwind`, so a panicking search lands as `failed` with the
+//! panic message and the worker slot is freed — one poisoned strategy
+//! run cannot eat a slot or take the pool down.
+//!
+//! **Durability**: with a [`Journal`] attached ([`JobManager::with_journal`]
+//! / [`JobManager::recover`]), every lifecycle transition is appended as
+//! one JSONL event (`submitted` carries the validated request body, so
+//! the job is re-runnable; `done` carries the full result). On restart
+//! [`JobManager::recover`] folds the log into per-job state: terminal
+//! jobs are restored for polling (their retention TTL restarts at
+//! recovery time and the usual cap applies), jobs that were `queued` or
+//! `running` at crash time are **re-enqueued** through a caller-supplied
+//! rebuild function — the run is deterministic given the same spec and
+//! seed, so a recovered job's result is bit-identical to an
+//! uninterrupted run. Recovery also compacts the journal (one
+//! `submitted` + optional terminal event per retained job).
+//!
+//! **Admission control**: beyond the queue bound, submissions are
+//! subject to a per-client quota ([`JobConfig::max_per_client`], HTTP
+//! 429) and a load-shedding high-water mark on queue depth
+//! ([`JobConfig::high_water`], HTTP 503 + `Retry-After`).
+//!
 //! Retention is bounded two ways so the process stays bounded no matter
 //! how many jobs a client submits: finished jobs are evicted after
 //! [`JobConfig::ttl`], and at most [`JobConfig::max_retained`] finished
@@ -30,6 +53,8 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -37,6 +62,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::offload::journal::Journal;
+use crate::util::failpoint;
 use crate::util::json::{jnum, jstr, Json};
 
 /// A job body: runs off the connection thread on a pool worker, given
@@ -45,10 +72,12 @@ use crate::util::json::{jnum, jstr, Json};
 /// endpoint would have answered with).
 pub type JobTask = Box<dyn FnOnce(Arc<AtomicBool>, Arc<AtomicUsize>) -> Result<Json> + Send>;
 
-/// Sizing and retention policy for a [`JobManager`].
+/// Sizing, retention and admission policy for a [`JobManager`].
 #[derive(Debug, Clone, Copy)]
 pub struct JobConfig {
-    /// Background worker threads (= jobs running concurrently).
+    /// Background worker threads (= jobs running concurrently). `0` is
+    /// a *paused* manager — jobs queue but never run — used by the
+    /// fault-injection tests to hold jobs in `queued` deterministically.
     pub workers: usize,
     /// How long a finished (done/failed/cancelled) job is retained for
     /// polling before eviction.
@@ -58,6 +87,15 @@ pub struct JobConfig {
     /// Cap on queued-but-unclaimed jobs; submissions beyond it are
     /// refused ([`SubmitError::QueueFull`] → HTTP 429).
     pub max_queued: usize,
+    /// Cap on *non-terminal* (queued + running) jobs per client id;
+    /// submissions beyond it are refused
+    /// ([`SubmitError::QuotaExceeded`] → HTTP 429). `0` disables.
+    pub max_per_client: usize,
+    /// Load-shedding high-water mark: once queue depth reaches this,
+    /// submissions are refused ([`SubmitError::Overloaded`] → HTTP 503
+    /// + `Retry-After`) *before* the hard `max_queued` bound. `0`
+    /// disables shedding.
+    pub high_water: usize,
 }
 
 impl Default for JobConfig {
@@ -67,6 +105,8 @@ impl Default for JobConfig {
             ttl: Duration::from_secs(600),
             max_retained: 64,
             max_queued: 32,
+            max_per_client: 8,
+            high_water: 24,
         }
     }
 }
@@ -82,7 +122,7 @@ pub enum JobStatus {
 }
 
 impl JobStatus {
-    /// Stable machine name (REST `status` field).
+    /// Stable machine name (REST `status` field and journal events).
     pub fn name(&self) -> &'static str {
         match self {
             JobStatus::Queued => "queued",
@@ -103,10 +143,20 @@ impl JobStatus {
 }
 
 /// Why a submission was refused.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
     /// The pending-job queue is at [`JobConfig::max_queued`].
     QueueFull { pending: usize, cap: usize },
+    /// The client already has [`JobConfig::max_per_client`] non-terminal
+    /// jobs (HTTP 429 — the *client's* backlog is the problem).
+    QuotaExceeded {
+        client: String,
+        active: usize,
+        cap: usize,
+    },
+    /// Queue depth crossed [`JobConfig::high_water`] (HTTP 503 +
+    /// `Retry-After` — the *server* is shedding load).
+    Overloaded { pending: usize, high_water: usize },
     /// The manager is shutting down.
     ShuttingDown,
 }
@@ -117,6 +167,23 @@ impl fmt::Display for SubmitError {
             SubmitError::QueueFull { pending, cap } => write!(
                 f,
                 "job queue full ({pending} pending, cap {cap}) — retry after a job finishes"
+            ),
+            SubmitError::QuotaExceeded {
+                client,
+                active,
+                cap,
+            } => write!(
+                f,
+                "client '{client}' has {active} unfinished jobs (quota {cap}) — wait for \
+                 or cancel one before submitting more"
+            ),
+            SubmitError::Overloaded {
+                pending,
+                high_water,
+            } => write!(
+                f,
+                "server overloaded ({pending} jobs pending, shedding above {high_water}) — \
+                 retry after the backlog drains"
             ),
             SubmitError::ShuttingDown => write!(f, "job manager is shutting down"),
         }
@@ -153,6 +220,8 @@ impl JobState {
 /// One submitted job: identity + progress/cancel handles + state.
 pub struct Job {
     id: u64,
+    /// Quota key: the `X-Client-Id` header, or a per-connection default.
+    client: String,
     /// Human-readable summary ("random lenet5 budget=64") for listings.
     label: String,
     /// Evaluation budget of the underlying run (progress denominator).
@@ -165,6 +234,11 @@ pub struct Job {
 impl Job {
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The submitting client's quota key.
+    pub fn client(&self) -> &str {
+        &self.client
     }
 
     pub fn status(&self) -> JobStatus {
@@ -190,6 +264,7 @@ impl Job {
         let st = self.state.lock().unwrap();
         let mut o = Json::obj();
         o.set("id", jnum(self.id as f64))
+            .set("client", jstr(&self.client))
             .set("label", jstr(&self.label))
             .set("status", jstr(st.status.name()))
             .set("budget", jnum(self.budget as f64))
@@ -224,18 +299,62 @@ struct Inner {
     cv: Condvar,
     stop: AtomicBool,
     next_id: AtomicU64,
+    /// Durable event log; `None` = volatile manager (pre-journal
+    /// behavior, and the default).
+    journal: Option<Journal>,
+    /// Set by [`JobManager::crash`]: suppresses *all* journal writes so
+    /// the file is left exactly as a killed process would leave it.
+    crashed: AtomicBool,
+}
+
+impl Inner {
+    fn journal_active(&self) -> bool {
+        self.journal.is_some() && !self.crashed.load(Ordering::Relaxed)
+    }
+
+    /// Append a lifecycle event; the closure only runs when a journal
+    /// is attached and live, so event construction (result clones) is
+    /// free for volatile managers.
+    fn journal_event(&self, build: impl FnOnce() -> Json) {
+        if !self.journal_active() {
+            return;
+        }
+        if let Some(j) = &self.journal {
+            j.append(&build());
+        }
+    }
+}
+
+/// `{"event": kind, "id": id}` — the skeleton every journal event
+/// starts from.
+fn event(kind: &str, id: u64) -> Json {
+    let mut o = Json::obj();
+    o.set("event", jstr(kind)).set("id", jnum(id as f64));
+    o
 }
 
 /// Bounded background worker pool running submitted jobs; see the
-/// module docs for lifecycle, cancellation and retention semantics.
+/// module docs for lifecycle, durability, cancellation and retention
+/// semantics.
 pub struct JobManager {
     inner: Arc<Inner>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl JobManager {
-    /// Start `cfg.workers` background workers.
+    /// Start `cfg.workers` background workers (volatile: no journal).
     pub fn new(cfg: JobConfig) -> JobManager {
+        Self::build(cfg, None)
+    }
+
+    /// A manager journaling every lifecycle event to `path` (appending
+    /// to an existing file; use [`JobManager::recover`] to also replay
+    /// it).
+    pub fn with_journal(cfg: JobConfig, path: &Path) -> Result<JobManager> {
+        Ok(Self::build(cfg, Some(Journal::open(path)?)))
+    }
+
+    fn build(cfg: JobConfig, journal: Option<Journal>) -> JobManager {
         let inner = Arc::new(Inner {
             cfg,
             reg: Mutex::new(Registry {
@@ -245,8 +364,10 @@ impl JobManager {
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
+            journal,
+            crashed: AtomicBool::new(false),
         });
-        let workers = (0..cfg.workers.max(1))
+        let workers = (0..cfg.workers)
             .map(|i| {
                 let inner = inner.clone();
                 std::thread::Builder::new()
@@ -258,13 +379,199 @@ impl JobManager {
         JobManager { inner, workers }
     }
 
-    /// Enqueue a job; refused when the queue is at capacity or the
-    /// manager is shutting down. Returns the job handle (status
-    /// `queued`; a worker picks it up in submission order).
+    /// Rebuild a manager from the journal at `path` (see the module
+    /// docs for the replay state machine). `rebuild` turns a journaled
+    /// `submitted` spec back into a runnable task — jobs whose spec no
+    /// longer validates are restored as `failed` (with the rebuild
+    /// error) rather than silently dropped. The journal is compacted as
+    /// part of recovery and stays attached to the new manager.
+    pub fn recover(
+        cfg: JobConfig,
+        path: &Path,
+        rebuild: impl Fn(&Json) -> Result<JobTask>,
+    ) -> Result<JobManager> {
+        let events = Journal::replay(path)?;
+
+        struct Rec {
+            client: String,
+            label: String,
+            budget: usize,
+            spec: Json,
+            status: JobStatus,
+            result: Option<Json>,
+            error: Option<String>,
+        }
+        // Fold the log: last event per id wins (per-id order in the
+        // file matches transition order — appends happen on the thread
+        // performing the transition).
+        let mut recs: BTreeMap<u64, Rec> = BTreeMap::new();
+        for e in &events {
+            let Some(kind) = e.get("event").and_then(Json::as_str) else {
+                continue;
+            };
+            let Some(id) = e.get("id").and_then(Json::as_u64) else {
+                continue;
+            };
+            match kind {
+                "submitted" => {
+                    recs.insert(
+                        id,
+                        Rec {
+                            client: e.str_or("client", "recovered").to_string(),
+                            label: e.str_or("label", "recovered job").to_string(),
+                            budget: e.usize_or("budget", 0),
+                            spec: e.get("spec").cloned().unwrap_or(Json::Null),
+                            status: JobStatus::Queued,
+                            result: None,
+                            error: None,
+                        },
+                    );
+                }
+                "running" => {
+                    if let Some(r) = recs.get_mut(&id) {
+                        r.status = JobStatus::Running;
+                    }
+                }
+                "done" => {
+                    if let Some(r) = recs.get_mut(&id) {
+                        r.status = JobStatus::Done;
+                        r.result = e.get("result").cloned();
+                    }
+                }
+                "failed" => {
+                    if let Some(r) = recs.get_mut(&id) {
+                        r.status = JobStatus::Failed;
+                        r.error = Some(e.str_or("error", "failed").to_string());
+                    }
+                }
+                "cancelled" => {
+                    if let Some(r) = recs.get_mut(&id) {
+                        r.status = JobStatus::Cancelled;
+                    }
+                }
+                // Unknown event kinds: skip (journal written by a newer
+                // build) — replaying what we understand beats refusing
+                // to start.
+                _ => {}
+            }
+        }
+
+        // Compact before reopening for append: one `submitted` (+ one
+        // terminal) event per job, so the file is proportional to the
+        // retained registry instead of growing across restarts.
+        // Jobs about to be re-enqueued stay bare `submitted` — their
+        // re-run journals `running`/terminal events afresh.
+        let mut compact: Vec<Json> = Vec::new();
+        for (&id, r) in &recs {
+            let mut sub = event("submitted", id);
+            sub.set("client", jstr(&r.client))
+                .set("label", jstr(&r.label))
+                .set("budget", jnum(r.budget as f64))
+                .set("spec", r.spec.clone());
+            compact.push(sub);
+            match r.status {
+                JobStatus::Done => {
+                    let mut e = event("done", id);
+                    e.set("result", r.result.clone().unwrap_or(Json::Null));
+                    compact.push(e);
+                }
+                JobStatus::Failed => {
+                    let mut e = event("failed", id);
+                    e.set("error", jstr(r.error.as_deref().unwrap_or("failed")));
+                    compact.push(e);
+                }
+                JobStatus::Cancelled => compact.push(event("cancelled", id)),
+                JobStatus::Queued | JobStatus::Running => {}
+            }
+        }
+        Journal::rewrite(path, &compact)?;
+
+        let mgr = Self::build(cfg, Some(Journal::open(path)?));
+        let mut rebuild_failures: Vec<(u64, String)> = Vec::new();
+        {
+            let mut reg = mgr.inner.reg.lock().unwrap();
+            let mut max_id = 0u64;
+            for (id, r) in recs {
+                max_id = max_id.max(id);
+                // A restored done job reports its final evaluation
+                // count (search results carry it in telemetry).
+                let evals = r
+                    .result
+                    .as_ref()
+                    .and_then(|res| res.path(&["telemetry", "evaluations"]))
+                    .and_then(Json::as_f64)
+                    .map(|f| f as usize)
+                    .unwrap_or(0);
+                let (status, task, result, error) = match r.status {
+                    JobStatus::Done => (JobStatus::Done, None, r.result, None),
+                    JobStatus::Failed => (JobStatus::Failed, None, None, r.error),
+                    JobStatus::Cancelled => (JobStatus::Cancelled, None, None, None),
+                    // Queued or running at crash time: re-enqueue. The
+                    // re-run is deterministic (same spec, same seed), so
+                    // re-executing a job that in fact completed just
+                    // after its last journal write is safe — it
+                    // reproduces the identical result.
+                    JobStatus::Queued | JobStatus::Running => match rebuild(&r.spec) {
+                        Ok(task) => (JobStatus::Queued, Some(task), None, None),
+                        Err(e) => {
+                            let msg = format!("not recoverable after restart: {e:#}");
+                            rebuild_failures.push((id, msg.clone()));
+                            (JobStatus::Failed, None, None, Some(msg))
+                        }
+                    },
+                };
+                let queued = status == JobStatus::Queued;
+                // Terminal jobs get `finished = now`: the retention TTL
+                // restarts at recovery (wall-clock finish times are not
+                // journaled), and the count cap still applies via
+                // `evict_locked` on the next access.
+                let finished = if queued { None } else { Some(Instant::now()) };
+                let job = Arc::new(Job {
+                    id,
+                    client: r.client,
+                    label: r.label,
+                    budget: r.budget,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    progress: Arc::new(AtomicUsize::new(evals)),
+                    state: Mutex::new(JobState {
+                        status,
+                        task,
+                        result,
+                        error,
+                        finished,
+                    }),
+                });
+                reg.jobs.insert(id, job);
+                if queued {
+                    reg.queue.push_back(id);
+                }
+            }
+            mgr.inner.next_id.store(max_id + 1, Ordering::Relaxed);
+        }
+        for (id, msg) in rebuild_failures {
+            mgr.inner.journal_event(|| {
+                let mut e = event("failed", id);
+                e.set("error", jstr(&msg));
+                e
+            });
+        }
+        mgr.inner.cv.notify_all();
+        Ok(mgr)
+    }
+
+    /// Enqueue a job; refused when the client's quota is exhausted, the
+    /// queue is past the load-shedding high-water mark or at capacity,
+    /// or the manager is shutting down. Returns the job handle (status
+    /// `queued`; a worker picks it up in submission order). `client` is
+    /// the quota key; `spec` is the validated request body journaled
+    /// with the `submitted` event (what `recover` rebuilds the task
+    /// from — pass `Json::Null` for volatile managers).
     pub fn submit(
         &self,
+        client: &str,
         label: String,
         budget: usize,
+        spec: Json,
         task: JobTask,
     ) -> Result<Arc<Job>, SubmitError> {
         let mut reg = self.inner.reg.lock().unwrap();
@@ -276,16 +583,41 @@ impl JobManager {
         if self.inner.stop.load(Ordering::Relaxed) {
             return Err(SubmitError::ShuttingDown);
         }
-        Self::evict_locked(&self.inner.cfg, &mut reg);
-        if reg.queue.len() >= self.inner.cfg.max_queued {
+        let cfg = &self.inner.cfg;
+        Self::evict_locked(cfg, &mut reg);
+        // Admission order: per-client quota (the greedy client's own
+        // backlog, 429) → load shedding (global pressure, 503) → hard
+        // queue bound (429).
+        if cfg.max_per_client > 0 {
+            let active = reg
+                .jobs
+                .values()
+                .filter(|j| j.client == client && !j.state.lock().unwrap().status.is_terminal())
+                .count();
+            if active >= cfg.max_per_client {
+                return Err(SubmitError::QuotaExceeded {
+                    client: client.to_string(),
+                    active,
+                    cap: cfg.max_per_client,
+                });
+            }
+        }
+        if cfg.high_water > 0 && reg.queue.len() >= cfg.high_water {
+            return Err(SubmitError::Overloaded {
+                pending: reg.queue.len(),
+                high_water: cfg.high_water,
+            });
+        }
+        if reg.queue.len() >= cfg.max_queued {
             return Err(SubmitError::QueueFull {
                 pending: reg.queue.len(),
-                cap: self.inner.cfg.max_queued,
+                cap: cfg.max_queued,
             });
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Arc::new(Job {
             id,
+            client: client.to_string(),
             label,
             budget,
             cancel: Arc::new(AtomicBool::new(false)),
@@ -301,6 +633,14 @@ impl JobManager {
         reg.jobs.insert(id, job.clone());
         reg.queue.push_back(id);
         drop(reg);
+        self.inner.journal_event(|| {
+            let mut e = event("submitted", id);
+            e.set("client", jstr(&job.client))
+                .set("label", jstr(&job.label))
+                .set("budget", jnum(job.budget as f64))
+                .set("spec", spec);
+            e
+        });
         self.inner.cv.notify_one();
         Ok(job)
     }
@@ -338,6 +678,7 @@ impl JobManager {
             job
         };
         let mut st = job.state.lock().unwrap();
+        let mut was_queued = false;
         // Terminal jobs are left untouched (idempotent no-op): setting
         // the token on a done/failed record would advertise
         // `cancel_requested: true` on a job that can never transition.
@@ -349,15 +690,77 @@ impl JobManager {
             job.cancel.store(true, Ordering::Relaxed);
             if st.status == JobStatus::Queued {
                 st.cancel_queued();
+                was_queued = true;
             }
         }
         drop(st);
+        if was_queued {
+            // A running job's terminal event is journaled by its worker;
+            // a queued one reached terminal state right here.
+            self.inner.journal_event(|| event("cancelled", id));
+        }
         Some(job)
     }
 
-    /// Queued-but-unclaimed job count (introspection/tests).
+    /// Queued-but-unclaimed job count (introspection/health).
     pub fn pending(&self) -> usize {
         self.inner.reg.lock().unwrap().queue.len()
+    }
+
+    /// Worker threads configured at construction.
+    pub fn workers_configured(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Worker threads still alive. With panic isolation in place this
+    /// equals [`JobManager::workers_configured`]; a shortfall in
+    /// `GET /health` means a worker died outside the isolated region —
+    /// worth an alert, and the health report makes it visible.
+    pub fn workers_alive(&self) -> usize {
+        self.workers.iter().filter(|w| !w.is_finished()).count()
+    }
+
+    /// The manager's policy (health reporting: queue cap, high-water).
+    pub fn config(&self) -> &JobConfig {
+        &self.inner.cfg
+    }
+
+    /// Events appended to the journal since open (`None` = volatile).
+    pub fn journal_events(&self) -> Option<u64> {
+        self.inner.journal.as_ref().map(Journal::events)
+    }
+
+    /// Events *dropped* by failed journal appends — the `/health`
+    /// "journal lag" metric (`None` = volatile manager).
+    pub fn journal_lag(&self) -> Option<u64> {
+        self.inner.journal.as_ref().map(Journal::lag)
+    }
+
+    /// Simulate a hard process death (fault-injection/tests): journal
+    /// writes stop *immediately* — a killed process appends nothing
+    /// more — new submissions are refused, and in-flight jobs are
+    /// cancelled so the worker threads wind down (the test process
+    /// lives on; a real crash would simply cease). [`JobManager::recover`]
+    /// on the journal path then sees exactly the file a real crash
+    /// would have left.
+    pub fn crash(&self) {
+        self.inner.crashed.store(true, Ordering::Relaxed);
+        self.inner.stop.store(true, Ordering::Relaxed);
+        {
+            let mut reg = self.inner.reg.lock().unwrap();
+            reg.queue.clear();
+            for job in reg.jobs.values() {
+                let mut st = job.state.lock().unwrap();
+                if st.status.is_terminal() {
+                    continue;
+                }
+                job.cancel.store(true, Ordering::Relaxed);
+                if st.status == JobStatus::Queued {
+                    st.cancel_queued();
+                }
+            }
+        }
+        self.inner.cv.notify_all();
     }
 
     /// Evict finished jobs past the TTL, then oldest-finished beyond
@@ -395,8 +798,11 @@ impl Drop for JobManager {
     /// via their token; still-queued jobs are moved to `cancelled`
     /// directly (workers exit without draining the queue, so nothing
     /// else would ever give them a terminal state a poller can see).
+    /// The queued-job cancellations are journaled — an *orderly*
+    /// shutdown leaves terminal records, unlike [`JobManager::crash`].
     fn drop(&mut self) {
         self.inner.stop.store(true, Ordering::Relaxed);
+        let mut swept: Vec<u64> = Vec::new();
         {
             let mut reg = self.inner.reg.lock().unwrap();
             reg.queue.clear();
@@ -408,8 +814,12 @@ impl Drop for JobManager {
                 job.cancel.store(true, Ordering::Relaxed);
                 if st.status == JobStatus::Queued {
                     st.cancel_queued();
+                    swept.push(job.id);
                 }
             }
+        }
+        for id in swept {
+            self.inner.journal_event(|| event("cancelled", id));
         }
         self.inner.cv.notify_all();
         for w in self.workers.drain(..) {
@@ -418,10 +828,11 @@ impl Drop for JobManager {
     }
 }
 
-/// One background worker: claim the oldest queued job, run it, record
-/// the outcome, repeat. An `Err` from a task whose cancel token is set
-/// is a cancellation (the cooperative `DseError::Cancelled` path), not
-/// a failure.
+/// One background worker: claim the oldest queued job, run it
+/// (panic-isolated), record and journal the outcome, repeat. An `Err`
+/// from a task whose cancel token is set is a cancellation (the
+/// cooperative `DseError::Cancelled` path), not a failure; a panic is a
+/// failure carrying the panic message.
 fn worker_loop(inner: &Inner) {
     loop {
         let job = {
@@ -442,32 +853,77 @@ fn worker_loop(inner: &Inner) {
         let task = {
             let mut st = job.state.lock().unwrap();
             if st.status != JobStatus::Queued {
-                continue; // cancelled while queued
+                continue; // cancelled while queued (cancel() journaled it)
             }
             if job.cancel.load(Ordering::Relaxed) {
                 st.cancel_queued();
+                drop(st);
+                inner.journal_event(|| event("cancelled", job.id));
                 continue;
             }
             st.status = JobStatus::Running;
             st.task.take().expect("queued job carries its task")
         };
-        let res = task(job.cancel.clone(), job.progress.clone());
+        inner.journal_event(|| event("running", job.id));
+        // Panic isolation: a panicking strategy must cost its own job,
+        // not the worker slot. AssertUnwindSafe is justified because a
+        // panicked task's partial state dies with its closure — the
+        // state it shares with the rest of the process (job registry,
+        // descriptor cache, predictor channels) is lock/atomic-guarded
+        // and never mutated mid-panic by this frame (the task runs with
+        // no manager locks held).
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            task(job.cancel.clone(), job.progress.clone())
+        }));
         let mut st = job.state.lock().unwrap();
         st.finished = Some(Instant::now());
-        match res {
+        let kind = match res {
             // A run that completed before noticing a late cancel request
             // still reports its (valid) result.
-            Ok(result) => {
+            Ok(Ok(result)) => {
                 st.status = JobStatus::Done;
                 st.result = Some(result);
+                "done"
             }
-            Err(_) if job.cancel.load(Ordering::Relaxed) => {
+            Ok(Err(_)) if job.cancel.load(Ordering::Relaxed) => {
                 st.status = JobStatus::Cancelled;
+                "cancelled"
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 st.status = JobStatus::Failed;
                 st.error = Some(format!("{e:#}"));
+                "failed"
             }
+            Err(payload) => {
+                st.status = JobStatus::Failed;
+                st.error = Some(format!(
+                    "search panicked: {}",
+                    failpoint::panic_message(&*payload)
+                ));
+                "failed"
+            }
+        };
+        // Snapshot the terminal event under the state lock (so the
+        // journaled result/error matches what pollers see), append it
+        // after.
+        let terminal = if inner.journal_active() {
+            let mut e = event(kind, job.id);
+            match kind {
+                "done" => {
+                    e.set("result", st.result.clone().unwrap_or(Json::Null));
+                }
+                "failed" => {
+                    e.set("error", jstr(st.error.as_deref().unwrap_or("failed")));
+                }
+                _ => {}
+            }
+            Some(e)
+        } else {
+            None
+        };
+        drop(st);
+        if let Some(e) = terminal {
+            inner.journal_event(|| e);
         }
     }
 }
@@ -475,7 +931,8 @@ fn worker_loop(inner: &Inner) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use anyhow::anyhow;
+    use anyhow::{anyhow, ensure};
+    use std::path::PathBuf;
 
     fn tiny_cfg() -> JobConfig {
         JobConfig {
@@ -483,7 +940,18 @@ mod tests {
             ttl: Duration::from_secs(600),
             max_retained: 64,
             max_queued: 4,
+            max_per_client: 8,
+            high_water: 0, // shedding off: the queue-bound tests drive max_queued exactly
         }
+    }
+
+    fn tmp_journal(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "hypa-jobs-{tag}-{}-{n}.jsonl",
+            std::process::id()
+        ))
     }
 
     /// Spin-wait for a terminal status (jobs here run in microseconds).
@@ -518,13 +986,20 @@ mod tests {
         })
     }
 
+    /// `submit` with the boilerplate most tests don't care about.
+    fn submit(mgr: &JobManager, label: &str, task: JobTask) -> Result<Arc<Job>, SubmitError> {
+        mgr.submit("test", label.to_string(), 1, Json::Null, task)
+    }
+
     #[test]
     fn job_runs_to_done_with_result() {
         let mgr = JobManager::new(tiny_cfg());
         let job = mgr
             .submit(
+                "test",
                 "quick".into(),
                 8,
+                Json::Null,
                 Box::new(|_c, progress| {
                     progress.store(8, Ordering::Relaxed);
                     let mut o = Json::obj();
@@ -537,6 +1012,7 @@ mod tests {
         assert_eq!(job.evaluations(), 8);
         let rec = job.to_json(true);
         assert_eq!(rec.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(rec.get("client").unwrap().as_str(), Some("test"));
         assert_eq!(rec.path(&["result", "answer"]).unwrap().as_f64(), Some(42.0));
         // Listings omit the result payload.
         assert!(job.to_json(false).get("result").is_none());
@@ -550,21 +1026,39 @@ mod tests {
     #[test]
     fn failed_job_carries_error() {
         let mgr = JobManager::new(tiny_cfg());
-        let job = mgr
-            .submit("boom".into(), 1, Box::new(|_c, _p| Err(anyhow!("kaput"))))
-            .unwrap();
+        let job = submit(&mgr, "boom", Box::new(|_c, _p| Err(anyhow!("kaput")))).unwrap();
         assert_eq!(wait_terminal(&job), JobStatus::Failed);
         let rec = job.to_json(true);
         assert!(rec.get("error").unwrap().as_str().unwrap().contains("kaput"));
     }
 
     #[test]
+    fn panicking_task_lands_failed_and_pool_self_heals() {
+        let mgr = JobManager::new(tiny_cfg()); // 1 worker
+        let job = submit(
+            &mgr,
+            "panics",
+            Box::new(|_c, _p| panic!("strategy exploded mid-run")),
+        )
+        .unwrap();
+        assert_eq!(wait_terminal(&job), JobStatus::Failed);
+        let rec = job.to_json(true);
+        let err = rec.get("error").unwrap().as_str().unwrap();
+        assert!(
+            err.contains("panicked") && err.contains("strategy exploded mid-run"),
+            "{err}"
+        );
+        // The lone worker survived the panic: it runs the next job.
+        assert_eq!(mgr.workers_alive(), 1);
+        let next = submit(&mgr, "after", Box::new(|_c, _p| Ok(Json::obj()))).unwrap();
+        assert_eq!(wait_terminal(&next), JobStatus::Done);
+    }
+
+    #[test]
     fn running_job_cancels_cooperatively_and_frees_the_worker() {
         let mgr = JobManager::new(tiny_cfg());
         let release = Arc::new(AtomicBool::new(false));
-        let job = mgr
-            .submit("spinner".into(), 1000, spinning_task(release))
-            .unwrap();
+        let job = submit(&mgr, "spinner", spinning_task(release)).unwrap();
         // Wait until it is actually running (progress moves).
         let deadline = Instant::now() + Duration::from_secs(10);
         while job.evaluations() == 0 {
@@ -576,9 +1070,7 @@ mod tests {
         assert!(job.cancel_requested());
         assert_eq!(wait_terminal(&job), JobStatus::Cancelled);
         // The worker slot is free again: a follow-up job completes.
-        let next = mgr
-            .submit("after".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
-            .unwrap();
+        let next = submit(&mgr, "after", Box::new(|_c, _p| Ok(Json::obj()))).unwrap();
         assert_eq!(wait_terminal(&next), JobStatus::Done);
     }
 
@@ -586,19 +1078,16 @@ mod tests {
     fn queued_job_cancels_before_running() {
         let mgr = JobManager::new(tiny_cfg()); // 1 worker
         let release = Arc::new(AtomicBool::new(false));
-        let blocker = mgr
-            .submit("blocker".into(), 1, spinning_task(release.clone()))
-            .unwrap();
-        let queued = mgr
-            .submit(
-                "never-runs".into(),
-                1,
-                Box::new(|_c, p| {
-                    p.store(99, Ordering::Relaxed);
-                    Ok(Json::obj())
-                }),
-            )
-            .unwrap();
+        let blocker = submit(&mgr, "blocker", spinning_task(release.clone())).unwrap();
+        let queued = submit(
+            &mgr,
+            "never-runs",
+            Box::new(|_c, p| {
+                p.store(99, Ordering::Relaxed);
+                Ok(Json::obj())
+            }),
+        )
+        .unwrap();
         assert_eq!(queued.status(), JobStatus::Queued);
         mgr.cancel(queued.id()).unwrap();
         assert_eq!(queued.status(), JobStatus::Cancelled);
@@ -614,9 +1103,7 @@ mod tests {
     fn submit_refused_when_queue_full() {
         let mgr = JobManager::new(tiny_cfg()); // 1 worker, 4 queued max
         let release = Arc::new(AtomicBool::new(false));
-        let _blocker = mgr
-            .submit("blocker".into(), 1, spinning_task(release.clone()))
-            .unwrap();
+        let _blocker = submit(&mgr, "blocker", spinning_task(release.clone())).unwrap();
         // Give the worker a moment to claim the blocker off the queue.
         let deadline = Instant::now() + Duration::from_secs(10);
         while mgr.pending() > 0 {
@@ -624,10 +1111,24 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         for i in 0..4 {
-            mgr.submit(format!("q{i}"), 1, Box::new(|_c, _p| Ok(Json::obj())))
-                .unwrap();
+            // Distinct clients: this test drives the *queue* bound, not
+            // the per-client quota.
+            mgr.submit(
+                &format!("c{i}"),
+                format!("q{i}"),
+                1,
+                Json::Null,
+                Box::new(|_c, _p| Ok(Json::obj())),
+            )
+            .unwrap();
         }
-        let refused = mgr.submit("overflow".into(), 1, Box::new(|_c, _p| Ok(Json::obj())));
+        let refused = mgr.submit(
+            "c-overflow",
+            "overflow".into(),
+            1,
+            Json::Null,
+            Box::new(|_c, _p| Ok(Json::obj())),
+        );
         let queued_id = match refused {
             Err(SubmitError::QueueFull { pending: 4, cap: 4 }) => {
                 // Regression: cancelling a queued job must free its queue
@@ -640,7 +1141,7 @@ mod tests {
                     .expect("a queued job to cancel");
                 mgr.cancel(victim.id()).unwrap();
                 assert_eq!(mgr.pending(), 3);
-                mgr.submit("refill".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
+                submit(&mgr, "refill", Box::new(|_c, _p| Ok(Json::obj())))
                     .expect("freed slot accepts a new job")
                     .id()
             }
@@ -652,14 +1153,65 @@ mod tests {
     }
 
     #[test]
+    fn per_client_quota_counts_only_unfinished_jobs() {
+        // Paused manager (0 workers): everything stays queued, so the
+        // quota arithmetic is exact, no racing worker.
+        let mgr = JobManager::new(JobConfig {
+            workers: 0,
+            max_per_client: 2,
+            max_queued: 32,
+            ..tiny_cfg()
+        });
+        let a1 = mgr
+            .submit("alice", "a1".into(), 1, Json::Null, Box::new(|_c, _p| Ok(Json::obj())))
+            .unwrap();
+        mgr.submit("alice", "a2".into(), 1, Json::Null, Box::new(|_c, _p| Ok(Json::obj())))
+            .unwrap();
+        match mgr.submit("alice", "a3".into(), 1, Json::Null, Box::new(|_c, _p| Ok(Json::obj()))) {
+            Err(SubmitError::QuotaExceeded {
+                client,
+                active: 2,
+                cap: 2,
+            }) => assert_eq!(client, "alice"),
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        // Another client is unaffected.
+        mgr.submit("bob", "b1".into(), 1, Json::Null, Box::new(|_c, _p| Ok(Json::obj())))
+            .unwrap();
+        // Terminal jobs stop counting: cancel one, the quota frees up.
+        mgr.cancel(a1.id()).unwrap();
+        mgr.submit("alice", "a3".into(), 1, Json::Null, Box::new(|_c, _p| Ok(Json::obj())))
+            .expect("cancelled job no longer counts against the quota");
+    }
+
+    #[test]
+    fn high_water_sheds_before_queue_full() {
+        let mgr = JobManager::new(JobConfig {
+            workers: 0,
+            max_queued: 8,
+            high_water: 2,
+            max_per_client: 0,
+            ..tiny_cfg()
+        });
+        for i in 0..2 {
+            submit(&mgr, &format!("q{i}"), Box::new(|_c, _p| Ok(Json::obj()))).unwrap();
+        }
+        match submit(&mgr, "shed", Box::new(|_c, _p| Ok(Json::obj()))) {
+            Err(SubmitError::Overloaded {
+                pending: 2,
+                high_water: 2,
+            }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn ttl_evicts_finished_jobs() {
         let mgr = JobManager::new(JobConfig {
             ttl: Duration::from_millis(0),
             ..tiny_cfg()
         });
-        let job = mgr
-            .submit("ephemeral".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
-            .unwrap();
+        let job = submit(&mgr, "ephemeral", Box::new(|_c, _p| Ok(Json::obj()))).unwrap();
         assert_eq!(wait_terminal(&job), JobStatus::Done);
         // Any elapsed time beats a zero TTL; the next access evicts.
         std::thread::sleep(Duration::from_millis(2));
@@ -675,9 +1227,7 @@ mod tests {
         });
         let jobs: Vec<_> = (0..5)
             .map(|i| {
-                let j = mgr
-                    .submit(format!("j{i}"), 1, Box::new(|_c, _p| Ok(Json::obj())))
-                    .unwrap();
+                let j = submit(&mgr, &format!("j{i}"), Box::new(|_c, _p| Ok(Json::obj()))).unwrap();
                 assert_eq!(wait_terminal(&j), JobStatus::Done);
                 j
             })
@@ -697,22 +1247,204 @@ mod tests {
     fn shutdown_cancels_running_and_queued_jobs() {
         let mgr = JobManager::new(tiny_cfg()); // 1 worker
         let release = Arc::new(AtomicBool::new(false));
-        let running = mgr
-            .submit("spinner".into(), 1, spinning_task(release))
-            .unwrap();
+        let running = submit(&mgr, "spinner", spinning_task(release)).unwrap();
         let deadline = Instant::now() + Duration::from_secs(10);
         while running.evaluations() == 0 {
             assert!(Instant::now() < deadline);
             std::thread::sleep(Duration::from_millis(1));
         }
         // Queued behind the busy worker; never claimed before shutdown.
-        let queued = mgr
-            .submit("never-runs".into(), 1, Box::new(|_c, _p| Ok(Json::obj())))
-            .unwrap();
+        let queued = submit(&mgr, "never-runs", Box::new(|_c, _p| Ok(Json::obj()))).unwrap();
         drop(mgr); // must not hang: the token aborts the spinner
         assert_eq!(running.status(), JobStatus::Cancelled);
         // A queued job must land in a terminal state too, or a poller
         // holding its handle would wait forever.
         assert_eq!(queued.status(), JobStatus::Cancelled);
+    }
+
+    /// A rebuild function mapping a journaled spec `{"v": n}` to a task
+    /// that answers `{"rebuilt": n}` — enough to prove the spec rode
+    /// the journal and the rebuilt task ran.
+    fn rebuild_from_spec(spec: &Json) -> Result<JobTask> {
+        let v = spec
+            .get("v")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("spec without 'v'"))?;
+        ensure!(v >= 0.0, "negative spec rejected (tests the failed path)");
+        Ok(Box::new(move |_c, _p| {
+            let mut o = Json::obj();
+            o.set("rebuilt", jnum(v));
+            Ok(o)
+        }))
+    }
+
+    fn spec(v: f64) -> Json {
+        let mut o = Json::obj();
+        o.set("v", jnum(v));
+        o
+    }
+
+    #[test]
+    fn recover_requeues_unfinished_and_restores_finished() {
+        let path = tmp_journal("recover");
+        let release = Arc::new(AtomicBool::new(false));
+        {
+            let mgr = JobManager::with_journal(tiny_cfg(), &path).unwrap(); // 1 worker
+            let done = mgr
+                .submit(
+                    "alice",
+                    "finished before crash".into(),
+                    1,
+                    spec(1.0),
+                    Box::new(|_c, _p| {
+                        let mut o = Json::obj();
+                        o.set("original", Json::Bool(true));
+                        Ok(o)
+                    }),
+                )
+                .unwrap();
+            assert_eq!(wait_terminal(&done), JobStatus::Done);
+            // Occupy the worker, then queue one more behind it: at
+            // crash time job 2 is running, job 3 queued.
+            let running = mgr
+                .submit(
+                    "alice",
+                    "running at crash".into(),
+                    1,
+                    spec(2.0),
+                    spinning_task(release.clone()),
+                )
+                .unwrap();
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while running.evaluations() == 0 {
+                assert!(Instant::now() < deadline);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            mgr.submit(
+                "alice",
+                "queued at crash".into(),
+                1,
+                spec(3.0),
+                Box::new(|_c, _p| Ok(Json::obj())),
+            )
+            .unwrap();
+            mgr.crash();
+            // Post-crash writes are suppressed even as Drop runs.
+        }
+        // The journal shows 1 done; 2 running, 3 submitted — no
+        // terminal events for 2/3 despite the cancel sweep above.
+        let events = Journal::replay(&path).unwrap();
+        let terminal_ids: Vec<u64> = events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.get("event").and_then(Json::as_str),
+                    Some("done") | Some("failed") | Some("cancelled")
+                )
+            })
+            .filter_map(|e| e.get("id").and_then(Json::as_u64))
+            .collect();
+        assert_eq!(terminal_ids, vec![1], "{events:?}");
+
+        let mgr = JobManager::recover(tiny_cfg(), &path, rebuild_from_spec).unwrap();
+        // Finished job restored with its original result.
+        let done = mgr.get(1).expect("finished job restored");
+        assert_eq!(done.status(), JobStatus::Done);
+        assert_eq!(done.client(), "alice");
+        assert_eq!(
+            done.to_json(true).path(&["result", "original"]),
+            Some(&Json::Bool(true))
+        );
+        // Interrupted jobs re-ran through the rebuilt tasks.
+        for id in [2u64, 3] {
+            let job = mgr.get(id).expect("interrupted job re-enqueued");
+            assert_eq!(wait_terminal(&job), JobStatus::Done);
+            assert_eq!(
+                job.to_json(true).path(&["result", "rebuilt"]).unwrap().as_f64(),
+                Some(id as f64)
+            );
+        }
+        // Ids continue after the recovered ones.
+        let next = submit(&mgr, "fresh", Box::new(|_c, _p| Ok(Json::obj()))).unwrap();
+        assert_eq!(next.id(), 4);
+        drop(mgr);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recover_compacts_the_journal() {
+        let path = tmp_journal("compact");
+        {
+            let mgr = JobManager::with_journal(tiny_cfg(), &path).unwrap();
+            for i in 0..5 {
+                let j = mgr
+                    .submit(
+                        "test",
+                        format!("j{i}"),
+                        1,
+                        spec(i as f64),
+                        Box::new(|_c, _p| Ok(Json::obj())),
+                    )
+                    .unwrap();
+                assert_eq!(wait_terminal(&j), JobStatus::Done);
+            }
+            // 5 jobs × (submitted, running, done) = 15 events.
+            mgr.crash(); // keep the file as-is for the assertion below
+        }
+        assert_eq!(Journal::replay(&path).unwrap().len(), 15);
+        let mgr = JobManager::recover(tiny_cfg(), &path, rebuild_from_spec).unwrap();
+        assert_eq!(mgr.list().len(), 5);
+        drop(mgr);
+        // Compacted: submitted + done per job, nothing else.
+        assert_eq!(Journal::replay(&path).unwrap().len(), 10);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recover_marks_unrebuildable_jobs_failed() {
+        let path = tmp_journal("unrebuildable");
+        // Hand-write a journal whose queued job has a spec the rebuild
+        // function rejects (e.g. written by an older build whose
+        // request schema no longer validates).
+        let mut sub = event("submitted", 7);
+        sub.set("client", jstr("old"))
+            .set("label", jstr("stale"))
+            .set("budget", jnum(1.0))
+            .set("spec", spec(-1.0));
+        Journal::rewrite(&path, &[sub]).unwrap();
+        let mgr = JobManager::recover(tiny_cfg(), &path, rebuild_from_spec).unwrap();
+        let job = mgr.get(7).expect("unrebuildable job still visible");
+        assert_eq!(job.status(), JobStatus::Failed);
+        let err = job.to_json(true).get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("not recoverable"), "{err}");
+        drop(mgr);
+        // The failure was journaled too: a second recovery round-trips
+        // it as terminal instead of retrying forever.
+        let mgr = JobManager::recover(tiny_cfg(), &path, rebuild_from_spec).unwrap();
+        assert_eq!(mgr.get(7).unwrap().status(), JobStatus::Failed);
+        drop(mgr);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recover_tolerates_torn_final_line() {
+        let path = tmp_journal("torn");
+        let mut sub = event("submitted", 1);
+        sub.set("client", jstr("c"))
+            .set("label", jstr("survives"))
+            .set("budget", jnum(1.0))
+            .set("spec", spec(5.0));
+        Journal::rewrite(&path, &[sub]).unwrap();
+        // A crash mid-append of the next event: partial line at EOF.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"event\":\"runn").unwrap();
+        }
+        let mgr = JobManager::recover(tiny_cfg(), &path, rebuild_from_spec).unwrap();
+        let job = mgr.get(1).expect("job from the valid prefix recovered");
+        assert_eq!(wait_terminal(&job), JobStatus::Done);
+        drop(mgr);
+        let _ = std::fs::remove_file(&path);
     }
 }

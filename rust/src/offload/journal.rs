@@ -1,0 +1,314 @@
+//! Append-only JSONL journal backing the durable async job subsystem.
+//!
+//! Every job lifecycle transition (`submitted` with the validated
+//! request spec, `running`, `done` with the full result JSON, `failed`,
+//! `cancelled`) is appended as one JSON line; on startup
+//! [`JobManager::recover`](crate::offload::jobs::JobManager::recover)
+//! replays the file and reconstructs the registry. The format contract:
+//!
+//! * **One event per line**, serialized by [`crate::util::json`] —
+//!   self-describing `{"event": …, "id": …, …}` objects, unknown event
+//!   kinds are skipped on replay (forward compatibility).
+//! * **Torn tails are tolerated**: a crash mid-append leaves a final
+//!   partial line; replay keeps the longest valid prefix and drops the
+//!   tail. Corruption *before* the tail (a bad line with valid lines
+//!   after it) is not a torn write and fails loudly.
+//! * **Appends are best-effort**: a failed write (disk full, injected
+//!   via the `journal-append` failpoint) increments the journal *lag*
+//!   counter — exposed in `GET /health` — and the event is dropped;
+//!   serving continues. Durability degrades observably instead of
+//!   taking the job subsystem down.
+//!
+//! The journal itself knows nothing about jobs: it stores opaque
+//! [`Json`] events. The event schema, replay state machine and
+//! compaction-on-recovery live in [`crate::offload::jobs`].
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Append-only JSONL event sink (see module docs for the contract).
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+    /// Events appended successfully since open.
+    events: AtomicU64,
+    /// Events *dropped* by failed appends since open — the "journal
+    /// lag" health metric (0 on a healthy disk).
+    lag: AtomicU64,
+}
+
+impl Journal {
+    /// Open (creating if needed) the journal at `path` for appending.
+    pub fn open(path: &Path) -> Result<Journal> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| anyhow!("cannot open journal {}: {e}", path.display()))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+            events: AtomicU64::new(0),
+            lag: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Events appended successfully since open.
+    pub fn events(&self) -> u64 {
+        self.events.load(Ordering::Relaxed)
+    }
+
+    /// Events dropped by failed appends since open (health: journal lag).
+    pub fn lag(&self) -> u64 {
+        self.lag.load(Ordering::Relaxed)
+    }
+
+    /// Append one event (one line, flushed). Best-effort: on failure
+    /// the event is counted as lag and dropped — the caller keeps
+    /// serving from memory (see module docs).
+    pub fn append(&self, event: &Json) {
+        match self.try_append(event) {
+            Ok(()) => {
+                self.events.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                self.lag.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "journal {}: append failed ({e:#}) — event dropped, lag {}",
+                    self.path.display(),
+                    self.lag()
+                );
+            }
+        }
+    }
+
+    fn try_append(&self, event: &Json) -> Result<()> {
+        if cfg!(any(test, debug_assertions)) {
+            // Deterministic write-error injection; the context is the
+            // event kind so tests can fail e.g. only `done` appends.
+            crate::util::failpoint::eval_ctx(
+                "journal-append",
+                event.get("event").and_then(Json::as_str).unwrap_or(""),
+            )?;
+        }
+        let line = event.to_string();
+        let mut f = self.file.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Read every event from the journal at `path`, in file order. A
+    /// missing file is an empty journal. A final partial line (torn
+    /// crash-time append) is dropped with a warning; an unparseable
+    /// line *followed by valid lines* is real corruption and errors.
+    pub fn replay(path: &Path) -> Result<Vec<Json>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(anyhow!("cannot read journal {}: {e}", path.display())),
+        };
+        let lines: Vec<&str> = text.split('\n').collect();
+        let mut events = Vec::new();
+        for (i, line) in lines.iter().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match Json::parse(line) {
+                Ok(j) => events.push(j),
+                Err(e) => {
+                    let only_blank_after = lines[i + 1..].iter().all(|l| l.trim().is_empty());
+                    if only_blank_after {
+                        eprintln!(
+                            "journal {}: dropping torn final line {} ({e})",
+                            path.display(),
+                            i + 1
+                        );
+                        break;
+                    }
+                    return Err(anyhow!(
+                        "journal {} corrupt at line {} (not a torn tail — valid \
+                         events follow it): {e}",
+                        path.display(),
+                        i + 1
+                    ));
+                }
+            }
+        }
+        Ok(events)
+    }
+
+    /// Atomically replace the journal at `path` with exactly `events`
+    /// (compaction: recovery folds the event log into per-job state and
+    /// rewrites it, so the file stays proportional to retained jobs
+    /// instead of growing across restarts). Written to a sibling temp
+    /// file and renamed over, so a crash mid-rewrite leaves either the
+    /// old or the new journal — never a half-written one.
+    pub fn rewrite(path: &Path, events: &[Json]) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = File::create(&tmp)
+                .map_err(|e| anyhow!("cannot create {}: {e}", tmp.display()))?;
+            for ev in events {
+                f.write_all(ev.to_string().as_bytes())?;
+                f.write_all(b"\n")?;
+            }
+            f.flush()?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow!("cannot rename {} over {}: {e}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::failpoint::{self, Action};
+    use crate::util::json::{jnum, jstr};
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "hypa-journal-{tag}-{}-{n}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn ev(kind: &str, id: u64) -> Json {
+        let mut o = Json::obj();
+        o.set("event", jstr(kind)).set("id", jnum(id as f64));
+        o
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let path = tmp_path("roundtrip");
+        let j = Journal::open(&path).unwrap();
+        j.append(&ev("submitted", 1));
+        j.append(&ev("running", 1));
+        j.append(&ev("done", 1));
+        assert_eq!(j.events(), 3);
+        assert_eq!(j.lag(), 0);
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[2].get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(events[2].get("id").unwrap().as_u64(), Some(1));
+        // Re-opening appends, not truncates.
+        drop(j);
+        let j2 = Journal::open(&path).unwrap();
+        j2.append(&ev("cancelled", 2));
+        assert_eq!(Journal::replay(&path).unwrap().len(), 4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_journal() {
+        let path = tmp_path("missing");
+        assert!(Journal::replay(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped() {
+        let path = tmp_path("torn");
+        let j = Journal::open(&path).unwrap();
+        j.append(&ev("submitted", 1));
+        j.append(&ev("running", 1));
+        drop(j);
+        // Simulate a crash mid-append: a partial JSON line at the tail
+        // (with and without a trailing newline).
+        for tail in ["{\"event\":\"do", "{\"event\":\"do\n"] {
+            let mut text = std::fs::read_to_string(&path).unwrap();
+            text.push_str(tail);
+            std::fs::write(&path, &text).unwrap();
+            let events = Journal::replay(&path).unwrap();
+            assert_eq!(events.len(), 2, "torn tail must be dropped");
+            std::fs::write(
+                &path,
+                events
+                    .iter()
+                    .map(|e| e.to_string() + "\n")
+                    .collect::<String>(),
+            )
+            .unwrap();
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mid_file_corruption_fails_loudly() {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{\"event\":\"submitted\",\"id\":1}\ngarbage\n{\"event\":\"done\",\"id\":1}\n").unwrap();
+        let err = Journal::replay(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rewrite_compacts_atomically() {
+        let path = tmp_path("rewrite");
+        let j = Journal::open(&path).unwrap();
+        for i in 0..10 {
+            j.append(&ev("submitted", i));
+        }
+        drop(j);
+        Journal::rewrite(&path, &[ev("submitted", 9)]).unwrap();
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("id").unwrap().as_u64(), Some(9));
+        assert!(!path.with_extension("tmp").exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_append_counts_as_lag_and_serving_continues() {
+        let _s = failpoint::scenario();
+        let path = tmp_path("lag");
+        let j = Journal::open(&path).unwrap();
+        j.append(&ev("submitted", 1));
+        // Inject two write failures, then heal.
+        failpoint::arm_times("journal-append", Action::Error("disk full".into()), 2);
+        j.append(&ev("running", 1));
+        j.append(&ev("done", 1));
+        assert_eq!(j.lag(), 2);
+        j.append(&ev("cancelled", 2));
+        assert_eq!(j.events(), 2);
+        assert_eq!(j.lag(), 2);
+        // Only the events that reached the disk replay.
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1].get("event").unwrap().as_str(), Some("cancelled"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failpoint_can_target_one_event_kind() {
+        let _s = failpoint::scenario();
+        let path = tmp_path("filtered");
+        let j = Journal::open(&path).unwrap();
+        failpoint::arm_filtered("journal-append", Action::Error("lost".into()), "done");
+        j.append(&ev("submitted", 1));
+        j.append(&ev("done", 1));
+        j.append(&ev("submitted", 2));
+        assert_eq!((j.events(), j.lag()), (2, 1));
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert!(events.iter().all(|e| e.get("event").unwrap().as_str() == Some("submitted")));
+        let _ = std::fs::remove_file(&path);
+    }
+}

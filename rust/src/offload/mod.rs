@@ -1,17 +1,20 @@
 //! Offloading substrate: the local-vs-cloud decision model ([`model`]),
 //! the REST API of §IV ([`server`], [`http`]), the async search-job
-//! subsystem behind it ([`jobs`]), and a small client ([`client`]).
+//! subsystem behind it ([`jobs`]), its durable crash-recovery journal
+//! ([`journal`]), and a small client ([`client`]).
 
 pub mod client;
 pub mod http;
 pub mod jobs;
+pub mod journal;
 pub mod model;
 pub mod server;
 
-pub use client::OffloadClient;
+pub use client::{OffloadClient, WaitError};
 pub use jobs::{Job, JobConfig, JobManager, JobStatus};
+pub use journal::Journal;
 pub use model::{
     decide, local_estimate, offload_estimate, Constraints, Decision, EdgePowerProfile,
     ExecutionEstimate, Link, Recommendation,
 };
-pub use server::{OffloadServer, ServerState};
+pub use server::{recovered_search_task, OffloadServer, ServerState};

@@ -4,7 +4,10 @@
 //!
 //! Endpoints (JSON over HTTP/1.1, thread-per-connection on std::net):
 //!
-//! * `GET  /health` — liveness.
+//! * `GET  /health` — liveness plus the load/durability picture:
+//!   `status` (`"ok"` / `"overloaded"`), queue depth vs its caps,
+//!   worker liveness, and journal event/lag counters. Always `200` —
+//!   scrapers distinguish states by the body.
 //! * `POST /v1/offload/decide` — body: `{network, batch, bandwidth_mbps,
 //!   rtt_ms, local_latency_s?, cloud_latency_s?, max_latency_s?,
 //!   max_energy_j?}` → decision record. When latencies are omitted they
@@ -32,6 +35,11 @@
 //!   background worker pool instead of the connection thread → `202`
 //!   with the queued job record. A completed job's `result` is
 //!   bit-identical to the synchronous response for the same body.
+//!   Admission control: submissions are attributed to the
+//!   `X-Client-Id` header (per-connection fallback) and refused with
+//!   `429` when the client's quota or the queue bound is hit, `503` +
+//!   `Retry-After` when the queue crosses the load-shedding high-water
+//!   mark.
 //! * `GET /v1/jobs` — list retained jobs (results omitted).
 //! * `GET /v1/jobs/{id}` — job status + live progress (the run's
 //!   evaluation counter) + result once done; `404` after eviction
@@ -41,7 +49,9 @@
 //!
 //! Connection hygiene: every accepted socket gets read/write timeouts
 //! ([`ServerState::io_timeout`]) so an idle or trickling client cannot
-//! pin a handler thread forever.
+//! pin a handler thread forever. Dispatch is panic-isolated: a handler
+//! panic becomes a `500` JSON error on that connection instead of a
+//! dropped socket (and the accept loop never sees it either way).
 //!
 //! The ML-predictor path is the REST hot path: feature descriptors come
 //! from a shared [`DescriptorCache`] (the HyPA analysis — by far the
@@ -56,6 +66,7 @@
 //! persistent connection worker pool.
 
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -74,11 +85,12 @@ use crate::gpu::specs::by_name;
 use crate::ml::features::N_FEATURES;
 use crate::ml::matrix::FeatureMatrix;
 use crate::offload::http::{read_request, write_response, Request, Response};
-use crate::offload::jobs::{JobConfig, JobManager, SubmitError};
+use crate::offload::jobs::{JobConfig, JobManager, JobTask, SubmitError};
 use crate::offload::model::{
     decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
 };
 use crate::sim::Simulator;
+use crate::util::failpoint;
 use crate::util::json::{jarr, jnum, jstr, Json};
 use crate::util::pool;
 
@@ -144,13 +156,25 @@ impl ServerState {
     }
 
     /// [`ServerState::new`] with an explicit async-job policy (worker
-    /// count, retention TTL/cap, queue bound).
+    /// count, retention TTL/cap, queue bound, quotas, shedding mark).
     pub fn with_job_config(predictor: Option<Predictor>, jobs: JobConfig) -> ServerState {
+        Self::with_parts(predictor, Arc::new(DescriptorCache::new()), JobManager::new(jobs))
+    }
+
+    /// Assemble a state around an existing job manager and descriptor
+    /// cache — the restart path: [`JobManager::recover`] rebuilds
+    /// interrupted jobs (via [`recovered_search_task`]) against the
+    /// same cache/predictor this state then serves with.
+    pub fn with_parts(
+        predictor: Option<Predictor>,
+        cache: Arc<DescriptorCache>,
+        jobs: JobManager,
+    ) -> ServerState {
         ServerState {
             sim: Mutex::new(Simulator::default()),
             predictor,
-            cache: Arc::new(DescriptorCache::new()),
-            jobs: JobManager::new(jobs),
+            cache,
+            jobs,
             edge_gpu: "jetson-tx1".into(),
             cloud_gpu: "v100s".into(),
             io_timeout: DEFAULT_IO_TIMEOUT,
@@ -225,6 +249,12 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
     // gets a *total* budget via DeadlineStream; the write side a
     // per-write timeout (responses are small and bounded).
     let _ = stream.set_write_timeout(Some(state.io_timeout));
+    // Captured before the read: the quota fallback key for clients that
+    // send no `X-Client-Id` header.
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "unknown".into());
     let read_result = read_request(&mut DeadlineStream {
         deadline: std::time::Instant::now() + state.io_timeout,
         stream: &mut stream,
@@ -232,7 +262,23 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
     let resp = match read_result {
         Ok(req) => {
             state.requests.fetch_add(1, Ordering::Relaxed);
-            route(&req, state)
+            let client = client_id(&req, &peer);
+            // Panic isolation at the dispatch boundary: a handler panic
+            // costs this request a 500 JSON answer, not a dropped
+            // connection (and other connections never notice).
+            // AssertUnwindSafe: a panicked handler's partial state dies
+            // with its frame; everything shared (registry, caches,
+            // predictor channels) is lock/atomic-guarded.
+            match catch_unwind(AssertUnwindSafe(|| route(&req, state, &client))) {
+                Ok(resp) => resp,
+                Err(payload) => error_json(
+                    500,
+                    format!(
+                        "internal error: handler panicked: {}",
+                        failpoint::panic_message(&*payload)
+                    ),
+                ),
+            }
         }
         Err(e) => error_json(400, e.to_string()),
     };
@@ -256,22 +302,79 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
     }
 }
 
-fn route(req: &Request, state: &ServerState) -> Response {
+/// Quota attribution for job submissions: the `x-client-id` header
+/// (trimmed, bounded — a hostile header must not become an unbounded
+/// registry key) when present, else a per-connection fallback, so
+/// distinct anonymous clients get distinct keys and one header-less
+/// client cannot exhaust a shared quota bucket.
+fn client_id(req: &Request, peer: &str) -> String {
+    match req
+        .headers
+        .get("x-client-id")
+        .map(|v| v.trim())
+        .filter(|v| !v.is_empty())
+    {
+        Some(v) => v.chars().take(64).collect(),
+        None => format!("conn:{peer}"),
+    }
+}
+
+fn route(req: &Request, state: &ServerState, client: &str) -> Response {
+    if cfg!(any(test, debug_assertions)) {
+        // Deterministic dispatch-level fault injection (ctx = the path,
+        // so a test targets one route without touching the rest); the
+        // `Panic` action exercises the catch_unwind boundary above.
+        if let Err(e) = failpoint::eval_ctx("http-route", &req.path) {
+            return error_json(500, format!("{e:#}"));
+        }
+    }
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => Response::json(200, "{\"status\":\"ok\"}".into()),
+        ("GET", "/health") => health(state),
         ("POST", "/v1/offload/decide") => {
             json_endpoint(req, |j| offload_decide(j, state))
         }
         ("POST", "/v1/predict") => json_endpoint(req, |j| predict(j, state)),
         ("POST", "/v1/predict/bulk") => json_endpoint(req, |j| predict_bulk(j, state)),
         ("POST", "/v1/search") => json_endpoint(req, |j| search(j, state)),
-        ("POST", "/v1/search/jobs") => search_submit(req, state),
+        ("POST", "/v1/search/jobs") => search_submit(req, state, client),
         ("GET", "/v1/jobs") => jobs_list(state),
         ("GET", p) if p.starts_with("/v1/jobs/") => job_status(p, state),
         ("DELETE", p) if p.starts_with("/v1/jobs/") => job_cancel(p, state),
         ("POST", _) | ("GET", _) | ("DELETE", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
+}
+
+/// GET /health — liveness plus the numbers an operator alarms on:
+/// queue depth against both its caps, worker liveness (with panic
+/// isolation `alive == configured`; a shortfall means a worker died
+/// outside the isolated region), and journal event/lag counters
+/// (lag > 0 = events are being dropped; durability is degraded even
+/// though serving continues). Always 200 — `status` flips to
+/// `"overloaded"` once depth reaches the shedding mark.
+fn health(state: &ServerState) -> Response {
+    let cfg = state.jobs.config();
+    let depth = state.jobs.pending();
+    let shedding = cfg.high_water > 0 && depth >= cfg.high_water;
+    let mut o = Json::obj();
+    o.set("status", jstr(if shedding { "overloaded" } else { "ok" }));
+    let mut q = Json::obj();
+    q.set("depth", jnum(depth as f64))
+        .set("cap", jnum(cfg.max_queued as f64))
+        .set("high_water", jnum(cfg.high_water as f64))
+        .set("shedding", Json::Bool(shedding));
+    o.set("queue", q);
+    let mut w = Json::obj();
+    w.set("configured", jnum(state.jobs.workers_configured() as f64))
+        .set("alive", jnum(state.jobs.workers_alive() as f64));
+    o.set("workers", w);
+    let mut jo = Json::obj();
+    jo.set("enabled", Json::Bool(state.jobs.journal_events().is_some()))
+        .set("events", jnum(state.jobs.journal_events().unwrap_or(0) as f64))
+        .set("lag", jnum(state.jobs.journal_lag().unwrap_or(0) as f64));
+    o.set("journal", jo);
+    o.set("requests", jnum(state.requests.load(Ordering::Relaxed) as f64));
+    Response::json(200, o.to_string())
 }
 
 fn json_endpoint(req: &Request, f: impl FnOnce(&Json) -> Result<Json>) -> Response {
@@ -554,8 +657,11 @@ impl StrategySpec {
     }
 }
 
-/// Validate a `/v1/search` body into a [`SearchSpec`].
-fn parse_search(j: &Json, state: &ServerState) -> Result<SearchSpec> {
+/// Validate a `/v1/search` body into a [`SearchSpec`]. Takes the
+/// descriptor cache rather than the whole state so the recovery path
+/// ([`recovered_search_task`]) can re-validate journaled bodies before
+/// a `ServerState` exists.
+fn parse_search(j: &Json, cache: &DescriptorCache) -> Result<SearchSpec> {
     let net = net_for(j)?;
     let budget = req_usize(j, "budget", 64)?;
     anyhow::ensure!(
@@ -635,7 +741,7 @@ fn parse_search(j: &Json, state: &ServerState) -> Result<SearchSpec> {
                 (1..=MAX_REST_FREQ_STEPS).contains(&steps),
                 "'freq_steps' must be in 1..={MAX_REST_FREQ_STEPS}, got {steps}"
             );
-            let space = DesignSpace::grid(steps, &batches, state.cache.gpus());
+            let space = DesignSpace::grid(steps, &batches, cache.gpus());
             // No silent truncation: a grid answer must cover the whole
             // grid, so the budget has to fit it (the budgeted searches
             // are the right tool for partial coverage).
@@ -749,8 +855,29 @@ fn search_predictor(state: &ServerState) -> Result<&Predictor> {
 /// connection thread (the caller waits for the full result).
 fn search(j: &Json, state: &ServerState) -> Result<Json> {
     let predictor = search_predictor(state)?;
-    let spec = parse_search(j, state)?;
+    let spec = parse_search(j, &state.cache)?;
     run_search(&spec, predictor, &state.cache, None, None)
+}
+
+/// Rebuild an interrupted job's task from its journaled request body —
+/// the `rebuild` hook [`JobManager::recover`] needs. Validation is the
+/// same [`parse_search`] the live endpoints use, so a journaled body
+/// that no longer validates (schema drift across versions) surfaces as
+/// a `failed` job instead of a panic or a silent drop; a body that does
+/// validate re-runs bit-identically (same spec, same seed).
+pub fn recovered_search_task(
+    body: &Json,
+    predictor: &Predictor,
+    cache: &Arc<DescriptorCache>,
+) -> Result<JobTask> {
+    let spec = parse_search(body, cache)?;
+    let predictor = predictor.clone();
+    let cache = cache.clone();
+    Ok(Box::new(
+        move |cancel: Arc<AtomicBool>, progress: Arc<AtomicUsize>| {
+            run_search(&spec, &predictor, &cache, Some(cancel), Some(progress))
+        },
+    ))
 }
 
 /// `{"error": …}` with an arbitrary status (the job endpoints answer
@@ -763,16 +890,21 @@ fn error_json(status: u16, msg: String) -> Response {
 
 /// POST /v1/search/jobs — validate exactly like `/v1/search`, then hand
 /// the run to the background job pool and answer `202` with the queued
-/// job record. Queue at capacity → `429`; shutdown → `503`.
-fn search_submit(req: &Request, state: &ServerState) -> Response {
+/// job record. The *validated raw body* is what the journal stores with
+/// the `submitted` event (recovery re-parses it through the same
+/// validator). Refusals: per-client quota or queue at capacity → `429`;
+/// load shedding past the high-water mark → `503` + `Retry-After`;
+/// shutdown → `503`.
+fn search_submit(req: &Request, state: &ServerState, client: &str) -> Response {
     let parsed = req
         .body_str()
         .and_then(|s| Json::parse(s).map_err(|e| anyhow!("{e}")))
         .and_then(|j| {
             let predictor = search_predictor(state)?.clone();
-            Ok((parse_search(&j, state)?, predictor))
+            let spec = parse_search(&j, &state.cache)?;
+            Ok((j, spec, predictor))
         });
-    let (spec, predictor) = match parsed {
+    let (body, spec, predictor) = match parsed {
         Ok(v) => v,
         Err(e) => return error_json(400, format!("{e:#}")),
     };
@@ -787,9 +919,18 @@ fn search_submit(req: &Request, state: &ServerState) -> Response {
     let task = Box::new(move |cancel: Arc<AtomicBool>, progress: Arc<AtomicUsize>| {
         run_search(&spec, &predictor, &cache, Some(cancel), Some(progress))
     });
-    match state.jobs.submit(label, budget, task) {
+    match state.jobs.submit(client, label, budget, body, task) {
         Ok(job) => Response::json(202, job.to_json(true).to_string()),
-        Err(e @ SubmitError::QueueFull { .. }) => error_json(429, e.to_string()),
+        // 429: *this client* must back off (its queue slot or quota).
+        Err(e @ SubmitError::QueueFull { .. }) => {
+            error_json(429, e.to_string()).with_retry_after(1)
+        }
+        Err(e @ SubmitError::QuotaExceeded { .. }) => error_json(429, e.to_string()),
+        // 503 + Retry-After: the *server* is shedding; any client may
+        // retry after the hint (the client's get_with_retry honors it).
+        Err(e @ SubmitError::Overloaded { .. }) => {
+            error_json(503, e.to_string()).with_retry_after(1)
+        }
         Err(e @ SubmitError::ShuttingDown) => error_json(503, e.to_string()),
     }
 }
@@ -861,6 +1002,99 @@ mod tests {
         let (status, body) = client.get("/health").unwrap();
         assert_eq!(status, 200);
         assert!(String::from_utf8_lossy(&body).contains("ok"));
+    }
+
+    #[test]
+    fn health_reports_queue_workers_and_journal() {
+        // Paused manager (0 workers) with a tiny shedding mark: queue
+        // two dummy jobs directly and watch /health flip to overloaded
+        // deterministically (nothing ever drains the queue).
+        let state = Arc::new(ServerState::with_job_config(
+            None,
+            JobConfig {
+                workers: 0,
+                high_water: 2,
+                max_per_client: 0,
+                ..JobConfig::default()
+            },
+        ));
+        let srv = OffloadServer::start("127.0.0.1:0", state.clone()).unwrap();
+        let client = OffloadClient::new(srv.addr);
+        let (status, body) = client.get("/health").unwrap();
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(j.path(&["queue", "depth"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["queue", "high_water"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.path(&["workers", "configured"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["workers", "alive"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path(&["journal", "enabled"]), Some(&Json::Bool(false)));
+        for i in 0..2 {
+            state
+                .jobs
+                .submit(
+                    "c",
+                    format!("dummy{i}"),
+                    1,
+                    Json::Null,
+                    Box::new(|_c, _p| Ok(Json::obj())),
+                )
+                .unwrap();
+        }
+        let (status, body) = client.get("/health").unwrap();
+        assert_eq!(status, 200, "health stays 200 while overloaded");
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(j.path(&["queue", "depth"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.path(&["queue", "shedding"]), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn handler_panic_answers_500_json_and_server_survives() {
+        let _s = failpoint::scenario();
+        let (_srv, client) = server();
+        // The filter is a path no other test requests, so concurrent
+        // tests sharing the process-global registry are untouched; the
+        // failpoint fires pre-dispatch, so any path exercises the
+        // catch_unwind boundary.
+        failpoint::arm_filtered(
+            "http-route",
+            failpoint::Action::Panic("injected route panic".into()),
+            "/v1/jobs/999888777",
+        );
+        let (status, body) = client.get("/v1/jobs/999888777").unwrap();
+        assert_eq!(status, 500);
+        let text = String::from_utf8_lossy(&body).into_owned();
+        assert!(
+            text.contains("panicked") && text.contains("injected route panic"),
+            "{text}"
+        );
+        failpoint::clear();
+        // The connection loop survived: the same route answers again
+        // (404 now — the id is unknown, which is the *handler* talking).
+        let (status, _) = client.get("/v1/jobs/999888777").unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = client.get("/health").unwrap();
+        assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn client_id_prefers_header_and_falls_back_to_peer() {
+        let mut req = Request {
+            method: "POST".into(),
+            path: "/v1/search/jobs".into(),
+            headers: std::collections::BTreeMap::new(),
+            body: Vec::new(),
+        };
+        assert_eq!(client_id(&req, "127.0.0.1:5000"), "conn:127.0.0.1:5000");
+        req.headers.insert("x-client-id".into(), "  alice  ".into());
+        assert_eq!(client_id(&req, "127.0.0.1:5000"), "alice");
+        // Blank headers don't collapse everyone into one "" bucket.
+        req.headers.insert("x-client-id".into(), "   ".into());
+        assert_eq!(client_id(&req, "127.0.0.1:5000"), "conn:127.0.0.1:5000");
+        // Hostile header values are bounded, not stored verbatim.
+        req.headers.insert("x-client-id".into(), "x".repeat(10_000));
+        assert_eq!(client_id(&req, "p").len(), 64);
     }
 
     #[test]

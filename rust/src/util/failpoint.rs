@@ -1,0 +1,406 @@
+//! Deterministic fault injection ("failpoints") for the crash-safety
+//! test suite.
+//!
+//! A failpoint is a named hook compiled into a code path (worker task
+//! execution, journal appends, scoring chunks, request dispatch). In a
+//! release build every hook sits behind `cfg!(any(test,
+//! debug_assertions))`, so the branch folds to nothing and the hot path
+//! pays zero cost. In debug/test builds an *armed* failpoint can
+//! deterministically:
+//!
+//! * return an injected error ([`Action::Error`]),
+//! * panic ([`Action::Panic`] — exercises the `catch_unwind` isolation
+//!   in the job workers and connection threads),
+//! * delay the path ([`Action::Sleep`] — "slow scoring chunk"),
+//! * or block until disarmed ([`Action::Pause`] — holds a code path
+//!   open so a test can observe/perturb a mid-run state without
+//!   sleeping-as-synchronization).
+//!
+//! Arming is programmatic ([`arm`], [`arm_filtered`], [`arm_times`]) or
+//! via the `HYPA_DSE_FAILPOINTS` environment variable
+//! (`name=error:msg;other=sleep:50`), parsed once on first evaluation.
+//! The registry is process-global, and tests run concurrently — tests
+//! that arm failpoints therefore (a) serialize through [`scenario`],
+//! which clears the registry on entry and exit, and (b) arm *filtered*
+//! failpoints ([`arm_filtered`]) keyed on request context (a network
+//! name, an URL path, a distinctive label) whenever the hook sits on a
+//! code path other tests also execute.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, Once, OnceLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+/// What an armed failpoint does when a matching [`eval`] reaches it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Return an injected error carrying this message.
+    Error(String),
+    /// Panic with this message.
+    Panic(String),
+    /// Sleep this many milliseconds, then continue normally.
+    Sleep(u64),
+    /// Block until the failpoint is disarmed or the registry cleared,
+    /// then re-evaluate whatever is armed (usually: nothing) — the
+    /// deterministic "hold this path open" primitive.
+    Pause,
+}
+
+struct Armed {
+    action: Action,
+    /// Fire only when the evaluation context contains this substring
+    /// ([`eval_ctx`]); `None` fires unconditionally.
+    filter: Option<String>,
+    /// Fire at most this many times, then disarm automatically.
+    times: Option<usize>,
+}
+
+struct Registry {
+    map: Mutex<HashMap<String, Armed>>,
+    /// Wakes [`Action::Pause`] waiters when the registry changes.
+    cv: Condvar,
+}
+
+/// Armed-failpoint count, mirrored out of the registry map so the
+/// disarmed fast path is one relaxed load (no lock).
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+static ENV_INIT: Once = Once::new();
+/// Serializes failpoint-using tests (see [`scenario`]).
+static SCENARIO: Mutex<()> = Mutex::new(());
+
+fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry {
+        map: Mutex::new(HashMap::new()),
+        cv: Condvar::new(),
+    })
+}
+
+/// Lock the registry map, recovering from poison: a failpoint that
+/// panicked *on purpose* ([`Action::Panic`]) must not wedge every later
+/// evaluation.
+fn lock_map() -> MutexGuard<'static, HashMap<String, Armed>> {
+    registry()
+        .map
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn store_armed_count(map: &HashMap<String, Armed>) {
+    ARMED.store(map.len(), Ordering::Relaxed);
+}
+
+/// Arm `name` unconditionally.
+pub fn arm(name: &str, action: Action) {
+    arm_with(name, action, None, None);
+}
+
+/// Arm `name`, firing only for evaluation contexts containing `filter`
+/// — the tool for hooks on shared code paths (scoring, dispatch),
+/// where an unfiltered panic/error would hit concurrently running
+/// tests.
+pub fn arm_filtered(name: &str, action: Action, filter: &str) {
+    arm_with(name, action, Some(filter.to_string()), None);
+}
+
+/// Arm `name` for at most `times` firings, then auto-disarm.
+pub fn arm_times(name: &str, action: Action, times: usize) {
+    arm_with(name, action, None, Some(times));
+}
+
+fn arm_with(name: &str, action: Action, filter: Option<String>, times: Option<usize>) {
+    let mut map = lock_map();
+    map.insert(
+        name.to_string(),
+        Armed {
+            action,
+            filter,
+            times,
+        },
+    );
+    store_armed_count(&map);
+    drop(map);
+    registry().cv.notify_all();
+}
+
+/// Disarm one failpoint (wakes its [`Action::Pause`] waiters).
+pub fn disarm(name: &str) {
+    let mut map = lock_map();
+    map.remove(name);
+    store_armed_count(&map);
+    drop(map);
+    registry().cv.notify_all();
+}
+
+/// Disarm everything (wakes all [`Action::Pause`] waiters).
+pub fn clear() {
+    let mut map = lock_map();
+    map.clear();
+    store_armed_count(&map);
+    drop(map);
+    registry().cv.notify_all();
+}
+
+/// Number of armed failpoints (introspection/tests).
+pub fn armed_count() -> usize {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Guard returned by [`scenario`]: holds the global scenario lock and
+/// clears the registry when dropped.
+pub struct Scenario {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl Drop for Scenario {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Enter a failpoint scenario: tests that arm failpoints take this
+/// guard first, so concurrently running failpoint tests serialize
+/// instead of perturbing each other's registry. The registry is cleared
+/// on entry (stale state from a panicked predecessor) and on drop.
+pub fn scenario() -> Scenario {
+    let guard = SCENARIO
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
+    clear();
+    Scenario { _guard: guard }
+}
+
+/// Evaluate a failpoint with no context (equivalent to `eval_ctx(name,
+/// "")`; an armed filter never matches the empty context unless the
+/// filter itself is empty).
+#[inline]
+pub fn eval(name: &str) -> Result<()> {
+    eval_ctx(name, "")
+}
+
+/// Evaluate a failpoint: no-op unless `name` is armed and its filter
+/// (if any) matches `ctx`. May return an error, panic, sleep, or block
+/// per the armed [`Action`]. Call sites wrap this in
+/// `cfg!(any(test, debug_assertions))` so release builds compile the
+/// hook out entirely.
+#[inline]
+pub fn eval_ctx(name: &str, ctx: &str) -> Result<()> {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("HYPA_DSE_FAILPOINTS") {
+            arm_from_spec(&spec);
+        }
+    });
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return Ok(());
+    }
+    eval_slow(name, ctx)
+}
+
+#[cold]
+fn eval_slow(name: &str, ctx: &str) -> Result<()> {
+    let reg = registry();
+    let mut map = lock_map();
+    let action = loop {
+        let Some(armed) = map.get_mut(name) else {
+            return Ok(());
+        };
+        if let Some(f) = &armed.filter {
+            if !ctx.contains(f.as_str()) {
+                return Ok(());
+            }
+        }
+        if matches!(armed.action, Action::Pause) {
+            // Block until the registry changes, then re-evaluate from
+            // the top (the failpoint may have been disarmed or rearmed
+            // with a different action).
+            map = reg
+                .cv
+                .wait(map)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            continue;
+        }
+        let action = armed.action.clone();
+        if let Some(n) = &mut armed.times {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                map.remove(name);
+                store_armed_count(&map);
+            }
+        }
+        break action;
+    };
+    drop(map);
+    match action {
+        Action::Error(msg) => Err(anyhow!("failpoint '{name}' injected error: {msg}")),
+        Action::Panic(msg) => panic!("failpoint '{name}' injected panic: {msg}"),
+        Action::Sleep(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Action::Pause => unreachable!("pause is handled under the lock"),
+    }
+}
+
+/// Parse and arm an `HYPA_DSE_FAILPOINTS`-style spec:
+/// `name=action[:arg]` entries separated by `;`. Actions: `error[:msg]`,
+/// `panic[:msg]`, `sleep:MILLIS`, `pause`, `off`. Unparseable entries
+/// are ignored (operational knob — a typo must not take the process
+/// down).
+pub fn arm_from_spec(spec: &str) {
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let Some((name, rest)) = entry.split_once('=') else {
+            continue;
+        };
+        let (kind, arg) = match rest.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (rest, None),
+        };
+        match kind {
+            "error" => arm(name, Action::Error(arg.unwrap_or("injected").to_string())),
+            "panic" => arm(name, Action::Panic(arg.unwrap_or("injected").to_string())),
+            "sleep" => {
+                if let Some(ms) = arg.and_then(|a| a.parse().ok()) {
+                    arm(name, Action::Sleep(ms));
+                }
+            }
+            "pause" => arm(name, Action::Pause),
+            "off" => disarm(name),
+            _ => {}
+        }
+    }
+}
+
+/// Best-effort human-readable message from a `catch_unwind` payload
+/// (the `&str` / `String` payloads `panic!` produces; anything else is
+/// summarized). Shared by the job-worker and connection-thread panic
+/// isolation.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn disarmed_failpoint_is_a_noop() {
+        let _s = scenario();
+        assert_eq!(armed_count(), 0);
+        assert!(eval("not-armed").is_ok());
+        assert!(eval_ctx("not-armed", "any context").is_ok());
+    }
+
+    #[test]
+    fn error_action_returns_injected_error() {
+        let _s = scenario();
+        arm("fp-err", Action::Error("boom".into()));
+        let err = eval("fp-err").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fp-err") && msg.contains("boom"), "{msg}");
+        disarm("fp-err");
+        assert!(eval("fp-err").is_ok());
+    }
+
+    #[test]
+    fn panic_action_panics_and_message_is_extractable() {
+        let _s = scenario();
+        arm("fp-panic", Action::Panic("kapow".into()));
+        let payload = std::panic::catch_unwind(|| {
+            let _ = eval("fp-panic");
+        })
+        .unwrap_err();
+        let msg = panic_message(&*payload);
+        assert!(msg.contains("kapow"), "{msg}");
+        // The registry mutex self-heals from the intentional panic.
+        assert!(eval("unrelated").is_ok());
+    }
+
+    #[test]
+    fn filter_gates_on_context_substring() {
+        let _s = scenario();
+        arm_filtered("fp-filter", Action::Error("only squeezenet".into()), "squeezenet");
+        assert!(eval_ctx("fp-filter", "lenet5").is_ok());
+        assert!(eval("fp-filter").is_ok(), "empty ctx never matches");
+        assert!(eval_ctx("fp-filter", "run squeezenet b=4").is_err());
+    }
+
+    #[test]
+    fn times_auto_disarms_after_n_firings() {
+        let _s = scenario();
+        arm_times("fp-twice", Action::Error("transient".into()), 2);
+        assert!(eval("fp-twice").is_err());
+        assert!(eval("fp-twice").is_err());
+        assert!(eval("fp-twice").is_ok(), "third evaluation is disarmed");
+        assert_eq!(armed_count(), 0);
+    }
+
+    #[test]
+    fn sleep_action_delays_then_continues() {
+        let _s = scenario();
+        arm("fp-slow", Action::Sleep(30));
+        let t0 = Instant::now();
+        assert!(eval("fp-slow").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(25), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn pause_blocks_until_disarmed() {
+        let _s = scenario();
+        arm("fp-pause", Action::Pause);
+        let entered = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let entered2 = entered.clone();
+        let waiter = std::thread::spawn(move || {
+            entered2.store(true, Ordering::Relaxed);
+            eval("fp-pause")
+        });
+        // Bounded spin until the waiter thread is inside eval (it sets
+        // the flag immediately before calling), then release it.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !entered.load(Ordering::Relaxed) {
+            assert!(Instant::now() < deadline);
+            std::thread::yield_now();
+        }
+        disarm("fp-pause");
+        assert!(waiter.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn env_spec_parser_arms_and_ignores_garbage() {
+        let _s = scenario();
+        arm_from_spec("a=error:oops; b=sleep:5 ;c=pause;junk;d=;e=sleep:NaN;a2=panic:x;c=off");
+        // a armed as error, b as sleep, a2 as panic; c was armed then
+        // disarmed by the trailing off; junk/d/e ignored.
+        assert!(eval("a").is_err());
+        assert!(eval("b").is_ok());
+        assert!(eval("c").is_ok());
+        assert!(std::panic::catch_unwind(|| {
+            let _ = eval("a2");
+        })
+        .is_err());
+        assert_eq!(armed_count(), 3);
+    }
+
+    #[test]
+    fn scenario_clears_on_drop() {
+        {
+            let _s = scenario();
+            arm("fp-scoped", Action::Error("scoped".into()));
+            assert!(eval("fp-scoped").is_err());
+        }
+        let _s = scenario();
+        assert!(eval("fp-scoped").is_ok());
+    }
+}

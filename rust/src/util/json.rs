@@ -55,6 +55,18 @@ impl Json {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// Exact non-negative integer (ids, counters): `None` unless the
+    /// value is a whole number in `0..=2^53` (beyond that an f64-backed
+    /// JSON number has already lost integer precision — see the seed
+    /// validation in `offload::server` — so treating it as an exact id
+    /// would be a lie). The journal replay path uses this for job ids.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 && f <= (1u64 << 53) as f64 => Some(f as u64),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -432,6 +444,17 @@ mod tests {
         assert_eq!(v.path(&["c", "d"]).unwrap().as_f64(), Some(-2500.0));
         let re = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, re);
+    }
+
+    #[test]
+    fn as_u64_is_exact_integers_only() {
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num((1u64 << 53) as f64).as_u64(), Some(1u64 << 53));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(((1u64 << 53) + 2) as f64).as_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Shared utilities: PRNG, statistics, JSON, tables, property testing,
-//! and the micro-benchmark harness used by the `cargo bench` targets.
+//! deterministic fault injection, and the micro-benchmark harness used
+//! by the `cargo bench` targets.
 
 pub mod bench;
+pub mod failpoint;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -159,10 +159,7 @@ where
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
-            .collect()
+        handles.into_iter().map(join_propagating).collect()
     })
 }
 
@@ -199,11 +196,20 @@ where
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
-            .collect()
+        handles.into_iter().map(join_propagating).collect()
     })
+}
+
+/// Join a scoped worker, re-raising its panic with the *original*
+/// payload (`resume_unwind`) instead of a generic "worker panicked"
+/// message — the async job layer's `catch_unwind` reports the payload
+/// to clients, so a panic inside a sharded scoring chunk must surface
+/// its own message, not the pool's.
+fn join_propagating<R>(h: std::thread::ScopedJoinHandle<'_, R>) -> R {
+    match h.join() {
+        Ok(r) => r,
+        Err(payload) => std::panic::resume_unwind(payload),
+    }
 }
 
 /// [`map_shards_with`] using the default worker count.

@@ -173,20 +173,25 @@ fn rest_bulk_predict_matches_singles_through_ml_predictor() {
     }
 }
 
-/// Server with an ML predictor trained at the real feature width
-/// (the search endpoint builds real feature vectors).
-fn search_server() -> (PredictionService, OffloadServer, OffloadClient) {
+/// A prediction service trained at the real feature width (the search
+/// endpoints build real feature vectors).
+fn predictor_service() -> PredictionService {
     let d = hypa_dse::ml::features::all_feature_names().len();
     let mut rng = Rng::new(11);
     let (forest, knn, _, _, _) = small_models(&mut rng, d);
-    let service = PredictionService::start(
+    PredictionService::start(
         "artifacts".into(),
         forest,
         knn,
         d,
         BatchPolicy::default(),
     )
-    .unwrap();
+    .unwrap()
+}
+
+/// Server with an ML predictor attached.
+fn search_server() -> (PredictionService, OffloadServer, OffloadClient) {
+    let service = predictor_service();
     let state = Arc::new(ServerState::new(Some(service.predictor())));
     let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
     let client = OffloadClient::new(srv.addr);
@@ -454,4 +459,335 @@ fn offload_decide_over_rest_matches_direct_model() {
         .as_f64()
         .unwrap();
     assert!((rest_energy - d.offload.device_energy_j).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Crash-safe serving: journal recovery, panic isolation, quotas/shedding.
+// The failpoint registry is process-global, so every test that arms one
+// takes `failpoint::scenario()` (serializing them against each other and
+// clearing the registry on entry/exit) and filters on context no other
+// concurrent test produces (the "squeezenet" searches below exist only
+// here; everything else in this binary searches lenet5).
+// ---------------------------------------------------------------------------
+
+use hypa_dse::dse::DescriptorCache;
+use hypa_dse::offload::{recovered_search_task, JobConfig, JobManager};
+use hypa_dse::util::failpoint::{self, Action};
+use std::time::{Duration, Instant};
+
+fn tmp_journal(tag: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("hypa-it-{tag}-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+#[test]
+fn recovery_after_crash_mid_run_is_bit_identical_and_tolerates_torn_tail() {
+    // Acceptance: crash a server mid-search (deterministically, via a
+    // paused scoring chunk — no sleeps as synchronization), corrupt the
+    // journal tail the way a crash mid-append would, restart from the
+    // journal, and the recovered job's result is byte-for-byte the
+    // synchronous /v1/search response for the same body.
+    let _s = failpoint::scenario();
+    let service = predictor_service();
+    let journal = tmp_journal("recovery-crash");
+    let req = r#"{"network":"squeezenet","strategy":"random","budget":12,"batches":[1],"seed":42}"#;
+
+    // Reference answer first, while no failpoint is armed.
+    let sync_body = {
+        let state = Arc::new(ServerState::new(Some(service.predictor())));
+        let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+        let (status, body) = OffloadClient::new(srv.addr).post("/v1/search", req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        String::from_utf8(body).unwrap()
+    };
+
+    // Journaled server; scoring on squeezenet pauses, holding the job
+    // mid-run until we "crash" the process.
+    let jobs = JobManager::with_journal(
+        JobConfig {
+            workers: 1,
+            ..JobConfig::default()
+        },
+        &journal,
+    )
+    .unwrap();
+    let state = Arc::new(ServerState::with_parts(
+        Some(service.predictor()),
+        Arc::new(DescriptorCache::new()),
+        jobs,
+    ));
+    let srv = OffloadServer::start("127.0.0.1:0", state.clone()).unwrap();
+    let client = OffloadClient::new(srv.addr);
+    failpoint::arm_filtered("dse-score-chunk", Action::Pause, "squeezenet");
+    let id = client.submit_search_job(req).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let rec = client.job_status(id).unwrap();
+        if rec.get("status").unwrap().as_str() == Some("running") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never started: {rec:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Crash: journaling stops instantly (as in a killed process), then
+    // release the paused scoring thread so the in-memory teardown can
+    // join it — nothing it does after this point reaches the journal.
+    state.jobs.crash();
+    failpoint::clear();
+    drop(srv);
+    drop(state);
+
+    // A crash can also tear the last append; the replay must shrug the
+    // partial line off and keep the valid prefix.
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&journal)
+            .unwrap();
+        f.write_all(b"{\"event\":\"don").unwrap();
+    }
+
+    // Restart: recover the journal, rebuilding the interrupted job
+    // through the same validator the live endpoint uses.
+    let predictor = service.predictor();
+    let cache = Arc::new(DescriptorCache::new());
+    let (p2, c2) = (predictor.clone(), cache.clone());
+    let jobs = JobManager::recover(
+        JobConfig {
+            workers: 1,
+            ..JobConfig::default()
+        },
+        &journal,
+        move |spec| recovered_search_task(spec, &p2, &c2),
+    )
+    .unwrap();
+    let state2 = Arc::new(ServerState::with_parts(Some(predictor), cache, jobs));
+    let srv2 = OffloadServer::start("127.0.0.1:0", state2).unwrap();
+    let client2 = OffloadClient::new(srv2.addr);
+
+    // The recovered job keeps its id and re-runs to the identical result.
+    let rec = client2.wait_job(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(rec.get("status").unwrap().as_str(), Some("done"), "{rec:?}");
+    assert_eq!(
+        rec.get("result").expect("recovered result").to_string(),
+        sync_body,
+        "recovered job diverged from the synchronous response"
+    );
+    // And the restarted server advertises its journal in /health.
+    let (status, hb) = client2.get("/health").unwrap();
+    assert_eq!(status, 200);
+    let hj = Json::parse(std::str::from_utf8(&hb).unwrap()).unwrap();
+    assert_eq!(hj.path(&["journal", "enabled"]), Some(&Json::Bool(true)));
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn recovery_requeues_job_that_was_still_queued_at_crash() {
+    // A paused manager (0 workers) holds the job in `queued` across the
+    // crash — recovery must re-enqueue it and a worker-ful restart runs
+    // it to the same result as the synchronous endpoint. No failpoint
+    // is armed here, but the scenario lock keeps the journal writes
+    // clear of tests that DO arm `journal-append`.
+    let _s = failpoint::scenario();
+    let service = predictor_service();
+    let journal = tmp_journal("recovery-queued");
+    let req = r#"{"network":"lenet5","strategy":"anneal","budget":10,"batches":[1],"seed":7}"#;
+
+    let sync_body = {
+        let state = Arc::new(ServerState::new(Some(service.predictor())));
+        let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+        let (status, body) = OffloadClient::new(srv.addr).post("/v1/search", req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        String::from_utf8(body).unwrap()
+    };
+
+    let id = {
+        let jobs = JobManager::with_journal(
+            JobConfig {
+                workers: 0,
+                ..JobConfig::default()
+            },
+            &journal,
+        )
+        .unwrap();
+        let state = Arc::new(ServerState::with_parts(
+            Some(service.predictor()),
+            Arc::new(DescriptorCache::new()),
+            jobs,
+        ));
+        let srv = OffloadServer::start("127.0.0.1:0", state.clone()).unwrap();
+        let client = OffloadClient::new(srv.addr);
+        let id = client.submit_search_job(req).unwrap();
+        assert_eq!(
+            client.job_status(id).unwrap().get("status").unwrap().as_str(),
+            Some("queued")
+        );
+        state.jobs.crash();
+        drop(srv);
+        id
+    };
+
+    let predictor = service.predictor();
+    let cache = Arc::new(DescriptorCache::new());
+    let (p2, c2) = (predictor.clone(), cache.clone());
+    let jobs = JobManager::recover(JobConfig::default(), &journal, move |spec| {
+        recovered_search_task(spec, &p2, &c2)
+    })
+    .unwrap();
+    let state2 = Arc::new(ServerState::with_parts(Some(predictor), cache, jobs));
+    let srv2 = OffloadServer::start("127.0.0.1:0", state2).unwrap();
+    let rec = OffloadClient::new(srv2.addr)
+        .wait_job(id, Duration::from_secs(120))
+        .unwrap();
+    assert_eq!(rec.get("status").unwrap().as_str(), Some("done"), "{rec:?}");
+    assert_eq!(rec.get("result").unwrap().to_string(), sync_body);
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn quota_429_and_shedding_503_with_retry_after_over_rest() {
+    // Paused manager: queue depth is exact, so the 429-vs-503 contract
+    // is pinned deterministically. alice exhausts her per-client quota
+    // (429, her problem); the queue then crosses the high-water mark and
+    // carol is shed (503 + Retry-After, the server's problem).
+    let service = predictor_service();
+    let state = Arc::new(ServerState::with_job_config(
+        Some(service.predictor()),
+        JobConfig {
+            workers: 0,
+            max_per_client: 2,
+            high_water: 3,
+            max_queued: 8,
+            ..JobConfig::default()
+        },
+    ));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+    let req = r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[1],"seed":1}"#;
+
+    for _ in 0..2 {
+        let (status, body) = client
+            .post_with_headers("/v1/search/jobs", req, &[("x-client-id", "alice")])
+            .unwrap();
+        assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    }
+    let (status, body) = client
+        .post_with_headers("/v1/search/jobs", req, &[("x-client-id", "alice")])
+        .unwrap();
+    assert_eq!(status, 429, "{}", String::from_utf8_lossy(&body));
+    assert!(
+        String::from_utf8_lossy(&body).contains("quota"),
+        "{}",
+        String::from_utf8_lossy(&body)
+    );
+
+    // Another client is still admitted (quotas are per-client)…
+    let (status, _) = client
+        .post_with_headers("/v1/search/jobs", req, &[("x-client-id", "bob")])
+        .unwrap();
+    assert_eq!(status, 202);
+
+    // …but the queue is now at the high-water mark: everyone is shed.
+    let (status, headers, body) = client
+        .send_full("POST", "/v1/search/jobs", req, &[("x-client-id", "carol")])
+        .unwrap();
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(
+        headers.get("retry-after").map(String::as_str),
+        Some("1"),
+        "shedding answers must carry Retry-After"
+    );
+    assert!(
+        String::from_utf8_lossy(&body).contains("overloaded"),
+        "{}",
+        String::from_utf8_lossy(&body)
+    );
+
+    // /health mirrors the shed state (still HTTP 200).
+    let (status, hb) = client.get("/health").unwrap();
+    assert_eq!(status, 200);
+    let hj = Json::parse(std::str::from_utf8(&hb).unwrap()).unwrap();
+    assert_eq!(hj.get("status").unwrap().as_str(), Some("overloaded"));
+    assert_eq!(hj.path(&["queue", "depth"]).unwrap().as_usize(), Some(3));
+    assert_eq!(hj.path(&["queue", "shedding"]), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn scoring_panic_lands_failed_job_and_pool_survives() {
+    // A panic inside a scoring chunk propagates through the worker
+    // pool's scope join onto the job worker, where catch_unwind turns
+    // it into a `failed` job with the panic message — and the worker
+    // slot survives to run the next job.
+    let _s = failpoint::scenario();
+    let (_service, _srv, client) = search_server();
+    failpoint::arm_filtered(
+        "dse-score-chunk",
+        Action::Panic("injected scoring panic".into()),
+        "squeezenet",
+    );
+    let id = client
+        .submit_search_job(
+            r#"{"network":"squeezenet","strategy":"random","budget":8,"batches":[1],"seed":3}"#,
+        )
+        .unwrap();
+    let rec = client.wait_job(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(rec.get("status").unwrap().as_str(), Some("failed"), "{rec:?}");
+    let err = rec.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(
+        err.contains("panicked") && err.contains("injected scoring panic"),
+        "{err}"
+    );
+    failpoint::clear();
+    // The pool self-healed: an untouched network runs to completion.
+    let id2 = client
+        .submit_search_job(
+            r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[1],"seed":1}"#,
+        )
+        .unwrap();
+    let rec2 = client.wait_job(id2, Duration::from_secs(120)).unwrap();
+    assert_eq!(rec2.get("status").unwrap().as_str(), Some("done"), "{rec2:?}");
+}
+
+#[test]
+fn journal_lag_from_failed_appends_surfaces_in_health() {
+    // Injected journal write failures must not take submissions down —
+    // the event is dropped, the job still runs, and the degradation is
+    // visible as journal lag in /health.
+    let _s = failpoint::scenario();
+    let service = predictor_service();
+    let journal = tmp_journal("lag");
+    let jobs = JobManager::with_journal(JobConfig::default(), &journal).unwrap();
+    let state = Arc::new(ServerState::with_parts(
+        Some(service.predictor()),
+        Arc::new(DescriptorCache::new()),
+        jobs,
+    ));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+
+    failpoint::arm_filtered("journal-append", Action::Error("disk full".into()), "submitted");
+    let id = client
+        .submit_search_job(
+            r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[1],"seed":2}"#,
+        )
+        .unwrap();
+    failpoint::clear();
+    let rec = client.wait_job(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(rec.get("status").unwrap().as_str(), Some("done"), "{rec:?}");
+
+    let (status, hb) = client.get("/health").unwrap();
+    assert_eq!(status, 200);
+    let hj = Json::parse(std::str::from_utf8(&hb).unwrap()).unwrap();
+    assert_eq!(hj.path(&["journal", "enabled"]), Some(&Json::Bool(true)));
+    assert_eq!(
+        hj.path(&["journal", "lag"]).unwrap().as_usize(),
+        Some(1),
+        "the dropped `submitted` append must be counted as lag"
+    );
+    // The run's later events (running/done) did land.
+    assert!(hj.path(&["journal", "events"]).unwrap().as_usize().unwrap() >= 2);
+    let _ = std::fs::remove_file(&journal);
 }

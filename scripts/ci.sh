@@ -21,6 +21,18 @@ echo "== async /v1/search job subsystem (explicit gate; also in the pass above) 
 # filtered out of a CI run: name-gate them explicitly.
 cargo test -q --test integration async_job
 
+echo "== crash-safety suite (explicit gates; also in the pass above) =="
+# The durability/robustness tests must never be filtered out of a CI
+# run either: the failpoint harness, the journal's replay/torn-tail
+# semantics, restart recovery end to end, the quota/shedding REST
+# contract, and panic isolation.
+cargo test -q --lib failpoint
+cargo test -q --lib journal
+cargo test -q --lib recover
+cargo test -q --test integration recovery
+cargo test -q --test integration quota
+cargo test -q --test integration panic
+
 echo "== cargo test --doc (doc-examples) =="
 cargo test -q --doc
 
