@@ -4,9 +4,9 @@
 //!     cargo run --release --example dse_sweep
 //!
 //! One `Explorer` session sweeps the full grid and then spends a small
-//! budget on the `Anneal` strategy for comparison: same network, same
-//! predictor, same `DescriptorCache`, same constraints — the strategy is
-//! the only thing that changes. The sweep prints the per-objective
+//! budget on the `Anneal`, `SurrogateEI` and `Nsga2` strategies for
+//! comparison: same network, same predictor, same `DescriptorCache`,
+//! same constraints — the strategy is the only thing that changes. The sweep prints the per-objective
 //! rankings, the Pareto frontier, the run telemetry (including how many
 //! candidates each constraint rejected) and the service's batching
 //! metrics.
@@ -14,7 +14,8 @@
 use hypa_dse::cnn::zoo;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService};
 use hypa_dse::dse::{
-    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, Objective,
+    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, Nsga2, Objective,
+    SurrogateEI,
 };
 use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
 use hypa_dse::ml::dataset::Target;
@@ -113,22 +114,38 @@ fn main() -> anyhow::Result<()> {
         best.point.gpu, best.point.f_mhz, best.point.batch
     );
 
-    // Same session, different strategy: a budgeted simulated-annealing
-    // walk reaches a near-grid-quality point with ~40x fewer predictor
-    // evaluations.
-    let annealed = explorer.budget(200).run(&Anneal::new(&[1, 4, 16]))?;
-    match annealed.best() {
+    // Same session, different strategies: budgeted searches reach a
+    // near-grid-quality point with ~40x fewer predictor evaluations.
+    let budgeted = explorer.budget(200);
+    let show = |name: &str, e: &hypa_dse::dse::Exploration| match e.best() {
         Ok(b) => println!(
-            "anneal (budget {}): {} @ {:.0} MHz (batch {}) — EDP {:.3e} vs grid {:.3e}",
-            annealed.telemetry.evaluations,
+            "{name} (budget {}): {} @ {:.0} MHz (batch {}) — EDP {:.3e} vs grid {:.3e}",
+            e.telemetry.evaluations,
             b.point.gpu,
             b.point.f_mhz,
             b.point.batch,
             Objective::MinEdp.key(b),
             Objective::MinEdp.key(best),
         ),
-        Err(e) => println!("anneal: {e}"),
-    }
+        Err(e) => println!("{name}: {e}"),
+    };
+    // A simulated-annealing walk over the lattice …
+    let annealed = budgeted.run(&Anneal::new(&[1, 4, 16]))?;
+    show("anneal", &annealed);
+    // … a surrogate-guided search (fit a cheap model on what's been
+    // scored, verify the most promising candidates on the real
+    // predictor) …
+    let surrogate = budgeted.run(&SurrogateEI::new(&[1, 4, 16]))?;
+    show("surrogate_ei", &surrogate);
+    // … and a multi-objective genetic search that evolves the (latency,
+    // power, energy) frontier directly instead of one scalarized key.
+    let evolved = budgeted.run(&Nsga2::new(&[1, 4, 16], 10))?;
+    show("nsga2", &evolved);
+    println!(
+        "nsga2 3-objective frontier: {} of {} scored points",
+        hypa_dse::dse::pareto::nondominated(&evolved.scored).len(),
+        evolved.scored.len()
+    );
 
     println!("\nservice metrics: {}", predictor.metrics.summary());
     Ok(())

@@ -50,8 +50,8 @@ use std::time::Duration;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
 use hypa_dse::offload::{JobConfig, JobManager, OffloadClient, OffloadServer, ServerState};
 use hypa_dse::dse::{
-    explore_seq, explore_with_cache, DescriptorCache, DesignSpace, DseConstraints, Explorer,
-    Grid,
+    explore_seq, explore_with_cache, Anneal, DescriptorCache, DesignSpace, DseConstraints,
+    Explorer, Grid, Objective, Random, SurrogateEI,
 };
 use hypa_dse::ml::batch::{BatchForest, BatchKnn, KnnTier};
 use hypa_dse::ml::features::{NetDescriptor, N_FEATURES};
@@ -467,6 +467,42 @@ fn main() {
     stages.stage(&m_lg, space.len());
     stages.stage(&m_bd, space.len());
     ratios.set("search_builder_vs_legacy", jnum(builder_ratio));
+
+    println!("-- strategy quality at N (Random vs Anneal vs SurrogateEI, same seed) --");
+    // Fixed-budget quality A/B: the best feasible objective each budgeted
+    // strategy reaches in the same 64 evaluations, same seed, same
+    // session. The quality ratio (Random's best key / SurrogateEI's best
+    // key; >= 1.0 means the surrogate is at least as good) is recorded
+    // informationally, not gated — there is no real hardware baseline to
+    // gate against yet. The structural >= guarantee on a monotone
+    // workload lives in tests/strategy_quality.rs; this stage tracks the
+    // realistic-workload trajectory across PRs.
+    let q_budget = 64usize;
+    let q_explorer = Explorer::new(&net, &p)
+        .objective(Objective::MinEdp)
+        .cache(&cache)
+        .seed(3)
+        .budget(q_budget);
+    let q_key = |e: &hypa_dse::dse::Exploration| {
+        e.best.as_ref().map(|b| Objective::MinEdp.key(b)).unwrap_or(f64::INFINITY)
+    };
+    let q_random = q_key(&q_explorer.run(&Random::new(&[1, 2])).expect("quality random"));
+    let q_anneal = q_key(&q_explorer.run(&Anneal::new(&[1, 2])).expect("quality anneal"));
+    let q_surrogate =
+        q_key(&q_explorer.run(&SurrogateEI::new(&[1, 2])).expect("quality surrogate"));
+    println!(
+        "  best min-edp at {q_budget} evals: random {q_random:.4e}  anneal {q_anneal:.4e}  \
+         surrogate_ei {q_surrogate:.4e}"
+    );
+    let quality_ratio = q_random / q_surrogate;
+    println!("  surrogate quality vs random: {quality_ratio:.3}x (informational)\n");
+    // The timed stage covers the most machinery-heavy of the three (the
+    // surrogate refit loop on top of the shared scoring core).
+    let m_q = bench::bench("strategy quality at n", explore_budget, || {
+        q_explorer.run(&SurrogateEI::new(&[1, 2])).unwrap().telemetry.evaluations
+    });
+    stages.stage(&m_q, q_budget);
+    ratios.set("strategy_quality_surrogate_vs_random", jnum(quality_ratio));
 
     println!("-- /v1/search: synchronous vs async job (submit + poll) --");
     // The async job subsystem must add ~no overhead over the synchronous

@@ -41,13 +41,16 @@
 //!   deterministic parallel units on the pool.
 
 pub mod explorer;
+pub mod pareto;
 pub mod search;
 pub mod strategy;
 
 pub use explorer::{
     ChunkScorer, DseError, Evaluator, Exploration, Explorer, Rejections, Telemetry,
 };
-pub use strategy::{Anneal, Grid, LocalRestarts, Random, SearchStrategy};
+pub use strategy::{
+    Anneal, Grid, LocalRestarts, Nsga2, Random, SearchStrategy, SurrogateEI, SurrogateModel,
+};
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};

@@ -1,0 +1,284 @@
+//! Multi-objective ranking machinery for the DSE layer: the paper's
+//! trade-off — power against performance against energy — treated as a
+//! genuine vector order instead of a scalarized objective.
+//!
+//! The existing [`pareto_frontier`](crate::dse::pareto_frontier) ranks
+//! the 2-D (power, latency) plane for reporting; this module adds the
+//! 3-objective order over **(latency, power, energy-per-inference)**
+//! plus the two NSGA-II primitives built on it:
+//!
+//! * [`fast_nondominated_sort`] — partition a population into fronts
+//!   F₁, F₂, … where F₁ is mutually nondominated and every member of
+//!   Fₖ₊₁ is dominated only by earlier fronts (Deb et al., O(n²));
+//! * [`crowding_distances`] — the per-front diversity measure NSGA-II
+//!   uses to truncate the last front that fits (boundary points are
+//!   infinitely crowded-distant, so the extremes of every objective
+//!   survive selection).
+//!
+//! Everything here is deterministic: ties resolve by index order, never
+//! by address or hash order, so the genetic strategy built on top stays
+//! byte-stable across runs and worker counts.
+
+use crate::dse::{DseConstraints, ScoredPoint};
+
+/// The three minimized objective values of a scored point, in the fixed
+/// order (latency, power, energy-per-inference).
+pub fn objectives(s: &ScoredPoint) -> [f64; 3] {
+    [s.latency_s, s.power_w, s.energy_per_inf_j]
+}
+
+/// Strict Pareto dominance for minimization: `a` is no worse than `b`
+/// on every objective and strictly better on at least one. Identical
+/// vectors do not dominate each other.
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Total relative constraint violation of `s` under `c`: 0.0 iff every
+/// cap is met, otherwise the sum of each constraint's relative excess.
+/// Used to order infeasible points against each other (Deb's
+/// constrained-domination rule) — an infeasible point that barely
+/// misses one cap beats one that blows through two.
+pub(crate) fn violation(s: &ScoredPoint, c: &DseConstraints) -> f64 {
+    let mut v = 0.0;
+    if let Some(cap) = c.max_power_w {
+        if s.power_w > cap {
+            v += (s.power_w - cap) / cap.abs().max(1e-300);
+        }
+    }
+    if let Some(cap) = c.max_latency_s {
+        if s.latency_s > cap {
+            v += (s.latency_s - cap) / cap.abs().max(1e-300);
+        }
+    }
+    if let Some(min) = c.min_throughput {
+        if s.throughput < min {
+            v += (min - s.throughput) / min.abs().max(1e-300);
+        }
+    }
+    v
+}
+
+/// Deb's constrained-domination: a feasible point dominates any
+/// infeasible one; between two infeasible points the smaller total
+/// [`violation`] wins; between two feasible points ordinary
+/// [`dominates`] applies over [`objectives`].
+pub(crate) fn constrained_dominates(a: &ScoredPoint, b: &ScoredPoint, c: &DseConstraints) -> bool {
+    match (a.feasible, b.feasible) {
+        (true, false) => true,
+        (false, true) => false,
+        (false, false) => violation(a, c) < violation(b, c),
+        (true, true) => dominates(&objectives(a), &objectives(b)),
+    }
+}
+
+/// Fast nondominated sort: partition indices `0..n` into fronts under
+/// an arbitrary (strict, asymmetric) dominance relation. Front 0 is the
+/// mutually nondominated set; removing fronts 0..k leaves front k+1
+/// nondominated. Each front is returned in ascending index order, so
+/// the partition is a pure function of the dominance relation.
+pub fn fast_nondominated_sort<F>(n: usize, dom: F) -> Vec<Vec<usize>>
+where
+    F: Fn(usize, usize) -> bool,
+{
+    let mut dominated: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut dominators = vec![0usize; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dom(i, j) {
+                dominated[i].push(j);
+                dominators[j] += 1;
+            }
+        }
+    }
+    let mut fronts = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominators[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &p in &current {
+            for &q in &dominated[p] {
+                dominators[q] -= 1;
+                if dominators[q] == 0 {
+                    next.push(q);
+                }
+            }
+        }
+        next.sort_unstable();
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// NSGA-II crowding distance of every member of `front` (indices into
+/// `objs`), returned aligned with `front`'s order. Per objective, the
+/// front is sorted and each interior member accumulates its neighbours'
+/// normalized span; the two boundary members get `+∞` so the extremes
+/// of every objective always survive crowded truncation. Fronts of ≤ 2
+/// members are all-boundary. Ties in an objective sort by index, so the
+/// distances are deterministic.
+pub fn crowding_distances(objs: &[[f64; 3]], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let mut dist = vec![0.0f64; m];
+    for k in 0..3 {
+        // Positions into `front`, ordered by objective k.
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][k]
+                .partial_cmp(&objs[front[b]][k])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(front[a].cmp(&front[b]))
+        });
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = objs[front[order[m - 1]]][k] - objs[front[order[0]]][k];
+        if span <= 0.0 {
+            continue; // degenerate objective: no interior spread to add
+        }
+        for w in 1..m - 1 {
+            dist[order[w]] +=
+                (objs[front[order[w + 1]]][k] - objs[front[order[w - 1]]][k]) / span;
+        }
+    }
+    dist
+}
+
+/// The mutually nondominated subset of the *feasible* scored points
+/// under the 3-objective (latency, power, energy-per-inference) order,
+/// in first-scored order. This is the multi-objective counterpart of
+/// the 2-D [`pareto_frontier`](crate::dse::pareto_frontier) report.
+/// Duplicate design points (a budgeted search may score the same
+/// candidate twice) carry identical objective vectors, never dominate
+/// each other, and are all kept — dedupe by design point if set
+/// semantics are needed.
+pub fn nondominated(scored: &[ScoredPoint]) -> Vec<ScoredPoint> {
+    let feasible: Vec<&ScoredPoint> = scored.iter().filter(|s| s.feasible).collect();
+    let objs: Vec<[f64; 3]> = feasible.iter().map(|s| objectives(s)).collect();
+    feasible
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !objs.iter().enumerate().any(|(j, o)| j != *i && dominates(o, &objs[*i])))
+        .map(|(_, s)| (*s).clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::DesignPoint;
+
+    fn sp(lat: f64, pw: f64, epi: f64, feasible: bool) -> ScoredPoint {
+        ScoredPoint {
+            point: DesignPoint {
+                gpu: "x".into(),
+                f_mhz: 1000.0,
+                batch: 1,
+            },
+            power_w: pw,
+            cycles: 1.0,
+            latency_s: lat,
+            throughput: 1.0 / lat,
+            energy_per_inf_j: epi,
+            feasible,
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_asymmetric() {
+        let a = [1.0, 1.0, 1.0];
+        let b = [1.0, 2.0, 1.0];
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        // Identical vectors never dominate each other.
+        assert!(!dominates(&a, &a));
+        // Trade-off: better on one axis, worse on another.
+        let c = [0.5, 3.0, 1.0];
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+    }
+
+    #[test]
+    fn sort_partitions_into_correct_fronts() {
+        // 0 and 1 trade off; 2 is dominated by 0; 3 is dominated by 2.
+        let objs = [
+            [1.0, 2.0, 1.0],
+            [2.0, 1.0, 1.0],
+            [2.0, 3.0, 2.0],
+            [3.0, 4.0, 3.0],
+        ];
+        let fronts =
+            fast_nondominated_sort(objs.len(), |i, j| dominates(&objs[i], &objs[j]));
+        assert_eq!(fronts, vec![vec![0, 1], vec![2], vec![3]]);
+        // Every index appears exactly once.
+        let mut all: Vec<usize> = fronts.concat();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn crowding_boundary_is_infinite_and_interior_finite() {
+        // A 4-point front along one axis.
+        let objs = [
+            [0.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [3.0, 0.0, 0.0],
+            [10.0, 0.0, 0.0],
+        ];
+        let front = [0, 1, 2, 3];
+        let d = crowding_distances(&objs, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[2].is_finite());
+        // The interior point with the wider gap is less crowded.
+        assert!(d[2] > d[1]);
+        // Tiny fronts are all-boundary.
+        assert!(crowding_distances(&objs, &[0, 1]).iter().all(|v| v.is_infinite()));
+    }
+
+    #[test]
+    fn nondominated_filters_dominated_and_infeasible_keeps_duplicates() {
+        let scored = vec![
+            sp(1.0, 10.0, 0.1, true),
+            sp(2.0, 20.0, 0.2, true),  // dominated by [0]
+            sp(0.5, 30.0, 0.3, true),  // trade-off with [0]
+            sp(0.1, 1.0, 0.01, false), // infeasible: excluded even though it would win
+            sp(1.0, 10.0, 0.1, true),  // duplicate of [0]: kept
+        ];
+        let nd = nondominated(&scored);
+        assert_eq!(nd.len(), 3);
+        assert!(nd.iter().all(|s| s.feasible));
+        assert!(!nd.iter().any(|s| s.latency_s == 2.0));
+        // Mutually nondominated.
+        for a in &nd {
+            for b in &nd {
+                assert!(!dominates(&objectives(a), &objectives(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn constrained_domination_prefers_feasible_then_smaller_violation() {
+        let c = DseConstraints {
+            max_power_w: Some(10.0),
+            ..Default::default()
+        };
+        let feas = sp(1.0, 5.0, 0.1, true);
+        let near = sp(1.0, 11.0, 0.1, false); // 10% over the cap
+        let far = sp(1.0, 30.0, 0.1, false); // 200% over
+        assert!(constrained_dominates(&feas, &near, &c));
+        assert!(!constrained_dominates(&near, &feas, &c));
+        assert!(constrained_dominates(&near, &far, &c));
+        assert!(!constrained_dominates(&far, &near, &c));
+        assert!(violation(&feas, &c) == 0.0);
+        assert!(violation(&near, &c) > 0.0 && violation(&near, &c) < violation(&far, &c));
+    }
+}

@@ -5,7 +5,7 @@
 //! evaluation backend instead of each owning a private copy of the
 //! scoring machinery.
 //!
-//! Four strategies ship, all driven through
+//! Six strategies ship, all driven through
 //! [`Explorer::run`](crate::dse::Explorer::run):
 //!
 //! * [`Grid`] — exhaustive sweep of a [`DesignSpace`] (budget truncates
@@ -21,7 +21,18 @@
 //! * [`Anneal`] — seeded simulated annealing over the frequency / batch
 //!   / GPU lattice: one random move per step, geometric temperature
 //!   decay, relative-worsening acceptance — the escape-local-minima
-//!   scenario the free-function API could not express.
+//!   scenario the free-function API could not express;
+//! * [`SurrogateEI`] — surrogate-guided search in the GANDSE mold:
+//!   learn the design space from the points scored so far (a cheap
+//!   [`Ridge`] or small [`RandomForest`] model over encoded design
+//!   points), rank the untried candidates of the seed-stable random
+//!   stream by expected improvement, and *verify* every proposal on the
+//!   real predictor, so results stay exact;
+//! * [`Nsga2`] — seeded multi-objective genetic search (binary
+//!   tournament, lattice crossover/mutation, fast nondominated sort +
+//!   crowding distance — see [`pareto`](crate::dse::pareto)) that
+//!   evolves the (latency, power, energy-per-inference) frontier
+//!   directly instead of re-ranking a scalarized run afterwards.
 //!
 //! Every strategy scores candidates exclusively through the
 //! [`Evaluator`] it receives, and costs are measured in predictor
@@ -32,8 +43,13 @@ use std::borrow::Cow;
 use anyhow::Result;
 
 use crate::dse::explorer::{ChunkScorer, Evaluator};
-use crate::dse::{DesignPoint, DesignSpace, Objective, ScoredPoint, EXPLORE_MIN_SHARD};
+use crate::dse::{
+    pareto, DesignPoint, DesignSpace, DseConstraints, Objective, ScoredPoint, EXPLORE_MIN_SHARD,
+};
 use crate::gpu::specs::GpuSpec;
+use crate::ml::forest::{ForestConfig, RandomForest};
+use crate::ml::linear::Ridge;
+use crate::ml::regressor::Regressor;
 use crate::util::rng::Rng;
 
 /// Maximum candidates per bulk predictor call in [`Random`] (bounds the
@@ -387,6 +403,538 @@ impl SearchStrategy for Anneal {
         }
         Ok(scored_all)
     }
+}
+
+/// The surrogate model [`SurrogateEI`] fits on the points scored so far.
+///
+/// Both options are deliberately cheap next to the real predictor: they
+/// see only the *encoded design point* (GPU one-hot, normalized
+/// frequency, log₂ batch), never the HyPA feature vector, so a refit
+/// costs microseconds and the surrogate can be rebuilt after every
+/// verified chunk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SurrogateModel {
+    /// Ridge regression (`ml::linear`): one linear trend per axis. The
+    /// default — exactly the "cheap incremental model" regime, and its
+    /// ranking is provably monotone on monotone landscapes.
+    Ridge {
+        /// L2 strength (the default is 1e-2; collinear or constant
+        /// encoded columns are harmless at any λ > 0).
+        lambda: f64,
+    },
+    /// A small random forest (`ml::forest`) for landscapes with
+    /// interactions a line cannot rank. Fit with a fixed internal seed,
+    /// so the strategy stays deterministic.
+    Forest {
+        /// Number of trees (kept small: the surrogate refits per chunk).
+        trees: usize,
+        /// Maximum tree depth.
+        depth: usize,
+    },
+}
+
+/// Surrogate-guided search with an expected-improvement acquisition —
+/// the "learn the design space instead of enumerating it" direction
+/// (GANDSE et al.), kept honest by verification: the surrogate only
+/// *orders* candidates; every reported metric comes from the real
+/// predictor via [`ChunkScorer::score_chunk`].
+///
+/// The candidate pool is the session's seed-stable random stream — the
+/// first `budget` draws are exactly the sequence [`Random`] would score
+/// for the same seed, extended to `pool_factor × budget` draws. The
+/// first [`SurrogateEI::init`] draws are scored in draw order (the
+/// initial design); from then on the strategy refits the surrogate on
+/// everything scored so far, ranks the untried pool by expected
+/// improvement over the best feasible objective value (ties broken by
+/// draw order), and verifies the top [`SurrogateEI::chunk`] proposals
+/// per round until the budget is spent.
+///
+/// Runs on the calling thread (the refit loop is inherently
+/// sequential), so outcomes are identical for any worker count; budget,
+/// cancellation, progress and rejection telemetry all flow through the
+/// shared scoring core. Fully determined by
+/// `(seed, budget, init, pool_factor, chunk, model)`.
+///
+/// ```
+/// use hypa_dse::dse::{SearchStrategy, SurrogateEI, SurrogateModel};
+/// let mut s = SurrogateEI::new(&[1, 4]);
+/// assert_eq!(s.name(), "surrogate_ei");
+/// // The surrogate is swappable; ridge is the default.
+/// s.model = SurrogateModel::Forest { trees: 16, depth: 6 };
+/// ```
+pub struct SurrogateEI {
+    batches: Vec<usize>,
+    /// Initial design size (scored in draw order before the first
+    /// refit). `None` → `max(budget/4, 2)`, clamped to the budget.
+    pub init: Option<usize>,
+    /// Candidate pool size as a multiple of the budget (default 4). A
+    /// larger pool gives the acquisition more to choose from at zero
+    /// predictor cost; `1` makes the run an EI-ordered permutation of
+    /// the corresponding [`Random`] run.
+    pub pool_factor: usize,
+    /// Proposals verified per refit round (default 8): small enough
+    /// that the surrogate stays current, large enough to amortize the
+    /// refit — and the cancellation granularity, like every chunk size.
+    pub chunk: usize,
+    /// The surrogate to fit (default ridge, λ = 1e-2).
+    pub model: SurrogateModel,
+}
+
+impl SurrogateEI {
+    pub fn new(batches: &[usize]) -> SurrogateEI {
+        SurrogateEI {
+            batches: batches.to_vec(),
+            init: None,
+            pool_factor: 4,
+            chunk: 8,
+            model: SurrogateModel::Ridge { lambda: 1e-2 },
+        }
+    }
+}
+
+impl SearchStrategy for SurrogateEI {
+    fn name(&self) -> &'static str {
+        "surrogate_ei"
+    }
+
+    fn run(&self, ev: &mut Evaluator<'_>) -> Result<Vec<ScoredPoint>> {
+        anyhow::ensure!(!self.batches.is_empty(), "surrogate_ei: empty batch set");
+        anyhow::ensure!(!ev.gpus().is_empty(), "surrogate_ei: empty GPU set");
+        anyhow::ensure!(self.pool_factor >= 1, "surrogate_ei: pool_factor must be >= 1");
+        anyhow::ensure!(self.chunk >= 1, "surrogate_ei: chunk must be >= 1");
+        let budget = ev.take_required_budget("surrogate_ei")?;
+        let mut scored_all: Vec<ScoredPoint> = Vec::with_capacity(budget);
+        if budget == 0 {
+            return Ok(scored_all);
+        }
+        ev.warm(&self.batches)?;
+        let scorer = ev.scorer();
+        let objective = ev.objective();
+        let mut rng = Rng::new(ev.seed());
+        let gpus = scorer.gpus();
+
+        // The pool IS the seed-stable random stream: its first `budget`
+        // draws are exactly what `Random` would score for this seed.
+        let pool: Vec<DesignPoint> = (0..budget * self.pool_factor)
+            .map(|_| random_point(&mut rng, gpus, &self.batches))
+            .collect();
+        let (f_lo, f_span) = freq_envelope(gpus);
+        let feats: Vec<Vec<f64>> = pool
+            .iter()
+            .map(|p| encode_design_point(p, gpus, f_lo, f_span))
+            .collect();
+
+        let mut tried = vec![false; pool.len()];
+        let mut xs: Vec<Vec<f64>> = Vec::with_capacity(budget);
+        let mut ys: Vec<f64> = Vec::with_capacity(budget);
+        let mut best_feasible = f64::INFINITY;
+        let mut record = |idx: usize,
+                          s: ScoredPoint,
+                          tried: &mut Vec<bool>,
+                          xs: &mut Vec<Vec<f64>>,
+                          ys: &mut Vec<f64>,
+                          best_feasible: &mut f64| {
+            tried[idx] = true;
+            xs.push(feats[idx].clone());
+            let key = objective.key(&s);
+            ys.push(key);
+            if s.feasible && key < *best_feasible {
+                *best_feasible = key;
+            }
+            scored_all.push(s);
+        };
+
+        // Initial design: the first `init` draws, in draw order.
+        let init = self.init.unwrap_or((budget / 4).max(2)).clamp(1, budget);
+        let mut at = 0usize;
+        while at < init {
+            let n = (init - at).min(self.chunk);
+            let scored = scorer.score_chunk(&pool[at..at + n])?;
+            for (off, s) in scored.into_iter().enumerate() {
+                record(at + off, s, &mut tried, &mut xs, &mut ys, &mut best_feasible);
+            }
+            at += n;
+        }
+
+        // Refit → rank by expected improvement → verify, until the
+        // budget is spent. The pool is ≥ budget draws, so it can never
+        // run dry before the budget does.
+        let mut evals = init;
+        while evals < budget {
+            let model = fit_surrogate(&self.model, &xs, &ys);
+            // Global residual scale: the uncertainty the acquisition
+            // trades off against predicted mean.
+            let sse: f64 = xs
+                .iter()
+                .zip(&ys)
+                .map(|(x, &y)| {
+                    let e = model.predict_one(x) - y;
+                    e * e
+                })
+                .sum();
+            let sigma = (sse / ys.len() as f64).sqrt();
+            // Improvement reference: best feasible key so far, else the
+            // best raw key (nothing feasible yet — still hunt downhill).
+            let best = if best_feasible.is_finite() {
+                best_feasible
+            } else {
+                ys.iter().cloned().fold(f64::INFINITY, f64::min)
+            };
+            let mut ranked: Vec<(f64, usize)> = (0..pool.len())
+                .filter(|&j| !tried[j])
+                .map(|j| {
+                    let ei = expected_improvement(best, model.predict_one(&feats[j]), sigma);
+                    (if ei.is_finite() { ei } else { f64::NEG_INFINITY }, j)
+                })
+                .collect();
+            // Highest acquisition first; draw order breaks ties, so the
+            // round is a pure function of the fitted surrogate.
+            ranked.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            let take = ranked.len().min(self.chunk).min(budget - evals);
+            anyhow::ensure!(take > 0, "surrogate_ei: candidate pool exhausted");
+            let chosen: Vec<usize> = ranked[..take].iter().map(|&(_, j)| j).collect();
+            let pts: Vec<DesignPoint> = chosen.iter().map(|&j| pool[j].clone()).collect();
+            let scored = scorer.score_chunk(&pts)?;
+            for (&j, s) in chosen.iter().zip(scored) {
+                record(j, s, &mut tried, &mut xs, &mut ys, &mut best_feasible);
+            }
+            evals += take;
+        }
+        Ok(scored_all)
+    }
+}
+
+/// Seeded NSGA-II over the `GPU × quantized frequency × batch` lattice:
+/// evolve the Pareto frontier of **(latency, power,
+/// energy-per-inference)** directly, instead of optimizing one
+/// scalarized objective and re-ranking afterwards.
+///
+/// Classic generational flow (Deb et al.), every draw from one
+/// sequential seed stream: score the initial population, then per
+/// generation select parents by binary tournament on (constrained
+/// nondomination rank, crowding distance), produce offspring by uniform
+/// per-gene crossover and ±1-step lattice mutation, score them as one
+/// chunk, and keep the best `pop` of parents ∪ offspring under
+/// [`fast_nondominated_sort`](pareto::fast_nondominated_sort) +
+/// [`crowding_distances`](pareto::crowding_distances). Constraints use
+/// Deb's rule: feasible beats infeasible, smaller total violation beats
+/// larger, so the population walks *toward* the feasible region instead
+/// of discarding it.
+///
+/// Genes are lattice indices — the frequency axis is quantized to
+/// [`Nsga2::freq_steps`] DVFS steps exactly like [`Grid`]'s
+/// [`DesignSpace`], so on small spaces the recovered frontier is
+/// directly comparable to the exhaustive one. When the whole lattice
+/// fits the population, the initial generation enumerates it in grid
+/// order (full coverage by construction); otherwise it is drawn
+/// uniformly. Every scored individual is charged against the budget,
+/// duplicates included — the honest accounting.
+///
+/// Sequential by design → worker-count invariant; budget, cancellation
+/// (one generation = one chunk), progress and rejection telemetry ride
+/// the shared scoring core. Fully determined by
+/// `(seed, budget, freq_steps, pop, crossover_p, mutation_p)`.
+///
+/// ```
+/// use hypa_dse::dse::{Nsga2, SearchStrategy};
+/// let mut s = Nsga2::new(&[1, 4], 8);
+/// assert_eq!(s.name(), "nsga2");
+/// s.pop = Some(16); // explicit population (default: derived from budget)
+/// ```
+pub struct Nsga2 {
+    batches: Vec<usize>,
+    /// DVFS steps per GPU (the lattice resolution; ≥ 2, like
+    /// [`DesignSpace::grid`]).
+    pub freq_steps: usize,
+    /// Population size. `None` → `clamp(budget/4, 8, 64)` (then clamped
+    /// to the budget) — a function of the budget only, machine-stable.
+    pub pop: Option<usize>,
+    /// Probability a child is bred by uniform crossover rather than
+    /// cloned from its first parent (default 0.9).
+    pub crossover_p: f64,
+    /// Per-gene mutation probability (default 1/3: one expected axis
+    /// move per child, mirroring [`Anneal`]'s one-axis move).
+    pub mutation_p: f64,
+}
+
+impl Nsga2 {
+    pub fn new(batches: &[usize], freq_steps: usize) -> Nsga2 {
+        Nsga2 {
+            batches: batches.to_vec(),
+            freq_steps,
+            pop: None,
+            crossover_p: 0.9,
+            mutation_p: 1.0 / 3.0,
+        }
+    }
+}
+
+/// Lattice genome: indices into (GPU set, per-GPU DVFS table, batch
+/// ladder).
+type Genome = (usize, usize, usize);
+
+impl SearchStrategy for Nsga2 {
+    fn name(&self) -> &'static str {
+        "nsga2"
+    }
+
+    fn run(&self, ev: &mut Evaluator<'_>) -> Result<Vec<ScoredPoint>> {
+        anyhow::ensure!(!self.batches.is_empty(), "nsga2: empty batch set");
+        anyhow::ensure!(!ev.gpus().is_empty(), "nsga2: empty GPU set");
+        anyhow::ensure!(
+            self.freq_steps >= 2,
+            "nsga2: freq_steps must be >= 2 (a DVFS lattice needs both ends)"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.crossover_p) && (0.0..=1.0).contains(&self.mutation_p),
+            "nsga2: crossover_p/mutation_p must be probabilities"
+        );
+        let budget = ev.take_required_budget("nsga2")?;
+        let mut scored_all: Vec<ScoredPoint> = Vec::with_capacity(budget);
+        if budget == 0 {
+            return Ok(scored_all);
+        }
+        ev.warm(&self.batches)?;
+        let scorer = ev.scorer();
+        let constraints = *ev.constraints();
+        let mut rng = Rng::new(ev.seed());
+        let gpus = scorer.gpus();
+        let freqs: Vec<Vec<f64>> = gpus.iter().map(|g| g.dvfs_steps(self.freq_steps)).collect();
+        let nb = self.batches.len();
+        let lattice_len = gpus.len() * self.freq_steps * nb;
+        let pop = self
+            .pop
+            .unwrap_or_else(|| (budget / 4).clamp(8, 64))
+            .clamp(2, budget.max(2));
+        let point_of = |g: &Genome| DesignPoint {
+            gpu: gpus[g.0].name.to_string(),
+            f_mhz: freqs[g.0][g.1],
+            batch: self.batches[g.2],
+        };
+
+        // Initial population: when the whole lattice fits, enumerate it
+        // in grid order (full coverage by construction — the recovered
+        // frontier then provably equals the exhaustive one); otherwise
+        // draw uniformly from the seed stream.
+        let init: Vec<Genome> = if lattice_len <= pop {
+            let mut v = Vec::with_capacity(lattice_len);
+            for gi in 0..gpus.len() {
+                for fi in 0..self.freq_steps {
+                    for bi in 0..nb {
+                        v.push((gi, fi, bi));
+                    }
+                }
+            }
+            v.truncate(budget);
+            v
+        } else {
+            (0..pop.min(budget))
+                .map(|_| (rng.below(gpus.len()), rng.below(self.freq_steps), rng.below(nb)))
+                .collect()
+        };
+        let pts: Vec<DesignPoint> = init.iter().map(&point_of).collect();
+        let scored = scorer.score_chunk(&pts)?;
+        scored_all.extend(scored.iter().cloned());
+        let mut members: Vec<(Genome, ScoredPoint)> = init.into_iter().zip(scored).collect();
+
+        while scored_all.len() < budget {
+            let (rank, crowd) = rank_and_crowd(&members, &constraints);
+            let n_off = pop.min(budget - scored_all.len());
+            let mut offspring: Vec<Genome> = Vec::with_capacity(n_off);
+            for _ in 0..n_off {
+                let pa = members[tournament(&mut rng, &rank, &crowd)].0;
+                let pb = members[tournament(&mut rng, &rank, &crowd)].0;
+                let mut child = if rng.chance(self.crossover_p) {
+                    (
+                        if rng.chance(0.5) { pa.0 } else { pb.0 },
+                        if rng.chance(0.5) { pa.1 } else { pb.1 },
+                        if rng.chance(0.5) { pa.2 } else { pb.2 },
+                    )
+                } else {
+                    pa
+                };
+                if rng.chance(self.mutation_p) {
+                    child.0 = rng.below(gpus.len());
+                }
+                if rng.chance(self.mutation_p) {
+                    child.1 = step_index(child.1, self.freq_steps, &mut rng);
+                }
+                if rng.chance(self.mutation_p) {
+                    child.2 = step_index(child.2, nb, &mut rng);
+                }
+                offspring.push(child);
+            }
+            let pts: Vec<DesignPoint> = offspring.iter().map(&point_of).collect();
+            let scored = scorer.score_chunk(&pts)?;
+            scored_all.extend(scored.iter().cloned());
+            members.extend(offspring.into_iter().zip(scored));
+            members = select_survivors(members, pop, &constraints);
+        }
+        Ok(scored_all)
+    }
+}
+
+/// Fit the configured surrogate on the encoded/scored archive. The
+/// forest uses a fixed internal seed — surrogate fitting never draws
+/// from the session stream, so adding model options cannot shift the
+/// candidate draws.
+fn fit_surrogate(model: &SurrogateModel, xs: &[Vec<f64>], ys: &[f64]) -> Box<dyn Regressor> {
+    let mut m: Box<dyn Regressor> = match *model {
+        SurrogateModel::Ridge { lambda } => Box::new(Ridge::new(lambda)),
+        SurrogateModel::Forest { trees, depth } => Box::new(RandomForest::new(ForestConfig {
+            n_trees: trees.max(1),
+            max_depth: depth.max(1),
+            min_samples_leaf: 1,
+            max_features: None,
+            seed: 0x5EED,
+        })),
+    };
+    m.fit(xs, ys);
+    m
+}
+
+/// Global frequency envelope of a GPU set: `(lo, span)` with span
+/// clamped away from zero, for normalizing `f_mhz` into a unit-ish
+/// surrogate feature.
+fn freq_envelope(gpus: &[GpuSpec]) -> (f64, f64) {
+    let lo = gpus.iter().map(|g| g.min_mhz).fold(f64::INFINITY, f64::min);
+    let hi = gpus.iter().map(|g| g.boost_mhz).fold(f64::NEG_INFINITY, f64::max);
+    (lo, (hi - lo).max(1.0))
+}
+
+/// Encode a design point for the surrogate: GPU one-hot, normalized
+/// frequency, log₂ batch. Cheap, bounded, and computable for a
+/// candidate *before* it is scored — the whole point of the surrogate.
+/// Degenerate columns (single GPU, single batch) are harmless: ridge
+/// z-scoring maps constants to zero.
+fn encode_design_point(p: &DesignPoint, gpus: &[GpuSpec], f_lo: f64, f_span: f64) -> Vec<f64> {
+    let mut x = Vec::with_capacity(gpus.len() + 2);
+    for g in gpus {
+        x.push(if g.name == p.gpu { 1.0 } else { 0.0 });
+    }
+    x.push((p.f_mhz - f_lo) / f_span);
+    x.push((p.batch as f64).log2());
+    x
+}
+
+/// Expected improvement of a candidate with predicted mean `mu` against
+/// the incumbent `best`, under a global uncertainty `sigma` (the
+/// surrogate's training-residual RMSE). Strictly decreasing in `mu` for
+/// any `sigma` — with `sigma → 0` it degrades to plain predicted
+/// improvement, so the ranking never collapses to noise on a perfectly
+/// fit landscape.
+fn expected_improvement(best: f64, mu: f64, sigma: f64) -> f64 {
+    if sigma <= 1e-12 {
+        return best - mu;
+    }
+    let z = (best - mu) / sigma;
+    (best - mu) * normal_cdf(z) + sigma * normal_pdf(z)
+}
+
+fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Abramowitz & Stegun 7.1.26 rational approximation (|ε| < 1.5e-7) —
+/// `f64::erf` is not in stable std, and acquisition ranking needs far
+/// less precision than this provides.
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = ((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t
+        - 0.284_496_736)
+        * t
+        + 0.254_829_592;
+    sign * (1.0 - poly * t * (-x * x).exp())
+}
+
+/// Binary tournament on (nondomination rank, crowding distance): lower
+/// rank wins, then larger crowding, then smaller index (deterministic).
+fn tournament(rng: &mut Rng, rank: &[usize], crowd: &[f64]) -> usize {
+    let n = rank.len();
+    let a = rng.below(n);
+    let b = rng.below(n);
+    if rank[a] != rank[b] {
+        return if rank[a] < rank[b] { a } else { b };
+    }
+    if crowd[a] != crowd[b] {
+        return if crowd[a] > crowd[b] { a } else { b };
+    }
+    a.min(b)
+}
+
+/// Mutate a lattice index by one step up or down, clamped.
+fn step_index(i: usize, len: usize, rng: &mut Rng) -> usize {
+    if len <= 1 {
+        return i;
+    }
+    if rng.chance(0.5) {
+        i.saturating_sub(1)
+    } else {
+        (i + 1).min(len - 1)
+    }
+}
+
+/// Constrained nondomination rank and crowding distance of every
+/// population member.
+fn rank_and_crowd(
+    members: &[(Genome, ScoredPoint)],
+    c: &DseConstraints,
+) -> (Vec<usize>, Vec<f64>) {
+    let n = members.len();
+    let fronts = pareto::fast_nondominated_sort(n, |i, j| {
+        pareto::constrained_dominates(&members[i].1, &members[j].1, c)
+    });
+    let objs: Vec<[f64; 3]> = members.iter().map(|m| pareto::objectives(&m.1)).collect();
+    let mut rank = vec![0usize; n];
+    let mut crowd = vec![0.0f64; n];
+    for (fi, front) in fronts.iter().enumerate() {
+        let d = pareto::crowding_distances(&objs, front);
+        for (pos, &i) in front.iter().enumerate() {
+            rank[i] = fi;
+            crowd[i] = d[pos];
+        }
+    }
+    (rank, crowd)
+}
+
+/// Elitist survivor selection: keep the best `pop` of parents ∪
+/// offspring under (rank, crowding, index) — whole fronts first, the
+/// last partial front truncated by crowding, exactly NSGA-II's
+/// environmental selection.
+fn select_survivors(
+    combined: Vec<(Genome, ScoredPoint)>,
+    pop: usize,
+    c: &DseConstraints,
+) -> Vec<(Genome, ScoredPoint)> {
+    if combined.len() <= pop {
+        return combined;
+    }
+    let (rank, crowd) = rank_and_crowd(&combined, c);
+    let mut idx: Vec<usize> = (0..combined.len()).collect();
+    idx.sort_by(|&a, &b| {
+        rank[a]
+            .cmp(&rank[b])
+            .then_with(|| {
+                crowd[b]
+                    .partial_cmp(&crowd[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then(a.cmp(&b))
+    });
+    idx.truncate(pop);
+    idx.sort_unstable(); // keep survivors in stable population order
+    let mut slots: Vec<Option<(Genome, ScoredPoint)>> = combined.into_iter().map(Some).collect();
+    idx.iter().map(|&i| slots[i].take().expect("unique index")).collect()
 }
 
 /// One uniformly random lattice point.

@@ -19,8 +19,8 @@ use hypa_dse::cnn::zoo;
 use hypa_dse::config::AppConfig;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService, Task};
 use hypa_dse::dse::{
-    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, LocalRestarts,
-    Objective, Random,
+    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, LocalRestarts, Nsga2,
+    Objective, Random, SurrogateEI,
 };
 use hypa_dse::gpu::specs::{by_name, catalog};
 use hypa_dse::ml::datagen::{generate_or_load, DatagenConfig, DEFAULT_DATASET_PATH};
@@ -373,7 +373,8 @@ fn cmd_offload(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Compare random vs local search against the exhaustive grid optimum —
+/// Compare the budgeted strategies (random, local restarts, anneal,
+/// surrogate-guided EI, NSGA-II) against the exhaustive grid optimum —
 /// the paper's §IV future work ("optimization techniques to search for
 /// the best GPGPU ... considering limited power supply and desired
 /// performance").
@@ -418,6 +419,8 @@ fn cmd_search(args: &Args) -> Result<()> {
     let rs = explorer.run(&Random::new(&batches))?;
     let ls = explorer.run(&LocalRestarts::new(&batches))?;
     let an = explorer.run(&Anneal::new(&batches))?;
+    let ei = explorer.run(&SurrogateEI::new(&batches))?;
+    let ga = explorer.run(&Nsga2::new(&batches, cfg.dse_freq_steps.max(2)))?;
 
     // Exhaustive reference on the quantized grid (unbudgeted session).
     let grid = Explorer::new(&net, &predictor)
@@ -451,6 +454,8 @@ fn cmd_search(args: &Args) -> Result<()> {
     show(&rs);
     show(&ls);
     show(&an);
+    show(&ei);
+    show(&ga);
     show(&grid);
     Ok(())
 }
@@ -610,7 +615,8 @@ COMMANDS:
                                                    log, replayed on restart)
   offload   --network N [--bandwidth M] [--rtt MS] local-vs-cloud decision
   search    --network N [--budget B] [--objective O] [--config F]
-                                                   random/local/anneal search vs grid
+                                                   random/local/anneal/surrogate_ei/
+                                                   nsga2 search vs grid
             [--async [--addr HOST:PORT] [--strategy S] [--seed N]]
                                                    submit as a background REST job and poll
   report    --network N [--gpu G] [--json] [--top K] per-layer breakdown

@@ -78,8 +78,8 @@ use crate::cnn::ir::Network;
 use crate::cnn::zoo;
 use crate::coordinator::{Predictor, Task};
 use crate::dse::{
-    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, LocalRestarts,
-    Objective, Random, ScoredPoint,
+    Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, LocalRestarts, Nsga2,
+    Objective, Random, ScoredPoint, SurrogateEI,
 };
 use crate::gpu::specs::by_name;
 use crate::ml::features::N_FEATURES;
@@ -644,6 +644,10 @@ enum StrategySpec {
     Random,
     Local,
     Anneal,
+    SurrogateEI,
+    /// Carries its validated DVFS step count (the lattice resolution the
+    /// genetic search quantizes the frequency axis to).
+    Nsga2(usize),
 }
 
 impl StrategySpec {
@@ -653,6 +657,8 @@ impl StrategySpec {
             StrategySpec::Random => "random",
             StrategySpec::Local => "local",
             StrategySpec::Anneal => "anneal",
+            StrategySpec::SurrogateEI => "surrogate_ei",
+            StrategySpec::Nsga2(_) => "nsga2",
         }
     }
 }
@@ -756,9 +762,21 @@ fn parse_search(j: &Json, cache: &DescriptorCache) -> Result<SearchSpec> {
         "random" => StrategySpec::Random,
         "local" => StrategySpec::Local,
         "anneal" => StrategySpec::Anneal,
+        "surrogate_ei" => StrategySpec::SurrogateEI,
+        "nsga2" => {
+            // The genetic search quantizes the frequency axis to the same
+            // DVFS lattice the grid uses; a lattice needs both ends.
+            let steps = req_usize(j, "freq_steps", 8)?;
+            anyhow::ensure!(
+                (2..=MAX_REST_FREQ_STEPS).contains(&steps),
+                "'freq_steps' must be in 2..={MAX_REST_FREQ_STEPS} for nsga2, got {steps}"
+            );
+            StrategySpec::Nsga2(steps)
+        }
         other => {
             return Err(anyhow!(
-                "unknown strategy '{other}' (one of: grid, random, local, anneal)"
+                "unknown strategy '{other}' (one of: grid, random, local, anneal, \
+                 surrogate_ei, nsga2)"
             ))
         }
     };
@@ -803,6 +821,8 @@ fn run_search(
         StrategySpec::Random => explorer.run(&Random::new(&spec.batches))?,
         StrategySpec::Local => explorer.run(&LocalRestarts::new(&spec.batches))?,
         StrategySpec::Anneal => explorer.run(&Anneal::new(&spec.batches))?,
+        StrategySpec::SurrogateEI => explorer.run(&SurrogateEI::new(&spec.batches))?,
+        StrategySpec::Nsga2(steps) => explorer.run(&Nsga2::new(&spec.batches, *steps))?,
     };
 
     let mut o = Json::obj();
@@ -1203,6 +1223,41 @@ mod tests {
             "{}",
             String::from_utf8_lossy(&body)
         );
+    }
+
+    #[test]
+    fn parse_search_accepts_the_new_strategies_and_rejects_bad_knobs() {
+        // `parse_search` is the single validation path for both search
+        // faces; the predictor check happens before it in the handlers,
+        // so the new strategy rows are pinned here directly.
+        let cache = DescriptorCache::new();
+        for name in ["surrogate_ei", "nsga2"] {
+            let body = format!(r#"{{"network":"lenet5","strategy":"{name}","budget":16}}"#);
+            let spec = parse_search(&Json::parse(&body).unwrap(), &cache).unwrap();
+            assert_eq!(spec.strategy.name(), name);
+            assert_eq!(spec.budget, 16);
+        }
+        // nsga2 validates its lattice resolution: a DVFS lattice needs
+        // both ends, and the shared upper bound still applies.
+        for steps in [1, MAX_REST_FREQ_STEPS + 1] {
+            let body = format!(
+                r#"{{"network":"lenet5","strategy":"nsga2","budget":16,"freq_steps":{steps}}}"#
+            );
+            let err = parse_search(&Json::parse(&body).unwrap(), &cache).unwrap_err();
+            assert!(err.to_string().contains("'freq_steps'"), "{err}");
+        }
+        // surrogate_ei ignores freq_steps (its candidates come from the
+        // continuous random stream) — the knob is not an error there.
+        let body = r#"{"network":"lenet5","strategy":"surrogate_ei","freq_steps":1}"#;
+        assert!(parse_search(&Json::parse(body).unwrap(), &cache).is_ok());
+        // The unknown-strategy message lists all six names.
+        let body = r#"{"network":"lenet5","strategy":"bogus"}"#;
+        let err = parse_search(&Json::parse(body).unwrap(), &cache).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown strategy 'bogus'"), "{msg}");
+        for name in ["grid", "random", "local", "anneal", "surrogate_ei", "nsga2"] {
+            assert!(msg.contains(name), "missing {name} in: {msg}");
+        }
     }
 
     #[test]

@@ -200,10 +200,11 @@ fn search_server() -> (PredictionService, OffloadServer, OffloadClient) {
 
 #[test]
 fn rest_search_random_and_anneal_round_trip() {
-    // Acceptance: POST /v1/search round-trips a budgeted Random and
-    // Anneal run with top-k + telemetry.
+    // Acceptance: POST /v1/search round-trips every budgeted strategy —
+    // Random, Anneal, and the surrogate/genetic searches — with top-k +
+    // telemetry.
     let (_service, _srv, client) = search_server();
-    for strategy in ["random", "anneal"] {
+    for strategy in ["random", "anneal", "surrogate_ei", "nsga2"] {
         let req = format!(
             r#"{{"network":"lenet5","strategy":"{strategy}","budget":24,
                  "batches":[1,2],"seed":9,"objective":"min-edp","top_k":3}}"#
@@ -278,6 +279,13 @@ fn rest_search_reports_infeasible_and_validates_input() {
     // Input validation: each bad body is a 400 with a pointed message.
     for (body, needle) in [
         (r#"{"network":"lenet5","strategy":"nope","budget":8}"#, "unknown strategy"),
+        // The unknown-strategy message enumerates all six names.
+        (r#"{"network":"lenet5","strategy":"nope","budget":8}"#, "nsga2"),
+        (r#"{"network":"lenet5","strategy":"nope","budget":8}"#, "surrogate_ei"),
+        // The genetic lattice needs both DVFS ends, and honors the
+        // shared upper bound.
+        (r#"{"network":"lenet5","strategy":"nsga2","budget":8,"freq_steps":1}"#, "'freq_steps'"),
+        (r#"{"network":"lenet5","strategy":"nsga2","budget":8,"freq_steps":1000}"#, "'freq_steps'"),
         (r#"{"network":"lenet5","strategy":"random","budget":0}"#, "'budget'"),
         (r#"{"network":"lenet5","strategy":"random","budget":999999}"#, "'budget'"),
         (r#"{"network":"lenet5","strategy":"random","budget":8,"batches":[]}"#, "'batches'"),
@@ -313,7 +321,7 @@ fn async_job_result_bit_identical_to_sync_search() {
     // body, a completed async job's `result` is byte-for-byte the JSON
     // the synchronous endpoint answers with.
     let (_service, _srv, client) = search_server();
-    for strategy in ["random", "anneal"] {
+    for strategy in ["random", "anneal", "surrogate_ei", "nsga2"] {
         let req = format!(
             r#"{{"network":"lenet5","strategy":"{strategy}","budget":24,
                  "batches":[1,2],"seed":9,"objective":"min-edp","top_k":3}}"#

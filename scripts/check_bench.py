@@ -61,9 +61,16 @@ ZERO_RATIOS = [
     "score_chunk_allocs",
 ]
 
-# Informational lower-is-better counts: must be present, not gated.
+# Informational ratios: must be present, not gated. Allocation counts
+# are lower-is-better; the strategy-quality ratio is bigger-is-better
+# (Random's best objective / SurrogateEI's best objective at the same
+# budget and seed — >= 1.0 means the surrogate search is at least as
+# good). It stays informational until a real hardware baseline exists
+# to gate against (ROADMAP item 4); the structural quality guarantee is
+# asserted in rust/tests/strategy_quality.rs instead.
 INFO_RATIOS = [
     "feature_vec_allocs_per_point",
+    "strategy_quality_surrogate_vs_random",
 ]
 
 # Stage entries (p50/mean/per_sec records) the tiered engine and the
@@ -75,6 +82,7 @@ REQUIRED_STAGES = [
     "knn_tier_tree8_x256",
     "search_legacy_explore",
     "search_builder_grid",
+    "strategy_quality_at_n",
     "search_sync_rest",
     "search_async_rest",
     "search_async_rest_journal",

@@ -33,6 +33,14 @@ cargo test -q --test integration recovery
 cargo test -q --test integration quota
 cargo test -q --test integration panic
 
+echo "== strategy-quality harness (explicit gates; also in the pass above) =="
+# The search-strategy quality/determinism contract must never be
+# filtered out of a CI run: the six-strategy invariant + determinism
+# matrix, the surrogate-vs-random and nsga2-vs-grid quality claims, and
+# the REST rows for the new strategy names.
+cargo test -q --test strategy_quality
+cargo test -q --test integration rest_search
+
 echo "== cargo test --doc (doc-examples) =="
 cargo test -q --doc
 
