@@ -16,6 +16,19 @@
 //!   direct scan at the large-n cutover point (n=4096, d=16), and the
 //!   opt-in KD-tree vs the norm path in its low-d regime (n=8192, d=8) —
 //!   tier parity asserted before timing;
+//! * the scoring micro-kernels (`ml::kernel`): the active kernel (AVX2
+//!   when the host supports it) vs the forced-scalar reference on a
+//!   1024×64 dot sweep — bitwise parity asserted before timing, ratio
+//!   ~1.0 by construction on hosts without AVX2;
+//! * the norm tier's register tiling (`dot_tile`) vs the per-pair
+//!   untiled schedule on the same staged model — bit-identical by
+//!   contract, asserted before timing;
+//! * the ball-tree tier vs the norm tier in the mid-d band the KD-tree
+//!   cannot serve (n=8192, d=24, k=5) — ball-vs-direct bitwise parity
+//!   asserted before timing;
+//! * the packed level-blocked forest node layout vs the original SoA
+//!   layout on the same forest — bit-identical descent asserted before
+//!   timing;
 //! * feature emission into a flat `FeatureMatrix` vs per-point `Vec`s —
 //!   with a counting global allocator *proving* the flat path performs
 //!   zero per-point heap allocations, and that chunked scoring through
@@ -53,8 +66,9 @@ use hypa_dse::dse::{
     explore_seq, explore_with_cache, Anneal, DescriptorCache, DesignSpace, DseConstraints,
     Explorer, Grid, Objective, Random, SurrogateEI,
 };
-use hypa_dse::ml::batch::{BatchForest, BatchKnn, KnnTier};
+use hypa_dse::ml::batch::{BatchForest, BatchKnn, ForestLayout, KnnTier};
 use hypa_dse::ml::features::{NetDescriptor, N_FEATURES};
+use hypa_dse::ml::kernel::{self, Kernel};
 use hypa_dse::ml::forest::{ForestConfig, RandomForest};
 use hypa_dse::ml::knn::Knn;
 use hypa_dse::ml::matrix::FeatureMatrix;
@@ -285,6 +299,121 @@ fn main() {
     stages.stage(&m_un, B);
     stages.stage(&m_ut, B);
     ratios.set("knn_tree_vs_norm", jnum(tree_ratio));
+
+    println!(
+        "-- scoring micro-kernels: {} vs scalar (1024x64 dot sweep) --",
+        kernel::active().name()
+    );
+    // The primitive the whole scoring core bottoms out in. Bitwise parity
+    // asserted before timing; on a host without AVX2 both sides run the
+    // same scalar loop and the ratio is ~1.0 by construction.
+    let dot_rows: Vec<f64> = (0..1024 * 64).map(|_| rng.f64() * 4.0 - 2.0).collect();
+    let dot_q: Vec<f64> = (0..64).map(|_| rng.f64() * 4.0 - 2.0).collect();
+    for r in dot_rows.chunks_exact(64) {
+        assert_eq!(
+            kernel::dot(kernel::active(), r, &dot_q).to_bits(),
+            kernel::dot(Kernel::Scalar, r, &dot_q).to_bits(),
+            "SIMD dot diverged from the scalar reference"
+        );
+    }
+    let m_ds = bench::bench("dot scalar x1024", budget, || {
+        dot_rows
+            .chunks_exact(64)
+            .map(|r| kernel::dot(Kernel::Scalar, r, &dot_q))
+            .sum::<f64>()
+    });
+    let m_dv = bench::bench("dot simd x1024", budget, || {
+        dot_rows
+            .chunks_exact(64)
+            .map(|r| kernel::dot(kernel::active(), r, &dot_q))
+            .sum::<f64>()
+    });
+    let dot_ratio = m_ds.p50() / m_dv.p50();
+    println!("  speedup ({} vs scalar): {dot_ratio:.2}x\n", kernel::active().name());
+    stages.stage(&m_ds, 1024);
+    stages.stage(&m_dv, 1024);
+    ratios.set("dot_simd_vs_scalar", jnum(dot_ratio));
+
+    println!("-- knn norm tier: register-tiled vs untiled dot schedule (n=4096 d=16) --");
+    // Same staged model, same kernel — only the memory schedule differs,
+    // so predictions must be bit-identical before timing.
+    let k_norm_untiled =
+        BatchKnn::from_model_with_tier(&knn_big, KnnTier::Norm).with_tiling(false);
+    let p_untiled = k_norm_untiled.predict_many(&tq);
+    for i in 0..tq.len() {
+        assert_eq!(
+            p_untiled[i].to_bits(),
+            p_norm[i].to_bits(),
+            "untiled norm schedule diverged at row {i}"
+        );
+    }
+    let m_nu = bench::bench("knn tier norm untiled x256", budget, || {
+        k_norm_untiled.predict_many(&tq)
+    });
+    let tiled_ratio = m_nu.p50() / m_tn.p50();
+    println!("  speedup (tiled vs untiled): {tiled_ratio:.2}x\n");
+    stages.stage(&m_nu, B);
+    ratios.set("knn_tiled_vs_norm", jnum(tiled_ratio));
+
+    println!("-- knn ball tier vs norm in the mid-d band (n=8192 d=24 k=5) --");
+    // The band the KD-tree cannot serve (d > TREE_MAX_DIM) but a metric
+    // tree still prunes. Ball must bit-match the direct oracle; ball vs
+    // norm stays within the norm tier's 1e-9 contract.
+    let (bn, bd) = (8192usize, 24usize);
+    let bx: Vec<Vec<f64>> = (0..bn)
+        .map(|_| (0..bd).map(|_| rng.f64() * 8.0).collect())
+        .collect();
+    let by: Vec<f64> = bx.iter().map(|r| 7.0 * r[0] + r[1] * r[2]).collect();
+    let mut knn_mid = Knn::new(5);
+    knn_mid.fit(&bx, &by);
+    let bq: Vec<Vec<f64>> = (0..B)
+        .map(|_| (0..bd).map(|_| rng.f64() * 8.0).collect())
+        .collect();
+    let b_ball = BatchKnn::from_model_with_tier(&knn_mid, KnnTier::Ball);
+    let b_norm = BatchKnn::from_model_with_tier(&knn_mid, KnnTier::Norm);
+    let pb_direct = BatchKnn::from_model_with_tier(&knn_mid, KnnTier::Direct).predict_many(&bq);
+    let pb_ball = b_ball.predict_many(&bq);
+    for i in 0..bq.len() {
+        assert_eq!(
+            pb_ball[i].to_bits(),
+            pb_direct[i].to_bits(),
+            "ball tier diverged from direct at row {i}"
+        );
+    }
+    let m_bb = bench::bench("knn tier ball24 x256", budget, || b_ball.predict_many(&bq));
+    let m_bn = bench::bench("knn tier norm24 x256", budget, || b_norm.predict_many(&bq));
+    let ball_ratio = m_bn.p50() / m_bb.p50();
+    println!("  speedup (ball vs norm, n=8192 d=24): {ball_ratio:.2}x\n");
+    stages.stage(&m_bb, B);
+    stages.stage(&m_bn, B);
+    ratios.set("knn_ball_vs_norm_mid_d", jnum(ball_ratio));
+
+    println!("-- forest node layout: packed level-blocked vs SoA --");
+    // `staged_forest` descends the packed layout (the default); restage
+    // the same forest on the original SoA pools and assert bit-identical
+    // descent before timing.
+    assert_eq!(staged_forest.layout(), ForestLayout::Packed);
+    let soa_forest = BatchForest::from_forest_with_layout(&forest, ForestLayout::Soa);
+    let pf_packed = staged_forest.predict_many(&queries);
+    let pf_soa = soa_forest.predict_many(&queries);
+    for i in 0..queries.len() {
+        assert_eq!(
+            pf_packed[i].to_bits(),
+            pf_soa[i].to_bits(),
+            "packed forest layout diverged at row {i}"
+        );
+    }
+    let m_fp = bench::bench("forest packed x256", budget, || {
+        staged_forest.predict_many(&queries)
+    });
+    let m_fa = bench::bench("forest soa x256", budget, || {
+        soa_forest.predict_many(&queries)
+    });
+    let layout_ratio = m_fa.p50() / m_fp.p50();
+    println!("  speedup (packed vs SoA): {layout_ratio:.2}x\n");
+    stages.stage(&m_fp, B);
+    stages.stage(&m_fa, B);
+    ratios.set("forest_packed_vs_soa", jnum(layout_ratio));
 
     println!("-- feature emission: flat FeatureMatrix vs per-point Vec --");
     let lenet = hypa_dse::cnn::zoo::lenet5();

@@ -309,6 +309,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let server = OffloadServer::start(&addr, state)?;
     println!("offload REST API listening on http://{}", server.addr);
+    println!(
+        "scoring kernel: {} (override with HYPA_DSE_KERNEL=scalar|avx2|auto)",
+        hypa_dse::ml::kernel::active().name()
+    );
     println!("  GET  /health");
     println!("  POST /v1/offload/decide");
     println!("  POST /v1/predict");

@@ -7,27 +7,43 @@
 //! so a 256-query sweep loads the model state 256 times. The kernels here
 //! restructure the computation around *batches*:
 //!
-//! * [`BatchForest`] — all trees flattened into structure-of-arrays node
-//!   pools (`f64` thresholds, `u32` features/children) with absolute child
-//!   indices and self-looping leaves. Descent is level-wise over a block
-//!   of queries per tree: the tree's SoA arrays stay hot in L1/L2 across
-//!   the whole block, and the 32 independent descent chains per block give
-//!   the CPU memory-level parallelism a single pointer chase cannot.
+//! * [`BatchForest`] — all trees flattened into one node pool with
+//!   absolute child indices and self-looping leaves. The default
+//!   [`ForestLayout::Packed`] stores each node as one 32-byte record
+//!   (threshold, value, feature, children — exactly half a cache line),
+//!   BFS-renumbered per tree so each descent level is contiguous in
+//!   memory; the original [`ForestLayout::Soa`] five-array layout remains
+//!   as the A/B reference. Descent is level-wise over a block of queries
+//!   per tree: the tree's nodes stay hot in L1/L2 across the whole block,
+//!   and the 32 independent descent chains per block give the CPU
+//!   memory-level parallelism a single pointer chase cannot.
 //! * [`BatchKnn`] — the scaled training matrix flattened into one
-//!   contiguous row-major buffer, staged into one of three execution
+//!   contiguous row-major buffer, staged into one of four execution
 //!   *tiers* picked by a data-driven cutover policy ([`knn_tier`]):
 //!   `Direct` (blocked `(a-b)²` accumulation, bit-exact), `Norm` (the
-//!   `|x|² − 2x·q + |q|²` expansion with cached training-row norms and an
-//!   unrolled dot-product core — the default large-n path), and `Tree`
-//!   (an opt-in KD-tree built at staging time for very large, low-d
-//!   training sets). Top-k selection uses `select_nth_unstable_by` (O(n))
-//!   in the scan tiers and a pruned descent in the tree tier.
+//!   `|x|² − 2x·q + |q|²` expansion with cached training-row norms and a
+//!   register-tiled dot-product core from [`crate::ml::kernel`] — the
+//!   default large-n path), `Tree` (an opt-in KD-tree built at staging
+//!   time for very large, *low-d* training sets), and `Ball` (an opt-in
+//!   ball tree for very large *mid-d* training sets, where KD axis
+//!   pruning collapses but metric-ball pruning still bites). Top-k
+//!   selection uses `select_nth_unstable_by` (O(n)) in the scan tiers
+//!   and a pruned descent in the index tiers.
 //!
-//! **Exactness contract:** the forest kernel and the kNN `Direct` and
-//! `Tree` tiers reproduce the scalar paths *bit-for-bit* (asserted by
-//! `rust/tests/batch_parity.rs`; the tree computes each candidate's
-//! distance with the oracle's accumulation order and prunes only on
-//! strict bound violations, so even index tie-breaking is identical).
+//! The innermost FP loops (dot products, pruning bounds) live in
+//! [`crate::ml::kernel`], which dispatches between a portable scalar
+//! implementation and an AVX2 path at *runtime* — every kernel is
+//! bit-identical (see that module's docs), so the tier contracts below
+//! hold on any CPU and under either kernel. The kernel captured at
+//! staging time is observable via [`BatchKnn::kernel`].
+//!
+//! **Exactness contract:** the forest kernel (either layout) and the
+//! kNN `Direct`, `Tree` and `Ball` tiers reproduce the scalar paths
+//! *bit-for-bit* (asserted by `rust/tests/batch_parity.rs` and
+//! `rust/tests/kernel_parity.rs`; the index tiers compute each
+//! candidate's distance with the oracle's accumulation order and prune
+//! only on conservatively-slackened bound violations, so even index
+//! tie-breaking is identical).
 //! The `Norm` tier re-associates arithmetic for speed — it ranks by the
 //! norm expansion, then *re-computes the winners' distances exactly*
 //! before weighting, so predictions stay within 1e-9 relative of the
@@ -59,6 +75,7 @@
 
 use crate::ml::dataset::Scaler;
 use crate::ml::forest::{ForestTensor, RandomForest};
+use crate::ml::kernel::{self, Kernel};
 use crate::ml::knn::Knn;
 use crate::ml::matrix::FeatureMatrix;
 use crate::ml::tree::LEAF;
@@ -89,23 +106,42 @@ pub fn stage_cutover(n_train: usize) -> usize {
 
 /// Training rows below which the norm-expansion tier cannot recoup its
 /// extra selection pass (see [`knn_tier`]).
-const NORM_MIN_TRAIN: usize = 1024;
+///
+/// The tier cutovers below are public so the bench
+/// (`benches/hotpath.rs`) and the recalibration workflow can reference
+/// the live values: re-tuning them is a matter of re-running
+/// `scripts/ci.sh --with-bench` on the enforcing machine, inspecting
+/// the `knn_*_vs_*` ratios around each boundary, and editing the
+/// constant — `scripts/check_bench.py --record-baseline` then pins the
+/// new trajectory (the perf ledger in `docs/ARCHITECTURE.md` tracks
+/// the history).
+pub const NORM_MIN_TRAIN: usize = 1024;
 
 /// Minimum per-query distance work (`n_train × d`) before the
 /// norm-expansion tier wins over the bit-exact direct scan.
-const NORM_MIN_WORK: usize = 32 * 1024;
+pub const NORM_MIN_WORK: usize = 32 * 1024;
 
-/// Training rows below which a KD-tree cannot beat the blocked scans
-/// (descent overhead dominates).
-const TREE_MIN_TRAIN: usize = 4096;
+/// Training rows below which the spatial-index tiers (KD tree, ball
+/// tree) cannot beat the blocked scans (descent overhead dominates).
+pub const TREE_MIN_TRAIN: usize = 4096;
 
-/// Dimensionality ceiling for the KD-tree tier — pruning collapses in
-/// high dimensions (every subtree's bound overlaps the k-th best), so
-/// past this width the scan tiers stay faster.
-const TREE_MAX_DIM: usize = 12;
+/// Dimensionality ceiling for the KD-tree tier — axis pruning collapses
+/// in high dimensions (every subtree's bound overlaps the k-th best),
+/// so past this width the ball tree takes over.
+pub const TREE_MAX_DIM: usize = 12;
+
+/// Dimensionality ceiling for the ball-tree tier. Metric-ball pruning
+/// degrades more gracefully than axis pruning but still drowns past
+/// ~64 dims (ball radii concentrate toward the data diameter); beyond
+/// this width the norm-expansion scan stays faster.
+pub const BALL_MAX_DIM: usize = 64;
 
 /// KD-tree leaf size (rows scanned exhaustively per reached leaf).
 const KDTREE_LEAF: usize = 16;
+
+/// Ball-tree leaf size — coarser than the KD leaf because mid-d leaf
+/// scans amortize better and ball pruning is weaker per node.
+const BALL_LEAF: usize = 32;
 
 /// Which kNN execution path a staged [`BatchKnn`] runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -119,6 +155,12 @@ pub enum KnnTier {
     /// KD-tree descent (opt-in, staged for very large low-d training
     /// sets) — bit-exact vs `Knn::predict_one`.
     Tree,
+    /// Ball-tree descent (opt-in, staged for very large *mid-d*
+    /// training sets where KD axis pruning collapses) — bit-exact vs
+    /// `Knn::predict_one`: leaf candidates use the oracle's accumulation
+    /// order and the pruning bound is conservatively slackened so FP
+    /// rounding can only over-visit, never over-prune.
+    Ball,
 }
 
 /// Data-driven tier cutover for the kNN engine, the staging-time
@@ -129,27 +171,34 @@ pub enum KnnTier {
 ///                 BatchKnn staging (from_model)
 ///                             │
 ///            spatial index opted in on the model
-///            AND n ≥ 4096 AND d ≤ 12 ?          (pruning needs low d)
-///                  │ yes              │ no
-///                  ▼                  ▼
-///             ┌────────┐   n ≥ 1024 AND n·d ≥ 32768 ?
-///             │  TREE  │        │ yes           │ no
-///             └────────┘        ▼               ▼
-///                          ┌────────┐     ┌──────────┐
-///                          │  NORM  │     │  DIRECT  │
-///                          └────────┘     └──────────┘
+///            AND n ≥ 4096 AND 0 < d ≤ 64 ?    (pruning needs bounded d)
+///                  │ yes                     │ no
+///                  ▼                         ▼
+///            d ≤ 12 ?             n ≥ 1024 AND n·d ≥ 32768 ?
+///           │ yes    │ no              │ yes           │ no
+///           ▼        ▼                 ▼               ▼
+///      ┌────────┐ ┌────────┐      ┌────────┐     ┌──────────┐
+///      │  TREE  │ │  BALL  │      │  NORM  │     │  DIRECT  │
+///      └────────┘ └────────┘      └────────┘     └──────────┘
 /// ```
 ///
 /// `Direct` keeps small models bit-exact for free (its blocked scan is
 /// already within noise of the norm path there); `Norm` needs enough
 /// per-query work for the re-association win to dominate its extra
-/// exact re-computation of the k winners; `Tree` must be opted in on
-/// the model ([`Knn::with_spatial_index`]) because its win is
-/// workload-shaped: large n, low d, and queries off the training
-/// manifold degrade it to a scan with descent overhead.
+/// exact re-computation of the k winners; `Tree` and `Ball` must be
+/// opted in on the model ([`Knn::with_spatial_index`]) because their
+/// win is workload-shaped: large n, bounded d, and queries off the
+/// training manifold degrade them to a scan with descent overhead. The
+/// axis-pruned KD tree owns the low-d band (`d ≤` [`TREE_MAX_DIM`]);
+/// the metric-ball tree owns the mid-d band up to [`BALL_MAX_DIM`],
+/// where KD pruning has already collapsed but ball pruning still bites.
 pub fn knn_tier(n_train: usize, d: usize, spatial_index: bool) -> KnnTier {
-    if spatial_index && n_train >= TREE_MIN_TRAIN && d <= TREE_MAX_DIM && d > 0 {
-        KnnTier::Tree
+    if spatial_index && n_train >= TREE_MIN_TRAIN && d <= BALL_MAX_DIM && d > 0 {
+        if d <= TREE_MAX_DIM {
+            KnnTier::Tree
+        } else {
+            KnnTier::Ball
+        }
     } else if n_train >= NORM_MIN_TRAIN && n_train * d >= NORM_MIN_WORK {
         KnnTier::Norm
     } else {
@@ -157,22 +206,138 @@ pub fn knn_tier(n_train: usize, d: usize, spatial_index: bool) -> KnnTier {
     }
 }
 
-/// A trained random forest staged in flat SoA form for batched descent.
+/// Node-pool memory layout of a staged [`BatchForest`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForestLayout {
+    /// One 32-byte record per node (half a cache line), BFS-renumbered
+    /// per tree so each descent level occupies contiguous memory — the
+    /// default: a level-wise sweep touches one dense run of lines
+    /// instead of striding five parallel arrays.
+    Packed,
+    /// The original five-array structure-of-arrays layout, kept as the
+    /// A/B reference for `forest_packed_vs_soa` and the parity suites.
+    Soa,
+}
+
+impl ForestLayout {
+    /// Stable lowercase name for logs and bench output.
+    pub fn name(self) -> &'static str {
+        match self {
+            ForestLayout::Packed => "packed",
+            ForestLayout::Soa => "soa",
+        }
+    }
+}
+
+/// One packed forest node: exactly 32 bytes, so two nodes share a cache
+/// line and a BFS level of w nodes spans ⌈w/2⌉ lines. Leaves self-loop
+/// (`left == right == self`) with `threshold = +inf`.
+#[derive(Debug, Clone, Copy)]
+#[repr(C)]
+struct PackedNode {
+    threshold: f64,
+    value: f64,
+    feature: u32,
+    left: u32,
+    right: u32,
+    _pad: u32,
+}
+
+/// The node pool backing a [`BatchForest`], in one of the two layouts.
+#[derive(Debug, Clone)]
+enum ForestStore {
+    Packed(Vec<PackedNode>),
+    Soa {
+        feature: Vec<u32>,
+        threshold: Vec<f64>,
+        left: Vec<u32>,
+        right: Vec<u32>,
+        value: Vec<f64>,
+    },
+}
+
+/// Uniform node accessors over the two stores; `#[inline(always)]` +
+/// monomorphization keeps the descent loop identical machine code shape
+/// either way, so layout is purely a memory-placement choice.
+trait NodeView {
+    fn feature(&self, at: usize) -> usize;
+    fn threshold(&self, at: usize) -> f64;
+    fn left(&self, at: usize) -> u32;
+    fn right(&self, at: usize) -> u32;
+    fn value(&self, at: usize) -> f64;
+}
+
+impl NodeView for [PackedNode] {
+    #[inline(always)]
+    fn feature(&self, at: usize) -> usize {
+        self[at].feature as usize
+    }
+    #[inline(always)]
+    fn threshold(&self, at: usize) -> f64 {
+        self[at].threshold
+    }
+    #[inline(always)]
+    fn left(&self, at: usize) -> u32 {
+        self[at].left
+    }
+    #[inline(always)]
+    fn right(&self, at: usize) -> u32 {
+        self[at].right
+    }
+    #[inline(always)]
+    fn value(&self, at: usize) -> f64 {
+        self[at].value
+    }
+}
+
+/// The SoA accessor view (borrowed slices of the five arrays).
+struct SoaView<'a> {
+    feature: &'a [u32],
+    threshold: &'a [f64],
+    left: &'a [u32],
+    right: &'a [u32],
+    value: &'a [f64],
+}
+
+impl NodeView for SoaView<'_> {
+    #[inline(always)]
+    fn feature(&self, at: usize) -> usize {
+        self.feature[at] as usize
+    }
+    #[inline(always)]
+    fn threshold(&self, at: usize) -> f64 {
+        self.threshold[at]
+    }
+    #[inline(always)]
+    fn left(&self, at: usize) -> u32 {
+        self.left[at]
+    }
+    #[inline(always)]
+    fn right(&self, at: usize) -> u32 {
+        self.right[at]
+    }
+    #[inline(always)]
+    fn value(&self, at: usize) -> f64 {
+        self.value[at]
+    }
+}
+
+/// A trained random forest staged in flat form for batched descent.
 ///
-/// Node arrays are concatenated across trees with absolute child indices;
+/// Nodes are concatenated across trees with absolute child indices;
 /// leaves self-loop (`left == right == self`) with `threshold = +inf` so a
-/// converged chain stays put. `predict_many` bit-matches
-/// `RandomForest::predict_one` per row.
+/// converged chain stays put. The default [`ForestLayout::Packed`] store
+/// additionally BFS-renumbers each tree so every descent level is a
+/// contiguous memory run (renumbering changes node *addresses*, never
+/// tree structure, descent semantics or value-accumulation order).
+/// `predict_many` bit-matches `RandomForest::predict_one` per row under
+/// either layout.
 #[derive(Debug, Clone)]
 pub struct BatchForest {
     n_trees: usize,
     /// Root node index of each tree (absolute).
     roots: Vec<u32>,
-    feature: Vec<u32>,
-    threshold: Vec<f64>,
-    left: Vec<u32>,
-    right: Vec<u32>,
-    value: Vec<f64>,
+    store: ForestStore,
     /// Upper bound on descent steps (deepest tree).
     max_depth: usize,
     /// Largest feature index any split consults (+1) — queries must be at
@@ -181,49 +346,152 @@ pub struct BatchForest {
 }
 
 impl BatchForest {
-    /// Flatten a fitted forest. Cost is one pass over all nodes; amortize
-    /// it by staging once and predicting many times (the prediction
-    /// service does), or let `RandomForest::predict` build one per batch —
-    /// still profitable beyond a handful of rows.
+    /// Flatten a fitted forest into the default packed layout. Cost is
+    /// one pass over all nodes; amortize it by staging once and
+    /// predicting many times (the prediction service does), or let
+    /// `RandomForest::predict` build one per batch — still profitable
+    /// beyond a handful of rows.
     pub fn from_forest(forest: &RandomForest) -> BatchForest {
+        Self::from_forest_with_layout(forest, ForestLayout::Packed)
+    }
+
+    /// Flatten a fitted forest into an explicit layout — the A/B entry
+    /// point for `benches/hotpath.rs` and the parity suites.
+    pub fn from_forest_with_layout(forest: &RandomForest, layout: ForestLayout) -> BatchForest {
+        match layout {
+            ForestLayout::Packed => Self::stage_packed(forest),
+            ForestLayout::Soa => Self::stage_soa(forest),
+        }
+    }
+
+    fn stage_packed(forest: &RandomForest) -> BatchForest {
         let total: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
-        let mut out = BatchForest {
-            n_trees: forest.trees.len(),
-            roots: Vec::with_capacity(forest.trees.len()),
-            feature: Vec::with_capacity(total),
-            threshold: Vec::with_capacity(total),
-            left: Vec::with_capacity(total),
-            right: Vec::with_capacity(total),
-            value: Vec::with_capacity(total),
-            max_depth: 0,
-            min_width: 1,
-        };
+        let mut nodes: Vec<PackedNode> = Vec::with_capacity(total);
+        let mut roots = Vec::with_capacity(forest.trees.len());
+        let mut max_depth = 0usize;
+        let mut min_width = 1usize;
+        // Scratch reused across trees: BFS order and old→new index map.
+        let mut bfs: Vec<u32> = Vec::new();
+        let mut map: Vec<u32> = Vec::new();
         for tree in &forest.trees {
-            let base = out.feature.len() as u32;
-            out.roots.push(base);
-            out.max_depth = out.max_depth.max(tree.depth());
+            let base = nodes.len() as u32;
+            roots.push(base);
+            max_depth = max_depth.max(tree.depth());
+            if tree.nodes.is_empty() {
+                continue;
+            }
+            // Pass 1 — BFS from the root assigns each node its new
+            // (level-blocked) index: a queue position *is* the new index
+            // offset, so siblings and cousins at one depth are adjacent.
+            bfs.clear();
+            bfs.push(0);
+            map.clear();
+            map.resize(tree.nodes.len(), u32::MAX);
+            map[0] = base;
+            let mut head = 0usize;
+            while head < bfs.len() {
+                let old = bfs[head] as usize;
+                head += 1;
+                let n = &tree.nodes[old];
+                if n.feature != LEAF {
+                    for child in [n.left, n.right] {
+                        map[child as usize] = base + bfs.len() as u32;
+                        bfs.push(child);
+                    }
+                }
+            }
+            // Pass 2 — emit nodes in BFS order with remapped children.
+            for &old in &bfs {
+                let n = &tree.nodes[old as usize];
+                let at = map[old as usize];
+                if n.feature == LEAF {
+                    nodes.push(PackedNode {
+                        threshold: f64::INFINITY,
+                        value: n.value,
+                        feature: 0,
+                        left: at,
+                        right: at,
+                        _pad: 0,
+                    });
+                } else {
+                    min_width = min_width.max(n.feature as usize + 1);
+                    nodes.push(PackedNode {
+                        threshold: n.threshold,
+                        value: n.value,
+                        feature: n.feature,
+                        left: map[n.left as usize],
+                        right: map[n.right as usize],
+                        _pad: 0,
+                    });
+                }
+            }
+        }
+        BatchForest {
+            n_trees: forest.trees.len(),
+            roots,
+            store: ForestStore::Packed(nodes),
+            max_depth,
+            min_width,
+        }
+    }
+
+    fn stage_soa(forest: &RandomForest) -> BatchForest {
+        let total: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut roots = Vec::with_capacity(forest.trees.len());
+        let mut feature = Vec::with_capacity(total);
+        let mut threshold = Vec::with_capacity(total);
+        let mut left = Vec::with_capacity(total);
+        let mut right = Vec::with_capacity(total);
+        let mut value = Vec::with_capacity(total);
+        let mut max_depth = 0usize;
+        let mut min_width = 1usize;
+        for tree in &forest.trees {
+            let base = feature.len() as u32;
+            roots.push(base);
+            max_depth = max_depth.max(tree.depth());
             for (i, n) in tree.nodes.iter().enumerate() {
                 let at = base + i as u32;
                 if n.feature == LEAF {
-                    out.feature.push(0);
-                    out.threshold.push(f64::INFINITY);
-                    out.left.push(at);
-                    out.right.push(at);
+                    feature.push(0);
+                    threshold.push(f64::INFINITY);
+                    left.push(at);
+                    right.push(at);
                 } else {
-                    out.feature.push(n.feature);
-                    out.min_width = out.min_width.max(n.feature as usize + 1);
-                    out.threshold.push(n.threshold);
-                    out.left.push(base + n.left);
-                    out.right.push(base + n.right);
+                    feature.push(n.feature);
+                    min_width = min_width.max(n.feature as usize + 1);
+                    threshold.push(n.threshold);
+                    left.push(base + n.left);
+                    right.push(base + n.right);
                 }
-                out.value.push(n.value);
+                value.push(n.value);
             }
         }
-        out
+        BatchForest {
+            n_trees: forest.trees.len(),
+            roots,
+            store: ForestStore::Soa {
+                feature,
+                threshold,
+                left,
+                right,
+                value,
+            },
+            max_depth,
+            min_width,
+        }
     }
 
     pub fn n_trees(&self) -> usize {
         self.n_trees
+    }
+
+    /// The node-pool layout this staged form descends (introspection à
+    /// la [`BatchKnn::tier`]).
+    pub fn layout(&self) -> ForestLayout {
+        match self.store {
+            ForestStore::Packed(_) => ForestLayout::Packed,
+            ForestStore::Soa { .. } => ForestLayout::Soa,
+        }
     }
 
     /// Minimum query width this forest can consume (largest split feature
@@ -250,9 +518,8 @@ impl BatchForest {
         // Stay serial when already on a pool worker (e.g. inside an
         // `explore` shard) — nested sharding would oversubscribe cores.
         if m.n_rows() >= PAR_MIN && !pool::in_pool_worker() && pool::num_threads() > 1 {
-            let data = m.data();
             return pool::map_range_shards(m.n_rows(), FOREST_BLOCK, pool::num_threads(), |r| {
-                self.predict_rows(&data[r.start * w..r.end * w], w)
+                self.predict_rows(m.rows_slice(r), w)
             })
             .into_iter()
             .flatten()
@@ -278,8 +545,35 @@ impl BatchForest {
         self.predict_rows(m.data(), m.width())
     }
 
-    /// The serial level-wise kernel over a flat `rows × width` slice.
+    /// The serial level-wise kernel over a flat `rows × width` slice:
+    /// monomorphize the descent over the staged store's node view.
     fn predict_rows(&self, data: &[f64], width: usize) -> Vec<f64> {
+        match &self.store {
+            ForestStore::Packed(nodes) => self.descend(nodes.as_slice(), data, width),
+            ForestStore::Soa {
+                feature,
+                threshold,
+                left,
+                right,
+                value,
+            } => self.descend(
+                &SoaView {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                    value,
+                },
+                data,
+                width,
+            ),
+        }
+    }
+
+    /// Level-wise blocked descent — identical control flow and FP
+    /// arithmetic under every [`NodeView`], so layout never changes
+    /// output bits.
+    fn descend<V: NodeView + ?Sized>(&self, view: &V, data: &[f64], width: usize) -> Vec<f64> {
         let n_rows = data.len() / width;
         let mut out = Vec::with_capacity(n_rows);
         let mut idx = [0u32; FOREST_BLOCK];
@@ -293,16 +587,19 @@ impl BatchForest {
                 idx[..bl].fill(root);
                 // Level-wise descent: all chains advance one level per
                 // sweep; leaves self-loop, so convergence = no change.
+                // Under the packed layout every chain's level-L node
+                // lives in one contiguous BFS block, so a sweep touches
+                // a dense run of cache lines.
                 for _ in 0..=self.max_depth {
                     let mut changed = false;
                     for b in 0..bl {
                         let n = idx[b] as usize;
-                        let f = self.feature[n] as usize;
+                        let f = view.feature(n);
                         let v = block[b * width + f];
-                        let next = if v <= self.threshold[n] {
-                            self.left[n]
+                        let next = if v <= view.threshold(n) {
+                            view.left(n)
                         } else {
-                            self.right[n]
+                            view.right(n)
                         };
                         changed |= next != idx[b];
                         idx[b] = next;
@@ -314,7 +611,7 @@ impl BatchForest {
                 // Accumulate in tree order — the exact addition sequence
                 // of the scalar path.
                 for b in 0..bl {
-                    acc[b] += self.value[idx[b] as usize];
+                    acc[b] += view.value(idx[b] as usize);
                 }
             }
             // Division (not multiply-by-reciprocal) keeps bit parity with
@@ -376,8 +673,8 @@ fn cmp_d2_idx(a: &(f64, u32), b: &(f64, u32)) -> std::cmp::Ordering {
 /// bit-exact guarantee in this module — the `Direct` kernel, the KD-tree
 /// leaf scan, the `Norm` tier's exact re-score and its exact-hit
 /// short-circuit — depends on all call sites using precisely this loop.
-/// Do NOT vectorize, unroll, or re-associate it; that is what
-/// [`dot_unrolled`] is for.
+/// Do NOT vectorize, unroll, or re-associate it; the re-associated
+/// fast paths live in [`crate::ml::kernel`].
 #[inline]
 fn d2_exact(a: &[f64], b: &[f64]) -> f64 {
     let mut d2 = 0.0;
@@ -386,31 +683,6 @@ fn d2_exact(a: &[f64], b: &[f64]) -> f64 {
         d2 += diff * diff;
     }
     d2
-}
-
-/// Dot product with four independent accumulators — breaks the serial
-/// FP dependency chain the bit-exact direct kernel must keep, which is
-/// where the norm tier's throughput comes from. Deterministic (fixed
-/// association), but NOT the scalar oracle's accumulation order: norm
-/// tier only. Training norms and query norms are summed by this same
-/// function so an exact training hit cancels `|x|² − 2x·q + |q|²` to
-/// exactly zero.
-#[inline]
-fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
-    let mut acc = [0.0f64; 4];
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
-    for (x, y) in (&mut ca).zip(&mut cb) {
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
-    }
-    let mut tail = 0.0;
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        tail += x * y;
-    }
-    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
 }
 
 /// Insert a candidate into the sorted k-best list (ascending under
@@ -579,16 +851,245 @@ impl KdTree {
     }
 }
 
+#[derive(Debug, Clone)]
+struct BallNode {
+    /// Child node ids, or the `lo..hi` re-ordered row range for leaves.
+    a: u32,
+    b: u32,
+    /// Max distance (not squared) from this node's center to any of its
+    /// points, rounded *up* by the build's conservative inflation.
+    radius: f64,
+    leaf: bool,
+}
+
+/// An exact ball tree over the scaled training matrix (the `Ball`
+/// tier), built once at staging time for the mid-d band where KD axis
+/// pruning collapses (one axis carries ~1/d of the distance, so axis
+/// gaps almost never exceed the k-th best) but whole-metric ball bounds
+/// still do.
+///
+/// Build mirrors the KD tree — median split on the widest-spread axis
+/// under the same `(coordinate, row-index)` total order, points
+/// re-ordered into contiguous per-leaf storage — and additionally
+/// stores each node's center (mean of its points) and covering radius.
+/// Leaf candidates use the scalar oracle's accumulation order
+/// ([`d2_exact`]), and the subtree lower bound `dist(q, center) −
+/// radius` is slackened (radius rounded up at build, bound deflated at
+/// query) so FP rounding can only *over-visit* — the returned neighbour
+/// set, including `(d², row)` tie-breaks, is identical to the
+/// exhaustive scan's on every kernel.
+#[derive(Debug, Clone)]
+struct BallTree {
+    nodes: Vec<BallNode>,
+    /// Node centers, node-major (`nodes.len() × d`).
+    centers: Vec<f64>,
+    /// Re-ordered row-major point storage (leaf ranges are contiguous).
+    pts: Vec<f64>,
+    /// Original training-row index of each re-ordered row.
+    orig: Vec<u32>,
+    root: u32,
+}
+
+/// Relative inflation applied to ball radii at build time and deflation
+/// applied to the pruning bound at query time. Both are ~5 orders of
+/// magnitude above the worst accumulated rounding of the re-associated
+/// center/radius arithmetic at d ≤ [`BALL_MAX_DIM`] (≲ 1e-14 relative),
+/// so the slackened bound is a true lower bound and pruning can never
+/// drop a point the oracle would have kept. Over-visiting a boundary
+/// ball costs only time.
+const BALL_SLACK: f64 = 1e-9;
+
+impl BallTree {
+    /// Build over `n` rows of width `d` (median split on the
+    /// widest-spread axis, leaf size [`BALL_LEAF`]). O(n log n · d).
+    fn build(flat: &[f64], n: usize, d: usize, kern: Kernel) -> BallTree {
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut nodes = Vec::with_capacity(2 * n.div_ceil(BALL_LEAF));
+        let mut centers = Vec::with_capacity(2 * n.div_ceil(BALL_LEAF) * d);
+        let root = Self::build_rec(flat, d, kern, &mut order, 0, &mut nodes, &mut centers);
+        let mut pts = Vec::with_capacity(n * d);
+        for &i in &order {
+            pts.extend_from_slice(&flat[i as usize * d..(i as usize + 1) * d]);
+        }
+        BallTree {
+            nodes,
+            centers,
+            pts,
+            orig: order,
+            root,
+        }
+    }
+
+    fn build_rec(
+        flat: &[f64],
+        d: usize,
+        kern: Kernel,
+        idxs: &mut [u32],
+        offset: usize,
+        nodes: &mut Vec<BallNode>,
+        centers: &mut Vec<f64>,
+    ) -> u32 {
+        // Center = per-axis mean over this subset (accumulated in idxs
+        // order; any deterministic order works — the radius inflation
+        // below absorbs its rounding).
+        let c0 = centers.len();
+        centers.resize(c0 + d, 0.0);
+        for &i in idxs.iter() {
+            let row = &flat[i as usize * d..(i as usize + 1) * d];
+            for (c, v) in centers[c0..c0 + d].iter_mut().zip(row) {
+                *c += v;
+            }
+        }
+        let inv = 1.0 / idxs.len().max(1) as f64;
+        for c in centers[c0..c0 + d].iter_mut() {
+            *c *= inv;
+        }
+        // Covering radius, rounded up: the true center-to-point
+        // distances are computed with the same re-associated kernel the
+        // query side uses, and the (1 + slack) inflation dominates both
+        // sides' rounding.
+        let mut r2max = 0.0f64;
+        for &i in idxs.iter() {
+            let row = &flat[i as usize * d..(i as usize + 1) * d];
+            r2max = r2max.max(kernel::sqdist(kern, row, &centers[c0..c0 + d]));
+        }
+        let radius = r2max.sqrt() * (1.0 + BALL_SLACK);
+        let slot = nodes.len();
+        if idxs.len() <= BALL_LEAF {
+            nodes.push(BallNode {
+                a: offset as u32,
+                b: (offset + idxs.len()) as u32,
+                radius,
+                leaf: true,
+            });
+            return slot as u32;
+        }
+        // Widest-spread axis + median split, exactly the KD build's
+        // deterministic partition (total order under duplicates).
+        let mut axis = 0usize;
+        let mut spread = -1.0f64;
+        for ax in 0..d {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for &i in idxs.iter() {
+                let v = flat[i as usize * d + ax];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if hi - lo > spread {
+                spread = hi - lo;
+                axis = ax;
+            }
+        }
+        let mid = idxs.len() / 2;
+        idxs.select_nth_unstable_by(mid, |&i, &j| {
+            flat[i as usize * d + axis]
+                .partial_cmp(&flat[j as usize * d + axis])
+                .unwrap()
+                .then(i.cmp(&j))
+        });
+        // Placeholder; patched once both children exist.
+        nodes.push(BallNode {
+            a: 0,
+            b: 0,
+            radius,
+            leaf: false,
+        });
+        let (l, r) = idxs.split_at_mut(mid);
+        let a = Self::build_rec(flat, d, kern, l, offset, nodes, centers);
+        let b = Self::build_rec(flat, d, kern, r, offset + mid, nodes, centers);
+        nodes[slot].a = a;
+        nodes[slot].b = b;
+        slot as u32
+    }
+
+    #[inline]
+    fn center(&self, id: u32, d: usize) -> &[f64] {
+        &self.centers[id as usize * d..(id as usize + 1) * d]
+    }
+
+    /// Fill `best` with the k nearest `(d², original row)` of the scaled
+    /// query `q`, sorted ascending under [`cmp_d2_idx`].
+    fn query(&self, d: usize, q: &[f64], k: usize, kern: Kernel, best: &mut Vec<(f64, u32)>) {
+        best.clear();
+        if self.pts.is_empty() || k == 0 {
+            return;
+        }
+        self.search(self.root, d, q, k, kern, best);
+    }
+
+    /// Conservative prune test: skip `id` only when even the slackened
+    /// lower bound on its closest point *strictly* exceeds the k-th
+    /// best. `dc2` is the (re-associated) squared distance from q to the
+    /// node's center.
+    ///
+    /// Why this can never over-prune: the true bound is
+    /// `(true_dc − true_r)²`. The computed `dc2`/radius differ from the
+    /// true values by ≲1e-14 relative at d ≤ 64, the radius is already
+    /// inflated by `1 + BALL_SLACK` at build, and the bound is deflated
+    /// by `1 − BALL_SLACK` here — a combined one-sided margin ~5 orders
+    /// of magnitude wider than the rounding it absorbs. In the
+    /// degenerate regime where `dc ≈ r` (computed `lb` a rounding
+    /// artifact near 0 — e.g. an exact training hit inside a far ball),
+    /// the inflated radius makes the computed `lb` negative, which
+    /// always visits. Equality (`lb² == worst`, a candidate exactly on
+    /// the k-th boundary) also visits, preserving index tie-breaks.
+    #[inline]
+    fn pruned(&self, id: u32, dc2: f64, k: usize, best: &[(f64, u32)]) -> bool {
+        if best.len() < k {
+            return false;
+        }
+        let lb = dc2.sqrt() - self.nodes[id as usize].radius;
+        lb > 0.0 && lb * lb * (1.0 - BALL_SLACK) > best[best.len() - 1].0
+    }
+
+    fn search(
+        &self,
+        id: u32,
+        d: usize,
+        q: &[f64],
+        k: usize,
+        kern: Kernel,
+        best: &mut Vec<(f64, u32)>,
+    ) {
+        let node = &self.nodes[id as usize];
+        if node.leaf {
+            for r in node.a as usize..node.b as usize {
+                let row = &self.pts[r * d..(r + 1) * d];
+                insert_best(best, k, (d2_exact(row, q), self.orig[r]));
+            }
+            return;
+        }
+        // Nearer-center child first: tightens `best` before the far
+        // child's prune test runs.
+        let da = kernel::sqdist(kern, q, self.center(node.a, d));
+        let db = kernel::sqdist(kern, q, self.center(node.b, d));
+        let (near, dnear, far, dfar) = if da <= db {
+            (node.a, da, node.b, db)
+        } else {
+            (node.b, db, node.a, da)
+        };
+        if !self.pruned(near, dnear, k, best) {
+            self.search(near, d, q, k, kern, best);
+        }
+        if !self.pruned(far, dfar, k, best) {
+            self.search(far, d, q, k, kern, best);
+        }
+    }
+}
+
 /// Per-worker scratch for the kNN kernels, recycled through
 /// [`pool::with_scratch`]: one set of block buffers per worker thread
 /// (and per serving thread) instead of one per `predict_*` call.
 #[derive(Default)]
 struct KnnScratch {
-    /// Z-scored query block (`bl × width`).
+    /// Z-scored queries (`bl × width` in the direct tier; the *whole
+    /// call's* rows in the norm tier, which scales and norms every
+    /// query once up front).
     scaled: Vec<f64>,
     /// Distance block (`bl × n_train`).
     dist: Vec<f64>,
-    /// Cached query norms `|q|²` (norm tier, `bl`).
+    /// Cached query norms `|q|²` (norm tier, one per query in the call).
     qnorm: Vec<f64>,
     /// Selection buffer: `(d², training row)` pairs.
     order: Vec<(f64, u32)>,
@@ -609,12 +1110,25 @@ pub struct BatchKnn {
     y: Vec<f64>,
     scaler: Scaler,
     tier: KnnTier,
-    /// Cached `|x|²` per training row (norm tier) — summed by
-    /// [`dot_unrolled`], the same kernel as the query dots, so an exact
-    /// training hit cancels to exactly zero.
+    /// Micro-kernel captured at staging time ([`kernel::active`] unless
+    /// overridden via [`BatchKnn::with_kernel`]). All kernels are
+    /// bit-identical, so this is a throughput choice, not a semantic
+    /// one — but norms, dots and pruning bounds all run on *this*
+    /// kernel so the invariants are self-evident.
+    kernel: Kernel,
+    /// Register-tiled norm-tier scoring (the default). The untiled
+    /// per-pair loop is kept behind [`BatchKnn::with_tiling`] as the
+    /// A/B reference for `knn_tiled_vs_norm`; both produce identical
+    /// bits ([`kernel::dot_tile`]'s contract).
+    tiled: bool,
+    /// Cached `|x|²` per training row (norm tier) — summed by the same
+    /// [`kernel::dot`] as the query dots, so an exact training hit
+    /// cancels `|x|² − 2x·q + |q|²` to exactly zero.
     norms: Vec<f64>,
-    /// Spatial index (tree tier), built once at staging time.
+    /// KD index (tree tier), built once at staging time.
     tree: Option<KdTree>,
+    /// Ball index (ball tier), built once at staging time.
+    ball: Option<BallTree>,
 }
 
 impl BatchKnn {
@@ -633,6 +1147,18 @@ impl BatchKnn {
     /// suites. Degenerate models (no rows or no features) always stage
     /// `Direct`.
     pub fn from_model_with_tier(model: &Knn, tier: KnnTier) -> BatchKnn {
+        Self::stage(model, tier, kernel::active())
+    }
+
+    /// Stage on an explicit tier *and* micro-kernel — the A/B hook the
+    /// kernel-parity suite and bench use to pin `Scalar` against the
+    /// host's fastest kernel in one process. All kernels are
+    /// bit-identical, so this never changes results.
+    pub fn with_kernel(model: &Knn, tier: KnnTier, kern: Kernel) -> BatchKnn {
+        Self::stage(model, tier, kern)
+    }
+
+    fn stage(model: &Knn, tier: KnnTier, kern: Kernel) -> BatchKnn {
         let (x, y) = model.train_matrix();
         let n = x.len();
         let d = if n > 0 { x[0].len() } else { 0 };
@@ -643,11 +1169,14 @@ impl BatchKnn {
             flat.extend_from_slice(row);
         }
         let norms = if tier == KnnTier::Norm {
-            flat.chunks_exact(d).map(|r| dot_unrolled(r, r)).collect()
+            flat.chunks_exact(d)
+                .map(|r| kernel::dot(kern, r, r))
+                .collect()
         } else {
             Vec::new()
         };
         let tree = (tier == KnnTier::Tree).then(|| KdTree::build(&flat, n, d));
+        let ball = (tier == KnnTier::Ball).then(|| BallTree::build(&flat, n, d, kern));
         BatchKnn {
             k: model.k,
             weighted: model.weighted,
@@ -657,14 +1186,31 @@ impl BatchKnn {
             y: y.to_vec(),
             scaler: model.scaler().clone(),
             tier,
+            kernel: kern,
+            tiled: true,
             norms,
             tree,
+            ball,
         }
+    }
+
+    /// Toggle the norm tier's register tiling (default on) — the A/B
+    /// entry for `knn_tiled_vs_norm`; bit-identical either way.
+    pub fn with_tiling(mut self, tiled: bool) -> BatchKnn {
+        self.tiled = tiled;
+        self
     }
 
     /// The execution tier this staged form runs.
     pub fn tier(&self) -> KnnTier {
         self.tier
+    }
+
+    /// The micro-kernel this staged form scores with (introspection à
+    /// la [`BatchKnn::tier`]; surfaces through `KnnExecutable::kernel`
+    /// and `/health`).
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     pub fn n_train_rows(&self) -> usize {
@@ -685,9 +1231,8 @@ impl BatchKnn {
         }
         let w = m.width();
         if m.n_rows() >= PAR_MIN / 2 && !pool::in_pool_worker() && pool::num_threads() > 1 {
-            let data = m.data();
             return pool::map_range_shards(m.n_rows(), KNN_BLOCK, pool::num_threads(), |r| {
-                self.predict_rows(&data[r.start * w..r.end * w], w)
+                self.predict_rows(m.rows_slice(r), w)
             })
             .into_iter()
             .flatten()
@@ -723,6 +1268,9 @@ impl BatchKnn {
             KnnTier::Norm if width == self.d => self.predict_rows_norm(data, width),
             KnnTier::Tree if width == self.d && self.tree.is_some() => {
                 self.predict_rows_tree(data, width)
+            }
+            KnnTier::Ball if width == self.d && self.ball.is_some() => {
+                self.predict_rows_ball(data, width)
             }
             _ => self.predict_rows_direct(data, width),
         }
@@ -769,45 +1317,67 @@ impl BatchKnn {
     }
 
     /// The norm-expansion kernel (the `Norm` tier): distances ranked via
-    /// `|x|² − 2x·q + |q|²` with cached training norms and the unrolled
-    /// dot core, winners re-computed exactly before weighting.
+    /// `|x|² − 2x·q + |q|²` with cached training norms and the
+    /// register-tiled dot core ([`kernel::dot_tile`]), winners
+    /// re-computed exactly before weighting.
     fn predict_rows_norm(&self, data: &[f64], width: usize) -> Vec<f64> {
         let n = self.n;
         let d = self.d;
         let n_rows = data.len() / width;
         let mut out = Vec::with_capacity(n_rows);
         pool::with_scratch(|s: &mut KnnScratch| {
+            // Scale every query and compute every |q|² exactly once per
+            // call, hoisted out of the block/tile loops below (each
+            // value is consumed once per *training row*, so recomputing
+            // per block would redo O(rows × d) work n/BLOCK times).
+            s.scaled.resize(n_rows * width, 0.0);
+            s.qnorm.resize(n_rows, 0.0);
+            for b in 0..n_rows {
+                let q = &data[b * width..(b + 1) * width];
+                let sq = &mut s.scaled[b * width..(b + 1) * width];
+                self.scaler.transform_into(q, sq);
+            }
+            for b in 0..n_rows {
+                let q = &s.scaled[b * width..(b + 1) * width];
+                s.qnorm[b] = kernel::dot(self.kernel, q, q);
+            }
             let block_cap = KNN_BLOCK.min(n_rows);
             s.dist.resize(block_cap * n, 0.0);
-            s.scaled.resize(block_cap * width, 0.0);
-            s.qnorm.resize(block_cap, 0.0);
             let mut row0 = 0usize;
             while row0 < n_rows {
                 let bl = KNN_BLOCK.min(n_rows - row0);
-                for b in 0..bl {
-                    let q = &data[(row0 + b) * width..(row0 + b + 1) * width];
-                    self.scaler
-                        .transform_into(q, &mut s.scaled[b * width..(b + 1) * width]);
-                }
-                for b in 0..bl {
-                    let q = &s.scaled[b * width..(b + 1) * width];
-                    s.qnorm[b] = dot_unrolled(q, q);
-                }
-                // Row-outer / query-inner like the direct kernel, but the
-                // inner product runs on four independent accumulators —
-                // the re-association the bit-exact tier cannot do.
-                for (r, xrow) in self.x.chunks_exact(d).enumerate() {
-                    let xn = self.norms[r];
+                let qs = &s.scaled[row0 * width..(row0 + bl) * width];
+                if self.tiled {
+                    // Register-tiled raw dots (training rows stream
+                    // through cache once per tile, reused from registers
+                    // across TILE_Q queries), then one fused pass turns
+                    // them into clamped expansion distances. Arithmetic
+                    // per (row, query) pair is identical to the untiled
+                    // branch below — tiling is a schedule, not a
+                    // formula.
+                    kernel::dot_tile(self.kernel, &self.x, n, qs, bl, d, &mut s.dist, n);
                     for b in 0..bl {
-                        let q = &s.scaled[b * width..(b + 1) * width];
-                        let dot = dot_unrolled(xrow, q);
-                        // Cancellation can dip a few ulps below zero for
-                        // near-duplicates; distances are non-negative.
-                        s.dist[b * n + r] = (xn - 2.0 * dot + s.qnorm[b]).max(0.0);
+                        let qn = s.qnorm[row0 + b];
+                        for (r, v) in s.dist[b * n..(b + 1) * n].iter_mut().enumerate() {
+                            // Cancellation can dip a few ulps below zero
+                            // for near-duplicates; distances are
+                            // non-negative.
+                            *v = (self.norms[r] - 2.0 * *v + qn).max(0.0);
+                        }
+                    }
+                } else {
+                    // Untiled per-pair reference (A/B for the bench).
+                    for (r, xrow) in self.x.chunks_exact(d).enumerate() {
+                        let xn = self.norms[r];
+                        for b in 0..bl {
+                            let q = &qs[b * width..(b + 1) * width];
+                            let dot = kernel::dot(self.kernel, xrow, q);
+                            s.dist[b * n + r] = (xn - 2.0 * dot + s.qnorm[row0 + b]).max(0.0);
+                        }
                     }
                 }
                 for b in 0..bl {
-                    let q = &s.scaled[b * width..(b + 1) * width];
+                    let q = &qs[b * width..(b + 1) * width];
                     out.push(self.reduce_norm(&s.dist[b * n..b * n + n], q, &mut s.order));
                 }
                 row0 += bl;
@@ -828,6 +1398,25 @@ impl BatchKnn {
             for q in data.chunks_exact(width) {
                 self.scaler.transform_into(q, &mut s.scaled[..width]);
                 tree.query(self.d, &s.scaled[..width], k, &mut s.order);
+                out.push(self.weigh(&s.order));
+            }
+        });
+        out
+    }
+
+    /// The ball-tree kernel (the `Ball` tier): per-query pruned descent
+    /// with conservatively-slackened metric bounds, bit-exact selection
+    /// and weighting.
+    fn predict_rows_ball(&self, data: &[f64], width: usize) -> Vec<f64> {
+        let ball = self.ball.as_ref().expect("ball tier staged without index");
+        let n_rows = data.len() / width;
+        let k = self.k.min(self.n).max(1);
+        let mut out = Vec::with_capacity(n_rows);
+        pool::with_scratch(|s: &mut KnnScratch| {
+            s.scaled.resize(width, 0.0);
+            for q in data.chunks_exact(width) {
+                self.scaler.transform_into(q, &mut s.scaled[..width]);
+                ball.query(self.d, &s.scaled[..width], k, self.kernel, &mut s.order);
                 out.push(self.weigh(&s.order));
             }
         });
@@ -1074,11 +1663,16 @@ mod tests {
         // Enough rows AND enough per-query work → norm expansion.
         assert_eq!(knn_tier(2048, 16, false), KnnTier::Norm);
         assert_eq!(knn_tier(4096, 35, false), KnnTier::Norm);
-        // The KD-tree requires the opt-in, very large n, and low d.
+        // The index tiers require the opt-in and very large n; the KD
+        // tree owns low d, the ball tree the mid-d band.
         assert_eq!(knn_tier(8192, 8, false), KnnTier::Norm);
         assert_eq!(knn_tier(8192, 8, true), KnnTier::Tree);
         assert_eq!(knn_tier(2048, 8, true), KnnTier::Direct); // n too small for tree, n·d too small for norm
-        assert_eq!(knn_tier(8192, 64, true), KnnTier::Norm); // d too high for tree
+        assert_eq!(knn_tier(8192, 13, true), KnnTier::Ball); // just past the KD band
+        assert_eq!(knn_tier(8192, 24, true), KnnTier::Ball);
+        assert_eq!(knn_tier(8192, 64, true), KnnTier::Ball); // ceiling inclusive
+        assert_eq!(knn_tier(8192, 65, true), KnnTier::Norm); // d too high for ball
+        assert_eq!(knn_tier(2048, 24, true), KnnTier::Norm); // n too small for ball
         assert_eq!(knn_tier(0, 0, true), KnnTier::Direct);
     }
 
@@ -1179,6 +1773,126 @@ mod tests {
                 assert_eq!(tp[i], dp[i], "{}: tree != direct at row {i}", m.name());
                 assert_eq!(tp[i], m.predict_one(q), "{}: tree != scalar at row {i}", m.name());
             }
+        }
+    }
+
+    #[test]
+    fn ball_tier_bitmatches_direct_and_scalar() {
+        // Mid-d (past TREE_MAX_DIM) — the band the ball tier owns.
+        let mut rng = Rng::new(404);
+        let (x, y) = data(&mut rng, 600, 20);
+        for model in [Knn::new(3), Knn::new(7), Knn::uniform(5)] {
+            let mut m = model;
+            m.fit(&x, &y);
+            let mut qs: Vec<Vec<f64>> = (0..120)
+                .map(|_| (0..20).map(|_| rng.f64() * 4.0).collect())
+                .collect();
+            qs.extend(x.iter().take(15).cloned()); // exact hits
+            let ball = BatchKnn::from_model_with_tier(&m, KnnTier::Ball);
+            assert_eq!(ball.tier(), KnnTier::Ball);
+            let direct = BatchKnn::from_model_with_tier(&m, KnnTier::Direct);
+            let bp = ball.predict_many(&qs);
+            let dp = direct.predict_many(&qs);
+            for (i, q) in qs.iter().enumerate() {
+                assert_eq!(bp[i], dp[i], "{}: ball != direct at row {i}", m.name());
+                assert_eq!(bp[i], m.predict_one(q), "{}: ball != scalar at row {i}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn ball_tier_duplicate_rows_near_dups_and_k_overflow() {
+        // Duplicate rows force (d², idx) tie-breaks through the pruned
+        // descent, an ulp-level near-duplicate with a divergent target
+        // probes the conservative prune margin (an exact hit inside a
+        // far ball must never be pruned away), and k > n clamps.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..60usize {
+            let row: Vec<f64> = (0..16).map(|j| ((i * (j + 3)) % 17) as f64).collect();
+            x.push(row.clone());
+            x.push(row); // duplicate
+            y.push(i as f64);
+            y.push(i as f64 + 100.0);
+        }
+        let near = {
+            let mut r = x[10].clone();
+            r[3] += f64::EPSILON * r[3].abs().max(1.0);
+            r
+        };
+        x.push(near.clone());
+        y.push(1000.0);
+        for k in [1usize, 3, 500] {
+            let mut m = Knn::new(k);
+            m.fit(&x, &y);
+            let ball = BatchKnn::from_model_with_tier(&m, KnnTier::Ball);
+            let mut qs: Vec<Vec<f64>> = (0..20)
+                .map(|i| (0..16).map(|j| (i * j) as f64 * 0.37).collect())
+                .collect();
+            qs.push(x[10].clone());
+            qs.push(near.clone());
+            let bp = ball.predict_many(&qs);
+            for (i, q) in qs.iter().enumerate() {
+                assert_eq!(bp[i], m.predict_one(q), "k={k} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn norm_tier_tiled_and_untiled_are_bit_identical() {
+        let mut rng = Rng::new(505);
+        let (x, y) = data(&mut rng, 700, 9);
+        let mut m = Knn::new(5);
+        m.fit(&x, &y);
+        let mut qs: Vec<Vec<f64>> = (0..90)
+            .map(|_| (0..9).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        qs.extend(x.iter().take(10).cloned()); // exact hits
+        let tiled = BatchKnn::from_model_with_tier(&m, KnnTier::Norm);
+        let untiled = BatchKnn::from_model_with_tier(&m, KnnTier::Norm).with_tiling(false);
+        assert_eq!(tiled.predict_many(&qs), untiled.predict_many(&qs));
+    }
+
+    #[test]
+    fn staged_kernel_is_observable_and_scalar_forced_matches() {
+        let mut rng = Rng::new(606);
+        let (x, y) = data(&mut rng, 400, 8);
+        let mut m = Knn::new(4);
+        m.fit(&x, &y);
+        let auto = BatchKnn::from_model_with_tier(&m, KnnTier::Norm);
+        assert_eq!(auto.kernel(), crate::ml::kernel::active());
+        // Forcing the scalar kernel is bit-identical (the kernel
+        // module's contract, re-asserted end to end here).
+        let scalar = BatchKnn::with_kernel(&m, KnnTier::Norm, Kernel::Scalar);
+        assert_eq!(scalar.kernel(), Kernel::Scalar);
+        let qs: Vec<Vec<f64>> = (0..60)
+            .map(|_| (0..8).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        assert_eq!(auto.predict_many(&qs), scalar.predict_many(&qs));
+    }
+
+    #[test]
+    fn forest_packed_and_soa_layouts_are_bit_identical() {
+        let mut rng = Rng::new(707);
+        let (x, y) = data(&mut rng, 300, 7);
+        let mut f = RandomForest::new(ForestConfig {
+            n_trees: 12,
+            max_depth: 9,
+            ..Default::default()
+        });
+        f.fit(&x, &y);
+        let packed = BatchForest::from_forest(&f);
+        assert_eq!(packed.layout(), ForestLayout::Packed);
+        let soa = BatchForest::from_forest_with_layout(&f, ForestLayout::Soa);
+        assert_eq!(soa.layout(), ForestLayout::Soa);
+        assert_eq!(packed.min_width(), soa.min_width());
+        let qs: Vec<Vec<f64>> = (0..100)
+            .map(|_| (0..7).map(|_| rng.f64() * 4.0).collect())
+            .collect();
+        let pp = packed.predict_many(&qs);
+        assert_eq!(pp, soa.predict_many(&qs));
+        for (q, p) in qs.iter().zip(&pp) {
+            assert_eq!(*p, f.predict_one(q), "packed != scalar");
         }
     }
 

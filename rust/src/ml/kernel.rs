@@ -1,0 +1,658 @@
+//! Scoring-core micro-kernels: the innermost FP loops of the batched
+//! prediction engine, with an opt-in AVX2 path behind *runtime* CPU
+//! feature detection.
+//!
+//! Every DSE strategy (Grid through SurrogateEI/NSGA-II) and every
+//! `/v1/search` job bottoms out in [`crate::ml::batch`]'s scoring loops,
+//! so this module owns exactly three primitive shapes — dot products
+//! ([`dot`], [`dot_tile`]), squared distances ([`sqdist`]) and scaled
+//! accumulation ([`axpy`]) — and guarantees that every implementation of
+//! each shape is **bit-identical** across kernels. That is a stronger
+//! contract than the usual "within tolerance" SIMD story, and it is what
+//! lets the AVX2 path be a pure drop-in under the `Norm` tier's
+//! exact-hit cancellation invariant (`|x|² − 2x·q + |q|²` must cancel to
+//! exactly `0.0` on an exact training hit; see `ml/batch.rs`).
+//!
+//! # How bit-identity is achieved
+//!
+//! The scalar reference splits a vector into 4-element chunks and gives
+//! lane `j` its own accumulator: lane `j` sums `a[4c+j] * b[4c+j]` over
+//! chunks `c` in increasing order, the sub-4 tail is summed serially,
+//! and the final reduction is `(acc0 + acc2) + (acc1 + acc3) + tail` —
+//! the exact association of the engine's original `dot_unrolled`. The
+//! AVX2 path keeps **one** `__m256d` accumulator and updates it with a
+//! separate multiply and add per chunk (deliberately *not* FMA: fused
+//! multiply-add rounds once where the scalar path rounds twice, which
+//! would break bit parity), so each SIMD lane performs the identical
+//! sequence of rounded operations as the matching scalar lane. The
+//! horizontal reduce then mirrors the scalar reduction order.
+//!
+//! [`dot_tile`] extends the same guarantee to a register-tiled
+//! rows × queries product: each (row, query) pair owns its own 4-lane
+//! accumulator, so tiling changes the *memory* schedule (each loaded row
+//! chunk is reused across [`TILE_Q`] queries) but not any pair's
+//! arithmetic.
+//!
+//! # Selection
+//!
+//! [`active`] picks the process-wide kernel once: `HYPA_DSE_KERNEL`
+//! (`scalar` | `avx2` | `auto`, default `auto`) consulted first, then
+//! `is_x86_feature_detected!("avx2")`. A forced `avx2` on a CPU without
+//! AVX2 (or a non-x86_64 build) degrades to `Scalar` — dispatch is
+//! always runtime-checked, never compile-time-only, so one binary runs
+//! correctly on any host. The staged engines capture the kernel at
+//! staging time and expose it (`BatchKnn::kernel`,
+//! `KnnExecutable::kernel`) the same way tiers are exposed via `tier()`.
+//!
+//! ```
+//! use hypa_dse::ml::kernel::{self, Kernel};
+//!
+//! let a = [0.5, -1.25, 3.0, 2.0, 0.125, 4.0, -2.5, 1.0, 0.75];
+//! let b = [2.0, 0.5, -1.0, 0.25, 8.0, 0.5, -0.125, 3.0, -4.0];
+//! // Whatever `active()` resolves to on this machine, the result is
+//! // bit-identical to the scalar reference.
+//! let scalar = kernel::dot(Kernel::Scalar, &a, &b);
+//! let auto = kernel::dot(kernel::active(), &a, &b);
+//! assert_eq!(scalar.to_bits(), auto.to_bits());
+//! ```
+
+use std::sync::OnceLock;
+
+/// Queries per register tile in [`dot_tile`] (each loaded training-row
+/// chunk is reused this many times from registers).
+pub const TILE_Q: usize = 4;
+
+/// Training rows per register tile in [`dot_tile`].
+pub const TILE_R: usize = 2;
+
+/// Which micro-kernel implementation the scoring core runs.
+///
+/// All variants are bit-identical for every primitive in this module;
+/// the choice only affects throughput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable chunks-of-8 scalar loops (auto-vectorization friendly);
+    /// the reference implementation and the only one available off
+    /// x86_64 or when AVX2 is absent.
+    Scalar,
+    /// `std::arch` AVX2 loops (256-bit lanes, separate mul+add — no FMA,
+    /// see the module docs). Selected only when
+    /// `is_x86_feature_detected!("avx2")` holds at runtime.
+    Avx2,
+}
+
+impl Kernel {
+    /// Stable lowercase name for logs, `/health` and bench output.
+    ///
+    /// ```
+    /// use hypa_dse::ml::kernel::Kernel;
+    /// assert_eq!(Kernel::Scalar.name(), "scalar");
+    /// assert_eq!(Kernel::Avx2.name(), "avx2");
+    /// ```
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True when the AVX2 path can actually run on this host (runtime
+/// detection; always false off x86_64).
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Resolve a kernel request (`HYPA_DSE_KERNEL` value) against the host.
+///
+/// `scalar` forces the reference loops; `avx2` requests SIMD but still
+/// degrades to `Scalar` when the CPU lacks AVX2 (forcing a kernel the
+/// host cannot run would be a crash, not a preference); anything else —
+/// including unset and `auto` — takes the fastest supported kernel.
+fn pick(request: Option<&str>) -> Kernel {
+    match request {
+        Some("scalar") => Kernel::Scalar,
+        _ => {
+            if avx2_available() {
+                Kernel::Avx2
+            } else {
+                Kernel::Scalar
+            }
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+
+/// The process-wide active kernel, resolved once from `HYPA_DSE_KERNEL`
+/// + runtime CPU feature detection (see the module docs). Staged engines
+/// capture this at staging time; callers can always run a *different*
+/// kernel explicitly (the A/B entry the parity suite and bench use).
+pub fn active() -> Kernel {
+    *ACTIVE.get_or_init(|| pick(std::env::var("HYPA_DSE_KERNEL").ok().as_deref()))
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference implementations.
+//
+// `lane_step` / `lane_reduce` pin the association every kernel must
+// reproduce: lane j accumulates elements ≡ j (mod 4) in increasing
+// index order; the reduction is (l0+l2)+(l1+l3)+tail. Do not change
+// either without re-deriving bit parity for every other implementation
+// in this module.
+// ---------------------------------------------------------------------
+
+/// One 4-lane product step at offset `i` (callers guarantee `i+4` fits).
+#[inline(always)]
+fn lane_step(acc: &mut [f64; 4], x: &[f64], y: &[f64], i: usize) {
+    acc[0] += x[i] * y[i];
+    acc[1] += x[i + 1] * y[i + 1];
+    acc[2] += x[i + 2] * y[i + 2];
+    acc[3] += x[i + 3] * y[i + 3];
+}
+
+/// Serial tail from `from` to `n`, then the pinned lane reduction.
+#[inline(always)]
+fn lane_reduce(acc: &[f64; 4], x: &[f64], y: &[f64], from: usize, n: usize) -> f64 {
+    let mut tail = 0.0;
+    for t in from..n {
+        tail += x[t] * y[t];
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Scalar dot product — chunks of 8 (two 4-lane steps) for the
+/// auto-vectorizer, bit-identical to the engine's original 4-accumulator
+/// `dot_unrolled` (same per-lane sequence, same reduction).
+fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i + 8 <= n {
+        lane_step(&mut acc, a, b, i);
+        lane_step(&mut acc, a, b, i + 4);
+        i += 8;
+    }
+    if i + 4 <= n {
+        lane_step(&mut acc, a, b, i);
+        i += 4;
+    }
+    lane_reduce(&acc, a, b, i, n)
+}
+
+/// Scalar squared distance — same 4-lane / chunks-of-8 shape as
+/// [`dot_scalar`], accumulating `(x−y)²` per lane. Deterministic but
+/// re-associated: NOT the oracle's serial order (`d2_exact` in
+/// `ml/batch.rs` keeps that); bounds/pruning arithmetic only.
+fn sqdist_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i + 4 <= n {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+        i += 4;
+    }
+    let mut tail = 0.0;
+    for t in i..n {
+        let d = a[t] - b[t];
+        tail += d * d;
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Scalar `y[i] += alpha * x[i]` (element-wise; every element is
+/// independent, so the SIMD path is trivially bit-identical).
+fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    for i in 0..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Scalar register-tiled rows × queries dot product (see [`dot_tile`]).
+/// Each (row, query) pair owns a 4-lane accumulator, so every output is
+/// bit-identical to `dot_scalar(row, query)`.
+fn dot_tile_scalar(rows: &[f64], nr: usize, qs: &[f64], nq: usize, d: usize, out: &mut [f64], stride: usize) {
+    let mut r = 0;
+    while r + TILE_R <= nr {
+        let x0 = &rows[r * d..(r + 1) * d];
+        let x1 = &rows[(r + 1) * d..(r + 2) * d];
+        let mut q = 0;
+        while q + TILE_Q <= nq {
+            // acc[pair-row][query][lane]
+            let mut acc = [[[0.0f64; 4]; TILE_Q]; TILE_R];
+            let mut i = 0;
+            while i + 4 <= d {
+                for j in 0..TILE_Q {
+                    let qr = &qs[(q + j) * d..(q + j + 1) * d];
+                    lane_step(&mut acc[0][j], x0, qr, i);
+                    lane_step(&mut acc[1][j], x1, qr, i);
+                }
+                i += 4;
+            }
+            for j in 0..TILE_Q {
+                let qr = &qs[(q + j) * d..(q + j + 1) * d];
+                out[(q + j) * stride + r] = lane_reduce(&acc[0][j], x0, qr, i, d);
+                out[(q + j) * stride + r + 1] = lane_reduce(&acc[1][j], x1, qr, i, d);
+            }
+            q += TILE_Q;
+        }
+        while q < nq {
+            let qr = &qs[q * d..(q + 1) * d];
+            out[q * stride + r] = dot_scalar(x0, qr);
+            out[q * stride + r + 1] = dot_scalar(x1, qr);
+            q += 1;
+        }
+        r += TILE_R;
+    }
+    while r < nr {
+        let xr = &rows[r * d..(r + 1) * d];
+        for q in 0..nq {
+            out[q * stride + r] = dot_scalar(xr, &qs[q * d..(q + 1) * d]);
+        }
+        r += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 implementations (x86_64 only; every entry point is reached only
+// after a runtime `is_x86_feature_detected!("avx2")` check).
+//
+// One __m256d accumulator, separate _mm256_mul_pd + _mm256_add_pd per
+// 4-chunk — NOT _mm256_fmadd_pd: FMA's single rounding would break bit
+// parity with the scalar lanes (see the module docs).
+// ---------------------------------------------------------------------
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal reduce in the scalar lane order: `(l0+l2)+(l1+l3)`.
+    #[inline(always)]
+    unsafe fn reduce_lanes(v: __m256d) -> f64 {
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), v);
+        (l[0] + l[2]) + (l[1] + l[3])
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(a.as_ptr().add(i));
+            let y = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(x, y));
+            i += 4;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            tail += a.get_unchecked(i) * b.get_unchecked(i);
+            i += 1;
+        }
+        reduce_lanes(acc) + tail
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(a.as_ptr().add(i));
+            let y = _mm256_loadu_pd(b.as_ptr().add(i));
+            let d = _mm256_sub_pd(x, y);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+            i += 4;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            let d = a.get_unchecked(i) - b.get_unchecked(i);
+            tail += d * d;
+            i += 1;
+        }
+        reduce_lanes(acc) + tail
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len().min(y.len());
+        let av = _mm256_set1_pd(alpha);
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(
+                y.as_mut_ptr().add(i),
+                _mm256_add_pd(yv, _mm256_mul_pd(av, xv)),
+            );
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// Register-tiled rows × queries product: TILE_R row vectors are
+    /// loaded once per 4-chunk and reused across TILE_Q query
+    /// accumulators (8 live accumulators + 6 live loads ≈ 14 of the 16
+    /// ymm registers). Per-pair association identical to `dot`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn dot_tile(
+        rows: &[f64],
+        nr: usize,
+        qs: &[f64],
+        nq: usize,
+        d: usize,
+        out: &mut [f64],
+        stride: usize,
+    ) {
+        let mut r = 0;
+        while r + 2 <= nr {
+            let x0 = rows.as_ptr().add(r * d);
+            let x1 = rows.as_ptr().add((r + 1) * d);
+            let mut q = 0;
+            while q + 4 <= nq {
+                let mut acc = [[_mm256_setzero_pd(); 4]; 2];
+                let mut i = 0;
+                while i + 4 <= d {
+                    let v0 = _mm256_loadu_pd(x0.add(i));
+                    let v1 = _mm256_loadu_pd(x1.add(i));
+                    for j in 0..4 {
+                        let qv = _mm256_loadu_pd(qs.as_ptr().add((q + j) * d + i));
+                        acc[0][j] = _mm256_add_pd(acc[0][j], _mm256_mul_pd(v0, qv));
+                        acc[1][j] = _mm256_add_pd(acc[1][j], _mm256_mul_pd(v1, qv));
+                    }
+                    i += 4;
+                }
+                for j in 0..4 {
+                    let qp = qs.as_ptr().add((q + j) * d);
+                    for (p, xp) in [x0, x1].into_iter().enumerate() {
+                        let mut tail = 0.0;
+                        let mut t = i;
+                        while t < d {
+                            tail += *xp.add(t) * *qp.add(t);
+                            t += 1;
+                        }
+                        out[(q + j) * stride + r + p] = reduce_lanes(acc[p][j]) + tail;
+                    }
+                }
+                q += 4;
+            }
+            while q < nq {
+                let qr = &qs[q * d..(q + 1) * d];
+                out[q * stride + r] = dot(std::slice::from_raw_parts(x0, d), qr);
+                out[q * stride + r + 1] = dot(std::slice::from_raw_parts(x1, d), qr);
+                q += 1;
+            }
+            r += 2;
+        }
+        while r < nr {
+            let xr = &rows[r * d..(r + 1) * d];
+            for q in 0..nq {
+                out[q * stride + r] = dot(xr, &qs[q * d..(q + 1) * d]);
+            }
+            r += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public dispatchers. Each re-checks AVX2 availability (a cached relaxed
+// atomic load inside `is_x86_feature_detected!`) so passing
+// `Kernel::Avx2` on a host without AVX2 runs the scalar loop instead of
+// executing illegal instructions — the enum is data, not a proof.
+// ---------------------------------------------------------------------
+
+/// Dot product of `a·b` over the common prefix (zip-truncated), in the
+/// pinned 4-lane association — bit-identical across kernels.
+///
+/// ```
+/// use hypa_dse::ml::kernel::{self, Kernel};
+/// let a = [1.0, 2.0, 3.0];
+/// let b = [4.0, 5.0, 6.0];
+/// assert_eq!(kernel::dot(Kernel::Scalar, &a, &b), 32.0);
+/// ```
+#[inline]
+pub fn dot(k: Kernel, a: &[f64], b: &[f64]) -> f64 {
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_available() => unsafe { avx2::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Squared Euclidean distance in the pinned 4-lane association —
+/// bit-identical across kernels, but deterministically *re-associated*
+/// relative to the serial oracle: use for bounds and pruning, never for
+/// candidate distances that feed a bit-exact contract.
+///
+/// ```
+/// use hypa_dse::ml::kernel::{self, Kernel};
+/// let a = [0.0, 3.0];
+/// let b = [4.0, 0.0];
+/// assert_eq!(kernel::sqdist(Kernel::Scalar, &a, &b), 25.0);
+/// ```
+#[inline]
+pub fn sqdist(k: Kernel, a: &[f64], b: &[f64]) -> f64 {
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_available() => unsafe { avx2::sqdist(a, b) },
+        _ => sqdist_scalar(a, b),
+    }
+}
+
+/// `y[i] += alpha * x[i]` over the common prefix. Element-wise (one mul,
+/// one add per element) — bit-identical across kernels.
+///
+/// ```
+/// use hypa_dse::ml::kernel::{self, Kernel};
+/// let x = [1.0, 2.0];
+/// let mut y = [10.0, 20.0];
+/// kernel::axpy(Kernel::Scalar, 2.0, &x, &mut y);
+/// assert_eq!(y, [12.0, 24.0]);
+/// ```
+#[inline]
+pub fn axpy(k: Kernel, alpha: f64, x: &[f64], y: &mut [f64]) {
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_available() => unsafe { avx2::axpy(alpha, x, y) },
+        _ => axpy_scalar(alpha, x, y),
+    }
+}
+
+/// Register-tiled batch of dot products: `out[q * stride + r] =
+/// dot(rows[r], qs[q])` for `r < nr`, `q < nq`, rows and queries flat
+/// row-major with width `d`. Tiles [`TILE_R`] rows × [`TILE_Q`] queries
+/// so each training-row load is reused from registers; every output is
+/// bit-identical to the corresponding [`dot`] call on any kernel.
+///
+/// Panics (via slice indexing) if `rows`/`qs`/`out` are smaller than the
+/// `nr`/`nq`/`stride` geometry implies.
+#[inline]
+pub fn dot_tile(
+    k: Kernel,
+    rows: &[f64],
+    nr: usize,
+    qs: &[f64],
+    nq: usize,
+    d: usize,
+    out: &mut [f64],
+    stride: usize,
+) {
+    debug_assert!(rows.len() >= nr * d && qs.len() >= nq * d);
+    debug_assert!(nq == 0 || out.len() >= (nq - 1) * stride + nr);
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_available() => unsafe {
+            avx2::dot_tile(rows, nr, qs, nq, d, out, stride)
+        },
+        _ => dot_tile_scalar(rows, nr, qs, nq, d, out, stride),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The engine's original 4-accumulator dot — the pinned bit-parity
+    /// reference every kernel must reproduce (kept verbatim here so a
+    /// future "optimization" of the scalar path cannot silently move
+    /// the goalposts).
+    fn dot_unrolled_reference(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        let mut ca = a.chunks_exact(4);
+        let mut cb = b.chunks_exact(4);
+        for (x, y) in (&mut ca).zip(&mut cb) {
+            acc[0] += x[0] * y[0];
+            acc[1] += x[1] * y[1];
+            acc[2] += x[2] * y[2];
+            acc[3] += x[3] * y[3];
+        }
+        let mut tail = 0.0;
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            tail += x * y;
+        }
+        (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+    }
+
+    fn vecs(rng: &mut Rng, n: usize) -> (Vec<f64>, Vec<f64>) {
+        // Mixed magnitudes so any re-association would actually change
+        // low-order bits (uniform [0,1) inputs can mask order bugs).
+        let gen = |rng: &mut Rng| {
+            (0..n)
+                .map(|i| (rng.f64() - 0.5) * 10f64.powi((i % 7) as i32 - 3))
+                .collect::<Vec<f64>>()
+        };
+        (gen(rng), gen(rng))
+    }
+
+    #[test]
+    fn scalar_dot_bit_matches_unrolled_reference() {
+        let mut rng = Rng::new(17);
+        for n in 0..70 {
+            let (a, b) = vecs(&mut rng, n);
+            assert_eq!(
+                dot_scalar(&a, &b).to_bits(),
+                dot_unrolled_reference(&a, &b).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_kernels_bit_match_scalar_primitives() {
+        let mut rng = Rng::new(29);
+        for k in [Kernel::Scalar, Kernel::Avx2] {
+            for n in 0..70 {
+                let (a, b) = vecs(&mut rng, n);
+                assert_eq!(
+                    dot(k, &a, &b).to_bits(),
+                    dot_scalar(&a, &b).to_bits(),
+                    "dot {k:?} n={n}"
+                );
+                assert_eq!(
+                    sqdist(k, &a, &b).to_bits(),
+                    sqdist_scalar(&a, &b).to_bits(),
+                    "sqdist {k:?} n={n}"
+                );
+                let mut y1 = b.clone();
+                let mut y2 = b.clone();
+                axpy(k, 1.75, &a, &mut y1);
+                axpy_scalar(1.75, &a, &mut y2);
+                for (v1, v2) in y1.iter().zip(&y2) {
+                    assert_eq!(v1.to_bits(), v2.to_bits(), "axpy {k:?} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_tile_bit_matches_per_pair_dot_at_awkward_geometries() {
+        let mut rng = Rng::new(43);
+        for k in [Kernel::Scalar, Kernel::Avx2] {
+            // Geometry sweep straddles every tile edge: nr odd/even,
+            // nq below/at/above TILE_Q, d across lane boundaries.
+            for &(nr, nq, d) in &[
+                (1usize, 1usize, 1usize),
+                (2, 4, 8),
+                (3, 5, 7),
+                (5, 3, 4),
+                (7, 9, 13),
+                (8, 4, 1),
+                (2, 2, 64),
+                (9, 17, 24),
+            ] {
+                let rows: Vec<f64> = (0..nr * d).map(|_| rng.f64() * 4.0 - 2.0).collect();
+                let qs: Vec<f64> = (0..nq * d).map(|_| rng.f64() * 4.0 - 2.0).collect();
+                // stride > nr exercises the strided-output contract.
+                let stride = nr + 3;
+                let mut out = vec![f64::NAN; nq * stride];
+                dot_tile(k, &rows, nr, &qs, nq, d, &mut out, stride);
+                for q in 0..nq {
+                    for r in 0..nr {
+                        let want = dot(k, &rows[r * d..(r + 1) * d], &qs[q * d..(q + 1) * d]);
+                        assert_eq!(
+                            out[q * stride + r].to_bits(),
+                            want.to_bits(),
+                            "{k:?} nr={nr} nq={nq} d={d} r={r} q={q}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zip_truncation_matches_shorter_operand() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 1.0];
+        for k in [Kernel::Scalar, Kernel::Avx2] {
+            assert_eq!(dot(k, &a, &b), 3.0);
+            assert_eq!(sqdist(k, &a, &b), 1.0);
+            let mut y = [0.0, 0.0];
+            axpy(k, 1.0, &a, &mut y);
+            assert_eq!(y, [1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn active_is_stable_and_forced_avx2_degrades_when_unsupported() {
+        // `active()` is a process-wide constant once resolved.
+        assert_eq!(active(), active());
+        // `pick` honours a scalar force and degrades an impossible
+        // request instead of promising a kernel the host cannot run.
+        assert_eq!(pick(Some("scalar")), Kernel::Scalar);
+        let auto = pick(None);
+        assert_eq!(pick(Some("avx2")), auto);
+        assert_eq!(pick(Some("auto")), auto);
+        if !avx2_available() {
+            assert_eq!(auto, Kernel::Scalar);
+        }
+    }
+}

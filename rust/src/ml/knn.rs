@@ -34,8 +34,9 @@ struct ScalarScratch {
 /// After `fit`, the model lazily caches its staged batch form
 /// ([`BatchKnn`], the flattened O(n_train × d) training matrix staged on
 /// the execution tier [`batch::knn_tier`] picks — direct scan, norm
-/// expansion, or the opt-in KD-tree) so repeated `predict` calls and
-/// re-staging layers never pay the copy again; `fit` (and toggling
+/// expansion, or the opt-in spatial indexes: a KD tree in low d, a ball
+/// tree in the mid-d band) so repeated `predict` calls and re-staging
+/// layers never pay the copy again; `fit` (and toggling
 /// [`Knn::set_spatial_index`]) invalidates the cache. Cloning shares the
 /// cached staged form (it is immutable once built).
 #[derive(Debug, Clone)]
@@ -43,9 +44,9 @@ pub struct Knn {
     pub k: usize,
     /// Inverse-distance weighting (vs uniform).
     pub weighted: bool,
-    /// Opt-in to the KD-tree tier at staging time (the cutover policy
-    /// still requires the training set to qualify — see
-    /// [`batch::knn_tier`]).
+    /// Opt-in to the spatial-index tiers (KD tree low d, ball tree
+    /// mid d) at staging time (the cutover policy still requires the
+    /// training set to qualify — see [`batch::knn_tier`]).
     spatial_index: bool,
     scaler: Option<Scaler>,
     x: Vec<Vec<f64>>, // scaled training features
@@ -80,9 +81,10 @@ impl Knn {
         self
     }
 
-    /// Opt in to (or out of) the KD-tree spatial index for very large
-    /// training sets. Takes effect at the next staging: if a staged form
-    /// is already cached it is invalidated, exactly like a refit.
+    /// Opt in to (or out of) a spatial index (KD tree at d ≤ 12, ball
+    /// tree at 12 < d ≤ 64) for very large training sets. Takes effect
+    /// at the next staging: if a staged form is already cached it is
+    /// invalidated, exactly like a refit.
     pub fn set_spatial_index(&mut self, on: bool) {
         if self.spatial_index != on {
             self.spatial_index = on;
@@ -90,7 +92,7 @@ impl Knn {
         }
     }
 
-    /// Whether the KD-tree tier is opted in (consulted by
+    /// Whether the spatial-index tiers are opted in (consulted by
     /// [`batch::knn_tier`] at staging time).
     pub fn spatial_index(&self) -> bool {
         self.spatial_index
@@ -191,10 +193,10 @@ impl Regressor for Knn {
 
     /// Batched prediction through the *cached* flat-matrix kernel
     /// ([`BatchKnn`]): bit-identical to mapping [`Knn::predict_one`] over
-    /// the rows on the `Direct`/`Tree` tiers, within 1e-9 relative on the
-    /// large-n `Norm` tier ([`batch::knn_tier`]). The staged form (an
-    /// O(n_train × d) flattening, plus the KD-tree when opted in) is
-    /// built at most once per fit; only a first-ever batch smaller than
+    /// the rows on the `Direct`/`Tree`/`Ball` tiers, within 1e-9 relative
+    /// on the large-n `Norm` tier ([`batch::knn_tier`]). The staged form
+    /// (an O(n_train × d) flattening, plus the spatial index when opted
+    /// in) is built at most once per fit; only a first-ever batch smaller than
     /// [`batch::stage_cutover`] takes the scalar path instead of staging.
     fn predict(&self, qs: &[Vec<f64>]) -> Vec<f64> {
         if self.x.is_empty()

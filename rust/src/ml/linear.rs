@@ -4,6 +4,7 @@
 //! the paper's motivation for non-linear models).
 
 use crate::ml::dataset::Scaler;
+use crate::ml::kernel::{self, Kernel};
 use crate::ml::regressor::Regressor;
 
 /// Ridge regression on z-scored features.
@@ -28,8 +29,10 @@ impl Ridge {
 }
 
 /// Solve `A x = b` for symmetric positive-definite `A` via Gaussian
-/// elimination with partial pivoting (d ≤ a few dozen here).
-fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+/// elimination with partial pivoting (d ≤ a few dozen here). Row
+/// elimination runs on [`kernel::axpy`] (`row += (−factor)·pivot_row`,
+/// element-wise — bit-identical to the subtract loop on every kernel).
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>, kern: Kernel) -> Vec<f64> {
     let n = b.len();
     for col in 0..n {
         // Pivot.
@@ -43,14 +46,15 @@ fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
         b.swap(col, piv);
         let diag = a[col][col];
         assert!(diag.abs() > 1e-12, "singular system");
-        for r in col + 1..n {
-            let factor = a[r][col] / diag;
+        let (top, rest) = a.split_at_mut(col + 1);
+        let pivot_row = &top[col];
+        for (off, arow) in rest.iter_mut().enumerate() {
+            let r = col + 1 + off;
+            let factor = arow[col] / diag;
             if factor == 0.0 {
                 continue;
             }
-            for c in col..n {
-                a[r][c] -= factor * a[col][c];
-            }
+            kernel::axpy(kern, -factor, &pivot_row[col..], &mut arow[col..]);
             b[r] -= factor * b[col];
         }
     }
@@ -80,13 +84,15 @@ impl Regressor for Ridge {
         let d = xs[0].len();
 
         // Normal equations on centered targets: (XᵀX + λI) w = Xᵀ(y - ȳ).
+        let kern = kernel::active();
         let y_mean = y.iter().sum::<f64>() / n as f64;
         let mut xtx = vec![vec![0.0; d]; d];
         let mut xty = vec![0.0; d];
         for (row, &target) in xs.iter().zip(y) {
             let t = target - y_mean;
+            // Xᵀ(y-ȳ) accumulates one whole row per sample: an axpy.
+            kernel::axpy(kern, t, row, &mut xty);
             for i in 0..d {
-                xty[i] += row[i] * t;
                 for j in i..d {
                     xtx[i][j] += row[i] * row[j];
                 }
@@ -98,7 +104,7 @@ impl Regressor for Ridge {
             }
             xtx[i][i] += self.lambda.max(1e-9);
         }
-        self.w = solve(xtx, xty);
+        self.w = solve(xtx, xty, kern);
         self.b = y_mean;
         self.scaler = Some(scaler);
     }
@@ -163,8 +169,12 @@ mod tests {
         // [[2,1],[1,3]] x = [3,5] → x = [4/5, 7/5]
         let a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
         let b = vec![3.0, 5.0];
-        let x = solve(a, b);
+        let x = solve(a.clone(), b.clone(), Kernel::Scalar);
         assert!((x[0] - 0.8).abs() < 1e-12);
         assert!((x[1] - 1.4).abs() < 1e-12);
+        // Kernel choice never changes the solution bits.
+        let x2 = solve(a, b, kernel::active());
+        assert_eq!(x[0].to_bits(), x2[0].to_bits());
+        assert_eq!(x[1].to_bits(), x2[1].to_bits());
     }
 }

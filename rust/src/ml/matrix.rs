@@ -89,6 +89,20 @@ impl FeatureMatrix {
         &self.data
     }
 
+    /// Rows `range` as one contiguous flat slice (length
+    /// `range.len() * width`) — the shard entry point the batch kernels
+    /// hand to pool workers. Panics if the range exceeds `n_rows`.
+    ///
+    /// ```
+    /// use hypa_dse::ml::FeatureMatrix;
+    ///
+    /// let m = FeatureMatrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+    /// assert_eq!(m.rows_slice(1..3), &[2.0, 3.0]);
+    /// ```
+    pub fn rows_slice(&self, range: std::ops::Range<usize>) -> &[f64] {
+        &self.data[range.start * self.width..range.end * self.width]
+    }
+
     /// Append a row by copy. Panics if `row.len() != width`.
     pub fn push_row(&mut self, row: &[f64]) {
         assert_eq!(row.len(), self.width, "row width mismatch");
@@ -201,6 +215,21 @@ mod tests {
     #[should_panic(expected = "row width mismatch")]
     fn from_rows_rejects_ragged() {
         FeatureMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0]]);
+    }
+
+    #[test]
+    fn rows_slice_covers_ranges() {
+        let m = FeatureMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m.rows_slice(0..3), m.data());
+        assert_eq!(m.rows_slice(1..2), &[3.0, 4.0]);
+        assert_eq!(m.rows_slice(2..2), &[] as &[f64]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rows_slice_bounds_checked() {
+        let m = FeatureMatrix::from_rows(&[vec![1.0, 2.0]]);
+        let _ = m.rows_slice(0..2);
     }
 
     #[test]

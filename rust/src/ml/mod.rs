@@ -4,15 +4,17 @@
 //! flat [`matrix::FeatureMatrix`] rows on the hot path), [`datagen`]
 //! sweeps the simulator to produce the labelled dataset, [`knn`]/[`tree`]/
 //! [`forest`]/[`linear`] are the model family of §II, [`batch`] holds the
-//! staged batch kernels those models cache after `fit`, [`metrics`]
-//! computes MAPE/R²/RMSE, and [`validate`] implements the
-//! train-many-pick-best methodology of Fig. 1.
+//! staged batch kernels those models cache after `fit` (with the
+//! innermost SIMD/scalar FP loops in [`kernel`]), [`metrics`] computes
+//! MAPE/R²/RMSE, and [`validate`] implements the train-many-pick-best
+//! methodology of Fig. 1.
 
 pub mod batch;
 pub mod dataset;
 pub mod datagen;
 pub mod features;
 pub mod forest;
+pub mod kernel;
 pub mod knn;
 pub mod linear;
 pub mod matrix;
@@ -21,7 +23,8 @@ pub mod regressor;
 pub mod tree;
 pub mod validate;
 
-pub use batch::{knn_tier, BatchForest, BatchKnn, KnnTier};
+pub use batch::{knn_tier, BatchForest, BatchKnn, ForestLayout, KnnTier};
+pub use kernel::Kernel;
 pub use dataset::{Dataset, SampleMeta, Scaler, Target};
 pub use forest::{ForestConfig, ForestTensor, RandomForest};
 pub use knn::Knn;

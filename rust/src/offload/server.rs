@@ -374,6 +374,10 @@ fn health(state: &ServerState) -> Response {
         .set("lag", jnum(state.jobs.journal_lag().unwrap_or(0) as f64));
     o.set("journal", jo);
     o.set("requests", jnum(state.requests.load(Ordering::Relaxed) as f64));
+    // Which scoring micro-kernel this process resolved at startup
+    // (`scalar`/`avx2` — see `crate::ml::kernel::active`): operators can
+    // confirm the SIMD path is live on a host without reading CPU flags.
+    o.set("kernel", jstr(crate::ml::kernel::active().name()));
     Response::json(200, o.to_string())
 }
 
@@ -1049,6 +1053,10 @@ mod tests {
         assert_eq!(j.path(&["workers", "configured"]).unwrap().as_f64(), Some(0.0));
         assert_eq!(j.path(&["workers", "alive"]).unwrap().as_f64(), Some(0.0));
         assert_eq!(j.path(&["journal", "enabled"]), Some(&Json::Bool(false)));
+        assert_eq!(
+            j.get("kernel").unwrap().as_str(),
+            Some(crate::ml::kernel::active().name())
+        );
         for i in 0..2 {
             state
                 .jobs

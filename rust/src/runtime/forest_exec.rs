@@ -1,5 +1,7 @@
 //! Random-forest prediction executable: a trained forest staged into the
-//! SoA batch kernel ([`crate::ml::batch::BatchForest`]).
+//! flat batch kernel ([`crate::ml::batch::BatchForest`], packed
+//! level-blocked node layout by default — observable via
+//! [`ForestExecutable::layout`]).
 //!
 //! Staging validates the AOT shape contract (tree count / node count /
 //! depth / feature width within [`shapes`]) so every staged model remains
@@ -15,7 +17,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::ml::batch::BatchForest;
+use crate::ml::batch::{BatchForest, ForestLayout};
 use crate::ml::forest::RandomForest;
 use crate::ml::matrix::FeatureMatrix;
 use crate::runtime::{shapes, Runtime};
@@ -70,6 +72,13 @@ impl ForestExecutable {
             batch.min_width()
         );
         Ok(ForestExecutable { batch, n_features })
+    }
+
+    /// The node-pool layout the staged kernel descends (introspection à
+    /// la `KnnExecutable::tier`): `packed` (the default 32-byte
+    /// level-blocked records) or `soa` — bit-identical either way.
+    pub fn layout(&self) -> ForestLayout {
+        self.batch.layout()
     }
 
     /// Predict raw feature rows (forests are scale-free: no scaler).

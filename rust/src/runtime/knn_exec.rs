@@ -7,18 +7,22 @@
 //! execution tier [`crate::ml::batch::knn_tier`] selected — no
 //! O(n_train × d) copy if the model was already staged, no index rebuild,
 //! and no restage ever on the serving path); `predict`/`predict_matrix`
-//! scale each query and run the staged tier. The `Direct` and `Tree`
-//! tiers are bit-identical to `Knn::predict_one` per row (asserted by
-//! `rust/tests/runtime_hlo.rs`); the `Norm` tier — selected for large
+//! scale each query and run the staged tier. The `Direct`, `Tree` and
+//! `Ball` tiers are bit-identical to `Knn::predict_one` per row
+//! (asserted by `rust/tests/runtime_hlo.rs` and
+//! `rust/tests/kernel_parity.rs`); the `Norm` tier — selected for large
 //! training sets — is within 1e-9 relative on continuous data
 //! (`rust/tests/knn_tiers.rs`; see the near-tie caveat in the
-//! [`crate::ml::batch`] module docs).
+//! [`crate::ml::batch`] module docs). Both the tier and the active
+//! micro-kernel ([`crate::ml::kernel`]) are observable on the staged
+//! executable ([`KnnExecutable::tier`], [`KnnExecutable::kernel`]).
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::ml::batch::{BatchKnn, KnnTier};
+use crate::ml::kernel::Kernel;
 use crate::ml::knn::Knn;
 use crate::ml::matrix::FeatureMatrix;
 use crate::runtime::{shapes, Runtime};
@@ -60,10 +64,17 @@ impl KnnExecutable {
     }
 
     /// The execution tier the staged kernel runs
-    /// ([`crate::ml::batch::knn_tier`]): `Direct`/`Tree` are bit-exact
-    /// vs the scalar oracle, `Norm` is within 1e-9 relative.
+    /// ([`crate::ml::batch::knn_tier`]): `Direct`/`Tree`/`Ball` are
+    /// bit-exact vs the scalar oracle, `Norm` is within 1e-9 relative.
     pub fn tier(&self) -> KnnTier {
         self.batch.tier()
+    }
+
+    /// The micro-kernel the staged form scores with
+    /// ([`crate::ml::kernel::active`] at staging time) — `scalar` or
+    /// `avx2`; bit-identical either way, observable like the tier.
+    pub fn kernel(&self) -> Kernel {
+        self.batch.kernel()
     }
 
     /// Predict raw (unscaled) feature rows.

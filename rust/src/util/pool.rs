@@ -15,9 +15,11 @@
 //!   execute dynamic-batch flushes concurrently instead of serially on
 //!   the dispatcher thread.
 //! * **Per-worker scratch** ([`with_scratch`]) — type-keyed thread-local
-//!   buffer reuse, so hot loops (chunked DSE scoring, the kNN kernels,
-//!   the REST predict path) clear-and-refill one set of buffers per
-//!   worker instead of reallocating per call.
+//!   buffer reuse, so hot loops (chunked DSE scoring, the kNN kernels —
+//!   including the register-tiled `Norm` distance block and the `Ball`
+//!   tree's best-heap/scaled-query buffers — and the REST predict path)
+//!   clear-and-refill one set of buffers per worker instead of
+//!   reallocating per call.
 //!
 //! Thread count comes from `std::thread::available_parallelism`, capped by
 //! the shard count and overridable with `HYPA_DSE_THREADS` (set it to `1`

@@ -1,0 +1,316 @@
+//! Cross-kernel bit-parity for the scoring core (`ml::kernel` +
+//! `ml::batch`): seeded randomized sweeps asserting that every kernel
+//! configuration — scalar vs AVX2, tiled vs untiled, packed vs SoA
+//! forest layout — is a pure drop-in.
+//!
+//! Contract under test (see `ml/kernel.rs` module docs):
+//!
+//! * the primitive dispatchers (`dot`, `sqdist`, `axpy`, `dot_tile`)
+//!   are **bit-identical** across kernels, and `dot` is bit-identical
+//!   to the engine's original 4-accumulator `dot_unrolled` (pinned
+//!   verbatim below as an external oracle);
+//! * the `Direct`, `Tree` and `Ball` kNN tiers are bit-exact vs the
+//!   scalar oracle `Knn::predict_one` on *any* kernel, including
+//!   tie-breaks on duplicate and ulp-adjacent training rows;
+//! * the `Norm` tier is bit-identical across kernels and across
+//!   tiled/untiled scheduling, within 1e-9 relative of the oracle, and
+//!   exact on exact training hits (the cancellation invariant);
+//! * the packed and SoA forest layouts descend bit-identically.
+//!
+//! On hosts without AVX2 the `Kernel::Avx2` requests degrade to the
+//! scalar loops at dispatch time, so every assertion still runs (and
+//! trivially holds) — `scripts/ci.sh` additionally re-runs this suite
+//! with `HYPA_DSE_KERNEL=scalar` to pin the forced-scalar config.
+
+use hypa_dse::ml::batch::{BatchForest, BatchKnn, ForestLayout, KnnTier};
+use hypa_dse::ml::forest::{ForestConfig, RandomForest};
+use hypa_dse::ml::kernel::{self, Kernel};
+use hypa_dse::ml::knn::Knn;
+use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::util::rng::Rng;
+
+const REL_TOL: f64 = 1e-9;
+
+/// The engine's original 4-accumulator dot product, pinned verbatim from
+/// the pre-kernel `ml/batch.rs` — an oracle *outside* the kernel module,
+/// so a rewrite of the scalar reference cannot silently move its own
+/// goalposts.
+fn dot_unrolled_reference(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Mixed-magnitude vector: seven decades of spread so any re-association
+/// flips low-order bits (uniform [0,1) data can mask ordering bugs).
+fn vec_mixed(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| (rng.f64() - 0.5) * 10f64.powi((i % 7) as i32 - 3))
+        .collect()
+}
+
+/// Training data with a smooth target over mixed-magnitude features.
+fn data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row = vec_mixed(rng, d);
+        let t = 50.0 + 10.0 * row[0] + row[d - 1] * row[d - 1];
+        x.push(row);
+        y.push(t);
+    }
+    (x, y)
+}
+
+/// Off-manifold perturbations plus exact training hits.
+fn queries(rng: &mut Rng, x: &[Vec<f64>], extra: usize) -> Vec<Vec<f64>> {
+    let mut qs: Vec<Vec<f64>> = (0..extra)
+        .map(|_| {
+            let base = &x[rng.below(x.len())];
+            base.iter().map(|v| v + (rng.f64() - 0.5) * 0.1).collect()
+        })
+        .collect();
+    qs.extend(x.iter().take(10).cloned());
+    qs
+}
+
+fn assert_bits(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx} row {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn primitive_dispatchers_bit_match_across_kernels_and_pinned_oracle() {
+    let mut rng = Rng::new(101);
+    // Lengths straddle every chunk boundary (0..70) plus cache-busting
+    // sizes an unrolled loop could mis-handle at the remainder.
+    let lengths: Vec<usize> = (0..70).chain([127, 128, 257, 1001]).collect();
+    for &n in &lengths {
+        let a = vec_mixed(&mut rng, n);
+        let b = vec_mixed(&mut rng, n);
+        let reference = dot_unrolled_reference(&a, &b);
+        for k in [Kernel::Scalar, Kernel::Avx2] {
+            assert_eq!(
+                kernel::dot(k, &a, &b).to_bits(),
+                reference.to_bits(),
+                "dot {k:?} n={n}"
+            );
+            assert_eq!(
+                kernel::sqdist(k, &a, &b).to_bits(),
+                kernel::sqdist(Kernel::Scalar, &a, &b).to_bits(),
+                "sqdist {k:?} n={n}"
+            );
+            let mut y_k = b.clone();
+            let mut y_s = b.clone();
+            kernel::axpy(k, -0.375, &a, &mut y_k);
+            kernel::axpy(Kernel::Scalar, -0.375, &a, &mut y_s);
+            assert_bits(&y_k, &y_s, &format!("axpy {k:?} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn dot_tile_bit_matches_per_pair_dot_randomized_geometries() {
+    let mut rng = Rng::new(211);
+    for trial in 0..40 {
+        let nr = 1 + rng.below(17);
+        let nq = 1 + rng.below(13);
+        let d = 1 + rng.below(40);
+        let stride = nr + rng.below(4);
+        let rows = vec_mixed(&mut rng, nr * d);
+        let qs = vec_mixed(&mut rng, nq * d);
+        for k in [Kernel::Scalar, Kernel::Avx2] {
+            let mut out = vec![f64::NAN; nq * stride];
+            kernel::dot_tile(k, &rows, nr, &qs, nq, d, &mut out, stride);
+            for q in 0..nq {
+                let qv = &qs[q * d..(q + 1) * d];
+                for r in 0..nr {
+                    let want = kernel::dot(Kernel::Scalar, &rows[r * d..(r + 1) * d], qv);
+                    assert_eq!(
+                        out[q * stride + r].to_bits(),
+                        want.to_bits(),
+                        "trial {trial} {k:?} nr={nr} nq={nq} d={d} r={r} q={q}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_tiers_bit_match_oracle_on_every_kernel_across_n_d_k() {
+    // The n × d × k sweep: Direct/Tree/Ball must reproduce the scalar
+    // oracle bit-for-bit on both kernels (d = 1 degenerates the index
+    // splits; k ≥ n forces full-set weighting).
+    let mut rng = Rng::new(307);
+    for &(n, d) in &[(60usize, 1usize), (150, 3), (300, 12), (350, 24), (200, 64)] {
+        let (x, y) = data(&mut rng, n, d);
+        for k in [1usize, 5, n + 10] {
+            for model in [Knn::new(k), Knn::uniform(k)] {
+                let mut m = model;
+                m.fit(&x, &y);
+                let qs = queries(&mut rng, &x, 40);
+                let oracle: Vec<f64> = qs.iter().map(|q| m.predict_one(q)).collect();
+                for tier in [KnnTier::Direct, KnnTier::Tree, KnnTier::Ball] {
+                    for kern in [Kernel::Scalar, Kernel::Avx2] {
+                        let staged = BatchKnn::with_kernel(&m, tier, kern);
+                        assert_eq!(staged.tier(), tier);
+                        assert_eq!(staged.kernel(), kern);
+                        let preds = staged.predict_many(&qs);
+                        assert_bits(
+                            &preds,
+                            &oracle,
+                            &format!("n={n} d={d} k={k} {tier:?}/{kern:?}/{}", m.name()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn norm_tier_kernels_and_tiling_bit_match_each_other_within_tol_of_oracle() {
+    // Norm re-associates (that is the point of the expansion), so the
+    // oracle comparison is tolerance-based — but scalar vs AVX2 and
+    // tiled vs untiled must be *bit*-identical to each other, and exact
+    // training hits must cancel to the exact target.
+    let mut rng = Rng::new(409);
+    for &(n, d) in &[(400usize, 8usize), (300, 24), (200, 64)] {
+        let (x, y) = data(&mut rng, n, d);
+        for (model, weighted) in [(Knn::new(5), true), (Knn::uniform(7), false)] {
+            let mut m = model;
+            m.fit(&x, &y);
+            let qs = queries(&mut rng, &x, 48);
+            let scalar = BatchKnn::with_kernel(&m, KnnTier::Norm, Kernel::Scalar);
+            let avx2 = BatchKnn::with_kernel(&m, KnnTier::Norm, Kernel::Avx2);
+            let p_scalar = scalar.predict_many(&qs);
+            let p_avx2 = avx2.predict_many(&qs);
+            let p_untiled = BatchKnn::with_kernel(&m, KnnTier::Norm, Kernel::Avx2)
+                .with_tiling(false)
+                .predict_many(&qs);
+            let ctx = format!("n={n} d={d} {}", m.name());
+            assert_bits(&p_avx2, &p_scalar, &format!("{ctx} avx2-vs-scalar"));
+            assert_bits(&p_untiled, &p_scalar, &format!("{ctx} untiled-vs-tiled"));
+            for (i, q) in qs.iter().enumerate() {
+                let oracle = m.predict_one(q);
+                let rel = (p_scalar[i] - oracle).abs() / oracle.abs().max(1e-12);
+                assert!(rel <= REL_TOL, "{ctx} row {i}: rel {rel:e}");
+            }
+            // The last 10 queries are exact training rows: for the
+            // weighted model the expansion must cancel to exactly 0.0
+            // and short-circuit to the exact target (uniform averages
+            // k neighbours, so only the tolerance contract applies).
+            if weighted {
+                for (i, q) in qs.iter().enumerate().skip(qs.len() - 10) {
+                    assert_eq!(p_scalar[i], m.predict_one(q), "{ctx} exact hit {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_duplicates_and_ulp_adjacent_rows_all_tiers() {
+    // Duplicate groups (same target within a group) plus one row that is
+    // one ulp away from a group member but carries a far-away target:
+    // the selection tie-breaks of every exact tier must match the oracle
+    // bit-for-bit, and the Norm kernels must stay bit-identical to each
+    // other even when the expansion's cancellation error is the same
+    // order as the true distance.
+    let mut rng = Rng::new(503);
+    let d = 16usize;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..50usize {
+        let row = vec_mixed(&mut rng, d);
+        let t = 10.0 + i as f64;
+        for _ in 0..3 {
+            x.push(row.clone());
+            y.push(t);
+        }
+    }
+    // Ulp-adjacent twin of group 3's row, with a distinct target.
+    let mut twin = x[9].clone();
+    twin[0] += f64::EPSILON * twin[0].abs().max(1.0);
+    x.push(twin.clone());
+    y.push(1000.0);
+
+    let mut qs = queries(&mut rng, &x, 30);
+    qs.push(twin); // exact hit on the ulp-adjacent row
+    qs.push(vec![0.0; d]); // origin: equidistant-ish probe
+
+    for k in [1usize, 3, 500] {
+        for model in [Knn::new(k), Knn::uniform(k)] {
+            let mut m = model;
+            m.fit(&x, &y);
+            let oracle: Vec<f64> = qs.iter().map(|q| m.predict_one(q)).collect();
+            for tier in [KnnTier::Direct, KnnTier::Tree, KnnTier::Ball] {
+                for kern in [Kernel::Scalar, Kernel::Avx2] {
+                    let preds = BatchKnn::with_kernel(&m, tier, kern).predict_many(&qs);
+                    assert_bits(&preds, &oracle, &format!("dup k={k} {tier:?}/{kern:?}"));
+                }
+            }
+            let p_s = BatchKnn::with_kernel(&m, KnnTier::Norm, Kernel::Scalar).predict_many(&qs);
+            let p_a = BatchKnn::with_kernel(&m, KnnTier::Norm, Kernel::Avx2).predict_many(&qs);
+            assert_bits(&p_a, &p_s, &format!("dup k={k} norm avx2-vs-scalar"));
+        }
+    }
+}
+
+#[test]
+fn forest_layouts_descend_bit_identically() {
+    let mut rng = Rng::new(601);
+    for &(n, d, trees, depth) in &[(300usize, 10usize, 12usize, 6usize), (200, 5, 24, 12)] {
+        let (x, y) = data(&mut rng, n, d);
+        let mut forest = RandomForest::new(ForestConfig {
+            n_trees: trees,
+            max_depth: depth,
+            ..Default::default()
+        });
+        forest.fit(&x, &y);
+        let qs = queries(&mut rng, &x, 100);
+        let packed = BatchForest::from_forest_with_layout(&forest, ForestLayout::Packed);
+        let soa = BatchForest::from_forest_with_layout(&forest, ForestLayout::Soa);
+        assert_eq!(packed.layout(), ForestLayout::Packed);
+        assert_eq!(soa.layout(), ForestLayout::Soa);
+        let p_packed = packed.predict_many(&qs);
+        let p_soa = soa.predict_many(&qs);
+        let oracle: Vec<f64> = qs.iter().map(|q| forest.predict_one(q)).collect();
+        let ctx = format!("forest n={n} d={d} t={trees}");
+        assert_bits(&p_packed, &p_soa, &format!("{ctx} packed-vs-soa"));
+        assert_bits(&p_packed, &oracle, &format!("{ctx} packed-vs-oracle"));
+    }
+}
+
+#[test]
+fn staged_kernel_is_observable_and_defaults_to_active() {
+    let mut rng = Rng::new(701);
+    let (x, y) = data(&mut rng, 120, 6);
+    let mut m = Knn::new(3);
+    m.fit(&x, &y);
+    let auto = BatchKnn::from_model(&m);
+    assert_eq!(auto.kernel(), kernel::active());
+    let forced = BatchKnn::with_kernel(&m, auto.tier(), Kernel::Scalar);
+    assert_eq!(forced.kernel(), Kernel::Scalar);
+    assert_eq!(forced.kernel().name(), "scalar");
+    let qs = queries(&mut rng, &x, 20);
+    assert_bits(
+        &forced.predict_many(&qs),
+        &auto.predict_many(&qs),
+        "forced-scalar vs active",
+    );
+}

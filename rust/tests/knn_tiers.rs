@@ -1,15 +1,18 @@
 //! Tolerance-based parity for the tiered kNN engine
-//! (`ml::batch::KnnTier`): the norm-trick and KD-tree paths vs the
-//! scalar oracle (`Knn::predict_one`), across scaled/unscaled feature
-//! distributions, weighted/uniform models, and tie-heavy datasets.
+//! (`ml::batch::KnnTier`): the norm-trick, KD-tree and ball-tree paths
+//! vs the scalar oracle (`Knn::predict_one`), across scaled/unscaled
+//! feature distributions, weighted/uniform models, and tie-heavy
+//! datasets.
 //!
-//! Contract under test (see `ml/batch.rs` module docs): `Direct` and
-//! `Tree` are bit-exact; `Norm` ranks by the re-associated
+//! Contract under test (see `ml/batch.rs` module docs): `Direct`,
+//! `Tree` and `Ball` are bit-exact; `Norm` ranks by the re-associated
 //! `|x|² − 2x·q + |q|²` expansion but re-computes the winners' distances
 //! exactly, so predictions stay within `REL_TOL` of the oracle — the
 //! only admissible divergence is which member of a near-tie made the
 //! cut, which the tie-heavy suites neutralize by making every tie-break
 //! prediction-equivalent (k covers whole duplicate groups).
+//! (Cross-kernel bit-parity — AVX2 vs scalar, tiled vs untiled — lives
+//! in `rust/tests/kernel_parity.rs`.)
 
 use hypa_dse::ml::batch::{knn_tier, BatchKnn, KnnTier};
 use hypa_dse::ml::knn::Knn;
@@ -88,6 +91,7 @@ fn norm_and_tree_parity_unscaled() {
         let qs = queries(&mut rng, &x, 100);
         check_tier(&m, KnnTier::Norm, &qs, &format!("norm/{}", m.name()));
         check_tier(&m, KnnTier::Tree, &qs, &format!("tree/{}", m.name()));
+        check_tier(&m, KnnTier::Ball, &qs, &format!("ball/{}", m.name()));
     }
 }
 
@@ -101,6 +105,7 @@ fn norm_and_tree_parity_scaled() {
         let qs = queries(&mut rng, &x, 80);
         check_tier(&m, KnnTier::Norm, &qs, &format!("norm/{}", m.name()));
         check_tier(&m, KnnTier::Tree, &qs, &format!("tree/{}", m.name()));
+        check_tier(&m, KnnTier::Ball, &qs, &format!("ball/{}", m.name()));
     }
 }
 
@@ -140,6 +145,7 @@ fn tie_heavy_duplicates_all_tiers() {
             m.fit(&x, &y);
             check_tier(&m, KnnTier::Norm, &qs, &format!("tie-norm/{}", m.name()));
             check_tier(&m, KnnTier::Tree, &qs, &format!("tie-tree/{}", m.name()));
+            check_tier(&m, KnnTier::Ball, &qs, &format!("tie-ball/{}", m.name()));
         }
     }
 }
@@ -155,7 +161,7 @@ fn exact_training_hits_short_circuit_exactly() {
     let mut m = Knn::new(3);
     m.fit(&x, &y);
     let qs: Vec<Vec<f64>> = x.iter().take(40).cloned().collect();
-    for tier in [KnnTier::Direct, KnnTier::Norm, KnnTier::Tree] {
+    for tier in [KnnTier::Direct, KnnTier::Norm, KnnTier::Tree, KnnTier::Ball] {
         let preds = BatchKnn::from_model_with_tier(&m, tier).predict_many(&qs);
         for (i, p) in preds.iter().enumerate() {
             assert_eq!(*p, y[i], "{tier:?} row {i} did not return its target");
@@ -180,6 +186,7 @@ fn k_wider_than_duplicate_groups_and_dataset() {
         let qs = vec![vec![0.4, 0.1], vec![2.0, 2.0], vec![0.0, 0.0]];
         check_tier(&m, KnnTier::Norm, &qs, &format!("k>n norm/{}", m.name()));
         check_tier(&m, KnnTier::Tree, &qs, &format!("k>n tree/{}", m.name()));
+        check_tier(&m, KnnTier::Ball, &qs, &format!("k>n ball/{}", m.name()));
     }
 }
 
@@ -190,7 +197,9 @@ fn default_policy_selects_documented_tiers() {
     assert_eq!(knn_tier(2000, 35, false), KnnTier::Norm);
     assert_eq!(knn_tier(4096, 16, false), KnnTier::Norm);
     assert_eq!(knn_tier(4096, 8, true), KnnTier::Tree);
-    assert_eq!(knn_tier(4096, 16, true), KnnTier::Norm); // d too high for tree
+    assert_eq!(knn_tier(4096, 16, true), KnnTier::Ball); // d too high for KD, mid-d ball band
+    assert_eq!(knn_tier(4096, 64, true), KnnTier::Ball); // ball ceiling is inclusive
+    assert_eq!(knn_tier(4096, 65, true), KnnTier::Norm); // past the ball band
     assert_eq!(knn_tier(1024, 32, false), KnnTier::Norm);
     assert_eq!(knn_tier(1023, 64, false), KnnTier::Direct);
 }

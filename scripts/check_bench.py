@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Gate the hot-path benchmark output.
 
-Usage: check_bench.py BENCH_hotpath.json [baseline.json]
+Usage: check_bench.py [--record-baseline] BENCH_hotpath.json [baseline.json]
 
 Asserts that every required stage and ratio is present in the bench JSON
 (so a refactor cannot silently drop a measurement), then compares the
@@ -12,6 +12,13 @@ The baseline is self-recording: on the first run (no baseline file yet)
 the current ratios are written as the baseline and the gate passes.
 Machines differ, so the baseline should always be (re-)recorded on the
 machine that enforces it; the 1.5x headroom absorbs ordinary noise.
+
+`--record-baseline` unconditionally (re)writes the baseline from the
+current run — even when one already exists — then exits without gating.
+Use it after an intentional performance change (a new kernel, a layout
+migration) so the next gated run compares against the new steady state
+instead of failing on an expected shift, and after moving the enforcing
+job to different hardware.
 """
 
 import json
@@ -51,6 +58,21 @@ REQUIRED_RATIOS = [
     # the serving path (~1.0 expected; a fall beyond the 1.5x gate vs
     # the recorded baseline fails the build).
     "search_async_journal_overhead",
+    # The scoring micro-kernels (ml::kernel): active kernel (AVX2 when
+    # the host supports it) vs the forced-scalar reference on the
+    # 1024x64 dot sweep. Bitwise parity is asserted in-bench; on a host
+    # without AVX2 both sides run the same loop and this is ~1.0.
+    "dot_simd_vs_scalar",
+    # Register-tiled vs untiled dot scheduling inside the kNN norm
+    # tier (same staged model, bit-identical predictions in-bench).
+    "knn_tiled_vs_norm",
+    # Ball-tree tier vs the norm tier in the mid-d band the KD-tree
+    # cannot serve (n=8192, d=24, k=5); ball-vs-direct bitwise parity
+    # is asserted in-bench.
+    "knn_ball_vs_norm_mid_d",
+    # Packed level-blocked forest node layout vs the original SoA
+    # pools on the same forest (bit-identical descent in-bench).
+    "forest_packed_vs_soa",
 ]
 
 # Allocation-count keys that must be present AND exactly zero (the
@@ -73,13 +95,20 @@ INFO_RATIOS = [
     "strategy_quality_surrogate_vs_random",
 ]
 
-# Stage entries (p50/mean/per_sec records) the tiered engine and the
-# Explorer-vs-legacy comparison must emit.
+# Stage entries (p50/mean/per_sec records) the tiered engine, the
+# Explorer-vs-legacy comparison and the micro-kernel A/Bs must emit.
 REQUIRED_STAGES = [
     "knn_tier_direct_x256",
     "knn_tier_norm_x256",
     "knn_tier_norm8_x256",
     "knn_tier_tree8_x256",
+    "knn_tier_norm_untiled_x256",
+    "knn_tier_ball24_x256",
+    "knn_tier_norm24_x256",
+    "dot_scalar_x1024",
+    "dot_simd_x1024",
+    "forest_packed_x256",
+    "forest_soa_x256",
     "search_legacy_explore",
     "search_builder_grid",
     "strategy_quality_at_n",
@@ -94,11 +123,26 @@ def fail(msg: str) -> None:
     sys.exit(1)
 
 
+def record(ratios: dict, baseline_path: str) -> None:
+    # Speedup ratios only — allocation counts have their own gate.
+    out = {k: ratios[k] for k in REQUIRED_RATIOS}
+    with open(baseline_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> None:
-    if len(sys.argv) < 2:
-        fail("usage: check_bench.py BENCH_hotpath.json [baseline.json]")
-    bench_path = sys.argv[1]
-    baseline_path = sys.argv[2] if len(sys.argv) > 2 else None
+    args = [a for a in sys.argv[1:] if a != "--record-baseline"]
+    rerecord = len(args) != len(sys.argv) - 1
+    if not args:
+        fail(
+            "usage: check_bench.py [--record-baseline] "
+            "BENCH_hotpath.json [baseline.json]"
+        )
+    bench_path = args[0]
+    baseline_path = args[1] if len(args) > 1 else None
+    if rerecord and baseline_path is None:
+        fail("--record-baseline requires a baseline path to write")
 
     with open(bench_path) as f:
         bench = json.load(f)
@@ -127,15 +171,18 @@ def main() -> None:
 
     if baseline_path is None:
         return
+    if rerecord:
+        record(ratios, baseline_path)
+        print(
+            f"check_bench: re-recorded {baseline_path} from this run "
+            "(--record-baseline); the next gated run compares against it."
+        )
+        return
     try:
         with open(baseline_path) as f:
             baseline = json.load(f)
     except FileNotFoundError:
-        # Speedup ratios only — allocation counts have their own gate.
-        record = {k: ratios[k] for k in REQUIRED_RATIOS}
-        with open(baseline_path, "w") as f:
-            json.dump(record, f, indent=2, sort_keys=True)
-            f.write("\n")
+        record(ratios, baseline_path)
         print(
             f"check_bench: WARNING — no baseline yet; recorded {baseline_path} "
             "from this run. The regression gate is inert until a baseline "

@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
-# CI entry point: release build, test suite, doctests, rustdoc (warnings
-# denied), formatting check, and the hot-path benchmark in JSON mode
-# (perf trajectory across PRs).
+# CI entry point: release build, test suite (native kernel config plus a
+# forced-scalar pass), doctests, rustdoc (warnings denied), formatting
+# check, and the hot-path benchmark in JSON mode (perf trajectory across
+# PRs).
 #
-# Usage: scripts/ci.sh [--with-bench]
+# Usage: scripts/ci.sh [--with-bench] [--record-baseline]
+#   --record-baseline  (with --with-bench) rewrite scripts/bench_baseline.json
+#                      from this run instead of gating against it — use after
+#                      an intentional perf change or a hardware move.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -41,6 +45,23 @@ echo "== strategy-quality harness (explicit gates; also in the pass above) =="
 cargo test -q --test strategy_quality
 cargo test -q --test integration rest_search
 
+echo "== scoring-kernel parity, native config (explicit gate; also in the pass above) =="
+# The cross-kernel bit-parity suite must never be filtered out of a CI
+# run: on an AVX2 host this is the only gate proving the SIMD path is a
+# bit-identical drop-in.
+cargo test -q --test kernel_parity
+
+echo "== scoring-kernel parity, forced-scalar config (HYPA_DSE_KERNEL=scalar) =="
+# Re-run the kernel-sensitive suites with the scalar kernel forced via
+# the env override: proves the dispatch layer honours the force, and
+# that the engine's results do not depend on which kernel `active()`
+# resolves to (both configs must pass identically). The lib pass covers
+# the batch/kernel unit tests (incl. the forced-degrade dispatch test).
+HYPA_DSE_KERNEL=scalar cargo test -q --test kernel_parity
+HYPA_DSE_KERNEL=scalar cargo test -q --test knn_tiers
+HYPA_DSE_KERNEL=scalar cargo test -q --lib batch
+HYPA_DSE_KERNEL=scalar cargo test -q --lib kernel
+
 echo "== cargo test --doc (doc-examples) =="
 cargo test -q --doc
 
@@ -57,7 +78,17 @@ else
     echo "(rustfmt not installed — skipping format check)"
 fi
 
-if [[ "${1:-}" == "--with-bench" ]]; then
+WITH_BENCH=0
+RECORD_BASELINE=""
+for arg in "$@"; do
+    case "$arg" in
+        --with-bench) WITH_BENCH=1 ;;
+        --record-baseline) RECORD_BASELINE="--record-baseline" ;;
+        *) echo "unknown argument: $arg" >&2; exit 2 ;;
+    esac
+done
+
+if [[ "$WITH_BENCH" == 1 ]]; then
     echo "== benches/hotpath.rs (writes BENCH_hotpath.json) =="
     BENCH_BUDGET_MS="${BENCH_BUDGET_MS:-150}" cargo bench --bench hotpath
     echo "== BENCH_hotpath.json =="
@@ -67,9 +98,10 @@ if [[ "${1:-}" == "--with-bench" ]]; then
     [[ -f "$BENCH_JSON" ]] || BENCH_JSON=BENCH_hotpath.json
     cat "$BENCH_JSON"
     echo "== scripts/check_bench.py (stage presence + >1.5x regression gate) =="
-    # Asserts the tiered-kNN stages/ratios were emitted and that no
-    # recorded ratio regressed >1.5x; records the baseline on first run.
-    python3 scripts/check_bench.py "$BENCH_JSON" scripts/bench_baseline.json
+    # Asserts the tiered-kNN and micro-kernel stages/ratios were emitted
+    # and that no recorded ratio regressed >1.5x; records the baseline on
+    # first run (or unconditionally with --record-baseline).
+    python3 scripts/check_bench.py $RECORD_BASELINE "$BENCH_JSON" scripts/bench_baseline.json
 fi
 
 echo "CI OK"
