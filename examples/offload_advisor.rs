@@ -6,6 +6,7 @@
 //!
 //!     cargo run --release --example offload_advisor
 
+use hypa_dse::cnn::launch::input_bytes;
 use hypa_dse::cnn::zoo;
 use hypa_dse::coordinator::{BatchPolicy, PredictionService};
 use hypa_dse::gpu::specs::by_name;
@@ -13,9 +14,9 @@ use hypa_dse::ml::forest::{ForestConfig, RandomForest};
 use hypa_dse::ml::knn::Knn;
 use hypa_dse::ml::regressor::Regressor;
 use hypa_dse::offload::{
-    decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
-    OffloadClient, OffloadServer, ServerState,
+    Constraints, EdgePowerProfile, OffloadClient, OffloadServer, ServerState,
 };
+use hypa_dse::partition::{choose, edge_only_estimate, split_estimate, LinkModel};
 use hypa_dse::sim::Simulator;
 use hypa_dse::util::json::Json;
 use hypa_dse::util::rng::Rng;
@@ -73,15 +74,16 @@ fn main() -> anyhow::Result<()> {
     for &rtt in &[2.0, 20.0, 100.0] {
         let mut row = vec![format!("{rtt:.0} ms")];
         for &bw in &[1.0, 10.0, 100.0, 1000.0] {
-            let d = decide(
-                local_estimate(local_s, &profile),
-                offload_estimate(
-                    &net,
-                    1,
-                    &Link {
-                        bandwidth_mbps: bw,
-                        rtt_ms: rtt,
-                    },
+            // All-or-nothing offload is the partition evaluator pinned
+            // to its extreme cuts: all-edge (cut L) vs all-server
+            // (cut 0, the raw input crosses the link). See
+            // examples/partition_sweep.rs for the cuts in between.
+            let d = choose(
+                edge_only_estimate(local_s, &profile),
+                split_estimate(
+                    0.0,
+                    input_bytes(&net, 1),
+                    &LinkModel::new(bw, rtt, 0.0),
                     cloud_s,
                     &profile,
                 ),
@@ -101,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.render());
     println!(
         "\nlocal energy reference: {:.0} mJ/inference\n",
-        local_estimate(local_s, &profile).device_energy_j * 1e3
+        edge_only_estimate(local_s, &profile).device_energy_j * 1e3
     );
 
     // --- the same decision through the REST API ---------------------------

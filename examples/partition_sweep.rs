@@ -1,0 +1,128 @@
+//! Partition sweep: where should a CNN be cut between an edge device
+//! and a server, and how does the answer move with the link?
+//!
+//!     cargo run --release --example partition_sweep
+//!
+//! For every network in the zoo and two link presets, an `Explorer`
+//! session sweeps the full `cut × server GPU × DVFS` lattice through
+//! the analytic partition evaluator (no ML predictor needed): the edge
+//! device (Jetson TX1) runs layers `0..cut`, the cut activation crosses
+//! the link, the server runs the rest. Cut 0 is all-server, cut L is
+//! all-edge. The sweep prints the min-EDP winner per (network, link)
+//! and then the full Pareto frontier for squeezenet, with every cut
+//! annotated by the last edge-side layer's name — the readable version
+//! of "ship the activation once the early convs have shrunk it".
+
+use hypa_dse::cnn::zoo;
+use hypa_dse::dse::{DescriptorCache, Explorer, Grid, Objective};
+use hypa_dse::gpu::specs::by_name;
+use hypa_dse::offload::EdgePowerProfile;
+use hypa_dse::partition::{decode_cut, LinkModel, PartitionCost, PartitionSpace};
+use hypa_dse::util::table::{f, Table};
+
+const FREQ_STEPS: usize = 2;
+
+fn main() -> anyhow::Result<()> {
+    let edge = by_name("jetson-tx1").unwrap();
+    let gpus = vec![by_name("v100s").unwrap(), by_name("t4").unwrap()];
+    let cache = DescriptorCache::with_gpus(gpus.clone());
+    let links = [
+        ("wifi", LinkModel::by_name("wifi").unwrap()),
+        (
+            "gigabit-ethernet",
+            LinkModel::by_name("gigabit-ethernet").unwrap(),
+        ),
+    ];
+
+    println!(
+        "edge↔server partition sweep: {} prefix, {} candidate servers, min-EDP\n",
+        edge.name,
+        gpus.len()
+    );
+
+    // --- best cut per (network, link) across the zoo ----------------------
+    let mut t = Table::new(&[
+        "network", "link", "cut@layer", "split", "server", "MHz", "ms", "J/inf(dev)",
+    ]);
+    for net in zoo::zoo() {
+        for (link_name, link) in &links {
+            let cost = PartitionCost::new(
+                &net,
+                1,
+                *link,
+                EdgePowerProfile::jetson_tx1(),
+                &edge,
+                edge.boost_mhz,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let space = PartitionSpace::full(cost.layers());
+            let sweep = Explorer::for_partition(&net, &cost)
+                .objective(Objective::MinEdp)
+                .cache(&cache)
+                .run(&Grid::new(space.design_space(FREQ_STEPS, &gpus)))?;
+            let best = sweep.best()?;
+            let cut = decode_cut(best.point.batch).unwrap_or(0);
+            let split = if cut == 0 {
+                "all-server"
+            } else if cut == cost.layers() {
+                "all-edge"
+            } else {
+                "split"
+            };
+            t.row(&[
+                net.name.clone(),
+                link_name.to_string(),
+                format!("{cut}@{}", cost.cut_layer_name(cut)),
+                split.to_string(),
+                best.point.gpu.clone(),
+                format!("{:.0}", best.point.f_mhz),
+                f(best.latency_s * 1e3, 2),
+                f(best.energy_per_inf_j, 4),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // --- the full frontier for one network, per link ----------------------
+    // The (power, latency) Pareto set shows the trade the scalar winner
+    // hides: low cuts lean on the server GPU (fast, link-bound), high
+    // cuts lean on the edge device (slow, battery-bound).
+    let net = zoo::squeezenet();
+    for (link_name, link) in &links {
+        let cost = PartitionCost::new(
+            &net,
+            1,
+            *link,
+            EdgePowerProfile::jetson_tx1(),
+            &edge,
+            edge.boost_mhz,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let space = PartitionSpace::full(cost.layers());
+        let sweep = Explorer::for_partition(&net, &cost)
+            .objective(Objective::MinEdp)
+            .cache(&cache)
+            .run(&Grid::new(space.design_space(FREQ_STEPS, &gpus)))?;
+        let pareto = sweep.pareto();
+        println!(
+            "\n{} over {link_name}: Pareto frontier (power vs latency), {} of {} points:",
+            net.name,
+            pareto.len(),
+            sweep.scored.len()
+        );
+        let mut t = Table::new(&["cut@layer", "kB over link", "server", "MHz", "W", "ms"]);
+        for s in &pareto {
+            let cut = decode_cut(s.point.batch).unwrap_or(0);
+            t.row(&[
+                format!("{cut}@{}", cost.cut_layer_name(cut)),
+                f(cost.cut_bytes(cut) as f64 / 1e3, 1),
+                s.point.gpu.clone(),
+                format!("{:.0}", s.point.f_mhz),
+                f(s.power_w, 1),
+                f(s.latency_s * 1e3, 2),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    Ok(())
+}

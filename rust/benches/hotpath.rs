@@ -73,6 +73,8 @@ use hypa_dse::ml::forest::{ForestConfig, RandomForest};
 use hypa_dse::ml::knn::Knn;
 use hypa_dse::ml::matrix::FeatureMatrix;
 use hypa_dse::ml::regressor::Regressor;
+use hypa_dse::offload::EdgePowerProfile;
+use hypa_dse::partition::{decode_cut, encode_cut, LinkModel, PartitionCost, PartitionSpace};
 use hypa_dse::util::bench::{self, Measurement};
 use hypa_dse::util::json::{jnum, Json};
 use hypa_dse::util::pool;
@@ -596,6 +598,84 @@ fn main() {
     stages.stage(&m_lg, space.len());
     stages.stage(&m_bd, space.len());
     ratios.set("search_builder_vs_legacy", jnum(builder_ratio));
+
+    println!("-- partition: cut x GPU x DVFS sweep on resnet18 (Explorer grid) --");
+    // The partition evaluator prices a cut by re-timing only the server
+    // suffix over cached traces; the full cut x GPU x frequency sweep
+    // through the Explorer must stay pure arithmetic. Parity asserted
+    // before timing: every grid-scored point bit-matches a direct
+    // `PartitionCost::estimate` of the same (cut, GPU, f).
+    let pnet = hypa_dse::cnn::zoo::resnet18();
+    let pedge = hypa_dse::gpu::specs::by_name("jetson-tx1").unwrap();
+    let pcost = PartitionCost::new(
+        &pnet,
+        1,
+        LinkModel::wifi(),
+        EdgePowerProfile::jetson_tx1(),
+        &pedge,
+        pedge.boost_mhz,
+    )
+    .expect("partition cost model");
+    let pgpus = vec![
+        hypa_dse::gpu::specs::by_name("v100s").unwrap(),
+        hypa_dse::gpu::specs::by_name("t4").unwrap(),
+    ];
+    let pcache = DescriptorCache::with_gpus(pgpus.clone());
+    let pspace = PartitionSpace::full(pcost.layers());
+    let pdesign = pspace.design_space(2, &pgpus);
+    let pexplorer = Explorer::for_partition(&pnet, &pcost)
+        .objective(Objective::MinEdp)
+        .cache(&pcache);
+    let pgrid = Grid::borrowed(&pdesign);
+    let pscored = pexplorer.run(&pgrid).expect("partition sweep").scored;
+    assert_eq!(pscored.len(), pdesign.len(), "sweep must cover the lattice");
+    for s in &pscored {
+        let g = pgpus.iter().find(|g| g.name == s.point.gpu).unwrap();
+        let cut = decode_cut(s.point.batch).expect("encoded cut");
+        let est = pcost.estimate(cut, g, s.point.f_mhz).unwrap();
+        assert_eq!(
+            s.latency_s.to_bits(),
+            est.latency_s.to_bits(),
+            "partition sweep diverged from the direct estimate at cut {cut}"
+        );
+    }
+    let m_pw = bench::bench("partition sweep", explore_budget, || {
+        pexplorer.run(&pgrid).unwrap().telemetry.evaluations
+    });
+    println!(
+        "  {} points ({} cuts x {} GPUs x 2 steps): {:.0} points/s\n",
+        pdesign.len(),
+        pcost.layers() + 1,
+        pgpus.len(),
+        pdesign.len() as f64 / m_pw.p50()
+    );
+    stages.stage(&m_pw, pdesign.len());
+
+    println!("-- partition axis overhead: fixed cut vs full cut ladder (Random, same budget) --");
+    // Making the cut a search axis may not tax per-candidate scoring:
+    // the same budgeted Random search over a one-cut ladder vs the full
+    // ladder differs only in which suffixes get re-timed (~1.0 expected;
+    // the fixed side re-times the full network every draw, so the ladder
+    // side can only be cheaper or equal per candidate).
+    let pbudget = 64usize;
+    let fixed_cut = [encode_cut(0)];
+    let full_ladder = pspace.encoded();
+    let pbudgeted = Explorer::for_partition(&pnet, &pcost)
+        .objective(Objective::MinEdp)
+        .cache(&pcache)
+        .seed(3)
+        .budget(pbudget);
+    let m_pf = bench::bench("partition random fixed cut", explore_budget, || {
+        pbudgeted.run(&Random::new(&fixed_cut)).unwrap().telemetry.evaluations
+    });
+    let m_pl = bench::bench("partition random cut ladder", explore_budget, || {
+        pbudgeted.run(&Random::new(&full_ladder)).unwrap().telemetry.evaluations
+    });
+    let partition_axis_ratio = m_pf.p50() / m_pl.p50();
+    println!("  fixed cut vs cut ladder: {partition_axis_ratio:.2}x (must stay ~1.0)\n");
+    stages.stage(&m_pf, pbudget);
+    stages.stage(&m_pl, pbudget);
+    ratios.set("partition_axis_overhead", jnum(partition_axis_ratio));
 
     println!("-- strategy quality at N (Random vs Anneal vs SurrogateEI, same seed) --");
     // Fixed-budget quality A/B: the best feasible objective each budgeted

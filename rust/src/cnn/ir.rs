@@ -100,6 +100,17 @@ pub struct LayerInfo {
     pub bytes_out: usize,
 }
 
+impl LayerInfo {
+    /// Bytes of this layer's output activation for a whole batch (fp32).
+    ///
+    /// This is what crosses the edge↔server link when the network is cut
+    /// *after* this layer, so the partition evaluator prices it directly
+    /// instead of recomputing from [`Shape`].
+    pub fn activation_bytes(&self, batch: usize) -> usize {
+        self.bytes_out * batch
+    }
+}
+
 /// Error from shape inference / validation.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IrError(pub String);
@@ -253,6 +264,29 @@ impl Network {
             cur = output;
         }
         Ok(infos)
+    }
+
+    /// Bytes crossing an edge↔server cut at `cut` for a whole batch.
+    ///
+    /// `cut == 0` means "run nothing on the edge": the raw network input
+    /// is transferred. `cut == c` (1-based past layer `c-1`) transfers
+    /// that layer's output activation. A cut past the last layer is an
+    /// [`IrError`], not a panic — REST callers hand us arbitrary indices.
+    pub fn cut_activation_bytes(&self, cut: usize, batch: usize) -> Result<usize, IrError> {
+        if cut > self.layers.len() {
+            return Err(IrError(format!(
+                "{}: cut {} out of range (network has {} layers; valid cuts are 0..={})",
+                self.name,
+                cut,
+                self.layers.len(),
+                self.layers.len()
+            )));
+        }
+        if cut == 0 {
+            return Ok(self.input.bytes_f32() * batch);
+        }
+        let infos = self.analyze()?;
+        Ok(infos[cut - 1].activation_bytes(batch))
     }
 
     /// Network totals (for the ML feature vector).
@@ -458,6 +492,33 @@ mod tests {
         assert_eq!(t.dense_layers, 1);
         assert!(t.flops > 0.0);
         assert_eq!(t.output_shape, Shape { c: 10, h: 1, w: 1 });
+    }
+
+    #[test]
+    fn activation_bytes_scale_with_batch() {
+        let infos = tiny().analyze().unwrap();
+        for info in &infos {
+            assert_eq!(info.activation_bytes(1), info.bytes_out);
+            assert_eq!(info.activation_bytes(8), 8 * info.bytes_out);
+        }
+    }
+
+    #[test]
+    fn cut_activation_bytes_cover_the_ladder() {
+        let n = tiny();
+        let infos = n.analyze().unwrap();
+        // Cut 0: raw input crosses the link.
+        assert_eq!(n.cut_activation_bytes(0, 2).unwrap(), 2 * n.input.bytes_f32());
+        // Cut c: layer c-1's output crosses.
+        for c in 1..=n.layers.len() {
+            assert_eq!(
+                n.cut_activation_bytes(c, 3).unwrap(),
+                infos[c - 1].activation_bytes(3)
+            );
+        }
+        // Past the last layer: an error, not a panic.
+        let err = n.cut_activation_bytes(n.layers.len() + 1, 1).unwrap_err();
+        assert!(err.0.contains("out of range"), "{err}");
     }
 
     #[test]

@@ -43,10 +43,11 @@ use crate::cnn::ir::Network;
 use crate::coordinator::{EvalBudget, Predictor};
 use crate::dse::strategy::SearchStrategy;
 use crate::dse::{
-    pareto_frontier, rank, score_points, DescriptorCache, DesignPoint, DseConstraints,
-    Objective, ScoredPoint,
+    pareto_frontier, rank, score_partition_points, score_points, DescriptorCache, DesignPoint,
+    DseConstraints, Objective, ScoredPoint,
 };
 use crate::gpu::specs::GpuSpec;
+use crate::partition::PartitionCost;
 use crate::util::pool;
 
 /// Typed exploration failure.
@@ -227,6 +228,55 @@ impl Exploration {
     }
 }
 
+/// What scores a candidate: the ML predictor (the classic
+/// `GPU × DVFS × batch` space) or a [`PartitionCost`] evaluator (the
+/// `GPU × DVFS × cut` partition space, cut encoded in the batch slot).
+/// Strategies never see this — they talk to the [`Evaluator`] API, so
+/// every `SearchStrategy` searches either space unchanged.
+#[derive(Clone, Copy)]
+pub(crate) enum Backend<'a> {
+    Predictor(&'a Predictor),
+    Partition(&'a PartitionCost),
+}
+
+/// Per-scoring-unit context derived from the backend: the predictor is
+/// `Send`-not-`Sync` so each unit gets a clone; the partition evaluator
+/// is immutable shared data (`Sync`), so units share the borrow.
+enum ScoreCtx<'a> {
+    Predictor(Predictor),
+    Partition(&'a PartitionCost),
+}
+
+impl<'a> Backend<'a> {
+    fn ctx(self) -> ScoreCtx<'a> {
+        match self {
+            Backend::Predictor(p) => ScoreCtx::Predictor(p.clone()),
+            Backend::Partition(c) => ScoreCtx::Partition(c),
+        }
+    }
+}
+
+/// The one dispatch point between the two scoring pipelines; everything
+/// above it (sharding, budgets, cancellation, telemetry) is shared.
+fn score_with(
+    ctx: &ScoreCtx<'_>,
+    net: &Network,
+    points: &[DesignPoint],
+    constraints: &DseConstraints,
+    cache: &DescriptorCache,
+    apply_memory: bool,
+    tally: &RejectionCounters,
+) -> Result<Vec<ScoredPoint>> {
+    match ctx {
+        ScoreCtx::Predictor(p) => {
+            score_points(net, points, p, constraints, cache, apply_memory, tally)
+        }
+        ScoreCtx::Partition(c) => {
+            score_partition_points(points, c, constraints, cache, apply_memory, tally)
+        }
+    }
+}
+
 /// Keep `best` at the objective-minimal *feasible* point; first-seen
 /// wins ties (strict improvement only).
 fn update_best(s: &ScoredPoint, objective: Objective, best: &mut Option<ScoredPoint>) {
@@ -299,7 +349,7 @@ fn update_best(s: &ScoredPoint, objective: Objective, best: &mut Option<ScoredPo
 /// ```
 pub struct Explorer<'a> {
     net: &'a Network,
-    predictor: &'a Predictor,
+    backend: Backend<'a>,
     constraints: DseConstraints,
     objective: Objective,
     cache: Option<&'a DescriptorCache>,
@@ -315,9 +365,22 @@ impl<'a> Explorer<'a> {
     /// no constraints, [`Objective::MinEdp`], a private descriptor cache,
     /// the machine's worker count, seed 1 and no evaluation budget.
     pub fn new(net: &'a Network, predictor: &'a Predictor) -> Explorer<'a> {
+        Self::with_backend(net, Backend::Predictor(predictor))
+    }
+
+    /// A session over the edge↔server partition space of `net`, scored
+    /// by a pre-traced [`PartitionCost`] instead of the ML predictor.
+    /// Candidates carry the cut point in their batch slot
+    /// ([`crate::partition::encode_cut`]); everything else — strategies,
+    /// budgets, cancellation, progress, telemetry — behaves identically.
+    pub fn for_partition(net: &'a Network, cost: &'a PartitionCost) -> Explorer<'a> {
+        Self::with_backend(net, Backend::Partition(cost))
+    }
+
+    fn with_backend(net: &'a Network, backend: Backend<'a>) -> Explorer<'a> {
         Explorer {
             net,
-            predictor,
+            backend,
             constraints: DseConstraints::default(),
             objective: Objective::MinEdp,
             cache: None,
@@ -410,16 +473,16 @@ impl<'a> Explorer<'a> {
         };
         // Row-level backstop: a budgeted session may spend at most two
         // predictor rows (power + cycles) per candidate, even if a
-        // strategy miscounts its own evaluations.
+        // strategy miscounts its own evaluations. The partition backend
+        // has no predictor rows to guard — its evaluator is pure
+        // arithmetic — so only the strategy-level budget applies there.
         let guarded;
-        let predictor = match self.budget {
-            Some(b) => {
-                guarded = self
-                    .predictor
-                    .with_eval_budget(Arc::new(EvalBudget::new(b.saturating_mul(2))));
-                &guarded
+        let backend = match (self.backend, self.budget) {
+            (Backend::Predictor(p), Some(b)) => {
+                guarded = p.with_eval_budget(Arc::new(EvalBudget::new(b.saturating_mul(2))));
+                Backend::Predictor(&guarded)
             }
-            None => self.predictor,
+            (b, _) => b,
         };
 
         let evaluated = self
@@ -429,7 +492,7 @@ impl<'a> Explorer<'a> {
         evaluated.store(0, Ordering::Relaxed);
         let mut ev = Evaluator {
             net: self.net,
-            predictor,
+            backend,
             constraints: &self.constraints,
             cache,
             objective: self.objective,
@@ -482,7 +545,7 @@ impl<'a> Explorer<'a> {
 /// sharding implementation exists.
 pub struct Evaluator<'a> {
     net: &'a Network,
-    predictor: &'a Predictor,
+    backend: Backend<'a>,
     constraints: &'a DseConstraints,
     cache: &'a DescriptorCache,
     objective: Objective,
@@ -562,8 +625,14 @@ impl Evaluator<'_> {
 
     /// Pre-build the per-`(net, batch)` descriptors sequentially so
     /// parallel scoring units hit the cache instead of racing on the
-    /// expensive HyPA analysis.
+    /// expensive HyPA analysis. A no-op for the partition backend: its
+    /// "batch" values are encoded cut points, not batch sizes — the
+    /// [`PartitionCost`] pre-traced everything at construction and needs
+    /// no feature descriptors.
     pub fn warm(&self, batches: &[usize]) -> Result<()> {
+        if let Backend::Partition(_) = self.backend {
+            return Ok(());
+        }
         for &b in batches {
             self.cache.descriptor(self.net, b)?;
         }
@@ -596,17 +665,18 @@ impl Evaluator<'_> {
 
         // The worker closure may only capture `Sync` state (the
         // `Predictor` handle is `Send`-not-`Sync`; it rides along as the
-        // per-shard moved context).
+        // per-shard moved context — the partition evaluator is `Sync`
+        // shared data and its context is just the borrow).
         let (net, constraints, cache) = (self.net, self.constraints, self.cache);
         let (tally, shards) = (&self.tally, &self.shards);
         let (cancel, evaluated) = (self.cancel.as_deref(), &*self.evaluated);
-        let predictor = self.predictor;
+        let backend = self.backend;
         let shard_results = pool::map_shards_ctx(
             points,
             min_shard,
             self.workers,
-            || predictor.clone(),
-            move |p, _offset, shard| -> Result<Vec<ScoredPoint>> {
+            || backend.ctx(),
+            move |ctx, _offset, shard| -> Result<Vec<ScoredPoint>> {
                 match chunk {
                     Some(c) => {
                         let mut out = Vec::with_capacity(shard.len());
@@ -624,8 +694,8 @@ impl Evaluator<'_> {
                                 crate::util::failpoint::eval_ctx("dse-score-chunk", &net.name)?;
                             }
                             shards.fetch_add(1, Ordering::Relaxed);
-                            out.extend(score_points(
-                                net, ch, &p, constraints, cache, apply_memory, tally,
+                            out.extend(score_with(
+                                &ctx, net, ch, constraints, cache, apply_memory, tally,
                             )?);
                             evaluated.fetch_add(ch.len(), Ordering::Relaxed);
                         }
@@ -639,8 +709,9 @@ impl Evaluator<'_> {
                             crate::util::failpoint::eval_ctx("dse-score-chunk", &net.name)?;
                         }
                         shards.fetch_add(1, Ordering::Relaxed);
-                        let out =
-                            score_points(net, shard, &p, constraints, cache, apply_memory, tally)?;
+                        let out = score_with(
+                            &ctx, net, shard, constraints, cache, apply_memory, tally,
+                        )?;
                         evaluated.fetch_add(out.len(), Ordering::Relaxed);
                         Ok(out)
                     }
@@ -672,13 +743,13 @@ impl Evaluator<'_> {
         let (net, constraints, cache) = (self.net, self.constraints, self.cache);
         let (tally, shards) = (&self.tally, &self.shards);
         let (cancel, evaluated) = (self.cancel.as_deref(), &*self.evaluated);
-        let predictor = self.predictor;
+        let backend = self.backend;
         pool::map_shards_ctx(
             specs,
             1,
             arm_workers,
-            || predictor.clone(),
-            |p, _offset, shard| -> Vec<Result<R>> {
+            || backend.ctx(),
+            |ctx, _offset, shard| -> Vec<Result<R>> {
                 let scorer = ChunkScorer {
                     net,
                     constraints,
@@ -687,7 +758,7 @@ impl Evaluator<'_> {
                     shards,
                     cancel,
                     evaluated,
-                    predictor: p,
+                    ctx,
                 };
                 shard
                     .iter()
@@ -711,7 +782,7 @@ impl Evaluator<'_> {
             shards: &self.shards,
             cancel: self.cancel.as_deref(),
             evaluated: &self.evaluated,
-            predictor: self.predictor.clone(),
+            ctx: self.backend.ctx(),
         }
     }
 }
@@ -729,7 +800,7 @@ pub struct ChunkScorer<'a> {
     shards: &'a AtomicUsize,
     cancel: Option<&'a AtomicBool>,
     evaluated: &'a AtomicUsize,
-    predictor: Predictor,
+    ctx: ScoreCtx<'a>,
 }
 
 impl ChunkScorer<'_> {
@@ -755,10 +826,10 @@ impl ChunkScorer<'_> {
             crate::util::failpoint::eval_ctx("dse-score-chunk", &self.net.name)?;
         }
         self.shards.fetch_add(1, Ordering::Relaxed);
-        let out = score_points(
+        let out = score_with(
+            &self.ctx,
             self.net,
             points,
-            &self.predictor,
             self.constraints,
             self.cache,
             false,

@@ -63,6 +63,7 @@ use crate::coordinator::{Predictor, Task};
 use crate::gpu::specs::{catalog, GpuSpec};
 use crate::ml::features::{NetDescriptor, N_FEATURES};
 use crate::ml::matrix::FeatureMatrix;
+use crate::partition::{decode_cut, PartitionCost};
 use crate::util::pool;
 
 /// One candidate design point.
@@ -420,6 +421,74 @@ pub(crate) fn score_points(
             true
         };
         let s = derive_scored(p, pw, cy, constraints, mem_ok);
+        tally.count(&s, constraints, check_memory && !mem_ok);
+        scored.push(s);
+    }
+    Ok(scored)
+}
+
+/// Score a contiguous run of *partition* design points — the second
+/// scoring pipeline behind the [`Explorer`]'s evaluator (selected by
+/// [`Explorer::for_partition`]). The cut point rides in the batch slot
+/// ([`crate::partition::encode_cut`]); the real inference batch lives in
+/// the [`PartitionCost`]. Metric mapping into [`ScoredPoint`]:
+///
+/// * `latency_s` — end-to-end (edge prefix + link + server suffix);
+/// * `energy_per_inf_j` — *edge-device* energy per inference (the
+///   battery objective the offload model minimizes);
+/// * `power_w` — total system energy / latency, so
+///   [`Objective::EnergyPerInference`] (power × latency) ranks by whole
+///   edge+server energy per pass;
+/// * `cycles` — server-suffix GPU cycles (0 for all-edge);
+/// * the memory check gates the *server* suffix working set against the
+///   candidate GPU's capacity.
+///
+/// Pure arithmetic over the pre-traced [`PartitionCost`] — no predictor,
+/// no allocation-sensitive scratch, bit-identical for any worker count.
+pub(crate) fn score_partition_points(
+    points: &[DesignPoint],
+    cost: &PartitionCost,
+    constraints: &DseConstraints,
+    cache: &DescriptorCache,
+    apply_memory: bool,
+    tally: &explorer::RejectionCounters,
+) -> Result<Vec<ScoredPoint>> {
+    let check_memory = apply_memory && constraints.respect_memory;
+    let batch = cost.batch() as f64;
+    let mut scored = Vec::with_capacity(points.len());
+    for p in points {
+        let g = cache.gpu(&p.gpu)?;
+        let cut = decode_cut(p.batch).ok_or_else(|| {
+            anyhow!("partition design point batch slot 0 encodes no cut (expected cut+1)")
+        })?;
+        let est = cost.estimate(cut, g, p.f_mhz)?;
+        let mem_ok = if check_memory {
+            cost.server_working_set(cut) as f64 <= g.mem_gb * 1e9
+        } else {
+            true
+        };
+        let latency = est.latency_s;
+        let throughput = batch / latency.max(1e-12);
+        let power_w = (est.device_energy_j + est.server_energy_j) / latency.max(1e-12);
+        let mut feasible = mem_ok;
+        if let Some(cap) = constraints.max_power_w {
+            feasible &= power_w <= cap;
+        }
+        if let Some(cap) = constraints.max_latency_s {
+            feasible &= latency <= cap;
+        }
+        if let Some(min) = constraints.min_throughput {
+            feasible &= throughput >= min;
+        }
+        let s = ScoredPoint {
+            point: p.clone(),
+            power_w,
+            cycles: est.server_cycles,
+            latency_s: latency,
+            throughput,
+            energy_per_inf_j: est.device_energy_j / batch,
+            feasible,
+        };
         tally.count(&s, constraints, check_memory && !mem_ok);
         scored.push(s);
     }

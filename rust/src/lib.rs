@@ -26,8 +26,12 @@
 //!   simulated annealing) over `GPU × DVFS × batch`, with budgets,
 //!   typed feasibility errors and rejection telemetry.
 //! * [`offload`] — offload advisor + REST API (including server-side
-//!   `POST /v1/search`); [`util`] — worker pools, RNG, JSON, bench
-//!   harness (fully offline, no external deps).
+//!   `POST /v1/search` and `POST /v1/partition`); [`partition`] — the
+//!   edge↔server CNN partitioning subsystem: [`partition::LinkModel`]
+//!   link pricing, the per-cut [`partition::PartitionCost`] evaluator,
+//!   and the cut-point search axis wired through the [`dse::Explorer`]
+//!   core; [`util`] — worker pools, RNG, JSON, bench harness (fully
+//!   offline, no external deps).
 //!
 //! ## Serving architecture
 //!
@@ -60,6 +64,7 @@ pub mod dse;
 pub mod gpu;
 pub mod ml;
 pub mod offload;
+pub mod partition;
 pub mod ptx;
 pub mod report;
 pub mod runtime;

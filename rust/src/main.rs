@@ -10,6 +10,7 @@
 //! * `dse`       — explore the design space for a network under constraints
 //! * `serve`     — start the offload/predict REST API
 //! * `offload`   — one-shot local-vs-cloud decision
+//! * `partition` — edge↔server cut-point DSE over a link preset
 //!
 //! The dependency set is offline-vendored (no clap); flags are simple
 //! `--key value` pairs parsed by the in-file `Args` helper.
@@ -269,7 +270,10 @@ fn cmd_dse(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use hypa_dse::dse::DescriptorCache;
-    use hypa_dse::offload::{recovered_search_task, JobConfig, JobManager};
+    use hypa_dse::offload::{
+        recovered_partition_task, recovered_search_task, JobConfig, JobManager,
+    };
+    use hypa_dse::util::json::Json;
     let addr = args.str("addr", "127.0.0.1:7788");
     let predictor = if args.bool("with-predictor") {
         let service = start_predictor(&args.str("dataset", DEFAULT_DATASET_PATH))?;
@@ -286,18 +290,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // previous process left queued/running), keep appending.
             let path = std::path::PathBuf::from(path);
             let cache = std::sync::Arc::new(DescriptorCache::new());
-            let jobs = match &predictor {
-                Some(p) => {
-                    let (p, c) = (p.clone(), cache.clone());
-                    JobManager::recover(JobConfig::default(), &path, move |spec| {
-                        recovered_search_task(spec, &p, &c)
-                    })?
-                }
-                // Without a predictor no search can run; interrupted
-                // jobs surface as failed instead of silently vanishing.
-                None => JobManager::recover(JobConfig::default(), &path, |_spec| {
-                    Err(anyhow!("server restarted without --with-predictor"))
-                })?,
+            let jobs = {
+                let (p, c) = (predictor.clone(), cache.clone());
+                JobManager::recover(JobConfig::default(), &path, move |spec| {
+                    // Partition jobs journal a "kind" tag and rebuild
+                    // without the predictor (analytic evaluator); search
+                    // jobs need the ML predictor to re-run. Without one,
+                    // interrupted searches surface as failed instead of
+                    // silently vanishing.
+                    if spec.get("kind").and_then(Json::as_str) == Some("partition") {
+                        return recovered_partition_task(spec);
+                    }
+                    match &p {
+                        Some(p) => recovered_search_task(spec, p, &c),
+                        None => Err(anyhow!("server restarted without --with-predictor")),
+                    }
+                })?
             };
             let recovered = jobs.list().len();
             if recovered > 0 {
@@ -319,6 +327,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  POST /v1/predict/bulk");
     println!("  POST /v1/search        (requires --with-predictor)");
     println!("  POST /v1/search/jobs   (async; requires --with-predictor)");
+    println!("  POST /v1/partition");
+    println!("  POST /v1/partition/jobs (async)");
     println!("  GET  /v1/jobs");
     println!("  GET  /v1/jobs/{{id}}");
     println!("  DELETE /v1/jobs/{{id}}");
@@ -328,9 +338,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_offload(args: &Args) -> Result<()> {
-    use hypa_dse::offload::{
-        decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
-    };
+    use hypa_dse::cnn::launch::input_bytes;
+    use hypa_dse::offload::{Constraints, EdgePowerProfile, Link};
+    use hypa_dse::partition::{choose, edge_only_estimate, split_estimate, LinkModel};
     let net = net_arg(args)?;
     let batch = args.usize("batch", 1);
     let link = Link {
@@ -349,9 +359,17 @@ fn cmd_offload(args: &Args) -> Result<()> {
         .simulate_network(&net, batch, &cloud, cloud.boost_mhz)
         .map_err(|e| anyhow!("{e}"))?
         .seconds;
-    let d = decide(
-        local_estimate(local_s, &profile),
-        offload_estimate(&net, batch, &link, cloud_s, &profile),
+    // The 2-point special case of the partition evaluator (cut L vs
+    // cut 0); output is bit-identical to the retired free functions.
+    let d = choose(
+        edge_only_estimate(local_s, &profile),
+        split_estimate(
+            0.0,
+            input_bytes(&net, batch),
+            &LinkModel::from(link),
+            cloud_s,
+            &profile,
+        ),
         &Constraints {
             max_latency_s: args.f64("max-latency"),
             max_energy_j: args.f64("max-energy"),
@@ -374,6 +392,99 @@ fn cmd_offload(args: &Args) -> Result<()> {
         d.offload.device_power_w
     );
     println!("  => {}", d.recommendation.name());
+    Ok(())
+}
+
+/// Edge↔server partition DSE: where to cut the network so the prefix
+/// runs on the edge device and the suffix on a server GPU, priced over
+/// a named link preset — exhaustive over the cut × GPU × DVFS lattice
+/// through the same `Explorer` core as `dse`/`search`.
+fn cmd_partition(args: &Args) -> Result<()> {
+    use hypa_dse::offload::EdgePowerProfile;
+    use hypa_dse::partition::{
+        decode_cut, LinkModel, PartitionCost, PartitionSpace, PRESET_NAMES,
+    };
+
+    let net = net_arg(args)?;
+    let link_name = args.str("link", "wifi");
+    let link = LinkModel::by_name(&link_name).ok_or_else(|| {
+        anyhow!(
+            "unknown link preset '{link_name}' (one of: {})",
+            PRESET_NAMES.join(", ")
+        )
+    })?;
+    let batch = args.usize("batch", 1);
+    let edge = by_name("jetson-tx1").unwrap();
+    let cost = PartitionCost::new(
+        &net,
+        batch,
+        link,
+        EdgePowerProfile::jetson_tx1(),
+        &edge,
+        edge.boost_mhz,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+
+    let objective_name = args.str("objective", "min-edp");
+    let objective = Objective::parse(&objective_name).ok_or_else(|| {
+        anyhow!(
+            "unknown objective '{objective_name}' (one of: {})",
+            Objective::all().map(|o| o.name()).join(", ")
+        )
+    })?;
+    let constraints = DseConstraints {
+        max_power_w: args.f64("max-power"),
+        max_latency_s: args.f64("max-latency"),
+        min_throughput: None,
+        respect_memory: false,
+    };
+    let cache = DescriptorCache::new();
+    let space = PartitionSpace::full(cost.layers());
+    let design = space.design_space(args.usize("freq-steps", 4), cache.gpus());
+    let exploration = Explorer::for_partition(&net, &cost)
+        .constraints(constraints)
+        .objective(objective)
+        .cache(&cache)
+        .run(&Grid::new(design))?;
+
+    println!(
+        "partition DSE for {} b{batch} over {link_name} (edge {}; {} cuts x {} server GPUs; objective {}):",
+        net.name,
+        edge.name,
+        cost.layers() + 1,
+        cache.gpus().len(),
+        objective.name()
+    );
+    let mut t = Table::new(&[
+        "#", "cut@layer", "server gpu", "MHz", "ms", "J/inf(dev)", "W", "inf/s",
+    ]);
+    for (i, s) in exploration.top_k(args.usize("top", 10)).iter().enumerate() {
+        let cut = decode_cut(s.point.batch).unwrap_or(0);
+        t.row(&[
+            format!("{}", i + 1),
+            format!("{cut}@{}", cost.cut_layer_name(cut)),
+            s.point.gpu.clone(),
+            format!("{:.0}", s.point.f_mhz),
+            f(s.latency_s * 1e3, 2),
+            f(s.energy_per_inf_j, 4),
+            f(s.power_w, 2),
+            f(s.throughput, 0),
+        ]);
+    }
+    print!("{}", t.render());
+    let pareto = exploration.pareto();
+    println!("pareto frontier ({} points):", pareto.len());
+    for s in &pareto {
+        let cut = decode_cut(s.point.batch).unwrap_or(0);
+        println!(
+            "  cut {cut:>3} ({}) on {} @ {:.0} MHz: {:.2} ms, {:.4} J/inf",
+            cost.cut_layer_name(cut),
+            s.point.gpu,
+            s.point.f_mhz,
+            s.latency_s * 1e3,
+            s.energy_per_inf_j
+        );
+    }
     Ok(())
 }
 
@@ -618,6 +729,9 @@ COMMANDS:
                                                    REST API (--journal: durable job
                                                    log, replayed on restart)
   offload   --network N [--bandwidth M] [--rtt MS] local-vs-cloud decision
+  partition --network N [--link wifi|ble|gigabit-ethernet] [--batch B]
+            [--freq-steps S] [--objective O] [--top K]
+                                                   edge<->server cut-point DSE
   search    --network N [--budget B] [--objective O] [--config F]
                                                    random/local/anneal/surrogate_ei/
                                                    nsga2 search vs grid
@@ -642,6 +756,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "serve" => cmd_serve(&args),
         "offload" => cmd_offload(&args),
+        "partition" => cmd_partition(&args),
         "search" => cmd_search(&args),
         "report" => cmd_report(&args),
         "gpus" => cmd_gpus(),

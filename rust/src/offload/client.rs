@@ -194,6 +194,18 @@ impl OffloadClient {
             .ok_or_else(|| anyhow!("202 record without a job id: {j:?}"))
     }
 
+    /// Submit an async partition search (`POST /v1/partition/jobs`,
+    /// same body schema as `/v1/partition`); returns the queued job id
+    /// from the 202 record.
+    pub fn submit_partition_job(&self, body: &str) -> Result<u64> {
+        let (status, resp) = self.post("/v1/partition/jobs", body)?;
+        let j = Self::parse_expecting(202, status, &resp)?;
+        j.get("id")
+            .and_then(Json::as_f64)
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow!("202 record without a job id: {j:?}"))
+    }
+
     /// Poll one job record (`GET /v1/jobs/{id}`).
     pub fn job_status(&self, id: u64) -> Result<Json> {
         let (status, resp) = self.get(&format!("/v1/jobs/{id}"))?;

@@ -14,7 +14,12 @@ pub use client::{OffloadClient, WaitError};
 pub use jobs::{Job, JobConfig, JobManager, JobStatus};
 pub use journal::Journal;
 pub use model::{
-    decide, local_estimate, offload_estimate, Constraints, Decision, EdgePowerProfile,
-    ExecutionEstimate, Link, Recommendation,
+    Constraints, Decision, EdgePowerProfile, ExecutionEstimate, Link, Recommendation,
 };
-pub use server::{recovered_search_task, OffloadServer, ServerState};
+// Legacy free functions: kept re-exported for source compatibility; the
+// deprecation attribute travels with them to call sites.
+#[allow(deprecated)]
+pub use model::{decide, local_estimate, offload_estimate};
+pub use server::{
+    recovered_partition_task, recovered_search_task, OffloadServer, ServerState,
+};

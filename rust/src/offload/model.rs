@@ -59,16 +59,28 @@ pub struct ExecutionEstimate {
 }
 
 /// Estimate local execution from a (predicted or simulated) local runtime.
+///
+/// Deprecated: this is the cut-`L` (all-edge) special case of the
+/// partition evaluator; the delegation is bit-exact.
+#[deprecated(
+    since = "0.4.0",
+    note = "use partition::edge_only_estimate (the all-edge special case of partition::PartitionCost)"
+)]
 pub fn local_estimate(local_latency_s: f64, profile: &EdgePowerProfile) -> ExecutionEstimate {
-    ExecutionEstimate {
-        latency_s: local_latency_s,
-        device_energy_j: profile.local_active_w * local_latency_s,
-        device_power_w: profile.local_active_w,
-    }
+    crate::partition::edge_only_estimate(local_latency_s, profile)
 }
 
 /// Estimate offloaded execution: upload input, wait for the cloud to run
 /// it, receive the (small) result.
+///
+/// Deprecated: this is the cut-0 (all-server) special case of the
+/// partition evaluator — zero edge prefix, the whole network as the
+/// server suffix, a link with no per-byte energy term. The delegation is
+/// bit-exact.
+#[deprecated(
+    since = "0.4.0",
+    note = "use partition::split_estimate (the cut-0 special case of partition::PartitionCost)"
+)]
 pub fn offload_estimate(
     net: &Network,
     batch: usize,
@@ -76,16 +88,13 @@ pub fn offload_estimate(
     cloud_latency_s: f64,
     profile: &EdgePowerProfile,
 ) -> ExecutionEstimate {
-    let bytes = input_bytes(net, batch);
-    let tx_s = link.transfer_s(bytes);
-    let wait_s = cloud_latency_s + link.rtt_ms * 0.5e-3;
-    let latency = tx_s + wait_s;
-    let energy = profile.radio_tx_w * tx_s + profile.idle_w * wait_s;
-    ExecutionEstimate {
-        latency_s: latency,
-        device_energy_j: energy,
-        device_power_w: energy / latency.max(1e-12),
-    }
+    crate::partition::split_estimate(
+        0.0,
+        input_bytes(net, batch),
+        &crate::partition::LinkModel::from(*link),
+        cloud_latency_s,
+        profile,
+    )
 }
 
 /// The recommendation.
@@ -124,40 +133,23 @@ pub struct Decision {
     pub recommendation: Recommendation,
 }
 
-fn feasible(e: &ExecutionEstimate, c: &Constraints) -> bool {
-    c.max_latency_s.map(|m| e.latency_s <= m).unwrap_or(true)
-        && c.max_energy_j.map(|m| e.device_energy_j <= m).unwrap_or(true)
-}
-
 /// Decide local vs offload, minimizing device energy among feasible
 /// options (the battery-lifetime objective the paper motivates).
+///
+/// Deprecated: the comparison logic lives in [`crate::partition::choose`]
+/// now (identical semantics); this wrapper only survives for source
+/// compatibility.
+#[deprecated(since = "0.4.0", note = "use partition::choose")]
 pub fn decide(
     local: ExecutionEstimate,
     offload: ExecutionEstimate,
     constraints: &Constraints,
 ) -> Decision {
-    let lf = feasible(&local, constraints);
-    let of = feasible(&offload, constraints);
-    let recommendation = match (lf, of) {
-        (false, false) => Recommendation::Infeasible,
-        (true, false) => Recommendation::Local,
-        (false, true) => Recommendation::Offload,
-        (true, true) => {
-            if offload.device_energy_j < local.device_energy_j {
-                Recommendation::Offload
-            } else {
-                Recommendation::Local
-            }
-        }
-    };
-    Decision {
-        local,
-        offload,
-        recommendation,
-    }
+    crate::partition::choose(local, offload, constraints)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy wrappers are exactly what's under test
 mod tests {
     use super::*;
     use crate::cnn::zoo;

@@ -40,6 +40,22 @@
 //!   `429` when the client's quota or the queue bound is hit, `503` +
 //!   `Retry-After` when the queue crosses the load-shedding high-water
 //!   mark.
+//! * `POST /v1/partition` — body: `{network, link?, batch?, min_cut?,
+//!   max_cut?, gpus?, edge_gpu?, strategy?, budget?, seed?, objective?,
+//!   constraints…?, top_k?}` → a cut-point DSE run: which prefix of the
+//!   network to run on the edge device, which server GPU/frequency runs
+//!   the suffix, and what the link transfer costs in between (see
+//!   [`crate::partition`]). `link` is a preset name
+//!   ([`LinkModel::by_name`]) or an inline `{bandwidth_mbps, rtt_ms?,
+//!   pj_per_byte?}` object. Runs on the analytic partition evaluator —
+//!   **no ML predictor required** — through the same `Explorer` core as
+//!   `/v1/search` (same strategies, budgets, telemetry).
+//! * `POST /v1/partition/jobs` — async face of `/v1/partition`, exactly
+//!   like `/v1/search/jobs` (same validation at submit time, `202` +
+//!   job record, quotas/shedding). The journaled body is tagged
+//!   `"kind": "partition"` so restart recovery rebuilds it through
+//!   [`recovered_partition_task`]. A completed job's `result` is
+//!   bit-identical to the synchronous response for the same body.
 //! * `GET /v1/jobs` — list retained jobs (results omitted).
 //! * `GET /v1/jobs/{id}` — job status + live progress (the run's
 //!   evaluation counter) + result once done; `404` after eviction
@@ -75,19 +91,22 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::cnn::ir::Network;
+use crate::cnn::launch::input_bytes;
 use crate::cnn::zoo;
 use crate::coordinator::{Predictor, Task};
 use crate::dse::{
     Anneal, DescriptorCache, DesignSpace, DseConstraints, Explorer, Grid, LocalRestarts, Nsga2,
-    Objective, Random, ScoredPoint, SurrogateEI,
+    Objective, Random, ScoredPoint, SurrogateEI, Telemetry,
 };
-use crate::gpu::specs::by_name;
+use crate::gpu::specs::{by_name, catalog, GpuSpec};
 use crate::ml::features::N_FEATURES;
 use crate::ml::matrix::FeatureMatrix;
 use crate::offload::http::{read_request, write_response, Request, Response};
 use crate::offload::jobs::{JobConfig, JobManager, JobTask, SubmitError};
-use crate::offload::model::{
-    decide, local_estimate, offload_estimate, Constraints, EdgePowerProfile, Link,
+use crate::offload::model::{Constraints, EdgePowerProfile, Link};
+use crate::partition::{
+    choose, decode_cut, edge_only_estimate, split_estimate, LinkModel, PartitionCost,
+    PartitionSpace, PRESET_NAMES,
 };
 use crate::sim::Simulator;
 use crate::util::failpoint;
@@ -337,6 +356,8 @@ fn route(req: &Request, state: &ServerState, client: &str) -> Response {
         ("POST", "/v1/predict/bulk") => json_endpoint(req, |j| predict_bulk(j, state)),
         ("POST", "/v1/search") => json_endpoint(req, |j| search(j, state)),
         ("POST", "/v1/search/jobs") => search_submit(req, state, client),
+        ("POST", "/v1/partition") => json_endpoint(req, partition),
+        ("POST", "/v1/partition/jobs") => partition_submit(req, state, client),
         ("GET", "/v1/jobs") => jobs_list(state),
         ("GET", p) if p.starts_with("/v1/jobs/") => job_status(p, state),
         ("DELETE", p) if p.starts_with("/v1/jobs/") => job_cancel(p, state),
@@ -431,9 +452,18 @@ fn offload_decide(j: &Json, state: &ServerState) -> Result<Json> {
         }
     };
 
-    let local = local_estimate(local_latency, &profile);
-    let remote = offload_estimate(&net, batch, &link, cloud_latency, &profile);
-    let d = decide(
+    // The 2-point special case of the partition evaluator: all-edge
+    // (cut L) vs all-server (cut 0). Delegation is bit-exact with the
+    // retired `local_estimate`/`offload_estimate` free functions.
+    let local = edge_only_estimate(local_latency, &profile);
+    let remote = split_estimate(
+        0.0,
+        input_bytes(&net, batch),
+        &LinkModel::from(link),
+        cloud_latency,
+        &profile,
+    );
+    let d = choose(
         local,
         remote,
         &Constraints {
@@ -626,6 +656,119 @@ fn req_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
     }
 }
 
+/// Strict optional-float field, same contract as [`req_usize`]: absent →
+/// `default`; present but not a number → error.
+fn req_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| anyhow!("'{key}' must be a number")),
+    }
+}
+
+/// The `objective` knob — shared by `/v1/search` and `/v1/partition`.
+fn parse_objective(j: &Json) -> Result<Objective> {
+    let objective_name = j.str_or("objective", "min-edp");
+    Objective::parse(objective_name).ok_or_else(|| {
+        anyhow!(
+            "unknown objective '{objective_name}' (one of: {})",
+            Objective::all().map(|o| o.name()).join(", ")
+        )
+    })
+}
+
+/// The constraint knobs — shared by `/v1/search` and `/v1/partition`.
+fn parse_dse_constraints(j: &Json) -> DseConstraints {
+    DseConstraints {
+        max_power_w: j.get("max_power_w").and_then(Json::as_f64),
+        max_latency_s: j.get("max_latency_s").and_then(Json::as_f64),
+        min_throughput: j.get("min_throughput").and_then(Json::as_f64),
+        respect_memory: j.bool_or("respect_memory", false),
+    }
+}
+
+/// Strict seed parsing: JSON numbers are f64, exact only up to 2^53 —
+/// a lossy cast would silently break "same seed, same result".
+fn parse_seed(j: &Json) -> Result<u64> {
+    match j.get("seed") {
+        None => Ok(1),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'seed' must be a number"))?;
+            anyhow::ensure!(
+                f >= 0.0 && f.fract() == 0.0 && f <= (1u64 << 53) as f64,
+                "'seed' must be a non-negative integer <= 2^53 (JSON numbers \
+                 lose integer precision beyond that), got {f}"
+            );
+            Ok(f as u64)
+        }
+    }
+}
+
+/// `top_k` fails loudly like every other knob (`req_usize` contract):
+/// it used to be silently clamped to MAX_REST_TOP_K, the one knob
+/// whose out-of-range value ran a *different* query than requested.
+fn parse_top_k(j: &Json) -> Result<usize> {
+    let top_k = req_usize(j, "top_k", 5)?;
+    anyhow::ensure!(
+        top_k <= MAX_REST_TOP_K,
+        "'top_k' must be in 0..={MAX_REST_TOP_K}, got {top_k}"
+    );
+    Ok(top_k)
+}
+
+/// The `strategy` knob — shared by `/v1/search` and `/v1/partition`.
+/// `mk_grid` builds the endpoint's own exhaustive lattice (over its
+/// `axis`: the batch ladder for search, the cut ladder for partition)
+/// when the grid strategy is picked.
+fn parse_strategy(
+    j: &Json,
+    budget: usize,
+    axis: &str,
+    mk_grid: impl FnOnce(usize) -> DesignSpace,
+) -> Result<StrategySpec> {
+    Ok(match j.str_or("strategy", "random") {
+        "grid" => {
+            let steps = req_usize(j, "freq_steps", 8)?;
+            anyhow::ensure!(
+                (1..=MAX_REST_FREQ_STEPS).contains(&steps),
+                "'freq_steps' must be in 1..={MAX_REST_FREQ_STEPS}, got {steps}"
+            );
+            let space = mk_grid(steps);
+            // No silent truncation: a grid answer must cover the whole
+            // grid, so the budget has to fit it (the budgeted searches
+            // are the right tool for partial coverage).
+            anyhow::ensure!(
+                space.len() <= budget,
+                "grid has {} points but 'budget' is {budget} — raise 'budget' \
+                 (max {MAX_REST_SEARCH_BUDGET}) or reduce 'freq_steps'/'{axis}'",
+                space.len()
+            );
+            StrategySpec::Grid(space)
+        }
+        "random" => StrategySpec::Random,
+        "local" => StrategySpec::Local,
+        "anneal" => StrategySpec::Anneal,
+        "surrogate_ei" => StrategySpec::SurrogateEI,
+        "nsga2" => {
+            // The genetic search quantizes the frequency axis to the same
+            // DVFS lattice the grid uses; a lattice needs both ends.
+            let steps = req_usize(j, "freq_steps", 8)?;
+            anyhow::ensure!(
+                (2..=MAX_REST_FREQ_STEPS).contains(&steps),
+                "'freq_steps' must be in 2..={MAX_REST_FREQ_STEPS} for nsga2, got {steps}"
+            );
+            StrategySpec::Nsga2(steps)
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown strategy '{other}' (one of: grid, random, local, anneal, \
+                 surrogate_ei, nsga2)"
+            ))
+        }
+    })
+}
+
 /// A parsed, fully validated `/v1/search` request — the one validation
 /// path shared by the synchronous endpoint and `POST /v1/search/jobs`
 /// (an async submission is rejected with the same 400s at submit time,
@@ -706,84 +849,13 @@ fn parse_search(j: &Json, cache: &DescriptorCache) -> Result<SearchSpec> {
             "'batches' entries must be in 1..={MAX_REST_BATCH}, got {b}"
         );
     }
-    let objective_name = j.str_or("objective", "min-edp");
-    let objective = Objective::parse(objective_name).ok_or_else(|| {
-        anyhow!(
-            "unknown objective '{objective_name}' (one of: {})",
-            Objective::all().map(|o| o.name()).join(", ")
-        )
+    let objective = parse_objective(j)?;
+    let constraints = parse_dse_constraints(j);
+    let seed = parse_seed(j)?;
+    let top_k = parse_top_k(j)?;
+    let strategy = parse_strategy(j, budget, "batches", |steps| {
+        DesignSpace::grid(steps, &batches, cache.gpus())
     })?;
-    let constraints = DseConstraints {
-        max_power_w: j.get("max_power_w").and_then(Json::as_f64),
-        max_latency_s: j.get("max_latency_s").and_then(Json::as_f64),
-        min_throughput: j.get("min_throughput").and_then(Json::as_f64),
-        respect_memory: j.bool_or("respect_memory", false),
-    };
-    // Strict seed parsing: JSON numbers are f64, exact only up to 2^53 —
-    // a lossy cast would silently break "same seed, same result".
-    let seed = match j.get("seed") {
-        None => 1,
-        Some(v) => {
-            let f = v
-                .as_f64()
-                .ok_or_else(|| anyhow!("'seed' must be a number"))?;
-            anyhow::ensure!(
-                f >= 0.0 && f.fract() == 0.0 && f <= (1u64 << 53) as f64,
-                "'seed' must be a non-negative integer <= 2^53 (JSON numbers \
-                 lose integer precision beyond that), got {f}"
-            );
-            f as u64
-        }
-    };
-    // `top_k` fails loudly like every other knob (`req_usize` contract):
-    // it used to be silently clamped to MAX_REST_TOP_K, the one knob
-    // whose out-of-range value ran a *different* query than requested.
-    let top_k = req_usize(j, "top_k", 5)?;
-    anyhow::ensure!(
-        top_k <= MAX_REST_TOP_K,
-        "'top_k' must be in 0..={MAX_REST_TOP_K}, got {top_k}"
-    );
-
-    let strategy = match j.str_or("strategy", "random") {
-        "grid" => {
-            let steps = req_usize(j, "freq_steps", 8)?;
-            anyhow::ensure!(
-                (1..=MAX_REST_FREQ_STEPS).contains(&steps),
-                "'freq_steps' must be in 1..={MAX_REST_FREQ_STEPS}, got {steps}"
-            );
-            let space = DesignSpace::grid(steps, &batches, cache.gpus());
-            // No silent truncation: a grid answer must cover the whole
-            // grid, so the budget has to fit it (the budgeted searches
-            // are the right tool for partial coverage).
-            anyhow::ensure!(
-                space.len() <= budget,
-                "grid has {} points but 'budget' is {budget} — raise 'budget' \
-                 (max {MAX_REST_SEARCH_BUDGET}) or reduce 'freq_steps'/'batches'",
-                space.len()
-            );
-            StrategySpec::Grid(space)
-        }
-        "random" => StrategySpec::Random,
-        "local" => StrategySpec::Local,
-        "anneal" => StrategySpec::Anneal,
-        "surrogate_ei" => StrategySpec::SurrogateEI,
-        "nsga2" => {
-            // The genetic search quantizes the frequency axis to the same
-            // DVFS lattice the grid uses; a lattice needs both ends.
-            let steps = req_usize(j, "freq_steps", 8)?;
-            anyhow::ensure!(
-                (2..=MAX_REST_FREQ_STEPS).contains(&steps),
-                "'freq_steps' must be in 2..={MAX_REST_FREQ_STEPS} for nsga2, got {steps}"
-            );
-            StrategySpec::Nsga2(steps)
-        }
-        other => {
-            return Err(anyhow!(
-                "unknown strategy '{other}' (one of: grid, random, local, anneal, \
-                 surrogate_ei, nsga2)"
-            ))
-        }
-    };
     Ok(SearchSpec {
         net,
         strategy,
@@ -849,7 +921,13 @@ fn run_search(
             "pareto",
             jarr(exploration.pareto().iter().map(scored_json).collect()),
         );
-    let t = &exploration.telemetry;
+    o.set("telemetry", telemetry_json(&exploration.telemetry));
+    Ok(o)
+}
+
+/// Run telemetry as a REST record — identical shape for `/v1/search`
+/// and `/v1/partition`.
+fn telemetry_json(t: &Telemetry) -> Json {
     let mut tj = Json::obj();
     tj.set("evaluations", jnum(t.evaluations as f64))
         .set(
@@ -863,8 +941,7 @@ fn run_search(
         .set("throughput", jnum(t.rejected.throughput as f64))
         .set("memory", jnum(t.rejected.memory as f64));
     tj.set("rejected", rj);
-    o.set("telemetry", tj);
-    Ok(o)
+    tj
 }
 
 /// The "no predictor attached" refusal shared by both search faces.
@@ -900,6 +977,312 @@ pub fn recovered_search_task(
     Ok(Box::new(
         move |cancel: Arc<AtomicBool>, progress: Arc<AtomicUsize>| {
             run_search(&spec, &predictor, &cache, Some(cancel), Some(progress))
+        },
+    ))
+}
+
+/// A parsed, fully validated `/v1/partition` request — the one
+/// validation path shared by the synchronous endpoint,
+/// `POST /v1/partition/jobs`, and journal recovery
+/// ([`recovered_partition_task`]). None of them need the ML predictor:
+/// partition scoring runs on the pre-traced analytic evaluator.
+struct PartitionSpec {
+    net: Network,
+    link: LinkModel,
+    edge: GpuSpec,
+    /// Server-GPU candidates (the search's GPU axis).
+    gpus: Vec<GpuSpec>,
+    batch: usize,
+    space: PartitionSpace,
+    strategy: StrategySpec,
+    budget: usize,
+    objective: Objective,
+    constraints: DseConstraints,
+    seed: u64,
+    top_k: usize,
+}
+
+/// Validate a `/v1/partition` body into a [`PartitionSpec`]. Pure in
+/// the body (no server state): the recovery path re-validates journaled
+/// bodies with exactly the same rules and error texts.
+fn parse_partition(j: &Json) -> Result<PartitionSpec> {
+    let net = net_for(j)?;
+    let layers = net.layers.len();
+    let budget = req_usize(j, "budget", 64)?;
+    anyhow::ensure!(
+        (1..=MAX_REST_SEARCH_BUDGET).contains(&budget),
+        "'budget' must be in 1..={MAX_REST_SEARCH_BUDGET}, got {budget}"
+    );
+    let batch = req_usize(j, "batch", 1)?;
+    anyhow::ensure!(
+        (1..=MAX_REST_BATCH).contains(&batch),
+        "'batch' must be in 1..={MAX_REST_BATCH}, got {batch}"
+    );
+    let link = match j.get("link") {
+        None => LinkModel::wifi(),
+        Some(v) => {
+            if let Some(name) = v.as_str() {
+                LinkModel::by_name(name).ok_or_else(|| {
+                    anyhow!(
+                        "unknown link preset '{name}' (one of: {})",
+                        PRESET_NAMES.join(", ")
+                    )
+                })?
+            } else {
+                let bw = v.get("bandwidth_mbps").and_then(Json::as_f64).ok_or_else(|| {
+                    anyhow!(
+                        "'link' must be a preset name (one of: {}) or an object \
+                         with 'bandwidth_mbps'",
+                        PRESET_NAMES.join(", ")
+                    )
+                })?;
+                anyhow::ensure!(
+                    bw > 0.0 && bw.is_finite(),
+                    "'link.bandwidth_mbps' must be positive and finite, got {bw}"
+                );
+                let rtt = req_f64(v, "rtt_ms", 0.0)?;
+                anyhow::ensure!(
+                    rtt >= 0.0 && rtt.is_finite(),
+                    "'link.rtt_ms' must be non-negative and finite, got {rtt}"
+                );
+                let pj = req_f64(v, "pj_per_byte", 0.0)?;
+                anyhow::ensure!(
+                    pj >= 0.0 && pj.is_finite(),
+                    "'link.pj_per_byte' must be non-negative and finite, got {pj}"
+                );
+                LinkModel::new(bw, rtt, pj)
+            }
+        }
+    };
+    let edge_name = j.str_or("edge_gpu", "jetson-tx1");
+    let edge = by_name(edge_name).ok_or_else(|| anyhow!("unknown edge gpu '{edge_name}'"))?;
+    let gpus: Vec<GpuSpec> = match j.get("gpus") {
+        None => catalog(),
+        Some(v) => {
+            let names = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("'gpus' must be an array of GPU names"))?;
+            anyhow::ensure!(!names.is_empty(), "'gpus' is empty");
+            names
+                .iter()
+                .map(|n| {
+                    let name = n
+                        .as_str()
+                        .ok_or_else(|| anyhow!("'gpus' entries must be strings"))?;
+                    by_name(name).ok_or_else(|| anyhow!("unknown gpu '{name}'"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    let min_cut = req_usize(j, "min_cut", 0)?;
+    let max_cut = req_usize(j, "max_cut", layers)?;
+    anyhow::ensure!(
+        min_cut <= max_cut && max_cut <= layers,
+        "cut bounds must satisfy min_cut <= max_cut <= {layers} (the layer \
+         count of {}), got {min_cut}..={max_cut}",
+        net.name
+    );
+    let space = PartitionSpace::bounded(min_cut, max_cut);
+    let objective = parse_objective(j)?;
+    let constraints = parse_dse_constraints(j);
+    let seed = parse_seed(j)?;
+    let top_k = parse_top_k(j)?;
+    let strategy = parse_strategy(j, budget, "cuts", |steps| {
+        space.design_space(steps, &gpus)
+    })?;
+    Ok(PartitionSpec {
+        net,
+        link,
+        edge,
+        gpus,
+        batch,
+        space,
+        strategy,
+        budget,
+        objective,
+        constraints,
+        seed,
+        top_k,
+    })
+}
+
+/// One scored partition point as a REST record: the design point's
+/// `batch` slot carries the encoded cut, decoded here into `cut` plus
+/// its human-readable layer label.
+fn partition_scored_json(s: &ScoredPoint, cost: &PartitionCost) -> Json {
+    let cut = decode_cut(s.point.batch).unwrap_or(0);
+    let mut o = Json::obj();
+    o.set("gpu", jstr(&s.point.gpu))
+        .set("f_mhz", jnum(s.point.f_mhz))
+        .set("cut", jnum(cut as f64))
+        .set("cut_layer", jstr(cost.cut_layer_name(cut)))
+        .set("power_w", jnum(s.power_w))
+        .set("cycles", jnum(s.cycles))
+        .set("latency_s", jnum(s.latency_s))
+        .set("throughput", jnum(s.throughput))
+        .set("energy_per_inf_j", jnum(s.energy_per_inf_j))
+        .set("feasible", Json::Bool(s.feasible));
+    o
+}
+
+/// Execute a validated [`PartitionSpec`] and assemble the response JSON
+/// — the one execution path behind the synchronous endpoint, the async
+/// job workers, and journal recovery. The evaluator is pure arithmetic
+/// over per-construction kernel traces, so same spec + same seed → the
+/// same JSON, bit for bit, on every path and at every worker count.
+fn run_partition(
+    spec: &PartitionSpec,
+    cancel: Option<Arc<AtomicBool>>,
+    progress: Option<Arc<AtomicUsize>>,
+) -> Result<Json> {
+    let cost = PartitionCost::new(
+        &spec.net,
+        spec.batch,
+        spec.link,
+        EdgePowerProfile::jetson_tx1(),
+        &spec.edge,
+        spec.edge.boost_mhz,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    let cache = DescriptorCache::with_gpus(spec.gpus.clone());
+    let mut explorer = Explorer::for_partition(&spec.net, &cost)
+        .constraints(spec.constraints)
+        .objective(spec.objective)
+        .cache(&cache)
+        .seed(spec.seed)
+        .budget(spec.budget);
+    if let Some(t) = cancel {
+        explorer = explorer.cancel_token(t);
+    }
+    if let Some(c) = progress {
+        explorer = explorer.progress(c);
+    }
+    let cuts = spec.space.encoded();
+    let exploration = match &spec.strategy {
+        StrategySpec::Grid(space) => explorer.run(&Grid::borrowed(space))?,
+        StrategySpec::Random => explorer.run(&Random::new(&cuts))?,
+        StrategySpec::Local => explorer.run(&LocalRestarts::new(&cuts))?,
+        StrategySpec::Anneal => explorer.run(&Anneal::new(&cuts))?,
+        StrategySpec::SurrogateEI => explorer.run(&SurrogateEI::new(&cuts))?,
+        StrategySpec::Nsga2(steps) => explorer.run(&Nsga2::new(&cuts, *steps))?,
+    };
+
+    let mut o = Json::obj();
+    o.set("network", jstr(&spec.net.name))
+        .set("strategy", jstr(exploration.strategy))
+        .set("objective", jstr(exploration.objective.name()))
+        .set("batch", jnum(spec.batch as f64))
+        .set("edge_gpu", jstr(spec.edge.name))
+        .set(
+            "best",
+            exploration
+                .best
+                .as_ref()
+                .map(|s| partition_scored_json(s, &cost))
+                .unwrap_or(Json::Null),
+        )
+        .set(
+            "top",
+            jarr(
+                exploration
+                    .top_k(spec.top_k)
+                    .iter()
+                    .map(|s| partition_scored_json(s, &cost))
+                    .collect(),
+            ),
+        )
+        .set(
+            "pareto",
+            jarr(
+                exploration
+                    .pareto()
+                    .iter()
+                    .map(|s| partition_scored_json(s, &cost))
+                    .collect(),
+            ),
+        );
+    // Segment breakdown for the winning point: where the end-to-end
+    // latency goes (edge prefix / link / server suffix).
+    if let Some(best) = &exploration.best {
+        if let (Some(cut), Some(g)) = (decode_cut(best.point.batch), by_name(&best.point.gpu)) {
+            if let Ok(e) = cost.estimate(cut, &g, best.point.f_mhz) {
+                let mut b = Json::obj();
+                b.set("edge_s", jnum(e.edge_s))
+                    .set("tx_s", jnum(e.tx_s))
+                    .set("server_s", jnum(e.server_s))
+                    .set("wait_s", jnum(e.wait_s))
+                    .set("tx_bytes", jnum(e.tx_bytes as f64))
+                    .set("device_energy_j", jnum(e.device_energy_j))
+                    .set("server_energy_j", jnum(e.server_energy_j))
+                    .set("server_avg_power_w", jnum(e.server_avg_power_w));
+                o.set("breakdown", b);
+            }
+        }
+    }
+    o.set("telemetry", telemetry_json(&exploration.telemetry));
+    Ok(o)
+}
+
+/// POST /v1/partition — cut-point DSE on the connection thread. Unlike
+/// `/v1/search` this never touches the ML predictor, so it works on a
+/// simulator-only server too.
+fn partition(j: &Json) -> Result<Json> {
+    let spec = parse_partition(j)?;
+    run_partition(&spec, None, None)
+}
+
+/// POST /v1/partition/jobs — validate exactly like `/v1/partition`,
+/// then hand the run to the background job pool (same admission control
+/// as `/v1/search/jobs`). The journaled body is tagged
+/// `"kind": "partition"` so restart recovery dispatches it back through
+/// [`recovered_partition_task`] rather than the search validator.
+fn partition_submit(req: &Request, state: &ServerState, client: &str) -> Response {
+    let parsed = req
+        .body_str()
+        .and_then(|s| Json::parse(s).map_err(|e| anyhow!("{e}")))
+        .and_then(|mut j| {
+            let spec = parse_partition(&j)?;
+            j.set("kind", jstr("partition"));
+            Ok((j, spec))
+        });
+    let (body, spec) = match parsed {
+        Ok(v) => v,
+        Err(e) => return error_json(400, format!("{e:#}")),
+    };
+    let label = format!(
+        "partition {} {} budget={}",
+        spec.strategy.name(),
+        spec.net.name,
+        spec.budget
+    );
+    let budget = spec.budget;
+    let task = Box::new(move |cancel: Arc<AtomicBool>, progress: Arc<AtomicUsize>| {
+        run_partition(&spec, Some(cancel), Some(progress))
+    });
+    match state.jobs.submit(client, label, budget, body, task) {
+        Ok(job) => Response::json(202, job.to_json(true).to_string()),
+        Err(e @ SubmitError::QueueFull { .. }) => {
+            error_json(429, e.to_string()).with_retry_after(1)
+        }
+        Err(e @ SubmitError::QuotaExceeded { .. }) => error_json(429, e.to_string()),
+        Err(e @ SubmitError::Overloaded { .. }) => {
+            error_json(503, e.to_string()).with_retry_after(1)
+        }
+        Err(e @ SubmitError::ShuttingDown) => error_json(503, e.to_string()),
+    }
+}
+
+/// Rebuild an interrupted `/v1/partition/jobs` task from its journaled
+/// body (tagged `"kind": "partition"` at submit time) — the partition
+/// arm of the `rebuild` hook [`JobManager::recover`] takes. Needs
+/// neither the predictor nor a descriptor cache: partition scoring runs
+/// on the pre-traced analytic model, so recovery works even on a server
+/// restarted without an ML predictor attached.
+pub fn recovered_partition_task(body: &Json) -> Result<JobTask> {
+    let spec = parse_partition(body)?;
+    Ok(Box::new(
+        move |cancel: Arc<AtomicBool>, progress: Arc<AtomicUsize>| {
+            run_partition(&spec, Some(cancel), Some(progress))
         },
     ))
 }
@@ -1266,6 +1649,59 @@ mod tests {
         for name in ["grid", "random", "local", "anneal", "surrogate_ei", "nsga2"] {
             assert!(msg.contains(name), "missing {name} in: {msg}");
         }
+    }
+
+    #[test]
+    fn partition_endpoint_needs_no_predictor() {
+        // The partition evaluator is analytic — the simulator-only
+        // server answers /v1/partition even though /v1/search refuses.
+        let (_srv, client) = server();
+        let req = r#"{"network":"lenet5","link":"wifi","strategy":"random","budget":8,"seed":3}"#;
+        let (status, body) = client.post("/v1/partition", req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let best = j.get("best").unwrap();
+        assert!(best.get("cut").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(best.get("cut_layer").unwrap().as_str().is_some());
+        assert!(j.get("breakdown").is_some(), "best point carries a segment breakdown");
+        assert!(
+            j.path(&["telemetry", "evaluations"]).unwrap().as_f64().unwrap() > 0.0
+        );
+    }
+
+    #[test]
+    fn parse_partition_validates_link_and_cut_bounds() {
+        let ok = Json::parse(r#"{"network":"lenet5"}"#).unwrap();
+        assert!(parse_partition(&ok).is_ok(), "defaults validate");
+
+        let bad_link = Json::parse(r#"{"network":"lenet5","link":"carrier-pigeon"}"#).unwrap();
+        let err = parse_partition(&bad_link).unwrap_err().to_string();
+        assert!(err.contains("unknown link preset"), "{err}");
+        for name in PRESET_NAMES {
+            assert!(err.contains(name), "missing {name} in: {err}");
+        }
+
+        let bad_cuts = Json::parse(r#"{"network":"lenet5","min_cut":5,"max_cut":2}"#).unwrap();
+        let err = parse_partition(&bad_cuts).unwrap_err().to_string();
+        assert!(err.contains("min_cut <= max_cut"), "{err}");
+        let deep = Json::parse(r#"{"network":"lenet5","max_cut":9999}"#).unwrap();
+        assert!(parse_partition(&deep).is_err(), "cut past the last layer is a 400");
+
+        // Inline link objects: bandwidth required, energy term optional.
+        let custom = Json::parse(
+            r#"{"network":"lenet5","link":{"bandwidth_mbps":42.0,"rtt_ms":7.5}}"#,
+        )
+        .unwrap();
+        let spec = parse_partition(&custom).unwrap();
+        assert_eq!(spec.link.bandwidth_mbps, 42.0);
+        assert_eq!(spec.link.pj_per_byte, 0.0);
+        let no_bw = Json::parse(r#"{"network":"lenet5","link":{"rtt_ms":7.5}}"#).unwrap();
+        let err = parse_partition(&no_bw).unwrap_err().to_string();
+        assert!(err.contains("bandwidth_mbps"), "{err}");
+
+        let bad_gpu = Json::parse(r#"{"network":"lenet5","gpus":["not-a-gpu"]}"#).unwrap();
+        let err = parse_partition(&bad_gpu).unwrap_err().to_string();
+        assert!(err.contains("unknown gpu"), "{err}");
     }
 
     #[test]

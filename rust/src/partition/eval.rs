@@ -1,0 +1,504 @@
+//! The partition evaluator: price every cut point of a CNN.
+//!
+//! For a cut `c ∈ 0..=L` the end-to-end cost composes three segments:
+//!
+//! ```text
+//!   edge GPU runs layers 0..c   →   link moves cut activation   →   server runs c..L
+//!   (edge timing model +            (LinkModel: serialization +     (existing GPU timing
+//!    EdgePowerProfile energy)        RTT + pJ/byte energy)           + power models)
+//! ```
+//!
+//! `c == 0` is all-server (the raw input crosses the link — exactly the
+//! legacy `offload_estimate`); `c == L` is all-edge (nothing crosses —
+//! exactly the legacy `local_estimate`). [`PartitionCost`] pre-traces
+//! every kernel once, so evaluating a cut on any `(server GPU, f)` is
+//! pure arithmetic over cached traces: deterministic, worker-count
+//! invariant, and cheap enough to be a search axis.
+
+use anyhow::{ensure, Result};
+
+use crate::cnn::ir::{IrError, Network};
+use crate::cnn::launch::{decompose, input_bytes, KernelLaunch};
+use crate::gpu::power::{average_power, Activity};
+use crate::gpu::specs::GpuSpec;
+use crate::offload::{Constraints, Decision, EdgePowerProfile, ExecutionEstimate, Recommendation};
+use crate::partition::link::LinkModel;
+use crate::sim::kernel::{time_on, KernelTrace};
+use crate::sim::network::{Simulator, LAUNCH_OVERHEAD_S};
+
+/// Cost of one `(cut, server GPU, server frequency)` choice.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionEstimate {
+    /// The cut: layers `0..cut` run on the edge device.
+    pub cut: usize,
+    /// Edge-device compute time for the prefix (s), incl. launch overheads.
+    pub edge_s: f64,
+    /// Link serialization + RTT charge for the cut activation (s).
+    pub tx_s: f64,
+    /// Server compute time for the suffix (s), incl. launch overheads.
+    pub server_s: f64,
+    /// Edge idle-wait: server time + half an RTT for the response (s).
+    pub wait_s: f64,
+    /// Bytes crossing the link at this cut (0 for all-edge).
+    pub tx_bytes: usize,
+    /// End-to-end latency: edge prefix + transfer + wait (s).
+    pub latency_s: f64,
+    /// Edge-device energy: active prefix + radio + idle wait + per-byte
+    /// transmit energy (J). The battery-lifetime objective.
+    pub device_energy_j: f64,
+    /// Mean edge-device power over the request (W).
+    pub device_power_w: f64,
+    /// Server-side energy for the suffix (J); 0 for all-edge.
+    pub server_energy_j: f64,
+    /// Modelled average server board power over its busy period (W).
+    pub server_avg_power_w: f64,
+    /// Server GPU-busy cycles for the suffix.
+    pub server_cycles: f64,
+}
+
+impl PartitionEstimate {
+    /// The edge device's view of this cut, in the legacy
+    /// [`ExecutionEstimate`] shape (feeds [`choose`]).
+    pub fn device(&self) -> ExecutionEstimate {
+        ExecutionEstimate {
+            latency_s: self.latency_s,
+            device_energy_j: self.device_energy_j,
+            device_power_w: self.device_power_w,
+        }
+    }
+}
+
+/// Pre-traced partition cost model for one `(network, batch, link,
+/// edge device)` configuration.
+///
+/// Construction traces every kernel once and times the edge prefix; after
+/// that, [`PartitionCost::estimate`] re-times only the server suffix on
+/// the candidate `(GPU, f)` — a pure function of cached traces.
+///
+/// ```
+/// use hypa_dse::cnn::zoo;
+/// use hypa_dse::gpu::specs::by_name;
+/// use hypa_dse::offload::EdgePowerProfile;
+/// use hypa_dse::partition::{LinkModel, PartitionCost};
+///
+/// let net = zoo::lenet5();
+/// let edge = by_name("jetson-tx1").unwrap();
+/// let server = by_name("v100s").unwrap();
+/// let cost = PartitionCost::new(
+///     &net, 1, LinkModel::wifi(), EdgePowerProfile::jetson_tx1(),
+///     &edge, edge.boost_mhz,
+/// ).unwrap();
+///
+/// // Cut 0 ships the raw input; the full cut runs everything locally.
+/// let all_server = cost.estimate(0, &server, server.boost_mhz).unwrap();
+/// let all_edge = cost.estimate(cost.layers(), &server, server.boost_mhz).unwrap();
+/// assert!(all_server.tx_bytes > 0);
+/// assert_eq!(all_edge.tx_bytes, 0);
+/// assert_eq!(cost.cut_layer_name(0), "input");
+/// ```
+#[derive(Debug)]
+pub struct PartitionCost {
+    net_name: String,
+    batch: usize,
+    layer_names: Vec<String>,
+    /// Bytes crossing the link at cut `c` (index `c`, length `L+1`).
+    cut_bytes: Vec<usize>,
+    /// Running sum of edge per-kernel busy time for layers `0..c`
+    /// (index `c`, length `L+1`); same accumulation order as
+    /// `Simulator::simulate_network` so the full-prefix value is
+    /// bit-identical to an end-to-end edge simulation.
+    edge_busy_prefix: Vec<f64>,
+    profile: EdgePowerProfile,
+    link: LinkModel,
+    launches: Vec<KernelLaunch>,
+    traces: Vec<KernelTrace>,
+    /// Σ params over layers `c..L` (index `c`, length `L+1`).
+    suffix_params: Vec<usize>,
+    /// max over layers `c..L` of per-sample (input+output) elements.
+    suffix_peak_act: Vec<usize>,
+}
+
+impl PartitionCost {
+    /// Trace `net` at `batch` and time the edge prefix on `(edge,
+    /// edge_f_mhz)`. Errors propagate from shape inference / launch
+    /// decomposition.
+    pub fn new(
+        net: &Network,
+        batch: usize,
+        link: LinkModel,
+        profile: EdgePowerProfile,
+        edge: &GpuSpec,
+        edge_f_mhz: f64,
+    ) -> Result<PartitionCost, IrError> {
+        let infos = net.analyze()?;
+        let launches = decompose(net, batch)?;
+        debug_assert_eq!(launches.len(), infos.len());
+        let mut sim = Simulator::default();
+        let traces: Vec<KernelTrace> = launches.iter().map(|l| sim.trace_for(l)).collect();
+
+        let mut edge_busy_prefix = Vec::with_capacity(launches.len() + 1);
+        edge_busy_prefix.push(0.0);
+        let mut busy = 0.0;
+        for (t, l) in traces.iter().zip(&launches) {
+            busy += time_on(t, l, edge, edge_f_mhz).activity.elapsed_s;
+            edge_busy_prefix.push(busy);
+        }
+
+        let mut cut_bytes = Vec::with_capacity(infos.len() + 1);
+        cut_bytes.push(input_bytes(net, batch));
+        cut_bytes.extend(infos.iter().map(|i| i.activation_bytes(batch)));
+
+        let l = infos.len();
+        let mut suffix_params = vec![0usize; l + 1];
+        let mut suffix_peak_act = vec![0usize; l + 1];
+        for i in (0..l).rev() {
+            suffix_params[i] = suffix_params[i + 1] + infos[i].params;
+            let act = infos[i].input.numel() + infos[i].output.numel();
+            suffix_peak_act[i] = suffix_peak_act[i + 1].max(act);
+        }
+
+        Ok(PartitionCost {
+            net_name: net.name.clone(),
+            batch,
+            layer_names: infos.into_iter().map(|i| i.name).collect(),
+            cut_bytes,
+            edge_busy_prefix,
+            profile,
+            link,
+            launches,
+            traces,
+            suffix_params,
+            suffix_peak_act,
+        })
+    }
+
+    /// Number of layers `L`; valid cuts are `0..=L`.
+    pub fn layers(&self) -> usize {
+        self.launches.len()
+    }
+
+    /// Inference batch size this model was traced at.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The link being priced.
+    pub fn link(&self) -> &LinkModel {
+        &self.link
+    }
+
+    /// The edge power profile in use.
+    pub fn profile(&self) -> &EdgePowerProfile {
+        &self.profile
+    }
+
+    /// Network name (for labels and telemetry).
+    pub fn net_name(&self) -> &str {
+        &self.net_name
+    }
+
+    /// Human-readable label for a cut: the last edge-side layer's name,
+    /// or `"input"` for cut 0 (all-server).
+    pub fn cut_layer_name(&self, cut: usize) -> &str {
+        if cut == 0 {
+            "input"
+        } else {
+            &self.layer_names[cut - 1]
+        }
+    }
+
+    /// Bytes crossing the link at `cut` (the full batch's activation).
+    pub fn cut_bytes(&self, cut: usize) -> usize {
+        self.cut_bytes[cut]
+    }
+
+    /// Server-side working set for the suffix `cut..L`: weights + the
+    /// peak live activation pair, fp32 — mirrors
+    /// [`crate::cnn::launch::working_set_bytes`] (equal to it at cut 0).
+    pub fn server_working_set(&self, cut: usize) -> usize {
+        if cut >= self.layers() {
+            return 0;
+        }
+        4 * (self.suffix_params[cut] + self.suffix_peak_act[cut] * self.batch)
+    }
+
+    /// Price cut `cut` with the suffix on `(server, server_f_mhz)`.
+    ///
+    /// Pure in its arguments (cached traces only): calling it from any
+    /// number of worker threads in any order yields bit-identical
+    /// results. A cut past the last layer is an error, not a panic.
+    pub fn estimate(
+        &self,
+        cut: usize,
+        server: &GpuSpec,
+        server_f_mhz: f64,
+    ) -> Result<PartitionEstimate> {
+        let layers = self.layers();
+        ensure!(
+            cut <= layers,
+            "cut {cut} out of range for {} ({layers} layers; valid cuts are 0..={layers})",
+            self.net_name
+        );
+        let edge_s = if cut == 0 {
+            0.0
+        } else {
+            self.edge_busy_prefix[cut] + cut as f64 * LAUNCH_OVERHEAD_S
+        };
+        if cut == layers {
+            // All-edge: nothing crosses the link, the server never runs.
+            return Ok(PartitionEstimate {
+                cut,
+                edge_s,
+                tx_s: 0.0,
+                server_s: 0.0,
+                wait_s: 0.0,
+                tx_bytes: 0,
+                latency_s: edge_s,
+                device_energy_j: self.profile.local_active_w * edge_s,
+                device_power_w: self.profile.local_active_w,
+                server_energy_j: 0.0,
+                server_avg_power_w: 0.0,
+                server_cycles: 0.0,
+            });
+        }
+
+        // Server suffix: re-time cached traces; energy composition
+        // mirrors `Simulator::simulate_network` exactly.
+        let mut act = Activity::default();
+        let mut cycles = 0.0;
+        for i in cut..layers {
+            let s = time_on(&self.traces[i], &self.launches[i], server, server_f_mhz);
+            cycles += s.cycles;
+            act.add(&s.activity);
+        }
+        let busy_s = act.elapsed_s;
+        let server_s = busy_s + (layers - cut) as f64 * LAUNCH_OVERHEAD_S;
+        let server_avg_power_w = if busy_s > 0.0 {
+            average_power(server, server_f_mhz, &act).total_w
+        } else {
+            server.idle_w
+        };
+        let server_energy_j = server_avg_power_w * busy_s + server.idle_w * (server_s - busy_s);
+
+        let tx_bytes = self.cut_bytes[cut];
+        let tx_s = self.link.transfer_s(tx_bytes);
+        let wait_s = server_s + self.link.rtt_ms * 0.5e-3;
+        let latency_s = edge_s + tx_s + wait_s;
+        // Term order matters: with edge_s == 0 and pj_per_byte == 0 this
+        // reduces bit-exactly to the legacy `offload_estimate` sum.
+        let device_energy_j = self.profile.local_active_w * edge_s
+            + self.profile.radio_tx_w * tx_s
+            + self.profile.idle_w * wait_s
+            + self.link.pj_per_byte * tx_bytes as f64 * 1e-12;
+        Ok(PartitionEstimate {
+            cut,
+            edge_s,
+            tx_s,
+            server_s,
+            wait_s,
+            tx_bytes,
+            latency_s,
+            device_energy_j,
+            device_power_w: device_energy_j / latency_s.max(1e-12),
+            server_energy_j,
+            server_avg_power_w,
+            server_cycles: cycles,
+        })
+    }
+
+    /// Exhaustively price every cut `0..=L` on one `(server, f)` — the
+    /// reference scan strategy results are pinned against.
+    pub fn scan(&self, server: &GpuSpec, server_f_mhz: f64) -> Result<Vec<PartitionEstimate>> {
+        (0..=self.layers())
+            .map(|c| self.estimate(c, server, server_f_mhz))
+            .collect()
+    }
+}
+
+/// All-edge execution from an edge latency — the cut-`L` special case.
+/// The legacy `offload::model::local_estimate` delegates here.
+pub fn edge_only_estimate(
+    edge_latency_s: f64,
+    profile: &EdgePowerProfile,
+) -> ExecutionEstimate {
+    ExecutionEstimate {
+        latency_s: edge_latency_s,
+        device_energy_j: profile.local_active_w * edge_latency_s,
+        device_power_w: profile.local_active_w,
+    }
+}
+
+/// Split execution: edge prefix for `edge_s`, move `tx_bytes` over
+/// `link`, wait `server_s` (+ half an RTT) for the server suffix.
+///
+/// With `edge_s == 0.0` and `link.pj_per_byte == 0.0` this is bit-exact
+/// to the legacy `offload::model::offload_estimate`, which delegates
+/// here with the whole network as the suffix.
+pub fn split_estimate(
+    edge_s: f64,
+    tx_bytes: usize,
+    link: &LinkModel,
+    server_s: f64,
+    profile: &EdgePowerProfile,
+) -> ExecutionEstimate {
+    let tx_s = link.transfer_s(tx_bytes);
+    let wait_s = server_s + link.rtt_ms * 0.5e-3;
+    let latency = edge_s + tx_s + wait_s;
+    let energy = profile.local_active_w * edge_s
+        + profile.radio_tx_w * tx_s
+        + profile.idle_w * wait_s
+        + link.pj_per_byte * tx_bytes as f64 * 1e-12;
+    ExecutionEstimate {
+        latency_s: latency,
+        device_energy_j: energy,
+        device_power_w: energy / latency.max(1e-12),
+    }
+}
+
+fn feasible(e: &ExecutionEstimate, c: &Constraints) -> bool {
+    c.max_latency_s.map(|m| e.latency_s <= m).unwrap_or(true)
+        && c.max_energy_j.map(|m| e.device_energy_j <= m).unwrap_or(true)
+}
+
+/// Decide between two execution options, minimizing device energy among
+/// feasible ones (the battery-lifetime objective). The legacy
+/// `offload::model::decide` delegates here.
+pub fn choose(
+    local: ExecutionEstimate,
+    offload: ExecutionEstimate,
+    constraints: &Constraints,
+) -> Decision {
+    let lf = feasible(&local, constraints);
+    let of = feasible(&offload, constraints);
+    let recommendation = match (lf, of) {
+        (false, false) => Recommendation::Infeasible,
+        (true, false) => Recommendation::Local,
+        (false, true) => Recommendation::Offload,
+        (true, true) => {
+            if offload.device_energy_j < local.device_energy_j {
+                Recommendation::Offload
+            } else {
+                Recommendation::Local
+            }
+        }
+    };
+    Decision {
+        local,
+        offload,
+        recommendation,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo;
+    use crate::gpu::specs::by_name;
+
+    fn cost(net_batch: usize) -> PartitionCost {
+        let edge = by_name("jetson-tx1").unwrap();
+        PartitionCost::new(
+            &zoo::lenet5(),
+            net_batch,
+            LinkModel::wifi(),
+            EdgePowerProfile::jetson_tx1(),
+            &edge,
+            edge.boost_mhz,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn estimate_rejects_out_of_range_cut() {
+        let c = cost(1);
+        let err = c
+            .estimate(c.layers() + 1, &by_name("v100s").unwrap(), 1000.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn full_prefix_matches_end_to_end_edge_simulation_bitwise() {
+        let net = zoo::lenet5();
+        let edge = by_name("jetson-tx1").unwrap();
+        let c = cost(1);
+        let all_edge = c.estimate(c.layers(), &by_name("v100s").unwrap(), 1000.0).unwrap();
+        let mut sim = Simulator::default();
+        let s = sim.simulate_network(&net, 1, &edge, edge.boost_mhz).unwrap();
+        assert_eq!(all_edge.latency_s.to_bits(), s.seconds.to_bits());
+    }
+
+    #[test]
+    fn cut_zero_suffix_matches_end_to_end_server_simulation_bitwise() {
+        let net = zoo::lenet5();
+        let server = by_name("v100s").unwrap();
+        let c = cost(1);
+        let e = c.estimate(0, &server, server.boost_mhz).unwrap();
+        let mut sim = Simulator::default();
+        let s = sim
+            .simulate_network(&net, 1, &server, server.boost_mhz)
+            .unwrap();
+        assert_eq!(e.server_s.to_bits(), s.seconds.to_bits());
+        assert_eq!(e.server_energy_j.to_bits(), s.energy_j.to_bits());
+        assert_eq!(e.server_cycles.to_bits(), s.cycles.to_bits());
+    }
+
+    #[test]
+    fn mid_cut_components_are_consistent() {
+        let c = cost(2);
+        let server = by_name("v100s").unwrap();
+        for cut in 0..=c.layers() {
+            let e = c.estimate(cut, &server, server.boost_mhz).unwrap();
+            assert_eq!(e.cut, cut);
+            assert_eq!(e.tx_bytes, if cut == c.layers() { 0 } else { c.cut_bytes(cut) });
+            let recomposed = e.edge_s + e.tx_s + e.wait_s;
+            assert_eq!(recomposed.to_bits(), e.latency_s.to_bits());
+            assert!(e.device_energy_j > 0.0 || cut == 0);
+            assert!(e.latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn working_set_shrinks_with_cut_and_matches_launch_formula() {
+        let net = zoo::lenet5();
+        let c = cost(4);
+        let full = crate::cnn::launch::working_set_bytes(&net, 4).unwrap();
+        assert_eq!(c.server_working_set(0), full);
+        for cut in 1..=c.layers() {
+            assert!(c.server_working_set(cut) <= c.server_working_set(cut - 1));
+        }
+        assert_eq!(c.server_working_set(c.layers()), 0);
+    }
+
+    #[test]
+    fn choose_matches_decide_semantics() {
+        let a = ExecutionEstimate {
+            latency_s: 0.1,
+            device_energy_j: 0.7,
+            device_power_w: 7.0,
+        };
+        let b = ExecutionEstimate {
+            latency_s: 0.3,
+            device_energy_j: 0.2,
+            device_power_w: 0.66,
+        };
+        let none = Constraints {
+            max_latency_s: None,
+            max_energy_j: None,
+        };
+        assert_eq!(choose(a, b, &none).recommendation, Recommendation::Offload);
+        let tight = Constraints {
+            max_latency_s: Some(0.2),
+            max_energy_j: None,
+        };
+        assert_eq!(choose(a, b, &tight).recommendation, Recommendation::Local);
+        let impossible = Constraints {
+            max_latency_s: Some(0.01),
+            max_energy_j: Some(0.01),
+        };
+        assert_eq!(
+            choose(a, b, &impossible).recommendation,
+            Recommendation::Infeasible
+        );
+    }
+}

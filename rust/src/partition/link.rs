@@ -1,0 +1,140 @@
+//! Link model: what it costs to move bytes between edge and server.
+//!
+//! Generalizes the toy [`crate::offload::Link`] (bandwidth + RTT) with a
+//! radio/NIC energy term so the partition evaluator can price the
+//! *energy* of moving an activation tensor, not just its latency.
+
+use crate::offload::Link;
+
+/// Names accepted by [`LinkModel::by_name`], in preset order.
+pub const PRESET_NAMES: [&str; 3] = ["wifi", "ble", "gigabit-ethernet"];
+
+/// An edge↔server network link: serialization bandwidth, fixed one-way
+/// setup latency (modelled as an RTT charge, matching [`Link`]), and the
+/// transmit energy the edge device pays per byte.
+///
+/// ```
+/// use hypa_dse::partition::LinkModel;
+///
+/// let wifi = LinkModel::wifi();
+/// // 1 MB over WiFi: RTT + serialization, a few tens of milliseconds.
+/// let t = wifi.transfer_s(1_000_000);
+/// assert!(t > 0.01 && t < 1.0, "t={t}");
+/// // The radio energy for the same transfer, in joules.
+/// let e = wifi.transfer_energy_j(1_000_000);
+/// assert!(e > 0.0);
+/// // A wired link moves the same tensor faster and cheaper.
+/// let gbe = LinkModel::by_name("gigabit-ethernet").unwrap();
+/// assert!(gbe.transfer_s(1_000_000) < t);
+/// assert!(gbe.transfer_energy_j(1_000_000) < e);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Serialization bandwidth (Mbit/s).
+    pub bandwidth_mbps: f64,
+    /// Round-trip time (ms); half is charged as response wait.
+    pub rtt_ms: f64,
+    /// Edge-side transmit energy per byte moved (pJ/byte). Zero for the
+    /// legacy [`Link`] conversion, which modelled only radio *power*.
+    pub pj_per_byte: f64,
+}
+
+impl LinkModel {
+    pub fn new(bandwidth_mbps: f64, rtt_ms: f64, pj_per_byte: f64) -> LinkModel {
+        LinkModel {
+            bandwidth_mbps,
+            rtt_ms,
+            pj_per_byte,
+        }
+    }
+
+    /// 802.11n-class WLAN: ~100 Mbit/s goodput, ~5 ms RTT, ~30 nJ/byte
+    /// radio transmit energy.
+    pub fn wifi() -> LinkModel {
+        LinkModel::new(100.0, 5.0, 30_000.0)
+    }
+
+    /// Bluetooth Low Energy: ~1 Mbit/s goodput, connection-interval
+    /// latency in the tens of ms, ~10 nJ/byte.
+    pub fn ble() -> LinkModel {
+        LinkModel::new(1.0, 50.0, 10_000.0)
+    }
+
+    /// Wired gigabit Ethernet: sub-ms RTT and a NIC energy around
+    /// 0.6 nJ/byte — transfer is effectively free next to compute.
+    pub fn gigabit_ethernet() -> LinkModel {
+        LinkModel::new(1000.0, 0.2, 600.0)
+    }
+
+    /// Look up a preset by name (see [`PRESET_NAMES`]).
+    pub fn by_name(name: &str) -> Option<LinkModel> {
+        match name {
+            "wifi" => Some(LinkModel::wifi()),
+            "ble" => Some(LinkModel::ble()),
+            "gigabit-ethernet" => Some(LinkModel::gigabit_ethernet()),
+            _ => None,
+        }
+    }
+
+    /// Transfer time for `bytes` including one round trip — same formula
+    /// as [`Link::transfer_s`], so the legacy path stays bit-exact.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        self.rtt_ms * 1e-3 + (bytes as f64 * 8.0) / (self.bandwidth_mbps * 1e6)
+    }
+
+    /// Edge-side energy to transmit `bytes` (J).
+    pub fn transfer_energy_j(&self, bytes: usize) -> f64 {
+        self.pj_per_byte * bytes as f64 * 1e-12
+    }
+}
+
+impl From<Link> for LinkModel {
+    /// The legacy link carries no per-byte energy term; the conversion
+    /// keeps it at zero so estimates through the partition evaluator are
+    /// bit-identical to the old free functions.
+    fn from(l: Link) -> LinkModel {
+        LinkModel::new(l.bandwidth_mbps, l.rtt_ms, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_unknowns_do_not() {
+        for name in PRESET_NAMES {
+            assert!(LinkModel::by_name(name).is_some(), "{name}");
+        }
+        assert!(LinkModel::by_name("carrier-pigeon").is_none());
+    }
+
+    #[test]
+    fn transfer_matches_legacy_link_bitwise() {
+        let legacy = Link {
+            bandwidth_mbps: 37.5,
+            rtt_ms: 12.0,
+        };
+        let m = LinkModel::from(legacy);
+        for bytes in [0usize, 1, 1024, 5_000_000] {
+            assert_eq!(
+                m.transfer_s(bytes).to_bits(),
+                legacy.transfer_s(bytes).to_bits()
+            );
+        }
+        assert_eq!(m.transfer_energy_j(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn preset_ordering_is_physical() {
+        let (wifi, ble, gbe) = (
+            LinkModel::wifi(),
+            LinkModel::ble(),
+            LinkModel::gigabit_ethernet(),
+        );
+        let mb = 1_000_000;
+        assert!(gbe.transfer_s(mb) < wifi.transfer_s(mb));
+        assert!(wifi.transfer_s(mb) < ble.transfer_s(mb));
+        assert!(gbe.transfer_energy_j(mb) < wifi.transfer_energy_j(mb));
+    }
+}

@@ -1,0 +1,43 @@
+//! Edge↔server CNN partitioning subsystem.
+//!
+//! The paper's offload discussion (§I, §IV) asks *whether* to run an
+//! inference on the edge device or ship it to a server; CNNParted-style
+//! partitioning generalizes the question to *where to cut*: run layers
+//! `0..c` on the edge device, move layer `c`'s output activation across
+//! the link, and run layers `c..L` on the server. The cut point is a
+//! first-class DSE axis whose cost is dominated by the link's latency and
+//! energy per transferred byte.
+//!
+//! * [`LinkModel`] ([`link`]) — bandwidth + fixed latency + pJ/byte
+//!   energy, with named presets (`wifi`, `ble`, `gigabit-ethernet`)
+//!   generalizing the toy `offload::model::Link`.
+//! * [`PartitionCost`] ([`eval`]) — prices every cut `c ∈ 0..=L` by
+//!   composing edge-prefix latency/energy (edge GPU timing +
+//!   [`crate::offload::EdgePowerProfile`]), link transfer of the cut
+//!   activation ([`crate::cnn::ir::LayerInfo::activation_bytes`]), and
+//!   server-suffix latency/power via the existing GPU timing/power
+//!   models. Cut 0 is all-server (the legacy `offload_estimate`), cut
+//!   `L` is all-edge (the legacy `local_estimate`); both legacy free
+//!   functions now delegate here ([`split_estimate`] /
+//!   [`edge_only_estimate`]) and are bit-exact special cases.
+//! * [`PartitionSpace`] ([`space`]) — enumerates `cut × GPU × frequency`
+//!   candidates for the [`crate::dse::Explorer`] scoring core, encoding
+//!   the cut in the `DesignPoint::batch` slot ([`encode_cut`] /
+//!   [`decode_cut`]) so all six [`crate::dse::SearchStrategy`] impls
+//!   search the partition axis unchanged — budgets, cancellation,
+//!   progress and rejection telemetry included.
+//!
+//! Evaluation is pure re-timing of cached kernel traces, so exhaustive
+//! cut enumeration is deterministic and worker-count invariant: strategy
+//! results are pinnable bit-exact against the exhaustive scan
+//! (`rust/tests/partition.rs`).
+
+pub mod eval;
+pub mod link;
+pub mod space;
+
+pub use eval::{
+    choose, edge_only_estimate, split_estimate, PartitionCost, PartitionEstimate,
+};
+pub use link::{LinkModel, PRESET_NAMES};
+pub use space::{decode_cut, encode_cut, PartitionSpace};

@@ -1,0 +1,96 @@
+//! The partition search space: cut × server GPU × server frequency.
+//!
+//! The [`crate::dse::Explorer`] scoring core searches
+//! [`crate::dse::DesignPoint`]s — `(gpu, f_mhz, batch)` triples. The
+//! partition axis rides in the `batch` slot: a design point with
+//! `batch == encode_cut(c)` means "cut at `c`", and the real inference
+//! batch lives inside [`crate::partition::PartitionCost`]. All six
+//! [`crate::dse::SearchStrategy`] impls treat the batch ladder as an
+//! opaque ordered axis, so they search cut points unchanged — budgets,
+//! cancellation, progress and rejection telemetry included.
+
+use crate::dse::DesignSpace;
+use crate::gpu::specs::GpuSpec;
+
+/// Encode a cut index into the `DesignPoint::batch` slot. Cuts are
+/// `0..=L` but `batch == 0` is not a meaningful design point (strategies
+/// and validators treat it as degenerate), so the encoding is `cut + 1`.
+pub fn encode_cut(cut: usize) -> usize {
+    cut + 1
+}
+
+/// Decode a `DesignPoint::batch` value back to a cut index. Returns
+/// `None` for the un-encodable `batch == 0`.
+pub fn decode_cut(batch: usize) -> Option<usize> {
+    batch.checked_sub(1)
+}
+
+/// Candidate enumeration over `cut × server GPU × server frequency`.
+#[derive(Debug, Clone)]
+pub struct PartitionSpace {
+    /// Cut indices to search, ascending (a contiguous `min..=max` band).
+    pub cuts: Vec<usize>,
+}
+
+impl PartitionSpace {
+    /// The full cut ladder `0..=layers`.
+    pub fn full(layers: usize) -> PartitionSpace {
+        PartitionSpace {
+            cuts: (0..=layers).collect(),
+        }
+    }
+
+    /// A bounded band `min_cut..=max_cut` (caller validates bounds).
+    pub fn bounded(min_cut: usize, max_cut: usize) -> PartitionSpace {
+        PartitionSpace {
+            cuts: (min_cut..=max_cut).collect(),
+        }
+    }
+
+    /// The cut ladder in encoded (`DesignPoint::batch`) form — what
+    /// strategies take as their `batches` argument.
+    pub fn encoded(&self) -> Vec<usize> {
+        self.cuts.iter().map(|&c| encode_cut(c)).collect()
+    }
+
+    /// Exhaustive grid over `gpus × dvfs_steps(freq_steps) × cuts`, in
+    /// deterministic grid order — the lattice strategy results are
+    /// pinned against.
+    pub fn design_space(&self, freq_steps: usize, gpus: &[GpuSpec]) -> DesignSpace {
+        DesignSpace::grid(freq_steps, &self.encoded(), gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::by_name;
+
+    #[test]
+    fn encoding_round_trips_and_rejects_zero() {
+        for cut in 0..20 {
+            assert_eq!(decode_cut(encode_cut(cut)), Some(cut));
+        }
+        assert_eq!(decode_cut(0), None);
+    }
+
+    #[test]
+    fn full_ladder_covers_all_cuts() {
+        let s = PartitionSpace::full(5);
+        assert_eq!(s.cuts, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(s.encoded(), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(PartitionSpace::bounded(2, 4).cuts, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn design_space_is_the_exact_lattice() {
+        let gpus = vec![by_name("v100s").unwrap(), by_name("t4").unwrap()];
+        let s = PartitionSpace::full(3);
+        let space = s.design_space(2, &gpus);
+        assert_eq!(space.len(), 2 * 2 * 4);
+        // Grid order: gpu-major, then frequency, then cut.
+        assert_eq!(space.points[0].gpu, "v100s");
+        assert_eq!(space.points[0].batch, encode_cut(0));
+        assert_eq!(space.points[3].batch, encode_cut(3));
+    }
+}

@@ -799,3 +799,186 @@ fn journal_lag_from_failed_appends_surfaces_in_health() {
     assert!(hj.path(&["journal", "events"]).unwrap().as_usize().unwrap() >= 2);
     let _ = std::fs::remove_file(&journal);
 }
+
+// ---------------------------------------------------------------------------
+// Edge↔server partitioning over REST. The evaluator is analytic (no ML
+// predictor), so every test here runs against a simulator-only server —
+// and searches lenet5/resnet18, never squeezenet (reserved above for the
+// failpoint scenarios).
+// ---------------------------------------------------------------------------
+
+use hypa_dse::offload::recovered_partition_task;
+
+/// Simulator-only server: `ServerState::new(None)` has no predictor.
+fn partition_server() -> (OffloadServer, OffloadClient) {
+    let state = Arc::new(ServerState::new(None));
+    let srv = OffloadServer::start("127.0.0.1:0", state).unwrap();
+    let client = OffloadClient::new(srv.addr);
+    (srv, client)
+}
+
+#[test]
+fn rest_partition_round_trip_and_async_parity() {
+    // Acceptance: for the same body, the synchronous response, a repeat
+    // of it, and a completed async job's `result` are byte-for-byte
+    // identical — the partition evaluator is pure arithmetic, so there
+    // is nothing for scheduling or worker count to perturb.
+    let (_srv, client) = partition_server();
+    for strategy in ["grid", "random", "nsga2"] {
+        // 2 GPUs × 2 DVFS steps × 12 cuts = 48 ≤ budget, so the grid
+        // strategy covers its whole lattice (the endpoint refuses
+        // silently-truncated grids).
+        let req = format!(
+            r#"{{"network":"lenet5","strategy":"{strategy}","budget":64,"link":"wifi",
+                 "gpus":["v100s","t4"],"seed":9,"objective":"min-edp","top_k":3,"freq_steps":2}}"#
+        );
+        let (status, sync_body) = client.post("/v1/partition", &req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&sync_body));
+        let j = Json::parse(std::str::from_utf8(&sync_body).unwrap()).unwrap();
+        assert_eq!(j.get("network").unwrap().as_str(), Some("lenet5"));
+        assert_eq!(j.get("strategy").unwrap().as_str(), Some(strategy));
+        assert_eq!(j.get("edge_gpu").unwrap().as_str(), Some("jetson-tx1"));
+
+        // The winner is a decoded cut with a layer label and a segment
+        // breakdown that recomposes to its end-to-end latency.
+        let best = j.get("best").unwrap();
+        let layers = hypa_dse::cnn::zoo::lenet5().layers.len() as f64;
+        let cut = best.get("cut").unwrap().as_f64().unwrap();
+        assert!((0.0..=layers).contains(&cut), "cut {cut} out of 0..={layers}");
+        assert!(best.get("cut_layer").unwrap().as_str().is_some());
+        let b = j.get("breakdown").expect("segment breakdown for best");
+        let recomposed = b.get("edge_s").unwrap().as_f64().unwrap()
+            + b.get("tx_s").unwrap().as_f64().unwrap()
+            + b.get("wait_s").unwrap().as_f64().unwrap();
+        let latency = best.get("latency_s").unwrap().as_f64().unwrap();
+        assert!(
+            (recomposed - latency).abs() <= 1e-15_f64.max(1e-12 * latency),
+            "{strategy}: breakdown {recomposed} vs latency {latency}"
+        );
+
+        // Top-k sorted by the objective; pareto non-empty.
+        let top = j.get("top").and_then(Json::as_arr).unwrap();
+        assert!(!top.is_empty() && top.len() <= 3);
+        let edp = |p: &Json| {
+            p.get("energy_per_inf_j").unwrap().as_f64().unwrap()
+                * p.get("latency_s").unwrap().as_f64().unwrap()
+        };
+        for w in top.windows(2) {
+            assert!(edp(&w[0]) <= edp(&w[1]), "{strategy}: top not sorted");
+        }
+        assert!(!j.get("pareto").and_then(Json::as_arr).unwrap().is_empty());
+        assert_eq!(j.path(&["telemetry", "budget"]).unwrap().as_usize(), Some(64));
+
+        // Determinism: repeat sync call, then the async job path.
+        let (status2, body2) = client.post("/v1/partition", &req).unwrap();
+        assert_eq!(status2, 200);
+        assert_eq!(sync_body, body2, "{strategy}: response not reproducible");
+
+        let id = client.submit_partition_job(&req).unwrap();
+        let rec = client
+            .wait_job(id, std::time::Duration::from_secs(120))
+            .unwrap();
+        assert_eq!(rec.get("status").unwrap().as_str(), Some("done"), "{strategy}: {rec:?}");
+        assert_eq!(
+            rec.get("result").expect("done job carries result").to_string(),
+            String::from_utf8(sync_body).unwrap(),
+            "{strategy}: async result diverged from the synchronous response"
+        );
+    }
+}
+
+#[test]
+fn rest_partition_validates_input() {
+    let (_srv, client) = partition_server();
+    for (body, needle) in [
+        // Link presets are a closed set; the message enumerates them.
+        (r#"{"network":"lenet5","link":"carrier-pigeon"}"#, "unknown link preset"),
+        (r#"{"network":"lenet5","link":"carrier-pigeon"}"#, "gigabit-ethernet"),
+        // Inline link objects need a positive bandwidth.
+        (r#"{"network":"lenet5","link":{"rtt_ms":5}}"#, "bandwidth_mbps"),
+        (r#"{"network":"lenet5","link":{"bandwidth_mbps":-1}}"#, "bandwidth_mbps"),
+        // Cut bounds must be an in-range band.
+        (r#"{"network":"lenet5","min_cut":5,"max_cut":2}"#, "min_cut <= max_cut"),
+        (r#"{"network":"lenet5","max_cut":9999}"#, "min_cut <= max_cut"),
+        // GPU names resolve against the catalog.
+        (r#"{"network":"lenet5","gpus":["not-a-gpu"]}"#, "unknown gpu"),
+        (r#"{"network":"lenet5","edge_gpu":"not-a-gpu"}"#, "unknown edge gpu"),
+        // Shared search knobs are validated the same way as /v1/search.
+        (r#"{"network":"lenet5","strategy":"nope"}"#, "unknown strategy"),
+        (r#"{"network":"lenet5","budget":0}"#, "'budget'"),
+        (r#"{"network":"lenet5","seed":-1}"#, "'seed'"),
+        (r#"{"network":"lenet5","top_k":1000}"#, "'top_k'"),
+    ] {
+        let (status, resp) = client.post("/v1/partition", body).unwrap();
+        let text = String::from_utf8_lossy(&resp).to_string();
+        assert_eq!(status, 400, "{body} -> {text}");
+        assert!(text.contains(needle), "{body} -> {text}");
+    }
+}
+
+#[test]
+fn partition_job_recovery_needs_no_predictor() {
+    // A partition job queued at crash time is rebuilt after restart via
+    // `recovered_partition_task` — on a server with no ML predictor at
+    // all — and re-runs to the byte-identical synchronous answer.
+    let _s = failpoint::scenario();
+    let journal = tmp_journal("partition-recovery");
+    let req = r#"{"network":"lenet5","strategy":"random","budget":12,"link":"ble","seed":4}"#;
+
+    let sync_body = {
+        let (_srv, client) = partition_server();
+        let (status, body) = client.post("/v1/partition", req).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        String::from_utf8(body).unwrap()
+    };
+
+    let id = {
+        let jobs = JobManager::with_journal(
+            JobConfig {
+                workers: 0,
+                ..JobConfig::default()
+            },
+            &journal,
+        )
+        .unwrap();
+        let state = Arc::new(ServerState::with_parts(
+            None,
+            Arc::new(DescriptorCache::new()),
+            jobs,
+        ));
+        let srv = OffloadServer::start("127.0.0.1:0", state.clone()).unwrap();
+        let client = OffloadClient::new(srv.addr);
+        let id = client.submit_partition_job(req).unwrap();
+        assert_eq!(
+            client.job_status(id).unwrap().get("status").unwrap().as_str(),
+            Some("queued")
+        );
+        state.jobs.crash();
+        drop(srv);
+        id
+    };
+
+    // Restart without a predictor: the journaled body carries
+    // `"kind": "partition"`, and its task rebuilds from the spec alone.
+    let jobs = JobManager::recover(JobConfig::default(), &journal, |spec| {
+        assert_eq!(
+            spec.get("kind").and_then(Json::as_str),
+            Some("partition"),
+            "journaled partition jobs are tagged for recovery dispatch"
+        );
+        recovered_partition_task(spec)
+    })
+    .unwrap();
+    let state2 = Arc::new(ServerState::with_parts(
+        None,
+        Arc::new(DescriptorCache::new()),
+        jobs,
+    ));
+    let srv2 = OffloadServer::start("127.0.0.1:0", state2).unwrap();
+    let rec = OffloadClient::new(srv2.addr)
+        .wait_job(id, Duration::from_secs(120))
+        .unwrap();
+    assert_eq!(rec.get("status").unwrap().as_str(), Some("done"), "{rec:?}");
+    assert_eq!(rec.get("result").unwrap().to_string(), sync_body);
+    let _ = std::fs::remove_file(&journal);
+}

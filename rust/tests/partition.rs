@@ -1,0 +1,336 @@
+//! Partition-subsystem contract: the link-aware cut-point DSE of the
+//! edge↔server partitioning subsystem.
+//!
+//! * **monotone link limits**: over a free link (infinite bandwidth,
+//!   zero RTT) the latency- and energy-optimal cut is all-server
+//!   (cut 0); over a dead link (astronomical RTT) it is all-edge
+//!   (cut `L`). Both are structural — the edge device is strictly
+//!   slower per layer than a datacenter GPU, and any cut `< L` pays
+//!   the RTT — so they hold for every network in the zoo.
+//! * **exhaustive-scan pinning**: every point the `Explorer` scores on
+//!   the partition axis is bit-identical to a direct
+//!   `PartitionCost::estimate` of the same `(cut, GPU, f)` — the
+//!   exhaustive scan therefore provably contains every optimum any
+//!   strategy can find, and the grid/NSGA-II frontiers coincide on a
+//!   lattice that fits the NSGA-II population.
+//! * **determinism**: partition scoring is pure arithmetic over cached
+//!   traces, so every strategy's `Exploration` is invariant across
+//!   worker counts {1, 2, 8}.
+//! * **legacy parity**: the deprecated `offload::model` free functions
+//!   are bit-exact wrappers over the partition evaluator.
+
+use std::collections::BTreeSet;
+
+use hypa_dse::cnn::launch::input_bytes;
+use hypa_dse::cnn::zoo;
+use hypa_dse::dse::{
+    Anneal, DescriptorCache, DseConstraints, Exploration, Explorer, Grid, LocalRestarts, Nsga2,
+    Objective, Random, ScoredPoint, SearchStrategy, SurrogateEI,
+};
+use hypa_dse::gpu::specs::{by_name, GpuSpec};
+use hypa_dse::offload::{Constraints, EdgePowerProfile, Link};
+use hypa_dse::partition::{
+    decode_cut, edge_only_estimate, split_estimate, LinkModel, PartitionCost, PartitionSpace,
+};
+
+fn edge() -> GpuSpec {
+    by_name("jetson-tx1").unwrap()
+}
+
+fn cost_with(link: LinkModel) -> PartitionCost {
+    let e = edge();
+    PartitionCost::new(
+        &zoo::lenet5(),
+        1,
+        link,
+        EdgePowerProfile::jetson_tx1(),
+        &e,
+        e.boost_mhz,
+    )
+    .unwrap()
+}
+
+/// argmin over the exhaustive scan by an estimate-derived key.
+fn best_cut(cost: &PartitionCost, server: &GpuSpec, key: impl Fn(&hypa_dse::partition::PartitionEstimate) -> f64) -> usize {
+    let scan = cost.scan(server, server.boost_mhz).unwrap();
+    scan.iter()
+        .min_by(|a, b| key(a).partial_cmp(&key(b)).unwrap())
+        .unwrap()
+        .cut
+}
+
+#[test]
+fn free_link_prefers_all_server() {
+    // Infinite bandwidth, zero RTT, zero per-byte energy: moving a layer
+    // to the (much slower) edge device only ever adds latency, and the
+    // device burns idle power instead of active power while the server
+    // computes — so cut 0 wins both objectives.
+    let free = LinkModel {
+        bandwidth_mbps: 1e9,
+        rtt_ms: 0.0,
+        pj_per_byte: 0.0,
+    };
+    let cost = cost_with(free);
+    let server = by_name("v100s").unwrap();
+    assert_eq!(best_cut(&cost, &server, |e| e.latency_s), 0);
+    assert_eq!(best_cut(&cost, &server, |e| e.device_energy_j), 0);
+}
+
+#[test]
+fn dead_link_prefers_all_edge() {
+    // An astronomically slow link: every cut < L pays the RTT at least
+    // once, so the only finite-cost choice is to never transmit.
+    let dead = LinkModel {
+        bandwidth_mbps: 1e-3,
+        rtt_ms: 1e12,
+        pj_per_byte: 0.0,
+    };
+    let cost = cost_with(dead);
+    let server = by_name("v100s").unwrap();
+    assert_eq!(best_cut(&cost, &server, |e| e.latency_s), cost.layers());
+    assert_eq!(
+        best_cut(&cost, &server, |e| e.device_energy_j),
+        cost.layers()
+    );
+}
+
+/// A scored partition point's lattice identity plus its full metric
+/// vector, bit-exact (scoring is pure arithmetic — bit-equality is the
+/// right notion of "same result").
+fn scored_key(s: &ScoredPoint) -> (String, u64, usize, u64, u64, u64, u64, u64, bool) {
+    (
+        s.point.gpu.clone(),
+        s.point.f_mhz.to_bits(),
+        s.point.batch,
+        s.latency_s.to_bits(),
+        s.energy_per_inf_j.to_bits(),
+        s.power_w.to_bits(),
+        s.throughput.to_bits(),
+        s.cycles.to_bits(),
+        s.feasible,
+    )
+}
+
+fn frontier_set(e: &Exploration) -> BTreeSet<(String, u64, usize, u64, u64, u64, u64, u64, bool)> {
+    e.pareto().iter().map(scored_key).collect()
+}
+
+/// Recompute one explorer-scored partition point straight from the
+/// evaluator and demand bit-equality on every metric.
+fn assert_matches_direct_estimate(s: &ScoredPoint, cost: &PartitionCost, gpus: &[GpuSpec]) {
+    let g = gpus.iter().find(|g| g.name == s.point.gpu).unwrap();
+    let cut = decode_cut(s.point.batch).expect("partition points encode cut+1");
+    let est = cost.estimate(cut, g, s.point.f_mhz).unwrap();
+    let batch = cost.batch() as f64;
+    assert_eq!(s.latency_s.to_bits(), est.latency_s.to_bits());
+    assert_eq!(
+        s.energy_per_inf_j.to_bits(),
+        (est.device_energy_j / batch).to_bits()
+    );
+    assert_eq!(
+        s.power_w.to_bits(),
+        ((est.device_energy_j + est.server_energy_j) / est.latency_s.max(1e-12)).to_bits()
+    );
+    assert_eq!(
+        s.throughput.to_bits(),
+        (batch / est.latency_s.max(1e-12)).to_bits()
+    );
+    assert_eq!(s.cycles.to_bits(), est.server_cycles.to_bits());
+}
+
+#[test]
+fn exhaustive_grid_is_bitwise_identical_to_direct_scan() {
+    let cost = cost_with(LinkModel::wifi());
+    let gpus = vec![by_name("v100s").unwrap(), by_name("t4").unwrap()];
+    let cache = DescriptorCache::with_gpus(gpus.clone());
+    let net = zoo::lenet5();
+    let space = PartitionSpace::full(cost.layers());
+    let design = space.design_space(2, &gpus);
+    let expected = design.points.len();
+
+    let e = Explorer::for_partition(&net, &cost)
+        .objective(Objective::MinEdp)
+        .cache(&cache)
+        .run(&Grid::new(design))
+        .unwrap();
+    // Exhaustive: every lattice point scored, in grid order, and each
+    // one bit-identical to a direct estimate of the same (cut, GPU, f).
+    assert_eq!(e.scored.len(), expected);
+    assert_eq!(e.telemetry.evaluations, expected);
+    for s in &e.scored {
+        assert_matches_direct_estimate(s, &cost, &gpus);
+    }
+    // The grid best is the argmin over the scan — so the exhaustive scan
+    // contains (and prices identically) the optimum.
+    let best = e.best.as_ref().unwrap();
+    let min = e
+        .scored
+        .iter()
+        .filter(|s| s.feasible)
+        .min_by(|a, b| {
+            Objective::MinEdp
+                .key(a)
+                .partial_cmp(&Objective::MinEdp.key(b))
+                .unwrap()
+        })
+        .unwrap();
+    assert_eq!(
+        Objective::MinEdp.key(best).to_bits(),
+        Objective::MinEdp.key(min).to_bits()
+    );
+}
+
+#[test]
+fn every_strategy_optimum_is_contained_in_the_exhaustive_scan() {
+    let cost = cost_with(LinkModel::wifi());
+    let gpus = vec![by_name("v100s").unwrap()];
+    let cache = DescriptorCache::with_gpus(gpus.clone());
+    let net = zoo::lenet5();
+    let space = PartitionSpace::full(cost.layers());
+    let cuts = space.encoded();
+    let budget = 96;
+
+    let strategies: Vec<(Box<dyn SearchStrategy>, &str)> = vec![
+        (Box::new(Grid::new(space.design_space(2, &gpus))), "grid"),
+        (Box::new(Random::new(&cuts)), "random"),
+        (Box::new(LocalRestarts::new(&cuts)), "local"),
+        (Box::new(Anneal::new(&cuts)), "anneal"),
+        (Box::new(SurrogateEI::new(&cuts)), "surrogate_ei"),
+        (Box::new(Nsga2::new(&cuts, 2)), "nsga2"),
+    ];
+    for (strategy, name) in &strategies {
+        let e = Explorer::for_partition(&net, &cost)
+            .objective(Objective::MinEdp)
+            .cache(&cache)
+            .seed(7)
+            .budget(budget)
+            .run(strategy.as_ref())
+            .unwrap();
+        let best = e.best.as_ref().unwrap_or_else(|| panic!("{name}: no best"));
+        // Whatever the strategy found, the evaluator prices it the same
+        // way the exhaustive scan does — bit for bit.
+        assert_matches_direct_estimate(best, &cost, &gpus);
+        for s in &e.scored {
+            assert_matches_direct_estimate(s, &cost, &gpus);
+        }
+    }
+}
+
+#[test]
+fn nsga2_frontier_equals_exhaustive_grid_frontier() {
+    // 1 GPU × 2 DVFS steps × 12 cuts = 24 lattice points; budget 96 gives
+    // NSGA-II a population of 24, so its initial generation enumerates
+    // the lattice in grid order and its recovered frontier provably
+    // equals the exhaustive one.
+    let cost = cost_with(LinkModel::wifi());
+    let gpus = vec![by_name("v100s").unwrap()];
+    let cache = DescriptorCache::with_gpus(gpus.clone());
+    let net = zoo::lenet5();
+    let space = PartitionSpace::full(cost.layers());
+    let lattice = gpus.len() * 2 * space.cuts.len();
+    let budget = 96;
+    assert!(lattice <= (budget / 4).clamp(8, 64), "lattice must fit the population");
+
+    let explorer = || {
+        Explorer::for_partition(&net, &cost)
+            .objective(Objective::MinEdp)
+            .cache(&cache)
+            .seed(11)
+            .budget(budget)
+    };
+    let grid = explorer().run(&Grid::new(space.design_space(2, &gpus))).unwrap();
+    let nsga = explorer().run(&Nsga2::new(&space.encoded(), 2)).unwrap();
+    assert_eq!(frontier_set(&grid), frontier_set(&nsga));
+    assert_eq!(
+        grid.best.as_ref().map(scored_key),
+        nsga.best.as_ref().map(scored_key)
+    );
+}
+
+#[test]
+fn partition_search_is_worker_count_invariant() {
+    let cost = cost_with(LinkModel::ble());
+    let gpus = vec![by_name("v100s").unwrap(), by_name("t4").unwrap()];
+    let cache = DescriptorCache::with_gpus(gpus.clone());
+    let net = zoo::lenet5();
+    let space = PartitionSpace::full(cost.layers());
+    let cuts = space.encoded();
+    let budget = 48;
+
+    let strategies: Vec<(Box<dyn SearchStrategy>, &str)> = vec![
+        (Box::new(Grid::new(space.design_space(2, &gpus))), "grid"),
+        (Box::new(Random::new(&cuts)), "random"),
+        (Box::new(Nsga2::new(&cuts, 2)), "nsga2"),
+    ];
+    for (strategy, name) in &strategies {
+        let mut runs: Vec<Exploration> = Vec::new();
+        for workers in [1usize, 2, 8] {
+            let e = Explorer::for_partition(&net, &cost)
+                .objective(Objective::MinEdp)
+                .cache(&cache)
+                .seed(5)
+                .workers(workers)
+                .budget(budget)
+                .run(strategy.as_ref())
+                .unwrap();
+            runs.push(e);
+        }
+        for e in &runs[1..] {
+            let a = &runs[0];
+            assert_eq!(a.scored, e.scored, "{name}");
+            assert_eq!(a.best, e.best, "{name}");
+            assert_eq!(a.telemetry.evaluations, e.telemetry.evaluations, "{name}");
+            assert_eq!(a.telemetry.rejected, e.telemetry.rejected, "{name}");
+        }
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_offload_wrappers_are_bit_exact_over_the_evaluator() {
+    use hypa_dse::offload::{decide, local_estimate, offload_estimate};
+
+    let net = zoo::resnet18();
+    let batch = 4;
+    let profile = EdgePowerProfile::jetson_tx1();
+    let link = Link {
+        bandwidth_mbps: 72.0,
+        rtt_ms: 9.0,
+    };
+    let local_s = 0.137;
+    let cloud_s = 0.0205;
+
+    let legacy_local = local_estimate(local_s, &profile);
+    let new_local = edge_only_estimate(local_s, &profile);
+    assert_eq!(legacy_local.latency_s.to_bits(), new_local.latency_s.to_bits());
+    assert_eq!(
+        legacy_local.device_energy_j.to_bits(),
+        new_local.device_energy_j.to_bits()
+    );
+
+    let legacy_off = offload_estimate(&net, batch, &link, cloud_s, &profile);
+    let new_off = split_estimate(
+        0.0,
+        input_bytes(&net, batch),
+        &LinkModel::from(link),
+        cloud_s,
+        &profile,
+    );
+    assert_eq!(legacy_off.latency_s.to_bits(), new_off.latency_s.to_bits());
+    assert_eq!(
+        legacy_off.device_energy_j.to_bits(),
+        new_off.device_energy_j.to_bits()
+    );
+    assert_eq!(
+        legacy_off.device_power_w.to_bits(),
+        new_off.device_power_w.to_bits()
+    );
+
+    let constraints = Constraints {
+        max_latency_s: Some(0.1),
+        max_energy_j: None,
+    };
+    let legacy = decide(legacy_local, legacy_off, &constraints);
+    let new = hypa_dse::partition::choose(new_local, new_off, &constraints);
+    assert_eq!(legacy.recommendation, new.recommendation);
+}

@@ -73,6 +73,11 @@ REQUIRED_RATIOS = [
     # Packed level-blocked forest node layout vs the original SoA
     # pools on the same forest (bit-identical descent in-bench).
     "forest_packed_vs_soa",
+    # Budgeted Random over a one-cut ladder vs the full cut ladder on
+    # the partition axis (same budget/seed): making the cut a search
+    # axis may not tax per-candidate scoring (~1.0 expected; grid-vs-
+    # direct-estimate bit parity is asserted in-bench).
+    "partition_axis_overhead",
 ]
 
 # Allocation-count keys that must be present AND exactly zero (the
@@ -115,6 +120,9 @@ REQUIRED_STAGES = [
     "search_sync_rest",
     "search_async_rest",
     "search_async_rest_journal",
+    "partition_sweep",
+    "partition_random_fixed_cut",
+    "partition_random_cut_ladder",
 ]
 
 

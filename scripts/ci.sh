@@ -45,6 +45,15 @@ echo "== strategy-quality harness (explicit gates; also in the pass above) =="
 cargo test -q --test strategy_quality
 cargo test -q --test integration rest_search
 
+echo "== partitioning subsystem (explicit gates; also in the pass above) =="
+# The edge<->server cut-point DSE contract must never be filtered out of
+# a CI run: link-limit monotonicity, exhaustive-scan bit pinning,
+# worker-count invariance, deprecated-wrapper parity, and the
+# /v1/partition REST rows (sync/async parity, validation, no-predictor
+# journal recovery).
+cargo test -q --test partition
+cargo test -q --test integration partition
+
 echo "== scoring-kernel parity, native config (explicit gate; also in the pass above) =="
 # The cross-kernel bit-parity suite must never be filtered out of a CI
 # run: on an AVX2 host this is the only gate proving the SIMD path is a
