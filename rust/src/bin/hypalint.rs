@@ -1,0 +1,43 @@
+//! `hypalint` — run the repo's static-analysis pass over one or more
+//! source trees and fail (exit 1) on any unsuppressed diagnostic.
+//!
+//! ```text
+//! cargo run --release --bin hypalint -- rust/src
+//! ```
+//!
+//! With no arguments it lints `rust/src` (the layout when run from the
+//! workspace root, as `scripts/ci.sh` does). Exit codes: 0 clean,
+//! 1 diagnostics found, 2 walk/IO error. The rule catalog and the
+//! suppression convention (`// lint:allow(rule, reason)`) are
+//! documented in `docs/LINT.md`.
+
+use hypa_dse::lint::Linter;
+use std::path::Path;
+
+fn main() {
+    let mut roots: Vec<String> = std::env::args().skip(1).collect();
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
+    let mut linter = Linter::new();
+    for root in &roots {
+        if let Err(e) = linter.check_tree(Path::new(root)) {
+            eprintln!("hypalint: error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+    let diags = linter.finish();
+    if diags.is_empty() {
+        println!("hypalint: clean ({} tree(s))", roots.len());
+        return;
+    }
+    for d in &diags {
+        println!("{d}");
+    }
+    eprintln!(
+        "hypalint: {} diagnostic(s). Fix the finding or, if it is deliberate, \
+         annotate it with `// lint:allow(rule, reason)` (see docs/LINT.md).",
+        diags.len()
+    );
+    std::process::exit(1);
+}

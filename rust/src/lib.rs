@@ -55,13 +55,25 @@
 //!
 //! See `README.md` for a quickstart and `docs/ARCHITECTURE.md` for the
 //! staged-execution contract, the AOT shape contract, and the
-//! `FeatureMatrix` data flow.
+//! `FeatureMatrix` data flow. The determinism / panic-hygiene /
+//! lock-order contracts are additionally enforced at the source level
+//! by the in-repo static-analysis pass in [`lint`] (the `hypalint`
+//! binary, gated in `scripts/ci.sh`; rule catalog in `docs/LINT.md`).
+
+// Crate-wide hardening. `unused_must_use` is a hard error: a dropped
+// `Result`/`#[must_use]` value on the serving or scoring path is a
+// swallowed failure. `unreachable_pub` stays a warning because the
+// private runtime submodules deliberately re-export only their
+// executable types.
+#![deny(unused_must_use)]
+#![warn(unreachable_pub)]
 
 pub mod cnn;
 pub mod config;
 pub mod coordinator;
 pub mod dse;
 pub mod gpu;
+pub mod lint;
 pub mod ml;
 pub mod offload;
 pub mod partition;

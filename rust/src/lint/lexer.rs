@@ -1,0 +1,319 @@
+//! A minimal hand-rolled Rust lexer for `hypalint`.
+//!
+//! The rule engine ([`crate::lint`]) needs exactly four things from a
+//! source file: the identifier/punctuation token stream with line
+//! numbers, comments and string/char literals *stripped* (so a comment
+//! that merely mentions `mul_add` or a log string containing `unwrap`
+//! can never trip a rule), and the `lint:allow(...)` suppression
+//! pragmas that live inside line comments. That is deliberately far
+//! short of a real Rust parser — no expression trees, no name
+//! resolution — because every rule in `rules.rs` is written against
+//! token patterns plus brace/bracket depth, the same level of fidelity
+//! the repo's contracts need (see `docs/LINT.md` for what each rule
+//! over- and under-approximates).
+//!
+//! Handled literal forms: line (`//`) and *nested* block (`/* /* */ */`)
+//! comments, plain/byte/raw strings (`"…"`, `b"…"`, `r#"…"#`,
+//! `br##"…"##`), char and byte-char literals, and lifetimes (`'a`,
+//! `'static`) — the one lexical ambiguity (`'a` vs `'a'`) is resolved
+//! by a two-character lookahead, exactly like rustc's lexer does.
+
+/// One lexical token. Literals keep no payload: rules only ever need
+/// to know "a string was here", never its contents.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`let`, `for`, `unwrap`, `HashMap`, …).
+    Ident(String),
+    /// Numeric literal (value irrelevant to every rule).
+    Num,
+    /// String / raw string / byte string literal, contents stripped.
+    Str,
+    /// Char or byte-char literal, contents stripped.
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Any other single character (`.`, `(`, `{`, `#`, `!`, …).
+    Punct(char),
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// A `lint:allow(...)` pragma found in a line comment, before parsing:
+/// `inner` is the text between the parentheses (`rule, reason`), and
+/// `closed` records whether the closing `)` was present at all.
+#[derive(Debug, Clone)]
+pub struct RawPragma {
+    pub line: usize,
+    pub inner: String,
+    pub closed: bool,
+}
+
+/// Lexer output: the stripped token stream plus every suppression
+/// pragma encountered in comments.
+#[derive(Debug, Default)]
+pub struct LexOut {
+    pub tokens: Vec<Token>,
+    pub pragmas: Vec<RawPragma>,
+}
+
+/// Marker a suppression comment must contain: `// lint:allow(rule, reason)`.
+const PRAGMA: &str = "lint:allow(";
+
+/// Lex `src` into [`LexOut`]. Never fails: unterminated literals simply
+/// consume to end-of-file (the compiler, not the linter, owns syntax
+/// errors).
+pub fn lex(src: &str) -> LexOut {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = LexOut::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also `///` and `//!` doc comments): strip it,
+        // but first mine it for a suppression pragma.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            // A pragma must be the comment's entire content — the text
+            // after the `//`/`///`/`//!` marker and leading whitespace
+            // starts with `lint:allow(`. Prose *mentioning* the syntax
+            // (docs, this file) is not a pragma.
+            let body = text.trim_start_matches(|c| c == '/' || c == '!').trim_start();
+            if body.starts_with(PRAGMA) {
+                let rest = &body[PRAGMA.len()..];
+                match rest.find(')') {
+                    Some(end) => out.pragmas.push(RawPragma {
+                        line,
+                        inner: rest[..end].to_string(),
+                        closed: true,
+                    }),
+                    None => out.pragmas.push(RawPragma {
+                        line,
+                        inner: rest.to_string(),
+                        closed: false,
+                    }),
+                }
+            }
+            continue;
+        }
+        // Block comment; Rust block comments nest.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br##"…"##.
+        if c == 'r' || c == 'b' {
+            if let Some((quote_idx, hashes)) = raw_string_start(&b, i) {
+                let tline = line;
+                i = skip_raw_string(&b, quote_idx, hashes, &mut line);
+                out.tokens.push(Token {
+                    tok: Tok::Str,
+                    line: tline,
+                });
+                continue;
+            }
+        }
+        if c == '"' {
+            let tline = line;
+            i = skip_dq_string(&b, i, &mut line);
+            out.tokens.push(Token {
+                tok: Tok::Str,
+                line: tline,
+            });
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime `'ident` (not followed by a closing quote) vs
+            // char literal `'x'` / `'\n'`.
+            let next_is_word = i + 1 < n && (b[i + 1].is_alphanumeric() || b[i + 1] == '_');
+            let is_lifetime =
+                next_is_word && b[i + 1] != '\\' && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    tok: Tok::Lifetime,
+                    line,
+                });
+            } else {
+                let tline = line;
+                i = skip_char_literal(&b, i, &mut line);
+                out.tokens.push(Token {
+                    tok: Tok::Char,
+                    line: tline,
+                });
+            }
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                tok: Tok::Ident(b[start..i].iter().collect()),
+                line,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            // Fractional part — only when the dot is followed by a
+            // digit, so `0..n` stays three tokens (`0`, `.`, `.`, `n`).
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            }
+            out.tokens.push(Token {
+                tok: Tok::Num,
+                line,
+            });
+            continue;
+        }
+        out.tokens.push(Token {
+            tok: Tok::Punct(c),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// If `b[i]` starts a raw or byte string prefix (`r`, `b`, `br`, `rb`
+/// don't exist — Rust accepts `r`, `b`, `br`), return the index of the
+/// opening quote and the number of `#` guards.
+fn raw_string_start(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = b.len();
+    let mut k = i;
+    let mut saw_r = false;
+    if k < n && b[k] == 'b' {
+        k += 1;
+    }
+    if k < n && b[k] == 'r' {
+        k += 1;
+        saw_r = true;
+    }
+    let mut hashes = 0usize;
+    while k < n && b[k] == '#' {
+        k += 1;
+        hashes += 1;
+    }
+    if k < n && b[k] == '"' && (saw_r || hashes == 0) {
+        // Plain `b"…"` (no r, no hashes) is a byte string; `#` guards
+        // without `r` are not a string prefix.
+        if !saw_r && hashes > 0 {
+            return None;
+        }
+        // Bare identifier like `r` / `b` followed by `"` only counts
+        // when the prefix is exactly what we consumed (it is: we
+        // started at `i`).
+        Some((k, hashes))
+    } else {
+        None
+    }
+}
+
+/// Skip a raw string whose opening quote is at `quote_idx` with
+/// `hashes` `#` guards; returns the index just past the terminator.
+fn skip_raw_string(b: &[char], quote_idx: usize, hashes: usize, line: &mut usize) -> usize {
+    let n = b.len();
+    let mut i = quote_idx + 1;
+    while i < n {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == '"' {
+            let mut ok = true;
+            for h in 0..hashes {
+                if i + 1 + h >= n || b[i + 1 + h] != '#' {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    n
+}
+
+/// Skip a `"…"` string with `\` escapes; `i` is at the opening quote.
+fn skip_dq_string(b: &[char], i: usize, line: &mut usize) -> usize {
+    let n = b.len();
+    let mut i = i + 1;
+    while i < n {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    n
+}
+
+/// Skip a `'x'` / `'\n'` / `b'x'`-tail char literal; `i` is at the
+/// opening quote. Unterminated input consumes a bounded window.
+fn skip_char_literal(b: &[char], i: usize, line: &mut usize) -> usize {
+    let n = b.len();
+    let mut i = i + 1;
+    let limit = (i + 12).min(n); // chars are short; don't run away on bad input
+    while i < limit {
+        match b[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}

@@ -1,0 +1,298 @@
+//! `hypalint` — the repo-specific static-analysis pass.
+//!
+//! The runtime parity suites (kernel parity, sync≡async≡recovered
+//! responses, worker-count invariance) catch a contract violation only
+//! after it ships into a code path they happen to exercise. This
+//! module catches the whole *class* at the source level: a hand-rolled
+//! lexer ([`lexer`]), a token-pattern rule engine ([`rules`]), a
+//! file-tree walker, `// lint:allow(rule, reason)` suppression pragmas
+//! with an unused-suppression check, and global lock-order cycle
+//! detection. No external dependencies — consistent with the
+//! vendored-`anyhow`-only policy.
+//!
+//! Entry points: the `hypalint` binary (`src/bin/hypalint.rs`) walks
+//! a tree via [`Linter::check_tree`]; tests feed single fixtures
+//! through [`lint_source`]. The rule catalog, scoping, and the
+//! documented over/under-approximations live in `docs/LINT.md`.
+
+pub mod lexer;
+mod rules;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One finding. `rule` is the stable rule id used both in output and
+/// in `lint:allow(rule, reason)` pragmas.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Every rule id a pragma may name. Pragmas naming anything else are
+/// reported as malformed rather than silently ignored.
+const RULE_IDS: &[&str] = &[
+    "det-map-iter",
+    "det-time",
+    "float-fma",
+    "panic-path",
+    "lock-order",
+    "cast-truncate",
+];
+
+/// A parsed, well-formed `// lint:allow(rule, reason)` pragma.
+#[derive(Debug)]
+struct Pragma {
+    file: String,
+    line: usize,
+    rule: String,
+    used: bool,
+}
+
+/// Multi-file lint session. Feed files in with [`Linter::check_source`]
+/// / [`Linter::check_tree`], then call [`Linter::finish`] for the
+/// final, sorted diagnostic list (including global lock-order cycles
+/// and unused-suppression findings).
+#[derive(Debug, Default)]
+pub struct Linter {
+    diags: Vec<Diagnostic>,
+    edges: Vec<rules::LockEdge>,
+    pragmas: Vec<Pragma>,
+}
+
+impl Linter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lint one source file. `path` is the label used in diagnostics
+    /// and for rule scoping (e.g. `rust/src/offload/server.rs`).
+    pub fn check_source(&mut self, path: &str, src: &str) {
+        let label = path.replace('\\', "/");
+        let lexed = lexer::lex(src);
+        // Parse pragmas first: malformed ones become diagnostics, the
+        // rest become suppression candidates for this file's findings.
+        for raw in &lexed.pragmas {
+            let malformed = |msg: &str| Diagnostic {
+                rule: "lint-allow-malformed",
+                file: label.clone(),
+                line: raw.line,
+                message: msg.to_string(),
+            };
+            if !raw.closed {
+                self.diags.push(malformed(
+                    "unterminated `lint:allow(` pragma: missing `)` \
+                     (note the reason text cannot contain `)`)",
+                ));
+                continue;
+            }
+            let (rule, reason) = match raw.inner.split_once(',') {
+                Some((r, rest)) => (r.trim().to_string(), rest.trim().to_string()),
+                None => {
+                    self.diags.push(malformed(
+                        "`lint:allow(rule, reason)` requires a reason after the rule id",
+                    ));
+                    continue;
+                }
+            };
+            if reason.is_empty() {
+                self.diags.push(malformed(
+                    "`lint:allow(rule, reason)` has an empty reason — say why the \
+                     finding is deliberate",
+                ));
+                continue;
+            }
+            if !RULE_IDS.contains(&rule.as_str()) {
+                self.diags.push(malformed(&format!(
+                    "unknown rule id `{rule}` in lint:allow (known: {})",
+                    RULE_IDS.join(", ")
+                )));
+                continue;
+            }
+            self.pragmas.push(Pragma {
+                file: label.clone(),
+                line: raw.line,
+                rule,
+                used: false,
+            });
+        }
+        let out = rules::run(&label, &lexed.tokens);
+        for d in out.diags {
+            if !self.suppress(&d) {
+                self.diags.push(d);
+            }
+        }
+        self.edges.extend(out.edges);
+    }
+
+    /// Recursively lint every `*.rs` file under `root`, in sorted path
+    /// order so diagnostics are stable across platforms.
+    pub fn check_tree(&mut self, root: &Path) -> Result<()> {
+        let mut files = Vec::new();
+        collect_rs(root, &mut files)
+            .with_context(|| format!("walking {}", root.display()))?;
+        files.sort();
+        for f in files {
+            let src = std::fs::read_to_string(&f)
+                .with_context(|| format!("reading {}", f.display()))?;
+            let label = f.to_string_lossy().replace('\\', "/");
+            self.check_source(&label, &src);
+        }
+        Ok(())
+    }
+
+    /// Try to suppress `d` with a pragma in the same file, for the same
+    /// rule, on the same line or the line immediately above (the usual
+    /// "comment above the statement" placement). Marks the pragma used.
+    fn suppress(&mut self, d: &Diagnostic) -> bool {
+        for p in &mut self.pragmas {
+            if p.file == d.file
+                && p.rule == d.rule
+                && (p.line == d.line || p.line + 1 == d.line)
+            {
+                p.used = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Finish the session: run lock-order cycle detection over the
+    /// aggregated edge set, report unused suppressions, and return all
+    /// diagnostics sorted by (file, line, rule).
+    pub fn finish(mut self) -> Vec<Diagnostic> {
+        for d in cycle_diags(&self.edges) {
+            if !self.suppress(&d) {
+                self.diags.push(d);
+            }
+        }
+        for p in &self.pragmas {
+            if !p.used {
+                self.diags.push(Diagnostic {
+                    rule: "lint-allow-unused",
+                    file: p.file.clone(),
+                    line: p.line,
+                    message: format!(
+                        "unused suppression: no `{}` finding on line {} or {} — \
+                         delete the pragma (stale suppressions hide future regressions)",
+                        p.rule,
+                        p.line,
+                        p.line + 1
+                    ),
+                });
+            }
+        }
+        let mut diags = self.diags;
+        diags.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+        });
+        diags
+    }
+}
+
+/// Lint a single in-memory source (fixture tests): full session over
+/// one file, including lock-order cycles local to it.
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let mut l = Linter::new();
+    l.check_source(path, src);
+    l.finish()
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Detect cycles in the aggregated lock-acquisition graph: any set of
+/// locks that are mutually reachable can deadlock under the observed
+/// acquisition orders. One diagnostic per cycle component, anchored at
+/// the first edge recorded inside it.
+fn cycle_diags(edges: &[rules::LockEdge]) -> Vec<Diagnostic> {
+    // Dedup to unique (from, to), keeping the first-seen site as the
+    // representative for anchoring.
+    let mut uniq: Vec<&rules::LockEdge> = Vec::new();
+    for e in edges {
+        if !uniq.iter().any(|u| u.from == e.from && u.to == e.to) {
+            uniq.push(e);
+        }
+    }
+    let mut nodes: Vec<&str> = Vec::new();
+    for e in &uniq {
+        for n in [e.from.as_str(), e.to.as_str()] {
+            if !nodes.contains(&n) {
+                nodes.push(n);
+            }
+        }
+    }
+    let idx = |n: &str| nodes.iter().position(|x| *x == n).unwrap_or(0);
+    let k = nodes.len();
+    let mut reach = vec![vec![false; k]; k];
+    for e in &uniq {
+        reach[idx(&e.from)][idx(&e.to)] = true;
+    }
+    for m in 0..k {
+        for a in 0..k {
+            if reach[a][m] {
+                for b in 0..k {
+                    if reach[m][b] {
+                        reach[a][b] = true;
+                    }
+                }
+            }
+        }
+    }
+    // Mutually-reachable nodes form a cycle component.
+    let mut assigned = vec![false; k];
+    let mut diags = Vec::new();
+    for a in 0..k {
+        if assigned[a] {
+            continue;
+        }
+        let mut comp = vec![a];
+        for b in a + 1..k {
+            if !assigned[b] && reach[a][b] && reach[b][a] {
+                comp.push(b);
+            }
+        }
+        if comp.len() < 2 {
+            continue;
+        }
+        for &c in &comp {
+            assigned[c] = true;
+        }
+        let mut names: Vec<&str> = comp.iter().map(|&c| nodes[c]).collect();
+        names.sort_unstable();
+        let anchor = uniq
+            .iter()
+            .find(|e| names.contains(&e.from.as_str()) && names.contains(&e.to.as_str()))
+            .expect("cycle component implies at least one internal edge");
+        diags.push(Diagnostic {
+            rule: "lock-order",
+            file: anchor.file.clone(),
+            line: anchor.line,
+            message: format!(
+                "lock-order cycle between {{{}}}: these locks are acquired in \
+                 conflicting orders across the codebase, which can deadlock — \
+                 pick one global order (registry before per-job state) and stick to it",
+                names.join(", ")
+            ),
+        });
+    }
+    diags
+}

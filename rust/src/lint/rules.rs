@@ -1,0 +1,596 @@
+//! The `hypalint` rule set, written against the stripped token stream
+//! from [`super::lexer`].
+//!
+//! Every rule is scoped to the paths where the contract it protects
+//! actually holds (see `docs/LINT.md` for the catalog):
+//!
+//! * `det-map-iter` — no `HashMap`/`HashSet` iteration in `dse/`,
+//!   `partition/`, `offload/` (unordered iteration feeding serialized
+//!   output or scored-point ordering breaks byte-identical responses).
+//! * `det-time` — no `Instant::now`/`SystemTime::now`/`thread::current`
+//!   /`RandomState` in the scoring core (`ml/`, `dse/`, `partition/`,
+//!   `sim/`): seed-stable draws and bit-exact re-runs cannot depend on
+//!   wall clock, thread identity, or hash randomization.
+//! * `float-fma` — no `mul_add`/FMA intrinsics in `ml/kernel.rs` /
+//!   `ml/batch.rs`: FMA's single rounding would break the scalar≡AVX2
+//!   bit-identity theorem the kernel-parity suite pins.
+//! * `panic-path` — no `unwrap`/`expect`/panic-macros/indexing in the
+//!   request-handling and job-worker paths (`offload/server.rs`,
+//!   `offload/jobs.rs`): `catch_unwind` there is a backstop, not an
+//!   error path.
+//! * `cast-truncate` — no narrowing `as` casts (`u8/u16/u32/i8/i16/i32`)
+//!   on the request-derived paths (`offload/`, `dse/`, `partition/`).
+//! * `lock-order` — extract the lock-acquisition graph (every
+//!   `<name>.lock(…)` and every `lock_<name>(…)` helper call, with a
+//!   let-bound-guard liveness approximation) and fail on cycles; edges
+//!   are aggregated across all scanned files by [`super::Linter`].
+//!
+//! Code under a `#[test]`/`#[cfg(test)]`-gated item is exempt from all
+//! rules (the contracts govern shipped code; tests unwrap freely).
+
+use super::lexer::{Tok, Token};
+use super::Diagnostic;
+
+/// One observed "lock B acquired while lock A held" fact.
+#[derive(Debug, Clone)]
+pub(crate) struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: usize,
+}
+
+/// Per-file rule results: diagnostics plus raw lock-graph edges (cycle
+/// detection is global, so edges are returned instead of judged here).
+#[derive(Debug, Default)]
+pub(crate) struct RuleOutput {
+    pub diags: Vec<Diagnostic>,
+    pub edges: Vec<LockEdge>,
+}
+
+/// Run every rule applicable to `path` over `tokens`.
+pub(crate) fn run(path: &str, tokens: &[Token]) -> RuleOutput {
+    let p = path.replace('\\', "/");
+    let in_test = test_mask(tokens);
+    let mut out = RuleOutput::default();
+    if in_any(&p, &["dse/", "partition/", "offload/"]) {
+        det_map_iter(&p, tokens, &in_test, &mut out);
+    }
+    if in_any(&p, &["ml/", "dse/", "partition/", "sim/"]) {
+        det_time(&p, tokens, &in_test, &mut out);
+    }
+    if p.ends_with("ml/kernel.rs") || p.ends_with("ml/batch.rs") {
+        float_fma(&p, tokens, &in_test, &mut out);
+    }
+    if p.ends_with("offload/server.rs") || p.ends_with("offload/jobs.rs") {
+        panic_path(&p, tokens, &in_test, &mut out);
+    }
+    if in_any(&p, &["offload/", "dse/", "partition/"]) {
+        cast_truncate(&p, tokens, &in_test, &mut out);
+    }
+    lock_order(&p, tokens, &in_test, &mut out);
+    out
+}
+
+fn in_any(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.contains(d))
+}
+
+fn ident_at<'a>(tokens: &'a [Token], i: usize) -> Option<&'a str> {
+    match tokens.get(i) {
+        Some(Token {
+            tok: Tok::Ident(s), ..
+        }) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct_at(tokens: &[Token], i: usize, c: char) -> bool {
+    matches!(tokens.get(i), Some(Token { tok: Tok::Punct(p), .. }) if *p == c)
+}
+
+fn push(out: &mut RuleOutput, rule: &'static str, path: &str, line: usize, message: String) {
+    out.diags.push(Diagnostic {
+        rule,
+        file: path.to_string(),
+        line,
+        message,
+    });
+}
+
+/// Mark every token inside a `#[test]`- or `#[cfg(test)]`-gated item
+/// (attribute through the end of the item's body or its trailing `;`).
+fn test_mask(tokens: &[Token]) -> Vec<bool> {
+    let len = tokens.len();
+    let mut mask = vec![false; len];
+    let mut i = 0usize;
+    while i < len {
+        if punct_at(tokens, i, '#') && punct_at(tokens, i + 1, '[') {
+            // Collect the attribute to its matching `]`.
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut has_test = false;
+            while j < len && depth > 0 {
+                match &tokens[j].tok {
+                    Tok::Punct('[') => depth += 1,
+                    Tok::Punct(']') => depth -= 1,
+                    Tok::Ident(s) if s == "test" => has_test = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if has_test {
+                // Skip to the end of the gated item: the matching `}`
+                // of its first `{`, or a `;` before any brace opens
+                // (`#[cfg(test)] use …;`). Intermediate attributes
+                // contain neither, so they ride along.
+                let mut k = j;
+                let mut braces = 0i64;
+                let mut saw_brace = false;
+                while k < len {
+                    match &tokens[k].tok {
+                        Tok::Punct('{') => {
+                            braces += 1;
+                            saw_brace = true;
+                        }
+                        Tok::Punct('}') => {
+                            braces -= 1;
+                            if saw_brace && braces == 0 {
+                                k += 1;
+                                break;
+                            }
+                        }
+                        Tok::Punct(';') if !saw_brace => {
+                            k += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                for m in mask.iter_mut().take(k.min(len)).skip(i) {
+                    *m = true;
+                }
+                i = k;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+const UNORDERED: &[&str] = &["HashMap", "HashSet"];
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+];
+/// Zero-argument adapter calls the iteration check skims over, so
+/// `cache.lock().unwrap().keys()` still resolves to `cache`.
+const PASSTHROUGH: &[&str] = &["lock", "unwrap", "borrow", "borrow_mut", "as_ref", "as_mut"];
+
+/// `det-map-iter`: iteration over a `HashMap`/`HashSet`-typed binding.
+fn det_map_iter(path: &str, tokens: &[Token], in_test: &[bool], out: &mut RuleOutput) {
+    let len = tokens.len();
+    // Pass 1 — bindings whose declared type or initializer names an
+    // unordered container: `name: …HashMap…` (field, param, let
+    // ascription; the lookahead stops at a top-level `,`/`;`/`=`/`{`
+    // so one field's window cannot bleed into the next) and
+    // `let [mut] name = …HashMap…;`.
+    let mut names: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < len {
+        if in_test[i] {
+            i += 1;
+            continue;
+        }
+        if let Some(n) = ident_at(tokens, i) {
+            if punct_at(tokens, i + 1, ':')
+                && !punct_at(tokens, i + 2, ':')
+                && !(i > 0 && punct_at(tokens, i - 1, ':'))
+            {
+                let mut angle = 0i64;
+                for j in i + 2..(i + 18).min(len) {
+                    match &tokens[j].tok {
+                        Tok::Ident(t) if UNORDERED.contains(&t.as_str()) => {
+                            names.push(n.to_string());
+                            break;
+                        }
+                        Tok::Punct('<') => angle += 1,
+                        Tok::Punct('>') => angle = (angle - 1).max(0),
+                        Tok::Punct(',') | Tok::Punct(')') if angle == 0 => break,
+                        Tok::Punct(';') | Tok::Punct('=') | Tok::Punct('{') => break,
+                        _ => {}
+                    }
+                }
+            }
+            if n == "let" {
+                let mut k = i + 1;
+                if ident_at(tokens, k) == Some("mut") {
+                    k += 1;
+                }
+                if let Some(bound) = ident_at(tokens, k) {
+                    if punct_at(tokens, k + 1, '=') {
+                        for j in k + 2..(k + 26).min(len) {
+                            match &tokens[j].tok {
+                                Tok::Ident(t) if UNORDERED.contains(&t.as_str()) => {
+                                    names.push(bound.to_string());
+                                    break;
+                                }
+                                Tok::Punct(';') => break,
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    names.sort();
+    names.dedup();
+    if names.is_empty() {
+        return;
+    }
+    // Pass 2 — iteration over a registered binding: a direct (or
+    // adapter-skimmed) call to an iteration method, or a `for … in`
+    // whose source expression is the bare binding.
+    for i in 0..len {
+        if in_test[i] {
+            continue;
+        }
+        if let Some(n) = ident_at(tokens, i) {
+            if names.iter().any(|x| x == n) {
+                let mut j = i + 1;
+                loop {
+                    let m = match (punct_at(tokens, j, '.'), ident_at(tokens, j + 1)) {
+                        (true, Some(m)) if punct_at(tokens, j + 2, '(') => m,
+                        _ => break,
+                    };
+                    if ITER_METHODS.contains(&m) {
+                        push(
+                            out,
+                            "det-map-iter",
+                            path,
+                            tokens[j + 1].line,
+                            format!(
+                                "iteration over unordered container `{n}` (`.{m}()`): \
+                                 HashMap/HashSet order is nondeterministic and must not \
+                                 reach serialized output or scored-point ordering — use \
+                                 a BTreeMap/BTreeSet or sort before emitting"
+                            ),
+                        );
+                        break;
+                    }
+                    if PASSTHROUGH.contains(&m) && punct_at(tokens, j + 3, ')') {
+                        j += 4;
+                        continue;
+                    }
+                    break;
+                }
+            }
+            if n == "for" {
+                flag_for_loop(path, tokens, i, &names, out);
+            }
+        }
+    }
+}
+
+/// The `for pat in <expr> {` arm of `det-map-iter`: flag when `<expr>`
+/// is a bare (possibly `&`-borrowed, field-projected) registered
+/// binding — expressions containing calls were already handled (or
+/// produce something other than the raw container).
+fn flag_for_loop(path: &str, tokens: &[Token], i: usize, names: &[String], out: &mut RuleOutput) {
+    let len = tokens.len();
+    let mut j = i + 1;
+    let mut depth = 0i64;
+    let mut in_idx = None;
+    while j < len && j < i + 40 {
+        match &tokens[j].tok {
+            Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+            Tok::Punct('{') => break,
+            Tok::Ident(s) if s == "in" && depth == 0 => {
+                in_idx = Some(j);
+                break;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    let Some(ji) = in_idx else { return };
+    let mut k = ji + 1;
+    let mut last_ident: Option<&str> = None;
+    let mut has_call = false;
+    while k < len && k < ji + 16 {
+        match &tokens[k].tok {
+            Tok::Punct('{') => break,
+            Tok::Punct('(') => has_call = true,
+            Tok::Ident(s) => last_ident = Some(s.as_str()),
+            _ => {}
+        }
+        k += 1;
+    }
+    if has_call {
+        return;
+    }
+    if let Some(n) = last_ident {
+        if names.iter().any(|x| x == n) {
+            push(
+                out,
+                "det-map-iter",
+                path,
+                tokens[ji].line,
+                format!(
+                    "`for … in {n}` iterates an unordered HashMap/HashSet: \
+                     the visit order is nondeterministic — iterate a sorted \
+                     projection instead"
+                ),
+            );
+        }
+    }
+}
+
+/// `det-time`: wall clock / thread identity / hash randomization inside
+/// the scoring core.
+fn det_time(path: &str, tokens: &[Token], in_test: &[bool], out: &mut RuleOutput) {
+    for i in 0..tokens.len() {
+        if in_test[i] {
+            continue;
+        }
+        let Some(s) = ident_at(tokens, i) else {
+            continue;
+        };
+        let path_call = |callee: &str| {
+            punct_at(tokens, i + 1, ':')
+                && punct_at(tokens, i + 2, ':')
+                && ident_at(tokens, i + 3) == Some(callee)
+        };
+        let found = match s {
+            "Instant" if path_call("now") => Some("Instant::now()"),
+            "SystemTime" if path_call("now") => Some("SystemTime::now()"),
+            "thread" if path_call("current") => Some("thread::current()"),
+            "RandomState" => Some("RandomState"),
+            _ => None,
+        };
+        if let Some(what) = found {
+            push(
+                out,
+                "det-time",
+                path,
+                tokens[i].line,
+                format!(
+                    "`{what}` in the scoring core: seed-stable draws and bit-exact \
+                     re-runs must not depend on wall clock, thread identity, or hash \
+                     randomization — plumb explicit seeds/timestamps in from the caller"
+                ),
+            );
+        }
+    }
+}
+
+/// `float-fma`: fused-multiply-add in the bit-parity kernels.
+fn float_fma(path: &str, tokens: &[Token], in_test: &[bool], out: &mut RuleOutput) {
+    for i in 0..tokens.len() {
+        if in_test[i] {
+            continue;
+        }
+        let Some(s) = ident_at(tokens, i) else {
+            continue;
+        };
+        if s == "mul_add" || s.contains("fmadd") || s.contains("fmsub") {
+            push(
+                out,
+                "float-fma",
+                path,
+                tokens[i].line,
+                format!(
+                    "`{s}` fuses the multiply-add rounding step: the scalar and AVX2 \
+                     kernels are pinned bit-identical, and FMA's single rounding \
+                     breaks that theorem — keep separate mul and add"
+                ),
+            );
+        }
+    }
+}
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// `panic-path`: `unwrap`/`expect`, panic-family macros, and direct
+/// indexing in the request-handling / job-worker paths.
+fn panic_path(path: &str, tokens: &[Token], in_test: &[bool], out: &mut RuleOutput) {
+    for i in 0..tokens.len() {
+        if in_test[i] {
+            continue;
+        }
+        match &tokens[i].tok {
+            Tok::Punct('.') => {
+                if let Some(m) = ident_at(tokens, i + 1) {
+                    if (m == "unwrap" || m == "expect") && punct_at(tokens, i + 2, '(') {
+                        push(
+                            out,
+                            "panic-path",
+                            path,
+                            tokens[i + 1].line,
+                            format!(
+                                "`.{m}()` on a request-handling/worker path: a panic here \
+                                 leans on the catch_unwind backstop instead of the error \
+                                 plumbing — return an `internal error: …` Result (or \
+                                 recover, e.g. `unwrap_or_else(PoisonError::into_inner)` \
+                                 for locks)"
+                            ),
+                        );
+                    }
+                }
+            }
+            Tok::Ident(s) if PANIC_MACROS.contains(&s.as_str()) => {
+                if punct_at(tokens, i + 1, '!') {
+                    push(
+                        out,
+                        "panic-path",
+                        path,
+                        tokens[i].line,
+                        format!(
+                            "`{s}!` on a request-handling/worker path: surface a typed \
+                             error instead of unwinding into the catch_unwind backstop"
+                        ),
+                    );
+                }
+            }
+            Tok::Punct('[') if i > 0 => {
+                // `expr[...]` indexing: the previous token ends an
+                // expression. A keyword before `[` (`&mut [u8]` slice
+                // types, `return [..]` array literals) does not.
+                let indexes = match &tokens[i - 1].tok {
+                    Tok::Ident(p) => !matches!(
+                        p.as_str(),
+                        "mut" | "return" | "in" | "break" | "continue" | "else" | "match"
+                            | "if" | "while" | "loop" | "move" | "dyn" | "where" | "const"
+                            | "static" | "as" | "let"
+                    ),
+                    Tok::Punct(')') | Tok::Punct(']') => true,
+                    _ => false,
+                };
+                if indexes {
+                    push(
+                        out,
+                        "panic-path",
+                        path,
+                        tokens[i].line,
+                        "direct `container[index]` on a request-handling/worker path \
+                         can panic on out-of-range input — use `.get(…)` and handle \
+                         `None`, or annotate why the bound holds"
+                            .to_string(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+const NARROW: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// `cast-truncate`: narrowing `as` casts on request-derived paths.
+fn cast_truncate(path: &str, tokens: &[Token], in_test: &[bool], out: &mut RuleOutput) {
+    for i in 0..tokens.len() {
+        if in_test[i] {
+            continue;
+        }
+        if ident_at(tokens, i) == Some("as") {
+            if let Some(t) = ident_at(tokens, i + 1) {
+                if NARROW.contains(&t) {
+                    push(
+                        out,
+                        "cast-truncate",
+                        path,
+                        tokens[i].line,
+                        format!(
+                            "narrowing `as {t}` on a request-derived path silently \
+                             truncates out-of-range sizes/ids — use `try_from` (or \
+                             validate the range first and annotate)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `lock-order` edge extraction. An acquisition is `<name>.lock(…)` or
+/// a call to a `lock_<name>(…)` helper (the repo convention for
+/// poison-recovering wrappers — the suffix names the lock). A guard is
+/// considered *held* from a `let`-bound acquisition until its block
+/// closes or an explicit `drop(binding)`; while any guard is held,
+/// every further acquisition records a `held -> new` edge. Self-edges
+/// are dropped: the liveness approximation cannot see early returns,
+/// so re-acquisition of the same lock is noise, not signal.
+fn lock_order(path: &str, tokens: &[Token], in_test: &[bool], out: &mut RuleOutput) {
+    struct Guard {
+        lock: String,
+        binding: String,
+        depth: i64,
+    }
+    let len = tokens.len();
+    let mut depth = 0i64;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut pending_let: Option<String> = None;
+    for i in 0..len {
+        if in_test[i] {
+            continue;
+        }
+        match &tokens[i].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+                if depth <= 0 {
+                    depth = depth.max(0);
+                    pending_let = None;
+                }
+            }
+            Tok::Punct(';') => pending_let = None,
+            Tok::Ident(s) if s == "let" => {
+                let mut k = i + 1;
+                while ident_at(tokens, k) == Some("mut") {
+                    k += 1;
+                }
+                pending_let = ident_at(tokens, k).map(str::to_string);
+            }
+            Tok::Ident(s) if s == "drop" && punct_at(tokens, i + 1, '(') => {
+                if let Some(b) = ident_at(tokens, i + 2) {
+                    if punct_at(tokens, i + 3, ')') {
+                        guards.retain(|g| g.binding != b);
+                    }
+                }
+            }
+            _ => {}
+        }
+        let acquired: Option<String> = if punct_at(tokens, i, '.')
+            && ident_at(tokens, i + 1) == Some("lock")
+            && punct_at(tokens, i + 2, '(')
+        {
+            i.checked_sub(1)
+                .and_then(|p| ident_at(tokens, p))
+                .map(str::to_string)
+        } else if let Some(f) = ident_at(tokens, i) {
+            match f.strip_prefix("lock_") {
+                Some(suffix) if !suffix.is_empty() && punct_at(tokens, i + 1, '(') => {
+                    Some(suffix.to_string())
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(name) = acquired {
+            let line = tokens[i].line;
+            for g in &guards {
+                if g.lock != name {
+                    out.edges.push(LockEdge {
+                        from: g.lock.clone(),
+                        to: name.clone(),
+                        file: path.to_string(),
+                        line,
+                    });
+                }
+            }
+            if let Some(binding) = pending_let.clone() {
+                guards.push(Guard {
+                    lock: name,
+                    binding,
+                    depth,
+                });
+            }
+        }
+    }
+}

@@ -232,6 +232,19 @@ pub struct Job {
 }
 
 impl Job {
+    /// Acquire the job's state, recovering from poisoning. A poisoned
+    /// state mutex means a *holder* panicked — but every critical
+    /// section on it is a handful of field reads/writes that leave the
+    /// state consistent at every intermediate point (status before
+    /// task/result/error is the worst case, and pollers tolerate that),
+    /// so continuing with the inner value is strictly better than
+    /// panicking every future poller and worker.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, JobState> {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -242,7 +255,7 @@ impl Job {
     }
 
     pub fn status(&self) -> JobStatus {
-        self.state.lock().unwrap().status
+        self.lock_state().status
     }
 
     /// Live evaluation count (from the run's `Explorer::progress`
@@ -261,7 +274,7 @@ impl Job {
     /// job's full result JSON rides along (`GET /v1/jobs/{id}`) or is
     /// left out (`GET /v1/jobs` listings stay small).
     pub fn to_json(&self, include_result: bool) -> Json {
-        let st = self.state.lock().unwrap();
+        let st = self.lock_state();
         let mut o = Json::obj();
         o.set("id", jnum(self.id as f64))
             .set("client", jstr(&self.client))
@@ -308,6 +321,19 @@ struct Inner {
 }
 
 impl Inner {
+    /// Acquire the registry, recovering from poisoning. Registry
+    /// critical sections only touch the jobs map and queue, both of
+    /// which stay structurally valid at every intermediate point (the
+    /// worst a panic mid-section leaves behind is a queued id whose job
+    /// was already inserted — exactly the states the worker loop and
+    /// eviction already tolerate), so serving with the inner value
+    /// beats cascading the panic into every request thread.
+    fn lock_reg(&self) -> std::sync::MutexGuard<'_, Registry> {
+        self.reg
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     fn journal_active(&self) -> bool {
         self.journal.is_some() && !self.crashed.load(Ordering::Relaxed)
     }
@@ -373,6 +399,7 @@ impl JobManager {
                 std::thread::Builder::new()
                     .name(format!("search-job-{i}"))
                     .spawn(move || worker_loop(&inner))
+                    // lint:allow(panic-path, construction-time spawn failure is fatal by design — no request is in flight yet and a manager without its workers must not start)
                     .expect("spawn job worker")
             })
             .collect();
@@ -489,7 +516,7 @@ impl JobManager {
         let mgr = Self::build(cfg, Some(Journal::open(path)?));
         let mut rebuild_failures: Vec<(u64, String)> = Vec::new();
         {
-            let mut reg = mgr.inner.reg.lock().unwrap();
+            let mut reg = mgr.inner.lock_reg();
             let mut max_id = 0u64;
             for (id, r) in recs {
                 max_id = max_id.max(id);
@@ -574,7 +601,7 @@ impl JobManager {
         spec: Json,
         task: JobTask,
     ) -> Result<Arc<Job>, SubmitError> {
-        let mut reg = self.inner.reg.lock().unwrap();
+        let mut reg = self.inner.lock_reg();
         // The shutdown check must happen *under* the registry lock:
         // Drop sets `stop` before taking this lock for its cancellation
         // sweep, so a racing submit either refuses here or lands before
@@ -592,7 +619,7 @@ impl JobManager {
             let active = reg
                 .jobs
                 .values()
-                .filter(|j| j.client == client && !j.state.lock().unwrap().status.is_terminal())
+                .filter(|j| j.client == client && !j.lock_state().status.is_terminal())
                 .count();
             if active >= cfg.max_per_client {
                 return Err(SubmitError::QuotaExceeded {
@@ -648,14 +675,14 @@ impl JobManager {
     /// Look a job up by id (`None` once evicted — completed jobs are
     /// forgotten after the TTL / retention cap).
     pub fn get(&self, id: u64) -> Option<Arc<Job>> {
-        let mut reg = self.inner.reg.lock().unwrap();
+        let mut reg = self.inner.lock_reg();
         Self::evict_locked(&self.inner.cfg, &mut reg);
         reg.jobs.get(&id).cloned()
     }
 
     /// Every retained job, in id (= submission) order.
     pub fn list(&self) -> Vec<Arc<Job>> {
-        let mut reg = self.inner.reg.lock().unwrap();
+        let mut reg = self.inner.lock_reg();
         Self::evict_locked(&self.inner.cfg, &mut reg);
         reg.jobs.values().cloned().collect()
     }
@@ -667,7 +694,7 @@ impl JobManager {
     /// unknown/evicted ids.
     pub fn cancel(&self, id: u64) -> Option<Arc<Job>> {
         let job = {
-            let mut reg = self.inner.reg.lock().unwrap();
+            let mut reg = self.inner.lock_reg();
             Self::evict_locked(&self.inner.cfg, &mut reg);
             let job = reg.jobs.get(&id).cloned()?;
             // Drop the id from the pending queue immediately: with every
@@ -677,7 +704,7 @@ impl JobManager {
             reg.queue.retain(|&qid| qid != id);
             job
         };
-        let mut st = job.state.lock().unwrap();
+        let mut st = job.lock_state();
         let mut was_queued = false;
         // Terminal jobs are left untouched (idempotent no-op): setting
         // the token on a done/failed record would advertise
@@ -704,7 +731,7 @@ impl JobManager {
 
     /// Queued-but-unclaimed job count (introspection/health).
     pub fn pending(&self) -> usize {
-        self.inner.reg.lock().unwrap().queue.len()
+        self.inner.lock_reg().queue.len()
     }
 
     /// Worker threads configured at construction.
@@ -747,10 +774,10 @@ impl JobManager {
         self.inner.crashed.store(true, Ordering::Relaxed);
         self.inner.stop.store(true, Ordering::Relaxed);
         {
-            let mut reg = self.inner.reg.lock().unwrap();
+            let mut reg = self.inner.lock_reg();
             reg.queue.clear();
             for job in reg.jobs.values() {
-                let mut st = job.state.lock().unwrap();
+                let mut st = job.lock_state();
                 if st.status.is_terminal() {
                     continue;
                 }
@@ -769,7 +796,7 @@ impl JobManager {
         let now = Instant::now();
         let mut finished: Vec<(Instant, u64)> = Vec::new();
         reg.jobs.retain(|&id, job| {
-            let st = job.state.lock().unwrap();
+            let st = job.lock_state();
             match st.finished {
                 Some(t) if st.status.is_terminal() => {
                     if now.duration_since(t) > cfg.ttl {
@@ -785,6 +812,7 @@ impl JobManager {
         if finished.len() > cfg.max_retained {
             finished.sort();
             let excess = finished.len() - cfg.max_retained;
+            // lint:allow(panic-path, excess is less than the vec length by construction — this branch only runs when the finished count exceeds max_retained)
             for &(_, id) in &finished[..excess] {
                 reg.jobs.remove(&id);
             }
@@ -804,10 +832,10 @@ impl Drop for JobManager {
         self.inner.stop.store(true, Ordering::Relaxed);
         let mut swept: Vec<u64> = Vec::new();
         {
-            let mut reg = self.inner.reg.lock().unwrap();
+            let mut reg = self.inner.lock_reg();
             reg.queue.clear();
             for job in reg.jobs.values() {
-                let mut st = job.state.lock().unwrap();
+                let mut st = job.lock_state();
                 if st.status.is_terminal() {
                     continue;
                 }
@@ -836,7 +864,7 @@ impl Drop for JobManager {
 fn worker_loop(inner: &Inner) {
     loop {
         let job = {
-            let mut reg = inner.reg.lock().unwrap();
+            let mut reg = inner.lock_reg();
             loop {
                 if inner.stop.load(Ordering::Relaxed) {
                     return;
@@ -847,11 +875,16 @@ fn worker_loop(inner: &Inner) {
                         None => continue,
                     }
                 }
-                reg = inner.cv.wait(reg).unwrap();
+                // Condvar poison mirrors the registry-mutex policy
+                // above: recover the guard rather than kill the worker.
+                reg = inner
+                    .cv
+                    .wait(reg)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
         let task = {
-            let mut st = job.state.lock().unwrap();
+            let mut st = job.lock_state();
             if st.status != JobStatus::Queued {
                 continue; // cancelled while queued (cancel() journaled it)
             }
@@ -862,6 +895,7 @@ fn worker_loop(inner: &Inner) {
                 continue;
             }
             st.status = JobStatus::Running;
+            // lint:allow(panic-path, documented invariant — a job is only Queued while its task is present; every transition out of Queued takes or keeps the task under this same lock)
             st.task.take().expect("queued job carries its task")
         };
         inner.journal_event(|| event("running", job.id));
@@ -875,7 +909,7 @@ fn worker_loop(inner: &Inner) {
         let res = catch_unwind(AssertUnwindSafe(|| {
             task(job.cancel.clone(), job.progress.clone())
         }));
-        let mut st = job.state.lock().unwrap();
+        let mut st = job.lock_state();
         st.finished = Some(Instant::now());
         let kind = match res {
             // A run that completed before noticing a late cancel request

@@ -408,8 +408,29 @@ fn json_endpoint(req: &Request, f: impl FnOnce(&Json) -> Result<Json>) -> Respon
         .and_then(|s| Json::parse(s).map_err(|e| anyhow!("{e}")));
     match parsed.and_then(|j| f(&j)) {
         Ok(body) => Response::json(200, body.to_string()),
-        Err(e) => error_json(400, format!("{e:#}")),
+        Err(e) => {
+            // Handler errors are client errors (400) unless the handler
+            // marked them as server-side with the `internal error:`
+            // prefix — misconfigured state, poisoned locks, broken
+            // invariants. The vendored `anyhow` has no downcasting, so
+            // the prefix is the typed-ness.
+            let msg = format!("{e:#}");
+            let status = if msg.starts_with("internal error:") { 500 } else { 400 };
+            error_json(status, msg)
+        }
     }
+}
+
+/// Acquire the shared simulator, converting mutex poisoning (a panic on
+/// another connection thread mid-simulation) into a typed 500 instead
+/// of a second panic into the `catch_unwind` backstop. The simulator's
+/// trace cache may be mid-update when poisoned, so recovery-by-
+/// `into_inner` is *not* safe here — fail the request instead.
+fn lock_sim(state: &ServerState) -> Result<std::sync::MutexGuard<'_, Simulator>> {
+    state
+        .sim
+        .lock()
+        .map_err(|_| anyhow!("internal error: lock poisoned: simulator"))
 }
 
 fn net_for(j: &Json) -> Result<crate::cnn::ir::Network> {
@@ -434,8 +455,10 @@ fn offload_decide(j: &Json, state: &ServerState) -> Result<Json> {
     let local_latency = match j.get("local_latency_s").and_then(Json::as_f64) {
         Some(v) => v,
         None => {
-            let g = by_name(&state.edge_gpu).unwrap();
-            let mut sim = state.sim.lock().unwrap();
+            let g = by_name(&state.edge_gpu).ok_or_else(|| {
+                anyhow!("internal error: configured edge GPU '{}' not in catalog", state.edge_gpu)
+            })?;
+            let mut sim = lock_sim(state)?;
             sim.simulate_network(&net, batch, &g, g.boost_mhz)
                 .map_err(|e| anyhow!("{e}"))?
                 .seconds
@@ -444,8 +467,10 @@ fn offload_decide(j: &Json, state: &ServerState) -> Result<Json> {
     let cloud_latency = match j.get("cloud_latency_s").and_then(Json::as_f64) {
         Some(v) => v,
         None => {
-            let g = by_name(&state.cloud_gpu).unwrap();
-            let mut sim = state.sim.lock().unwrap();
+            let g = by_name(&state.cloud_gpu).ok_or_else(|| {
+                anyhow!("internal error: configured cloud GPU '{}' not in catalog", state.cloud_gpu)
+            })?;
+            let mut sim = lock_sim(state)?;
             sim.simulate_network(&net, batch, &g, g.boost_mhz)
                 .map_err(|e| anyhow!("{e}"))?
                 .seconds
@@ -565,7 +590,7 @@ fn score_points(points: &[PredictPoint], state: &ServerState) -> Result<Vec<Json
         }
         None => {
             // One lock acquisition per request, not per point.
-            let mut sim = state.sim.lock().unwrap();
+            let mut sim = lock_sim(state)?;
             points
                 .iter()
                 .map(|pt| {
@@ -585,7 +610,9 @@ fn score_points(points: &[PredictPoint], state: &ServerState) -> Result<Vec<Json
 fn predict(j: &Json, state: &ServerState) -> Result<Json> {
     let pt = PredictPoint::parse(j, state)?;
     let mut records = score_points(std::slice::from_ref(&pt), state)?;
-    Ok(records.pop().expect("one point scored"))
+    records
+        .pop()
+        .ok_or_else(|| anyhow!("internal error: scoring produced no record for one point"))
 }
 
 /// POST /v1/predict/bulk — many design points in one request, one flat
@@ -1902,5 +1929,86 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn misconfigured_edge_gpu_is_500_not_a_panic() {
+        // Regression (hypalint panic-path): `by_name(..).unwrap()` in
+        // the decide handler turned a misconfigured state into a panic
+        // caught only by the catch_unwind backstop. It must be a typed
+        // 500 with a message naming the bad GPU.
+        let mut state = ServerState::new(None);
+        state.edge_gpu = "no-such-gpu".into();
+        let srv = OffloadServer::start("127.0.0.1:0", Arc::new(state)).unwrap();
+        let client = OffloadClient::new(srv.addr);
+        let (status, body) = client
+            .post("/v1/offload/decide", r#"{"network":"lenet5"}"#)
+            .unwrap();
+        let text = String::from_utf8_lossy(&body);
+        assert_eq!(status, 500, "{text}");
+        assert!(text.contains("internal error"), "{text}");
+        assert!(text.contains("no-such-gpu"), "{text}");
+        // Client-side errors still map to 400, not 500.
+        let (status, _) = client
+            .post("/v1/offload/decide", r#"{"network":"nope"}"#)
+            .unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn poisoned_simulator_lock_is_500_not_a_panic() {
+        // Regression (hypalint panic-path): a panic on one connection
+        // thread mid-simulation poisons `state.sim`; every later
+        // request's `lock().unwrap()` then re-panicked into the
+        // catch_unwind backstop. `lock_sim` turns it into a typed 500.
+        let state = Arc::new(ServerState::new(None));
+        let srv = OffloadServer::start("127.0.0.1:0", state.clone()).unwrap();
+        let client = OffloadClient::new(srv.addr);
+        let poisoner = {
+            let state = state.clone();
+            std::thread::spawn(move || {
+                let _guard = state.sim.lock().unwrap();
+                panic!("poison the simulator lock");
+            })
+        };
+        assert!(poisoner.join().is_err(), "poisoner thread must panic");
+        let (status, body) = client
+            .post("/v1/predict", r#"{"network":"lenet5"}"#)
+            .unwrap();
+        let text = String::from_utf8_lossy(&body);
+        assert_eq!(status, 500, "{text}");
+        assert!(text.contains("internal error: lock poisoned"), "{text}");
+        // The server itself stays up and answers stateless routes.
+        let (status, _) = client.get("/health").unwrap();
+        assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn partition_response_bytes_are_deterministic_and_sorted() {
+        // Pin the serialization-order contract (hypalint det-map-iter's
+        // runtime complement): identical requests produce *identical
+        // bytes*, and the constraint-rejection tally serializes in
+        // sorted key order regardless of tally insertion order.
+        let (_srv, client) = server();
+        let req = r#"{"network":"lenet5","link":"wifi","strategy":"random","budget":8,"seed":3,"max_latency_s":0.000001}"#;
+        let (s1, b1) = client.post("/v1/partition", req).unwrap();
+        let (s2, b2) = client.post("/v1/partition", req).unwrap();
+        assert_eq!(s1, 200, "{}", String::from_utf8_lossy(&b1));
+        assert_eq!(s2, 200);
+        assert_eq!(b1, b2, "identical requests must serialize to identical bytes");
+        let text = String::from_utf8_lossy(&b1);
+        let rej = text
+            .find(r#""rejected":{"#)
+            .map(|i| &text[i..])
+            .expect("telemetry carries a rejection tally");
+        let keys = ["\"latency\"", "\"memory\"", "\"power\"", "\"throughput\""];
+        let pos: Vec<usize> = keys
+            .iter()
+            .map(|k| rej.find(k).unwrap_or_else(|| panic!("missing {k} in {rej}")))
+            .collect();
+        assert!(
+            pos.windows(2).all(|w| w[0] < w[1]),
+            "rejection tally keys must serialize sorted: {rej}"
+        );
     }
 }

@@ -1,0 +1,319 @@
+//! Fixture suite for `hypalint` (`hypa_dse::lint`): per-rule
+//! known-bad snippets must produce the expected diagnostic (rule id,
+//! file, line), known-good snippets must pass clean, the suppression
+//! pragma machinery must suppress / complain about unused or malformed
+//! pragmas, and — the self-check — the linter must run clean over this
+//! crate's own `src/` tree, which is exactly what the
+//! `cargo run --bin hypalint -- rust/src` CI gate enforces.
+
+use hypa_dse::lint::{lint_source, Diagnostic, Linter};
+
+/// Assert exactly one diagnostic with `rule` at `line`.
+fn expect_one(diags: &[Diagnostic], rule: &str, file: &str, line: usize) {
+    assert_eq!(diags.len(), 1, "expected one {rule} finding, got: {diags:?}");
+    assert_eq!(diags[0].rule, rule, "{diags:?}");
+    assert_eq!(diags[0].file, file, "{diags:?}");
+    assert_eq!(diags[0].line, line, "{diags:?}");
+}
+
+fn assert_clean(diags: &[Diagnostic]) {
+    assert!(diags.is_empty(), "expected clean, got: {diags:?}");
+}
+
+// ---- det-map-iter ------------------------------------------------------
+
+#[test]
+fn det_map_iter_flags_hashmap_iteration_in_scope() {
+    let src = "use std::collections::HashMap;\n\
+               fn tally(counts: &HashMap<String, u64>) -> Vec<String> {\n\
+               \x20   counts.keys().cloned().collect()\n\
+               }\n";
+    let diags = lint_source("rust/src/dse/fixture.rs", src);
+    expect_one(&diags, "det-map-iter", "rust/src/dse/fixture.rs", 3);
+}
+
+#[test]
+fn det_map_iter_flags_for_loops_and_let_bindings() {
+    let src = "fn f() {\n\
+               \x20   let seen = std::collections::HashSet::new();\n\
+               \x20   for s in &seen {\n\
+               \x20       serialize(s);\n\
+               \x20   }\n\
+               }\n";
+    let diags = lint_source("rust/src/partition/fixture.rs", src);
+    expect_one(&diags, "det-map-iter", "rust/src/partition/fixture.rs", 3);
+}
+
+#[test]
+fn det_map_iter_ignores_btreemap_and_out_of_scope_paths() {
+    // Ordered containers are the sanctioned alternative.
+    let ordered = "fn tally(counts: &std::collections::BTreeMap<String, u64>) -> Vec<String> {\n\
+                   \x20   counts.keys().cloned().collect()\n\
+                   }\n";
+    assert_clean(&lint_source("rust/src/dse/fixture.rs", ordered));
+    // HashMap iteration outside dse/partition/offload is not this
+    // rule's business (util caches iterate for eviction, not output).
+    let out_of_scope = "fn f(m: &std::collections::HashMap<u32, u32>) -> usize {\n\
+                        \x20   m.values().count()\n\
+                        }\n";
+    assert_clean(&lint_source("rust/src/util/fixture.rs", out_of_scope));
+    // Lookups (no iteration) on a HashMap in scope are fine.
+    let lookup = "fn f(m: &std::collections::HashMap<u32, u32>) -> Option<u32> {\n\
+                  \x20   m.get(&1).copied()\n\
+                  }\n";
+    assert_clean(&lint_source("rust/src/dse/fixture.rs", lookup));
+}
+
+// ---- det-time ----------------------------------------------------------
+
+#[test]
+fn det_time_flags_wall_clock_in_scoring_core() {
+    let src = "fn seed() -> u64 {\n\
+               \x20   let t = std::time::Instant::now();\n\
+               \x20   0\n\
+               }\n";
+    let diags = lint_source("rust/src/ml/fixture.rs", src);
+    expect_one(&diags, "det-time", "rust/src/ml/fixture.rs", 2);
+}
+
+#[test]
+fn det_time_allows_wall_clock_outside_core_and_in_tests() {
+    // The serving layer legitimately uses deadlines.
+    let src = "fn deadline() -> std::time::Instant { std::time::Instant::now() }\n";
+    assert_clean(&lint_source("rust/src/offload/fixture.rs", src));
+    // Test-gated timing inside the core is exempt.
+    let gated = "#[cfg(test)]\n\
+                 fn bench() {\n\
+                 \x20   let t = std::time::Instant::now();\n\
+                 }\n";
+    assert_clean(&lint_source("rust/src/ml/fixture.rs", gated));
+}
+
+// ---- float-fma ---------------------------------------------------------
+
+#[test]
+fn float_fma_flags_mul_add_in_kernels() {
+    let src = "pub fn dot(a: &[f64], b: &[f64]) -> f64 {\n\
+               \x20   let mut acc = 0.0;\n\
+               \x20   for i in 0..a.len() {\n\
+               \x20       acc = a[i].mul_add(b[i], acc);\n\
+               \x20   }\n\
+               \x20   acc\n\
+               }\n";
+    let diags = lint_source("rust/src/ml/kernel.rs", src);
+    expect_one(&diags, "float-fma", "rust/src/ml/kernel.rs", 4);
+}
+
+#[test]
+fn float_fma_ignores_comments_and_other_files() {
+    // A comment or string mentioning mul_add is not a use of it.
+    let commented = "// never use mul_add here\n\
+                     pub fn dot() -> &'static str { \"mul_add\" }\n";
+    assert_clean(&lint_source("rust/src/ml/kernel.rs", commented));
+    // mul_add outside the pinned kernels is allowed.
+    let elsewhere = "pub fn f(a: f64) -> f64 { a.mul_add(2.0, 1.0) }\n";
+    assert_clean(&lint_source("rust/src/util/fixture.rs", elsewhere));
+}
+
+// ---- panic-path --------------------------------------------------------
+
+#[test]
+fn panic_path_flags_unwrap_and_indexing_in_handlers() {
+    let src = "fn handler(v: &[u8]) -> u8 {\n\
+               \x20   let first = v.first().unwrap();\n\
+               \x20   v[1]\n\
+               }\n";
+    let diags = lint_source("rust/src/offload/server.rs", src);
+    assert_eq!(diags.len(), 2, "{diags:?}");
+    assert!(diags.iter().all(|d| d.rule == "panic-path"), "{diags:?}");
+    assert_eq!(diags[0].line, 2, "{diags:?}");
+    assert_eq!(diags[1].line, 3, "{diags:?}");
+}
+
+#[test]
+fn panic_path_flags_panic_macros() {
+    let src = "fn handler() {\n\
+               \x20   unreachable!(\"cannot happen\");\n\
+               }\n";
+    let diags = lint_source("rust/src/offload/jobs.rs", src);
+    expect_one(&diags, "panic-path", "rust/src/offload/jobs.rs", 2);
+}
+
+#[test]
+fn panic_path_exempts_test_gated_code() {
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+               \x20   #[test]\n\
+               \x20   fn t() {\n\
+               \x20       foo().unwrap();\n\
+               \x20   }\n\
+               }\n";
+    assert_clean(&lint_source("rust/src/offload/server.rs", src));
+}
+
+#[test]
+fn panic_path_does_not_flag_slice_types() {
+    // `&mut [u8]` is a type, not an indexing expression.
+    let src = "fn read(buf: &mut [u8]) -> usize { buf.len() }\n";
+    assert_clean(&lint_source("rust/src/offload/server.rs", src));
+}
+
+// ---- suppression pragmas ----------------------------------------------
+
+#[test]
+fn pragma_suppresses_on_same_or_previous_line() {
+    let above = "fn f(v: &[u8]) -> u8 {\n\
+                 \x20   // lint:allow(panic-path, bounds checked by caller)\n\
+                 \x20   v[0]\n\
+                 }\n";
+    assert_clean(&lint_source("rust/src/offload/server.rs", above));
+    let same = "fn f(v: &[u8]) -> u8 {\n\
+                \x20   v[0] // lint:allow(panic-path, bounds checked by caller)\n\
+                }\n";
+    assert_clean(&lint_source("rust/src/offload/server.rs", same));
+}
+
+#[test]
+fn unused_pragma_is_itself_a_finding() {
+    let src = "// lint:allow(panic-path, stale suppression)\n\
+               fn f() -> u8 { 0 }\n";
+    let diags = lint_source("rust/src/offload/server.rs", src);
+    expect_one(&diags, "lint-allow-unused", "rust/src/offload/server.rs", 1);
+}
+
+#[test]
+fn pragma_without_reason_is_malformed() {
+    let src = "fn f(v: &[u8]) -> u8 {\n\
+               \x20   // lint:allow(panic-path)\n\
+               \x20   v[0]\n\
+               }\n";
+    let diags = lint_source("rust/src/offload/server.rs", src);
+    // The reasonless pragma is malformed AND fails to suppress the
+    // finding it sits above — both must surface.
+    assert_eq!(diags.len(), 2, "{diags:?}");
+    assert_eq!(diags[0].rule, "lint-allow-malformed", "{diags:?}");
+    assert_eq!(diags[0].line, 2, "{diags:?}");
+    assert_eq!(diags[1].rule, "panic-path", "{diags:?}");
+    // Unknown rule ids are malformed too (typos must not silently
+    // disable nothing).
+    let typo = "// lint:allow(panik-path, typo)\nfn f() {}\n";
+    let diags = lint_source("rust/src/offload/server.rs", typo);
+    expect_one(&diags, "lint-allow-malformed", "rust/src/offload/server.rs", 1);
+}
+
+// ---- cast-truncate -----------------------------------------------------
+
+#[test]
+fn cast_truncate_flags_narrowing_casts() {
+    let src = "fn f(n: usize) -> u32 { n as u32 }\n";
+    let diags = lint_source("rust/src/offload/fixture.rs", src);
+    expect_one(&diags, "cast-truncate", "rust/src/offload/fixture.rs", 1);
+}
+
+#[test]
+fn cast_truncate_allows_widening_casts() {
+    let src = "fn f(n: u32) -> u64 { n as u64 }\nfn g(n: usize) -> f64 { n as f64 }\n";
+    assert_clean(&lint_source("rust/src/offload/fixture.rs", src));
+}
+
+// ---- lock-order --------------------------------------------------------
+
+#[test]
+fn lock_order_cycle_is_detected() {
+    let src = "fn ab(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {\n\
+               \x20   let ga = alpha.lock();\n\
+               \x20   let gb = beta.lock();\n\
+               }\n\
+               fn ba(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {\n\
+               \x20   let gb = beta.lock();\n\
+               \x20   let ga = alpha.lock();\n\
+               }\n";
+    let diags = lint_source("rust/src/util/fixture.rs", src);
+    expect_one(&diags, "lock-order", "rust/src/util/fixture.rs", 3);
+    assert!(diags[0].message.contains("alpha"), "{diags:?}");
+    assert!(diags[0].message.contains("beta"), "{diags:?}");
+}
+
+#[test]
+fn consistent_lock_order_is_clean() {
+    let src = "fn ab() {\n\
+               \x20   let ga = alpha.lock();\n\
+               \x20   let gb = beta.lock();\n\
+               }\n\
+               fn also_ab() {\n\
+               \x20   let ga = alpha.lock();\n\
+               \x20   let gb = beta.lock();\n\
+               }\n";
+    assert_clean(&lint_source("rust/src/util/fixture.rs", src));
+}
+
+#[test]
+fn lock_order_sees_drop_and_helper_conventions() {
+    // Dropping the first guard before the second acquisition breaks the
+    // nesting, so opposite orders across functions are fine.
+    let dropped = "fn ab() {\n\
+                   \x20   let ga = alpha.lock();\n\
+                   \x20   drop(ga);\n\
+                   \x20   let gb = beta.lock();\n\
+                   }\n\
+                   fn ba() {\n\
+                   \x20   let gb = beta.lock();\n\
+                   \x20   drop(gb);\n\
+                   \x20   let ga = alpha.lock();\n\
+                   }\n";
+    assert_clean(&lint_source("rust/src/util/fixture.rs", dropped));
+    // `lock_<name>()` helpers (the repo's poison-recovery wrappers)
+    // count as acquisitions of `<name>`.
+    let helper = "fn ab(x: &Inner) {\n\
+                  \x20   let g = x.lock_reg();\n\
+                  \x20   let h = state.lock();\n\
+                  }\n\
+                  fn ba(x: &Inner) {\n\
+                  \x20   let h = state.lock();\n\
+                  \x20   let g = x.lock_reg();\n\
+                  }\n";
+    let diags = lint_source("rust/src/util/fixture.rs", helper);
+    expect_one(&diags, "lock-order", "rust/src/util/fixture.rs", 3);
+}
+
+#[test]
+fn lock_order_cycles_span_files() {
+    // The acquisition graph is global: each file is internally
+    // consistent, but together they conflict.
+    let mut l = Linter::new();
+    l.check_source(
+        "rust/src/util/a.rs",
+        "fn ab() {\n    let ga = alpha.lock();\n    let gb = beta.lock();\n}\n",
+    );
+    l.check_source(
+        "rust/src/util/b.rs",
+        "fn ba() {\n    let gb = beta.lock();\n    let ga = alpha.lock();\n}\n",
+    );
+    let diags = l.finish();
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    assert_eq!(diags[0].rule, "lock-order", "{diags:?}");
+    // Anchored at the first edge recorded inside the cycle.
+    assert_eq!(diags[0].file, "rust/src/util/a.rs", "{diags:?}");
+}
+
+// ---- self-check --------------------------------------------------------
+
+#[test]
+fn hypalint_runs_clean_over_this_crate() {
+    // The same invariant `scripts/ci.sh` gates with the binary: zero
+    // unsuppressed diagnostics over rust/src, every suppression used
+    // and carrying a reason.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut l = Linter::new();
+    l.check_tree(&root).expect("walk rust/src");
+    let diags = l.finish();
+    assert!(
+        diags.is_empty(),
+        "hypalint must run clean over rust/src:\n{}",
+        diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

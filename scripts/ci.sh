@@ -17,6 +17,12 @@ cargo build --release
 echo "== cargo build --release --examples (examples can never rot) =="
 cargo build --release --examples
 
+echo "== hypalint (repo static-analysis pass; see docs/LINT.md) =="
+# Fails on any unsuppressed diagnostic: determinism hygiene, the no-FMA
+# kernel guard, panic hygiene on serving paths, lock-order acyclicity,
+# and narrowing casts. Suppressions require a reason and must be used.
+cargo run --release --bin hypalint -- rust/src
+
 echo "== cargo test (unit/integration; doctests run separately below) =="
 cargo test -q --lib --bins --tests --examples
 
@@ -53,6 +59,12 @@ echo "== partitioning subsystem (explicit gates; also in the pass above) =="
 # journal recovery).
 cargo test -q --test partition
 cargo test -q --test integration partition
+
+echo "== linter fixture suite (explicit gate; also in the pass above) =="
+# hypalint's own contract must never be filtered out of a CI run: every
+# rule family's true-positive + clean-pass fixtures, the suppression
+# pragma semantics, and the self-check over rust/src.
+cargo test -q --test lint_rules
 
 echo "== scoring-kernel parity, native config (explicit gate; also in the pass above) =="
 # The cross-kernel bit-parity suite must never be filtered out of a CI
